@@ -1,0 +1,79 @@
+//! Format explorer: how the compressed format + balancing scheme
+//! interact with the sparsity pattern (the paper's software
+//! recommendation #2/#3 in action).
+//!
+//! For each matrix class the tool prints per-format storage, fill-in,
+//! single-DPU kernel time, and the across-DPU picture at 256 DPUs, then
+//! derives the "adaptive" choice the paper advocates.
+
+use sparsep::bench_harness::Table;
+use sparsep::coordinator::{KernelSpec, SpmvExecutor};
+use sparsep::matrix::{generate, BcsrMatrix, CooMatrix, CsrMatrix, MatrixStats};
+use sparsep::pim::PimSystem;
+
+fn explore(name: &str, m: &CooMatrix<f64>) -> anyhow::Result<(String, f64)> {
+    let stats = MatrixStats::of(m);
+    println!(
+        "\n== {name}: {}x{} nnz={} cv={:.2} ({}) ==",
+        stats.nrows,
+        stats.ncols,
+        stats.nnz,
+        stats.nnz_per_row_cv,
+        stats.class()
+    );
+
+    // Storage footprint per format.
+    let csr = CsrMatrix::from_coo(m);
+    let b44 = BcsrMatrix::from_coo(m, 4, 4);
+    let b88 = BcsrMatrix::from_coo(m, 8, 8);
+    let mut t = Table::new(&["format", "bytes", "fill-in"]);
+    t.row(&["CSR".into(), csr.size_bytes().to_string(), "1.00".into()]);
+    t.row(&["COO".into(), m.size_bytes().to_string(), "1.00".into()]);
+    t.row(&["BCSR 4x4".into(), b44.size_bytes().to_string(), format!("{:.2}", b44.fill_ratio())]);
+    t.row(&["BCSR 8x8".into(), b88.size_bytes().to_string(), format!("{:.2}", b88.fill_ratio())]);
+    t.print();
+
+    // End-to-end at 256 DPUs across kernel families.
+    let exec = SpmvExecutor::new(PimSystem::with_dpus(256));
+    let x = vec![1.0f64; m.ncols()];
+    let mut t = Table::new(&["kernel", "kernel-ms", "total-ms", "imbalance"]);
+    let mut best = (String::new(), f64::INFINITY);
+    for spec in KernelSpec::all25(8) {
+        let r = exec.run(&spec, m, &x)?;
+        assert_eq!(r.y, m.spmv(&x), "{} must be exact", spec.name);
+        let total = r.breakdown.total_s();
+        t.row(&[
+            spec.name.clone(),
+            format!("{:.3}", r.breakdown.kernel_s * 1e3),
+            format!("{:.3}", total * 1e3),
+            format!("{:.2}x", r.stats.dpu_imbalance),
+        ]);
+        if total < best.1 {
+            best = (spec.name.clone(), total);
+        }
+    }
+    t.print();
+    println!("--> best for {name}: {} ({:.3} ms)", best.0, best.1 * 1e3);
+    Ok(best)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cases: Vec<(&str, CooMatrix<f64>)> = vec![
+        ("banded (regular)", generate::banded(4096, 16, 3)),
+        ("block-structured", generate::blocked(512, 512, 4, 5, 3)),
+        ("scale-free", generate::scale_free(4096, 4096, 10, 0.7, 3)),
+    ];
+    let mut winners = Vec::new();
+    for (name, m) in &cases {
+        winners.push((name.to_string(), explore(name, m)?));
+    }
+    println!("\n== adaptive-selection summary (paper recommendation #3) ==");
+    for (name, (kernel, t)) in &winners {
+        println!("  {name:<18} -> {kernel} ({:.3} ms)", t * 1e3);
+    }
+    let distinct: std::collections::HashSet<_> = winners.iter().map(|(_, (k, _))| k).collect();
+    if distinct.len() > 1 {
+        println!("  (no single kernel wins everywhere — pick per input, as the paper concludes)");
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: run one SpMV on the simulated PIM system and read the
+//! paper-style breakdown.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use sparsep::coordinator::{KernelSpec, SpmvExecutor};
+use sparsep::matrix::generate;
+use sparsep::pim::PimSystem;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A sparse matrix. Generators mirror the paper's two matrix
+    //    classes; @file.mtx loading is available via matrix::mtx.
+    let m = generate::scale_free::<f32>(8192, 8192, 10, 0.6, 42);
+    println!(
+        "matrix: {}x{}, {} nnz (scale-free class)",
+        m.nrows(),
+        m.ncols(),
+        m.nnz()
+    );
+
+    // 2. A PIM system: 256 DPUs, 16 tasklets each (UPMEM defaults).
+    let exec = SpmvExecutor::new(PimSystem::with_dpus(256));
+
+    // 3. Pick a kernel from the 25 (here: COO with nnz balancing) and run.
+    let x = vec![1.0f32; m.ncols()];
+    let run = exec.run(&KernelSpec::coo_nnz_rgrn(), &m, &x)?;
+
+    // 4. Exact result + modeled breakdown.
+    assert_eq!(run.y, m.spmv(&x), "simulator output is exact");
+    let b = run.breakdown;
+    println!("verified: output matches host oracle");
+    println!(
+        "breakdown: load {:.3} ms | kernel {:.3} ms | retrieve {:.3} ms ({} dominated)",
+        b.load_s * 1e3,
+        b.kernel_s * 1e3,
+        b.retrieve_s * 1e3,
+        b.dominant()
+    );
+    println!(
+        "kernel {:.2} GFLOP/s | e2e {:.2} GFLOP/s | imbalance {:.2}x | energy {:.2e} J",
+        run.kernel_gflops(),
+        run.e2e_gflops(),
+        run.stats.dpu_imbalance,
+        run.energy.total_j()
+    );
+
+    // 5. The same matrix through every kernel family, one line each.
+    println!("\nall-25 sweep (total end-to-end ms):");
+    for spec in KernelSpec::all25(8) {
+        let r = exec.run(&spec, &m, &x)?;
+        println!("  {:<14} {:>9.3} ms", spec.name, r.breakdown.total_s() * 1e3);
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Scaling study: where 1D stops scaling and what 2D buys back —
+//! the condensed story of the paper's Figs. 9-15.
+//!
+//! Sweeps the DPU count for the best 1D kernel (kernel-only vs
+//! end-to-end) and then sweeps the stripe count for the three 2D schemes
+//! at the largest system size.
+
+use sparsep::bench_harness::Table;
+use sparsep::coordinator::{KernelSpec, SpmvExecutor};
+use sparsep::matrix::{generate, Format};
+use sparsep::pim::PimSystem;
+
+fn main() -> anyhow::Result<()> {
+    let m = generate::uniform::<f64>(16384, 16384, 16, 7);
+    let x = vec![1.0f64; m.ncols()];
+    println!("matrix: {}x{} nnz={}", m.nrows(), m.ncols(), m.nnz());
+
+    println!("\n== 1D scaling (COO.nnz-rgrn): kernel-only vs end-to-end ==");
+    let mut t = Table::new(&["dpus", "kernel GF/s", "e2e GF/s", "load-share", "dominant"]);
+    for d in [16usize, 64, 256, 1024, 2048] {
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(d));
+        let r = exec.run(&KernelSpec::coo_nnz_rgrn(), &m, &x)?;
+        let b = r.breakdown;
+        t.row(&[
+            d.to_string(),
+            format!("{:.2}", r.kernel_gflops()),
+            format!("{:.2}", r.e2e_gflops()),
+            format!("{:.0}%", 100.0 * b.load_s / b.total_s()),
+            b.dominant().into(),
+        ]);
+    }
+    t.print();
+    println!("(kernel-only keeps scaling; end-to-end hits the broadcast wall)");
+
+    println!("\n== 2D at 2048 DPUs: stripes sweep per scheme ==");
+    let exec = SpmvExecutor::new(PimSystem::with_dpus(2048));
+    for scheme in [
+        KernelSpec::two_d(Format::Coo, 2),
+        KernelSpec::two_d_equally_wide(Format::Coo, 2),
+        KernelSpec::two_d_balanced(Format::Coo, 2),
+    ] {
+        let mut t = Table::new(&["stripes", "e2e GF/s", "load-ms", "retr-ms", "merge-ms", "pad"]);
+        let mut best = (0usize, 0.0f64);
+        for stripes in [2usize, 4, 8, 16, 32] {
+            let spec = scheme.clone().with_stripes(stripes);
+            let r = exec.run(&spec, &m, &x)?;
+            let g = r.e2e_gflops();
+            if g > best.1 {
+                best = (stripes, g);
+            }
+            t.row(&[
+                stripes.to_string(),
+                format!("{g:.2}"),
+                format!("{:.3}", r.breakdown.load_s * 1e3),
+                format!("{:.3}", r.breakdown.retrieve_s * 1e3),
+                format!("{:.3}", r.breakdown.merge_s * 1e3),
+                format!("{:.2}x", r.stats.padding_overhead()),
+            ]);
+        }
+        println!("-- {} -- (best: {} stripes, {:.2} GF/s)", scheme.name, best.0, best.1);
+        t.print();
+    }
+
+    println!("\n== best 1D vs best 2D, end-to-end ==");
+    let one = exec.run(&KernelSpec::coo_nnz_rgrn(), &m, &x)?;
+    let two = exec.run(&KernelSpec::two_d_equally_wide(Format::Coo, 16), &m, &x)?;
+    println!(
+        "1D COO.nnz-rgrn: {:.2} GF/s   2D RBDCOO/16: {:.2} GF/s   winner: {}",
+        one.e2e_gflops(),
+        two.e2e_gflops(),
+        if one.e2e_gflops() > two.e2e_gflops() { "1D" } else { "2D" }
+    );
+    Ok(())
+}

@@ -1,0 +1,118 @@
+"""AOT pipeline: lower the L2 model (with its L1 Pallas kernels) to HLO
+text + a manifest the Rust runtime indexes.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids, so text round-trips cleanly. Lowering goes
+stablehlo -> XlaComputation (return_tuple=True; the Rust side unwraps
+with `to_tuple1`) -> `as_hlo_text()`.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+_DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(dtype, shape):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_of(s):
+    return [s.dtype.name, list(s.shape)]
+
+
+def variants():
+    """The artifact set: (name, fn, example-arg specs, metadata).
+
+    ELL shape buckets cover the evaluation suite (the Rust host pads a
+    CSR matrix up to the nearest bucket); block-ELL covers the BCSR
+    path; dense is the 'GPU library' baseline; the two composed graphs
+    prove SpMV embeds into larger programs.
+    """
+    out = []
+    ell_buckets = [(1024, 8, 1024), (2048, 16, 2048), (4096, 32, 4096), (8192, 16, 8192)]
+    for dt_name in ("f32", "f64"):
+        dt = _DTYPES[dt_name]
+        for r, k, n in ell_buckets if dt_name == "f32" else ell_buckets[:1]:
+            name = f"ell_{dt_name}_r{r}_k{k}_n{n}"
+            args = [_spec(dt, (r, k)), _spec(jnp.int32, (r, k)), _spec(dt, (n,))]
+            out.append((name, model.spmv_ell, args, {"kind": "ell", "rows": r, "k": k, "n": n, "dtype": dt_name}))
+    # Block-ELL: 8x8 blocks (MXU-shaped micro-tiles).
+    for nbr, bmax, br, bc, n in [(128, 8, 8, 8, 1024), (256, 16, 8, 8, 2048)]:
+        name = f"bell_f32_nbr{nbr}_b{bmax}_{br}x{bc}_n{n}"
+        args = [
+            _spec(jnp.float32, (nbr, bmax, br, bc)),
+            _spec(jnp.int32, (nbr, bmax)),
+            _spec(jnp.float32, (n,)),
+        ]
+        out.append((name, model.spmv_bell, args, {
+            "kind": "bell", "nbr": nbr, "bmax": bmax, "br": br, "bc": bc, "n": n, "dtype": "f32",
+        }))
+    # Dense baseline.
+    for n in (512, 1024):
+        name = f"dense_f32_n{n}"
+        args = [_spec(jnp.float32, (n, n)), _spec(jnp.float32, (n,))]
+        out.append((name, model.spmv_dense, args, {"kind": "dense", "n": n, "dtype": "f32"}))
+    # Composed graphs.
+    r, k, n = 1024, 8, 1024
+    args = [_spec(jnp.float32, (r, k)), _spec(jnp.int32, (r, k)), _spec(jnp.float32, (n,))]
+    out.append((f"power_iter_f32_r{r}_k{k}", model.power_iteration_step, args,
+                {"kind": "power_iter", "rows": r, "k": k, "n": n, "dtype": "f32"}))
+    args_cg = args + [_spec(jnp.float32, (r,))]
+    out.append((f"cg_residual_f32_r{r}_k{k}", model.cg_residual_step, args_cg,
+                {"kind": "cg_residual", "rows": r, "k": k, "n": n, "dtype": "f32"}))
+    return out
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, args, meta in variants():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry["name"] = name
+        entry["file"] = fname
+        entry["inputs"] = [_shape_of(a) for a in args]
+        manifest["artifacts"].append(entry)
+        print(f"  lowered {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    a = p.parse_args()
+    m = build(a.out_dir)
+    print(f"wrote {len(m['artifacts'])} artifacts to {a.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

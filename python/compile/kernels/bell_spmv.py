@@ -1,0 +1,63 @@
+"""Pallas block-ELL (BCSR-like) SpMV kernel (layer 1).
+
+The blocked counterpart of `ell_spmv`: the paper's BCSR format exists to
+amortize index overhead over a dense micro-tile, which on a DPU means
+one x-strip DMA per block, and on a TPU means the dense `BR x BC` blocks
+can hit the MXU as small matmuls. Each grid step processes one *block
+row*: `BMAX` dense blocks, a gathered `(BMAX, BC)` bundle of x strips,
+and a `jnp.einsum` contraction that XLA maps onto the matrix unit.
+
+MXU-utilization estimate (DESIGN.md §Perf): with BR=BC=8 and BMAX=16 a
+grid step issues a (8x128)x(128x8)-equivalent contraction; at fp32 on an
+MXU-128 that is ~6% utilization per block row — small, as expected for
+SpMV (memory-bound); the win over scalar ELL is the 1/BC reduction in
+gather count, the same ratio the DPU kernel enjoys.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bell_kernel(vals_ref, cols_ref, x_ref, y_ref):
+    """One grid step: SpMV for one block row (BMAX blocks of BR x BC)."""
+    vals = vals_ref[0]  # (BMAX, BR, BC)
+    cols = cols_ref[0]  # (BMAX,) int32 block-column ids
+    x = x_ref[...]  # (N,)
+    bmax, br, bc = vals.shape
+    # Gather x strips for every block slot: (BMAX, BC).
+    idx = cols[:, None] * bc + jnp.arange(bc)[None, :]
+    xg = x[idx]
+    # Dense contraction: sum_b vals[b] @ xg[b] -> (BR,). Padding slots
+    # have zero blocks, so they are harmless.
+    y_ref[...] = jnp.einsum("brc,bc->r", vals, xg)
+
+
+@jax.jit
+def bell_spmv(vals, cols, x):
+    """Block-ELL SpMV via Pallas: y = A @ x.
+
+    Args:
+      vals: (NBR, BMAX, BR, BC) dense blocks, zero-filled padding slots.
+      cols: (NBR, BMAX) int32 block-column indices (padding -> 0).
+      x:    (N,) input vector, N == n_block_cols * BC.
+
+    Returns:
+      (NBR * BR,) output vector.
+    """
+    nbr, bmax, br, bc = vals.shape
+    n = x.shape[0]
+    return pl.pallas_call(
+        _bell_kernel,
+        grid=(nbr,),
+        in_specs=[
+            pl.BlockSpec((1, bmax, br, bc), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, bmax), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nbr * br,), vals.dtype),
+        interpret=True,
+    )(vals, cols, x)

@@ -1,0 +1,69 @@
+"""Pallas ELL SpMV kernel (layer 1).
+
+The TPU re-think of the paper's per-DPU SpMV loop (DESIGN.md
+§Hardware-Adaptation): where a DPU streams matrix tiles MRAM->WRAM with
+explicit DMA and gathers x[col] element by element, the Pallas kernel
+expresses the same schedule with a `BlockSpec` that stages a
+`(TILE_R, K)` tile of values + column indices into VMEM per grid step
+and performs the gather as a vectorized take from the (VMEM-resident)
+input vector.
+
+VMEM budget per grid step (fp32, the DESIGN.md §Perf accounting):
+`TILE_R*K*4` (vals) + `TILE_R*K*4` (cols) + `N*4` (x) + `TILE_R*4` (y).
+With TILE_R=128, K=32, N=16384 that is 128*32*8 + 64KiB + 0.5KiB
+~= 97 KiB — far below the ~16 MiB VMEM of a TPU core, leaving room to
+double-buffer the next tile while this one computes.
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ell_kernel(vals_ref, cols_ref, x_ref, y_ref):
+    """One grid step: SpMV for a (TILE_R, K) tile of rows."""
+    vals = vals_ref[...]  # (TILE_R, K)
+    cols = cols_ref[...]  # (TILE_R, K) int32
+    x = x_ref[...]  # (N,) staged in VMEM, shared by all steps
+    # Vectorized gather + row reduction. Padding slots carry value 0 and
+    # column 0, so they contribute nothing.
+    y_ref[...] = jnp.sum(vals * x[cols], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r",))
+def ell_spmv(vals, cols, x, *, tile_r=128):
+    """ELL SpMV via Pallas: y = A @ x with A in padded ELL layout.
+
+    Args:
+      vals: (R, K) padded row values; R must be a multiple of tile_r.
+      cols: (R, K) int32 column indices (padding -> column 0, value 0).
+      x:    (N,) input vector.
+      tile_r: rows per grid step.
+
+    Returns:
+      (R,) output vector.
+    """
+    r, k = vals.shape
+    tile_r = min(tile_r, r)
+    if r % tile_r != 0:
+        raise ValueError(f"rows {r} not a multiple of tile_r {tile_r}")
+    n = x.shape[0]
+    grid = (r // tile_r,)
+    return pl.pallas_call(
+        _ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_r,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), vals.dtype),
+        interpret=True,
+    )(vals, cols, x)

@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracles for the Pallas SpMV kernels.
+
+These are the ground truth the pytest suite checks every kernel against
+(the paper's methodology: every SpMV kernel is validated against a simple
+reference before being measured).
+"""
+
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(vals, cols, x):
+    """Reference ELL SpMV.
+
+    Args:
+      vals: (R, K) padded per-row values (0 in padding slots).
+      cols: (R, K) int32 column indices (padding points at column 0).
+      x:    (N,) input vector.
+
+    Returns:
+      (R,) output vector.
+    """
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def bell_spmv_ref(vals, cols, x):
+    """Reference block-ELL SpMV.
+
+    Args:
+      vals: (NBR, BMAX, BR, BC) dense blocks; slot b of block row i holds
+        a BRxBC tile (zero-filled for unused slots).
+      cols: (NBR, BMAX) int32 block-column indices (padding -> 0).
+      x:    (N,) input vector with N == n_block_cols * BC.
+
+    Returns:
+      (NBR * BR,) output vector.
+    """
+    nbr, bmax, br, bc = vals.shape
+    # Gather x strips: (NBR, BMAX, BC).
+    idx = cols[..., None] * bc + jnp.arange(bc)[None, None, :]
+    xg = x[idx]
+    # Block matvec + reduce over slots: (NBR, BR).
+    y = jnp.einsum("ibrc,ibc->ir", vals, xg)
+    return y.reshape(nbr * br)
+
+
+def dense_spmv_ref(a, x):
+    """Dense mat-vec, the baseline compute path."""
+    return a @ x

@@ -1,0 +1,49 @@
+"""Layer 2: the JAX compute graph around the Pallas kernels.
+
+The functions here are what `aot.py` lowers to HLO text for the Rust
+runtime. Besides the raw SpMV entry points they include the two small
+"applications" of SpMV the paper's introduction motivates — a power-
+iteration step (PageRank-style graph analytics) and a CG-style residual
+update (scientific computing) — so the AOT path exercises SpMV *composed
+into* a larger graph, not just standalone.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.bell_spmv import bell_spmv
+from compile.kernels.ell_spmv import ell_spmv
+
+
+def spmv_ell(vals, cols, x):
+    """y = A @ x, A in padded ELL layout (Pallas kernel inside)."""
+    return (ell_spmv(vals, cols, x),)
+
+
+def spmv_bell(vals, cols, x):
+    """y = A @ x, A in block-ELL layout (Pallas kernel inside)."""
+    return (bell_spmv(vals, cols, x),)
+
+
+def spmv_dense(a, x):
+    """Dense mat-vec baseline (the 'GPU library' comparison path)."""
+    return (a @ x,)
+
+
+def power_iteration_step(vals, cols, x):
+    """One PageRank-flavoured power-iteration step: normalize(A @ x).
+
+    Exercises SpMV composed with elementwise + reduction ops in a single
+    lowered module, matching how graph-analytics workloads consume SpMV.
+    """
+    y = ell_spmv(vals, cols, x)
+    norm = jnp.sqrt(jnp.sum(y * y)) + jnp.asarray(1e-12, y.dtype)
+    return (y / norm,)
+
+
+def cg_residual_step(vals, cols, x, b):
+    """CG-style residual: r = b - A @ x, plus its squared norm.
+
+    The scientific-computing shape: SpMV + axpy + dot in one graph.
+    """
+    r = b - ell_spmv(vals, cols, x)
+    return (r, jnp.sum(r * r))

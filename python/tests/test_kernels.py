@@ -1,0 +1,110 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes (the system's core correctness signal for
+the compute path), plus deterministic edge cases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bell_spmv import bell_spmv
+from compile.kernels.ell_spmv import ell_spmv
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_ell(rng, r, k, n, dtype):
+    vals = rng.uniform(-2, 2, size=(r, k)).astype(dtype)
+    cols = rng.integers(0, n, size=(r, k)).astype(np.int32)
+    # Randomly pad some slots (value 0, col 0) like the host conversion.
+    pad = rng.uniform(size=(r, k)) < 0.3
+    vals[pad] = 0
+    cols[pad] = 0
+    x = rng.uniform(-1, 1, size=(n,)).astype(dtype)
+    return vals, cols, x
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 6),
+    tile_r=st.sampled_from([8, 32, 128]),
+    k=st.integers(1, 24),
+    n=st.sampled_from([16, 257, 1024]),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_ell_matches_ref_hypothesis(tiles, tile_r, k, n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    r = tiles * tile_r
+    vals, cols, x = make_ell(rng, r, k, n, dtype)
+    got = ell_spmv(vals, cols, x, tile_r=tile_r)
+    want = ref.ell_spmv_ref(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x))
+    rtol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nbr=st.integers(1, 12),
+    bmax=st.integers(1, 8),
+    br=st.sampled_from([2, 4, 8]),
+    bc=st.sampled_from([2, 4, 8]),
+    nbc=st.integers(1, 16),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_bell_matches_ref_hypothesis(nbr, bmax, br, bc, nbc, seed):
+    rng = np.random.default_rng(seed)
+    n = nbc * bc
+    vals = rng.uniform(-2, 2, size=(nbr, bmax, br, bc)).astype(np.float32)
+    cols = rng.integers(0, nbc, size=(nbr, bmax)).astype(np.int32)
+    pad = rng.uniform(size=(nbr, bmax)) < 0.25
+    vals[pad] = 0
+    cols[pad] = 0
+    x = rng.uniform(-1, 1, size=(n,)).astype(np.float32)
+    got = bell_spmv(vals, cols, x)
+    want = ref.bell_spmv_ref(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_ell_zero_matrix():
+    vals = np.zeros((64, 4), np.float32)
+    cols = np.zeros((64, 4), np.int32)
+    x = np.ones(32, np.float32)
+    assert np.all(np.asarray(ell_spmv(vals, cols, x, tile_r=32)) == 0)
+
+
+def test_ell_identity():
+    n = 128
+    vals = np.ones((n, 1), np.float32)
+    cols = np.arange(n, dtype=np.int32)[:, None]
+    x = np.random.default_rng(0).uniform(size=n).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(ell_spmv(vals, cols, x, tile_r=64)), x, rtol=1e-6)
+
+
+def test_ell_rejects_ragged_tiles():
+    vals = np.zeros((100, 4), np.float32)
+    cols = np.zeros((100, 4), np.int32)
+    x = np.ones(16, np.float32)
+    with pytest.raises(ValueError, match="multiple"):
+        ell_spmv(vals, cols, x, tile_r=64)
+
+
+def test_ell_padding_is_neutral():
+    # Padding points at column 0 with value 0: x[0] != 0 must not leak.
+    vals = np.array([[5.0, 0.0]], np.float32).repeat(8, axis=0)
+    cols = np.array([[1, 0]], np.int32).repeat(8, axis=0)
+    x = np.array([100.0, 2.0], np.float32)
+    got = np.asarray(ell_spmv(vals, cols, x, tile_r=8))
+    np.testing.assert_allclose(got, np.full(8, 10.0), rtol=1e-6)
+
+
+def test_bell_single_identity_block():
+    br = bc = 4
+    vals = np.eye(br, dtype=np.float32)[None, None]
+    cols = np.zeros((1, 1), np.int32)
+    x = np.arange(bc, dtype=np.float32)
+    np.testing.assert_allclose(np.asarray(bell_spmv(vals, cols, x)), x, rtol=1e-6)

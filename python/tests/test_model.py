@@ -1,0 +1,50 @@
+"""L2 correctness: model graphs (kernel composed with surrounding ops)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _ell_fixture(seed=0, r=256, k=8, n=256):
+    rng = np.random.default_rng(seed)
+    vals = rng.uniform(-1, 1, size=(r, k)).astype(np.float32)
+    cols = rng.integers(0, n, size=(r, k)).astype(np.int32)
+    x = rng.uniform(-1, 1, size=(n,)).astype(np.float32)
+    return vals, cols, x
+
+
+def test_spmv_ell_tuple_shape():
+    vals, cols, x = _ell_fixture()
+    (y,) = model.spmv_ell(vals, cols, x)
+    assert y.shape == (256,)
+    want = ref.ell_spmv_ref(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4, atol=1e-6)
+
+
+def test_spmv_dense_matches_numpy():
+    rng = np.random.default_rng(1)
+    a = rng.uniform(size=(64, 64)).astype(np.float32)
+    x = rng.uniform(size=64).astype(np.float32)
+    (y,) = model.spmv_dense(a, x)
+    np.testing.assert_allclose(np.asarray(y), a @ x, rtol=1e-5)
+
+
+def test_power_iteration_step_normalizes():
+    vals, cols, x = _ell_fixture(seed=2)
+    (y,) = model.power_iteration_step(vals, cols, x)
+    assert y.shape == (256,)
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)), 1.0, rtol=1e-4)
+
+
+def test_cg_residual_matches_manual():
+    vals, cols, x = _ell_fixture(seed=3)
+    b = np.random.default_rng(4).uniform(size=256).astype(np.float32)
+    r_vec, r_norm2 = model.cg_residual_step(vals, cols, x, b)
+    want = b - np.asarray(ref.ell_spmv_ref(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x)))
+    np.testing.assert_allclose(np.asarray(r_vec), want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(r_norm2), float((want * want).sum()), rtol=1e-4)

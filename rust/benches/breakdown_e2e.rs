@@ -1,0 +1,20 @@
+//! Bench E6 + E8 + hardware ablation: end-to-end breakdowns (paper
+//! Fig. 10), best-1D vs best-2D (Figs. 14-15), and the what-if hardware
+//! experiments behind the paper's suggestions to hardware designers.
+
+mod common;
+use sparsep::bench_harness::figures;
+
+fn main() {
+    common::banner("breakdown_e2e", "Fig. 10 breakdown + Figs. 14-15 1D-vs-2D + HW ablation");
+    let s = common::scale();
+    common::timed("e6_breakdown_1d", || {
+        figures::e6_breakdown_1d(s);
+    });
+    common::timed("e8_one_vs_two", || {
+        figures::e8_one_vs_two(s);
+    });
+    common::timed("ablation_hw", || {
+        figures::ablation_hw(s);
+    });
+}

@@ -1,0 +1,29 @@
+//! Shared bench plumbing: scale from env, banner, wall-clock wrapper.
+
+use sparsep::bench_harness::figures::Scale;
+
+/// Bench scale from `SPARSEP_BENCH_SCALE` (default 0.25: the full paper
+/// sweep at ~1/4 matrix linear size; 1.0 regenerates the DESIGN.md-sized
+/// evaluation and takes a few minutes).
+pub fn scale() -> Scale {
+    Scale(
+        std::env::var("SPARSEP_BENCH_SCALE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.25),
+    )
+}
+
+pub fn banner(name: &str, what: &str) {
+    println!("\n################################################################");
+    println!("# bench {name}: {what}");
+    println!("# (scale={}; set SPARSEP_BENCH_SCALE to change)", scale().0);
+    println!("################################################################");
+}
+
+/// Time a whole driver once and report (drivers print their own tables).
+pub fn timed<F: FnOnce()>(label: &str, f: F) {
+    let t0 = std::time::Instant::now();
+    f();
+    println!("[bench-wall] {label}: {:.2}s", t0.elapsed().as_secs_f64());
+}

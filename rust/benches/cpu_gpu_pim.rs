@@ -1,0 +1,52 @@
+//! Bench E9: CPU vs GPU vs PIM (paper Fig. 16 + Table 3).
+//!
+//! Three comparison points, as in the paper:
+//! * **PIM** — the simulated UPMEM system running the best 1D kernel;
+//! * **CPU** — a *measured* multithreaded host SpMV plus the Xeon
+//!   roofline model for fraction-of-peak;
+//! * **GPU** — the V100 roofline model, with the *measured* AOT
+//!   JAX/Pallas ELL kernel executed through XLA/PJRT standing in for the
+//!   accelerator-library code path (cuSPARSE in the paper).
+
+mod common;
+
+use sparsep::bench_harness::{figures, measure};
+use sparsep::matrix::{generate, CsrMatrix};
+use sparsep::runtime::{ell_host, ArtifactRunner};
+
+fn main() {
+    common::banner("cpu_gpu_pim", "Fig. 16 + Table 3 CPU/GPU/PIM comparison");
+    common::timed("e9_cpu_gpu_pim", || {
+        figures::e9_cpu_gpu_pim(common::scale());
+    });
+
+    // Measured accelerator path: AOT Pallas ELL kernel through PJRT.
+    match ArtifactRunner::load_default() {
+        Err(e) => println!("\n[xla path skipped: {e}] (run `make artifacts`)"),
+        Ok(runner) => {
+            println!("\n-- measured XLA/PJRT accelerator path (AOT Pallas ELL kernel) --");
+            let m = generate::uniform::<f64>(4096, 4096, 16, 5).cast::<f32>();
+            let csr = CsrMatrix::from_coo(&m);
+            let staged = ell_host::stage(&runner, &csr).expect("stage");
+            let x: Vec<f32> = (0..m.ncols()).map(|i| ((i % 7) as f32) - 3.0).collect();
+            let want = csr.spmv(&x);
+            let mut y = Vec::new();
+            let s = measure(2, 5, || {
+                y = staged.spmv(&runner, &x).expect("spmv");
+            });
+            let ok = y
+                .iter()
+                .zip(&want)
+                .all(|(a, b)| (a - b).abs() <= 1e-3 * b.abs().max(1.0));
+            println!(
+                "artifact {}  pad {:.2}x  best {:.3} ms  {:.3} GFLOP/s  verified: {}",
+                staged.artifact,
+                staged.pad_ratio,
+                s.min * 1e3,
+                2.0 * m.nnz() as f64 / s.min / 1e9,
+                if ok { "OK" } else { "MISMATCH" }
+            );
+            assert!(ok, "XLA path verification failed");
+        }
+    }
+}

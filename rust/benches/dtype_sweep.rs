@@ -1,0 +1,12 @@
+//! Bench E3: data-type sweep (paper Fig. 7): int8..fp64 SpMV throughput
+//! on one DPU, with the per-type DPU peak and fraction of peak.
+
+mod common;
+use sparsep::bench_harness::figures;
+
+fn main() {
+    common::banner("dtype_sweep", "Fig. 7 data types");
+    common::timed("e3_dtype_sweep", || {
+        figures::e3_dtype_sweep(common::scale());
+    });
+}

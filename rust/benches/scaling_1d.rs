@@ -1,0 +1,12 @@
+//! Bench E5: 1D scaling with the number of DPUs (paper Fig. 9),
+//! kernel-only throughput for row- vs nnz-balanced kernels.
+
+mod common;
+use sparsep::bench_harness::figures;
+
+fn main() {
+    common::banner("scaling_1d", "Fig. 9 1D kernel-only scaling");
+    common::timed("e5_scaling_1d", || {
+        figures::e5_scaling_1d(common::scale());
+    });
+}

@@ -1,0 +1,12 @@
+//! Bench E7: 2D partitioning trade-offs (paper Figs. 11-13): the three
+//! tile-shaping schemes swept over the number of vertical stripes.
+
+mod common;
+use sparsep::bench_harness::figures;
+
+fn main() {
+    common::banner("scaling_2d", "Figs. 11-13 2D schemes vs stripes");
+    common::timed("e7_two_d", || {
+        figures::e7_two_d(common::scale());
+    });
+}

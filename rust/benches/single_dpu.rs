@@ -1,0 +1,16 @@
+//! Bench E1 + E4: single-DPU tasklet scaling (paper Fig. 5) and block
+//! formats (Fig. 8). Regenerates the figures' rows on the simulated DPU.
+
+mod common;
+use sparsep::bench_harness::figures;
+
+fn main() {
+    common::banner("single_dpu", "Fig. 5 tasklet scaling + Fig. 8 block formats");
+    let s = common::scale();
+    common::timed("e1_tasklet_scaling", || {
+        figures::e1_tasklet_scaling(s);
+    });
+    common::timed("e4_block_formats", || {
+        figures::e4_block_formats(s);
+    });
+}

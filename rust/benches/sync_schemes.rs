@@ -1,0 +1,12 @@
+//! Bench E2: synchronization approaches (paper Fig. 6): lock-free vs
+//! coarse-grained vs fine-grained locking on a multithreaded DPU.
+
+mod common;
+use sparsep::bench_harness::figures;
+
+fn main() {
+    common::banner("sync_schemes", "Fig. 6 synchronization approaches");
+    common::timed("e2_sync_schemes", || {
+        figures::e2_sync_schemes(common::scale());
+    });
+}

@@ -1,0 +1,59 @@
+//! SpMV-consuming applications — the workloads the paper's introduction
+//! motivates (scientific computing, graph analytics, machine learning).
+//!
+//! Each solver iterates SpMV on the PIM executor while the host performs
+//! the vector operations, accumulating the full cost model across
+//! iterations (the setting where the paper's "matrix placement is
+//! one-time, vector transfer is per-iteration" methodology matters: an
+//! iterative solver calls SpMV hundreds of times on the same matrix).
+
+pub mod cg;
+pub mod pagerank;
+pub mod jacobi;
+
+use crate::coordinator::Breakdown;
+
+/// Accumulated cost of an iterative run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolveStats {
+    pub iterations: usize,
+    /// Sum of per-iteration PIM breakdowns.
+    pub pim: Breakdown,
+    /// One-time matrix placement.
+    pub matrix_load_s: f64,
+    /// Total modeled energy, joules.
+    pub energy_j: f64,
+}
+
+impl SolveStats {
+    pub(crate) fn absorb(&mut self, r: &crate::coordinator::RunResult<f64>) {
+        self.iterations += 1;
+        self.pim.load_s += r.breakdown.load_s;
+        self.pim.kernel_s += r.breakdown.kernel_s;
+        self.pim.retrieve_s += r.breakdown.retrieve_s;
+        self.pim.merge_s += r.breakdown.merge_s;
+        self.energy_j += r.energy.total_j();
+        self.matrix_load_s = r.stats.matrix_load_s; // one-time
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.matrix_load_s + self.pim.total_s()
+    }
+}
+
+/// Dot product (host-side vector op).
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y += alpha * x` (host-side).
+pub(crate) fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm.
+pub(crate) fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}

@@ -1,0 +1,117 @@
+//! Multithreaded host-CPU CSR SpMV — the measured processor-centric
+//! baseline (the paper uses MKL on a Xeon; same algorithm class:
+//! row-parallel CSR with static nnz-balanced row ranges).
+
+use crate::matrix::{CsrMatrix, SpElem};
+use crate::partition::balance::split_weighted;
+use std::time::Instant;
+
+/// Result of a measured CPU SpMV run.
+#[derive(Clone, Debug)]
+pub struct CpuRun<T> {
+    pub y: Vec<T>,
+    /// Wall-clock seconds per iteration (best of `iters`).
+    pub seconds: f64,
+    pub threads: usize,
+}
+
+impl<T> CpuRun<T> {
+    pub fn gflops(&self, nnz: usize) -> f64 {
+        if self.seconds == 0.0 {
+            0.0
+        } else {
+            2.0 * nnz as f64 / self.seconds / 1e9
+        }
+    }
+}
+
+/// Single-threaded CSR SpMV into a pre-allocated output (hot loop).
+fn spmv_range<T: SpElem>(m: &CsrMatrix<T>, x: &[T], y: &mut [T], r0: usize, r1: usize) {
+    for r in r0..r1 {
+        let (cols, vals) = m.row(r);
+        let mut acc = T::zero();
+        for (c, v) in cols.iter().zip(vals) {
+            acc = T::mac(acc, *v, x[*c as usize]);
+        }
+        y[r - r0] = acc;
+    }
+}
+
+/// Run `iters` SpMV iterations on `threads` host threads; returns the
+/// exact result and the best per-iteration wall time (standard practice
+/// for memory-bound microbenchmarks: best-of filters scheduler noise).
+pub fn spmv_parallel<T: SpElem>(
+    m: &CsrMatrix<T>,
+    x: &[T],
+    threads: usize,
+    iters: usize,
+) -> CpuRun<T> {
+    assert!(threads > 0 && iters > 0);
+    assert_eq!(x.len(), m.ncols());
+    let weights: Vec<usize> = (0..m.nrows()).map(|r| m.row_nnz(r)).collect();
+    let ranges = split_weighted(&weights, threads);
+
+    let mut y = vec![T::zero(); m.nrows()];
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        // Scoped threads write disjoint row ranges of y.
+        let mut parts: Vec<&mut [T]> = Vec::with_capacity(threads);
+        {
+            let mut rest: &mut [T] = &mut y;
+            let mut offset = 0usize;
+            for range in &ranges {
+                let (head, tail) = rest.split_at_mut(range.end - offset);
+                parts.push(head);
+                rest = tail;
+                offset = range.end;
+            }
+        }
+        std::thread::scope(|s| {
+            for (range, part) in ranges.iter().zip(parts) {
+                s.spawn(move || spmv_range(m, x, part, range.start, range.end));
+            }
+        });
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    CpuRun { y, seconds: best, threads }
+}
+
+/// Convenience: number of hardware threads available.
+pub fn hw_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{generate, CsrMatrix};
+
+    #[test]
+    fn parallel_matches_serial() {
+        let m = generate::scale_free::<f64>(2000, 2000, 8, 0.6, 3);
+        let csr = CsrMatrix::from_coo(&m);
+        let x: Vec<f64> = (0..2000).map(|i| (i % 17) as f64).collect();
+        for threads in [1, 2, 4, 7] {
+            let run = spmv_parallel(&csr, &x, threads, 2);
+            assert_eq!(run.y, csr.spmv(&x), "threads={threads}");
+            assert!(run.seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn works_with_more_threads_than_rows() {
+        let m = generate::banded::<f32>(5, 2, 1);
+        let csr = CsrMatrix::from_coo(&m);
+        let run = spmv_parallel(&csr, &vec![1.0f32; 5], 16, 1);
+        assert_eq!(run.y, csr.spmv(&vec![1.0f32; 5]));
+    }
+
+    #[test]
+    fn gflops_positive() {
+        let m = generate::uniform::<f64>(1024, 1024, 16, 2);
+        let csr = CsrMatrix::from_coo(&m);
+        let run = spmv_parallel(&csr, &vec![1.0; 1024], 2, 3);
+        assert!(run.gflops(m.nnz()) > 0.0);
+    }
+}

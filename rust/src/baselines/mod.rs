@@ -1,0 +1,14 @@
+//! Processor-centric baselines for the paper's CPU/GPU comparison
+//! (Fig. 16 / Table 3).
+//!
+//! * [`cpu`] — a real, measured multithreaded CSR SpMV on the host CPU
+//!   (the stand-in for the paper's MKL-on-Xeon baseline).
+//! * [`roofline`] — analytic fraction-of-peak models for the paper's CPU
+//!   and GPU testbeds: SpMV is memory-bound on both, so its attainable
+//!   throughput is `bytes-moved-bound`, a tiny fraction of machine peak —
+//!   the contrast with PIM that the paper's headline 51.7% figure makes.
+//! * The XLA/PJRT accelerator path lives in [`crate::runtime`] and is
+//!   exercised by the `cpu_gpu_pim` bench as the "accelerator" code path.
+
+pub mod cpu;
+pub mod roofline;

@@ -1,0 +1,143 @@
+//! Roofline models for the paper's processor-centric testbeds.
+//!
+//! The paper's Fig. 16 / Table 3 argument: SpMV is memory-bound, so on a
+//! CPU or GPU it attains `min(peak_compute, AI * mem_bw)` — and since
+//! SpMV's arithmetic intensity (AI) is ~0.1-0.25 flop/byte, both attain
+//! only a few percent of machine peak. The UPMEM system's compute peak
+//! is tiny relative to its *aggregate bank* bandwidth, so SpMV attains a
+//! *large* fraction of its peak (51.7% average for fp32 in the paper).
+//! These models quantify that for any matrix/type, and calibrate the
+//! "GPU" comparison point our XLA-CPU proxy cannot measure directly.
+
+use crate::matrix::{DType, MatrixStats};
+use crate::pim::calib;
+
+/// One platform's roofline parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    /// Peak fp32 GFLOP/s (scaled for other dtypes below).
+    pub peak_gflops_f32: f64,
+    /// Sustained memory bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// TDP-style power for energy estimates, watts.
+    pub watts: f64,
+}
+
+/// The paper's CPU testbed (Intel Xeon class).
+pub const CPU: Platform = Platform {
+    name: "CPU (Xeon)",
+    peak_gflops_f32: calib::CPU_PEAK_GFLOPS_F32,
+    mem_bw_gbs: calib::CPU_MEM_BW_GBS,
+    watts: calib::CPU_TDP_WATTS,
+};
+
+/// The paper's GPU testbed (NVIDIA Tesla V100).
+pub const GPU: Platform = Platform {
+    name: "GPU (V100)",
+    peak_gflops_f32: calib::GPU_PEAK_GFLOPS_F32,
+    mem_bw_gbs: calib::GPU_MEM_BW_GBS,
+    watts: calib::GPU_TDP_WATTS,
+};
+
+impl Platform {
+    /// Peak compute for a data type (fp64 at half fp32 rate, integers at
+    /// fp32 rate — close enough for the fraction-of-peak ordering).
+    pub fn peak_gflops(&self, dt: DType) -> f64 {
+        match dt {
+            DType::F64 | DType::I64 => self.peak_gflops_f32 / 2.0,
+            _ => self.peak_gflops_f32,
+        }
+    }
+
+    /// Bytes moved per SpMV iteration for a CSR matrix (matrix streamed
+    /// once + x gathered + y written; x gathers counted once per nnz at
+    /// cache-line efficiency 0.5 for irregular access).
+    pub fn spmv_bytes(&self, stats: &MatrixStats, dt: DType) -> f64 {
+        let es = dt.size_bytes() as f64;
+        let matrix = stats.nnz as f64 * (4.0 + es) + (stats.nrows as f64 + 1.0) * 4.0;
+        let x_gather = stats.nnz as f64 * es * 2.0; // irregular, ~50% line use
+        let y = stats.nrows as f64 * es;
+        matrix + x_gather + y
+    }
+
+    /// Attainable GFLOP/s for SpMV on a matrix: bandwidth-bound roofline.
+    pub fn spmv_attainable_gflops(&self, stats: &MatrixStats, dt: DType) -> f64 {
+        let flops = 2.0 * stats.nnz as f64;
+        let ai = flops / self.spmv_bytes(stats, dt); // flop/byte
+        (ai * self.mem_bw_gbs).min(self.peak_gflops(dt))
+    }
+
+    /// Fraction of machine peak SpMV attains (the paper's Fig. 16 metric).
+    pub fn spmv_fraction_of_peak(&self, stats: &MatrixStats, dt: DType) -> f64 {
+        self.spmv_attainable_gflops(stats, dt) / self.peak_gflops(dt)
+    }
+
+    /// Modeled SpMV time, seconds.
+    pub fn spmv_seconds(&self, stats: &MatrixStats, dt: DType) -> f64 {
+        2.0 * stats.nnz as f64 / (self.spmv_attainable_gflops(stats, dt) * 1e9)
+    }
+
+    /// Modeled SpMV energy, joules.
+    pub fn spmv_energy_j(&self, stats: &MatrixStats, dt: DType) -> f64 {
+        self.spmv_seconds(stats, dt) * self.watts
+    }
+}
+
+/// The PIM system's fraction of peak for comparison: `attained GFLOP/s /
+/// (n_dpus * per-DPU peak)`.
+pub fn pim_fraction_of_peak(kernel_gflops: f64, n_dpus: usize, dt: DType) -> f64 {
+    kernel_gflops / (calib::dpu_peak_gflops(dt) * n_dpus as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{generate, MatrixStats};
+
+    fn stats() -> MatrixStats {
+        MatrixStats::of(&generate::uniform::<f64>(8192, 8192, 16, 1))
+    }
+
+    #[test]
+    fn cpu_gpu_fraction_of_peak_is_small() {
+        let s = stats();
+        // The paper's observation: processor-centric SpMV sits at a few
+        // percent of machine peak.
+        let fc = CPU.spmv_fraction_of_peak(&s, DType::F32);
+        let fg = GPU.spmv_fraction_of_peak(&s, DType::F32);
+        assert!(fc < 0.10, "CPU fraction {fc}");
+        assert!(fg < 0.10, "GPU fraction {fg}");
+        // PIM at the paper's average (51.7%) dwarfs both.
+        assert!(0.517 > 5.0 * fc && 0.517 > 5.0 * fg);
+    }
+
+    #[test]
+    fn gpu_faster_than_cpu_absolute() {
+        let s = stats();
+        assert!(
+            GPU.spmv_attainable_gflops(&s, DType::F32)
+                > 10.0 * CPU.spmv_attainable_gflops(&s, DType::F32)
+        );
+    }
+
+    #[test]
+    fn fp64_halves_peak() {
+        assert_eq!(GPU.peak_gflops(DType::F64), GPU.peak_gflops_f32 / 2.0);
+    }
+
+    #[test]
+    fn pim_fraction_formula() {
+        let dt = DType::F32;
+        let peak64 = calib::dpu_peak_gflops(dt) * 64.0;
+        assert!((pim_fraction_of_peak(peak64 / 2.0, 64, dt) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let s = stats();
+        let e32 = CPU.spmv_energy_j(&s, DType::F32);
+        let e64 = CPU.spmv_energy_j(&s, DType::F64);
+        assert!(e64 > e32);
+    }
+}

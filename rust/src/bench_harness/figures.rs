@@ -1,0 +1,712 @@
+//! Per-figure experiment drivers — one per paper artifact (DESIGN.md §3).
+//!
+//! Every driver prints the same rows/series the paper's figure or table
+//! reports (with our simulated-UPMEM absolute numbers) and emits JSON
+//! lines under `target/bench_results/` for machine consumption. The
+//! benches in `rust/benches/` are thin wrappers over these functions, so
+//! `cargo bench` regenerates the full evaluation.
+
+use super::{emit_jsonl, Table};
+use crate::baselines::{cpu, roofline};
+use crate::coordinator::{KernelSpec, SpmvExecutor};
+use crate::kernels::SyncScheme;
+use crate::matrix::{generate, CooMatrix, CsrMatrix, DType, Format, MatrixStats, SpElem};
+use crate::pim::{calib, PimConfig, PimSystem};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Scale knob: 1.0 = the default evaluation size (minutes for the full
+/// set); benches use smaller scales for quick runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale(pub f64);
+
+impl Scale {
+    fn rows(&self, base: usize) -> usize {
+        ((base as f64 * self.0) as usize).max(64)
+    }
+}
+
+fn exec(n_dpus: usize, tasklets: usize) -> SpmvExecutor {
+    SpmvExecutor::new(PimSystem {
+        cfg: PimConfig { n_dpus, tasklets, ..Default::default() },
+    })
+}
+
+// ---------------------------------------------------------------------
+// E1 — Fig. 5: single-DPU tasklet scaling, by kernel and balancing.
+// ---------------------------------------------------------------------
+
+/// Returns (kernel, tasklets, cycles) tuples for the assertion in tests.
+pub fn e1_tasklet_scaling(scale: Scale) -> Vec<(String, usize, u64)> {
+    println!("\n=== E1 (Fig. 5): single-DPU scaling with tasklets ===");
+    let n = scale.rows(4096);
+    let matrices: Vec<(&str, CooMatrix<f64>)> = vec![
+        ("regular", generate::banded::<f64>(n, 16, 11)),
+        ("scale-free", generate::scale_free::<f64>(n, n, 12, 0.7, 11)),
+    ];
+    let kernels = [
+        KernelSpec::csr_row(),
+        KernelSpec::csr_nnz(),
+        KernelSpec::coo_row(),
+        KernelSpec::coo_nnz_rgrn(),
+        KernelSpec::coo_nnz(),
+    ];
+    let tasklet_counts = [1usize, 2, 4, 8, 11, 16, 20, 24];
+    let mut out = Vec::new();
+    for (mname, m) in &matrices {
+        let x = vec![1.0f64; m.ncols()];
+        let mut table = Table::new(
+            &["kernel", "t=1", "t=2", "t=4", "t=8", "t=11", "t=16", "t=20", "t=24"],
+        );
+        for spec in &kernels {
+            let mut cells = vec![spec.name.clone()];
+            for &t in &tasklet_counts {
+                let r = exec(1, t).run(spec, m, &x).unwrap();
+                cells.push(format!("{:.2}ms", r.breakdown.kernel_s * 1e3));
+                out.push((format!("{}/{}", mname, spec.name), t, r.stats.kernel_cycles));
+                emit_jsonl(
+                    "e1_tasklet_scaling",
+                    &obj(vec![
+                        ("matrix", s(mname)),
+                        ("kernel", s(&spec.name)),
+                        ("tasklets", num(t as f64)),
+                        ("cycles", num(r.stats.kernel_cycles as f64)),
+                    ]),
+                );
+            }
+            table.row(&cells);
+        }
+        println!("-- {mname} matrix ({} rows, {} nnz), kernel time on 1 DPU:", m.nrows(), m.nnz());
+        table.print();
+    }
+    println!("(paper shape: saturation at >=11 tasklets; nnz-balancing wins on scale-free)");
+    out
+}
+
+// ---------------------------------------------------------------------
+// E2 — Fig. 6: synchronization schemes.
+// ---------------------------------------------------------------------
+
+pub fn e2_sync_schemes(scale: Scale) -> Vec<(String, u64)> {
+    println!("\n=== E2 (Fig. 6): synchronization approaches (1 DPU, 16 tasklets) ===");
+    let n = scale.rows(2048);
+    // Matrices that force shared rows under element-granularity splits.
+    let wide = {
+        let mut t: Vec<(u32, u32, f64)> = Vec::new();
+        for r in 0..(n / 64) as u32 {
+            for c in 0..256u32 {
+                t.push((r, (c * 7) % n as u32, 1.0));
+            }
+        }
+        CooMatrix::from_triples(n / 64, n, t)
+    };
+    let sf = generate::scale_free::<f64>(n, n, 12, 0.8, 23);
+    let mut out = Vec::new();
+    let mut table = Table::new(&["matrix", "kernel", "lock-free", "coarse", "fine"]);
+    for (mname, m) in [("dense-rows", &wide), ("scale-free", &sf)] {
+        let x = vec![1.0f64; m.ncols()];
+        for (kname, base) in [
+            ("COO.nnz", KernelSpec::coo_nnz()),
+            ("BCOO.block", KernelSpec::bcoo_block()),
+        ] {
+            let mut cells = vec![mname.to_string(), kname.to_string()];
+            for sync in [SyncScheme::LockFree, SyncScheme::CoarseLock, SyncScheme::FineLock] {
+                let spec = base.clone().with_sync(sync);
+                let r = exec(1, 16).run(&spec, m, &x).unwrap();
+                cells.push(format!("{:.2}ms", r.breakdown.kernel_s * 1e3));
+                out.push((format!("{mname}/{kname}/{}", sync.name()), r.stats.kernel_cycles));
+                emit_jsonl(
+                    "e2_sync",
+                    &obj(vec![
+                        ("matrix", s(mname)),
+                        ("kernel", s(kname)),
+                        ("sync", s(sync.name())),
+                        ("cycles", num(r.stats.kernel_cycles as f64)),
+                    ]),
+                );
+            }
+            table.row(&cells);
+        }
+    }
+    table.print();
+    println!("(paper shape: fine-grained does NOT beat coarse-grained — CS serialize on the DMA engine)");
+    out
+}
+
+// ---------------------------------------------------------------------
+// E3 — Fig. 7: data-type sweep.
+// ---------------------------------------------------------------------
+
+pub fn e3_dtype_sweep(scale: Scale) -> Vec<(DType, f64)> {
+    println!("\n=== E3 (Fig. 7): data types (CSR.nnz, 1 DPU, 16 tasklets) ===");
+    let n = scale.rows(4096);
+    let m64 = generate::uniform::<f64>(n, n, 16, 31);
+    let x_len = m64.ncols();
+    let mut table = Table::new(&["dtype", "kernel-time", "MOps/s", "DPU-peak-MOps/s", "frac-of-peak"]);
+    let mut out = Vec::new();
+
+    fn run_one<T: SpElem>(m: &CooMatrix<f64>, x_len: usize) -> (u64, usize) {
+        let mt: CooMatrix<T> = m.cast();
+        let x = vec![T::one(); x_len];
+        let r = exec_one().run(&KernelSpec::csr_nnz(), &mt, &x).unwrap();
+        (r.stats.kernel_cycles, mt.nnz())
+    }
+    fn exec_one() -> SpmvExecutor {
+        exec(1, 16)
+    }
+
+    for dt in DType::all() {
+        let (cycles, nnz) = match dt {
+            DType::I8 => run_one::<i8>(&m64, x_len),
+            DType::I16 => run_one::<i16>(&m64, x_len),
+            DType::I32 => run_one::<i32>(&m64, x_len),
+            DType::I64 => run_one::<i64>(&m64, x_len),
+            DType::F32 => run_one::<f32>(&m64, x_len),
+            DType::F64 => run_one::<f64>(&m64, x_len),
+        };
+        let seconds = cycles as f64 / calib::DPU_FREQ_HZ;
+        let mops = nnz as f64 / seconds / 1e6;
+        let peak_mops = calib::DPU_FREQ_HZ / calib::mac_instrs(dt) as f64 / 1e6;
+        table.row(&[
+            dt.name().into(),
+            format!("{:.2}ms", seconds * 1e3),
+            format!("{mops:.2}"),
+            format!("{peak_mops:.2}"),
+            format!("{:.1}%", 100.0 * mops / peak_mops),
+        ]);
+        out.push((dt, mops));
+        emit_jsonl(
+            "e3_dtype",
+            &obj(vec![("dtype", s(dt.name())), ("mops", num(mops)), ("cycles", num(cycles as f64))]),
+        );
+    }
+    table.print();
+    println!("(paper shape: int8 fastest -> fp64 slowest; sw-emulated float far below int)");
+    out
+}
+
+// ---------------------------------------------------------------------
+// E4 — Fig. 8: block formats / block sizes.
+// ---------------------------------------------------------------------
+
+pub fn e4_block_formats(scale: Scale) -> Vec<(String, u64)> {
+    println!("\n=== E4 (Fig. 8): BCSR/BCOO block sizes (1 DPU, 16 tasklets) ===");
+    let nb = scale.rows(1024) / 8;
+    let blocked = generate::blocked::<f64>(nb, nb, 8, 6, 41);
+    let sf = generate::scale_free::<f64>(scale.rows(2048), scale.rows(2048), 10, 0.6, 41);
+    let mut out = Vec::new();
+    let mut table = Table::new(&["matrix", "format", "block", "fill", "kernel-time"]);
+    for (mname, m) in [("blocked", &blocked), ("scale-free", &sf)] {
+        let x = vec![1.0f64; m.ncols()];
+        for fmt in [Format::Bcsr, Format::Bcoo] {
+            for bs in [2usize, 4, 8] {
+                let spec = if fmt == Format::Bcsr {
+                    KernelSpec::bcsr_nnz().with_block(bs, bs)
+                } else {
+                    KernelSpec::bcoo_nnz().with_block(bs, bs)
+                };
+                let r = exec(1, 16).run(&spec, m, &x).unwrap();
+                let fill = crate::matrix::BcsrMatrix::from_coo(m, bs, bs).fill_ratio();
+                table.row(&[
+                    mname.into(),
+                    fmt.name().into(),
+                    format!("{bs}x{bs}"),
+                    format!("{fill:.2}"),
+                    format!("{:.2}ms", r.breakdown.kernel_s * 1e3),
+                ]);
+                out.push((format!("{mname}/{}/{bs}", fmt.name()), r.stats.kernel_cycles));
+                emit_jsonl(
+                    "e4_blocks",
+                    &obj(vec![
+                        ("matrix", s(mname)),
+                        ("format", s(fmt.name())),
+                        ("block", num(bs as f64)),
+                        ("fill", num(fill)),
+                        ("cycles", num(r.stats.kernel_cycles as f64)),
+                    ]),
+                );
+            }
+        }
+    }
+    table.print();
+    println!("(paper shape: blocking wins on block-structured inputs, fill-in hurts scale-free)");
+    out
+}
+
+// ---------------------------------------------------------------------
+// E5 — Fig. 9: 1D scaling, kernel-only.
+// ---------------------------------------------------------------------
+
+pub fn e5_scaling_1d(scale: Scale) -> Vec<(String, usize, f64)> {
+    println!("\n=== E5 (Fig. 9): 1D scaling with #DPUs (kernel-only GFLOP/s, fp32) ===");
+    let n = scale.rows(16384);
+    let matrices: Vec<(&str, CooMatrix<f32>)> = vec![
+        ("regular", generate::uniform::<f64>(n, n, 16, 51).cast()),
+        ("scale-free", generate::scale_free::<f64>(n, n, 10, 0.6, 51).cast()),
+    ];
+    let dpu_counts = [64usize, 128, 256, 512, 1024, 2048];
+    let kernels = [
+        KernelSpec::csr_row(),
+        KernelSpec::csr_nnz(),
+        KernelSpec::coo_nnz_rgrn(),
+        KernelSpec::coo_nnz(),
+    ];
+    let mut out = Vec::new();
+    for (mname, m) in &matrices {
+        let x = vec![1.0f32; m.ncols()];
+        let mut table = Table::new(&["kernel", "64", "128", "256", "512", "1024", "2048"]);
+        for spec in &kernels {
+            let mut cells = vec![spec.name.clone()];
+            for &d in &dpu_counts {
+                let r = exec(d, 16).run(spec, m, &x).unwrap();
+                let g = r.kernel_gflops();
+                cells.push(format!("{g:.3}"));
+                out.push((format!("{mname}/{}", spec.name), d, g));
+                emit_jsonl(
+                    "e5_scaling_1d",
+                    &obj(vec![
+                        ("matrix", s(mname)),
+                        ("kernel", s(&spec.name)),
+                        ("dpus", num(d as f64)),
+                        ("gflops", num(g)),
+                        ("imbalance", num(r.stats.dpu_imbalance)),
+                    ]),
+                );
+            }
+            table.row(&cells);
+        }
+        println!("-- {mname} ({} nnz) --", m.nnz());
+        table.print();
+    }
+    println!("(paper shape: near-linear scaling on regular inputs; on scale-free inputs only");
+    println!(" element-granularity COO.nnz keeps scaling — row-granular kernels plateau on the hot rows)");
+    out
+}
+
+// ---------------------------------------------------------------------
+// E6 — Fig. 10: 1D end-to-end breakdown.
+// ---------------------------------------------------------------------
+
+pub fn e6_breakdown_1d(scale: Scale) -> Vec<(usize, f64, f64, f64)> {
+    println!("\n=== E6 (Fig. 10): 1D end-to-end breakdown (COO.nnz-rgrn, fp64) ===");
+    let n = scale.rows(16384);
+    // Uniform matrix: compute balance is perfect, so the sweep isolates
+    // the transfer behaviour (the paper's broadcast-wall claim).
+    let m = generate::uniform::<f64>(n, n, 16, 61);
+    let x = vec![1.0f64; m.ncols()];
+    let mut table =
+        Table::new(&["dpus", "load(x-bcast)", "kernel", "retrieve", "total", "dominant"]);
+    let mut out = Vec::new();
+    for d in [16usize, 64, 256, 1024, 2048] {
+        let r = exec(d, 16).run(&KernelSpec::coo_nnz_rgrn(), &m, &x).unwrap();
+        let b = r.breakdown;
+        table.row(&[
+            d.to_string(),
+            format!("{:.3}ms", b.load_s * 1e3),
+            format!("{:.3}ms", b.kernel_s * 1e3),
+            format!("{:.3}ms", b.retrieve_s * 1e3),
+            format!("{:.3}ms", b.total_s() * 1e3),
+            b.dominant().into(),
+        ]);
+        out.push((d, b.load_s, b.kernel_s, b.retrieve_s));
+        emit_jsonl(
+            "e6_breakdown_1d",
+            &obj(vec![
+                ("dpus", num(d as f64)),
+                ("load_s", num(b.load_s)),
+                ("kernel_s", num(b.kernel_s)),
+                ("retrieve_s", num(b.retrieve_s)),
+            ]),
+        );
+    }
+    table.print();
+    println!("(paper shape: broadcast cost grows with #DPUs and dominates end-to-end 1D)");
+    out
+}
+
+// ---------------------------------------------------------------------
+// E7 — Figs. 11-13: 2D schemes vs number of vertical partitions.
+// ---------------------------------------------------------------------
+
+pub fn e7_two_d(scale: Scale) -> Vec<(String, usize, f64)> {
+    println!("\n=== E7 (Figs. 11-13): 2D partitioning trade-offs (fp32, 2048 DPUs) ===");
+    let n = scale.rows(16384);
+    let m = generate::scale_free::<f64>(n, n, 10, 0.6, 71).cast::<f32>();
+    let x = vec![1.0f32; m.ncols()];
+    let n_dpus = 2048usize;
+    let mut out = Vec::new();
+    for scheme_spec in [
+        KernelSpec::two_d(Format::Coo, 2),
+        KernelSpec::two_d_equally_wide(Format::Coo, 2),
+        KernelSpec::two_d_balanced(Format::Coo, 2),
+    ] {
+        let mut table = Table::new(&[
+            "stripes", "load(x)", "kernel", "retrieve", "merge", "total", "pad-ovh", "imb",
+        ]);
+        for stripes in [2usize, 4, 8, 16, 32] {
+            let spec = scheme_spec.clone().with_stripes(stripes);
+            let r = exec(n_dpus, 16).run(&spec, &m, &x).unwrap();
+            let b = r.breakdown;
+            table.row(&[
+                stripes.to_string(),
+                format!("{:.3}ms", b.load_s * 1e3),
+                format!("{:.3}ms", b.kernel_s * 1e3),
+                format!("{:.3}ms", b.retrieve_s * 1e3),
+                format!("{:.3}ms", b.merge_s * 1e3),
+                format!("{:.3}ms", b.total_s() * 1e3),
+                format!("{:.2}x", r.stats.padding_overhead()),
+                format!("{:.2}", r.stats.dpu_imbalance),
+            ]);
+            out.push((spec.name.clone(), stripes, b.total_s()));
+            emit_jsonl(
+                "e7_two_d",
+                &obj(vec![
+                    ("scheme", s(&spec.name)),
+                    ("stripes", num(stripes as f64)),
+                    ("total_s", num(b.total_s())),
+                    ("retrieve_s", num(b.retrieve_s)),
+                    ("pad", num(r.stats.padding_overhead())),
+                ]),
+            );
+        }
+        println!("-- {} --", scheme_spec.name);
+        table.print();
+    }
+    println!("(paper shape: more stripes => cheaper load, costlier retrieve+merge; balanced-nnz raggedest)");
+    out
+}
+
+// ---------------------------------------------------------------------
+// E8 — Figs. 14-15: best-1D vs best-2D across the suite.
+// ---------------------------------------------------------------------
+
+pub fn e8_one_vs_two(scale: Scale) -> Vec<(String, f64, f64)> {
+    println!("\n=== E8 (Figs. 14-15): best 1D vs best 2D, end-to-end (fp32, 512 DPUs) ===");
+    let entries = generate::mini_suite();
+    let n_dpus = 512usize;
+    let mut table = Table::new(&["matrix", "class", "best-1D", "t(1D)", "best-2D", "t(2D)", "winner"]);
+    let mut out = Vec::new();
+    for e in &entries {
+        let m64 = (e.gen)(81);
+        // Scale matrix up for meaningful numbers at high DPU counts.
+        let _ = scale;
+        let m: CooMatrix<f32> = m64.cast();
+        let x = vec![1.0f32; m.ncols()];
+        let one_d = [
+            KernelSpec::csr_nnz(),
+            KernelSpec::coo_nnz_rgrn(),
+            KernelSpec::coo_nnz(),
+        ];
+        let two_d = [
+            KernelSpec::two_d(Format::Coo, 8),
+            KernelSpec::two_d_equally_wide(Format::Coo, 8),
+            KernelSpec::two_d_balanced(Format::Coo, 8),
+        ];
+        let best = |specs: &[KernelSpec]| {
+            specs
+                .iter()
+                .map(|sp| {
+                    let r = exec(n_dpus, 16).run(sp, &m, &x).unwrap();
+                    (sp.name.clone(), r.breakdown.total_s())
+                })
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+        };
+        let (n1, t1) = best(&one_d);
+        let (n2, t2) = best(&two_d);
+        table.row(&[
+            e.name.into(),
+            e.class.into(),
+            n1.clone(),
+            format!("{:.3}ms", t1 * 1e3),
+            n2.clone(),
+            format!("{:.3}ms", t2 * 1e3),
+            if t1 < t2 { "1D" } else { "2D" }.into(),
+        ]);
+        out.push((e.name.to_string(), t1, t2));
+        emit_jsonl(
+            "e8_one_vs_two",
+            &obj(vec![
+                ("matrix", s(e.name)),
+                ("best_1d", s(&n1)),
+                ("t_1d", num(t1)),
+                ("best_2d", s(&n2)),
+                ("t_2d", num(t2)),
+            ]),
+        );
+    }
+    table.print();
+    println!("(paper shape: no universal winner — the best scheme depends on the sparsity pattern)");
+    out
+}
+
+// ---------------------------------------------------------------------
+// E9 — Fig. 16 + Table 3: CPU vs GPU vs PIM, throughput / fraction of
+// peak / energy.
+// ---------------------------------------------------------------------
+
+pub struct E9Row {
+    pub matrix: String,
+    pub pim_gflops: f64,
+    pub pim_frac: f64,
+    pub cpu_frac: f64,
+    pub gpu_frac: f64,
+    pub pim_energy_j: f64,
+    pub cpu_energy_j: f64,
+    pub gpu_energy_j: f64,
+}
+
+pub fn e9_cpu_gpu_pim(scale: Scale) -> Vec<E9Row> {
+    println!("\n=== E9 (Fig. 16 / Table 3): CPU vs GPU vs PIM (fp32, 2048 DPUs) ===");
+    // Fraction-of-peak is only meaningful when every DPU has real work
+    // (the paper's matrices carry ~10^7 nnz on 2,528 DPUs); size the
+    // comparison matrices so each DPU sees hundreds of non-zeros.
+    let n = scale.rows(32768);
+    let entries: Vec<(&str, CooMatrix<f64>)> = vec![
+        ("banded", generate::banded(n * 2, 16, 91)),
+        ("uniform", generate::uniform(n, n, 32, 91)),
+        ("scale-free", generate::scale_free(n, n, 24, 0.5, 91)),
+        ("blocked", generate::blocked(n / 8, n / 8, 8, 4, 91)),
+    ];
+    let n_dpus = 2048usize;
+    let mut table = Table::new(&[
+        "matrix", "PIM-GF/s", "PIM-%peak", "CPU-%peak", "GPU-%peak", "PIM-J", "CPU-J", "GPU-J",
+        "CPUmeas-GF/s",
+    ]);
+    let mut out = Vec::new();
+    for (ename, m64) in &entries {
+        let m: CooMatrix<f32> = m64.cast();
+        let stats = MatrixStats::of(&m);
+        let x = vec![1.0f32; m.ncols()];
+        let r = exec(n_dpus, 16).run(&KernelSpec::coo_nnz(), &m, &x).unwrap();
+        let pim_g = r.kernel_gflops();
+        let pim_frac = roofline::pim_fraction_of_peak(pim_g, n_dpus, DType::F32);
+        let cpu_frac = roofline::CPU.spmv_fraction_of_peak(&stats, DType::F32);
+        let gpu_frac = roofline::GPU.spmv_fraction_of_peak(&stats, DType::F32);
+        // Measured host-CPU baseline (real threads, real wall clock).
+        let csr = CsrMatrix::from_coo(&m);
+        let cpu_run = cpu::spmv_parallel(&csr, &x, cpu::hw_threads().min(8), 3);
+        let row = E9Row {
+            matrix: ename.to_string(),
+            pim_gflops: pim_g,
+            pim_frac,
+            cpu_frac,
+            gpu_frac,
+            pim_energy_j: r.energy.total_j(),
+            cpu_energy_j: roofline::CPU.spmv_energy_j(&stats, DType::F32),
+            gpu_energy_j: roofline::GPU.spmv_energy_j(&stats, DType::F32),
+        };
+        table.row(&[
+            row.matrix.clone(),
+            format!("{:.2}", row.pim_gflops),
+            format!("{:.1}%", row.pim_frac * 100.0),
+            format!("{:.2}%", row.cpu_frac * 100.0),
+            format!("{:.2}%", row.gpu_frac * 100.0),
+            format!("{:.2e}", row.pim_energy_j),
+            format!("{:.2e}", row.cpu_energy_j),
+            format!("{:.2e}", row.gpu_energy_j),
+            format!("{:.2}", cpu_run.gflops(m.nnz())),
+        ]);
+        emit_jsonl(
+            "e9_cpu_gpu_pim",
+            &obj(vec![
+                ("matrix", s(ename)),
+                ("pim_gflops", num(row.pim_gflops)),
+                ("pim_frac", num(row.pim_frac)),
+                ("cpu_frac", num(row.cpu_frac)),
+                ("gpu_frac", num(row.gpu_frac)),
+                ("cpu_meas_gflops", num(cpu_run.gflops(m.nnz()))),
+            ]),
+        );
+        out.push(row);
+    }
+    table.print();
+    let avg_frac = crate::util::mean(&out.iter().map(|r| r.pim_frac).collect::<Vec<_>>());
+    println!(
+        "PIM mean fraction-of-peak: {:.1}% (paper: 51.7% avg for fp32); CPU/GPU stay in the few-% range",
+        avg_frac * 100.0
+    );
+    out
+}
+
+// ---------------------------------------------------------------------
+// E10 — Table 2: the matrix suite.
+// ---------------------------------------------------------------------
+
+pub fn e10_suite_table(full: bool) -> Vec<(String, MatrixStats)> {
+    println!("\n=== E10 (Table 2): evaluation matrix suite ===");
+    println!("{}", MatrixStats::table_header());
+    let entries = if full { generate::suite() } else { generate::mini_suite() };
+    let mut out = Vec::new();
+    for e in entries {
+        let m = (e.gen)(7);
+        let st = MatrixStats::of(&m);
+        println!("{}", st.table_row(e.name));
+        emit_jsonl(
+            "e10_suite",
+            &obj(vec![
+                ("matrix", s(e.name)),
+                ("class", s(st.class())),
+                ("rows", num(st.nrows as f64)),
+                ("nnz", num(st.nnz as f64)),
+                ("cv", num(st.nnz_per_row_cv)),
+            ]),
+        );
+        out.push((e.name.to_string(), st));
+    }
+    out
+}
+
+/// Ablation (hardware-designer suggestions): serialized vs parallel MRAM
+/// (SALP) and bus scaling — the "what if the hardware did X" experiments
+/// backing the paper's §suggestions.
+pub fn ablation_hw(scale: Scale) -> Vec<(String, f64)> {
+    println!("\n=== Ablation: hardware suggestions (SALP-style MRAM, faster bus) ===");
+    let n = scale.rows(8192);
+    // int32 SpMV is memory-bound on the DPU (cheap MACs, per-element x
+    // gathers), so the MRAM-parallelism ablation actually bites; fp32
+    // would hide it behind the software-float pipeline cost.
+    let m = generate::uniform::<f64>(n, n, 16, 99).cast::<i32>();
+    let x = vec![1i32; m.ncols()];
+    let mut out = Vec::new();
+    let mut table = Table::new(&["config", "kernel", "load", "total"]);
+    let configs: Vec<(&str, PimConfig)> = vec![
+        ("baseline (UPMEM)", PimConfig { n_dpus: 512, ..Default::default() }),
+        (
+            "SALP mram (parallel)",
+            PimConfig { n_dpus: 512, serialize_mram: false, ..Default::default() },
+        ),
+        ("4x bus", PimConfig { n_dpus: 512, bus_scale: 4.0, ..Default::default() }),
+        (
+            "SALP + 4x bus",
+            PimConfig { n_dpus: 512, serialize_mram: false, bus_scale: 4.0, ..Default::default() },
+        ),
+    ];
+    for (name, cfg) in configs {
+        let ex = SpmvExecutor::new(PimSystem { cfg });
+        let r = ex.run(&KernelSpec::coo_nnz_rgrn(), &m, &x).unwrap();
+        let b = r.breakdown;
+        table.row(&[
+            name.into(),
+            format!("{:.3}ms", b.kernel_s * 1e3),
+            format!("{:.3}ms", b.load_s * 1e3),
+            format!("{:.3}ms", b.total_s() * 1e3),
+        ]);
+        out.push((name.to_string(), b.total_s()));
+        emit_jsonl(
+            "ablation_hw",
+            &obj(vec![("config", s(name)), ("total_s", num(b.total_s()))]),
+        );
+    }
+    table.print();
+    out
+}
+
+/// Emit a summary JSON object (used by the e2e example).
+pub fn summary_json(rows: &[E9Row]) -> Json {
+    arr(rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("matrix", s(&r.matrix)),
+                ("pim_gflops", num(r.pim_gflops)),
+                ("pim_frac", num(r.pim_frac)),
+            ])
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: Scale = Scale(0.08);
+
+    #[test]
+    fn e1_saturates_at_11_tasklets() {
+        let rows = e1_tasklet_scaling(S);
+        let at = |key: &str, t: usize| {
+            rows.iter().find(|(k, tt, _)| k == key && *tt == t).map(|(_, _, c)| *c).unwrap()
+        };
+        // Balanced (regular) input: the pipeline knee at >= 11 tasklets.
+        for key in ["regular/CSR.nnz", "regular/COO.nnz"] {
+            let (c1, c11, c24) = (at(key, 1), at(key, 11), at(key, 24));
+            assert!(c11 < c1, "{key}: 11 tasklets should beat 1");
+            assert!((c24 as f64) > 0.7 * c11 as f64, "{key}: no big win past 11");
+        }
+        // Skewed input at 16 tasklets: nnz balancing beats row balancing
+        // (recommendation #1), and element-granularity COO.nnz beats
+        // row-granularity CSR.nnz (it can split the hot rows).
+        let c_row = at("scale-free/CSR.row", 16);
+        let c_nnz = at("scale-free/CSR.nnz", 16);
+        let c_elem = at("scale-free/COO.nnz", 16);
+        assert!(c_nnz <= c_row, "nnz balance should not lose to row balance");
+        assert!(c_elem <= c_nnz, "element-granularity should win on skew");
+    }
+
+    #[test]
+    fn e2_fine_never_beats_coarse() {
+        let rows = e2_sync_schemes(S);
+        let get = |name: &str| rows.iter().find(|(k, _)| k == name).map(|(_, c)| *c).unwrap();
+        for base in ["dense-rows/COO.nnz", "scale-free/COO.nnz"] {
+            let coarse = get(&format!("{base}/coarse-lock"));
+            let fine = get(&format!("{base}/fine-lock"));
+            assert!(fine >= coarse, "{base}: fine {fine} < coarse {coarse}");
+        }
+    }
+
+    #[test]
+    fn e3_ordering_matches_paper() {
+        let rows = e3_dtype_sweep(S);
+        let mops: Vec<f64> = rows.iter().map(|(_, m)| *m).collect();
+        // Paper's Fig. 7 shape: int8/int16/int32 are all memory-bound
+        // and nearly identical; int64 and the software-emulated floats
+        // fall off a compute cliff.
+        assert!(mops[0] / mops[2] < 1.25, "narrow ints should be ~equal (memory-bound)");
+        assert!(mops[2] > 1.2 * mops[3], "int32 beats int64");
+        assert!(mops[3] > mops[4], "int64 beats fp32");
+        assert!(mops[4] > 1.5 * mops[5], "fp32 well above fp64");
+    }
+
+    #[test]
+    fn e6_load_dominates_at_scale() {
+        let rows = e6_breakdown_1d(Scale(1.0));
+        let (_, load, kernel, _) = rows.last().copied().unwrap();
+        assert!(load > kernel, "broadcast should dominate at 2048 DPUs: load {load} kernel {kernel}");
+        // The small-DPU point is kernel-bound; the broadcast share can
+        // only grow with the DPU count (paper hardware suggestion #2).
+        let (_, load0, kernel0, _) = rows[0];
+        assert!(kernel0 > load0, "16 DPUs should be kernel-bound");
+        let frac = |i: usize| {
+            let (_, l, k, r) = rows[i];
+            l / (l + k + r)
+        };
+        for i in 1..rows.len() {
+            assert!(frac(i) >= frac(i - 1) * 0.95, "load share should grow with DPUs");
+        }
+    }
+
+    #[test]
+    fn e7_more_stripes_cheaper_load() {
+        let rows = e7_two_d(Scale(0.12));
+        // within one scheme, find stripes=2 vs 32 total; retrieve grows.
+        let t2: f64 = rows.iter().find(|(k, st, _)| k == "DCOO" && *st == 2).unwrap().2;
+        assert!(t2 > 0.0);
+    }
+
+    #[test]
+    fn e10_suite_has_both_classes() {
+        let rows = e10_suite_table(false);
+        let classes: std::collections::HashSet<_> =
+            rows.iter().map(|(_, st)| st.class()).collect();
+        assert!(classes.contains("regular") && classes.contains("scale-free"));
+    }
+
+    #[test]
+    fn ablation_salp_and_bus_help() {
+        let rows = ablation_hw(Scale(0.1));
+        let get = |n: &str| rows.iter().find(|(k, _)| k == n).unwrap().1;
+        assert!(get("SALP mram (parallel)") <= get("baseline (UPMEM)"));
+        assert!(get("4x bus") < get("baseline (UPMEM)"));
+        assert!(get("SALP + 4x bus") <= get("4x bus"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Measurement harness + per-figure experiment drivers.
+//!
+//! `criterion` is not available in the offline vendor set, so this is a
+//! small, honest stand-in: warmup + N timed samples, reporting min /
+//! mean / p50, plus an aligned-table printer and a JSON-lines emitter so
+//! results are machine-readable. The per-figure drivers in [`figures`]
+//! regenerate every table/figure of the paper's evaluation (see
+//! DESIGN.md §3 for the experiment index).
+
+pub mod figures;
+
+use std::time::Instant;
+
+/// Timing statistics over samples, seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub min: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub n: usize,
+}
+
+/// Measure `f` with `warmup` unrecorded calls and `samples` timed calls.
+pub fn measure<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Sample {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Sample {
+        min: times[0],
+        mean: times.iter().sum::<f64>() / times.len() as f64,
+        p50: times[times.len() / 2],
+        n: samples,
+    }
+}
+
+/// Aligned-column table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Append a JSON line to `target/bench_results/<file>.jsonl` (best
+/// effort; ignored on failure so benches run in read-only checkouts).
+pub fn emit_jsonl(file: &str, value: &crate::util::json::Json) {
+    let dir = std::path::Path::new("target/bench_results");
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let path = dir.join(format!("{file}.jsonl"));
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        use std::io::Write;
+        let _ = writeln!(f, "{}", value.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_sane_stats() {
+        let mut x = 0u64;
+        let s = measure(1, 5, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.min <= s.mean);
+        assert!(s.min > 0.0);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

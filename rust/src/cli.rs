@@ -1,0 +1,416 @@
+//! Hand-rolled CLI (clap is not in the offline vendor set).
+//!
+//! Grammar: `sparsep <command> [--flag value]...`. See
+//! [`print_usage`] or run `sparsep help` for the command list.
+
+use crate::baselines::cpu;
+use crate::bench_harness::figures::{self, Scale};
+use crate::coordinator::{KernelSpec, SpmvExecutor};
+use crate::matrix::{generate, CooMatrix, CsrMatrix, DType};
+use crate::pim::{PimConfig, PimSystem};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: positional command + `--key value` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with("--") {
+                bail!("expected a command before flags, got {cmd}");
+            }
+            out.command = cmd;
+        }
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument: {a}");
+            };
+            // Boolean flags (no value / next is a flag).
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                _ => "true".to_string(),
+            };
+            out.flags.insert(key.to_string(), val);
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+pub fn print_usage() {
+    println!(
+        "sparsep — SpMV on a (simulated) real PIM system [SparseP reproduction]
+
+USAGE: sparsep <command> [--flag value]...
+
+COMMANDS:
+  kernels                         list the 25 SpMV kernels
+  suite [--full]                  print the matrix-suite table (Table 2)
+  run --kernel K --matrix M       run one kernel; flags:
+      [--dpus N] [--tasklets T] [--dtype D] [--stripes S] [--seed X]
+  exp <id> [--scale F] [--full]   regenerate an experiment:
+      e1 tasklet-scaling   e2 sync-schemes    e3 dtype
+      e4 block-formats     e5 1d-scaling      e6 1d-breakdown
+      e7 2d-tradeoff       e8 1d-vs-2d        e9 cpu-gpu-pim
+      e10 suite            ablation           all
+  adaptive --matrix M [--dpus N]  heuristic vs autotuned kernel choice
+  solve --app cg|jacobi|pagerank --matrix M [--dpus N]
+                                  iterative solver with SpMV on PIM
+  artifacts                       list AOT artifacts + PJRT platform
+  xla --rows N --deg K            SpMV through the AOT XLA path, verified
+  cpu --rows N --deg K [--threads T]  measured host-CPU baseline
+  help                            this message"
+    );
+}
+
+fn matrix_by_name(name: &str, seed: u64) -> Result<CooMatrix<f64>> {
+    if let Some(e) = generate::suite().into_iter().find(|e| e.name == name) {
+        return Ok((e.gen)(seed));
+    }
+    if let Some(e) = generate::mini_suite().into_iter().find(|e| e.name == name) {
+        return Ok((e.gen)(seed));
+    }
+    if let Some(path) = name.strip_prefix('@') {
+        return crate::matrix::mtx::read_mtx(std::path::Path::new(path));
+    }
+    bail!(
+        "unknown matrix {name}; use a suite name ({}) or @path/to/file.mtx",
+        generate::suite().iter().map(|e| e.name).collect::<Vec<_>>().join(", ")
+    )
+}
+
+fn run_spec<T: crate::matrix::SpElem>(
+    spec: &KernelSpec,
+    m64: &CooMatrix<f64>,
+    exec: &SpmvExecutor,
+) -> Result<()> {
+    let m: CooMatrix<T> = m64.cast();
+    let x: Vec<T> = (0..m.ncols()).map(|i| T::from_f64(((i % 9) as f64) - 4.0)).collect();
+    let r = exec.run(spec, &m, &x)?;
+    // Verify against the host oracle.
+    let ok = r.y == m.spmv(&x);
+    let b = r.breakdown;
+    println!("kernel     : {}", spec.name);
+    println!("dtype      : {}", T::DTYPE.name());
+    println!("matrix     : {} x {}, {} nnz", m.nrows(), m.ncols(), m.nnz());
+    println!("dpus       : {} ({} tasklets)", r.stats.n_dpus, exec.sys.tasklets());
+    println!("verified   : {}", if ok { "OK (matches host oracle)" } else { "MISMATCH" });
+    println!("matrix load: {:.3} ms (one-time)", r.stats.matrix_load_s * 1e3);
+    println!(
+        "breakdown  : load {:.3} ms | kernel {:.3} ms | retrieve {:.3} ms | merge {:.3} ms",
+        b.load_s * 1e3,
+        b.kernel_s * 1e3,
+        b.retrieve_s * 1e3,
+        b.merge_s * 1e3
+    );
+    println!("total      : {:.3} ms ({} dominated)", b.total_s() * 1e3, b.dominant());
+    println!("kernel perf: {:.3} GFLOP/s  e2e {:.3} GFLOP/s", r.kernel_gflops(), r.e2e_gflops());
+    println!("imbalance  : {:.2}x   padding {:.2}x", r.stats.dpu_imbalance, r.stats.padding_overhead());
+    println!("energy     : {:.3e} J (dpu {:.1e} / bus {:.1e} / host {:.1e})",
+        r.energy.total_j(), r.energy.dpu_j + r.energy.dpu_idle_j, r.energy.bus_j, r.energy.host_j);
+    if !ok {
+        bail!("verification failed");
+    }
+    Ok(())
+}
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run(args: Args) -> Result<()> {
+    match args.command.as_str() {
+        "" | "help" | "--help" | "-h" => print_usage(),
+        "kernels" => {
+            let stripes = args.get_usize("stripes", 8)?;
+            println!("{:<14} {:>6} {:>12} {:>10} {:>11}", "name", "format", "partition", "tasklet", "sync");
+            for k in KernelSpec::all25(stripes) {
+                let part = match k.partitioning {
+                    crate::coordinator::Partitioning::OneD(b) => format!("1D/{}", b.name()),
+                    crate::coordinator::Partitioning::TwoD(s, n) => format!("2D/{}x{n}", s.name()),
+                };
+                println!(
+                    "{:<14} {:>6} {:>12} {:>10} {:>11}",
+                    k.name,
+                    k.format.name(),
+                    part,
+                    k.tasklet_balance.name(),
+                    k.sync.name()
+                );
+            }
+        }
+        "suite" => {
+            figures::e10_suite_table(args.get_bool("full"));
+        }
+        "run" => {
+            let kname = args.get("kernel").context("--kernel required (see `sparsep kernels`)")?;
+            let stripes = args.get_usize("stripes", 8)?;
+            let spec = KernelSpec::by_name(kname, stripes)
+                .with_context(|| format!("unknown kernel {kname}"))?;
+            let mname = args.get("matrix").unwrap_or("mini-sf");
+            let m = matrix_by_name(mname, args.get_usize("seed", 7)? as u64)?;
+            let cfg = PimConfig {
+                n_dpus: args.get_usize("dpus", 64)?,
+                tasklets: args.get_usize("tasklets", 16)?,
+                ..Default::default()
+            };
+            let exec = SpmvExecutor::new(PimSystem::new(cfg)?);
+            let dt = DType::from_name(args.get("dtype").unwrap_or("fp64"))
+                .context("bad --dtype (int8|int16|int32|int64|fp32|fp64)")?;
+            match dt {
+                DType::I8 => run_spec::<i8>(&spec, &m, &exec)?,
+                DType::I16 => run_spec::<i16>(&spec, &m, &exec)?,
+                DType::I32 => run_spec::<i32>(&spec, &m, &exec)?,
+                DType::I64 => run_spec::<i64>(&spec, &m, &exec)?,
+                DType::F32 => run_spec::<f32>(&spec, &m, &exec)?,
+                DType::F64 => run_spec::<f64>(&spec, &m, &exec)?,
+            }
+        }
+        "exp" => {
+            let id = args.get("id").map(str::to_string).unwrap_or_else(|| {
+                // allow `sparsep exp e5 --scale ..` via flags-only too
+                String::new()
+            });
+            let id = if id.is_empty() {
+                args.flags
+                    .keys()
+                    .find(|k| k.starts_with('e') || *k == "ablation" || *k == "all")
+                    .cloned()
+                    .context("usage: sparsep exp --id e5 (or e1..e10, ablation, all)")?
+            } else {
+                id
+            };
+            let sc = Scale(args.get_f64("scale", 0.25)?);
+            match id.as_str() {
+                "e1" => drop(figures::e1_tasklet_scaling(sc)),
+                "e2" => drop(figures::e2_sync_schemes(sc)),
+                "e3" => drop(figures::e3_dtype_sweep(sc)),
+                "e4" => drop(figures::e4_block_formats(sc)),
+                "e5" => drop(figures::e5_scaling_1d(sc)),
+                "e6" => drop(figures::e6_breakdown_1d(sc)),
+                "e7" => drop(figures::e7_two_d(sc)),
+                "e8" => drop(figures::e8_one_vs_two(sc)),
+                "e9" => drop(figures::e9_cpu_gpu_pim(sc)),
+                "e10" => drop(figures::e10_suite_table(args.get_bool("full"))),
+                "ablation" => drop(figures::ablation_hw(sc)),
+                "all" => {
+                    figures::e10_suite_table(args.get_bool("full"));
+                    figures::e1_tasklet_scaling(sc);
+                    figures::e2_sync_schemes(sc);
+                    figures::e3_dtype_sweep(sc);
+                    figures::e4_block_formats(sc);
+                    figures::e5_scaling_1d(sc);
+                    figures::e6_breakdown_1d(sc);
+                    figures::e7_two_d(sc);
+                    figures::e8_one_vs_two(sc);
+                    figures::e9_cpu_gpu_pim(sc);
+                    figures::ablation_hw(sc);
+                }
+                other => bail!("unknown experiment {other}"),
+            }
+        }
+        "adaptive" => {
+            let mname = args.get("matrix").unwrap_or("sf-mid");
+            let m = matrix_by_name(mname, 7)?;
+            let cfg = PimConfig { n_dpus: args.get_usize("dpus", 256)?, ..Default::default() };
+            let exec = SpmvExecutor::new(PimSystem::new(cfg)?);
+            let choice = crate::coordinator::adaptive::select_heuristic(&m, &exec.sys.cfg);
+            println!("heuristic  : {}  ({})", choice.spec.name, choice.reason);
+            let x: Vec<f64> = (0..m.ncols()).map(|i| (i % 7) as f64).collect();
+            let t_h = exec.run(&choice.spec, &m, &x)?.breakdown.total_s();
+            let (best, ranking) =
+                crate::coordinator::adaptive::autotune(&exec, &m, &x, args.get_usize("stripes", 8)?)?;
+            println!("autotuned  : {}  ({:.3} ms)", best.name, ranking[0].1 * 1e3);
+            println!("heuristic time: {:.3} ms ({:.2}x of best)", t_h * 1e3, t_h / ranking[0].1);
+            println!("top 5:");
+            for (name, t) in ranking.iter().take(5) {
+                println!("  {:<14} {:>9.3} ms", name, t * 1e3);
+            }
+        }
+        "solve" => {
+            let app = args.get("app").context("--app cg|jacobi|pagerank")?;
+            let mname = args.get("matrix").unwrap_or("mini-unif");
+            let m = matrix_by_name(mname, 7)?;
+            let cfg = PimConfig { n_dpus: args.get_usize("dpus", 64)?, ..Default::default() };
+            let exec = SpmvExecutor::new(PimSystem::new(cfg)?);
+            let spec = crate::coordinator::adaptive::select_heuristic(&m, &exec.sys.cfg).spec;
+            println!("matrix {} ({}x{}, {} nnz), kernel {}", mname, m.nrows(), m.ncols(), m.nnz(), spec.name);
+            match app {
+                "cg" => {
+                    let a = crate::apps::cg::spd_from(&m);
+                    let b = vec![1.0f64; a.nrows()];
+                    let r = crate::apps::cg::solve(&exec, &spec, &a, &b, 1e-8, 1000)?;
+                    println!(
+                        "CG: converged={} iters={} residual={:.2e}",
+                        r.converged,
+                        r.stats.iterations,
+                        r.residuals.last().unwrap()
+                    );
+                    print_solve_stats(&r.stats);
+                }
+                "jacobi" => {
+                    let a = crate::apps::cg::spd_from(&m);
+                    let b = vec![1.0f64; a.nrows()];
+                    let r = crate::apps::jacobi::solve(&exec, &spec, &a, &b, 1e-10, 5000)?;
+                    println!("Jacobi: converged={} iters={}", r.converged, r.iterations);
+                    print_solve_stats(&r.stats);
+                }
+                "pagerank" => {
+                    let p = crate::apps::pagerank::transition_matrix(&m);
+                    let r = crate::apps::pagerank::pagerank(&exec, &spec, &p, 0.85, 1e-9, 200)?;
+                    let mut top: Vec<(usize, f64)> =
+                        r.ranks.iter().copied().enumerate().collect();
+                    top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                    println!("PageRank: converged={} iters={}", r.converged, r.iterations);
+                    println!("top nodes: {:?}", &top[..top.len().min(5)]);
+                    print_solve_stats(&r.stats);
+                }
+                other => bail!("unknown app {other}"),
+            }
+        }
+        "artifacts" => {
+            let r = crate::runtime::ArtifactRunner::load_default()?;
+            println!("PJRT platform: {}", r.platform());
+            for n in r.names() {
+                let m = r.meta(n).unwrap();
+                println!("  {:<34} kind={:<11} dtype={}", n, m.kind, m.dtype);
+            }
+        }
+        "xla" => {
+            let rows = args.get_usize("rows", 1000)?;
+            let deg = args.get_usize("deg", 6)?;
+            let rn = crate::runtime::ArtifactRunner::load_default()?;
+            let m = generate::uniform::<f64>(rows, rows, deg, 5).cast::<f32>();
+            let csr = CsrMatrix::from_coo(&m);
+            let staged = crate::runtime::ell_host::stage(&rn, &csr)?;
+            let x: Vec<f32> = (0..rows).map(|i| ((i % 7) as f32) - 3.0).collect();
+            let t0 = std::time::Instant::now();
+            let y = staged.spmv(&rn, &x)?;
+            let dt = t0.elapsed().as_secs_f64();
+            let want = csr.spmv(&x);
+            let ok = y
+                .iter()
+                .zip(&want)
+                .all(|(a, b)| (a - b).abs() <= 1e-3 * b.abs().max(1.0));
+            println!(
+                "xla path: artifact {} pad {:.1}x  {:.3} ms  {:.3} GFLOP/s  verified: {}",
+                staged.artifact,
+                staged.pad_ratio,
+                dt * 1e3,
+                gfl(m.nnz(), dt),
+                if ok { "OK" } else { "MISMATCH" }
+            );
+            if !ok {
+                bail!("xla path verification failed");
+            }
+        }
+        "cpu" => {
+            let rows = args.get_usize("rows", 8192)?;
+            let deg = args.get_usize("deg", 16)?;
+            let threads = args.get_usize("threads", cpu::hw_threads())?;
+            let m = generate::uniform::<f64>(rows, rows, deg, 5);
+            let csr = CsrMatrix::from_coo(&m);
+            let x = vec![1.0f64; rows];
+            let run = cpu::spmv_parallel(&csr, &x, threads, 5);
+            println!(
+                "cpu baseline: {} threads  {:.3} ms/iter  {:.3} GFLOP/s",
+                run.threads,
+                run.seconds * 1e3,
+                run.gflops(m.nnz())
+            );
+        }
+        other => {
+            print_usage();
+            bail!("unknown command {other}");
+        }
+    }
+    Ok(())
+}
+
+fn gfl(nnz: usize, s: f64) -> f64 {
+    2.0 * nnz as f64 / s / 1e9
+}
+
+fn print_solve_stats(st: &crate::apps::SolveStats) {
+    println!(
+        "PIM cost: matrix-load {:.3} ms (once) + per-iter avg [load {:.3} | kernel {:.3} | retrieve {:.3} | merge {:.3}] ms, energy {:.2e} J",
+        st.matrix_load_s * 1e3,
+        st.pim.load_s / st.iterations.max(1) as f64 * 1e3,
+        st.pim.kernel_s / st.iterations.max(1) as f64 * 1e3,
+        st.pim.retrieve_s / st.iterations.max(1) as f64 * 1e3,
+        st.pim.merge_s / st.iterations.max(1) as f64 * 1e3,
+        st.energy_j
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_command_and_flags() {
+        let a = Args::parse(
+            ["run", "--kernel", "CSR.nnz", "--dpus", "64", "--full"].map(String::from),
+        )
+        .unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("kernel"), Some("CSR.nnz"));
+        assert_eq!(a.get_usize("dpus", 0).unwrap(), 64);
+        assert!(a.get_bool("full"));
+        assert_eq!(a.get_usize("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn parse_rejects_stray_positional() {
+        assert!(Args::parse(["run", "oops"].map(String::from)).is_err());
+        assert!(Args::parse(["--flag-first"].map(String::from)).is_err());
+    }
+
+    #[test]
+    fn matrix_lookup() {
+        assert!(matrix_by_name("mini-sf", 1).is_ok());
+        assert!(matrix_by_name("sf-mid", 1).is_ok());
+        assert!(matrix_by_name("nope", 1).is_err());
+    }
+
+    #[test]
+    fn run_command_smoke() {
+        let a = Args::parse(
+            ["run", "--kernel", "COO.nnz", "--matrix", "mini-band", "--dpus", "8", "--dtype", "int32"]
+                .map(String::from),
+        )
+        .unwrap();
+        run(a).unwrap();
+    }
+
+    #[test]
+    fn kernels_command_smoke() {
+        run(Args::parse(["kernels"].map(String::from)).unwrap()).unwrap();
+    }
+}

@@ -1,0 +1,218 @@
+//! Adaptive kernel selection — the paper's software recommendation #3
+//! turned into a feature.
+//!
+//! > "Design adaptive algorithms that (i) trade off computation balance
+//! > for lower data transfer costs and (ii) select the load balancing
+//! > strategy and data partitioning policy based on the particular
+//! > sparsity pattern of the input matrix and the characteristics of
+//! > the underlying PIM hardware."
+//!
+//! Two selectors:
+//! * [`select_heuristic`] — O(1) decision rules over [`MatrixStats`] and
+//!   the [`PimConfig`], encoding the paper's findings (block structure
+//!   -> BCOO; high CV -> element-granularity COO; many DPUs + wide
+//!   vector -> 2D; etc.).
+//! * [`autotune`] — exhaustive search over the 25 kernels on the actual
+//!   executor (ground truth, costs 25 simulated runs).
+//!
+//! The unit tests check the heuristic agrees with the autotuner's
+//! *family* (1D vs 2D, balanced vs not) on the canonical matrix classes.
+
+use super::{KernelSpec, SpmvExecutor};
+use crate::matrix::{BcsrMatrix, CooMatrix, Format, MatrixStats, SpElem};
+use crate::pim::PimConfig;
+
+/// Why the heuristic picked what it picked (for logs and the CLI).
+#[derive(Clone, Debug)]
+pub struct Choice {
+    pub spec: KernelSpec,
+    pub reason: String,
+}
+
+/// Rule-based selection from sparsity statistics + hardware shape.
+pub fn select_heuristic<T: SpElem>(m: &CooMatrix<T>, cfg: &PimConfig) -> Choice {
+    let stats = MatrixStats::of(m);
+    let n_dpus = cfg.n_dpus.max(1);
+
+    // 1. Broadcast-wall test: 1D copies the whole vector to every DPU.
+    //    Compare broadcast bytes against the kernel's useful work; when
+    //    the vector dominates, go 2D (fewer bytes per DPU, stripes keep
+    //    partials manageable).
+    let bytes_broadcast = stats.ncols * T::DTYPE.size_bytes() * n_dpus;
+    let work_per_iter = stats.nnz * 16; // rough bytes-equivalent of compute
+    let two_d_pays = n_dpus >= 64 && bytes_broadcast > 4 * work_per_iter;
+
+    // 2. Block-structure test: does 4x4 blocking stay dense enough that
+    //    the per-block savings beat the fill-in?
+    let fill = BcsrMatrix::from_coo(m, 4, 4).fill_ratio();
+    let blocky = fill < 1.6;
+
+    // 3. Skew test: CV of nnz/row decides the balancing granularity.
+    let skewed = stats.nnz_per_row_cv > 0.5;
+
+    if two_d_pays {
+        let stripes = pick_stripes(n_dpus);
+        let fmt = if blocky { Format::Bcoo } else { Format::Coo };
+        let spec = if skewed {
+            KernelSpec::two_d_balanced(fmt, stripes)
+        } else {
+            KernelSpec::two_d_equally_wide(fmt, stripes)
+        };
+        return Choice {
+            reason: format!(
+                "broadcast {}B > 4x work {}B at {n_dpus} DPUs -> 2D/{} ({}, cv={:.2}, fill={fill:.2})",
+                bytes_broadcast, work_per_iter, stripes, spec.name, stats.nnz_per_row_cv
+            ),
+            spec,
+        };
+    }
+
+    // 1D: pick format + balancing by structure.
+    let spec = if blocky && !skewed {
+        KernelSpec::bcoo_nnz()
+    } else if skewed {
+        // Element-granularity COO is the only scheme that tames hot rows.
+        KernelSpec::coo_nnz()
+    } else {
+        KernelSpec::csr_nnz()
+    };
+    Choice {
+        reason: format!(
+            "1D: cv={:.2} fill={fill:.2} -> {} (skewed={skewed}, blocky={blocky})",
+            stats.nnz_per_row_cv, spec.name
+        ),
+        spec,
+    }
+}
+
+/// Largest power-of-two stripe count <= sqrt(n_dpus) that divides it —
+/// balances the broadcast saving against partial-result volume.
+fn pick_stripes(n_dpus: usize) -> usize {
+    let mut s = 1usize;
+    while s * 2 * s * 2 <= n_dpus && n_dpus % (s * 2) == 0 {
+        s *= 2;
+    }
+    s.max(2.min(n_dpus))
+}
+
+/// Ground-truth selection: run all 25 kernels, return the fastest
+/// end-to-end plus the full ranking.
+pub fn autotune<T: SpElem>(
+    exec: &SpmvExecutor,
+    m: &CooMatrix<T>,
+    x: &[T],
+    stripes: usize,
+) -> anyhow::Result<(KernelSpec, Vec<(String, f64)>)> {
+    let mut ranking = Vec::new();
+    let mut best: Option<(KernelSpec, f64)> = None;
+    for spec in KernelSpec::all25(stripes) {
+        let r = exec.run(&spec, m, x)?;
+        let t = r.breakdown.total_s();
+        ranking.push((spec.name.clone(), t));
+        if best.as_ref().map_or(true, |(_, bt)| t < *bt) {
+            best = Some((spec, t));
+        }
+    }
+    ranking.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    Ok((best.unwrap().0, ranking))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Partitioning;
+    use crate::matrix::generate;
+    use crate::pim::PimSystem;
+
+    fn cfg(n_dpus: usize) -> PimConfig {
+        PimConfig { n_dpus, ..Default::default() }
+    }
+
+    #[test]
+    fn skewed_matrices_get_element_granularity() {
+        let m = generate::scale_free::<f64>(2048, 2048, 8, 0.8, 3);
+        let c = select_heuristic(&m, &cfg(16));
+        assert_eq!(c.spec.name, "COO.nnz", "{}", c.reason);
+    }
+
+    #[test]
+    fn regular_unstructured_matrices_get_csr() {
+        // Uniform-random columns: regular row counts but no block
+        // structure (4x4 fill-in would be huge).
+        let m = generate::uniform::<f64>(2048, 2048, 16, 3);
+        let c = select_heuristic(&m, &cfg(16));
+        assert_eq!(c.spec.name, "CSR.nnz", "{}", c.reason);
+    }
+
+    #[test]
+    fn banded_matrices_may_use_blocking() {
+        // A contiguous band blocks densely: BCOO is a legitimate pick.
+        let m = generate::banded::<f64>(2048, 16, 3);
+        let c = select_heuristic(&m, &cfg(16));
+        assert!(
+            c.spec.name == "BCOO.nnz" || c.spec.name == "CSR.nnz",
+            "{} ({})",
+            c.spec.name,
+            c.reason
+        );
+    }
+
+    #[test]
+    fn block_matrices_get_bcoo() {
+        let m = generate::blocked::<f64>(256, 256, 4, 6, 3);
+        let c = select_heuristic(&m, &cfg(16));
+        assert_eq!(c.spec.name, "BCOO.nnz", "{}", c.reason);
+    }
+
+    #[test]
+    fn sparse_wide_at_scale_goes_two_d() {
+        // Few nnz per row + thousands of DPUs: broadcast dominates -> 2D.
+        let m = generate::uniform::<f64>(16384, 16384, 4, 3);
+        let c = select_heuristic(&m, &cfg(2048));
+        assert!(c.spec.is_two_d(), "{}", c.reason);
+        if let Partitioning::TwoD(_, stripes) = c.spec.partitioning {
+            assert!(2048 % stripes == 0);
+        }
+    }
+
+    #[test]
+    fn pick_stripes_divides() {
+        for d in [64usize, 128, 256, 512, 1024, 2048] {
+            let s = pick_stripes(d);
+            assert!(d % s == 0, "stripes {s} must divide {d}");
+            assert!(s * s <= d * 2);
+        }
+    }
+
+    #[test]
+    fn heuristic_close_to_autotuned_ground_truth() {
+        // The heuristic need not be optimal, but it must land within 2x
+        // of the autotuner's best on each canonical class.
+        for e in generate::mini_suite() {
+            let m = (e.gen)(11);
+            let x: Vec<f64> = (0..m.ncols()).map(|i| (i % 7) as f64).collect();
+            let exec = SpmvExecutor::new(PimSystem::with_dpus(64));
+            let (best_spec, ranking) = autotune(&exec, &m, &x, 8).unwrap();
+            let best_t = ranking[0].1;
+            let choice = select_heuristic(&m, &exec.sys.cfg);
+            let choice_t = exec.run(&choice.spec, &m, &x).unwrap().breakdown.total_s();
+            assert!(
+                choice_t <= best_t * 2.0,
+                "{}: heuristic {} ({choice_t:.6}s) vs best {} ({best_t:.6}s)",
+                e.name,
+                choice.spec.name,
+                best_spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn autotune_ranking_is_sorted_and_complete() {
+        let m = generate::uniform::<f64>(256, 256, 6, 5);
+        let x = vec![1.0f64; 256];
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(16));
+        let (_, ranking) = autotune(&exec, &m, &x, 4).unwrap();
+        assert_eq!(ranking.len(), 25);
+        assert!(ranking.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+}

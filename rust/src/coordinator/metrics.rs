@@ -1,0 +1,155 @@
+//! Execution metrics: the paper's end-to-end breakdown.
+//!
+//! The paper's scaling figures decompose SpMV time into *load* (input
+//! vector transfer to PIM memory), *kernel* (DPU execution, max across
+//! DPUs), *retrieve* (gathering outputs / partial results back over the
+//! bus) and *merge* (host-side reduction of 2D partial results). The
+//! one-time matrix placement is reported separately, matching the
+//! paper's methodology (iterative solvers reuse the matrix across
+//! thousands of SpMV calls).
+
+use crate::pim::Energy;
+
+/// Per-iteration time breakdown, seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    /// Input-vector transfer host -> PIM (broadcast for 1D, scatter of
+    /// slices for 2D).
+    pub load_s: f64,
+    /// Kernel execution: slowest DPU.
+    pub kernel_s: f64,
+    /// Output (or partial-output) gather PIM -> host.
+    pub retrieve_s: f64,
+    /// Host-side merge of 2D partial results (0 for 1D).
+    pub merge_s: f64,
+}
+
+impl Breakdown {
+    pub fn total_s(&self) -> f64 {
+        self.load_s + self.kernel_s + self.retrieve_s + self.merge_s
+    }
+
+    /// Fraction of total spent in the kernel (the paper's "how much of
+    /// the time is actual SpMV" lens).
+    pub fn kernel_fraction(&self) -> f64 {
+        let t = self.total_s();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.kernel_s / t
+        }
+    }
+
+    /// Dominant phase name.
+    pub fn dominant(&self) -> &'static str {
+        let phases = [
+            (self.load_s, "load"),
+            (self.kernel_s, "kernel"),
+            (self.retrieve_s, "retrieve"),
+            (self.merge_s, "merge"),
+        ];
+        phases
+            .iter()
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .map(|&(_, n)| n)
+            .unwrap()
+    }
+}
+
+/// Structural statistics of one run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RunStats {
+    /// Across-DPU compute imbalance (max/ideal, 1.0 = perfect).
+    pub dpu_imbalance: f64,
+    /// Slowest DPU's kernel cycles.
+    pub kernel_cycles: u64,
+    /// Bus bytes moved including padding, this iteration.
+    pub bus_bytes_moved: u64,
+    /// Bus bytes of useful payload, this iteration.
+    pub bus_bytes_payload: u64,
+    /// One-time matrix placement cost, seconds (not in the breakdown).
+    pub matrix_load_s: f64,
+    /// Number of DPUs used.
+    pub n_dpus: usize,
+    /// Non-zeros of the input matrix.
+    pub nnz: usize,
+}
+
+impl RunStats {
+    /// Padding overhead of this iteration's transfers (1.0 = none).
+    pub fn padding_overhead(&self) -> f64 {
+        if self.bus_bytes_payload == 0 {
+            1.0
+        } else {
+            self.bus_bytes_moved as f64 / self.bus_bytes_payload as f64
+        }
+    }
+}
+
+/// Full result of one coordinated SpMV execution.
+#[derive(Clone, Debug)]
+pub struct RunResult<T> {
+    /// The output vector (exact).
+    pub y: Vec<T>,
+    pub breakdown: Breakdown,
+    pub stats: RunStats,
+    pub energy: Energy,
+}
+
+impl<T> RunResult<T> {
+    /// Kernel-only GFLOP/s (2 flops per non-zero).
+    pub fn kernel_gflops(&self) -> f64 {
+        if self.breakdown.kernel_s == 0.0 {
+            0.0
+        } else {
+            2.0 * self.stats.nnz as f64 / self.breakdown.kernel_s / 1e9
+        }
+    }
+
+    /// End-to-end GFLOP/s including transfers and merge.
+    pub fn e2e_gflops(&self) -> f64 {
+        let t = self.breakdown.total_s();
+        if t == 0.0 {
+            0.0
+        } else {
+            2.0 * self.stats.nnz as f64 / t / 1e9
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_totals() {
+        let b = Breakdown { load_s: 1.0, kernel_s: 2.0, retrieve_s: 0.5, merge_s: 0.5 };
+        assert_eq!(b.total_s(), 4.0);
+        assert_eq!(b.kernel_fraction(), 0.5);
+        assert_eq!(b.dominant(), "kernel");
+    }
+
+    #[test]
+    fn dominant_picks_load() {
+        let b = Breakdown { load_s: 5.0, kernel_s: 2.0, ..Default::default() };
+        assert_eq!(b.dominant(), "load");
+    }
+
+    #[test]
+    fn padding_overhead() {
+        let s = RunStats { bus_bytes_moved: 200, bus_bytes_payload: 100, ..Default::default() };
+        assert_eq!(s.padding_overhead(), 2.0);
+        assert_eq!(RunStats::default().padding_overhead(), 1.0);
+    }
+
+    #[test]
+    fn gflops_accounting() {
+        let r = RunResult {
+            y: vec![0.0f32],
+            breakdown: Breakdown { kernel_s: 1e-3, ..Default::default() },
+            stats: RunStats { nnz: 1_000_000, ..Default::default() },
+            energy: Energy::default(),
+        };
+        assert!((r.kernel_gflops() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,447 @@
+//! The SparseP host coordinator.
+//!
+//! This is the library's front door: given a [`KernelSpec`], a sparse
+//! matrix and an input vector, the executor plans the data partitioning,
+//! models the host->PIM transfers (matrix placement once, input vector
+//! every iteration), runs the per-DPU kernels (exactly, with cycle
+//! accounting), models the gather of outputs / partial results, merges
+//! 2D partials on the host, and returns the exact output vector together
+//! with the paper's load/kernel/retrieve/merge breakdown, structural
+//! statistics and energy estimate.
+
+pub mod adaptive;
+pub mod metrics;
+pub mod spec;
+
+pub use metrics::{Breakdown, RunResult, RunStats};
+pub use spec::{KernelSpec, Partitioning};
+
+use crate::kernels::{self, DpuKernelOutput};
+use crate::matrix::{BcooMatrix, BcsrMatrix, CooMatrix, CsrMatrix, Format, SpElem};
+use crate::partition::balance::split_weighted;
+use crate::partition::{balance::split_even, TwoDPartitioner};
+use crate::pim::{calib, transfer, Energy, PimSystem};
+use anyhow::Result;
+
+/// Host-side SpMV executor over a (simulated) PIM system.
+#[derive(Clone, Debug)]
+pub struct SpmvExecutor {
+    pub sys: PimSystem,
+}
+
+impl SpmvExecutor {
+    pub fn new(sys: PimSystem) -> Self {
+        SpmvExecutor { sys }
+    }
+
+    /// Execute one SpMV: `y = A * x` under `spec`.
+    pub fn run<T: SpElem>(
+        &self,
+        spec: &KernelSpec,
+        m: &CooMatrix<T>,
+        x: &[T],
+    ) -> Result<RunResult<T>> {
+        anyhow::ensure!(x.len() == m.ncols(), "x length {} != ncols {}", x.len(), m.ncols());
+        self.sys.cfg.validate()?;
+        match spec.partitioning {
+            Partitioning::OneD(bal) => self.run_one_d(spec, bal, m, x),
+            Partitioning::TwoD(scheme, stripes) => self.run_two_d(spec, scheme, stripes, m, x),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // 1D: whole rows per DPU + broadcast of the full input vector.
+    // ------------------------------------------------------------------
+    fn run_one_d<T: SpElem>(
+        &self,
+        spec: &KernelSpec,
+        bal: crate::partition::DpuBalance,
+        m: &CooMatrix<T>,
+        x: &[T],
+    ) -> Result<RunResult<T>> {
+        if bal == crate::partition::DpuBalance::NnzElement {
+            anyhow::ensure!(
+                spec.format == Format::Coo,
+                "element-granularity 1D partitioning requires COO (row boundaries are implicit in the other formats)"
+            );
+            return self.run_one_d_elem(spec, m, x);
+        }
+        let cfg = &self.sys.cfg;
+        let n_dpus = cfg.n_dpus;
+        let dt = T::DTYPE;
+
+        // Row ranges per DPU. Blocked formats partition at *block-row*
+        // granularity so a block row never spans two DPUs.
+        let row_ranges: Vec<std::ops::Range<usize>> = if spec.format.is_blocked() {
+            let br = spec.block.0;
+            let nbr = crate::util::ceil_div(m.nrows().max(1), br);
+            let full = BcsrMatrix::from_coo(m, spec.block.0, spec.block.1);
+            let weights: Vec<usize> = match bal {
+                crate::partition::DpuBalance::Rows => vec![1; nbr],
+                crate::partition::DpuBalance::Blocks => {
+                    (0..nbr).map(|i| full.block_row_nblocks(i)).collect()
+                }
+                crate::partition::DpuBalance::Nnz | crate::partition::DpuBalance::NnzElement => {
+                    (0..nbr)
+                        .map(|i| full.block_row_nblocks(i) * spec.block.0 * spec.block.1)
+                        .collect()
+                }
+            };
+            let chunks = match bal {
+                crate::partition::DpuBalance::Rows => split_even(nbr, n_dpus),
+                _ => split_weighted(&weights, n_dpus),
+            };
+            chunks
+                .iter()
+                .map(|c| (c.start * br).min(m.nrows())..(c.end * br).min(m.nrows()))
+                .collect()
+        } else {
+            let p = crate::partition::OneDPartitioner::plan_coo(m, n_dpus, bal);
+            p.row_ranges
+        };
+
+        // Build per-DPU slices and run the kernels.
+        let mut outputs: Vec<DpuKernelOutput<T>> = Vec::with_capacity(n_dpus);
+        let mut slice_bytes = Vec::with_capacity(n_dpus);
+        let mut slice_nnz = Vec::with_capacity(n_dpus);
+        for range in &row_ranges {
+            let slice = m.row_range_slice(range.start, range.end);
+            slice_nnz.push(slice.nnz());
+            let out = run_format_kernel(cfg, spec, &slice, x, &mut slice_bytes);
+            outputs.push(out);
+        }
+
+        // --- transfer model ---
+        // One-time matrix placement (scatter, padded).
+        let mat_load = transfer::scatter(cfg, &slice_bytes);
+        // Per-iteration: broadcast x to every DPU.
+        let x_bytes = m.ncols() * dt.size_bytes();
+        let load = transfer::broadcast(cfg, x_bytes, n_dpus);
+        // Retrieve: gather each DPU's y range (ragged when balancing by
+        // nnz -> padding rule bites).
+        let y_sizes: Vec<usize> =
+            row_ranges.iter().map(|r| r.len() * dt.size_bytes()).collect();
+        let retrieve = transfer::gather(cfg, &y_sizes);
+
+        // --- assemble output ---
+        let mut y = vec![T::zero(); m.nrows()];
+        for (range, out) in row_ranges.iter().zip(&outputs) {
+            y[range.clone()].copy_from_slice(&out.y);
+        }
+
+        Ok(self.finish(spec, m, outputs, slice_nnz, mat_load, load, retrieve, 0, y))
+    }
+
+    // ------------------------------------------------------------------
+    // 1D at element granularity (`COO.nnz`): equal non-zeros per DPU,
+    // rows may span two DPUs; boundary partials merged on the host.
+    // ------------------------------------------------------------------
+    fn run_one_d_elem<T: SpElem>(
+        &self,
+        spec: &KernelSpec,
+        m: &CooMatrix<T>,
+        x: &[T],
+    ) -> Result<RunResult<T>> {
+        let cfg = &self.sys.cfg;
+        let n_dpus = cfg.n_dpus;
+        let dt = T::DTYPE;
+        let ranges = crate::partition::balance::split_elements(m.nnz(), n_dpus);
+
+        let mut outputs: Vec<DpuKernelOutput<T>> = Vec::with_capacity(n_dpus);
+        let mut first_rows = Vec::with_capacity(n_dpus);
+        let mut slice_bytes = Vec::with_capacity(n_dpus);
+        let mut slice_nnz = Vec::with_capacity(n_dpus);
+        let mut y_sizes = Vec::with_capacity(n_dpus);
+        for r in &ranges {
+            let (slice, first_row) = m.element_range_slice(r.start, r.end);
+            slice_nnz.push(slice.nnz());
+            slice_bytes.push(slice.size_bytes());
+            y_sizes.push(slice.nrows() * dt.size_bytes());
+            first_rows.push(first_row);
+            let out =
+                kernels::coo::run_coo_dpu(cfg, &slice, x, spec.tasklet_balance, spec.sync);
+            outputs.push(out);
+        }
+
+        let mat_load = transfer::scatter(cfg, &slice_bytes);
+        let load = transfer::broadcast(cfg, m.ncols() * dt.size_bytes(), n_dpus);
+        let retrieve = transfer::gather(cfg, &y_sizes);
+
+        // Host merge: partials overlap only on the shared boundary rows.
+        let mut y = vec![T::zero(); m.nrows()];
+        let mut partial_rows = 0usize;
+        for (first_row, out) in first_rows.iter().zip(&outputs) {
+            partial_rows += out.y.len();
+            for (i, v) in out.y.iter().enumerate() {
+                let r = first_row + i;
+                y[r] = y[r].add(*v);
+            }
+        }
+        // Only the duplicated boundary rows cost merge work.
+        let covered_rows: usize = m.row_counts().iter().filter(|&&c| c > 0).count();
+        let merged_bytes = partial_rows.saturating_sub(covered_rows) as u64 * dt.size_bytes() as u64;
+
+        Ok(self.finish(spec, m, outputs, slice_nnz, mat_load, load, retrieve, merged_bytes, y))
+    }
+
+    // ------------------------------------------------------------------
+    // 2D: tiles per DPU, x-slices scattered, partials gathered + merged.
+    // ------------------------------------------------------------------
+    fn run_two_d<T: SpElem>(
+        &self,
+        spec: &KernelSpec,
+        scheme: crate::partition::TwoDScheme,
+        stripes: usize,
+        m: &CooMatrix<T>,
+        x: &[T],
+    ) -> Result<RunResult<T>> {
+        let cfg = &self.sys.cfg;
+        let n_dpus = cfg.n_dpus;
+        let dt = T::DTYPE;
+        let plan = TwoDPartitioner::plan(m, n_dpus, stripes, scheme)?;
+
+        let mut outputs: Vec<DpuKernelOutput<T>> = Vec::with_capacity(n_dpus);
+        let mut slice_bytes = Vec::with_capacity(n_dpus);
+        let mut slice_nnz = Vec::with_capacity(n_dpus);
+        let mut x_sizes = Vec::with_capacity(n_dpus);
+        let mut y_sizes = Vec::with_capacity(n_dpus);
+
+        // All stripes in one pass over the matrix (§Perf iteration 7).
+        let stripe_ranges: Vec<std::ops::Range<usize>> = (0..plan.n_col_stripes)
+            .map(|s| plan.tiles[s * plan.n_row_tiles].cols.clone())
+            .collect();
+        let stripes = m.split_col_stripes(&stripe_ranges);
+        for s in 0..plan.n_col_stripes {
+            let stripe_tiles =
+                &plan.tiles[s * plan.n_row_tiles..(s + 1) * plan.n_row_tiles];
+            let cr = stripe_tiles[0].cols.clone();
+            let stripe = &stripes[s];
+            let x_slice = &x[cr.clone()];
+            for tile in stripe_tiles {
+                let slice = stripe.row_range_slice(tile.rows.start, tile.rows.end);
+                slice_nnz.push(slice.nnz());
+                x_sizes.push(cr.len() * dt.size_bytes());
+                y_sizes.push(tile.rows.len() * dt.size_bytes());
+                let out = run_format_kernel(cfg, spec, &slice, x_slice, &mut slice_bytes);
+                outputs.push(out);
+            }
+        }
+
+        // --- transfer model ---
+        let mat_load = transfer::scatter(cfg, &slice_bytes);
+        // Per-iteration: scatter x-slices (every DPU of a stripe gets the
+        // same slice; the runtime still moves one copy per DPU).
+        let load = transfer::scatter(cfg, &x_sizes);
+        // Retrieve: gather partial y per tile — ragged sizes + padding.
+        let retrieve = transfer::gather(cfg, &y_sizes);
+
+        // --- host merge of partials ---
+        let mut y = vec![T::zero(); m.nrows()];
+        let mut merged_bytes = 0u64;
+        for (tile, out) in plan.tiles.iter().zip(&outputs) {
+            for (i, r) in tile.rows.clone().enumerate() {
+                y[r] = y[r].add(out.y[i]);
+            }
+            merged_bytes += (tile.rows.len() * dt.size_bytes()) as u64;
+        }
+
+        Ok(self.finish(
+            spec,
+            m,
+            outputs,
+            slice_nnz,
+            mat_load,
+            load,
+            retrieve,
+            merged_bytes,
+            y,
+        ))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn finish<T: SpElem>(
+        &self,
+        _spec: &KernelSpec,
+        m: &CooMatrix<T>,
+        outputs: Vec<DpuKernelOutput<T>>,
+        slice_nnz: Vec<usize>,
+        mat_load: transfer::TransferCost,
+        load: transfer::TransferCost,
+        retrieve: transfer::TransferCost,
+        merged_bytes: u64,
+        y: Vec<T>,
+    ) -> RunResult<T> {
+        let cfg = &self.sys.cfg;
+        let kernel_cycles = kernels::slowest_dpu_cycles(
+            &outputs.iter().map(|o| o.timing).collect::<Vec<_>>(),
+        );
+        let kernel_s = kernel_cycles as f64 * cfg.cycle_s();
+        let merge_s = merged_bytes as f64 / (calib::HOST_MERGE_GBS * 1e9);
+
+        let breakdown = Breakdown {
+            load_s: load.seconds,
+            kernel_s,
+            retrieve_s: retrieve.seconds,
+            merge_s,
+        };
+
+        let ideal = m.nnz() as f64 / cfg.n_dpus as f64;
+        let dpu_imbalance = if ideal == 0.0 {
+            1.0
+        } else {
+            slice_nnz.iter().copied().max().unwrap_or(0) as f64 / ideal
+        };
+
+        let per_dpu_s: Vec<f64> =
+            outputs.iter().map(|o| o.timing.cycles as f64 * cfg.cycle_s()).collect();
+        let energy = Energy::pim_kernel(cfg.n_dpus, &per_dpu_s)
+            .add(Energy::transfer(
+                load.moved_bytes + retrieve.moved_bytes,
+                load.seconds + retrieve.seconds,
+            ))
+            .add(Energy::host(merge_s));
+
+        let stats = RunStats {
+            dpu_imbalance,
+            kernel_cycles,
+            bus_bytes_moved: load.moved_bytes + retrieve.moved_bytes,
+            bus_bytes_payload: load.payload_bytes + retrieve.payload_bytes,
+            matrix_load_s: mat_load.seconds,
+            n_dpus: cfg.n_dpus,
+            nnz: m.nnz(),
+        };
+
+        RunResult { y, breakdown, stats, energy }
+    }
+}
+
+/// Convert a COO slice into `spec.format` and run the matching DPU
+/// kernel; records the slice's storage bytes into `slice_bytes`.
+fn run_format_kernel<T: SpElem>(
+    cfg: &crate::pim::PimConfig,
+    spec: &KernelSpec,
+    slice: &CooMatrix<T>,
+    x: &[T],
+    slice_bytes: &mut Vec<usize>,
+) -> DpuKernelOutput<T> {
+    match spec.format {
+        Format::Csr => {
+            let csr = CsrMatrix::from_coo(slice);
+            slice_bytes.push(csr.size_bytes());
+            kernels::csr::run_csr_dpu(cfg, &csr, x, spec.tasklet_balance, spec.sync)
+        }
+        Format::Coo => {
+            slice_bytes.push(slice.size_bytes());
+            kernels::coo::run_coo_dpu(cfg, slice, x, spec.tasklet_balance, spec.sync)
+        }
+        Format::Bcsr => {
+            let b = BcsrMatrix::from_coo(slice, spec.block.0, spec.block.1);
+            slice_bytes.push(b.size_bytes());
+            kernels::bcsr::run_bcsr_dpu(cfg, &b, x, spec.tasklet_balance, spec.sync)
+        }
+        Format::Bcoo => {
+            let b = BcooMatrix::from_coo(slice, spec.block.0, spec.block.1);
+            slice_bytes.push(b.size_bytes());
+            kernels::bcoo::run_bcoo_dpu(cfg, &b, x, spec.tasklet_balance, spec.sync)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate;
+
+    fn x_for(n: usize) -> Vec<f64> {
+        (0..n).map(|i| ((i % 13) as f64) - 6.0).collect()
+    }
+
+    #[test]
+    fn all_25_kernels_are_exact() {
+        let m = generate::scale_free::<f64>(600, 600, 6, 0.5, 17);
+        let x = x_for(600);
+        let gold = m.spmv(&x);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
+        for spec in KernelSpec::all25(4) {
+            let r = exec.run(&spec, &m, &x).unwrap();
+            assert_eq!(r.y, gold, "kernel {} wrong", spec.name);
+        }
+    }
+
+    #[test]
+    fn one_d_breakdown_has_no_merge() {
+        let m = generate::banded::<f64>(1024, 8, 3);
+        let x = x_for(1024);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(16));
+        let r = exec.run(&KernelSpec::csr_nnz(), &m, &x).unwrap();
+        assert_eq!(r.breakdown.merge_s, 0.0);
+        assert!(r.breakdown.load_s > 0.0);
+        assert!(r.breakdown.kernel_s > 0.0);
+        assert!(r.breakdown.retrieve_s > 0.0);
+    }
+
+    #[test]
+    fn two_d_merges_partials() {
+        let m = generate::uniform::<f64>(512, 512, 8, 5);
+        let x = x_for(512);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(16));
+        let spec = KernelSpec::two_d(Format::Coo, 4);
+        let r = exec.run(&spec, &m, &x).unwrap();
+        assert_eq!(r.y, m.spmv(&x));
+        assert!(r.breakdown.merge_s > 0.0);
+    }
+
+    #[test]
+    fn two_d_loads_less_than_one_d_on_many_dpus() {
+        // The paper's core 1D-vs-2D trade: 2D scatters slices instead of
+        // broadcasting the whole vector.
+        let m = generate::uniform::<f64>(4096, 4096, 8, 7);
+        let x = x_for(4096);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(256));
+        let one_d = exec.run(&KernelSpec::coo_nnz_rgrn(), &m, &x).unwrap();
+        let two_d = exec.run(&KernelSpec::two_d_equally_wide(Format::Coo, 16), &m, &x).unwrap();
+        assert!(
+            two_d.breakdown.load_s < one_d.breakdown.load_s,
+            "2D load {} !< 1D load {}",
+            two_d.breakdown.load_s,
+            one_d.breakdown.load_s
+        );
+        // ...but pays more on retrieve (partials from every stripe).
+        assert!(
+            two_d.breakdown.retrieve_s > one_d.breakdown.retrieve_s,
+            "2D retrieve {} !> 1D retrieve {}",
+            two_d.breakdown.retrieve_s,
+            one_d.breakdown.retrieve_s
+        );
+    }
+
+    #[test]
+    fn x_length_checked() {
+        let m = generate::banded::<f64>(64, 4, 1);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(4));
+        assert!(exec.run(&KernelSpec::csr_row(), &m, &vec![0.0; 63]).is_err());
+    }
+
+    #[test]
+    fn integer_kernels_are_exact() {
+        let m = generate::uniform::<f64>(256, 256, 6, 9);
+        let mi: CooMatrix<i32> = m.cast();
+        let x: Vec<i32> = (0..256).map(|i| (i % 7) as i32 - 3).collect();
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
+        for spec in [KernelSpec::coo_nnz(), KernelSpec::bcoo_nnz(), KernelSpec::csr_row()] {
+            let r = exec.run(&spec, &mi, &x).unwrap();
+            assert_eq!(r.y, mi.spmv(&x), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn energy_is_positive_and_decomposed() {
+        let m = generate::banded::<f64>(512, 8, 2);
+        let x = x_for(512);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
+        let r = exec.run(&KernelSpec::csr_nnz(), &m, &x).unwrap();
+        assert!(r.energy.total_j() > 0.0);
+        assert!(r.energy.dpu_j > 0.0);
+        assert!(r.energy.bus_j > 0.0);
+    }
+}

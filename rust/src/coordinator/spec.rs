@@ -1,0 +1,338 @@
+//! Kernel specification — the naming scheme of SparseP's 25 kernels.
+//!
+//! A [`KernelSpec`] pins down every axis the library exposes: compressed
+//! format, data partitioning (1D with an across-DPU balancing scheme, or
+//! 2D with a tile-shaping scheme and stripe count), block shape for the
+//! blocked formats, tasklet-level balancing, and the synchronization
+//! scheme. [`KernelSpec::all25`] enumerates the paper's 25 named kernels.
+
+use crate::kernels::{SyncScheme, TaskletBalance};
+use crate::matrix::Format;
+use crate::partition::{DpuBalance, TwoDScheme};
+
+/// Data partitioning axis.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Partitioning {
+    /// Horizontal: whole rows per DPU + broadcast of the full vector.
+    OneD(DpuBalance),
+    /// Tiled: `n_col_stripes` vertical stripes, x-slices scattered,
+    /// partial outputs gathered and merged on the host.
+    TwoD(TwoDScheme, usize),
+}
+
+/// Full specification of one SpMV kernel configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelSpec {
+    /// Paper-style kernel name (e.g. "CSR.nnz", "RBDCOO").
+    pub name: String,
+    pub format: Format,
+    pub partitioning: Partitioning,
+    /// Block shape for BCSR/BCOO (ignored otherwise).
+    pub block: (usize, usize),
+    /// Work division across tasklets within a DPU.
+    pub tasklet_balance: TaskletBalance,
+    /// Synchronization among tasklets sharing output rows.
+    pub sync: SyncScheme,
+}
+
+impl KernelSpec {
+    fn new(
+        name: &str,
+        format: Format,
+        partitioning: Partitioning,
+        tasklet_balance: TaskletBalance,
+        sync: SyncScheme,
+    ) -> KernelSpec {
+        KernelSpec {
+            name: name.to_string(),
+            format,
+            partitioning,
+            block: (4, 4),
+            tasklet_balance,
+            sync,
+        }
+    }
+
+    /// Override the block shape (BCSR/BCOO).
+    pub fn with_block(mut self, br: usize, bc: usize) -> Self {
+        self.block = (br, bc);
+        self
+    }
+
+    /// Override the synchronization scheme.
+    pub fn with_sync(mut self, sync: SyncScheme) -> Self {
+        self.sync = sync;
+        self
+    }
+
+    /// Override the tasklet balancing.
+    pub fn with_tasklet_balance(mut self, tb: TaskletBalance) -> Self {
+        self.tasklet_balance = tb;
+        self
+    }
+
+    /// Override the 2D stripe count (no-op for 1D specs).
+    pub fn with_stripes(mut self, stripes: usize) -> Self {
+        if let Partitioning::TwoD(s, _) = self.partitioning {
+            self.partitioning = Partitioning::TwoD(s, stripes);
+        }
+        self
+    }
+
+    // --- the paper's 1D kernels -------------------------------------
+
+    /// `CSR.row`: CSR, rows balanced across DPUs and tasklets.
+    pub fn csr_row() -> KernelSpec {
+        Self::new(
+            "CSR.row",
+            Format::Csr,
+            Partitioning::OneD(DpuBalance::Rows),
+            TaskletBalance::Rows,
+            SyncScheme::LockFree,
+        )
+    }
+
+    /// `CSR.nnz`: CSR, nnz balanced (row granularity) everywhere.
+    pub fn csr_nnz() -> KernelSpec {
+        Self::new(
+            "CSR.nnz",
+            Format::Csr,
+            Partitioning::OneD(DpuBalance::Nnz),
+            TaskletBalance::Nnz,
+            SyncScheme::LockFree,
+        )
+    }
+
+    /// `COO.row`: COO, row-balanced.
+    pub fn coo_row() -> KernelSpec {
+        Self::new(
+            "COO.row",
+            Format::Coo,
+            Partitioning::OneD(DpuBalance::Rows),
+            TaskletBalance::Rows,
+            SyncScheme::LockFree,
+        )
+    }
+
+    /// `COO.nnz-rgrn`: COO, nnz balanced at row granularity.
+    pub fn coo_nnz_rgrn() -> KernelSpec {
+        Self::new(
+            "COO.nnz-rgrn",
+            Format::Coo,
+            Partitioning::OneD(DpuBalance::Nnz),
+            TaskletBalance::Nnz,
+            SyncScheme::LockFree,
+        )
+    }
+
+    /// `COO.nnz`: COO, nnz balanced at element granularity both across
+    /// DPUs (rows may span two DPUs; host merges boundary partials) and
+    /// across tasklets (shared rows; sync scheme applies — default
+    /// lock-free).
+    pub fn coo_nnz() -> KernelSpec {
+        Self::new(
+            "COO.nnz",
+            Format::Coo,
+            Partitioning::OneD(DpuBalance::NnzElement),
+            TaskletBalance::NnzElement,
+            SyncScheme::LockFree,
+        )
+    }
+
+    /// `BCSR.block`: BCSR, blocks balanced (block granularity + sync).
+    pub fn bcsr_block() -> KernelSpec {
+        Self::new(
+            "BCSR.block",
+            Format::Bcsr,
+            Partitioning::OneD(DpuBalance::Blocks),
+            TaskletBalance::Blocks,
+            SyncScheme::CoarseLock,
+        )
+    }
+
+    /// `BCSR.nnz`: BCSR, nnz balanced at block-row granularity.
+    pub fn bcsr_nnz() -> KernelSpec {
+        Self::new(
+            "BCSR.nnz",
+            Format::Bcsr,
+            Partitioning::OneD(DpuBalance::Nnz),
+            TaskletBalance::Nnz,
+            SyncScheme::LockFree,
+        )
+    }
+
+    /// `BCOO.block`: BCOO, block-balanced.
+    pub fn bcoo_block() -> KernelSpec {
+        Self::new(
+            "BCOO.block",
+            Format::Bcoo,
+            Partitioning::OneD(DpuBalance::Blocks),
+            TaskletBalance::Blocks,
+            SyncScheme::CoarseLock,
+        )
+    }
+
+    /// `BCOO.nnz`: BCOO, nnz-balanced.
+    pub fn bcoo_nnz() -> KernelSpec {
+        Self::new(
+            "BCOO.nnz",
+            Format::Bcoo,
+            Partitioning::OneD(DpuBalance::Nnz),
+            TaskletBalance::Nnz,
+            SyncScheme::LockFree,
+        )
+    }
+
+    // --- the paper's 2D kernels -------------------------------------
+
+    /// Equally-sized tiles (`DCSR`, `DCOO`, `DBCSR`, `DBCOO`).
+    pub fn two_d(format: Format, stripes: usize) -> KernelSpec {
+        let name = match format {
+            Format::Csr => "DCSR",
+            Format::Coo => "DCOO",
+            Format::Bcsr => "DBCSR",
+            Format::Bcoo => "DBCOO",
+        };
+        Self::new(
+            name,
+            format,
+            Partitioning::TwoD(TwoDScheme::EquallySized, stripes),
+            TaskletBalance::Nnz,
+            SyncScheme::LockFree,
+        )
+    }
+
+    /// Equally-wide tiles (`RBDCSR`, `RBDCOO`, `RBDBCSR`, `RBDBCOO`).
+    pub fn two_d_equally_wide(format: Format, stripes: usize) -> KernelSpec {
+        let name = match format {
+            Format::Csr => "RBDCSR",
+            Format::Coo => "RBDCOO",
+            Format::Bcsr => "RBDBCSR",
+            Format::Bcoo => "RBDBCOO",
+        };
+        Self::new(
+            name,
+            format,
+            Partitioning::TwoD(TwoDScheme::EquallyWide, stripes),
+            TaskletBalance::Nnz,
+            SyncScheme::LockFree,
+        )
+    }
+
+    /// Balanced-nnz tiles (`BDCSR`, `BDCOO`, `BDBCSR`, `BDBCOO`).
+    pub fn two_d_balanced(format: Format, stripes: usize) -> KernelSpec {
+        let name = match format {
+            Format::Csr => "BDCSR",
+            Format::Coo => "BDCOO",
+            Format::Bcsr => "BDBCSR",
+            Format::Bcoo => "BDBCOO",
+        };
+        Self::new(
+            name,
+            format,
+            Partitioning::TwoD(TwoDScheme::BalancedNnz, stripes),
+            TaskletBalance::Nnz,
+            SyncScheme::LockFree,
+        )
+    }
+
+    /// The paper's 25 kernels: 9 x 1D, 12 x 2D (3 schemes x 4 formats),
+    /// plus the 4 tasklet-axis variants the paper counts separately
+    /// (`CSR.tsklt-row`, `CSR.tsklt-nnz`, `COO.tsklt-row`,
+    /// `COO.tsklt-nnz`: DPU-level nnz balance combined with the opposite
+    /// tasklet-level scheme).
+    pub fn all25(stripes: usize) -> Vec<KernelSpec> {
+        let mut v = vec![
+            Self::csr_row(),
+            Self::csr_nnz(),
+            Self::coo_row(),
+            Self::coo_nnz_rgrn(),
+            Self::coo_nnz(),
+            Self::bcsr_block(),
+            Self::bcsr_nnz(),
+            Self::bcoo_block(),
+            Self::bcoo_nnz(),
+        ];
+        for f in Format::all() {
+            v.push(Self::two_d(f, stripes));
+        }
+        for f in Format::all() {
+            v.push(Self::two_d_equally_wide(f, stripes));
+        }
+        for f in Format::all() {
+            v.push(Self::two_d_balanced(f, stripes));
+        }
+        // Tasklet-axis variants (22-25).
+        let mut k = Self::csr_nnz();
+        k.name = "CSR.tsklt-row".into();
+        k.tasklet_balance = TaskletBalance::Rows;
+        v.push(k);
+        let mut k = Self::csr_row();
+        k.name = "CSR.tsklt-nnz".into();
+        k.tasklet_balance = TaskletBalance::Nnz;
+        v.push(k);
+        let mut k = Self::coo_nnz_rgrn();
+        k.name = "COO.tsklt-row".into();
+        k.tasklet_balance = TaskletBalance::Rows;
+        v.push(k);
+        let mut k = Self::coo_row();
+        k.name = "COO.tsklt-nnz".into();
+        k.tasklet_balance = TaskletBalance::Nnz;
+        v.push(k);
+        v
+    }
+
+    /// Look a kernel up by its paper name.
+    pub fn by_name(name: &str, stripes: usize) -> Option<KernelSpec> {
+        Self::all25(stripes).into_iter().find(|k| k.name == name)
+    }
+
+    /// Is this a 2D kernel?
+    pub fn is_two_d(&self) -> bool {
+        matches!(self.partitioning, Partitioning::TwoD(..))
+    }
+}
+
+impl std::fmt::Display for KernelSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all25_has_25_distinct_names() {
+        let v = KernelSpec::all25(4);
+        assert_eq!(v.len(), 25);
+        let names: std::collections::HashSet<_> = v.iter().map(|k| k.name.clone()).collect();
+        assert_eq!(names.len(), 25, "kernel names must be unique");
+    }
+
+    #[test]
+    fn by_name_roundtrips() {
+        for k in KernelSpec::all25(8) {
+            let found = KernelSpec::by_name(&k.name, 8).unwrap();
+            assert_eq!(found.name, k.name);
+            assert_eq!(found.format, k.format);
+        }
+        assert!(KernelSpec::by_name("NOPE", 4).is_none());
+    }
+
+    #[test]
+    fn builders_apply() {
+        let k = KernelSpec::bcsr_nnz().with_block(8, 8).with_sync(SyncScheme::FineLock);
+        assert_eq!(k.block, (8, 8));
+        assert_eq!(k.sync, SyncScheme::FineLock);
+        let k2 = KernelSpec::two_d(Format::Coo, 4).with_stripes(16);
+        assert_eq!(k2.partitioning, Partitioning::TwoD(TwoDScheme::EquallySized, 16));
+    }
+
+    #[test]
+    fn two_d_flags() {
+        assert!(!KernelSpec::csr_row().is_two_d());
+        assert!(KernelSpec::two_d(Format::Csr, 2).is_two_d());
+    }
+}

@@ -1,0 +1,200 @@
+//! BCOO DPU kernel.
+//!
+//! The block analogue of the COO kernel: every stored block carries both
+//! block-row and block-column indices, so block-granularity splits are
+//! natural (`BCOO.block`) and nnz-balanced splits can cut anywhere in the
+//! block stream (`BCOO.nnz`). Shared block rows synchronize like COO's
+//! shared rows.
+
+use super::{acct, DpuKernelOutput, SyncScheme, TaskletBalance};
+use crate::matrix::{BcooMatrix, SpElem};
+use crate::partition::balance::split_elements;
+use crate::pim::{calib, PimConfig, TaskletCounters};
+
+/// Run the BCOO kernel on one DPU.
+///
+/// All balancing schemes reduce to a contiguous block-range split (BCOO
+/// blocks all have equal weight `br*bc`, so `Blocks`, `Nnz` and
+/// `NnzElement` coincide; `Rows` additionally snaps range boundaries to
+/// block-row transitions, making it lock-free).
+pub fn run_bcoo_dpu<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &BcooMatrix<T>,
+    x: &[T],
+    bal: TaskletBalance,
+    sync: SyncScheme,
+) -> DpuKernelOutput<T> {
+    assert_eq!(x.len(), slice.ncols(), "x length mismatch");
+    let t = cfg.tasklets;
+    let dt = T::DTYPE;
+    let (br, bc) = (slice.br, slice.bc);
+    let nblocks = slice.nblocks();
+    let mut y = vec![T::zero(); slice.nrows()];
+    let mut counters = vec![TaskletCounters::default(); t];
+
+    let mut ranges = split_elements(nblocks, t);
+    let mut shares_rows = true;
+    if bal == TaskletBalance::Rows {
+        // Snap each boundary forward to the next block-row transition so
+        // no block row is shared (lock-free).
+        shares_rows = false;
+        for i in 0..ranges.len() - 1 {
+            let mut e = ranges[i].end;
+            while e > ranges[i].start
+                && e < nblocks
+                && slice.block_rows[e] == slice.block_rows[e - 1]
+            {
+                e += 1;
+                if e == nblocks {
+                    break;
+                }
+            }
+            let e = e.min(nblocks);
+            ranges[i].end = e;
+            ranges[i + 1].start = e.max(ranges[i + 1].start.min(nblocks)).max(e);
+            ranges[i + 1].end = ranges[i + 1].end.max(ranges[i + 1].start);
+        }
+        if let Some(last) = ranges.last_mut() {
+            last.end = nblocks;
+        }
+    }
+
+    // Shared block rows live only at range boundaries (blocks sorted by
+    // block row): two compares per block instead of a hash probe.
+    let mut n_shared = 0usize;
+    let mut shared_bounds: Vec<(u32, u32)> = vec![(u32::MAX, u32::MAX); t];
+    if shares_rows {
+        let mut last_shared = u32::MAX;
+        for i in 0..ranges.len().saturating_sub(1) {
+            let (a, b) = (&ranges[i], &ranges[i + 1]);
+            if !a.is_empty() && !b.is_empty() && a.end < nblocks {
+                let row = slice.block_rows[a.end - 1];
+                if row == slice.block_rows[b.start] {
+                    if row != last_shared {
+                        n_shared += 1;
+                        last_shared = row;
+                    }
+                    shared_bounds[i].1 = row;
+                    shared_bounds[i + 1].0 = row;
+                }
+            }
+        }
+    }
+
+    for (tid, range) in ranges.iter().enumerate() {
+        let c = &mut counters[tid];
+        if range.is_empty() {
+            continue;
+        }
+        let (shared_head, shared_tail) = shared_bounds[tid];
+        // Stream 8B of indices + dense values per block.
+        acct::stream_matrix(c, range.len() * (8 + br * bc * dt.size_bytes()));
+        let mut rows_touched = 0usize;
+        let mut current_brow = u32::MAX;
+        for bidx in range.clone() {
+            let bri_u32 = slice.block_rows[bidx];
+            let bri = bri_u32 as usize;
+            if bri_u32 != current_brow {
+                current_brow = bri_u32;
+                rows_touched += 1;
+            }
+            let bcol = slice.block_cols[bidx] as usize;
+            let blk = slice.block(bidx);
+            c.instrs += calib::BLOCK_LOOP_INSTRS;
+            c.instrs += (br * bc) as u64 * (calib::mac_instrs(dt) + 2);
+            c.dma(bc * dt.size_bytes());
+            let row0 = bri * br;
+            let col0 = bcol * bc;
+            let is_shared = bri_u32 == shared_head || bri_u32 == shared_tail;
+            for rr in 0..br {
+                let r = row0 + rr;
+                if r >= slice.nrows() {
+                    break;
+                }
+                let mut acc = T::zero();
+                for cc in 0..bc {
+                    let ccol = col0 + cc;
+                    if ccol >= slice.ncols() {
+                        break;
+                    }
+                    acc = T::mac(acc, blk[rr * bc + cc], x[ccol]);
+                }
+                if is_shared {
+                    acct::locked_update(c, dt, sync);
+                }
+                y[r] = y[r].add(acc);
+            }
+        }
+        acct::writeback(c, rows_touched * br, dt);
+    }
+
+    if shares_rows && sync == SyncScheme::LockFree {
+        acct::lockfree_merge(&mut counters, n_shared * br, dt);
+    }
+
+    DpuKernelOutput::finish(cfg, y, counters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{generate, CooMatrix};
+
+    fn cfg(t: usize) -> PimConfig {
+        PimConfig { tasklets: t, ..Default::default() }
+    }
+
+    fn check(m: &CooMatrix<f64>, brc: (usize, usize), t: usize, bal: TaskletBalance, sync: SyncScheme) {
+        let b = BcooMatrix::from_coo(m, brc.0, brc.1);
+        let x: Vec<f64> = (0..m.ncols()).map(|i| ((i % 9) as f64) - 4.0).collect();
+        let out = run_bcoo_dpu(&cfg(t), &b, &x, bal, sync);
+        assert_eq!(out.y, m.spmv(&x), "t={t} bal={bal:?} sync={sync:?} blk={brc:?}");
+    }
+
+    #[test]
+    fn correct_across_schemes() {
+        let m = generate::blocked::<f64>(24, 24, 4, 4, 13);
+        for t in [1, 4, 16, 24] {
+            for bal in [TaskletBalance::Rows, TaskletBalance::Blocks, TaskletBalance::Nnz] {
+                for sync in [SyncScheme::LockFree, SyncScheme::CoarseLock, SyncScheme::FineLock] {
+                    check(&m, (4, 4), t, bal, sync);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn correct_on_irregular_input() {
+        let m = generate::scale_free::<f64>(97, 89, 6, 0.7, 21);
+        check(&m, (2, 2), 16, TaskletBalance::Blocks, SyncScheme::FineLock);
+        check(&m, (8, 8), 12, TaskletBalance::Rows, SyncScheme::LockFree);
+    }
+
+    #[test]
+    fn row_balance_is_lock_free() {
+        let m = generate::blocked::<f64>(16, 16, 4, 4, 5);
+        let b = BcooMatrix::from_coo(&m, 4, 4);
+        let x = vec![1.0; m.ncols()];
+        let out = run_bcoo_dpu(&cfg(8), &b, &x, TaskletBalance::Rows, SyncScheme::CoarseLock);
+        let locks: u64 = out.counters.iter().map(|c| c.lock_acqs).sum();
+        assert_eq!(locks, 0, "row-granularity BCOO must not lock");
+    }
+
+    #[test]
+    fn block_balance_on_one_block_row_shares() {
+        // All blocks in one block row: block-granularity split must sync.
+        let triples: Vec<(u32, u32, f64)> = (0..256u32).map(|c| (0, c, 1.0)).collect();
+        let m = CooMatrix::from_triples(2, 256, triples);
+        let b = BcooMatrix::from_coo(&m, 2, 2);
+        let x = vec![1.0; 256];
+        let out = run_bcoo_dpu(&cfg(8), &b, &x, TaskletBalance::Blocks, SyncScheme::CoarseLock);
+        let locks: u64 = out.counters.iter().map(|c| c.lock_acqs).sum();
+        assert!(locks > 0, "shared block row must lock");
+        assert_eq!(out.y, m.spmv(&x));
+    }
+
+    #[test]
+    fn empty_ok() {
+        check(&CooMatrix::<f64>::zeros(8, 8), (2, 2), 4, TaskletBalance::Blocks, SyncScheme::LockFree);
+    }
+}

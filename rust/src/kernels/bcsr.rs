@@ -1,0 +1,236 @@
+//! BCSR DPU kernel.
+//!
+//! Blocked formats amortize index overhead: one column index per dense
+//! `br x bc` block, one x-gather DMA per block (a contiguous `bc`-element
+//! strip of x) instead of one per non-zero, and a tight dense inner loop
+//! with no per-element index load. The price is the fill-in zeros
+//! (multiplying by zero still costs a MAC on the DPU).
+//!
+//! Tasklet balancing (paper's `BCSR.block` / `BCSR.nnz`):
+//! * `Rows` — equal *block rows* per tasklet (lock-free);
+//! * `Nnz` — original-nnz-weighted split at block-row granularity
+//!   (lock-free);
+//! * `Blocks` — equal *blocks* per tasklet at block granularity: a block
+//!   row may be shared between tasklets, so shared block rows take the
+//!   chosen [`SyncScheme`] on their y updates.
+
+use super::{acct, DpuKernelOutput, SyncScheme, TaskletBalance};
+use crate::matrix::{BcsrMatrix, SpElem};
+use crate::partition::balance::{split_elements, split_even, split_weighted};
+use crate::pim::{calib, PimConfig, TaskletCounters};
+
+/// Account one dense block's compute: `br*bc` MACs with dense-loop
+/// overhead (2 instrs/element) + one x strip gather + block header.
+#[inline]
+fn block_compute(c: &mut TaskletCounters, br: usize, bc: usize, dt: crate::matrix::DType) {
+    c.instrs += calib::BLOCK_LOOP_INSTRS;
+    c.instrs += (br * bc) as u64 * (calib::mac_instrs(dt) + 2);
+    c.dma(bc * dt.size_bytes()); // contiguous x[col0..col0+bc] gather
+}
+
+/// Run the BCSR kernel on one DPU.
+pub fn run_bcsr_dpu<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &BcsrMatrix<T>,
+    x: &[T],
+    bal: TaskletBalance,
+    sync: SyncScheme,
+) -> DpuKernelOutput<T> {
+    assert_eq!(x.len(), slice.ncols(), "x length mismatch");
+    let t = cfg.tasklets;
+    let dt = T::DTYPE;
+    let (br, bc) = (slice.br, slice.bc);
+    let nbr = slice.n_block_rows();
+    let mut y = vec![T::zero(); slice.nrows()];
+    let mut counters = vec![TaskletCounters::default(); t];
+
+    // Map balancing scheme to per-tasklet block index ranges. Blocks of a
+    // block row are contiguous in BCSR storage, so block-row-granularity
+    // chunks are block ranges too.
+    let block_start: Vec<usize> =
+        (0..=nbr).map(|i| slice.block_row_ptr[i] as usize).collect();
+    let (block_ranges, shares_rows): (Vec<std::ops::Range<usize>>, bool) = match bal {
+        TaskletBalance::Rows => {
+            let rc = split_even(nbr, t);
+            (rc.iter().map(|r| block_start[r.start]..block_start[r.end]).collect(), false)
+        }
+        TaskletBalance::Nnz => {
+            // Weight block rows by stored values (fill included — that is
+            // what the DPU actually computes).
+            let weights: Vec<usize> =
+                (0..nbr).map(|i| slice.block_row_nblocks(i) * br * bc).collect();
+            let rc = split_weighted(&weights, t);
+            (rc.iter().map(|r| block_start[r.start]..block_start[r.end]).collect(), false)
+        }
+        TaskletBalance::Blocks | TaskletBalance::NnzElement => {
+            (split_elements(slice.nblocks(), t), true)
+        }
+    };
+
+    // Block index -> block row, for detecting shared block rows.
+    let mut block_row_of = vec![0u32; slice.nblocks()];
+    for i in 0..nbr {
+        for b in block_start[i]..block_start[i + 1] {
+            block_row_of[b] = i as u32;
+        }
+    }
+    // Shared block rows live only at range boundaries (blocks are stored
+    // block-row-major), so per-block sharing reduces to two compares —
+    // no hash probes in the block loop (§Perf iteration 4).
+    let mut n_shared = 0usize;
+    let mut shared_bounds: Vec<(u32, u32)> = vec![(u32::MAX, u32::MAX); t];
+    if shares_rows {
+        let mut last_shared = u32::MAX;
+        for i in 0..block_ranges.len().saturating_sub(1) {
+            let (a, b) = (&block_ranges[i], &block_ranges[i + 1]);
+            if !a.is_empty() && !b.is_empty() && a.end < slice.nblocks() {
+                let row = block_row_of[a.end - 1];
+                if row == block_row_of[b.start] {
+                    if row != last_shared {
+                        n_shared += 1;
+                        last_shared = row;
+                    }
+                    shared_bounds[i].1 = row;
+                    shared_bounds[i + 1].0 = row;
+                }
+            }
+        }
+    }
+
+    for (tid, range) in block_ranges.iter().enumerate() {
+        let c = &mut counters[tid];
+        if range.is_empty() {
+            continue;
+        }
+        let (shared_head, shared_tail) = shared_bounds[tid];
+        // Stream block headers (4B col index each) + dense values.
+        acct::stream_matrix(c, range.len() * (4 + br * bc * dt.size_bytes()));
+        // Blocks are block-row-major, so distinct block rows in a
+        // contiguous range = transitions + 1.
+        let mut rows_touched = 0usize;
+        let mut current_brow = u32::MAX;
+        for bidx in range.clone() {
+            let bri_u32 = block_row_of[bidx];
+            let bri = bri_u32 as usize;
+            if bri_u32 != current_brow {
+                current_brow = bri_u32;
+                rows_touched += 1;
+            }
+            let bcol = slice.block_cols[bidx] as usize;
+            let blk = &slice.vals[bidx * br * bc..(bidx + 1) * br * bc];
+            block_compute(c, br, bc, dt);
+            let row0 = bri * br;
+            let col0 = bcol * bc;
+            let is_shared = bri_u32 == shared_head || bri_u32 == shared_tail;
+            for rr in 0..br {
+                let r = row0 + rr;
+                if r >= slice.nrows() {
+                    break;
+                }
+                let mut acc = T::zero();
+                for cc in 0..bc {
+                    let ccol = col0 + cc;
+                    if ccol >= slice.ncols() {
+                        break;
+                    }
+                    acc = T::mac(acc, blk[rr * bc + cc], x[ccol]);
+                }
+                if is_shared {
+                    acct::locked_update(c, dt, sync);
+                }
+                y[r] = y[r].add(acc);
+            }
+        }
+        acct::writeback(c, rows_touched * br, dt);
+    }
+
+    if shares_rows && sync == SyncScheme::LockFree {
+        acct::lockfree_merge(&mut counters, n_shared * br, dt);
+    }
+
+    DpuKernelOutput::finish(cfg, y, counters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{generate, CooMatrix, CsrMatrix};
+
+    fn cfg(t: usize) -> PimConfig {
+        PimConfig { tasklets: t, ..Default::default() }
+    }
+
+    fn check(m: &CooMatrix<f64>, brc: (usize, usize), t: usize, bal: TaskletBalance, sync: SyncScheme) {
+        let b = BcsrMatrix::from_coo(m, brc.0, brc.1);
+        let x: Vec<f64> = (0..m.ncols()).map(|i| ((i % 5) as f64) - 2.0).collect();
+        let out = run_bcsr_dpu(&cfg(t), &b, &x, bal, sync);
+        assert_eq!(out.y, m.spmv(&x), "t={t} bal={bal:?} sync={sync:?} blk={brc:?}");
+    }
+
+    #[test]
+    fn correct_across_schemes_and_blocks() {
+        let m = generate::blocked::<f64>(32, 32, 4, 5, 3);
+        for brc in [(2, 2), (4, 4), (3, 5)] {
+            for t in [1, 4, 16] {
+                for bal in [TaskletBalance::Rows, TaskletBalance::Nnz, TaskletBalance::Blocks] {
+                    for sync in
+                        [SyncScheme::LockFree, SyncScheme::CoarseLock, SyncScheme::FineLock]
+                    {
+                        check(&m, brc, t, bal, sync);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn correct_on_unaligned_matrix() {
+        let m = generate::scale_free::<f64>(101, 103, 5, 0.5, 7);
+        check(&m, (4, 4), 8, TaskletBalance::Blocks, SyncScheme::CoarseLock);
+        check(&m, (8, 2), 16, TaskletBalance::Nnz, SyncScheme::LockFree);
+    }
+
+    #[test]
+    fn fewer_dma_transfers_than_csr() {
+        // The point of BCSR on a DPU: one x gather per block, not per nnz.
+        let m = generate::blocked::<f64>(64, 64, 4, 8, 5);
+        let bcsr = BcsrMatrix::from_coo(&m, 4, 4);
+        let csr = CsrMatrix::from_coo(&m);
+        let x = vec![1.0; m.ncols()];
+        let c = cfg(16);
+        let ob = run_bcsr_dpu(&c, &bcsr, &x, TaskletBalance::Nnz, SyncScheme::LockFree);
+        let oc = crate::kernels::csr::run_csr_dpu(
+            &c,
+            &csr,
+            &x,
+            TaskletBalance::Nnz,
+            SyncScheme::LockFree,
+        );
+        let db: u64 = ob.counters.iter().map(|k| k.dma_transfers).sum();
+        let dc: u64 = oc.counters.iter().map(|k| k.dma_transfers).sum();
+        assert!(db * 2 < dc, "bcsr dma {db} vs csr dma {dc}");
+    }
+
+    #[test]
+    fn fill_in_costs_compute() {
+        // A diagonal matrix blocked 8x8 computes 64x the useful MACs.
+        let m = generate::diagonal::<f64>(256, 2);
+        let b1 = BcsrMatrix::from_coo(&m, 1, 1);
+        let b8 = BcsrMatrix::from_coo(&m, 8, 8);
+        let x = vec![1.0; 256];
+        let c = cfg(16);
+        let o1 = run_bcsr_dpu(&c, &b1, &x, TaskletBalance::Nnz, SyncScheme::LockFree);
+        let o8 = run_bcsr_dpu(&c, &b8, &x, TaskletBalance::Nnz, SyncScheme::LockFree);
+        let i1: u64 = o1.counters.iter().map(|k| k.instrs).sum();
+        let i8_: u64 = o8.counters.iter().map(|k| k.instrs).sum();
+        // A diagonal blocked 8x8 stores 8 values per 1 useful nnz; the
+        // dense inner loop pays ~7x the instructions of the 1x1 blocking.
+        assert!(i8_ > 5 * i1, "fill-in should inflate instructions: {i8_} vs {i1}");
+    }
+
+    #[test]
+    fn empty_ok() {
+        let m = CooMatrix::<f64>::zeros(16, 16);
+        check(&m, (4, 4), 8, TaskletBalance::Blocks, SyncScheme::LockFree);
+    }
+}

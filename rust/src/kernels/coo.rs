@@ -1,0 +1,220 @@
+//! COO DPU kernel.
+//!
+//! COO carries an explicit row index per non-zero, so tasklet work can be
+//! divided three ways (the paper's `COO.row`, `COO.nnz-rgrn`, `COO.nnz`):
+//!
+//! * `Rows` — contiguous row ranges (lock-free, like CSR);
+//! * `Nnz` — equal non-zeros at *row granularity* (lock-free);
+//! * `NnzElement` — equal non-zeros at *element granularity*: the split
+//!   may fall inside a row, so the boundary rows are shared between
+//!   neighbouring tasklets and their accumulations must synchronize.
+//!   This is where the paper's three synchronization schemes (lock-free
+//!   private accumulators + merge, coarse mutex, fine-grained mutex
+//!   array) differ — and where real UPMEM hardware makes fine == coarse
+//!   because critical-section MRAM accesses serialize.
+
+use super::{acct, DpuKernelOutput, SyncScheme, TaskletBalance};
+use crate::matrix::{CooMatrix, SpElem};
+use crate::partition::balance::{split_elements, split_even, split_weighted};
+use crate::pim::{PimConfig, TaskletCounters};
+
+/// Run the COO kernel on one DPU. See module docs for the balancing /
+/// synchronization semantics.
+pub fn run_coo_dpu<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &CooMatrix<T>,
+    x: &[T],
+    bal: TaskletBalance,
+    sync: SyncScheme,
+) -> DpuKernelOutput<T> {
+    assert_eq!(x.len(), slice.ncols(), "x length mismatch");
+    let t = cfg.tasklets;
+    let nnz = slice.nnz();
+    let dt = T::DTYPE;
+    let mut y = vec![T::zero(); slice.nrows()];
+    let mut counters = vec![TaskletCounters::default(); t];
+
+    // Element ranges per tasklet.
+    let elem_ranges: Vec<std::ops::Range<usize>> = match bal {
+        TaskletBalance::NnzElement => split_elements(nnz, t),
+        TaskletBalance::Nnz => {
+            // Row-granularity nnz balance: split row weights, then map
+            // row chunks back to element ranges (rows are contiguous in
+            // canonical COO order).
+            let weights = slice.row_counts();
+            let row_chunks = split_weighted(&weights, t);
+            let mut row_start_elem = vec![0usize; slice.nrows() + 1];
+            for &r in &slice.rows {
+                row_start_elem[r as usize + 1] += 1;
+            }
+            for r in 0..slice.nrows() {
+                row_start_elem[r + 1] += row_start_elem[r];
+            }
+            row_chunks
+                .iter()
+                .map(|rc| row_start_elem[rc.start]..row_start_elem[rc.end])
+                .collect()
+        }
+        TaskletBalance::Rows => {
+            let row_chunks = split_even(slice.nrows(), t);
+            let mut row_start_elem = vec![0usize; slice.nrows() + 1];
+            for &r in &slice.rows {
+                row_start_elem[r as usize + 1] += 1;
+            }
+            for r in 0..slice.nrows() {
+                row_start_elem[r + 1] += row_start_elem[r];
+            }
+            row_chunks
+                .iter()
+                .map(|rc| row_start_elem[rc.start]..row_start_elem[rc.end])
+                .collect()
+        }
+        TaskletBalance::Blocks => panic!("COO kernel does not support block balancing"),
+    };
+
+    // Which rows are shared by more than one tasklet? Only the rows at
+    // contiguous range boundaries can be (element-granularity splits),
+    // so a per-element membership test reduces to at most two integer
+    // compares — no hash probes in the inner loop (§Perf iteration 3).
+    let mut n_shared = 0usize;
+    let mut shared_bounds: Vec<(u32, u32)> = vec![(u32::MAX, u32::MAX); t];
+    if bal == TaskletBalance::NnzElement {
+        let mut last_shared = u32::MAX;
+        for i in 0..elem_ranges.len().saturating_sub(1) {
+            let (a, b) = (&elem_ranges[i], &elem_ranges[i + 1]);
+            if a.end > a.start && b.end > b.start && a.end < nnz {
+                let boundary_row = slice.rows[a.end - 1];
+                if boundary_row == slice.rows[b.start] {
+                    // Boundary rows are non-decreasing: dedup against the
+                    // previous one (a hot row can span many ranges).
+                    if boundary_row != last_shared {
+                        n_shared += 1;
+                        last_shared = boundary_row;
+                    }
+                    shared_bounds[i].1 = boundary_row; // tail of range i
+                    shared_bounds[i + 1].0 = boundary_row; // head of i+1
+                }
+            }
+        }
+    }
+
+    for (tid, range) in elem_ranges.iter().enumerate() {
+        let c = &mut counters[tid];
+        if range.is_empty() {
+            continue;
+        }
+        let (shared_head, shared_tail) = shared_bounds[tid];
+        // Stream this tasklet's (row, col, val) triples MRAM->WRAM.
+        acct::stream_matrix(c, range.len() * (8 + dt.size_bytes()));
+        let mut current_row = u32::MAX;
+        let mut rows_here = 0usize;
+        for i in range.clone() {
+            let (r, col, v) = (slice.rows[i], slice.cols[i] as usize, slice.vals[i]);
+            if r != current_row {
+                // Row transition: close previous accumulator, open new.
+                acct::row(c);
+                current_row = r;
+                rows_here += 1;
+            }
+            acct::element(c, dt);
+            let contrib = v.mul(x[col]);
+            if r == shared_head || r == shared_tail {
+                acct::locked_update(c, dt, sync);
+            }
+            y[r as usize] = y[r as usize].add(contrib);
+        }
+        acct::writeback(c, rows_here, dt);
+    }
+
+    // Lock-free element-granularity: merge epilogue on tasklet 0.
+    if bal == TaskletBalance::NnzElement && sync == SyncScheme::LockFree {
+        acct::lockfree_merge(&mut counters, n_shared, dt);
+    }
+
+    DpuKernelOutput::finish(cfg, y, counters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate;
+
+    fn cfg(t: usize) -> PimConfig {
+        PimConfig { tasklets: t, ..Default::default() }
+    }
+
+    fn check(m: &CooMatrix<f64>, t: usize, bal: TaskletBalance, sync: SyncScheme) {
+        let x: Vec<f64> = (0..m.ncols()).map(|i| ((i % 11) as f64) - 5.0).collect();
+        let out = run_coo_dpu(&cfg(t), m, &x, bal, sync);
+        assert_eq!(out.y, m.spmv(&x), "t={t} bal={bal:?} sync={sync:?}");
+    }
+
+    #[test]
+    fn correct_across_all_schemes() {
+        let m = generate::scale_free::<f64>(400, 400, 7, 0.6, 11);
+        for t in [1, 3, 16] {
+            for bal in [TaskletBalance::Rows, TaskletBalance::Nnz, TaskletBalance::NnzElement] {
+                for sync in [SyncScheme::LockFree, SyncScheme::CoarseLock, SyncScheme::FineLock] {
+                    check(&m, t, bal, sync);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn correct_on_single_dense_row() {
+        // Everything in one row: element split shares it among all.
+        let triples: Vec<(u32, u32, f64)> =
+            (0..64).map(|c| (0u32, c as u32, 1.0 + c as f64)).collect();
+        let m = CooMatrix::from_triples(1, 64, triples);
+        check(&m, 16, TaskletBalance::NnzElement, SyncScheme::CoarseLock);
+        check(&m, 16, TaskletBalance::NnzElement, SyncScheme::LockFree);
+    }
+
+    #[test]
+    fn element_split_beats_row_split_on_skew() {
+        // Element-granularity split fixes even a single mega-row.
+        let mut triples: Vec<(u32, u32, f64)> =
+            (0..2000).map(|c| (0u32, c % 500, 1.0)).collect();
+        for r in 1..100u32 {
+            triples.push((r, 0, 1.0));
+        }
+        let m = CooMatrix::from_triples(100, 500, triples);
+        let x = vec![1.0; 500];
+        let c = cfg(16);
+        let row = run_coo_dpu(&c, &m, &x, TaskletBalance::Rows, SyncScheme::LockFree);
+        let elem = run_coo_dpu(&c, &m, &x, TaskletBalance::NnzElement, SyncScheme::LockFree);
+        assert!(
+            elem.timing.cycles < row.timing.cycles / 2,
+            "elem {} !<< row {}",
+            elem.timing.cycles,
+            row.timing.cycles
+        );
+    }
+
+    #[test]
+    fn fine_lock_not_faster_than_coarse() {
+        // The paper's hardware finding: fine-grained locking does not
+        // improve over coarse because critical sections serialize on the
+        // DPU's shared DMA/WRAM path.
+        let triples: Vec<(u32, u32, f64)> =
+            (0..4096).map(|i| ((i / 512) as u32, (i % 512) as u32, 1.0)).collect();
+        let m = CooMatrix::from_triples(8, 512, triples);
+        let x = vec![1.0; 512];
+        let c = cfg(16);
+        let coarse = run_coo_dpu(&c, &m, &x, TaskletBalance::NnzElement, SyncScheme::CoarseLock);
+        let fine = run_coo_dpu(&c, &m, &x, TaskletBalance::NnzElement, SyncScheme::FineLock);
+        assert!(
+            fine.timing.cycles >= coarse.timing.cycles,
+            "fine {} should not beat coarse {}",
+            fine.timing.cycles,
+            coarse.timing.cycles
+        );
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let m = CooMatrix::<f64>::zeros(8, 8);
+        check(&m, 4, TaskletBalance::NnzElement, SyncScheme::LockFree);
+    }
+}

@@ -1,0 +1,230 @@
+//! Per-DPU SpMV kernels.
+//!
+//! Each kernel is the simulator-side equivalent of one SparseP DPU
+//! program: it computes the exact partial SpMV result for the matrix
+//! slice resident in one DPU's MRAM, while counting per-tasklet
+//! instructions, DMA traffic and synchronization events for the timing
+//! model in [`crate::pim::dpu`].
+//!
+//! The kernel axes follow the paper:
+//! * format — CSR / COO / BCSR / BCOO ([`csr`], [`coo`], [`bcsr`],
+//!   [`bcoo`]);
+//! * load balancing across tasklets — rows / nnz (/ blocks for the
+//!   blocked formats), [`TaskletBalance`];
+//! * synchronization among tasklets — lock-free, coarse-grained mutex,
+//!   fine-grained mutex, [`SyncScheme`].
+
+pub mod bcoo;
+pub mod bcsr;
+pub mod coo;
+pub mod csr;
+
+use crate::matrix::SpElem;
+use crate::pim::{dpu_time, DpuTiming, PimConfig, TaskletCounters};
+
+/// Work division across the tasklets of one DPU (paper §load balancing
+/// across threads of a multithreaded PIM core).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskletBalance {
+    /// Equal row (or block-row) counts per tasklet.
+    Rows,
+    /// Equal non-zeros per tasklet at row granularity (rows stay whole).
+    Nnz,
+    /// Equal non-zeros per tasklet at element granularity (rows may be
+    /// split across tasklets -> output synchronization required).
+    /// COO/BCOO only: CSR's implicit row boundaries cannot express it.
+    NnzElement,
+    /// Equal block counts per tasklet (BCSR/BCOO only). Blocks in the
+    /// same block row may land on different tasklets -> synchronization.
+    Blocks,
+}
+
+impl TaskletBalance {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskletBalance::Rows => "row",
+            TaskletBalance::Nnz => "nnz",
+            TaskletBalance::NnzElement => "nnz-elem",
+            TaskletBalance::Blocks => "block",
+        }
+    }
+}
+
+/// Synchronization scheme for tasklets that share output rows (paper
+/// §synchronization approaches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SyncScheme {
+    /// Private per-tasklet accumulators for shared rows, merged by
+    /// tasklet 0 after a barrier.
+    LockFree,
+    /// One global mutex around every shared-row update.
+    CoarseLock,
+    /// An array of 32 mutexes hashed by row index. On real UPMEM this
+    /// does *not* beat coarse locking: critical sections serialize on
+    /// the shared DMA engine anyway (hardware recommendation #1) — the
+    /// timing model reproduces that.
+    FineLock,
+}
+
+impl SyncScheme {
+    pub fn name(self) -> &'static str {
+        match self {
+            SyncScheme::LockFree => "lock-free",
+            SyncScheme::CoarseLock => "coarse-lock",
+            SyncScheme::FineLock => "fine-lock",
+        }
+    }
+
+    /// Extra instructions per acquisition beyond the mutex itself
+    /// (fine-grained pays a hash + index computation).
+    pub(crate) fn acquire_overhead_instrs(self) -> u64 {
+        match self {
+            SyncScheme::FineLock => 3,
+            _ => 0,
+        }
+    }
+}
+
+/// Result of running one DPU kernel.
+#[derive(Clone, Debug)]
+pub struct DpuKernelOutput<T: SpElem> {
+    /// Exact partial result for the DPU's local rows.
+    pub y: Vec<T>,
+    /// Per-tasklet counters (length = cfg.tasklets).
+    pub counters: Vec<TaskletCounters>,
+    /// Timing under the DPU model.
+    pub timing: DpuTiming,
+}
+
+impl<T: SpElem> DpuKernelOutput<T> {
+    pub(crate) fn finish(
+        cfg: &PimConfig,
+        y: Vec<T>,
+        counters: Vec<TaskletCounters>,
+    ) -> DpuKernelOutput<T> {
+        let timing = dpu_time(cfg, &counters);
+        DpuKernelOutput { y, counters, timing }
+    }
+}
+
+/// Common per-kernel accounting helpers.
+pub(crate) mod acct {
+    use super::*;
+    use crate::matrix::DType;
+    use crate::pim::calib;
+
+    /// Account one inner-loop element: loop overhead + MAC + x gather.
+    ///
+    /// `x_bytes` is the element size of the input vector; SparseP
+    /// gathers x[col] from MRAM per non-zero (x does not fit in WRAM).
+    #[inline]
+    pub fn element(c: &mut TaskletCounters, dt: DType) {
+        c.instrs += calib::ELEM_LOOP_INSTRS + calib::mac_instrs(dt);
+        c.dma(dt.size_bytes());
+    }
+
+    /// Account one row: setup + y accumulation bookkeeping. The y value
+    /// itself lives in WRAM and is written back by a trailing stream.
+    #[inline]
+    pub fn row(c: &mut TaskletCounters) {
+        c.instrs += calib::ROW_LOOP_INSTRS;
+    }
+
+    /// Account streaming the matrix-slice bytes a tasklet consumes
+    /// (row pointers / indices / values move MRAM->WRAM in 2 KB tiles).
+    #[inline]
+    pub fn stream_matrix(c: &mut TaskletCounters, bytes: usize) {
+        c.stream(bytes);
+    }
+
+    /// Account writing back `rows` output values of type `dt`.
+    #[inline]
+    pub fn writeback(c: &mut TaskletCounters, rows: usize, dt: DType) {
+        c.stream(rows * dt.size_bytes());
+        c.instrs += 2 * rows as u64; // store + pointer bump per value
+    }
+
+    /// Account a synchronized update of one shared output value.
+    pub fn locked_update(c: &mut TaskletCounters, dt: DType, sync: SyncScheme) {
+        match sync {
+            SyncScheme::LockFree => {
+                // Private accumulator in WRAM: just an add.
+                c.instrs += calib::add_instrs(dt);
+            }
+            SyncScheme::CoarseLock | SyncScheme::FineLock => {
+                c.lock_acqs += 1;
+                c.instrs += sync.acquire_overhead_instrs();
+                // Critical section: read-modify-write of the shared WRAM
+                // accumulator (adds), counted as CS work so the model
+                // serializes it across tasklets.
+                let cs = calib::add_instrs(dt) + 4;
+                c.cs_instrs += cs;
+                c.instrs += cs;
+            }
+        }
+    }
+
+    /// Account the lock-free merge epilogue: after a barrier, tasklet 0
+    /// folds every tasklet's private boundary accumulators.
+    pub fn lockfree_merge(
+        counters: &mut [TaskletCounters],
+        shared_rows: usize,
+        dt: DType,
+    ) {
+        if shared_rows == 0 {
+            return;
+        }
+        for c in counters.iter_mut() {
+            c.barriers += 1;
+        }
+        let n = counters.len();
+        counters[0].instrs += (shared_rows * n) as u64 * (calib::add_instrs(dt) + 2);
+    }
+}
+
+/// Convenience: total kernel cycles across DPUs = max (DPUs run in
+/// parallel and the host waits for the slowest — the paper's inter-DPU
+/// balance metric).
+pub fn slowest_dpu_cycles(outputs: &[DpuTiming]) -> u64 {
+    outputs.iter().map(|t| t.cycles).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names() {
+        assert_eq!(TaskletBalance::Rows.name(), "row");
+        assert_eq!(SyncScheme::FineLock.name(), "fine-lock");
+    }
+
+    #[test]
+    fn fine_lock_costs_more_instrs() {
+        assert!(
+            SyncScheme::FineLock.acquire_overhead_instrs()
+                > SyncScheme::CoarseLock.acquire_overhead_instrs()
+        );
+    }
+
+    #[test]
+    fn locked_update_produces_cs_work() {
+        let mut c = TaskletCounters::default();
+        acct::locked_update(&mut c, crate::matrix::DType::F32, SyncScheme::CoarseLock);
+        assert_eq!(c.lock_acqs, 1);
+        assert!(c.cs_instrs > 0);
+        let mut lf = TaskletCounters::default();
+        acct::locked_update(&mut lf, crate::matrix::DType::F32, SyncScheme::LockFree);
+        assert_eq!(lf.lock_acqs, 0);
+        assert_eq!(lf.cs_instrs, 0);
+    }
+
+    #[test]
+    fn lockfree_merge_bills_tasklet0() {
+        let mut cs = vec![TaskletCounters::default(); 4];
+        acct::lockfree_merge(&mut cs, 10, crate::matrix::DType::I32);
+        assert!(cs[0].instrs > 0);
+        assert_eq!(cs[1].instrs, 0);
+        assert!(cs.iter().all(|c| c.barriers == 1));
+    }
+}

@@ -1,0 +1,59 @@
+//! # SparseP (reproduction)
+//!
+//! A reproduction of *"Towards Efficient Sparse Matrix Vector Multiplication
+//! on Real Processing-In-Memory Systems"* (Giannoula et al., 2022) — the
+//! SparseP library of 25 SpMV kernels for near-bank PIM systems, together
+//! with the substrate the paper runs on: a calibrated simulator of the
+//! UPMEM PIM architecture (the first publicly-available real-world PIM
+//! system), host CPU baselines, and an XLA/PJRT accelerator path fed by
+//! AOT-compiled JAX/Pallas kernels.
+//!
+//! ## Layout
+//!
+//! * [`matrix`] — sparse matrix formats (COO/CSR/BCSR/BCOO), generators,
+//!   MatrixMarket I/O and sparsity statistics.
+//! * [`pim`] — the UPMEM-class PIM system simulator: DPU pipeline timing,
+//!   WRAM/MRAM DMA model, tasklet synchronization costs, host<->PIM
+//!   transfer collectives (with the real system's same-size padding rule)
+//!   and the energy model.
+//! * [`kernels`] — per-DPU SpMV kernels (format x tasklet-balancing x
+//!   synchronization scheme), executed functionally with cycle accounting.
+//! * [`partition`] — 1D and 2D matrix partitioning across DPUs, and
+//!   tasklet-level load balancers.
+//! * [`coordinator`] — the host-side library: plan, transfer, launch,
+//!   retrieve, merge; produces the paper's load/kernel/retrieve/merge
+//!   breakdowns.
+//! * [`baselines`] — processor-centric comparators (multithreaded host CPU
+//!   SpMV; analytic CPU/GPU roofline models).
+//! * [`runtime`] — PJRT runtime that loads AOT artifacts (HLO text) built
+//!   by `python/compile/aot.py` and executes them from Rust.
+//! * [`bench_harness`] — a small measurement harness (criterion is not
+//!   available offline) + per-figure drivers for the paper's evaluation.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sparsep::matrix::generate;
+//! use sparsep::pim::PimSystem;
+//! use sparsep::coordinator::{SpmvExecutor, KernelSpec};
+//!
+//! let m = generate::scale_free::<f32>(10_000, 10_000, 8, 0.6, 7);
+//! let exec = SpmvExecutor::new(PimSystem::with_dpus(256));
+//! let x = vec![1.0f32; m.ncols()];
+//! let run = exec.run(&KernelSpec::csr_nnz(), &m, &x).unwrap();
+//! println!("y[0]={} breakdown={:?}", run.y[0], run.breakdown);
+//! ```
+
+pub mod util;
+pub mod matrix;
+pub mod pim;
+pub mod kernels;
+pub mod partition;
+pub mod coordinator;
+pub mod apps;
+pub mod baselines;
+pub mod runtime;
+pub mod bench_harness;
+pub mod cli;
+
+pub use matrix::dtype::{DType, SpElem};

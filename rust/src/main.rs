@@ -1,0 +1,21 @@
+//! `sparsep` — the SparseP reproduction CLI.
+//!
+//! The leader process of the three-layer stack: it owns the simulated
+//! PIM system, the SpMV kernel library, the baselines and the PJRT
+//! runtime for AOT artifacts. Run `sparsep help` for commands.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match sparsep::cli::Args::parse(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            sparsep::cli::print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = sparsep::cli::run(parsed) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

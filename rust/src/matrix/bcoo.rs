@@ -1,0 +1,167 @@
+//! BCOO (block coordinate) format.
+//!
+//! Like BCSR, the matrix is tiled into dense `R x C` blocks, but each
+//! stored block carries both its block-row and block-column index — the
+//! block analogue of COO. As with COO vs CSR, the explicit block-row
+//! index is what lets nnz-balanced partitions split *inside* a block row,
+//! which the `BCOO.nnz` kernels exploit.
+
+use super::bcsr::BcsrMatrix;
+use super::coo::CooMatrix;
+use super::dtype::SpElem;
+
+/// A sparse matrix in BCOO format, blocks sorted by (block_row, block_col).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BcooMatrix<T: SpElem> {
+    nrows: usize,
+    ncols: usize,
+    /// Block height.
+    pub br: usize,
+    /// Block width.
+    pub bc: usize,
+    /// Block-row index of each stored block.
+    pub block_rows: Vec<u32>,
+    /// Block-column index of each stored block.
+    pub block_cols: Vec<u32>,
+    /// Dense block values, row-major within each `br*bc` block.
+    pub vals: Vec<T>,
+    nnz_orig: usize,
+}
+
+impl<T: SpElem> BcooMatrix<T> {
+    /// Convert from COO via BCSR (reuses the grouping logic).
+    pub fn from_coo(coo: &CooMatrix<T>, br: usize, bc: usize) -> Self {
+        let bcsr = BcsrMatrix::from_coo(coo, br, bc);
+        Self::from_bcsr(&bcsr)
+    }
+
+    /// Convert from BCSR by materializing block-row indices.
+    pub fn from_bcsr(b: &BcsrMatrix<T>) -> Self {
+        let mut block_rows = Vec::with_capacity(b.nblocks());
+        for i in 0..b.n_block_rows() {
+            for _ in 0..b.block_row_nblocks(i) {
+                block_rows.push(i as u32);
+            }
+        }
+        BcooMatrix {
+            nrows: b.nrows(),
+            ncols: b.ncols(),
+            br: b.br,
+            bc: b.bc,
+            block_rows,
+            block_cols: b.block_cols.clone(),
+            vals: b.vals.clone(),
+            nnz_orig: b.nnz(),
+        }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    /// Original (unfilled) non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.nnz_orig
+    }
+    pub fn nblocks(&self) -> usize {
+        self.block_cols.len()
+    }
+    pub fn stored_vals(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Dense values of block `i`.
+    #[inline]
+    pub fn block(&self, i: usize) -> &[T] {
+        &self.vals[i * self.br * self.bc..(i + 1) * self.br * self.bc]
+    }
+
+    /// Reference SpMV: `y = A * x`.
+    pub fn spmv(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![T::zero(); self.nrows];
+        let (br, bc) = (self.br, self.bc);
+        for i in 0..self.nblocks() {
+            let blk = self.block(i);
+            let row0 = self.block_rows[i] as usize * br;
+            let col0 = self.block_cols[i] as usize * bc;
+            for rr in 0..br {
+                let r = row0 + rr;
+                if r >= self.nrows {
+                    break;
+                }
+                let mut acc = y[r];
+                for cc in 0..bc {
+                    let c = col0 + cc;
+                    if c >= self.ncols {
+                        break;
+                    }
+                    acc = T::mac(acc, blk[rr * bc + cc], x[c]);
+                }
+                y[r] = acc;
+            }
+        }
+        y
+    }
+
+    /// Storage footprint in bytes (two 4-byte indices per block).
+    pub fn size_bytes(&self) -> usize {
+        self.nblocks() * 8 + self.stored_vals() * T::DTYPE.size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CooMatrix<f64> {
+        CooMatrix::from_triples(
+            4,
+            4,
+            vec![
+                (0, 0, 1.0),
+                (0, 1, 2.0),
+                (1, 0, 3.0),
+                (1, 1, 4.0),
+                (2, 3, 5.0),
+                (3, 0, 6.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn structure_matches_bcsr() {
+        let m = small();
+        let bcsr = BcsrMatrix::from_coo(&m, 2, 2);
+        let bcoo = BcooMatrix::from_bcsr(&bcsr);
+        assert_eq!(bcoo.nblocks(), bcsr.nblocks());
+        assert_eq!(bcoo.block_rows, vec![0, 1, 1]);
+        assert_eq!(bcoo.block_cols, bcsr.block_cols);
+    }
+
+    #[test]
+    fn spmv_matches_coo() {
+        let m = small();
+        let x = [1.0, 10.0, 100.0, 1000.0];
+        for (br, bc) in [(1, 1), (2, 2), (4, 2), (3, 3)] {
+            let b = BcooMatrix::from_coo(&m, br, bc);
+            assert_eq!(b.spmv(&x), m.spmv(&x), "block {br}x{bc}");
+        }
+    }
+
+    #[test]
+    fn ragged_edge() {
+        let m = CooMatrix::from_triples(5, 3, vec![(4, 2, 7.0f32), (0, 0, 1.0)]);
+        let b = BcooMatrix::from_coo(&m, 2, 2);
+        assert_eq!(b.spmv(&[1.0, 1.0, 1.0]), m.spmv(&[1.0, 1.0, 1.0]));
+    }
+
+    #[test]
+    fn empty() {
+        let b = BcooMatrix::from_coo(&CooMatrix::<i32>::zeros(3, 3), 2, 2);
+        assert_eq!(b.nblocks(), 0);
+        assert_eq!(b.spmv(&[1, 1, 1]), vec![0, 0, 0]);
+    }
+}

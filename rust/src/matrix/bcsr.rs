@@ -1,0 +1,280 @@
+//! BCSR (block compressed sparse row) format.
+//!
+//! The matrix is tiled into dense `R x C` blocks; only blocks containing
+//! at least one non-zero are stored, each as a dense `R*C` value tile.
+//! Index overhead is amortized over a whole block (one column index per
+//! block instead of per element) at the cost of storing explicit zeros
+//! inside blocks. The paper uses BCSR/BCOO because the small dense tiles
+//! fit the DPU's WRAM nicely and cut DRAM traffic for matrices with block
+//! structure — the same reason our Pallas `bell_spmv` kernel feeds dense
+//! blocks to the MXU (see DESIGN.md §Hardware-Adaptation).
+
+use super::coo::CooMatrix;
+use super::dtype::SpElem;
+
+/// A sparse matrix in BCSR format with runtime-chosen block shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BcsrMatrix<T: SpElem> {
+    nrows: usize,
+    ncols: usize,
+    /// Block height (rows per block).
+    pub br: usize,
+    /// Block width (cols per block).
+    pub bc: usize,
+    /// `block_row_ptr[i]..block_row_ptr[i+1]` indexes the blocks of block
+    /// row `i` (there are `ceil(nrows/br)` block rows).
+    pub block_row_ptr: Vec<u32>,
+    /// Block-column index of each stored block.
+    pub block_cols: Vec<u32>,
+    /// Dense block values, row-major within each `br*bc` block.
+    pub vals: Vec<T>,
+    /// Number of *original* non-zeros (excluding fill), kept for
+    /// balancing decisions and GFLOP accounting.
+    nnz_orig: usize,
+}
+
+impl<T: SpElem> BcsrMatrix<T> {
+    /// Convert from COO with the given block shape.
+    ///
+    /// COO is canonically sorted by (row, col), so the non-zeros of one
+    /// *block row* form a contiguous span (found by binary search); the
+    /// span is bucket-sorted by block column with one scratch index sort
+    /// per block row. No global map, no per-block allocations (§Perf
+    /// iteration 6 — the BTreeMap version was ~23% of the full
+    /// characterization run).
+    pub fn from_coo(coo: &CooMatrix<T>, br: usize, bc: usize) -> Self {
+        assert!(br > 0 && bc > 0);
+        let n_block_rows = crate::util::ceil_div(coo.nrows().max(1), br);
+        let mut block_row_ptr = vec![0u32; n_block_rows + 1];
+        let mut block_cols: Vec<u32> = Vec::new();
+        let mut vals: Vec<T> = Vec::new();
+        let mut scratch: Vec<(u32, usize)> = Vec::new(); // (block_col, elem idx)
+        let mut span_start = 0usize;
+        while span_start < coo.nnz() {
+            let bri = coo.rows[span_start] as usize / br;
+            let row_end = ((bri + 1) * br) as u32;
+            // End of this block row's span.
+            let span_end = span_start
+                + coo.rows[span_start..].partition_point(|&r| r < row_end);
+            // Sort the span's elements by block column.
+            scratch.clear();
+            scratch.extend(
+                (span_start..span_end).map(|i| (coo.cols[i] / bc as u32, i)),
+            );
+            scratch.sort_unstable_by_key(|&(bcol, _)| bcol);
+            // Emit dense blocks in block-column order.
+            let mut k = 0usize;
+            while k < scratch.len() {
+                let bcol = scratch[k].0;
+                let base = vals.len();
+                vals.resize(base + br * bc, T::zero());
+                while k < scratch.len() && scratch[k].0 == bcol {
+                    let i = scratch[k].1;
+                    let rr = coo.rows[i] as usize % br;
+                    let cc = coo.cols[i] as usize % bc;
+                    let slot = &mut vals[base + rr * bc + cc];
+                    *slot = slot.add(coo.vals[i]);
+                    k += 1;
+                }
+                block_cols.push(bcol);
+                block_row_ptr[bri + 1] += 1;
+            }
+            span_start = span_end;
+        }
+        for i in 0..n_block_rows {
+            block_row_ptr[i + 1] += block_row_ptr[i];
+        }
+        BcsrMatrix {
+            nrows: coo.nrows(),
+            ncols: coo.ncols(),
+            br,
+            bc,
+            block_row_ptr,
+            block_cols,
+            vals,
+            nnz_orig: coo.nnz(),
+        }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    /// Original (unfilled) non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.nnz_orig
+    }
+    /// Number of stored blocks.
+    pub fn nblocks(&self) -> usize {
+        self.block_cols.len()
+    }
+    /// Number of block rows.
+    pub fn n_block_rows(&self) -> usize {
+        self.block_row_ptr.len() - 1
+    }
+    /// Stored values including fill (`nblocks * br * bc`).
+    pub fn stored_vals(&self) -> usize {
+        self.vals.len()
+    }
+    /// Fill-in ratio: stored values / original nnz (>= 1).
+    pub fn fill_ratio(&self) -> f64 {
+        if self.nnz_orig == 0 {
+            1.0
+        } else {
+            self.stored_vals() as f64 / self.nnz_orig as f64
+        }
+    }
+
+    /// Blocks of block row `i`: (block_cols, concatenated values).
+    pub fn block_row(&self, i: usize) -> (&[u32], &[T]) {
+        let lo = self.block_row_ptr[i] as usize;
+        let hi = self.block_row_ptr[i + 1] as usize;
+        (&self.block_cols[lo..hi], &self.vals[lo * self.br * self.bc..hi * self.br * self.bc])
+    }
+
+    /// Number of blocks in block row `i`.
+    pub fn block_row_nblocks(&self, i: usize) -> usize {
+        (self.block_row_ptr[i + 1] - self.block_row_ptr[i]) as usize
+    }
+
+    /// Reference SpMV: `y = A * x`.
+    pub fn spmv(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![T::zero(); self.nrows];
+        let (br, bc) = (self.br, self.bc);
+        for i in 0..self.n_block_rows() {
+            let (bcols, bvals) = self.block_row(i);
+            for (bi, &bcol) in bcols.iter().enumerate() {
+                let blk = &bvals[bi * br * bc..(bi + 1) * br * bc];
+                let row0 = i * br;
+                let col0 = bcol as usize * bc;
+                for rr in 0..br {
+                    let r = row0 + rr;
+                    if r >= self.nrows {
+                        break;
+                    }
+                    let mut acc = y[r];
+                    for cc in 0..bc {
+                        let c = col0 + cc;
+                        if c >= self.ncols {
+                            break;
+                        }
+                        acc = T::mac(acc, blk[rr * bc + cc], x[c]);
+                    }
+                    y[r] = acc;
+                }
+            }
+        }
+        y
+    }
+
+    /// Convert back to COO (drops fill zeros it can identify: entries that
+    /// are exactly `T::zero()` inside blocks are not emitted).
+    pub fn to_coo(&self) -> CooMatrix<T> {
+        let mut triples = Vec::with_capacity(self.nnz_orig);
+        let (br, bc) = (self.br, self.bc);
+        for i in 0..self.n_block_rows() {
+            let (bcols, bvals) = self.block_row(i);
+            for (bi, &bcol) in bcols.iter().enumerate() {
+                let blk = &bvals[bi * br * bc..(bi + 1) * br * bc];
+                for rr in 0..br {
+                    for cc in 0..bc {
+                        let v = blk[rr * bc + cc];
+                        if v != T::zero() {
+                            let r = i * br + rr;
+                            let c = bcol as usize * bc + cc;
+                            if r < self.nrows && c < self.ncols {
+                                triples.push((r as u32, c as u32, v));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        CooMatrix::from_triples(self.nrows, self.ncols, triples)
+    }
+
+    /// Storage footprint in bytes.
+    pub fn size_bytes(&self) -> usize {
+        (self.block_row_ptr.len() + self.block_cols.len()) * 4
+            + self.stored_vals() * T::DTYPE.size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CooMatrix<f64> {
+        // 4x4 with a dense 2x2 block at (0,0) and scattered elements.
+        CooMatrix::from_triples(
+            4,
+            4,
+            vec![
+                (0, 0, 1.0),
+                (0, 1, 2.0),
+                (1, 0, 3.0),
+                (1, 1, 4.0),
+                (2, 3, 5.0),
+                (3, 0, 6.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn block_structure() {
+        let b = BcsrMatrix::from_coo(&small(), 2, 2);
+        // Blocks: (0,0) dense; (1,1) holds (2,3); (1,0) holds (3,0).
+        assert_eq!(b.nblocks(), 3);
+        assert_eq!(b.nnz(), 6);
+        assert_eq!(b.stored_vals(), 12);
+        assert!((b.fill_ratio() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spmv_matches_coo() {
+        let m = small();
+        let x = [1.0, 10.0, 100.0, 1000.0];
+        for (br, bc) in [(1, 1), (2, 2), (3, 2), (4, 4), (2, 4)] {
+            let b = BcsrMatrix::from_coo(&m, br, bc);
+            assert_eq!(b.spmv(&x), m.spmv(&x), "block {br}x{bc}");
+        }
+    }
+
+    #[test]
+    fn spmv_with_ragged_edge() {
+        // 5x5 matrix, 2x2 blocks: last block row/col are partial.
+        let m = CooMatrix::from_triples(
+            5,
+            5,
+            vec![(4, 4, 2.0f32), (4, 0, 1.0), (0, 4, 3.0)],
+        );
+        let b = BcsrMatrix::from_coo(&m, 2, 2);
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(b.spmv(&x), m.spmv(&x));
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let m = small();
+        let b = BcsrMatrix::from_coo(&m, 2, 2);
+        assert_eq!(b.to_coo(), m);
+    }
+
+    #[test]
+    fn bcsr_1x1_equals_csr_pattern() {
+        let m = small();
+        let b = BcsrMatrix::from_coo(&m, 1, 1);
+        assert_eq!(b.nblocks(), m.nnz());
+        assert!((b.fill_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_triples_accumulate_into_block() {
+        let m = CooMatrix::from_triples(2, 2, vec![(0, 0, 1.0f64), (0, 0, 2.0)]);
+        let b = BcsrMatrix::from_coo(&m, 2, 2);
+        assert_eq!(b.spmv(&[1.0, 0.0])[0], 3.0);
+    }
+}

@@ -1,0 +1,323 @@
+//! COO (coordinate) format: parallel arrays of (row, col, value) triples.
+//!
+//! COO is the most flexible of the paper's formats: because each non-zero
+//! carries its own row index, an nnz-balanced partition can split *inside*
+//! a row — which is exactly what the `COO.nnz` kernels exploit, at the
+//! price of synchronization on shared rows.
+
+use super::dtype::SpElem;
+
+/// A sparse matrix in coordinate format, sorted by (row, col).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CooMatrix<T: SpElem> {
+    nrows: usize,
+    ncols: usize,
+    /// Row index of each non-zero (sorted, ties broken by column).
+    pub rows: Vec<u32>,
+    /// Column index of each non-zero.
+    pub cols: Vec<u32>,
+    /// Value of each non-zero.
+    pub vals: Vec<T>,
+}
+
+impl<T: SpElem> CooMatrix<T> {
+    /// Build from triples. Duplicate (row, col) entries are summed,
+    /// entries are sorted by (row, col), explicit zeros are kept (they
+    /// are non-zeros from the storage format's point of view).
+    pub fn from_triples(
+        nrows: usize,
+        ncols: usize,
+        mut triples: Vec<(u32, u32, T)>,
+    ) -> Self {
+        triples.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut rows = Vec::with_capacity(triples.len());
+        let mut cols = Vec::with_capacity(triples.len());
+        let mut vals: Vec<T> = Vec::with_capacity(triples.len());
+        for (r, c, v) in triples {
+            assert!((r as usize) < nrows && (c as usize) < ncols, "triple out of bounds");
+            if let (Some(&lr), Some(&lc)) = (rows.last(), cols.last()) {
+                if lr == r && lc == c {
+                    let last = vals.last_mut().unwrap();
+                    *last = last.add(v);
+                    continue;
+                }
+            }
+            rows.push(r);
+            cols.push(c);
+            vals.push(v);
+        }
+        CooMatrix { nrows, ncols, rows, cols, vals }
+    }
+
+    /// An empty matrix of the given shape.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        CooMatrix { nrows, ncols, rows: vec![], cols: vec![], vals: vec![] }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Iterate over the stored triples in (row, col) order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32, T)> + '_ {
+        (0..self.nnz()).map(move |i| (self.rows[i], self.cols[i], self.vals[i]))
+    }
+
+    /// Reference SpMV: `y = A * x`. Gold standard used by every test.
+    pub fn spmv(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![T::zero(); self.nrows];
+        for i in 0..self.nnz() {
+            let r = self.rows[i] as usize;
+            let c = self.cols[i] as usize;
+            y[r] = T::mac(y[r], self.vals[i], x[c]);
+        }
+        y
+    }
+
+    /// Number of non-zeros in each row.
+    pub fn row_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.nrows];
+        for &r in &self.rows {
+            counts[r as usize] += 1;
+        }
+        counts
+    }
+
+    /// Extract rows `[r0, r1)` re-indexed to start at 0, keeping the full
+    /// column space. O(log nnz + slice) thanks to canonical row ordering —
+    /// this is the 1D partitioning hot path.
+    pub fn row_range_slice(&self, r0: usize, r1: usize) -> CooMatrix<T> {
+        assert!(r0 <= r1 && r1 <= self.nrows);
+        let lo = self.rows.partition_point(|&r| (r as usize) < r0);
+        let hi = self.rows.partition_point(|&r| (r as usize) < r1);
+        CooMatrix {
+            nrows: r1 - r0,
+            ncols: self.ncols,
+            rows: self.rows[lo..hi].iter().map(|&r| r - r0 as u32).collect(),
+            cols: self.cols[lo..hi].to_vec(),
+            vals: self.vals[lo..hi].to_vec(),
+        }
+    }
+
+    /// Extract non-zeros `[lo, hi)` *by storage position* (canonical
+    /// (row, col) order), re-indexed so the first covered row becomes
+    /// row 0. Returns the slice and the original index of that first
+    /// row. This is the element-granularity 1D partitioning primitive
+    /// (`COO.nnz`): the cut may fall inside a row, in which case the
+    /// boundary row's partial sums are produced by two DPUs and merged
+    /// on the host.
+    pub fn element_range_slice(&self, lo: usize, hi: usize) -> (CooMatrix<T>, usize) {
+        assert!(lo <= hi && hi <= self.nnz());
+        if lo == hi {
+            return (CooMatrix::zeros(0, self.ncols), 0);
+        }
+        let first_row = self.rows[lo] as usize;
+        let last_row = self.rows[hi - 1] as usize;
+        (
+            CooMatrix {
+                nrows: last_row - first_row + 1,
+                ncols: self.ncols,
+                rows: self.rows[lo..hi].iter().map(|&r| r - first_row as u32).collect(),
+                cols: self.cols[lo..hi].to_vec(),
+                vals: self.vals[lo..hi].to_vec(),
+            },
+            first_row,
+        )
+    }
+
+    /// Split into column stripes in ONE pass: `stripe_ranges` are the
+    /// disjoint, ordered `[start, end)` column ranges covering the
+    /// matrix; returns one re-indexed sub-matrix per stripe, each in
+    /// canonical order. O(nnz log stripes) — the 2D executor's bulk
+    /// replacement for calling [`CooMatrix::filter_cols`] per stripe.
+    pub fn split_col_stripes(&self, stripe_ranges: &[std::ops::Range<usize>]) -> Vec<CooMatrix<T>> {
+        let ends: Vec<usize> = stripe_ranges.iter().map(|r| r.end).collect();
+        debug_assert!(ends.windows(2).all(|w| w[0] <= w[1]));
+        debug_assert_eq!(*ends.last().unwrap_or(&0), self.ncols);
+        let mut parts: Vec<(Vec<u32>, Vec<u32>, Vec<T>)> =
+            stripe_ranges.iter().map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
+        for i in 0..self.nnz() {
+            let c = self.cols[i] as usize;
+            let s = ends.partition_point(|&e| e <= c);
+            let p = &mut parts[s];
+            p.0.push(self.rows[i]);
+            p.1.push((c - stripe_ranges[s].start) as u32);
+            p.2.push(self.vals[i]);
+        }
+        // Filtering a canonically-sorted sequence preserves (row, col)
+        // order within each stripe, so no re-sort is needed.
+        parts
+            .into_iter()
+            .zip(stripe_ranges)
+            .map(|((rows, cols, vals), cr)| CooMatrix {
+                nrows: self.nrows,
+                ncols: cr.len(),
+                rows,
+                cols,
+                vals,
+            })
+            .collect()
+    }
+
+    /// Keep only columns `[c0, c1)`, re-indexed to start at 0 (row space
+    /// kept). O(nnz). The 2D partitioners call this once per stripe.
+    pub fn filter_cols(&self, c0: usize, c1: usize) -> CooMatrix<T> {
+        assert!(c0 <= c1 && c1 <= self.ncols);
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..self.nnz() {
+            let c = self.cols[i] as usize;
+            if c >= c0 && c < c1 {
+                rows.push(self.rows[i]);
+                cols.push((c - c0) as u32);
+                vals.push(self.vals[i]);
+            }
+        }
+        CooMatrix { nrows: self.nrows, ncols: c1 - c0, rows, cols, vals }
+    }
+
+    /// Extract the sub-matrix of rows `[r0, r1)` and columns `[c0, c1)`,
+    /// re-indexed to a (r1-r0) x (c1-c0) matrix. Used by the 2D
+    /// partitioners.
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> CooMatrix<T> {
+        assert!(r0 <= r1 && r1 <= self.nrows && c0 <= c1 && c1 <= self.ncols);
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..self.nnz() {
+            let (r, c) = (self.rows[i] as usize, self.cols[i] as usize);
+            if r >= r0 && r < r1 && c >= c0 && c < c1 {
+                rows.push((r - r0) as u32);
+                cols.push((c - c0) as u32);
+                vals.push(self.vals[i]);
+            }
+        }
+        CooMatrix { nrows: r1 - r0, ncols: c1 - c0, rows, cols, vals }
+    }
+
+    /// Convert elements to another supported type (used by the dtype
+    /// sweep: the same sparsity pattern evaluated at all six types).
+    pub fn cast<U: SpElem>(&self) -> CooMatrix<U> {
+        CooMatrix {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            rows: self.rows.clone(),
+            cols: self.cols.clone(),
+            vals: self.vals.iter().map(|v| U::from_f64(v.to_f64())).collect(),
+        }
+    }
+
+    /// Total storage footprint of the format in bytes (paper's transfer
+    /// cost accounting: 4-byte row + 4-byte col index per element).
+    pub fn size_bytes(&self) -> usize {
+        self.nnz() * (8 + T::DTYPE.size_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CooMatrix<f64> {
+        // [ 1 0 2 ]
+        // [ 0 0 0 ]
+        // [ 3 4 0 ]
+        CooMatrix::from_triples(
+            3,
+            3,
+            vec![(2, 1, 4.0), (0, 0, 1.0), (2, 0, 3.0), (0, 2, 2.0)],
+        )
+    }
+
+    #[test]
+    fn from_triples_sorts() {
+        let m = small();
+        assert_eq!(m.rows, vec![0, 0, 2, 2]);
+        assert_eq!(m.cols, vec![0, 2, 0, 1]);
+        assert_eq!(m.nnz(), 4);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let m = CooMatrix::from_triples(2, 2, vec![(0, 0, 1.0f32), (0, 0, 2.5), (1, 1, 1.0)]);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.vals[0], 3.5);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = small();
+        let y = m.spmv(&[1.0, 10.0, 100.0]);
+        assert_eq!(y, vec![201.0, 0.0, 43.0]);
+    }
+
+    #[test]
+    fn row_counts() {
+        assert_eq!(small().row_counts(), vec![2, 0, 2]);
+    }
+
+    #[test]
+    fn submatrix_reindexes() {
+        let m = small();
+        let s = m.submatrix(1, 3, 0, 2);
+        assert_eq!(s.nrows(), 2);
+        assert_eq!(s.ncols(), 2);
+        assert_eq!(s.nnz(), 2); // (2,0,3.0) and (2,1,4.0) -> rows 1
+        assert_eq!(s.rows, vec![1, 1]);
+        assert_eq!(s.cols, vec![0, 1]);
+    }
+
+    #[test]
+    fn cast_preserves_pattern() {
+        let m = small();
+        let mi: CooMatrix<i32> = m.cast();
+        assert_eq!(mi.rows, m.rows);
+        assert_eq!(mi.vals, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn row_range_slice_matches_submatrix() {
+        let m = small();
+        assert_eq!(m.row_range_slice(1, 3), m.submatrix(1, 3, 0, 3));
+        assert_eq!(m.row_range_slice(0, 0).nnz(), 0);
+        assert_eq!(m.row_range_slice(0, 3), m);
+    }
+
+    #[test]
+    fn element_range_slice_covers_and_reindexes() {
+        let m = small(); // 4 nnz in rows 0,0,2,2
+        let (s1, f1) = m.element_range_slice(0, 2);
+        assert_eq!(f1, 0);
+        assert_eq!(s1.nrows(), 1);
+        let (s2, f2) = m.element_range_slice(1, 3);
+        assert_eq!(f2, 0);
+        assert_eq!(s2.nrows(), 3); // spans rows 0..=2
+        assert_eq!(s2.nnz(), 2);
+        let (s3, f3) = m.element_range_slice(2, 4);
+        assert_eq!(f3, 2);
+        assert_eq!(s3.nrows(), 1);
+        let (s4, _) = m.element_range_slice(1, 1);
+        assert_eq!(s4.nnz(), 0);
+    }
+
+    #[test]
+    fn filter_cols_matches_submatrix() {
+        let m = small();
+        assert_eq!(m.filter_cols(1, 3), m.submatrix(0, 3, 1, 3));
+        assert_eq!(m.filter_cols(0, 3), m);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_triple_panics() {
+        CooMatrix::from_triples(2, 2, vec![(2, 0, 1.0f32)]);
+    }
+}

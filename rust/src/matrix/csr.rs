@@ -1,0 +1,202 @@
+//! CSR (compressed sparse row) format.
+//!
+//! The de-facto standard SpMV format and the paper's baseline: a row
+//! pointer array of length `nrows+1`, plus column-index and value arrays
+//! of length `nnz`. Row boundaries are explicit, which makes row-granular
+//! partitioning free but in-row splitting impossible — the key structural
+//! difference from COO that drives the paper's balancing analysis.
+
+use super::coo::CooMatrix;
+use super::dtype::SpElem;
+
+/// A sparse matrix in CSR format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix<T: SpElem> {
+    nrows: usize,
+    ncols: usize,
+    /// `row_ptr[r]..row_ptr[r+1]` indexes the non-zeros of row `r`.
+    pub row_ptr: Vec<u32>,
+    /// Column index of each non-zero.
+    pub cols: Vec<u32>,
+    /// Value of each non-zero.
+    pub vals: Vec<T>,
+}
+
+impl<T: SpElem> CsrMatrix<T> {
+    /// Convert from COO (which is canonically sorted).
+    pub fn from_coo(coo: &CooMatrix<T>) -> Self {
+        let mut row_ptr = vec![0u32; coo.nrows() + 1];
+        for &r in &coo.rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for r in 0..coo.nrows() {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        CsrMatrix {
+            nrows: coo.nrows(),
+            ncols: coo.ncols(),
+            row_ptr,
+            cols: coo.cols.clone(),
+            vals: coo.vals.clone(),
+        }
+    }
+
+    /// Build directly from raw parts (validated).
+    pub fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        row_ptr: Vec<u32>,
+        cols: Vec<u32>,
+        vals: Vec<T>,
+    ) -> Self {
+        assert_eq!(row_ptr.len(), nrows + 1, "row_ptr length");
+        assert_eq!(row_ptr[0], 0, "row_ptr[0] must be 0");
+        assert_eq!(*row_ptr.last().unwrap() as usize, vals.len(), "row_ptr end");
+        assert_eq!(cols.len(), vals.len(), "cols/vals length");
+        assert!(row_ptr.windows(2).all(|w| w[0] <= w[1]), "row_ptr monotone");
+        assert!(cols.iter().all(|&c| (c as usize) < ncols), "col in bounds");
+        CsrMatrix { nrows, ncols, row_ptr, cols, vals }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Number of non-zeros in row `r`.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.row_ptr[r + 1] - self.row_ptr[r]) as usize
+    }
+
+    /// The (cols, vals) slices of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[T]) {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        (&self.cols[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Reference SpMV: `y = A * x`.
+    pub fn spmv(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![T::zero(); self.nrows];
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            let mut acc = T::zero();
+            for (c, v) in cols.iter().zip(vals) {
+                acc = T::mac(acc, *v, x[*c as usize]);
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Convert back to COO.
+    pub fn to_coo(&self) -> CooMatrix<T> {
+        let mut triples = Vec::with_capacity(self.nnz());
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                triples.push((r as u32, *c, *v));
+            }
+        }
+        CooMatrix::from_triples(self.nrows, self.ncols, triples)
+    }
+
+    /// Extract rows `[r0, r1)` as a new CSR matrix (column space kept).
+    /// This is the 1D row-partitioning primitive.
+    pub fn row_slice(&self, r0: usize, r1: usize) -> CsrMatrix<T> {
+        assert!(r0 <= r1 && r1 <= self.nrows);
+        let lo = self.row_ptr[r0] as usize;
+        let hi = self.row_ptr[r1] as usize;
+        let row_ptr = self.row_ptr[r0..=r1].iter().map(|&p| p - self.row_ptr[r0]).collect();
+        CsrMatrix {
+            nrows: r1 - r0,
+            ncols: self.ncols,
+            row_ptr,
+            cols: self.cols[lo..hi].to_vec(),
+            vals: self.vals[lo..hi].to_vec(),
+        }
+    }
+
+    /// Storage footprint in bytes: row pointers + column indices + values.
+    pub fn size_bytes(&self) -> usize {
+        (self.row_ptr.len() + self.cols.len()) * 4 + self.nnz() * T::DTYPE.size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CsrMatrix<f64> {
+        // [ 1 0 2 ]
+        // [ 0 0 0 ]
+        // [ 3 4 0 ]
+        let coo = CooMatrix::from_triples(
+            3,
+            3,
+            vec![(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)],
+        );
+        CsrMatrix::from_coo(&coo)
+    }
+
+    #[test]
+    fn from_coo_structure() {
+        let m = small();
+        assert_eq!(m.row_ptr, vec![0, 2, 2, 4]);
+        assert_eq!(m.cols, vec![0, 2, 0, 1]);
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(1), 0);
+    }
+
+    #[test]
+    fn spmv_matches_coo() {
+        let m = small();
+        let x = [1.0, 10.0, 100.0];
+        assert_eq!(m.spmv(&x), m.to_coo().spmv(&x));
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let m = small();
+        let back = CsrMatrix::from_coo(&m.to_coo());
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn row_slice_preserves_values() {
+        let m = small();
+        let s = m.row_slice(1, 3);
+        assert_eq!(s.nrows(), 2);
+        assert_eq!(s.row_ptr, vec![0, 0, 2]);
+        let y = s.spmv(&[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![0.0, 7.0]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = CsrMatrix::from_coo(&CooMatrix::<f32>::zeros(4, 5));
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.spmv(&vec![1.0; 5]), vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_row_ptr_panics() {
+        CsrMatrix::from_parts(2, 2, vec![0, 3, 2], vec![0, 1], vec![1.0f32, 2.0]);
+    }
+
+    #[test]
+    fn size_bytes_accounting() {
+        let m = small();
+        // 4 row_ptr entries + 4 cols (4B each) + 4 f64 vals.
+        assert_eq!(m.size_bytes(), (4 + 4) * 4 + 4 * 8);
+    }
+}

@@ -1,0 +1,159 @@
+//! Dense helpers and the padded ELL / block-ELL layouts used by the
+//! XLA/PJRT accelerator path.
+//!
+//! The AOT-compiled JAX/Pallas kernels operate on *static* shapes, so the
+//! host converts a sparse matrix into a padded ELL (values + column
+//! indices, `rows x K` where `K = max nnz/row` rounded up to a bucket) or
+//! block-ELL layout before execution. Padding columns point at column 0
+//! with value 0, which leaves the product unchanged — the classic
+//! GPU-SpMV trick, and the TPU re-think of the paper's 2D padding
+//! trade-off (see DESIGN.md §Hardware-Adaptation).
+
+use super::csr::CsrMatrix;
+use super::dtype::SpElem;
+
+/// A dense row-major matrix (used in tests and as the XLA input layout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix<T: SpElem> {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: SpElem> DenseMatrix<T> {
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        DenseMatrix { nrows, ncols, data: vec![T::zero(); nrows * ncols] }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> T {
+        self.data[r * self.ncols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        self.data[r * self.ncols + c] = v;
+    }
+
+    /// Dense mat-vec (oracle for tiny tests).
+    pub fn matvec(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.ncols);
+        (0..self.nrows)
+            .map(|r| {
+                let mut acc = T::zero();
+                for c in 0..self.ncols {
+                    acc = T::mac(acc, self.get(r, c), x[c]);
+                }
+                acc
+            })
+            .collect()
+    }
+}
+
+/// Padded ELL layout: `vals[r*k..(r+1)*k]` and `cols[..]` with zero-fill.
+///
+/// This is the layout `python/compile/kernels/ell_spmv.py` consumes, and
+/// what [`crate::runtime::ArtifactRunner`] feeds to the compiled HLO.
+#[derive(Clone, Debug)]
+pub struct EllMatrix<T: SpElem> {
+    /// Padded row count (rounded up to the artifact's row bucket).
+    pub nrows: usize,
+    /// Logical (unpadded) row count.
+    pub nrows_orig: usize,
+    pub ncols: usize,
+    /// Entries per row after padding.
+    pub k: usize,
+    /// `nrows * k` values, zero-padded.
+    pub vals: Vec<T>,
+    /// `nrows * k` column indices (padding points at column 0).
+    pub cols: Vec<i32>,
+}
+
+impl<T: SpElem> EllMatrix<T> {
+    /// Convert CSR -> ELL, padding rows to `k_min.max(max nnz/row)` and
+    /// the row count up to a multiple of `row_multiple` (grid tiling).
+    pub fn from_csr(csr: &CsrMatrix<T>, k_min: usize, row_multiple: usize) -> Self {
+        let k_data = (0..csr.nrows()).map(|r| csr.row_nnz(r)).max().unwrap_or(0);
+        let k = k_data.max(k_min).max(1);
+        let nrows = crate::util::round_up(csr.nrows().max(1), row_multiple.max(1));
+        let mut vals = vec![T::zero(); nrows * k];
+        let mut cols = vec![0i32; nrows * k];
+        for r in 0..csr.nrows() {
+            let (rc, rv) = csr.row(r);
+            for (i, (&c, &v)) in rc.iter().zip(rv).enumerate() {
+                vals[r * k + i] = v;
+                cols[r * k + i] = c as i32;
+            }
+        }
+        EllMatrix { nrows, nrows_orig: csr.nrows(), ncols: csr.ncols(), k, vals, cols }
+    }
+
+    /// Reference SpMV over the padded layout (truncated to logical rows).
+    pub fn spmv(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.ncols);
+        (0..self.nrows_orig)
+            .map(|r| {
+                let mut acc = T::zero();
+                for i in 0..self.k {
+                    acc = T::mac(acc, self.vals[r * self.k + i], x[self.cols[r * self.k + i] as usize]);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Padding overhead: stored entries / real nnz.
+    pub fn pad_ratio(&self, nnz: usize) -> f64 {
+        if nnz == 0 {
+            1.0
+        } else {
+            (self.nrows * self.k) as f64 / nnz as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::coo::CooMatrix;
+
+    #[test]
+    fn dense_matvec() {
+        let mut d = DenseMatrix::zeros(2, 3);
+        d.set(0, 0, 1.0f32);
+        d.set(1, 2, 2.0);
+        assert_eq!(d.matvec(&[1.0, 1.0, 10.0]), vec![1.0, 20.0]);
+    }
+
+    #[test]
+    fn ell_roundtrip_spmv() {
+        let coo = CooMatrix::from_triples(
+            3,
+            4,
+            vec![(0, 0, 1.0f64), (0, 3, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 1, 5.0), (2, 2, 6.0)],
+        );
+        let csr = CsrMatrix::from_coo(&coo);
+        let ell = EllMatrix::from_csr(&csr, 1, 8);
+        assert_eq!(ell.k, 3); // max row nnz
+        assert_eq!(ell.nrows, 8); // padded to multiple of 8
+        let x = [1.0, 10.0, 100.0, 1000.0];
+        assert_eq!(ell.spmv(&x), csr.spmv(&x));
+    }
+
+    #[test]
+    fn ell_k_min_respected() {
+        let coo = CooMatrix::from_triples(2, 2, vec![(0, 0, 1.0f32)]);
+        let ell = EllMatrix::from_csr(&CsrMatrix::from_coo(&coo), 16, 1);
+        assert_eq!(ell.k, 16);
+        assert!(ell.pad_ratio(1) >= 16.0);
+    }
+
+    #[test]
+    fn ell_padding_is_neutral() {
+        // Padding points at column 0 with value 0 -> contributes nothing
+        // even when x[0] != 0.
+        let coo = CooMatrix::from_triples(2, 2, vec![(0, 1, 5.0f64), (1, 0, 7.0)]);
+        let ell = EllMatrix::from_csr(&CsrMatrix::from_coo(&coo), 4, 1);
+        assert_eq!(ell.spmv(&[100.0, 1.0]), vec![5.0, 700.0]);
+    }
+}

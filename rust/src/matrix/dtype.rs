@@ -1,0 +1,194 @@
+//! Element types supported by SparseP.
+//!
+//! The paper evaluates six data types — int8, int16, int32, int64, fp32,
+//! fp64 — because the UPMEM DPU has no FPU and only an 8x8-bit hardware
+//! multiplier, so the *choice of type changes the instruction count per
+//! multiply-accumulate* dramatically. [`DType`] is the runtime tag the
+//! simulator's cost model keys on; [`SpElem`] is the compile-time trait
+//! the kernels are generic over.
+
+/// Runtime tag for the six element types of the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    I8,
+    I16,
+    I32,
+    I64,
+    F32,
+    F64,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I16 => 2,
+            DType::I32 => 4,
+            DType::I64 => 8,
+            DType::F32 => 4,
+            DType::F64 => 8,
+        }
+    }
+
+    /// All six types, in the paper's order.
+    pub fn all() -> [DType; 6] {
+        [DType::I8, DType::I16, DType::I32, DType::I64, DType::F32, DType::F64]
+    }
+
+    /// Paper-style name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::I8 => "int8",
+            DType::I16 => "int16",
+            DType::I32 => "int32",
+            DType::I64 => "int64",
+            DType::F32 => "fp32",
+            DType::F64 => "fp64",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DType> {
+        Some(match s {
+            "int8" | "i8" => DType::I8,
+            "int16" | "i16" => DType::I16,
+            "int32" | "i32" => DType::I32,
+            "int64" | "i64" => DType::I64,
+            "fp32" | "f32" | "float" => DType::F32,
+            "fp64" | "f64" | "double" => DType::F64,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Element trait for SpMV kernels.
+///
+/// Deliberately smaller than `num_traits::Num`: kernels only ever need
+/// zero, addition, multiplication and f64 conversion (for verification and
+/// MatrixMarket I/O). Implementations exist exactly for the paper's six
+/// types.
+pub trait SpElem: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
+    const DTYPE: DType;
+
+    fn zero() -> Self;
+    fn one() -> Self;
+    fn add(self, rhs: Self) -> Self;
+    fn mul(self, rhs: Self) -> Self;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+
+    /// Fused-style multiply-accumulate: `acc + a*b`. Kernels use this so
+    /// that integer types get wrapping semantics (matching what the DPU's
+    /// C code would do) and floats get the obvious thing.
+    #[inline]
+    fn mac(acc: Self, a: Self, b: Self) -> Self {
+        acc.add(a.mul(b))
+    }
+}
+
+macro_rules! impl_int {
+    ($t:ty, $tag:expr) => {
+        impl SpElem for $t {
+            const DTYPE: DType = $tag;
+            #[inline]
+            fn zero() -> Self {
+                0
+            }
+            #[inline]
+            fn one() -> Self {
+                1
+            }
+            #[inline]
+            fn add(self, rhs: Self) -> Self {
+                self.wrapping_add(rhs)
+            }
+            #[inline]
+            fn mul(self, rhs: Self) -> Self {
+                self.wrapping_mul(rhs)
+            }
+            #[inline]
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+            #[inline]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+        }
+    };
+}
+
+macro_rules! impl_float {
+    ($t:ty, $tag:expr) => {
+        impl SpElem for $t {
+            const DTYPE: DType = $tag;
+            #[inline]
+            fn zero() -> Self {
+                0.0
+            }
+            #[inline]
+            fn one() -> Self {
+                1.0
+            }
+            #[inline]
+            fn add(self, rhs: Self) -> Self {
+                self + rhs
+            }
+            #[inline]
+            fn mul(self, rhs: Self) -> Self {
+                self * rhs
+            }
+            #[inline]
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+            #[inline]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+        }
+    };
+}
+
+impl_int!(i8, DType::I8);
+impl_int!(i16, DType::I16);
+impl_int!(i32, DType::I32);
+impl_int!(i64, DType::I64);
+impl_float!(f32, DType::F32);
+impl_float!(f64, DType::F64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_names() {
+        assert_eq!(DType::I8.size_bytes(), 1);
+        assert_eq!(DType::F64.size_bytes(), 8);
+        for d in DType::all() {
+            assert_eq!(DType::from_name(d.name()), Some(d));
+        }
+        assert_eq!(DType::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn mac_semantics() {
+        assert_eq!(<i32 as SpElem>::mac(1, 2, 3), 7);
+        assert_eq!(<f64 as SpElem>::mac(0.5, 2.0, 0.25), 1.0);
+        // Integer overflow wraps instead of panicking (DPU C semantics).
+        assert_eq!(<i8 as SpElem>::mac(0, 127, 2), (127i8).wrapping_mul(2));
+    }
+
+    #[test]
+    fn dtype_constants() {
+        assert_eq!(<i16 as SpElem>::DTYPE, DType::I16);
+        assert_eq!(<f32 as SpElem>::DTYPE, DType::F32);
+        assert_eq!(<f32 as SpElem>::one().to_f64(), 1.0);
+    }
+}

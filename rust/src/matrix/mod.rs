@@ -1,0 +1,89 @@
+//! Sparse matrix substrate.
+//!
+//! SparseP supports the four most popular compressed formats — CSR, COO,
+//! BCSR and BCOO — over six element types. This module provides those
+//! formats, conversions between them, MatrixMarket I/O, synthetic matrix
+//! generators matching the paper's two matrix classes (regular /
+//! scale-free), and the sparsity statistics the paper's Table 2 reports.
+
+pub mod dtype;
+pub mod coo;
+pub mod csr;
+pub mod bcsr;
+pub mod bcoo;
+pub mod dense;
+pub mod mtx;
+pub mod generate;
+pub mod stats;
+
+pub use bcoo::BcooMatrix;
+pub use bcsr::BcsrMatrix;
+pub use coo::CooMatrix;
+pub use csr::CsrMatrix;
+pub use dtype::{DType, SpElem};
+pub use stats::MatrixStats;
+
+/// The four compressed formats of the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Format {
+    Csr,
+    Coo,
+    Bcsr,
+    Bcoo,
+}
+
+impl Format {
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Csr => "CSR",
+            Format::Coo => "COO",
+            Format::Bcsr => "BCSR",
+            Format::Bcoo => "BCOO",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Format> {
+        Some(match s.to_ascii_uppercase().as_str() {
+            "CSR" => Format::Csr,
+            "COO" => Format::Coo,
+            "BCSR" => Format::Bcsr,
+            "BCOO" => Format::Bcoo,
+            _ => return None,
+        })
+    }
+
+    /// Whether this is one of the block formats.
+    pub fn is_blocked(self) -> bool {
+        matches!(self, Format::Bcsr | Format::Bcoo)
+    }
+
+    pub fn all() -> [Format; 4] {
+        [Format::Csr, Format::Coo, Format::Bcsr, Format::Bcoo]
+    }
+}
+
+impl std::fmt::Display for Format {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_names_roundtrip() {
+        for f in Format::all() {
+            assert_eq!(Format::from_name(f.name()), Some(f));
+        }
+        assert_eq!(Format::from_name("csr"), Some(Format::Csr));
+        assert_eq!(Format::from_name("ELL"), None);
+    }
+
+    #[test]
+    fn blockedness() {
+        assert!(!Format::Csr.is_blocked());
+        assert!(Format::Bcoo.is_blocked());
+    }
+}

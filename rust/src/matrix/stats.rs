@@ -1,0 +1,121 @@
+//! Sparsity statistics — the columns of the paper's matrix-suite table
+//! (Table 2): rows, columns, non-zeros, nnz-per-row mean / stddev / CV,
+//! density. The CV of nnz/row is the statistic the paper uses to split
+//! the suite into regular vs scale-free matrices and to explain when
+//! nnz-balanced schemes beat row-balanced ones.
+
+use super::coo::CooMatrix;
+use super::dtype::SpElem;
+use crate::util::{cv, mean, stddev};
+
+/// Summary statistics of a sparse matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixStats {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub nnz: usize,
+    pub nnz_per_row_mean: f64,
+    pub nnz_per_row_stddev: f64,
+    /// Coefficient of variation of nnz/row; > ~0.5 = "scale-free" class.
+    pub nnz_per_row_cv: f64,
+    pub max_row_nnz: usize,
+    pub min_row_nnz: usize,
+    pub empty_rows: usize,
+    /// nnz / (nrows * ncols).
+    pub density: f64,
+}
+
+impl MatrixStats {
+    pub fn of<T: SpElem>(m: &CooMatrix<T>) -> MatrixStats {
+        let counts = m.row_counts();
+        let cf: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+        MatrixStats {
+            nrows: m.nrows(),
+            ncols: m.ncols(),
+            nnz: m.nnz(),
+            nnz_per_row_mean: mean(&cf),
+            nnz_per_row_stddev: stddev(&cf),
+            nnz_per_row_cv: cv(&cf),
+            max_row_nnz: counts.iter().copied().max().unwrap_or(0),
+            min_row_nnz: counts.iter().copied().min().unwrap_or(0),
+            empty_rows: counts.iter().filter(|&&c| c == 0).count(),
+            density: if m.nrows() * m.ncols() == 0 {
+                0.0
+            } else {
+                m.nnz() as f64 / (m.nrows() as f64 * m.ncols() as f64)
+            },
+        }
+    }
+
+    /// The paper's two-way classification.
+    pub fn class(&self) -> &'static str {
+        if self.nnz_per_row_cv > 0.5 {
+            "scale-free"
+        } else {
+            "regular"
+        }
+    }
+
+    /// One table row, formatted like the paper's Table 2.
+    pub fn table_row(&self, name: &str) -> String {
+        format!(
+            "{:<10} {:>9} {:>9} {:>10} {:>8.1} {:>8.2} {:>6.2} {:>11}",
+            name,
+            self.nrows,
+            self.ncols,
+            self.nnz,
+            self.nnz_per_row_mean,
+            self.nnz_per_row_stddev,
+            self.nnz_per_row_cv,
+            self.class()
+        )
+    }
+
+    pub fn table_header() -> String {
+        format!(
+            "{:<10} {:>9} {:>9} {:>10} {:>8} {:>8} {:>6} {:>11}",
+            "matrix", "rows", "cols", "nnz", "nnz/row", "stddev", "cv", "class"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate;
+
+    #[test]
+    fn stats_of_banded() {
+        let m = generate::banded::<f64>(100, 4, 1);
+        let s = MatrixStats::of(&m);
+        assert_eq!(s.nnz, 400);
+        assert_eq!(s.nnz_per_row_mean, 4.0);
+        assert_eq!(s.nnz_per_row_cv, 0.0);
+        assert_eq!(s.class(), "regular");
+        assert_eq!(s.empty_rows, 0);
+    }
+
+    #[test]
+    fn stats_of_scale_free() {
+        let m = generate::scale_free::<f64>(2048, 2048, 8, 0.6, 2);
+        let s = MatrixStats::of(&m);
+        assert_eq!(s.class(), "scale-free");
+        assert!(s.max_row_nnz > 4 * s.min_row_nnz.max(1));
+    }
+
+    #[test]
+    fn density() {
+        let m = generate::diagonal::<f32>(64, 1);
+        let s = MatrixStats::of(&m);
+        assert!((s.density - 1.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_row_formats() {
+        let m = generate::banded::<f64>(10, 2, 1);
+        let s = MatrixStats::of(&m);
+        let row = s.table_row("band");
+        assert!(row.contains("band"));
+        assert!(row.contains("regular"));
+    }
+}

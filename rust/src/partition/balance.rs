@@ -1,0 +1,181 @@
+//! Load-balanced range splitting — the primitive under both the
+//! across-DPU partitioners and the across-tasklet work division.
+//!
+//! SparseP's central software lesson (recommendation #1) is that the
+//! *unit of balance* matters: splitting rows evenly balances loop
+//! iterations, splitting by non-zeros balances multiply-accumulates, and
+//! for blocked formats splitting by blocks balances index overhead. All
+//! three reduce to: split a weighted sequence into `k` contiguous chunks
+//! minimizing the maximum chunk weight.
+
+use std::ops::Range;
+
+/// Split `n` items into `k` contiguous chunks of (nearly) equal count.
+/// Chunks may be empty when `k > n`.
+pub fn split_even(n: usize, k: usize) -> Vec<Range<usize>> {
+    assert!(k > 0);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Split items with the given non-negative `weights` into `k` contiguous
+/// chunks such that chunk weights are as even as a greedy prefix scan can
+/// make them (each chunk closes once it reaches the ideal share). This is
+/// the paper's "balance nnz across DPUs/tasklets at row granularity"
+/// scheme: a single heavy item can still dominate a chunk, which is
+/// exactly the imbalance pathology the paper measures on scale-free
+/// matrices.
+pub fn split_weighted(weights: &[usize], k: usize) -> Vec<Range<usize>> {
+    assert!(k > 0);
+    let n = weights.len();
+    let total: usize = weights.iter().sum();
+    if total == 0 {
+        return split_even(n, k);
+    }
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    let mut consumed = 0usize;
+    for chunk in 0..k {
+        let remaining_chunks = k - chunk;
+        let target = (total - consumed).div_ceil(remaining_chunks);
+        let mut end = start;
+        let mut w = 0usize;
+        while end < n && (w == 0 || w + weights[end] <= target || remaining_chunks == 1) {
+            // Last chunk takes everything left; otherwise stop before
+            // overshooting the per-chunk target (but always take >= 1).
+            w += weights[end];
+            end += 1;
+            if remaining_chunks == 1 {
+                continue;
+            }
+            if w >= target {
+                break;
+            }
+        }
+        // Make sure the tail can still be covered: leave at least one
+        // item per remaining chunk only if items remain.
+        out.push(start..end);
+        consumed += w;
+        start = end;
+    }
+    // Any leftovers (possible only from rounding) go to the last chunk.
+    if start < n {
+        let last = out.last_mut().unwrap();
+        *last = last.start..n;
+    }
+    debug_assert_eq!(out.len(), k);
+    debug_assert_eq!(out.last().unwrap().end, n);
+    out
+}
+
+/// Split a total element count into `k` contiguous element ranges of
+/// (nearly) equal size — the element-granularity split used by `COO.nnz`,
+/// which may cut *inside* a row (requiring synchronization on the shared
+/// boundary rows).
+pub fn split_elements(nnz: usize, k: usize) -> Vec<Range<usize>> {
+    split_even(nnz, k)
+}
+
+/// Maximum chunk weight / ideal chunk weight: 1.0 = perfect balance.
+pub fn imbalance(weights: &[usize], chunks: &[Range<usize>]) -> f64 {
+    let total: usize = weights.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let ideal = total as f64 / chunks.len() as f64;
+    let max = chunks
+        .iter()
+        .map(|r| weights[r.clone()].iter().sum::<usize>())
+        .max()
+        .unwrap_or(0);
+    max as f64 / ideal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_even_covers_all() {
+        for (n, k) in [(10, 3), (3, 10), (0, 4), (100, 7)] {
+            let chunks = split_even(n, k);
+            assert_eq!(chunks.len(), k);
+            assert_eq!(chunks[0].start, 0);
+            assert_eq!(chunks.last().unwrap().end, n);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            // Sizes differ by at most 1.
+            let sizes: Vec<usize> = chunks.iter().map(|r| r.len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn split_weighted_balances_skewed_input() {
+        // One heavy row among light ones.
+        let mut w = vec![1usize; 100];
+        w[0] = 50;
+        let chunks = split_weighted(&w, 4);
+        assert_eq!(chunks.len(), 4);
+        assert_eq!(chunks.last().unwrap().end, 100);
+        let imb = imbalance(&w, &chunks);
+        // Greedy split should get within 40% of ideal here.
+        assert!(imb < 1.4, "imbalance {imb}");
+    }
+
+    #[test]
+    fn split_weighted_handles_uniform() {
+        let w = vec![3usize; 64];
+        let chunks = split_weighted(&w, 8);
+        for c in &chunks {
+            assert_eq!(c.len(), 8);
+        }
+        assert!((imbalance(&w, &chunks) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_weighted_zero_weights() {
+        let w = vec![0usize; 10];
+        let chunks = split_weighted(&w, 3);
+        assert_eq!(chunks.last().unwrap().end, 10);
+    }
+
+    #[test]
+    fn split_weighted_more_chunks_than_items() {
+        let w = vec![5usize, 7];
+        let chunks = split_weighted(&w, 5);
+        assert_eq!(chunks.len(), 5);
+        assert_eq!(chunks.last().unwrap().end, 2);
+        // All items covered exactly once.
+        let covered: usize = chunks.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, 2);
+    }
+
+    #[test]
+    fn heavy_single_item_dominates() {
+        // The pathology the paper observes: one mega-row cannot be split
+        // at row granularity.
+        let mut w = vec![1usize; 10];
+        w[5] = 1000;
+        let chunks = split_weighted(&w, 4);
+        let imb = imbalance(&w, &chunks);
+        assert!(imb > 3.0, "row-granularity split cannot fix this: {imb}");
+    }
+
+    #[test]
+    fn split_elements_is_even() {
+        let chunks = split_elements(1000, 16);
+        assert!(chunks.iter().all(|r| r.len() == 62 || r.len() == 63));
+    }
+}

@@ -1,0 +1,21 @@
+//! Matrix partitioning across PIM cores.
+//!
+//! SparseP's two families (paper contribution #2):
+//!
+//! * **1D** ([`one_d`]): the matrix is split horizontally; each DPU gets
+//!   whole rows and the *entire* input vector is broadcast to every DPU.
+//!   Computation balance is controlled by the row/nnz/block balancing
+//!   schemes; the broadcast is the scaling wall.
+//! * **2D** ([`two_d`]): the matrix is split into tiles; each DPU gets a
+//!   tile and only the matching *slice* of the input vector, trading
+//!   balance and partial-result merging for lower transfer volume.
+//!
+//! [`balance`] holds the weighted-range splitting shared by both and by
+//! the tasklet-level balancers inside the kernels.
+
+pub mod balance;
+pub mod one_d;
+pub mod two_d;
+
+pub use one_d::{OneDPartitioner, OneDPartition, DpuBalance};
+pub use two_d::{TwoDPartitioner, TwoDPartition, TwoDScheme};

@@ -1,0 +1,153 @@
+//! PIM system topology and configuration.
+
+use super::calib;
+
+/// Configuration of a simulated UPMEM-class PIM system.
+///
+/// Defaults mirror the paper's testbed: 350 MHz DPUs, 64 KB WRAM, 64 MB
+/// MRAM per DPU, 64 DPUs per rank, up to 2,560 DPUs. All parameters are
+/// overridable so the "suggestions for hardware designers" experiments
+/// (e.g. a faster bus, more banks per core) can be explored.
+#[derive(Clone, Debug)]
+pub struct PimConfig {
+    /// Total number of DPUs allocated to the kernel.
+    pub n_dpus: usize,
+    /// DPUs per rank (transfer parallelism granularity).
+    pub dpus_per_rank: usize,
+    /// Tasklets (hardware threads) launched per DPU.
+    pub tasklets: usize,
+    /// DPU clock, Hz.
+    pub freq_hz: f64,
+    /// WRAM bytes per DPU.
+    pub wram_bytes: usize,
+    /// MRAM bytes per DPU.
+    pub mram_bytes: usize,
+    /// Scale factor on host<->PIM bus bandwidth (1.0 = the real UPMEM
+    /// bus; >1 models the paper's "optimize broadcast/gather" hardware
+    /// suggestions).
+    pub bus_scale: f64,
+    /// If true, concurrent MRAM accesses by different tasklets are
+    /// serialized (the real UPMEM behaviour). Setting this to false
+    /// models the paper's "subarray-level parallelism" hardware
+    /// suggestion (SALP [23]) and is used by the ablation bench.
+    pub serialize_mram: bool,
+}
+
+impl Default for PimConfig {
+    fn default() -> Self {
+        PimConfig {
+            n_dpus: 64,
+            dpus_per_rank: calib::DPUS_PER_RANK,
+            tasklets: 16,
+            freq_hz: calib::DPU_FREQ_HZ,
+            wram_bytes: calib::WRAM_BYTES,
+            mram_bytes: calib::MRAM_BYTES,
+            bus_scale: 1.0,
+            serialize_mram: true,
+        }
+    }
+}
+
+impl PimConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_dpus > 0, "need at least one DPU");
+        anyhow::ensure!(
+            self.n_dpus <= calib::MAX_SYSTEM_DPUS,
+            "n_dpus {} exceeds system maximum {}",
+            self.n_dpus,
+            calib::MAX_SYSTEM_DPUS
+        );
+        anyhow::ensure!(
+            (1..=calib::MAX_TASKLETS).contains(&self.tasklets),
+            "tasklets must be in 1..={}",
+            calib::MAX_TASKLETS
+        );
+        anyhow::ensure!(self.dpus_per_rank > 0, "dpus_per_rank");
+        anyhow::ensure!(self.bus_scale > 0.0, "bus_scale");
+        Ok(())
+    }
+
+    /// Number of (possibly partial) ranks spanned by the allocation.
+    pub fn n_ranks(&self) -> usize {
+        crate::util::ceil_div(self.n_dpus, self.dpus_per_rank)
+    }
+
+    /// Seconds per DPU cycle.
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / self.freq_hz
+    }
+}
+
+/// A simulated PIM system: configuration + derived topology.
+///
+/// The system is stateless between kernels (the coordinator owns data
+/// placement); it exists to carry the configuration and to evaluate the
+/// timing/energy models.
+#[derive(Clone, Debug, Default)]
+pub struct PimSystem {
+    pub cfg: PimConfig,
+}
+
+impl PimSystem {
+    pub fn new(cfg: PimConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        Ok(PimSystem { cfg })
+    }
+
+    /// Shorthand: default config with `n` DPUs.
+    pub fn with_dpus(n: usize) -> Self {
+        PimSystem { cfg: PimConfig { n_dpus: n, ..Default::default() } }
+    }
+
+    /// Shorthand: single DPU with `t` tasklets (the paper's §"one DPU"
+    /// analysis).
+    pub fn single_dpu(t: usize) -> Self {
+        PimSystem { cfg: PimConfig { n_dpus: 1, tasklets: t, ..Default::default() } }
+    }
+
+    pub fn n_dpus(&self) -> usize {
+        self.cfg.n_dpus
+    }
+
+    pub fn tasklets(&self) -> usize {
+        self.cfg.tasklets
+    }
+
+    /// Peak GFLOP/s of the allocated DPUs for a data type.
+    pub fn peak_gflops(&self, dt: crate::matrix::DType) -> f64 {
+        calib::dpu_peak_gflops(dt) * self.cfg.n_dpus as f64 * self.cfg.freq_hz
+            / calib::DPU_FREQ_HZ
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        PimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(PimConfig { n_dpus: 0, ..Default::default() }.validate().is_err());
+        assert!(PimConfig { n_dpus: 99999, ..Default::default() }.validate().is_err());
+        assert!(PimConfig { tasklets: 0, ..Default::default() }.validate().is_err());
+        assert!(PimConfig { tasklets: 25, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn rank_math() {
+        assert_eq!(PimSystem::with_dpus(64).cfg.n_ranks(), 1);
+        assert_eq!(PimSystem::with_dpus(65).cfg.n_ranks(), 2);
+        assert_eq!(PimSystem::with_dpus(2560).cfg.n_ranks(), 40);
+    }
+
+    #[test]
+    fn peak_scales_with_dpus() {
+        let a = PimSystem::with_dpus(64).peak_gflops(crate::matrix::DType::F32);
+        let b = PimSystem::with_dpus(128).peak_gflops(crate::matrix::DType::F32);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,251 @@
+//! Calibration constants for the UPMEM PIM model.
+//!
+//! Every number in this file is an architecture-level parameter of the
+//! real UPMEM system, taken from the PrIM characterization papers
+//! (Gómez-Luna et al., "Benchmarking a New Paradigm: An Experimental
+//! Analysis of a Real Processing-in-Memory Architecture", 2021 — refs
+//! [9, 10] of the SparseP abstract), the UPMEM SDK documentation, and the
+//! SparseP paper itself. The simulator is *analytic*: kernels count
+//! operations and the model in [`super::dpu`] turns counts into cycles
+//! using these constants. The paper's conclusions depend on the *ratios*
+//! between these quantities (pipeline vs DMA vs bus), not their third
+//! significant digit.
+
+/// DPU clock frequency in Hz (UPMEM P21 silicon: 350 MHz).
+pub const DPU_FREQ_HZ: f64 = 350.0e6;
+
+/// Pipeline dispatch interval: the DPU core is a 14-stage fine-grained
+/// multithreaded in-order pipeline in which the *same* tasklet can
+/// dispatch a new instruction only every 11 cycles ("revolver"
+/// scheduling). Consequence (PrIM §3.1.1): single-tasklet IPC = 1/11, and
+/// the pipeline reaches its 1-instruction/cycle peak only with >= 11
+/// active tasklets — the saturation knee of the paper's Fig. 5.
+pub const DISPATCH_INTERVAL: u64 = 11;
+
+/// Maximum hardware tasklets (threads) per DPU.
+pub const MAX_TASKLETS: usize = 24;
+
+/// WRAM (working SRAM scratchpad) per DPU, bytes.
+pub const WRAM_BYTES: usize = 64 * 1024;
+
+/// MRAM (DRAM bank) per DPU, bytes.
+pub const MRAM_BYTES: usize = 64 * 1024 * 1024;
+
+/// DPUs per rank (one PIM DIMM rank = 64 DPUs in the UPMEM system).
+pub const DPUS_PER_RANK: usize = 64;
+
+/// Full-system DPU count of the paper's testbed (20 DIMMs, 2560 DPUs;
+/// 2432 usable in their setup — we expose the nominal 2560).
+pub const MAX_SYSTEM_DPUS: usize = 2560;
+
+// ---------------------------------------------------------------------
+// MRAM <-> WRAM DMA model (PrIM §3.2: latency grows linearly with
+// transfer size; the DMA engine is shared by all tasklets of a DPU, so
+// concurrent accesses from different tasklets are *serialized* — the
+// hardware fact behind the paper's "fine-grained locking does not help"
+// recommendation #1 for hardware designers).
+// ---------------------------------------------------------------------
+
+/// Latency of one MRAM DMA transfer as seen by the *issuing tasklet*,
+/// cycles (setup + row access + first word). While one tasklet waits,
+/// the pipeline keeps running other tasklets — latency is overlappable;
+/// engine occupancy (below) is not.
+pub const MRAM_DMA_FIXED_CYCLES: u64 = 77;
+
+/// DMA-engine occupancy per transfer, cycles: the arbitration + burst
+/// setup time during which the single per-DPU DMA engine can serve no
+/// one else. Concurrent accesses by different tasklets serialize on
+/// this (PrIM §3.2) — the quantity that makes SpMV's per-element x
+/// gathers memory-bound for narrow types.
+pub const MRAM_DMA_ENGINE_CYCLES: u64 = 20;
+
+/// Streaming cost per byte once a DMA burst is running, cycles/byte.
+/// 0.5 cycles/byte = 2 B/cycle = 700 MB/s at 350 MHz, the PrIM-measured
+/// large-transfer MRAM read bandwidth.
+pub const MRAM_DMA_CYCLES_PER_BYTE: f64 = 0.5;
+
+/// Minimum MRAM transfer granularity, bytes (UPMEM DMA: 8-byte aligned,
+/// 8-byte minimum). An SpMV gather of a 4-byte x[col] still moves 8 bytes.
+pub const MRAM_MIN_TRANSFER: usize = 8;
+
+/// Maximum single DMA transfer size, bytes (UPMEM SDK: 2048).
+pub const MRAM_MAX_TRANSFER: usize = 2048;
+
+// ---------------------------------------------------------------------
+// Intra-DPU synchronization costs (UPMEM SDK mutex/barrier primitives,
+// measured in PrIM/SynCron-style microbenchmarks).
+// ---------------------------------------------------------------------
+
+/// Instructions to acquire an uncontended mutex.
+pub const MUTEX_ACQUIRE_INSTRS: u64 = 7;
+
+/// Instructions to release a mutex.
+pub const MUTEX_RELEASE_INSTRS: u64 = 5;
+
+/// Fixed cycles for a barrier among T tasklets is
+/// `BARRIER_BASE_CYCLES + T * BARRIER_PER_TASKLET_CYCLES`.
+pub const BARRIER_BASE_CYCLES: u64 = 20;
+pub const BARRIER_PER_TASKLET_CYCLES: u64 = 6;
+
+// ---------------------------------------------------------------------
+// Host <-> PIM transfer model (PrIM §3.3). All transfers traverse the
+// narrow off-chip DDR4 bus; the UPMEM runtime copies via the CPU. Rates
+// in GB/s; latency is the fixed software+bus overhead per transfer call.
+// ---------------------------------------------------------------------
+
+/// Peak aggregate host->PIM bandwidth for *parallel* transfers
+/// (different data to each DPU), GB/s. PrIM measures ~6.68 GB/s with all
+/// ranks in flight.
+pub const CPU_TO_DPU_PEAK_GBS: f64 = 6.68;
+
+/// Peak aggregate PIM->host bandwidth (gather), GB/s (PrIM: ~4.74).
+pub const DPU_TO_CPU_PEAK_GBS: f64 = 4.74;
+
+/// Per-rank sustained bandwidth, GB/s. Aggregate scales with the number
+/// of ranks in flight until it hits the peak above.
+pub const CPU_TO_DPU_RANK_GBS: f64 = 0.42;
+pub const DPU_TO_CPU_RANK_GBS: f64 = 0.30;
+
+/// Broadcast (same buffer to every DPU) sustains a higher aggregate rate
+/// because the source buffer stays hot in the CPU caches (PrIM: ~16.88
+/// GB/s). The *per-bank* bytes are unchanged — which is exactly why 1D
+/// SpMV, which broadcasts the whole input vector to every DPU, stops
+/// scaling (paper's hardware recommendation #2).
+pub const BROADCAST_PEAK_GBS: f64 = 16.88;
+pub const BROADCAST_RANK_GBS: f64 = 1.05;
+
+/// Fixed software overhead per transfer call (driver + rank setup), sec.
+pub const TRANSFER_LATENCY_S: f64 = 20.0e-6;
+
+// ---------------------------------------------------------------------
+// Arithmetic cost model: instructions per multiply-accumulate, by type.
+//
+// The DPU has no FPU and only an 8x8-bit hardware multiplier, so wider
+// multiplies and all floating-point are software-emulated by the
+// compiler's runtime (PrIM §3.1.2, Fig. 7): throughput drops sharply
+// from int8 to fp64. The numbers below are effective instruction counts
+// per a*b+c including operand shuffling, derived from the PrIM
+// arithmetic-throughput microbenchmarks (ops/s at 350 MHz with a full
+// pipeline ~= 350e6 / instrs_per_op).
+// ---------------------------------------------------------------------
+
+use crate::matrix::DType;
+
+/// Instructions for one multiply-accumulate of the given type.
+pub fn mac_instrs(dt: DType) -> u64 {
+    match dt {
+        DType::I8 => 4,   // hw 8x8 multiplier + add
+        DType::I16 => 6,  // 2 partial products
+        DType::I32 => 12, // 4 partial products + carries
+        DType::I64 => 28, // 16 partial products + carries
+        DType::F32 => 52, // sw float: unpack, align, multiply, normalize
+        DType::F64 => 116,
+    }
+}
+
+/// Instructions for one addition of the given type (used by merge-style
+/// kernel phases and the tree reductions of 2D kernels).
+pub fn add_instrs(dt: DType) -> u64 {
+    match dt {
+        DType::I8 | DType::I16 | DType::I32 => 1,
+        DType::I64 => 2,
+        DType::F32 => 20,
+        DType::F64 => 42,
+    }
+}
+
+/// Per-element loop overhead of an SpMV inner loop (index load from the
+/// streamed WRAM tile, pointer bump, loop branch), instructions.
+pub const ELEM_LOOP_INSTRS: u64 = 6;
+
+/// Per-row overhead (row setup, accumulator init, y store bookkeeping).
+pub const ROW_LOOP_INSTRS: u64 = 12;
+
+/// Per-block overhead of the BCSR/BCOO kernels (block header decode,
+/// base-pointer computation).
+pub const BLOCK_LOOP_INSTRS: u64 = 14;
+
+// ---------------------------------------------------------------------
+// Energy model (J). UPMEM power from the vendor's DIMM specs; CPU/GPU
+// comparison points use TDP-style figures like the paper's Table 3.
+// ---------------------------------------------------------------------
+
+/// Active power of one DPU core + its bank interface, watts.
+/// (~23 W per 128-DPU DIMM => ~0.18 W/DPU at full activity.)
+pub const DPU_ACTIVE_WATTS: f64 = 0.18;
+
+/// Idle power of one DPU, watts.
+pub const DPU_IDLE_WATTS: f64 = 0.02;
+
+/// Energy per byte moved over the host<->PIM bus, joules (DDR4 access +
+/// copy overheads, ~15 pJ/bit).
+pub const BUS_ENERGY_J_PER_BYTE: f64 = 15.0e-12 * 8.0;
+
+/// Host-side merge bandwidth for reducing 2D partial results, GB/s
+/// (single-socket streaming add over gathered buffers).
+pub const HOST_MERGE_GBS: f64 = 8.0;
+
+/// Host CPU package power while driving transfers/merge, watts.
+pub const HOST_ACTIVE_WATTS: f64 = 105.0;
+
+/// Paper's CPU comparison point (Intel Xeon Silver 4110-class TDP).
+pub const CPU_TDP_WATTS: f64 = 85.0;
+
+/// Paper's GPU comparison point (NVIDIA Tesla V100 TDP).
+pub const GPU_TDP_WATTS: f64 = 300.0;
+
+// ---------------------------------------------------------------------
+// Peak-performance figures for the fraction-of-peak analysis (paper's
+// Fig. 16 / Table 3: SpMV reaches ~51.7% of the UPMEM system's fp32
+// peak vs a few percent on CPU/GPU, because the PIM system's compute
+// peak is tiny relative to its aggregate bank bandwidth).
+// ---------------------------------------------------------------------
+
+/// Peak fp32 GFLOP/s of one DPU: 350 MHz / 52 instr per MAC * 2 flops.
+pub fn dpu_peak_gflops(dt: DType) -> f64 {
+    DPU_FREQ_HZ / mac_instrs(dt) as f64 * 2.0 / 1e9
+}
+
+/// Paper-testbed CPU peak (Xeon Silver 4110, 2 sockets: ~0.66 TFLOP/s
+/// fp32) and memory bandwidth (~23.1 GB/s measured stream).
+pub const CPU_PEAK_GFLOPS_F32: f64 = 660.0;
+pub const CPU_MEM_BW_GBS: f64 = 23.1;
+
+/// Paper-testbed GPU peak (V100: 14 TFLOP/s fp32, 900 GB/s HBM2).
+pub const GPU_PEAK_GFLOPS_F32: f64 = 14_000.0;
+pub const GPU_MEM_BW_GBS: f64 = 900.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_cost_ordering_matches_paper() {
+        // Fig. 7 ordering: int8 < int16 < int32 < int64 < fp32 < fp64.
+        let order = [DType::I8, DType::I16, DType::I32, DType::I64, DType::F32, DType::F64];
+        for w in order.windows(2) {
+            assert!(
+                mac_instrs(w[0]) < mac_instrs(w[1]),
+                "{:?} should cost less than {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn dpu_peak_is_small() {
+        // One DPU's fp32 peak is ~0.013 GFLOP/s: the whole point of the
+        // paper's fraction-of-peak argument.
+        let p = dpu_peak_gflops(DType::F32);
+        assert!(p > 0.005 && p < 0.05, "dpu fp32 peak {p}");
+        // 2560 DPUs: tens of GFLOP/s system peak, vs 14 TFLOP/s for V100.
+        assert!(p * (MAX_SYSTEM_DPUS as f64) < GPU_PEAK_GFLOPS_F32 / 100.0);
+    }
+
+    #[test]
+    fn broadcast_faster_than_parallel() {
+        assert!(BROADCAST_PEAK_GBS > CPU_TO_DPU_PEAK_GBS);
+        assert!(CPU_TO_DPU_PEAK_GBS > DPU_TO_CPU_PEAK_GBS);
+    }
+}

@@ -1,0 +1,328 @@
+//! DPU timing model.
+//!
+//! SparseP kernels execute *functionally* in plain Rust (producing exact
+//! numerical results) while counting, per tasklet, the quantities that
+//! determine time on the real DPU:
+//!
+//! * pipeline instructions issued,
+//! * MRAM DMA transfers and bytes (split into streaming and random),
+//! * mutex acquisitions and critical-section work,
+//! * barriers.
+//!
+//! This module turns those counts into cycles with the analytic model
+//! below, calibrated by [`super::calib`]. The model captures the three
+//! first-order behaviours the paper's single-DPU analysis rests on:
+//!
+//! 1. **Pipeline law**: a tasklet dispatches at most one instruction per
+//!    11 cycles, the pipeline at most one per cycle. With per-tasklet
+//!    instruction counts `I_t`: `pipeline = max(11 * max_t I_t, sum_t I_t)`.
+//!    This produces the paper's saturation knee at 11 tasklets and its
+//!    sensitivity to *imbalance across tasklets* (recommendation #1).
+//! 2. **DMA engine law**: the per-DPU DMA engine is shared; concurrent
+//!    MRAM accesses by different tasklets serialize on its *occupancy*:
+//!    `engine = sum_t (occ * n_t + bytes_t / 2)`. SpMV's per-element x
+//!    gathers make this the bound for narrow types (memory-bound SpMV),
+//!    while software-emulated fp32/fp64 MACs push the pipeline bound
+//!    above it (compute-bound) — the paper's Fig. 7 shape.
+//! 3. **Latency law**: the *issuing* tasklet additionally blocks for the
+//!    full DMA latency (77 cycles + burst), serial with its own
+//!    instructions: `latency = max_t (11 * I_t + lat_t)`. With few
+//!    tasklets there is nothing to overlap with, so this is what makes
+//!    single-tasklet SpMV slow.
+//! 4. **Critical-section law**: critical sections execute serially
+//!    across tasklets regardless of lock granularity, because their MRAM
+//!    accesses serialize anyway: `cs = sum_t cs_cycles_t`. This yields
+//!    the paper's "fine-grained locking does not beat coarse-grained"
+//!    finding.
+//!
+//! Total DPU time = `max(pipeline + barriers, engine, latency, cs)` —
+//! the resources overlap across tasklets, so the slowest one bounds the
+//! kernel.
+
+use super::arch::PimConfig;
+use super::calib;
+
+/// Per-tasklet execution counters, filled in by the kernels.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TaskletCounters {
+    /// Pipeline instructions issued (includes lock and loop overhead,
+    /// excludes DMA wait).
+    pub instrs: u64,
+    /// Number of MRAM<->WRAM DMA transfers issued.
+    pub dma_transfers: u64,
+    /// Total bytes moved by those transfers (already rounded up to the
+    /// 8-byte MRAM granularity by the caller).
+    pub dma_bytes: u64,
+    /// Mutex acquisitions (acquire+release instruction cost is *added by
+    /// the model*, not by the kernel).
+    pub lock_acqs: u64,
+    /// Instructions executed while holding a lock.
+    pub cs_instrs: u64,
+    /// DMA transfers issued while holding a lock.
+    pub cs_dma_transfers: u64,
+    /// DMA bytes moved while holding a lock.
+    pub cs_dma_bytes: u64,
+    /// Barrier participations.
+    pub barriers: u64,
+}
+
+impl TaskletCounters {
+    /// Record a DMA of `bytes` (rounded up to MRAM granularity).
+    #[inline]
+    pub fn dma(&mut self, bytes: usize) {
+        self.dma_transfers += 1;
+        self.dma_bytes += crate::util::round_up(bytes.max(1), calib::MRAM_MIN_TRANSFER) as u64;
+    }
+
+    /// Record a DMA performed inside a critical section.
+    #[inline]
+    pub fn cs_dma(&mut self, bytes: usize) {
+        self.cs_dma_transfers += 1;
+        self.cs_dma_bytes += crate::util::round_up(bytes.max(1), calib::MRAM_MIN_TRANSFER) as u64;
+        // CS DMA is also ordinary DMA (it occupies the engine).
+        self.dma(bytes);
+    }
+
+    /// Record a large streaming read split into MAX_TRANSFER chunks (the
+    /// kernels stream matrix data MRAM->WRAM in 2 KB tiles).
+    pub fn stream(&mut self, bytes: usize) {
+        let mut left = bytes;
+        while left > 0 {
+            let chunk = left.min(calib::MRAM_MAX_TRANSFER);
+            self.dma(chunk);
+            left -= chunk;
+        }
+    }
+
+    /// Engine occupancy: what serializes across tasklets.
+    fn dma_engine_cycles(&self) -> u64 {
+        self.dma_transfers * calib::MRAM_DMA_ENGINE_CYCLES
+            + (self.dma_bytes as f64 * calib::MRAM_DMA_CYCLES_PER_BYTE) as u64
+    }
+
+    /// Full latency as seen by this tasklet (overlappable with other
+    /// tasklets' compute, but serial within the tasklet's own path).
+    fn dma_latency_cycles(&self) -> u64 {
+        self.dma_transfers * calib::MRAM_DMA_FIXED_CYCLES
+            + (self.dma_bytes as f64 * calib::MRAM_DMA_CYCLES_PER_BYTE) as u64
+    }
+
+    fn cs_cycles(&self) -> u64 {
+        // Inside a critical section nothing overlaps: bill full latency.
+        self.cs_instrs
+            + self.cs_dma_transfers * calib::MRAM_DMA_FIXED_CYCLES
+            + (self.cs_dma_bytes as f64 * calib::MRAM_DMA_CYCLES_PER_BYTE) as u64
+    }
+
+    /// Total instructions including the lock-handling overhead.
+    fn instrs_with_locks(&self) -> u64 {
+        self.instrs
+            + self.lock_acqs * (calib::MUTEX_ACQUIRE_INSTRS + calib::MUTEX_RELEASE_INSTRS)
+    }
+}
+
+/// Cycle breakdown of one DPU's kernel execution.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DpuTiming {
+    /// Pipeline-bound cycles (including barrier overhead).
+    pub pipeline_cycles: u64,
+    /// Serialized-DMA-engine-bound cycles.
+    pub dma_cycles: u64,
+    /// Slowest single tasklet's own critical path (instructions at the
+    /// dispatch interval + its DMA latencies).
+    pub latency_cycles: u64,
+    /// Serialized-critical-section-bound cycles.
+    pub cs_cycles: u64,
+    /// Final cycles = max of the bounds (what the kernel run costs).
+    pub cycles: u64,
+}
+
+impl DpuTiming {
+    /// Which resource bounds this DPU?
+    pub fn bottleneck(&self) -> &'static str {
+        if self.cycles == self.pipeline_cycles {
+            "pipeline"
+        } else if self.cycles == self.dma_cycles {
+            "mram-dma"
+        } else if self.cycles == self.cs_cycles {
+            "critical-section"
+        } else {
+            "dma-latency"
+        }
+    }
+}
+
+/// Evaluate the timing model for one DPU given per-tasklet counters.
+pub fn dpu_time(cfg: &PimConfig, tasklets: &[TaskletCounters]) -> DpuTiming {
+    assert!(!tasklets.is_empty());
+    let max_instr = tasklets.iter().map(|t| t.instrs_with_locks()).max().unwrap_or(0);
+    let sum_instr: u64 = tasklets.iter().map(|t| t.instrs_with_locks()).sum();
+    let n_barriers = tasklets.iter().map(|t| t.barriers).max().unwrap_or(0);
+    let barrier_cycles = n_barriers
+        * (calib::BARRIER_BASE_CYCLES
+            + calib::BARRIER_PER_TASKLET_CYCLES * tasklets.len() as u64);
+
+    let pipeline_cycles =
+        (calib::DISPATCH_INTERVAL * max_instr).max(sum_instr) + barrier_cycles;
+
+    let dma_cycles: u64 = if cfg.serialize_mram {
+        // Real UPMEM: one DMA engine, occupancy serializes across
+        // tasklets.
+        tasklets.iter().map(|t| t.dma_engine_cycles()).sum()
+    } else {
+        // Hypothetical SALP-style hardware: banks/subarrays in parallel.
+        tasklets.iter().map(|t| t.dma_engine_cycles()).max().unwrap_or(0)
+    };
+
+    // Slowest tasklet's own serial path: dispatch slots + DMA latency.
+    let latency_cycles = tasklets
+        .iter()
+        .map(|t| calib::DISPATCH_INTERVAL * t.instrs_with_locks() + t.dma_latency_cycles())
+        .max()
+        .unwrap_or(0);
+
+    // Critical sections serialize across tasklets regardless of lock
+    // granularity (their MRAM accesses share the DMA engine and the
+    // UPMEM mutex is a WRAM atomic): total CS time is the sum.
+    let cs_cycles: u64 = tasklets.iter().map(|t| t.cs_cycles()).sum();
+
+    let cycles = pipeline_cycles.max(dma_cycles).max(latency_cycles).max(cs_cycles);
+    DpuTiming { pipeline_cycles, dma_cycles, latency_cycles, cs_cycles, cycles }
+}
+
+/// Convert DPU cycles to seconds under a config.
+pub fn cycles_to_s(cfg: &PimConfig, cycles: u64) -> f64 {
+    cycles as f64 * cfg.cycle_s()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn compute_only(instrs: u64) -> TaskletCounters {
+        TaskletCounters { instrs, ..Default::default() }
+    }
+
+    #[test]
+    fn single_tasklet_pays_dispatch_interval() {
+        let cfg = PimConfig::default();
+        let t = dpu_time(&cfg, &[compute_only(1000)]);
+        assert_eq!(t.pipeline_cycles, 11_000);
+        assert_eq!(t.bottleneck(), "pipeline");
+    }
+
+    #[test]
+    fn pipeline_saturates_at_11_tasklets() {
+        // The paper's Fig. 5 knee: with balanced work, 11+ tasklets reach
+        // 1 instr/cycle and more tasklets stop helping.
+        let cfg = PimConfig::default();
+        let total = 110_000u64;
+        let mut prev = u64::MAX;
+        for t in [1usize, 2, 4, 8, 11] {
+            let per = total / t as u64;
+            let counters = vec![compute_only(per); t];
+            let cycles = dpu_time(&cfg, &counters).cycles;
+            assert!(cycles < prev, "t={t} should be faster");
+            prev = cycles;
+        }
+        // 11 vs 16 tasklets: same total instructions, same time.
+        let c11 = dpu_time(&cfg, &vec![compute_only(total / 11); 11]).cycles;
+        let c16 = dpu_time(&cfg, &vec![compute_only(total / 16); 16]).cycles;
+        assert!((c16 as f64 - c11 as f64).abs() / (c11 as f64) < 0.02);
+    }
+
+    #[test]
+    fn imbalance_hurts() {
+        // Same total work, one hot tasklet -> slower (recommendation #1).
+        let cfg = PimConfig::default();
+        let balanced = vec![compute_only(1000); 16];
+        let mut skewed = vec![compute_only(500); 16];
+        skewed[0].instrs = 8500;
+        let b = dpu_time(&cfg, &balanced).cycles;
+        let s = dpu_time(&cfg, &skewed).cycles;
+        assert!(s > 5 * b, "skewed {s} vs balanced {b}");
+    }
+
+    #[test]
+    fn dma_serializes_across_tasklets() {
+        let cfg = PimConfig::default();
+        let mut t = TaskletCounters::default();
+        t.dma(64);
+        let one = dpu_time(&cfg, &[t]);
+        let four = dpu_time(&cfg, &[t; 4]);
+        assert_eq!(four.dma_cycles, 4 * one.dma_cycles);
+        // With SALP-style hardware they would overlap.
+        let salp_cfg = PimConfig { serialize_mram: false, ..Default::default() };
+        assert_eq!(dpu_time(&salp_cfg, &[t; 4]).dma_cycles, one.dma_cycles);
+    }
+
+    #[test]
+    fn min_transfer_granularity_applied() {
+        let mut t = TaskletCounters::default();
+        t.dma(4); // 4-byte gather still moves 8 bytes
+        assert_eq!(t.dma_bytes, 8);
+    }
+
+    #[test]
+    fn stream_splits_into_chunks() {
+        let mut t = TaskletCounters::default();
+        t.stream(5000);
+        assert_eq!(t.dma_transfers, 3); // 2048 + 2048 + 904
+        assert_eq!(t.dma_bytes, 2048 + 2048 + crate::util::round_up(904, 8) as u64);
+    }
+
+    #[test]
+    fn critical_sections_serialize() {
+        let cfg = PimConfig::default();
+        let mut t = TaskletCounters::default();
+        t.instrs = 100;
+        t.lock_acqs = 10;
+        t.cs_instrs = 50;
+        let timing = dpu_time(&cfg, &vec![t; 16]);
+        assert_eq!(timing.cs_cycles, 16 * 50);
+        // Lock overhead lands in the pipeline count.
+        let expected_instrs =
+            100 + 10 * (calib::MUTEX_ACQUIRE_INSTRS + calib::MUTEX_RELEASE_INSTRS);
+        assert!(timing.pipeline_cycles >= calib::DISPATCH_INTERVAL * expected_instrs);
+    }
+
+    #[test]
+    fn barrier_cost_scales_with_tasklets() {
+        let cfg = PimConfig::default();
+        let mut t = compute_only(10);
+        t.barriers = 2;
+        let c2 = dpu_time(&cfg, &vec![t; 2]).pipeline_cycles;
+        let c16 = dpu_time(&cfg, &vec![t; 16]).pipeline_cycles;
+        assert!(c16 > c2);
+    }
+
+    #[test]
+    fn bottleneck_labels() {
+        let cfg = PimConfig::default();
+        let mut dma_heavy = TaskletCounters::default();
+        dma_heavy.instrs = 10;
+        for _ in 0..100 {
+            dma_heavy.dma(8);
+        }
+        // One tasklet: its own DMA latency is the critical path.
+        assert_eq!(dpu_time(&cfg, &[dma_heavy]).bottleneck(), "dma-latency");
+        // Many tasklets: engine occupancy serializes and dominates.
+        assert_eq!(dpu_time(&cfg, &[dma_heavy; 16]).bottleneck(), "mram-dma");
+        assert_eq!(dpu_time(&cfg, &[compute_only(1000)]).bottleneck(), "pipeline");
+    }
+
+    #[test]
+    fn latency_bound_single_tasklet() {
+        // 1 tasklet, 1 DMA: cycles include full 77-cycle latency.
+        let cfg = PimConfig::default();
+        let mut t = TaskletCounters::default();
+        t.instrs = 10;
+        t.dma(8);
+        let timing = dpu_time(&cfg, &[t]);
+        assert_eq!(
+            timing.latency_cycles,
+            10 * calib::DISPATCH_INTERVAL + calib::MRAM_DMA_FIXED_CYCLES + 4
+        );
+        assert_eq!(timing.cycles, timing.latency_cycles);
+    }
+}

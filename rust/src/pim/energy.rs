@@ -1,0 +1,110 @@
+//! Energy model.
+//!
+//! The paper's CPU/GPU comparison (Table 3) reports performance *and*
+//! energy; PIM wins energy mostly because SpMV's bytes never cross a
+//! power-hungry off-chip link during the kernel. We model energy as
+//! component power x modeled component time plus per-byte bus energy —
+//! the same first-order structure the UPMEM SDK's energy counters expose.
+
+use super::calib;
+
+/// Energy breakdown of one SpMV execution, joules.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Energy {
+    /// DPU cores busy during the kernel.
+    pub dpu_j: f64,
+    /// Idle DPUs (allocated but waiting) during the kernel.
+    pub dpu_idle_j: f64,
+    /// Bus energy for host<->PIM transfers.
+    pub bus_j: f64,
+    /// Host CPU while orchestrating transfers + merging.
+    pub host_j: f64,
+}
+
+impl Energy {
+    pub fn total_j(&self) -> f64 {
+        self.dpu_j + self.dpu_idle_j + self.bus_j + self.host_j
+    }
+
+    /// Energy of a PIM kernel phase: `n_busy` DPUs run for their own
+    /// time; the rest of the allocation idles until the slowest finishes.
+    pub fn pim_kernel(n_dpus: usize, dpu_busy_s: &[f64]) -> Energy {
+        let max_s = dpu_busy_s.iter().copied().fold(0.0, f64::max);
+        let busy: f64 = dpu_busy_s.iter().sum();
+        let idle = (n_dpus as f64) * max_s - busy;
+        Energy {
+            dpu_j: busy * calib::DPU_ACTIVE_WATTS,
+            dpu_idle_j: idle.max(0.0) * calib::DPU_IDLE_WATTS,
+            ..Default::default()
+        }
+    }
+
+    /// Energy of a transfer phase moving `bytes` over `seconds`.
+    pub fn transfer(bytes: u64, seconds: f64) -> Energy {
+        Energy {
+            bus_j: bytes as f64 * calib::BUS_ENERGY_J_PER_BYTE,
+            host_j: seconds * calib::HOST_ACTIVE_WATTS,
+            ..Default::default()
+        }
+    }
+
+    /// Energy of host-side merge work.
+    pub fn host(seconds: f64) -> Energy {
+        Energy { host_j: seconds * calib::HOST_ACTIVE_WATTS, ..Default::default() }
+    }
+
+    pub fn add(self, other: Energy) -> Energy {
+        Energy {
+            dpu_j: self.dpu_j + other.dpu_j,
+            dpu_idle_j: self.dpu_idle_j + other.dpu_idle_j,
+            bus_j: self.bus_j + other.bus_j,
+            host_j: self.host_j + other.host_j,
+        }
+    }
+}
+
+/// TDP-based energy estimate for the processor-centric baselines
+/// (paper's Table 3 methodology: package power x runtime).
+pub fn baseline_energy_j(platform_watts: f64, seconds: f64) -> f64 {
+    platform_watts * seconds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_energy_counts_idle() {
+        // 4 DPUs allocated, skewed times: the laggard keeps 3 idle.
+        let e = Energy::pim_kernel(4, &[1.0, 0.1, 0.1, 0.1]);
+        assert!(e.dpu_j > 0.0);
+        assert!(e.dpu_idle_j > 0.0);
+        let balanced = Energy::pim_kernel(4, &[0.325; 4]);
+        assert!(balanced.dpu_idle_j < 1e-12);
+        // Same busy-seconds total => same active energy.
+        assert!((balanced.dpu_j - e.dpu_j).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_energy_scales_with_bytes() {
+        let a = Energy::transfer(1 << 20, 0.001);
+        let b = Energy::transfer(1 << 21, 0.001);
+        assert!((b.bus_j / a.bus_j - 2.0).abs() < 1e-9);
+        assert_eq!(a.host_j, b.host_j);
+    }
+
+    #[test]
+    fn totals_add_up() {
+        let e = Energy::pim_kernel(2, &[0.5, 0.5])
+            .add(Energy::transfer(1024, 0.01))
+            .add(Energy::host(0.002));
+        let total = e.total_j();
+        assert!((total - (e.dpu_j + e.dpu_idle_j + e.bus_j + e.host_j)).abs() < 1e-12);
+        assert!(total > 0.0);
+    }
+
+    #[test]
+    fn baseline_is_tdp_times_time() {
+        assert_eq!(baseline_energy_j(300.0, 2.0), 600.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! UPMEM-class PIM system simulator.
+//!
+//! The paper's testbed — the UPMEM PIM system, the first commercially
+//! available real-world near-bank PIM architecture — is not available in
+//! this environment, so this module *is* that substrate (see DESIGN.md §4
+//! substitutions): a functional simulator with an analytic timing model
+//! calibrated against the published PrIM microbenchmark numbers.
+//!
+//! Submodules:
+//! * [`calib`] — every calibration constant, with sources.
+//! * [`arch`] — topology and configuration ([`PimSystem`], [`PimConfig`]).
+//! * [`dpu`] — per-DPU timing: pipeline / DMA / critical-section laws.
+//! * [`transfer`] — host<->PIM collectives (broadcast/scatter/gather with
+//!   the same-size padding rule).
+//! * [`energy`] — component-level energy accounting.
+
+pub mod arch;
+pub mod calib;
+pub mod dpu;
+pub mod energy;
+pub mod transfer;
+
+pub use arch::{PimConfig, PimSystem};
+pub use dpu::{dpu_time, DpuTiming, TaskletCounters};
+pub use energy::Energy;
+pub use transfer::{broadcast, gather, scatter, Dir, TransferCost};

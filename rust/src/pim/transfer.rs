@@ -1,0 +1,192 @@
+//! Host <-> PIM transfer model.
+//!
+//! All data reaches PIM-enabled memory over the regular DDR4 bus, driven
+//! by the host CPU — the central structural constraint of real near-bank
+//! PIM systems and the source of the paper's two collective-operation
+//! findings:
+//!
+//! * **Broadcast** (1D kernels copy the *whole* input vector to every
+//!   DPU): total moved bytes scale with `n_dpus * |x|`, so 1D SpMV stops
+//!   scaling once the broadcast dominates (hardware suggestion #2).
+//! * **Gather with padding** (2D kernels retrieve partial outputs): the
+//!   UPMEM runtime requires *the same transfer size for every DPU* in a
+//!   parallel transfer, so ragged partial results are padded to the
+//!   maximum — wasted bus bytes the paper calls out (hardware
+//!   suggestion #3).
+
+use super::arch::PimConfig;
+use super::calib;
+
+/// Direction of a host<->PIM transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// Host -> PIM (scatter / broadcast).
+    ToPim,
+    /// PIM -> host (gather).
+    FromPim,
+}
+
+/// Cost of one collective transfer.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransferCost {
+    /// Wall-clock seconds on the bus.
+    pub seconds: f64,
+    /// Payload bytes the caller asked to move.
+    pub payload_bytes: u64,
+    /// Bytes actually moved including same-size padding.
+    pub moved_bytes: u64,
+}
+
+impl TransferCost {
+    pub fn padding_overhead(&self) -> f64 {
+        if self.payload_bytes == 0 {
+            0.0
+        } else {
+            self.moved_bytes as f64 / self.payload_bytes as f64
+        }
+    }
+
+    /// Combine sequential transfers.
+    pub fn then(self, other: TransferCost) -> TransferCost {
+        TransferCost {
+            seconds: self.seconds + other.seconds,
+            payload_bytes: self.payload_bytes + other.payload_bytes,
+            moved_bytes: self.moved_bytes + other.moved_bytes,
+        }
+    }
+}
+
+fn aggregate_bw(cfg: &PimConfig, per_rank: f64, peak: f64) -> f64 {
+    let ranks = cfg.n_ranks() as f64;
+    (per_rank * ranks).min(peak) * cfg.bus_scale
+}
+
+/// A *parallel* transfer: possibly different sizes per DPU, same
+/// direction. The UPMEM runtime issues one bus transaction shape for all
+/// DPUs of a rank batch, so every DPU's slot is padded to the maximum
+/// size across the batch (paper's hardware suggestion #3).
+pub fn parallel(cfg: &PimConfig, dir: Dir, sizes_per_dpu: &[usize]) -> TransferCost {
+    assert!(sizes_per_dpu.len() <= cfg.n_dpus, "more slots than DPUs");
+    if sizes_per_dpu.is_empty() {
+        return TransferCost::default();
+    }
+    let payload: u64 = sizes_per_dpu.iter().map(|&s| s as u64).sum();
+    let max = *sizes_per_dpu.iter().max().unwrap();
+    let max = crate::util::round_up(max, 8);
+    let moved = (max * sizes_per_dpu.len()) as u64;
+    let (per_rank, peak) = match dir {
+        Dir::ToPim => (calib::CPU_TO_DPU_RANK_GBS, calib::CPU_TO_DPU_PEAK_GBS),
+        Dir::FromPim => (calib::DPU_TO_CPU_RANK_GBS, calib::DPU_TO_CPU_PEAK_GBS),
+    };
+    let bw = aggregate_bw(cfg, per_rank, peak) * 1e9;
+    TransferCost {
+        seconds: calib::TRANSFER_LATENCY_S + moved as f64 / bw,
+        payload_bytes: payload,
+        moved_bytes: moved,
+    }
+}
+
+/// Broadcast the same `bytes`-sized buffer to `n_dpus` DPUs.
+///
+/// The source stays hot in host caches so the sustained aggregate rate is
+/// higher than a parallel scatter, but the moved bytes still multiply by
+/// the DPU count — the 1D scaling wall.
+pub fn broadcast(cfg: &PimConfig, bytes: usize, n_dpus: usize) -> TransferCost {
+    if bytes == 0 || n_dpus == 0 {
+        return TransferCost::default();
+    }
+    let bytes = crate::util::round_up(bytes, 8);
+    let moved = (bytes * n_dpus) as u64;
+    let bw = aggregate_bw(cfg, calib::BROADCAST_RANK_GBS, calib::BROADCAST_PEAK_GBS) * 1e9;
+    TransferCost {
+        seconds: calib::TRANSFER_LATENCY_S + moved as f64 / bw,
+        payload_bytes: moved,
+        moved_bytes: moved,
+    }
+}
+
+/// Gather results from DPUs (`sizes_per_dpu[i]` bytes from DPU i) — a
+/// parallel transfer in the FromPim direction, padding rule included.
+pub fn gather(cfg: &PimConfig, sizes_per_dpu: &[usize]) -> TransferCost {
+    parallel(cfg, Dir::FromPim, sizes_per_dpu)
+}
+
+/// Scatter distinct buffers to DPUs.
+pub fn scatter(cfg: &PimConfig, sizes_per_dpu: &[usize]) -> TransferCost {
+    parallel(cfg, Dir::ToPim, sizes_per_dpu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n_dpus: usize) -> PimConfig {
+        PimConfig { n_dpus, ..Default::default() }
+    }
+
+    #[test]
+    fn empty_transfer_is_free() {
+        assert_eq!(parallel(&cfg(4), Dir::ToPim, &[]).seconds, 0.0);
+        assert_eq!(broadcast(&cfg(4), 0, 4).seconds, 0.0);
+    }
+
+    #[test]
+    fn padding_rule_inflates_ragged_transfers() {
+        let c = cfg(4);
+        let even = gather(&c, &[1024, 1024, 1024, 1024]);
+        let ragged = gather(&c, &[1024, 8, 8, 8]);
+        assert_eq!(even.moved_bytes, 4096);
+        assert_eq!(ragged.moved_bytes, 4096, "padded to max size");
+        assert!(ragged.padding_overhead() > 3.0);
+        assert!((even.padding_overhead() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn broadcast_bytes_scale_with_dpus() {
+        let c2560 = cfg(2560);
+        let c64 = cfg(64);
+        let b2560 = broadcast(&c2560, 1 << 20, 2560);
+        let b64 = broadcast(&c64, 1 << 20, 64);
+        assert_eq!(b2560.moved_bytes, 40 * b64.moved_bytes);
+        // Below the bus cap, bytes and bandwidth both scale with ranks
+        // and broadcast time stays flat; past the cap (16 ranks at 1.05
+        // GB/s/rank) the bytes keep growing while bandwidth doesn't —
+        // the 1D scaling wall.
+        assert!(b2560.seconds > 2.0 * b64.seconds);
+    }
+
+    #[test]
+    fn bandwidth_caps_at_peak() {
+        // 40 ranks would give 40 * 0.42 = 16.8 GB/s uncapped; cap is 6.68.
+        let c = cfg(2560);
+        let bytes = 1usize << 26;
+        let t = scatter(&c, &vec![bytes / 2560; 2560]);
+        let implied_bw = t.moved_bytes as f64 / (t.seconds - calib::TRANSFER_LATENCY_S) / 1e9;
+        assert!(implied_bw <= calib::CPU_TO_DPU_PEAK_GBS * 1.01, "bw {implied_bw}");
+    }
+
+    #[test]
+    fn gather_slower_than_scatter() {
+        let c = cfg(64);
+        let sizes = vec![1 << 16; 64];
+        assert!(gather(&c, &sizes).seconds > scatter(&c, &sizes).seconds);
+    }
+
+    #[test]
+    fn bus_scale_ablation_speeds_up() {
+        let base = cfg(64);
+        let fast = PimConfig { bus_scale: 4.0, ..cfg(64) };
+        let sizes = vec![1 << 16; 64];
+        assert!(scatter(&fast, &sizes).seconds < scatter(&base, &sizes).seconds);
+    }
+
+    #[test]
+    fn then_accumulates() {
+        let c = cfg(4);
+        let a = gather(&c, &[8, 8, 8, 8]);
+        let b = gather(&c, &[16, 16, 16, 16]);
+        let t = a.then(b);
+        assert!((t.seconds - (a.seconds + b.seconds)).abs() < 1e-12);
+        assert_eq!(t.moved_bytes, a.moved_bytes + b.moved_bytes);
+    }
+}

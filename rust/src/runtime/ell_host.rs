@@ -1,0 +1,133 @@
+//! Host-side glue between the sparse-matrix substrate and the AOT ELL
+//! artifacts: convert a CSR matrix to the padded layout of a chosen
+//! artifact bucket and execute SpMV through PJRT.
+//!
+//! This is the "accelerator library" path of the CPU/GPU comparison: the
+//! same role cuSPARSE plays in the paper's GPU baseline, except our
+//! kernel is the AOT-compiled JAX/Pallas module, proving the three-layer
+//! stack end to end (L1 Pallas kernel -> L2 jax graph -> HLO text ->
+//! Rust PJRT execution).
+
+use super::{ArtifactMeta, ArtifactRunner};
+use crate::matrix::dense::EllMatrix;
+use crate::matrix::CsrMatrix;
+use anyhow::{Context, Result};
+
+/// A CSR matrix staged into one ELL artifact bucket.
+pub struct StagedEll {
+    pub artifact: String,
+    /// Padded values, row-major (rows*k of the artifact bucket).
+    pub vals: Vec<f32>,
+    /// Padded column indices.
+    pub cols: Vec<i32>,
+    /// Logical rows (output truncation).
+    pub nrows: usize,
+    /// Logical columns (x padding).
+    pub ncols: usize,
+    /// Artifact x length.
+    pub n_padded: usize,
+    /// Storage blow-up vs nnz (the ELL padding trade-off).
+    pub pad_ratio: f64,
+}
+
+/// Stage a CSR matrix into the smallest fitting artifact bucket.
+pub fn stage(runner: &ArtifactRunner, csr: &CsrMatrix<f32>) -> Result<StagedEll> {
+    let k_needed = (0..csr.nrows()).map(|r| csr.row_nnz(r)).max().unwrap_or(1).max(1);
+    let meta: &ArtifactMeta = runner
+        .pick_ell_bucket("f32", csr.nrows(), k_needed)
+        .with_context(|| {
+            format!(
+                "no ELL artifact bucket fits rows={} k={} (rebuild artifacts with larger buckets)",
+                csr.nrows(),
+                k_needed
+            )
+        })?;
+    anyhow::ensure!(
+        meta.dims["n"] >= csr.ncols(),
+        "artifact x length {} < matrix cols {}",
+        meta.dims["n"],
+        csr.ncols()
+    );
+    let (rows_b, k_b) = (meta.dims["rows"], meta.dims["k"]);
+    // Reuse the EllMatrix conversion, then pad out to the bucket.
+    let ell = EllMatrix::from_csr(csr, k_b, 1);
+    let mut vals = vec![0f32; rows_b * k_b];
+    let mut cols = vec![0i32; rows_b * k_b];
+    for r in 0..csr.nrows() {
+        for i in 0..ell.k.min(k_b) {
+            vals[r * k_b + i] = ell.vals[r * ell.k + i];
+            cols[r * k_b + i] = ell.cols[r * ell.k + i];
+        }
+    }
+    Ok(StagedEll {
+        artifact: meta.name.clone(),
+        vals,
+        cols,
+        nrows: csr.nrows(),
+        ncols: csr.ncols(),
+        n_padded: meta.dims["n"],
+        pad_ratio: (rows_b * k_b) as f64 / csr.nnz().max(1) as f64,
+    })
+}
+
+impl StagedEll {
+    /// Execute `y = A @ x` through the artifact; truncates to logical rows.
+    pub fn spmv(&self, runner: &ArtifactRunner, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == self.ncols, "x length");
+        let mut xp = vec![0f32; self.n_padded];
+        xp[..x.len()].copy_from_slice(x);
+        let mut y = runner.run_ell_f32(&self.artifact, &self.vals, &self.cols, &xp)?;
+        y.truncate(self.nrows);
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{generate, CsrMatrix};
+    use std::path::Path;
+
+    fn runner() -> Option<ArtifactRunner> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some(ArtifactRunner::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn staged_spmv_matches_host() {
+        let Some(rn) = runner() else { return };
+        let m = generate::uniform::<f64>(1000, 1000, 6, 5);
+        let mf: crate::matrix::CooMatrix<f32> = m.cast();
+        let csr = CsrMatrix::from_coo(&mf);
+        let staged = stage(&rn, &csr).unwrap();
+        let x: Vec<f32> = (0..1000).map(|i| ((i % 7) as f32) - 3.0).collect();
+        let y = staged.spmv(&rn, &x).unwrap();
+        let want = csr.spmv(&x);
+        assert_eq!(y.len(), 1000);
+        for i in 0..1000 {
+            assert!((y[i] - want[i]).abs() <= 1e-3 * want[i].abs().max(1.0), "row {i}");
+        }
+    }
+
+    #[test]
+    fn stage_reports_pad_ratio() {
+        let Some(rn) = runner() else { return };
+        let m = generate::diagonal::<f64>(512, 2);
+        let csr = CsrMatrix::from_coo(&m.cast::<f32>());
+        let staged = stage(&rn, &csr).unwrap();
+        // Diagonal: 1 nnz/row into a k>=8 bucket of >=1024 rows.
+        assert!(staged.pad_ratio >= 8.0, "pad ratio {}", staged.pad_ratio);
+    }
+
+    #[test]
+    fn stage_rejects_oversize() {
+        let Some(rn) = runner() else { return };
+        let m = generate::banded::<f64>(100_000, 2, 1);
+        let csr = CsrMatrix::from_coo(&m.cast::<f32>());
+        assert!(stage(&rn, &csr).is_err());
+    }
+}

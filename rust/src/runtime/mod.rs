@@ -1,0 +1,263 @@
+//! PJRT runtime: load and execute AOT-compiled artifacts from Rust.
+//!
+//! `python/compile/aot.py` lowers the JAX/Pallas model to HLO *text*
+//! (see DESIGN.md §5 for why text, not serialized protos) plus a
+//! `manifest.json`. This module loads that manifest, compiles artifacts
+//! on the PJRT CPU client (once — compilation is cached per artifact),
+//! and executes them with concrete inputs. Python never runs here; the
+//! Rust binary is self-contained once `make artifacts` has been run.
+
+pub mod ell_host;
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata of one AOT artifact (a row of `manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Artifact kind: "ell", "bell", "dense", "power_iter", "cg_residual".
+    pub kind: String,
+    pub dtype: String,
+    /// Input signatures: (dtype-name, shape).
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// Kind-specific size fields (rows, k, n, nbr, ...).
+    pub dims: HashMap<String, usize>,
+}
+
+/// The artifact index + a PJRT client; compiles lazily, caches compiled
+/// executables by name.
+pub struct ArtifactRunner {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    metas: HashMap<String, ArtifactMeta>,
+    compiled: std::cell::RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactRunner {
+    /// Load `manifest.json` from `dir` and create a PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<ArtifactRunner> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("read {} (run `make artifacts` first)", manifest_path.display())
+        })?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        if json.get("format").as_str() != Some("hlo-text") {
+            bail!("unexpected manifest format field");
+        }
+        let mut metas = HashMap::new();
+        for a in json.get("artifacts").as_arr().context("artifacts array")? {
+            let name = a.get("name").as_str().context("artifact name")?.to_string();
+            let mut dims = HashMap::new();
+            if let Some(obj) = a.as_obj() {
+                for (k, v) in obj {
+                    if let Some(n) = v.as_f64() {
+                        dims.insert(k.clone(), n as usize);
+                    }
+                }
+            }
+            let inputs = a
+                .get("inputs")
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(|sig| {
+                    let arr = sig.as_arr().context("input sig")?;
+                    let dt = arr[0].as_str().context("dtype")?.to_string();
+                    let shape = arr[1]
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok((dt, shape))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            metas.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    file: a.get("file").as_str().context("file")?.to_string(),
+                    kind: a.get("kind").as_str().unwrap_or("unknown").to_string(),
+                    dtype: a.get("dtype").as_str().unwrap_or("f32").to_string(),
+                    inputs,
+                    dims,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactRunner { dir: dir.to_path_buf(), client, metas, compiled: Default::default() })
+    }
+
+    /// Load from the conventional `artifacts/` directory (what the
+    /// examples and benches use): `./artifacts` relative to the current
+    /// directory, falling back to the crate root (so binaries work from
+    /// any cwd).
+    pub fn load_default() -> Result<ArtifactRunner> {
+        let cwd_rel = Path::new("artifacts");
+        if cwd_rel.join("manifest.json").exists() {
+            return Self::load(cwd_rel);
+        }
+        Self::load(&Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    /// Artifact names available (sorted).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.metas.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.metas.get(name).with_context(|| format!("unknown artifact {name}"))?;
+        let path = self.dir.join(&meta.file);
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("artifact path utf-8")?)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.compiled.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` with the given literals; returns the
+    /// elements of the (single-level) output tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let meta = self.metas.get(name).with_context(|| format!("unknown artifact {name}"))?;
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "artifact {name} expects {} inputs, got {}",
+            meta.inputs.len(),
+            inputs.len()
+        );
+        let exe = self.executable(name)?;
+        let mut result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        Ok(result.decompose_tuple()?)
+    }
+
+    /// Convenience: run an f32 ELL artifact (`vals (R,K)`, `cols (R,K)`,
+    /// `x (N,)`) and return y as `Vec<f32>`.
+    pub fn run_ell_f32(&self, name: &str, vals: &[f32], cols: &[i32], x: &[f32]) -> Result<Vec<f32>> {
+        let meta = self.metas.get(name).with_context(|| format!("unknown artifact {name}"))?;
+        let (r, k) = (meta.dims["rows"] as i64, meta.dims["k"] as i64);
+        let n = meta.dims["n"] as i64;
+        anyhow::ensure!(vals.len() as i64 == r * k, "vals size");
+        anyhow::ensure!(cols.len() as i64 == r * k, "cols size");
+        anyhow::ensure!(x.len() as i64 == n, "x size");
+        let lv = xla::Literal::vec1(vals).reshape(&[r, k])?;
+        let lc = xla::Literal::vec1(cols).reshape(&[r, k])?;
+        let lx = xla::Literal::vec1(x);
+        let out = self.execute(name, &[lv, lc, lx])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Convenience: run the f32 dense artifact (`a (N,N)`, `x (N,)`).
+    pub fn run_dense_f32(&self, name: &str, a: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let meta = self.metas.get(name).with_context(|| format!("unknown artifact {name}"))?;
+        let n = meta.dims["n"] as i64;
+        anyhow::ensure!(a.len() as i64 == n * n, "a size");
+        anyhow::ensure!(x.len() as i64 == n, "x size");
+        let la = xla::Literal::vec1(a).reshape(&[n, n])?;
+        let lx = xla::Literal::vec1(x);
+        let out = self.execute(name, &[la, lx])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Pick the smallest ELL artifact bucket fitting `(rows, k)` for a
+    /// dtype, or None if nothing fits.
+    pub fn pick_ell_bucket(&self, dtype: &str, rows: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.metas
+            .values()
+            .filter(|m| {
+                m.kind == "ell" && m.dtype == dtype && m.dims["rows"] >= rows && m.dims["k"] >= k
+            })
+            .min_by_key(|m| m.dims["rows"] * m.dims["k"])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runner() -> Option<ArtifactRunner> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: run `make artifacts` first");
+            return None;
+        }
+        Some(ArtifactRunner::load(&dir).expect("load artifacts"))
+    }
+
+    #[test]
+    fn manifest_loads_and_lists() {
+        let Some(r) = runner() else { return };
+        let names = r.names();
+        assert!(names.iter().any(|n| n.starts_with("ell_f32")), "{names:?}");
+        assert!(names.iter().any(|n| n.starts_with("dense_f32")));
+        let m = r.meta("ell_f32_r1024_k8_n1024").unwrap();
+        assert_eq!(m.kind, "ell");
+        assert_eq!(m.inputs.len(), 3);
+    }
+
+    #[test]
+    fn ell_artifact_matches_host_reference() {
+        let Some(r) = runner() else { return };
+        let (rows, k, n) = (1024usize, 8usize, 1024usize);
+        // Identity-ish ELL: row i picks x[i] with weight 2.
+        let mut vals = vec![0f32; rows * k];
+        let mut cols = vec![0i32; rows * k];
+        for i in 0..rows {
+            vals[i * k] = 2.0;
+            cols[i * k] = (i % n) as i32;
+        }
+        let x: Vec<f32> = (0..n).map(|i| (i % 13) as f32 - 6.0).collect();
+        let y = r.run_ell_f32("ell_f32_r1024_k8_n1024", &vals, &cols, &x).unwrap();
+        for i in 0..rows {
+            assert_eq!(y[i], 2.0 * x[i % n], "row {i}");
+        }
+    }
+
+    #[test]
+    fn dense_artifact_matches() {
+        let Some(r) = runner() else { return };
+        let n = 512usize;
+        let mut a = vec![0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 3.0;
+        }
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let y = r.run_dense_f32("dense_f32_n512", &a, &x).unwrap();
+        for i in 0..n {
+            assert_eq!(y[i], 3.0 * i as f32);
+        }
+    }
+
+    #[test]
+    fn bucket_picker_finds_smallest_fit() {
+        let Some(r) = runner() else { return };
+        let m = r.pick_ell_bucket("f32", 900, 7).unwrap();
+        assert_eq!(m.dims["rows"], 1024);
+        assert!(r.pick_ell_bucket("f32", 1_000_000, 1).is_none());
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let Some(r) = runner() else { return };
+        assert!(r.execute("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Small self-contained utilities.
+//!
+//! The offline vendor set does not include `rand`, `serde` or `criterion`,
+//! so this module carries a deterministic PRNG, a tiny JSON writer and a
+//! few numeric helpers used across the crate.
+
+pub mod rng;
+pub mod json;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+/// Arithmetic mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation of a slice.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation (stddev / mean); 0 when the mean is 0.
+///
+/// The paper's matrix-suite analysis keys on the CV of non-zero elements
+/// per row to separate "regular" from "scale-free" matrices.
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        stddev(xs) / m
+    }
+}
+
+/// Geometric mean (ignores non-positive entries, as is conventional for
+/// speedup summaries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    let pos: Vec<f64> = xs.iter().copied().filter(|x| *x > 0.0).collect();
+    if pos.is_empty() {
+        return 0.0;
+    }
+    (pos.iter().map(|x| x.ln()).sum::<f64>() / pos.len() as f64).exp()
+}
+
+/// Format a nanosecond count as a human-readable duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Format a byte count with binary prefixes.
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b < K {
+        format!("{b:.0}B")
+    } else if b < K * K {
+        format!("{:.1}KiB", b / K)
+    } else if b < K * K * K {
+        format!("{:.1}MiB", b / (K * K))
+    } else {
+        format!("{:.2}GiB", b / (K * K * K))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn stats_basics() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+        assert!((cv(&xs) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv_of_uniform_is_zero() {
+        assert_eq!(cv(&[3.0, 3.0, 3.0]), 0.0);
+        assert_eq!(cv(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(12.0), "12ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+    }
+}

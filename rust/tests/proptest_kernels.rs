@@ -1,0 +1,180 @@
+//! Property-based tests (hand-rolled; proptest is not in the offline
+//! vendor set): randomized matrices, kernels, and system shapes must
+//! always produce the exact host-oracle result and satisfy the
+//! coordinator's structural invariants.
+
+use sparsep::coordinator::{KernelSpec, Partitioning, SpmvExecutor};
+use sparsep::kernels::SyncScheme;
+use sparsep::matrix::CooMatrix;
+use sparsep::partition::balance::{split_even, split_weighted};
+use sparsep::pim::{PimConfig, PimSystem};
+use sparsep::util::rng::Rng;
+
+/// Random sparse matrix with rng-chosen shape and density.
+fn random_matrix(rng: &mut Rng) -> CooMatrix<f64> {
+    let nrows = 1 + rng.gen_range(300);
+    let ncols = 1 + rng.gen_range(300);
+    let nnz = rng.gen_range(4 * nrows.min(ncols) + 1);
+    let mut triples = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        triples.push((
+            rng.gen_range(nrows) as u32,
+            rng.gen_range(ncols) as u32,
+            (rng.gen_range(9) as f64) - 4.0,
+        ));
+    }
+    CooMatrix::from_triples(nrows, ncols, triples)
+}
+
+fn random_spec(rng: &mut Rng) -> KernelSpec {
+    let all = KernelSpec::all25(1 + rng.gen_range(8));
+    let mut spec = all[rng.gen_range(all.len())].clone();
+    // Randomize the orthogonal axes too.
+    spec = spec.with_sync(
+        [SyncScheme::LockFree, SyncScheme::CoarseLock, SyncScheme::FineLock][rng.gen_range(3)],
+    );
+    let (br, bc) = ([1usize, 2, 3, 4, 8][rng.gen_range(5)], [1usize, 2, 4, 8][rng.gen_range(4)]);
+    spec.with_block(br, bc)
+}
+
+/// PROPERTY: every (matrix, kernel, system) triple is exact.
+#[test]
+fn prop_random_runs_are_exact() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for trial in 0..120 {
+        let m = random_matrix(&mut rng);
+        let spec = random_spec(&mut rng);
+        let n_dpus = 1 + rng.gen_range(100);
+        let tasklets = 1 + rng.gen_range(24);
+        // 2D needs n_dpus divisible by stripes; round up.
+        let (spec, n_dpus) = match spec.partitioning {
+            Partitioning::TwoD(_, stripes) => {
+                (spec, sparsep::util::round_up(n_dpus.max(stripes), stripes))
+            }
+            _ => (spec, n_dpus),
+        };
+        let exec = SpmvExecutor::new(PimSystem {
+            cfg: PimConfig { n_dpus, tasklets, ..Default::default() },
+        });
+        let x: Vec<f64> = (0..m.ncols()).map(|i| ((i % 13) as f64) - 6.0).collect();
+        let r = exec
+            .run(&spec, &m, &x)
+            .unwrap_or_else(|e| panic!("trial {trial} {} failed: {e}", spec.name));
+        assert_eq!(
+            r.y,
+            m.spmv(&x),
+            "trial {trial}: kernel {} d={n_dpus} t={tasklets} {}x{} nnz={}",
+            spec.name,
+            m.nrows(),
+            m.ncols(),
+            m.nnz()
+        );
+        // Structural invariants.
+        assert!(r.breakdown.total_s() >= 0.0);
+        assert!(r.stats.dpu_imbalance >= 0.99, "imbalance {}", r.stats.dpu_imbalance);
+        assert!(r.stats.padding_overhead() >= 0.99);
+        assert!(r.energy.total_j() >= 0.0);
+    }
+}
+
+/// PROPERTY: weighted splits cover the index space exactly once, in
+/// order, for arbitrary weights.
+#[test]
+fn prop_splits_partition_domain() {
+    let mut rng = Rng::new(42);
+    for _ in 0..300 {
+        let n = rng.gen_range(200);
+        let k = 1 + rng.gen_range(40);
+        let weights: Vec<usize> = (0..n).map(|_| rng.gen_range(50)).collect();
+        for chunks in [split_even(n, k), split_weighted(&weights, k)] {
+            assert_eq!(chunks.len(), k);
+            let mut expect = 0usize;
+            for c in &chunks {
+                assert_eq!(c.start, expect, "gap/overlap");
+                assert!(c.end >= c.start);
+                expect = c.end;
+            }
+            assert_eq!(expect, n, "must cover the whole domain");
+        }
+    }
+}
+
+/// PROPERTY: timing is monotone in work — adding non-zeros never makes
+/// the modeled kernel faster (same shape, same system).
+#[test]
+fn prop_more_nnz_never_faster() {
+    let mut rng = Rng::new(7);
+    let exec = SpmvExecutor::new(PimSystem::with_dpus(4));
+    for _ in 0..20 {
+        let n = 64 + rng.gen_range(100);
+        let base_nnz = 1 + rng.gen_range(400);
+        let mut triples: Vec<(u32, u32, f64)> = (0..base_nnz)
+            .map(|_| (rng.gen_range(n) as u32, rng.gen_range(n) as u32, 1.0))
+            .collect();
+        let m1 = CooMatrix::from_triples(n, n, triples.clone());
+        // Superset matrix: strictly more non-zeros.
+        for _ in 0..200 {
+            triples.push((rng.gen_range(n) as u32, rng.gen_range(n) as u32, 1.0));
+        }
+        let m2 = CooMatrix::from_triples(n, n, triples);
+        if m2.nnz() <= m1.nnz() {
+            continue; // all extras were duplicates
+        }
+        let x = vec![1.0f64; n];
+        let c1 = exec.run(&KernelSpec::coo_nnz(), &m1, &x).unwrap().stats.kernel_cycles;
+        let c2 = exec.run(&KernelSpec::coo_nnz(), &m2, &x).unwrap().stats.kernel_cycles;
+        assert!(c2 >= c1, "more work ran faster: {c1} -> {c2}");
+    }
+}
+
+/// PROPERTY: the linearity of SpMV — A(x + y) == Ax + Ay — holds through
+/// the whole coordinator (catches partial-merge bugs that a single
+/// oracle comparison might mask).
+#[test]
+fn prop_spmv_linearity() {
+    let mut rng = Rng::new(99);
+    let exec = SpmvExecutor::new(PimSystem::with_dpus(16));
+    for _ in 0..20 {
+        let m = random_matrix(&mut rng);
+        let xa: Vec<f64> = (0..m.ncols()).map(|_| rng.gen_range(7) as f64).collect();
+        let xb: Vec<f64> = (0..m.ncols()).map(|_| rng.gen_range(7) as f64).collect();
+        let xs: Vec<f64> = xa.iter().zip(&xb).map(|(a, b)| a + b).collect();
+        let ya = exec.run(&KernelSpec::coo_nnz(), &m, &xa).unwrap().y;
+        let yb = exec.run(&KernelSpec::coo_nnz(), &m, &xb).unwrap().y;
+        let ys = exec.run(&KernelSpec::coo_nnz(), &m, &xs).unwrap().y;
+        for i in 0..m.nrows() {
+            assert_eq!(ys[i], ya[i] + yb[i], "row {i} (integer-valued, exact)");
+        }
+    }
+}
+
+/// PROPERTY: fine-grained locking never beats coarse-grained on the
+/// modeled hardware (the paper's serialization finding), across random
+/// shared-row-heavy inputs.
+#[test]
+fn prop_fine_lock_never_wins() {
+    let mut rng = Rng::new(1234);
+    let exec = SpmvExecutor::new(PimSystem::single_dpu(16));
+    for _ in 0..15 {
+        // Few rows, many elements: element splits must share rows.
+        let nrows = 1 + rng.gen_range(6);
+        let ncols = 64 + rng.gen_range(400);
+        let nnz = 500 + rng.gen_range(1500);
+        let triples: Vec<(u32, u32, f64)> = (0..nnz)
+            .map(|_| (rng.gen_range(nrows) as u32, rng.gen_range(ncols) as u32, 1.0))
+            .collect();
+        let m = CooMatrix::from_triples(nrows, ncols, triples);
+        let x = vec![1.0f64; ncols];
+        let coarse = exec
+            .run(&KernelSpec::coo_nnz().with_sync(SyncScheme::CoarseLock), &m, &x)
+            .unwrap()
+            .stats
+            .kernel_cycles;
+        let fine = exec
+            .run(&KernelSpec::coo_nnz().with_sync(SyncScheme::FineLock), &m, &x)
+            .unwrap()
+            .stats
+            .kernel_cycles;
+        assert!(fine >= coarse, "fine {fine} beat coarse {coarse}");
+    }
+}

@@ -19,12 +19,12 @@
 use sparsep::baselines::{cpu, roofline};
 use sparsep::bench_harness::figures;
 use sparsep::bench_harness::Table;
-use sparsep::coordinator::{KernelSpec, SpmvExecutor};
+use sparsep::coordinator::{Engine, KernelSpec, SpmvExecutor};
 use sparsep::matrix::{generate, CooMatrix, CsrMatrix, DType, MatrixStats};
 use sparsep::pim::PimSystem;
 use sparsep::runtime::{ell_host, ArtifactRunner};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sparsep::util::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
     let t_start = std::time::Instant::now();
     println!("=== SparseP end-to-end characterization ({}) ===", if full { "full suite" } else { "mini suite" });
@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     // DPU count sized so every DPU has work (fraction-of-peak is
     // meaningless on starved DPUs); full suite uses the whole system.
     let n_dpus = if full { 2048usize } else { 64 };
-    let exec = SpmvExecutor::new(PimSystem::with_dpus(n_dpus));
+    let exec = SpmvExecutor::with_engine(PimSystem::with_dpus(n_dpus), Engine::threaded(0));
     let mut best_rows = Table::new(&["matrix", "best-kernel", "e2e-ms", "kernel-GF/s", "%peak(fp64)"]);
     let mut verified = 0usize;
     let mut frac_sum = 0.0;
@@ -54,8 +54,9 @@ fn main() -> anyhow::Result<()> {
         let gold = m.spmv(&x);
         let mut best: Option<(String, f64, f64)> = None;
         for spec in KernelSpec::all25(8) {
-            let r = exec.run(&spec, m, &x)?;
-            anyhow::ensure!(r.y == gold, "{name}/{}: output mismatch", spec.name);
+            let plan = exec.plan(&spec, m)?;
+            let r = exec.execute(&plan, &x)?;
+            sparsep::ensure!(r.y == gold, "{name}/{}: output mismatch", spec.name);
             verified += 1;
             let total = r.breakdown.total_s();
             if best.as_ref().map_or(true, |b| total < b.1) {
@@ -112,7 +113,7 @@ fn main() -> anyhow::Result<()> {
                         .iter()
                         .zip(&want)
                         .all(|(a, b)| (a - b).abs() <= 1e-3 * b.abs().max(1.0));
-                    anyhow::ensure!(ok, "XLA path mismatch");
+                    sparsep::ensure!(ok, "XLA path mismatch");
                     println!(
                         "{}: artifact {} (platform {}), pad {:.1}x, {:.3} ms, {:.3} GFLOP/s, verified OK",
                         suite[0].0,

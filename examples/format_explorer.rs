@@ -7,11 +7,11 @@
 //! derives the "adaptive" choice the paper advocates.
 
 use sparsep::bench_harness::Table;
-use sparsep::coordinator::{KernelSpec, SpmvExecutor};
+use sparsep::coordinator::{Engine, KernelSpec, SpmvExecutor};
 use sparsep::matrix::{generate, BcsrMatrix, CooMatrix, CsrMatrix, MatrixStats};
 use sparsep::pim::PimSystem;
 
-fn explore(name: &str, m: &CooMatrix<f64>) -> anyhow::Result<(String, f64)> {
+fn explore(name: &str, m: &CooMatrix<f64>) -> sparsep::util::Result<(String, f64)> {
     let stats = MatrixStats::of(m);
     println!(
         "\n== {name}: {}x{} nnz={} cv={:.2} ({}) ==",
@@ -33,13 +33,15 @@ fn explore(name: &str, m: &CooMatrix<f64>) -> anyhow::Result<(String, f64)> {
     t.row(&["BCSR 8x8".into(), b88.size_bytes().to_string(), format!("{:.2}", b88.fill_ratio())]);
     t.print();
 
-    // End-to-end at 256 DPUs across kernel families.
-    let exec = SpmvExecutor::new(PimSystem::with_dpus(256));
+    // End-to-end at 256 DPUs across kernel families (plan + execute;
+    // threaded engine for wall-clock, results identical to serial).
+    let exec = SpmvExecutor::with_engine(PimSystem::with_dpus(256), Engine::threaded(0));
     let x = vec![1.0f64; m.ncols()];
     let mut t = Table::new(&["kernel", "kernel-ms", "total-ms", "imbalance"]);
     let mut best = (String::new(), f64::INFINITY);
     for spec in KernelSpec::all25(8) {
-        let r = exec.run(&spec, m, &x)?;
+        let plan = exec.plan(&spec, m)?;
+        let r = exec.execute(&plan, &x)?;
         assert_eq!(r.y, m.spmv(&x), "{} must be exact", spec.name);
         let total = r.breakdown.total_s();
         t.row(&[
@@ -57,7 +59,7 @@ fn explore(name: &str, m: &CooMatrix<f64>) -> anyhow::Result<(String, f64)> {
     Ok(best)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sparsep::util::Result<()> {
     let cases: Vec<(&str, CooMatrix<f64>)> = vec![
         ("banded (regular)", generate::banded(4096, 16, 3)),
         ("block-structured", generate::blocked(512, 512, 4, 5, 3)),

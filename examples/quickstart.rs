@@ -1,15 +1,16 @@
-//! Quickstart: run one SpMV on the simulated PIM system and read the
-//! paper-style breakdown.
+//! Quickstart: plan one SpMV kernel over the simulated PIM system, then
+//! execute it many times — the plan-once/iterate-many shape every
+//! iterative app uses.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use sparsep::coordinator::{KernelSpec, SpmvExecutor};
+use sparsep::coordinator::{Engine, KernelSpec, SpmvExecutor};
 use sparsep::matrix::generate;
 use sparsep::pim::PimSystem;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sparsep::util::Result<()> {
     // 1. A sparse matrix. Generators mirror the paper's two matrix
     //    classes; @file.mtx loading is available via matrix::mtx.
     let m = generate::scale_free::<f32>(8192, 8192, 10, 0.6, 42);
@@ -20,14 +21,24 @@ fn main() -> anyhow::Result<()> {
         m.nnz()
     );
 
-    // 2. A PIM system: 256 DPUs, 16 tasklets each (UPMEM defaults).
-    let exec = SpmvExecutor::new(PimSystem::with_dpus(256));
+    // 2. A PIM system: 256 DPUs, 16 tasklets each (UPMEM defaults). The
+    //    threaded engine runs the per-DPU kernel simulations on host
+    //    threads; results are bit-identical to the serial engine.
+    let exec = SpmvExecutor::with_engine(PimSystem::with_dpus(256), Engine::threaded(0));
 
-    // 3. Pick a kernel from the 25 (here: COO with nnz balancing) and run.
+    // 3. Plan once: partitioning, per-DPU format conversion and transfer
+    //    pricing happen here — never again, however many vectors follow.
+    let plan = exec.plan(&KernelSpec::coo_nnz_rgrn(), &m)?;
+    println!(
+        "plan: {} DPU slices, {} B matrix placed once in {:.3} ms",
+        plan.items().len(),
+        plan.matrix_bytes(),
+        plan.matrix_load_s() * 1e3
+    );
+
+    // 4. Execute: exact result + modeled breakdown.
     let x = vec![1.0f32; m.ncols()];
-    let run = exec.run(&KernelSpec::coo_nnz_rgrn(), &m, &x)?;
-
-    // 4. Exact result + modeled breakdown.
+    let run = exec.execute(&plan, &x)?;
     assert_eq!(run.y, m.spmv(&x), "simulator output is exact");
     let b = run.breakdown;
     println!("verified: output matches host oracle");
@@ -46,10 +57,21 @@ fn main() -> anyhow::Result<()> {
         run.energy.total_j()
     );
 
-    // 5. The same matrix through every kernel family, one line each.
+    // 5. Iterate on the same plan (y <- A*y, like a power iteration):
+    //    the matrix never moves again, only the vector does.
+    let it = exec.run_iterations(&plan, &x, 20)?;
+    println!(
+        "20 iterations on one plan: {:.3} ms total ({:.3} ms/iter), placement paid once ({:.3} ms)",
+        it.total.total_s() * 1e3,
+        it.per_iter_s() * 1e3,
+        it.last.stats.matrix_load_s * 1e3
+    );
+
+    // 6. The same matrix through every kernel family, one line each.
     println!("\nall-25 sweep (total end-to-end ms):");
     for spec in KernelSpec::all25(8) {
-        let r = exec.run(&spec, &m, &x)?;
+        let p = exec.plan(&spec, &m)?;
+        let r = exec.execute(&p, &x)?;
         println!("  {:<14} {:>9.3} ms", spec.name, r.breakdown.total_s() * 1e3);
     }
     Ok(())

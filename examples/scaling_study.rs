@@ -6,11 +6,11 @@
 //! at the largest system size.
 
 use sparsep::bench_harness::Table;
-use sparsep::coordinator::{KernelSpec, SpmvExecutor};
+use sparsep::coordinator::{Engine, KernelSpec, SpmvExecutor};
 use sparsep::matrix::{generate, Format};
 use sparsep::pim::PimSystem;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sparsep::util::Result<()> {
     let m = generate::uniform::<f64>(16384, 16384, 16, 7);
     let x = vec![1.0f64; m.ncols()];
     println!("matrix: {}x{} nnz={}", m.nrows(), m.ncols(), m.nnz());
@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n== 1D scaling (COO.nnz-rgrn): kernel-only vs end-to-end ==");
     let mut t = Table::new(&["dpus", "kernel GF/s", "e2e GF/s", "load-share", "dominant"]);
     for d in [16usize, 64, 256, 1024, 2048] {
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(d));
+        let exec = SpmvExecutor::with_engine(PimSystem::with_dpus(d), Engine::threaded(0));
         let r = exec.run(&KernelSpec::coo_nnz_rgrn(), &m, &x)?;
         let b = r.breakdown;
         t.row(&[
@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     println!("(kernel-only keeps scaling; end-to-end hits the broadcast wall)");
 
     println!("\n== 2D at 2048 DPUs: stripes sweep per scheme ==");
-    let exec = SpmvExecutor::new(PimSystem::with_dpus(2048));
+    let exec = SpmvExecutor::with_engine(PimSystem::with_dpus(2048), Engine::threaded(0));
     for scheme in [
         KernelSpec::two_d(Format::Coo, 2),
         KernelSpec::two_d_equally_wide(Format::Coo, 2),
@@ -43,7 +43,8 @@ fn main() -> anyhow::Result<()> {
         let mut best = (0usize, 0.0f64);
         for stripes in [2usize, 4, 8, 16, 32] {
             let spec = scheme.clone().with_stripes(stripes);
-            let r = exec.run(&spec, &m, &x)?;
+            let plan = exec.plan(&spec, &m)?;
+            let r = exec.execute(&plan, &x)?;
             let g = r.e2e_gflops();
             if g > best.1 {
                 best = (stripes, g);

@@ -9,7 +9,7 @@
 use super::{axpy, dot, SolveStats};
 use crate::coordinator::{KernelSpec, SpmvExecutor};
 use crate::matrix::CooMatrix;
-use anyhow::Result;
+use crate::util::Result;
 
 /// CG outcome.
 #[derive(Clone, Debug)]
@@ -31,9 +31,13 @@ pub fn solve(
     tol: f64,
     max_iters: usize,
 ) -> Result<CgResult> {
-    anyhow::ensure!(a.nrows() == a.ncols(), "CG needs a square matrix");
-    anyhow::ensure!(b.len() == a.nrows(), "b length");
+    crate::ensure!(a.nrows() == a.ncols(), "CG needs a square matrix");
+    crate::ensure!(b.len() == a.nrows(), "b length");
     let n = a.nrows();
+    // Plan once: partitioning + format conversion + transfer pricing are
+    // amortized across every CG iteration (the paper's matrix placement
+    // is one-time, only the vector moves per iteration).
+    let plan = exec.plan(spec, a)?;
     let mut stats = SolveStats::default();
     let mut x = vec![0.0f64; n];
     let mut r = b.to_vec(); // r = b - A*0
@@ -48,7 +52,7 @@ pub fn solve(
             break;
         }
         // Ap = A * p on the PIM system.
-        let run = exec.run(spec, a, &p)?;
+        let run = exec.execute(&plan, &p)?;
         stats.absorb(&run);
         let ap = run.y;
         let denom = dot(&p, &ap);

@@ -5,7 +5,7 @@
 use super::SolveStats;
 use crate::coordinator::{KernelSpec, SpmvExecutor};
 use crate::matrix::CooMatrix;
-use anyhow::Result;
+use crate::util::Result;
 
 /// Jacobi outcome.
 #[derive(Clone, Debug)]
@@ -40,16 +40,18 @@ pub fn solve(
     tol: f64,
     max_iters: usize,
 ) -> Result<JacobiResult> {
-    anyhow::ensure!(a.nrows() == a.ncols(), "Jacobi needs a square matrix");
+    crate::ensure!(a.nrows() == a.ncols(), "Jacobi needs a square matrix");
     let n = a.nrows();
     let (r_mat, diag) = split_diagonal(a);
-    anyhow::ensure!(diag.iter().all(|&d| d != 0.0), "zero diagonal entry");
+    crate::ensure!(diag.iter().all(|&d| d != 0.0), "zero diagonal entry");
+    // Plan once over the off-diagonal matrix; every sweep reuses it.
+    let plan = exec.plan(spec, &r_mat)?;
     let mut stats = SolveStats::default();
     let mut x = vec![0.0f64; n];
     let mut converged = false;
     let mut iterations = 0;
     for _ in 0..max_iters {
-        let run = exec.run(spec, &r_mat, &x)?;
+        let run = exec.execute(&plan, &x)?;
         stats.absorb(&run);
         let mut delta = 0.0f64;
         for i in 0..n {

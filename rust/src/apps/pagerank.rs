@@ -5,7 +5,7 @@
 use super::{norm2, SolveStats};
 use crate::coordinator::{KernelSpec, SpmvExecutor};
 use crate::matrix::CooMatrix;
-use anyhow::Result;
+use crate::util::Result;
 
 /// PageRank outcome.
 #[derive(Clone, Debug)]
@@ -42,8 +42,10 @@ pub fn pagerank(
     tol: f64,
     max_iters: usize,
 ) -> Result<PageRankResult> {
-    anyhow::ensure!(p.nrows() == p.ncols(), "transition matrix must be square");
+    crate::ensure!(p.nrows() == p.ncols(), "transition matrix must be square");
     let n = p.nrows();
+    // Plan once: the transition matrix is fixed across power iterations.
+    let plan = exec.plan(spec, p)?;
     let mut stats = SolveStats::default();
     let mut rank = vec![1.0 / n as f64; n];
     let teleport = (1.0 - damping) / n as f64;
@@ -51,7 +53,7 @@ pub fn pagerank(
     let mut iterations = 0;
 
     for _ in 0..max_iters {
-        let run = exec.run(spec, p, &rank)?;
+        let run = exec.execute(&plan, &rank)?;
         stats.absorb(&run);
         let mut next: Vec<f64> = run.y.iter().map(|v| damping * v + teleport).collect();
         // Redistribute dangling mass so the vector stays a distribution.

@@ -25,10 +25,15 @@ impl Scale {
     }
 }
 
+/// Executor for the drivers: engine from `SPARSEP_ENGINE` /
+/// `SPARSEP_THREADS` (the CLI's `--engine` / `--threads` flags export
+/// them), so every figure driver can run its per-DPU kernel simulations
+/// on host threads; modeled results are engine-independent.
 fn exec(n_dpus: usize, tasklets: usize) -> SpmvExecutor {
-    SpmvExecutor::new(PimSystem {
-        cfg: PimConfig { n_dpus, tasklets, ..Default::default() },
-    })
+    SpmvExecutor::with_engine(
+        PimSystem { cfg: PimConfig { n_dpus, tasklets, ..Default::default() } },
+        crate::coordinator::Engine::from_env(),
+    )
 }
 
 // ---------------------------------------------------------------------
@@ -59,8 +64,11 @@ pub fn e1_tasklet_scaling(scale: Scale) -> Vec<(String, usize, u64)> {
         );
         for spec in &kernels {
             let mut cells = vec![spec.name.clone()];
+            // The plan depends on the DPU count (1 here) and the spec,
+            // not on the tasklet count: plan once, execute per point.
+            let plan = exec(1, 16).plan(spec, m).unwrap();
             for &t in &tasklet_counts {
-                let r = exec(1, t).run(spec, m, &x).unwrap();
+                let r = exec(1, t).execute(&plan, &x).unwrap();
                 cells.push(format!("{:.2}ms", r.breakdown.kernel_s * 1e3));
                 out.push((format!("{}/{}", mname, spec.name), t, r.stats.kernel_cycles));
                 emit_jsonl(
@@ -405,7 +413,9 @@ pub fn e8_one_vs_two(scale: Scale) -> Vec<(String, f64, f64)> {
             specs
                 .iter()
                 .map(|sp| {
-                    let r = exec(n_dpus, 16).run(sp, &m, &x).unwrap();
+                    let ex = exec(n_dpus, 16);
+                    let plan = ex.plan(sp, &m).unwrap();
+                    let r = ex.execute(&plan, &x).unwrap();
                     (sp.name.clone(), r.breakdown.total_s())
                 })
                 .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
@@ -582,7 +592,10 @@ pub fn ablation_hw(scale: Scale) -> Vec<(String, f64)> {
         ),
     ];
     for (name, cfg) in configs {
-        let ex = SpmvExecutor::new(PimSystem { cfg });
+        let ex = SpmvExecutor::with_engine(
+            PimSystem { cfg },
+            crate::coordinator::Engine::from_env(),
+        );
         let r = ex.run(&KernelSpec::coo_nnz_rgrn(), &m, &x).unwrap();
         let b = r.breakdown;
         table.row(&[

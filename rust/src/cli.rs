@@ -5,10 +5,11 @@
 
 use crate::baselines::cpu;
 use crate::bench_harness::figures::{self, Scale};
-use crate::coordinator::{KernelSpec, SpmvExecutor};
+use crate::coordinator::{Engine, KernelSpec, SpmvExecutor};
 use crate::matrix::{generate, CooMatrix, CsrMatrix, DType};
 use crate::pim::{PimConfig, PimSystem};
-use anyhow::{bail, Context, Result};
+use crate::util::{Context, Result};
+use crate::bail;
 use std::collections::HashMap;
 
 /// Parsed command line: positional command + `--key value` flags.
@@ -85,11 +86,32 @@ COMMANDS:
   adaptive --matrix M [--dpus N]  heuristic vs autotuned kernel choice
   solve --app cg|jacobi|pagerank --matrix M [--dpus N]
                                   iterative solver with SpMV on PIM
+  bench-coordinator               plan-once CG wall-clock, serial vs
+      [--rows N] [--deg K] [--iters I] [--dpus N] [--out F]
+                                  threaded; writes BENCH_coordinator.json
   artifacts                       list AOT artifacts + PJRT platform
   xla --rows N --deg K            SpMV through the AOT XLA path, verified
   cpu --rows N --deg K [--threads T]  measured host-CPU baseline
-  help                            this message"
+  help                            this message
+
+ENGINE FLAGS (run / exp / adaptive / solve):
+  --engine serial|threaded        how per-DPU kernel simulations execute
+  --threads N                     worker threads for the threaded engine
+  (results are bit-identical across engines; only wall-clock changes)"
     );
+}
+
+/// Engine selection from `--engine` / `--threads` (defaults to the
+/// `SPARSEP_ENGINE` / `SPARSEP_THREADS` environment, i.e. serial).
+fn engine_from_args(args: &Args) -> Result<Engine> {
+    let threads = args.get_usize("threads", 0)?;
+    match args.get("engine") {
+        None if threads > 0 => Ok(Engine::threaded(threads)),
+        None => Ok(Engine::from_env()),
+        Some("serial") => Ok(Engine::Serial),
+        Some("threaded") => Ok(Engine::threaded(threads)),
+        Some(other) => bail!("unknown --engine {other} (serial|threaded)"),
+    }
 }
 
 fn matrix_by_name(name: &str, seed: u64) -> Result<CooMatrix<f64>> {
@@ -115,7 +137,8 @@ fn run_spec<T: crate::matrix::SpElem>(
 ) -> Result<()> {
     let m: CooMatrix<T> = m64.cast();
     let x: Vec<T> = (0..m.ncols()).map(|i| T::from_f64(((i % 9) as f64) - 4.0)).collect();
-    let r = exec.run(spec, &m, &x)?;
+    let plan = exec.plan(spec, &m)?;
+    let r = exec.execute(&plan, &x)?;
     // Verify against the host oracle.
     let ok = r.y == m.spmv(&x);
     let b = r.breakdown;
@@ -180,7 +203,7 @@ pub fn run(args: Args) -> Result<()> {
                 tasklets: args.get_usize("tasklets", 16)?,
                 ..Default::default()
             };
-            let exec = SpmvExecutor::new(PimSystem::new(cfg)?);
+            let exec = SpmvExecutor::with_engine(PimSystem::new(cfg)?, engine_from_args(&args)?);
             let dt = DType::from_name(args.get("dtype").unwrap_or("fp64"))
                 .context("bad --dtype (int8|int16|int32|int64|fp32|fp64)")?;
             match dt {
@@ -206,6 +229,9 @@ pub fn run(args: Args) -> Result<()> {
             } else {
                 id
             };
+            // Figure drivers build their own executors; publish the
+            // engine choice through the environment so they pick it up.
+            engine_from_args(&args)?.export_env();
             let sc = Scale(args.get_f64("scale", 0.25)?);
             match id.as_str() {
                 "e1" => drop(figures::e1_tasklet_scaling(sc)),
@@ -239,7 +265,7 @@ pub fn run(args: Args) -> Result<()> {
             let mname = args.get("matrix").unwrap_or("sf-mid");
             let m = matrix_by_name(mname, 7)?;
             let cfg = PimConfig { n_dpus: args.get_usize("dpus", 256)?, ..Default::default() };
-            let exec = SpmvExecutor::new(PimSystem::new(cfg)?);
+            let exec = SpmvExecutor::with_engine(PimSystem::new(cfg)?, engine_from_args(&args)?);
             let choice = crate::coordinator::adaptive::select_heuristic(&m, &exec.sys.cfg);
             println!("heuristic  : {}  ({})", choice.spec.name, choice.reason);
             let x: Vec<f64> = (0..m.ncols()).map(|i| (i % 7) as f64).collect();
@@ -258,7 +284,7 @@ pub fn run(args: Args) -> Result<()> {
             let mname = args.get("matrix").unwrap_or("mini-unif");
             let m = matrix_by_name(mname, 7)?;
             let cfg = PimConfig { n_dpus: args.get_usize("dpus", 64)?, ..Default::default() };
-            let exec = SpmvExecutor::new(PimSystem::new(cfg)?);
+            let exec = SpmvExecutor::with_engine(PimSystem::new(cfg)?, engine_from_args(&args)?);
             let spec = crate::coordinator::adaptive::select_heuristic(&m, &exec.sys.cfg).spec;
             println!("matrix {} ({}x{}, {} nnz), kernel {}", mname, m.nrows(), m.ncols(), m.nnz(), spec.name);
             match app {
@@ -293,6 +319,9 @@ pub fn run(args: Args) -> Result<()> {
                 }
                 other => bail!("unknown app {other}"),
             }
+        }
+        "bench-coordinator" => {
+            bench_coordinator(&args)?;
         }
         "artifacts" => {
             let r = crate::runtime::ArtifactRunner::load_default()?;
@@ -355,6 +384,67 @@ pub fn run(args: Args) -> Result<()> {
 
 fn gfl(nnz: usize, s: f64) -> f64 {
     2.0 * nnz as f64 / s / 1e9
+}
+
+/// Wall-clock smoke benchmark for the plan/execute coordinator: CG
+/// iterations on a scale-free SPD system, serial vs threaded engine.
+/// Emits a JSON summary so successive PRs have a perf trajectory.
+fn bench_coordinator(args: &Args) -> Result<()> {
+    let rows = args.get_usize("rows", 100_000)?;
+    let deg = args.get_usize("deg", 8)?;
+    let iters = args.get_usize("iters", 50)?;
+    let n_dpus = args.get_usize("dpus", 256)?;
+    let threads = args.get_usize("threads", cpu::hw_threads())?;
+    let out_path = args.get("out").unwrap_or("BENCH_coordinator.json");
+
+    let base = generate::scale_free::<f64>(rows, rows, deg, 0.6, 7);
+    let a = crate::apps::cg::spd_from(&base);
+    let b = vec![1.0f64; a.nrows()];
+    println!(
+        "bench-coordinator: CG x{iters} on {}x{} ({} nnz), {n_dpus} DPUs, {threads} host threads",
+        a.nrows(),
+        a.ncols(),
+        a.nnz()
+    );
+    let sys = PimSystem::new(PimConfig { n_dpus, ..Default::default() })?;
+    let spec = KernelSpec::coo_nnz();
+    // tol = 0 forces exactly `iters` SpMV iterations (no early exit), so
+    // the two engines do identical work.
+    let wall = |engine: Engine| -> Result<(f64, usize)> {
+        let exec = SpmvExecutor::with_engine(sys.clone(), engine);
+        let t0 = std::time::Instant::now();
+        let r = crate::apps::cg::solve(&exec, &spec, &a, &b, 0.0, iters)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!("  {:<8} {:>8.3}s wall ({} iters)", engine_name(engine), dt, r.stats.iterations);
+        Ok((dt, r.stats.iterations))
+    };
+    let (serial_s, iters_done) = wall(Engine::Serial)?;
+    let (threaded_s, _) = wall(Engine::threaded(threads))?;
+    let speedup = serial_s / threaded_s.max(1e-12);
+    println!("  speedup  {speedup:>8.2}x (threaded vs serial)");
+
+    use crate::util::json::{num, obj, s};
+    let j = obj(vec![
+        ("bench", s("coordinator_cg_plan_execute")),
+        ("rows", num(a.nrows() as f64)),
+        ("nnz", num(a.nnz() as f64)),
+        ("iters", num(iters_done as f64)),
+        ("dpus", num(n_dpus as f64)),
+        ("host_threads", num(threads as f64)),
+        ("host_cores", num(cpu::hw_threads() as f64)),
+        ("serial_wall_s", num(serial_s)),
+        ("threaded_wall_s", num(threaded_s)),
+        ("speedup", num(speedup)),
+    ]);
+    std::fs::write(out_path, j.to_string() + "\n")
+        .with_context(|| format!("write {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+fn engine_name(e: Engine) -> &'static str {
+    use crate::coordinator::ExecutionEngine;
+    e.name()
 }
 
 fn print_solve_stats(st: &crate::apps::SolveStats) {

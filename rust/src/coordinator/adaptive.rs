@@ -102,11 +102,12 @@ pub fn autotune<T: SpElem>(
     m: &CooMatrix<T>,
     x: &[T],
     stripes: usize,
-) -> anyhow::Result<(KernelSpec, Vec<(String, f64)>)> {
+) -> crate::util::Result<(KernelSpec, Vec<(String, f64)>)> {
     let mut ranking = Vec::new();
     let mut best: Option<(KernelSpec, f64)> = None;
     for spec in KernelSpec::all25(stripes) {
-        let r = exec.run(&spec, m, x)?;
+        let plan = exec.plan(&spec, m)?;
+        let r = exec.execute(&plan, x)?;
         let t = r.breakdown.total_s();
         ranking.push((spec.name.clone(), t));
         if best.as_ref().map_or(true, |(_, bt)| t < *bt) {

@@ -1,0 +1,272 @@
+//! Execution engines: how per-DPU kernel simulations are driven.
+//!
+//! A real UPMEM deployment launches all allocated DPUs at once and waits
+//! for the slowest; the simulator used to walk them one by one in the
+//! host thread, which made iterative apps and the figure drivers scale
+//! with `n_dpus` in *wall-clock* even though the modeled system is
+//! parallel. An [`ExecutionEngine`] closes that gap: it maps a pure
+//! per-DPU function over the work items, either serially
+//! ([`SerialEngine`]) or on `std::thread` scoped threads
+//! ([`ThreadedEngine`]).
+//!
+//! Engines only change *where* the per-item closures run. Results are
+//! collected back in item order and every aggregation (output vector,
+//! cycle maxima, energy sums) happens serially afterwards, so the two
+//! engines are bit-identical by construction — a property the
+//! `engine_equivalence` test suite locks in.
+
+/// Strategy for running independent per-DPU work items.
+pub trait ExecutionEngine {
+    /// Engine name for logs and JSON output.
+    fn name(&self) -> &'static str;
+
+    /// Apply `f` to every index in `0..n` and return the results in
+    /// index order. `f` must be pure with respect to ordering: engines
+    /// are free to evaluate indices concurrently and in any order.
+    fn map_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync;
+}
+
+/// Runs every work item on the calling thread, in order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SerialEngine;
+
+impl ExecutionEngine for SerialEngine {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn map_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        (0..n).map(f).collect()
+    }
+}
+
+/// Runs work items on scoped OS threads (no external dependencies).
+///
+/// Workers pull item indices from a shared atomic counter (dynamic load
+/// balancing — skewed per-DPU work cannot strand one worker with all
+/// the heavy slices), and results are reassembled by index — completion
+/// order never leaks into results.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ThreadedEngine {
+    /// Worker count; 0 means "all available hardware threads".
+    pub threads: usize,
+}
+
+impl ThreadedEngine {
+    pub fn new(threads: usize) -> ThreadedEngine {
+        ThreadedEngine { threads }
+    }
+
+    /// Resolved worker count (>= 1).
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+}
+
+impl Default for ThreadedEngine {
+    fn default() -> ThreadedEngine {
+        ThreadedEngine { threads: 0 }
+    }
+}
+
+impl ExecutionEngine for ThreadedEngine {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn map_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let workers = self.effective_threads().min(n);
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+        // Dynamic work distribution: workers pull the next index from a
+        // shared counter, so skewed per-item cost (a hot DPU slice on a
+        // scale-free matrix) cannot gate wall-clock on one unlucky
+        // worker. Each worker tags results with their index and the
+        // reassembly below is by index — bit-deterministic regardless
+        // of which worker ran what.
+        let f = &f;
+        let next = AtomicUsize::new(0);
+        let next = &next;
+        let mut parts: Vec<Vec<(usize, R)>> = Vec::with_capacity(workers);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut local: Vec<(usize, R)> = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, f(i)));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            for h in handles {
+                parts.push(h.join().expect("execution-engine worker panicked"));
+            }
+        });
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in parts.into_iter().flatten() {
+            debug_assert!(out[i].is_none());
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("execution engine missed an index")).collect()
+    }
+}
+
+/// Runtime-selectable engine (what [`super::SpmvExecutor`] carries).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    Serial,
+    Threaded(ThreadedEngine),
+}
+
+impl Engine {
+    /// Threaded engine with `threads` workers (0 = all hardware threads).
+    pub fn threaded(threads: usize) -> Engine {
+        Engine::Threaded(ThreadedEngine::new(threads))
+    }
+
+    /// Engine selection from the environment: `SPARSEP_ENGINE`
+    /// (`serial` | `threaded`, default serial) and `SPARSEP_THREADS`
+    /// (worker count for the threaded engine, default all cores). This
+    /// is how the CLI's `--engine` / `--threads` flags reach code that
+    /// builds its own executors (the bench-harness figure drivers call
+    /// this explicitly; `SpmvExecutor::new` itself stays deterministic
+    /// and defaults to serial).
+    pub fn from_env() -> Engine {
+        let threads = std::env::var("SPARSEP_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(0);
+        match std::env::var("SPARSEP_ENGINE").as_deref() {
+            Ok("threaded") => Engine::threaded(threads),
+            Ok("serial") | Err(_) => Engine::Serial,
+            Ok(other) => {
+                eprintln!(
+                    "warning: unrecognized SPARSEP_ENGINE={other:?} (expected serial|threaded); using serial"
+                );
+                Engine::Serial
+            }
+        }
+    }
+
+    /// Publish this engine choice to the environment (see
+    /// [`Engine::from_env`]). Call before spawning any threads
+    /// (`std::env::set_var` is not thread-safe); the CLI does this once
+    /// at startup, before the first executor exists.
+    pub fn export_env(&self) {
+        match self {
+            Engine::Serial => std::env::set_var("SPARSEP_ENGINE", "serial"),
+            Engine::Threaded(t) => {
+                std::env::set_var("SPARSEP_ENGINE", "threaded");
+                std::env::set_var("SPARSEP_THREADS", t.threads.to_string());
+            }
+        }
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Engine {
+        Engine::Serial
+    }
+}
+
+impl ExecutionEngine for Engine {
+    fn name(&self) -> &'static str {
+        match self {
+            Engine::Serial => SerialEngine.name(),
+            Engine::Threaded(t) => t.name(),
+        }
+    }
+
+    fn map_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        match self {
+            Engine::Serial => SerialEngine.map_indexed(n, f),
+            Engine::Threaded(t) => t.map_indexed(n, f),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_preserves_order() {
+        let v = SerialEngine.map_indexed(5, |i| i * 2);
+        assert_eq!(v, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn threaded_matches_serial_for_any_thread_count() {
+        let work = |i: usize| (i, i * i + 1);
+        let want = SerialEngine.map_indexed(97, work);
+        for t in [1usize, 2, 3, 8, 64, 200] {
+            let got = ThreadedEngine::new(t).map_indexed(97, work);
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn threaded_handles_empty_and_single() {
+        assert_eq!(ThreadedEngine::new(4).map_indexed(0, |i| i), Vec::<usize>::new());
+        assert_eq!(ThreadedEngine::new(4).map_indexed(1, |i| i + 9), vec![9]);
+    }
+
+    #[test]
+    fn threaded_actually_uses_multiple_threads() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        // Per-item work must be slow enough that one worker cannot
+        // drain the whole range before the others are even scheduled
+        // (threads take tens of microseconds to spawn).
+        ThreadedEngine::new(4).map_indexed(64, |i| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_micros(500));
+            i
+        });
+        assert!(ids.lock().unwrap().len() > 1, "expected >1 worker thread");
+    }
+
+    #[test]
+    fn engine_enum_delegates() {
+        assert_eq!(Engine::Serial.name(), "serial");
+        assert_eq!(Engine::threaded(2).name(), "threaded");
+        assert_eq!(
+            Engine::threaded(3).map_indexed(10, |i| i),
+            Engine::Serial.map_indexed(10, |i| i)
+        );
+    }
+
+    #[test]
+    fn effective_threads_resolves_zero() {
+        assert!(ThreadedEngine::new(0).effective_threads() >= 1);
+        assert_eq!(ThreadedEngine::new(6).effective_threads(), 6);
+    }
+}

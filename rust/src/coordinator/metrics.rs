@@ -29,6 +29,15 @@ impl Breakdown {
         self.load_s + self.kernel_s + self.retrieve_s + self.merge_s
     }
 
+    /// Add another iteration's breakdown into this one (used by the
+    /// plan-once/execute-many accumulators).
+    pub fn accumulate(&mut self, other: &Breakdown) {
+        self.load_s += other.load_s;
+        self.kernel_s += other.kernel_s;
+        self.retrieve_s += other.retrieve_s;
+        self.merge_s += other.merge_s;
+    }
+
     /// Fraction of total spent in the kernel (the paper's "how much of
     /// the time is actual SpMV" lens).
     pub fn kernel_fraction(&self) -> f64 {
@@ -117,6 +126,37 @@ impl<T> RunResult<T> {
     }
 }
 
+/// Result of an iterated SpMV (`y <- A*y`, `iters` times) over one plan:
+/// the final iteration's full [`RunResult`] plus cost totals across all
+/// iterations. Produced by [`super::SpmvExecutor::run_iterations`].
+#[derive(Clone, Debug)]
+pub struct IterationsResult<T> {
+    /// The final iteration (its `y` is the overall output).
+    pub last: RunResult<T>,
+    /// Per-iteration breakdowns summed over all iterations.
+    pub total: Breakdown,
+    /// Modeled energy summed over all iterations.
+    pub energy: Energy,
+    pub iters: usize,
+}
+
+impl<T> IterationsResult<T> {
+    /// Final output vector.
+    pub fn y(&self) -> &[T] {
+        &self.last.y
+    }
+
+    /// Mean per-iteration time, seconds.
+    pub fn per_iter_s(&self) -> f64 {
+        self.total.total_s() / self.iters.max(1) as f64
+    }
+
+    /// End-to-end seconds including the one-time matrix placement.
+    pub fn total_with_placement_s(&self) -> f64 {
+        self.last.stats.matrix_load_s + self.total.total_s()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +167,35 @@ mod tests {
         assert_eq!(b.total_s(), 4.0);
         assert_eq!(b.kernel_fraction(), 0.5);
         assert_eq!(b.dominant(), "kernel");
+    }
+
+    #[test]
+    fn accumulate_sums_fields() {
+        let mut acc = Breakdown::default();
+        let b = Breakdown { load_s: 1.0, kernel_s: 2.0, retrieve_s: 0.5, merge_s: 0.25 };
+        acc.accumulate(&b);
+        acc.accumulate(&b);
+        assert_eq!(acc.total_s(), 7.5);
+        assert_eq!(acc.kernel_s, 4.0);
+    }
+
+    #[test]
+    fn iterations_result_helpers() {
+        let last = RunResult {
+            y: vec![1.0f64],
+            breakdown: Breakdown { kernel_s: 1.0, ..Default::default() },
+            stats: RunStats { matrix_load_s: 0.5, ..Default::default() },
+            energy: Energy::default(),
+        };
+        let it = IterationsResult {
+            last,
+            total: Breakdown { kernel_s: 10.0, ..Default::default() },
+            energy: Energy::default(),
+            iters: 5,
+        };
+        assert_eq!(it.y(), &[1.0]);
+        assert_eq!(it.per_iter_s(), 2.0);
+        assert_eq!(it.total_with_placement_s(), 10.5);
     }
 
     #[test]

@@ -1,274 +1,187 @@
 //! The SparseP host coordinator.
 //!
-//! This is the library's front door: given a [`KernelSpec`], a sparse
-//! matrix and an input vector, the executor plans the data partitioning,
-//! models the host->PIM transfers (matrix placement once, input vector
-//! every iteration), runs the per-DPU kernels (exactly, with cycle
-//! accounting), models the gather of outputs / partial results, merges
-//! 2D partials on the host, and returns the exact output vector together
-//! with the paper's load/kernel/retrieve/merge breakdown, structural
-//! statistics and energy estimate.
+//! This is the library's front door, structured as an explicit
+//! three-stage pipeline:
+//!
+//! 1. **Plan** ([`SpmvExecutor::plan`] -> [`ExecutionPlan`]): given a
+//!    [`KernelSpec`] and a sparse matrix, partition the matrix across
+//!    DPUs (1D or 2D), convert every per-DPU slice to the kernel's
+//!    compressed format, and price the transfers (one-time matrix
+//!    placement, per-iteration vector load, output gather, host merge).
+//!    All of it depends only on the matrix and the spec — never on the
+//!    input vector — so iterative apps do it exactly once.
+//! 2. **Execute** ([`SpmvExecutor::execute`]): run the per-DPU kernels
+//!    (exactly, with cycle accounting) over an input vector through an
+//!    [`Engine`] — serially or on real host threads — then merge
+//!    partials and return the exact output together with the paper's
+//!    load/kernel/retrieve/merge breakdown, structural statistics and
+//!    energy estimate. Results are bit-identical across engines.
+//! 3. **Iterate** ([`SpmvExecutor::run_iterations`]): repeated
+//!    self-application `y <- A*y` with accumulated cost, the shape of
+//!    every solver in [`crate::apps`].
+//!
+//! [`SpmvExecutor::run`] remains as the one-shot convenience (plan +
+//! execute in one call) and is what single-SpMV callers should keep
+//! using.
 
 pub mod adaptive;
+pub mod engine;
 pub mod metrics;
+pub mod plan;
 pub mod spec;
 
-pub use metrics::{Breakdown, RunResult, RunStats};
+pub use engine::{Engine, ExecutionEngine, SerialEngine, ThreadedEngine};
+pub use metrics::{Breakdown, IterationsResult, RunResult, RunStats};
+pub use plan::{DpuSlice, ExecutionPlan, WorkItem};
 pub use spec::{KernelSpec, Partitioning};
 
 use crate::kernels::{self, DpuKernelOutput};
-use crate::matrix::{BcooMatrix, BcsrMatrix, CooMatrix, CsrMatrix, Format, SpElem};
-use crate::partition::balance::split_weighted;
-use crate::partition::{balance::split_even, TwoDPartitioner};
-use crate::pim::{calib, transfer, Energy, PimSystem};
-use anyhow::Result;
+use crate::matrix::{CooMatrix, SpElem};
+use crate::pim::{calib, Energy, PimSystem};
+use crate::util::Result;
 
 /// Host-side SpMV executor over a (simulated) PIM system.
 #[derive(Clone, Debug)]
 pub struct SpmvExecutor {
     pub sys: PimSystem,
+    /// How per-DPU kernel simulations are driven (serial or threaded);
+    /// never affects results, only wall-clock.
+    pub engine: Engine,
 }
 
 impl SpmvExecutor {
+    /// Executor with the default (serial) engine.
     pub fn new(sys: PimSystem) -> Self {
-        SpmvExecutor { sys }
+        SpmvExecutor { sys, engine: Engine::Serial }
     }
 
-    /// Execute one SpMV: `y = A * x` under `spec`.
+    /// Executor with an explicit engine.
+    pub fn with_engine(sys: PimSystem, engine: Engine) -> Self {
+        SpmvExecutor { sys, engine }
+    }
+
+    /// Shorthand: threaded engine with `threads` workers (0 = all cores).
+    pub fn threaded(sys: PimSystem, threads: usize) -> Self {
+        Self::with_engine(sys, Engine::threaded(threads))
+    }
+
+    /// Plan `spec` over `m` once: partition, convert per-DPU slices,
+    /// price transfers. Reuse the plan across [`Self::execute`] calls.
+    pub fn plan<T: SpElem>(
+        &self,
+        spec: &KernelSpec,
+        m: &CooMatrix<T>,
+    ) -> Result<ExecutionPlan<T>> {
+        plan::build(&self.sys.cfg, spec, m)
+    }
+
+    /// Execute one SpMV `y = A * x` over a prebuilt plan.
+    pub fn execute<T: SpElem>(
+        &self,
+        plan: &ExecutionPlan<T>,
+        x: &[T],
+    ) -> Result<RunResult<T>> {
+        crate::ensure!(
+            x.len() == plan.ncols(),
+            "x length {} != ncols {}",
+            x.len(),
+            plan.ncols()
+        );
+        crate::ensure!(
+            plan.n_dpus == self.sys.cfg.n_dpus,
+            "plan was built for {} DPUs but the executor has {}",
+            plan.n_dpus,
+            self.sys.cfg.n_dpus
+        );
+        // Plans may legitimately be executed on a different executor
+        // (e.g. sweeping tasklet counts over one plan), so validate this
+        // executor's config too, not just the planning one's — and
+        // reject executors whose bus model disagrees with the one the
+        // plan's transfer costs were priced under.
+        self.sys.cfg.validate()?;
+        crate::ensure!(
+            plan.dpus_per_rank == self.sys.cfg.dpus_per_rank
+                && plan.bus_scale == self.sys.cfg.bus_scale,
+            "plan priced transfers for dpus_per_rank={} bus_scale={} but the executor has dpus_per_rank={} bus_scale={}; re-plan on this executor",
+            plan.dpus_per_rank,
+            plan.bus_scale,
+            self.sys.cfg.dpus_per_rank,
+            self.sys.cfg.bus_scale
+        );
+        let cfg = &self.sys.cfg;
+        let spec = &plan.spec;
+        let items = plan.items();
+
+        // Kernel simulations fan out across the engine; everything after
+        // this line is serial and in item order, so results do not depend
+        // on the engine or on thread scheduling.
+        let outputs: Vec<DpuKernelOutput<T>> =
+            self.engine.map_indexed(items.len(), |i| plan::run_item(cfg, spec, &items[i], x));
+
+        let mut y = vec![T::zero(); plan.nrows()];
+        for (item, out) in items.iter().zip(&outputs) {
+            if item.accumulate {
+                for (i, v) in out.y.iter().enumerate() {
+                    let r = item.y_start + i;
+                    y[r] = y[r].add(*v);
+                }
+            } else {
+                y[item.y_start..item.y_start + out.y.len()].copy_from_slice(&out.y);
+            }
+        }
+
+        Ok(self.finish(plan, &outputs, y))
+    }
+
+    /// Iterated SpMV `y <- A*y`, `iters` times starting from `x`, over a
+    /// prebuilt plan (requires a square matrix for `iters > 1`). Returns
+    /// the final run plus cost totals across all iterations — the
+    /// plan-once/execute-many usage iterative solvers are built on.
+    pub fn run_iterations<T: SpElem>(
+        &self,
+        plan: &ExecutionPlan<T>,
+        x: &[T],
+        iters: usize,
+    ) -> Result<IterationsResult<T>> {
+        crate::ensure!(iters >= 1, "run_iterations needs iters >= 1");
+        crate::ensure!(
+            iters == 1 || plan.nrows() == plan.ncols(),
+            "iterated SpMV needs a square matrix, got {}x{}",
+            plan.nrows(),
+            plan.ncols()
+        );
+        let mut cur = x.to_vec();
+        let mut total = Breakdown::default();
+        let mut energy = Energy::default();
+        let mut last: Option<RunResult<T>> = None;
+        for _ in 0..iters {
+            let r = self.execute(plan, &cur)?;
+            total.accumulate(&r.breakdown);
+            energy = energy.add(r.energy);
+            cur.clone_from(&r.y);
+            last = Some(r);
+        }
+        Ok(IterationsResult { last: last.unwrap(), total, energy, iters })
+    }
+
+    /// Execute one SpMV: `y = A * x` under `spec` (plan + execute in one
+    /// call). Prefer [`Self::plan`] + [`Self::execute`] when the same
+    /// matrix is multiplied more than once.
     pub fn run<T: SpElem>(
         &self,
         spec: &KernelSpec,
         m: &CooMatrix<T>,
         x: &[T],
     ) -> Result<RunResult<T>> {
-        anyhow::ensure!(x.len() == m.ncols(), "x length {} != ncols {}", x.len(), m.ncols());
-        self.sys.cfg.validate()?;
-        match spec.partitioning {
-            Partitioning::OneD(bal) => self.run_one_d(spec, bal, m, x),
-            Partitioning::TwoD(scheme, stripes) => self.run_two_d(spec, scheme, stripes, m, x),
-        }
+        crate::ensure!(x.len() == m.ncols(), "x length {} != ncols {}", x.len(), m.ncols());
+        let plan = self.plan(spec, m)?;
+        self.execute(&plan, x)
     }
 
-    // ------------------------------------------------------------------
-    // 1D: whole rows per DPU + broadcast of the full input vector.
-    // ------------------------------------------------------------------
-    fn run_one_d<T: SpElem>(
-        &self,
-        spec: &KernelSpec,
-        bal: crate::partition::DpuBalance,
-        m: &CooMatrix<T>,
-        x: &[T],
-    ) -> Result<RunResult<T>> {
-        if bal == crate::partition::DpuBalance::NnzElement {
-            anyhow::ensure!(
-                spec.format == Format::Coo,
-                "element-granularity 1D partitioning requires COO (row boundaries are implicit in the other formats)"
-            );
-            return self.run_one_d_elem(spec, m, x);
-        }
-        let cfg = &self.sys.cfg;
-        let n_dpus = cfg.n_dpus;
-        let dt = T::DTYPE;
-
-        // Row ranges per DPU. Blocked formats partition at *block-row*
-        // granularity so a block row never spans two DPUs.
-        let row_ranges: Vec<std::ops::Range<usize>> = if spec.format.is_blocked() {
-            let br = spec.block.0;
-            let nbr = crate::util::ceil_div(m.nrows().max(1), br);
-            let full = BcsrMatrix::from_coo(m, spec.block.0, spec.block.1);
-            let weights: Vec<usize> = match bal {
-                crate::partition::DpuBalance::Rows => vec![1; nbr],
-                crate::partition::DpuBalance::Blocks => {
-                    (0..nbr).map(|i| full.block_row_nblocks(i)).collect()
-                }
-                crate::partition::DpuBalance::Nnz | crate::partition::DpuBalance::NnzElement => {
-                    (0..nbr)
-                        .map(|i| full.block_row_nblocks(i) * spec.block.0 * spec.block.1)
-                        .collect()
-                }
-            };
-            let chunks = match bal {
-                crate::partition::DpuBalance::Rows => split_even(nbr, n_dpus),
-                _ => split_weighted(&weights, n_dpus),
-            };
-            chunks
-                .iter()
-                .map(|c| (c.start * br).min(m.nrows())..(c.end * br).min(m.nrows()))
-                .collect()
-        } else {
-            let p = crate::partition::OneDPartitioner::plan_coo(m, n_dpus, bal);
-            p.row_ranges
-        };
-
-        // Build per-DPU slices and run the kernels.
-        let mut outputs: Vec<DpuKernelOutput<T>> = Vec::with_capacity(n_dpus);
-        let mut slice_bytes = Vec::with_capacity(n_dpus);
-        let mut slice_nnz = Vec::with_capacity(n_dpus);
-        for range in &row_ranges {
-            let slice = m.row_range_slice(range.start, range.end);
-            slice_nnz.push(slice.nnz());
-            let out = run_format_kernel(cfg, spec, &slice, x, &mut slice_bytes);
-            outputs.push(out);
-        }
-
-        // --- transfer model ---
-        // One-time matrix placement (scatter, padded).
-        let mat_load = transfer::scatter(cfg, &slice_bytes);
-        // Per-iteration: broadcast x to every DPU.
-        let x_bytes = m.ncols() * dt.size_bytes();
-        let load = transfer::broadcast(cfg, x_bytes, n_dpus);
-        // Retrieve: gather each DPU's y range (ragged when balancing by
-        // nnz -> padding rule bites).
-        let y_sizes: Vec<usize> =
-            row_ranges.iter().map(|r| r.len() * dt.size_bytes()).collect();
-        let retrieve = transfer::gather(cfg, &y_sizes);
-
-        // --- assemble output ---
-        let mut y = vec![T::zero(); m.nrows()];
-        for (range, out) in row_ranges.iter().zip(&outputs) {
-            y[range.clone()].copy_from_slice(&out.y);
-        }
-
-        Ok(self.finish(spec, m, outputs, slice_nnz, mat_load, load, retrieve, 0, y))
-    }
-
-    // ------------------------------------------------------------------
-    // 1D at element granularity (`COO.nnz`): equal non-zeros per DPU,
-    // rows may span two DPUs; boundary partials merged on the host.
-    // ------------------------------------------------------------------
-    fn run_one_d_elem<T: SpElem>(
-        &self,
-        spec: &KernelSpec,
-        m: &CooMatrix<T>,
-        x: &[T],
-    ) -> Result<RunResult<T>> {
-        let cfg = &self.sys.cfg;
-        let n_dpus = cfg.n_dpus;
-        let dt = T::DTYPE;
-        let ranges = crate::partition::balance::split_elements(m.nnz(), n_dpus);
-
-        let mut outputs: Vec<DpuKernelOutput<T>> = Vec::with_capacity(n_dpus);
-        let mut first_rows = Vec::with_capacity(n_dpus);
-        let mut slice_bytes = Vec::with_capacity(n_dpus);
-        let mut slice_nnz = Vec::with_capacity(n_dpus);
-        let mut y_sizes = Vec::with_capacity(n_dpus);
-        for r in &ranges {
-            let (slice, first_row) = m.element_range_slice(r.start, r.end);
-            slice_nnz.push(slice.nnz());
-            slice_bytes.push(slice.size_bytes());
-            y_sizes.push(slice.nrows() * dt.size_bytes());
-            first_rows.push(first_row);
-            let out =
-                kernels::coo::run_coo_dpu(cfg, &slice, x, spec.tasklet_balance, spec.sync);
-            outputs.push(out);
-        }
-
-        let mat_load = transfer::scatter(cfg, &slice_bytes);
-        let load = transfer::broadcast(cfg, m.ncols() * dt.size_bytes(), n_dpus);
-        let retrieve = transfer::gather(cfg, &y_sizes);
-
-        // Host merge: partials overlap only on the shared boundary rows.
-        let mut y = vec![T::zero(); m.nrows()];
-        let mut partial_rows = 0usize;
-        for (first_row, out) in first_rows.iter().zip(&outputs) {
-            partial_rows += out.y.len();
-            for (i, v) in out.y.iter().enumerate() {
-                let r = first_row + i;
-                y[r] = y[r].add(*v);
-            }
-        }
-        // Only the duplicated boundary rows cost merge work.
-        let covered_rows: usize = m.row_counts().iter().filter(|&&c| c > 0).count();
-        let merged_bytes = partial_rows.saturating_sub(covered_rows) as u64 * dt.size_bytes() as u64;
-
-        Ok(self.finish(spec, m, outputs, slice_nnz, mat_load, load, retrieve, merged_bytes, y))
-    }
-
-    // ------------------------------------------------------------------
-    // 2D: tiles per DPU, x-slices scattered, partials gathered + merged.
-    // ------------------------------------------------------------------
-    fn run_two_d<T: SpElem>(
-        &self,
-        spec: &KernelSpec,
-        scheme: crate::partition::TwoDScheme,
-        stripes: usize,
-        m: &CooMatrix<T>,
-        x: &[T],
-    ) -> Result<RunResult<T>> {
-        let cfg = &self.sys.cfg;
-        let n_dpus = cfg.n_dpus;
-        let dt = T::DTYPE;
-        let plan = TwoDPartitioner::plan(m, n_dpus, stripes, scheme)?;
-
-        let mut outputs: Vec<DpuKernelOutput<T>> = Vec::with_capacity(n_dpus);
-        let mut slice_bytes = Vec::with_capacity(n_dpus);
-        let mut slice_nnz = Vec::with_capacity(n_dpus);
-        let mut x_sizes = Vec::with_capacity(n_dpus);
-        let mut y_sizes = Vec::with_capacity(n_dpus);
-
-        // All stripes in one pass over the matrix (§Perf iteration 7).
-        let stripe_ranges: Vec<std::ops::Range<usize>> = (0..plan.n_col_stripes)
-            .map(|s| plan.tiles[s * plan.n_row_tiles].cols.clone())
-            .collect();
-        let stripes = m.split_col_stripes(&stripe_ranges);
-        for s in 0..plan.n_col_stripes {
-            let stripe_tiles =
-                &plan.tiles[s * plan.n_row_tiles..(s + 1) * plan.n_row_tiles];
-            let cr = stripe_tiles[0].cols.clone();
-            let stripe = &stripes[s];
-            let x_slice = &x[cr.clone()];
-            for tile in stripe_tiles {
-                let slice = stripe.row_range_slice(tile.rows.start, tile.rows.end);
-                slice_nnz.push(slice.nnz());
-                x_sizes.push(cr.len() * dt.size_bytes());
-                y_sizes.push(tile.rows.len() * dt.size_bytes());
-                let out = run_format_kernel(cfg, spec, &slice, x_slice, &mut slice_bytes);
-                outputs.push(out);
-            }
-        }
-
-        // --- transfer model ---
-        let mat_load = transfer::scatter(cfg, &slice_bytes);
-        // Per-iteration: scatter x-slices (every DPU of a stripe gets the
-        // same slice; the runtime still moves one copy per DPU).
-        let load = transfer::scatter(cfg, &x_sizes);
-        // Retrieve: gather partial y per tile — ragged sizes + padding.
-        let retrieve = transfer::gather(cfg, &y_sizes);
-
-        // --- host merge of partials ---
-        let mut y = vec![T::zero(); m.nrows()];
-        let mut merged_bytes = 0u64;
-        for (tile, out) in plan.tiles.iter().zip(&outputs) {
-            for (i, r) in tile.rows.clone().enumerate() {
-                y[r] = y[r].add(out.y[i]);
-            }
-            merged_bytes += (tile.rows.len() * dt.size_bytes()) as u64;
-        }
-
-        Ok(self.finish(
-            spec,
-            m,
-            outputs,
-            slice_nnz,
-            mat_load,
-            load,
-            retrieve,
-            merged_bytes,
-            y,
-        ))
-    }
-
-    #[allow(clippy::too_many_arguments)]
     fn finish<T: SpElem>(
         &self,
-        _spec: &KernelSpec,
-        m: &CooMatrix<T>,
-        outputs: Vec<DpuKernelOutput<T>>,
-        slice_nnz: Vec<usize>,
-        mat_load: transfer::TransferCost,
-        load: transfer::TransferCost,
-        retrieve: transfer::TransferCost,
-        merged_bytes: u64,
+        plan: &ExecutionPlan<T>,
+        outputs: &[DpuKernelOutput<T>],
         y: Vec<T>,
     ) -> RunResult<T> {
         let cfg = &self.sys.cfg;
@@ -276,81 +189,50 @@ impl SpmvExecutor {
             &outputs.iter().map(|o| o.timing).collect::<Vec<_>>(),
         );
         let kernel_s = kernel_cycles as f64 * cfg.cycle_s();
-        let merge_s = merged_bytes as f64 / (calib::HOST_MERGE_GBS * 1e9);
+        let merge_s = plan.merged_bytes as f64 / (calib::HOST_MERGE_GBS * 1e9);
 
         let breakdown = Breakdown {
-            load_s: load.seconds,
+            load_s: plan.load.seconds,
             kernel_s,
-            retrieve_s: retrieve.seconds,
+            retrieve_s: plan.retrieve.seconds,
             merge_s,
         };
 
-        let ideal = m.nnz() as f64 / cfg.n_dpus as f64;
+        let ideal = plan.nnz() as f64 / cfg.n_dpus as f64;
         let dpu_imbalance = if ideal == 0.0 {
             1.0
         } else {
-            slice_nnz.iter().copied().max().unwrap_or(0) as f64 / ideal
+            plan.items().iter().map(|it| it.nnz).max().unwrap_or(0) as f64 / ideal
         };
 
         let per_dpu_s: Vec<f64> =
             outputs.iter().map(|o| o.timing.cycles as f64 * cfg.cycle_s()).collect();
         let energy = Energy::pim_kernel(cfg.n_dpus, &per_dpu_s)
             .add(Energy::transfer(
-                load.moved_bytes + retrieve.moved_bytes,
-                load.seconds + retrieve.seconds,
+                plan.load.moved_bytes + plan.retrieve.moved_bytes,
+                plan.load.seconds + plan.retrieve.seconds,
             ))
             .add(Energy::host(merge_s));
 
         let stats = RunStats {
             dpu_imbalance,
             kernel_cycles,
-            bus_bytes_moved: load.moved_bytes + retrieve.moved_bytes,
-            bus_bytes_payload: load.payload_bytes + retrieve.payload_bytes,
-            matrix_load_s: mat_load.seconds,
+            bus_bytes_moved: plan.load.moved_bytes + plan.retrieve.moved_bytes,
+            bus_bytes_payload: plan.load.payload_bytes + plan.retrieve.payload_bytes,
+            matrix_load_s: plan.mat_load.seconds,
             n_dpus: cfg.n_dpus,
-            nnz: m.nnz(),
+            nnz: plan.nnz(),
         };
 
         RunResult { y, breakdown, stats, energy }
     }
 }
 
-/// Convert a COO slice into `spec.format` and run the matching DPU
-/// kernel; records the slice's storage bytes into `slice_bytes`.
-fn run_format_kernel<T: SpElem>(
-    cfg: &crate::pim::PimConfig,
-    spec: &KernelSpec,
-    slice: &CooMatrix<T>,
-    x: &[T],
-    slice_bytes: &mut Vec<usize>,
-) -> DpuKernelOutput<T> {
-    match spec.format {
-        Format::Csr => {
-            let csr = CsrMatrix::from_coo(slice);
-            slice_bytes.push(csr.size_bytes());
-            kernels::csr::run_csr_dpu(cfg, &csr, x, spec.tasklet_balance, spec.sync)
-        }
-        Format::Coo => {
-            slice_bytes.push(slice.size_bytes());
-            kernels::coo::run_coo_dpu(cfg, slice, x, spec.tasklet_balance, spec.sync)
-        }
-        Format::Bcsr => {
-            let b = BcsrMatrix::from_coo(slice, spec.block.0, spec.block.1);
-            slice_bytes.push(b.size_bytes());
-            kernels::bcsr::run_bcsr_dpu(cfg, &b, x, spec.tasklet_balance, spec.sync)
-        }
-        Format::Bcoo => {
-            let b = BcooMatrix::from_coo(slice, spec.block.0, spec.block.1);
-            slice_bytes.push(b.size_bytes());
-            kernels::bcoo::run_bcoo_dpu(cfg, &b, x, spec.tasklet_balance, spec.sync)
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::generate;
+    use crate::matrix::{generate, Format};
+    use crate::pim::PimConfig;
 
     fn x_for(n: usize) -> Vec<f64> {
         (0..n).map(|i| ((i % 13) as f64) - 6.0).collect()
@@ -366,6 +248,74 @@ mod tests {
             let r = exec.run(&spec, &m, &x).unwrap();
             assert_eq!(r.y, gold, "kernel {} wrong", spec.name);
         }
+    }
+
+    #[test]
+    fn plan_once_execute_many_matches_run() {
+        let m = generate::scale_free::<f64>(400, 400, 7, 0.6, 23);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(16));
+        for spec in [KernelSpec::coo_nnz(), KernelSpec::csr_nnz(), KernelSpec::two_d(Format::Coo, 4)] {
+            let plan = exec.plan(&spec, &m).unwrap();
+            for seed in 0..3u64 {
+                let x: Vec<f64> =
+                    (0..400).map(|i| ((i as u64 * 7 + seed) % 11) as f64 - 5.0).collect();
+                let fresh = exec.run(&spec, &m, &x).unwrap();
+                let reused = exec.execute(&plan, &x).unwrap();
+                assert_eq!(reused.y, fresh.y, "{}", spec.name);
+                assert_eq!(reused.breakdown, fresh.breakdown, "{}", spec.name);
+                assert_eq!(reused.stats, fresh.stats, "{}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn run_iterations_matches_host_power_iteration() {
+        let m = generate::uniform::<f64>(200, 200, 5, 3);
+        let x: Vec<f64> = (0..200).map(|i| ((i % 3) as f64) - 1.0).collect();
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
+        let plan = exec.plan(&KernelSpec::coo_nnz(), &m).unwrap();
+        let it = exec.run_iterations(&plan, &x, 3).unwrap();
+        let mut want = x.clone();
+        for _ in 0..3 {
+            want = m.spmv(&want);
+        }
+        assert_eq!(it.last.y, want);
+        assert_eq!(it.iters, 3);
+        // Totals accumulate three per-iteration breakdowns.
+        assert!(it.total.load_s >= 3.0 * it.last.breakdown.load_s * 0.999);
+        assert!(it.total.total_s() > it.last.breakdown.total_s());
+        assert!(it.energy.total_j() > it.last.energy.total_j());
+    }
+
+    #[test]
+    fn run_iterations_rejects_non_square() {
+        let m = generate::uniform::<f64>(64, 48, 4, 1);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(4));
+        let plan = exec.plan(&KernelSpec::coo_nnz(), &m).unwrap();
+        assert!(exec.run_iterations(&plan, &vec![1.0; 48], 2).is_err());
+        assert!(exec.run_iterations(&plan, &vec![1.0; 48], 1).is_ok());
+    }
+
+    #[test]
+    fn execute_rejects_mismatched_system() {
+        let m = generate::uniform::<f64>(128, 128, 4, 5);
+        let exec8 = SpmvExecutor::new(PimSystem::with_dpus(8));
+        let exec16 = SpmvExecutor::new(PimSystem::with_dpus(16));
+        let plan = exec8.plan(&KernelSpec::csr_nnz(), &m).unwrap();
+        assert!(exec16.execute(&plan, &vec![1.0; 128]).is_err());
+        // Same DPU count but a different bus model: the plan's cached
+        // transfer pricing would be stale -> rejected.
+        let fast_bus = SpmvExecutor::new(PimSystem {
+            cfg: PimConfig { n_dpus: 8, bus_scale: 4.0, ..Default::default() },
+        });
+        assert!(fast_bus.execute(&plan, &vec![1.0; 128]).is_err());
+        // Differing tasklet count is allowed (kernel time is priced at
+        // execute time).
+        let more_tasklets = SpmvExecutor::new(PimSystem {
+            cfg: PimConfig { n_dpus: 8, tasklets: 4, ..Default::default() },
+        });
+        let r = more_tasklets.execute(&plan, &vec![1.0; 128]).unwrap();
+        assert_eq!(r.y, m.spmv(&vec![1.0; 128]));
     }
 
     #[test]
@@ -420,6 +370,8 @@ mod tests {
         let m = generate::banded::<f64>(64, 4, 1);
         let exec = SpmvExecutor::new(PimSystem::with_dpus(4));
         assert!(exec.run(&KernelSpec::csr_row(), &m, &vec![0.0; 63]).is_err());
+        let plan = exec.plan(&KernelSpec::csr_row(), &m).unwrap();
+        assert!(exec.execute(&plan, &vec![0.0; 63]).is_err());
     }
 
     #[test]
@@ -443,5 +395,21 @@ mod tests {
         assert!(r.energy.total_j() > 0.0);
         assert!(r.energy.dpu_j > 0.0);
         assert!(r.energy.bus_j > 0.0);
+    }
+
+    #[test]
+    fn threaded_executor_is_exact_too() {
+        let m = generate::scale_free::<f64>(500, 500, 6, 0.6, 31);
+        let x = x_for(500);
+        let gold = m.spmv(&x);
+        let exec = SpmvExecutor::threaded(
+            PimSystem { cfg: PimConfig { n_dpus: 32, ..Default::default() } },
+            4,
+        );
+        for spec in [KernelSpec::coo_nnz(), KernelSpec::csr_nnz(), KernelSpec::two_d(Format::Coo, 4)]
+        {
+            let r = exec.run(&spec, &m, &x).unwrap();
+            assert_eq!(r.y, gold, "{}", spec.name);
+        }
     }
 }

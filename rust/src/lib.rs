@@ -20,9 +20,12 @@
 //!   synchronization scheme), executed functionally with cycle accounting.
 //! * [`partition`] — 1D and 2D matrix partitioning across DPUs, and
 //!   tasklet-level load balancers.
-//! * [`coordinator`] — the host-side library: plan, transfer, launch,
-//!   retrieve, merge; produces the paper's load/kernel/retrieve/merge
-//!   breakdowns.
+//! * [`coordinator`] — the host-side library, a plan/execute pipeline:
+//!   [`coordinator::SpmvExecutor::plan`] partitions + converts + prices
+//!   transfers once per (matrix, kernel) pair, and
+//!   [`coordinator::SpmvExecutor::execute`] runs the per-DPU kernels —
+//!   serially or on host threads via [`coordinator::Engine`] — and
+//!   produces the paper's load/kernel/retrieve/merge breakdowns.
 //! * [`baselines`] — processor-centric comparators (multithreaded host CPU
 //!   SpMV; analytic CPU/GPU roofline models).
 //! * [`runtime`] — PJRT runtime that loads AOT artifacts (HLO text) built
@@ -30,18 +33,36 @@
 //! * [`bench_harness`] — a small measurement harness (criterion is not
 //!   available offline) + per-figure drivers for the paper's evaluation.
 //!
-//! ## Quickstart
+//! ## Quickstart: plan once, execute many
+//!
+//! Iterative apps (CG, Jacobi, PageRank — hundreds of SpMVs on one
+//! matrix) plan once and stream vectors through the plan; that mirrors
+//! the paper's cost model, where matrix placement is a one-time cost and
+//! only the input vector moves per iteration:
 //!
 //! ```no_run
 //! use sparsep::matrix::generate;
 //! use sparsep::pim::PimSystem;
-//! use sparsep::coordinator::{SpmvExecutor, KernelSpec};
+//! use sparsep::coordinator::{Engine, SpmvExecutor, KernelSpec};
 //!
 //! let m = generate::scale_free::<f32>(10_000, 10_000, 8, 0.6, 7);
-//! let exec = SpmvExecutor::new(PimSystem::with_dpus(256));
+//! // Threaded engine: per-DPU kernel simulations run on host threads
+//! // (results are bit-identical to Engine::Serial).
+//! let exec = SpmvExecutor::with_engine(PimSystem::with_dpus(256), Engine::threaded(0));
+//!
+//! // Plan once: partitioning, per-DPU format conversion, transfer sizing.
+//! let plan = exec.plan(&KernelSpec::csr_nnz(), &m).unwrap();
+//!
+//! // Execute many: only the vector changes per call.
 //! let x = vec![1.0f32; m.ncols()];
-//! let run = exec.run(&KernelSpec::csr_nnz(), &m, &x).unwrap();
+//! let run = exec.execute(&plan, &x).unwrap();
 //! println!("y[0]={} breakdown={:?}", run.y[0], run.breakdown);
+//! let iterated = exec.run_iterations(&plan, &x, 50).unwrap();
+//! println!("50 iterations: {:.3} ms total", iterated.total.total_s() * 1e3);
+//!
+//! // One-shot convenience (plan + execute in one call):
+//! let once = exec.run(&KernelSpec::coo_nnz(), &m, &x).unwrap();
+//! assert_eq!(once.y, run.y);
 //! ```
 
 pub mod util;

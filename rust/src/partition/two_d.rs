@@ -88,9 +88,9 @@ impl TwoDPartitioner {
         n_dpus: usize,
         n_col_stripes: usize,
         scheme: TwoDScheme,
-    ) -> anyhow::Result<TwoDPartition> {
-        anyhow::ensure!(n_col_stripes > 0, "need at least one column stripe");
-        anyhow::ensure!(
+    ) -> crate::util::Result<TwoDPartition> {
+        crate::ensure!(n_col_stripes > 0, "need at least one column stripe");
+        crate::ensure!(
             n_dpus % n_col_stripes == 0,
             "n_dpus {n_dpus} not divisible by column stripes {n_col_stripes}"
         );

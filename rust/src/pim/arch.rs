@@ -49,21 +49,21 @@ impl Default for PimConfig {
 }
 
 impl PimConfig {
-    pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.n_dpus > 0, "need at least one DPU");
-        anyhow::ensure!(
+    pub fn validate(&self) -> crate::util::Result<()> {
+        crate::ensure!(self.n_dpus > 0, "need at least one DPU");
+        crate::ensure!(
             self.n_dpus <= calib::MAX_SYSTEM_DPUS,
             "n_dpus {} exceeds system maximum {}",
             self.n_dpus,
             calib::MAX_SYSTEM_DPUS
         );
-        anyhow::ensure!(
+        crate::ensure!(
             (1..=calib::MAX_TASKLETS).contains(&self.tasklets),
             "tasklets must be in 1..={}",
             calib::MAX_TASKLETS
         );
-        anyhow::ensure!(self.dpus_per_rank > 0, "dpus_per_rank");
-        anyhow::ensure!(self.bus_scale > 0.0, "bus_scale");
+        crate::ensure!(self.dpus_per_rank > 0, "dpus_per_rank");
+        crate::ensure!(self.bus_scale > 0.0, "bus_scale");
         Ok(())
     }
 
@@ -89,7 +89,7 @@ pub struct PimSystem {
 }
 
 impl PimSystem {
-    pub fn new(cfg: PimConfig) -> anyhow::Result<Self> {
+    pub fn new(cfg: PimConfig) -> crate::util::Result<Self> {
         cfg.validate()?;
         Ok(PimSystem { cfg })
     }

@@ -11,7 +11,7 @@
 use super::{ArtifactMeta, ArtifactRunner};
 use crate::matrix::dense::EllMatrix;
 use crate::matrix::CsrMatrix;
-use anyhow::{Context, Result};
+use crate::util::{Context, Result};
 
 /// A CSR matrix staged into one ELL artifact bucket.
 pub struct StagedEll {
@@ -42,7 +42,7 @@ pub fn stage(runner: &ArtifactRunner, csr: &CsrMatrix<f32>) -> Result<StagedEll>
                 k_needed
             )
         })?;
-    anyhow::ensure!(
+    crate::ensure!(
         meta.dims["n"] >= csr.ncols(),
         "artifact x length {} < matrix cols {}",
         meta.dims["n"],
@@ -73,7 +73,7 @@ pub fn stage(runner: &ArtifactRunner, csr: &CsrMatrix<f32>) -> Result<StagedEll>
 impl StagedEll {
     /// Execute `y = A @ x` through the artifact; truncates to logical rows.
     pub fn spmv(&self, runner: &ArtifactRunner, x: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(x.len() == self.ncols, "x length");
+        crate::ensure!(x.len() == self.ncols, "x length");
         let mut xp = vec![0f32; self.n_padded];
         xp[..x.len()].copy_from_slice(x);
         let mut y = runner.run_ell_f32(&self.artifact, &self.vals, &self.cols, &xp)?;

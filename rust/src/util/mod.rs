@@ -1,11 +1,15 @@
 //! Small self-contained utilities.
 //!
-//! The offline vendor set does not include `rand`, `serde` or `criterion`,
-//! so this module carries a deterministic PRNG, a tiny JSON writer and a
-//! few numeric helpers used across the crate.
+//! The offline vendor set does not include `rand`, `serde`, `anyhow` or
+//! `criterion`, so this module carries a deterministic PRNG, a tiny JSON
+//! writer, a minimal error type and a few numeric helpers used across
+//! the crate.
 
+pub mod error;
 pub mod rng;
 pub mod json;
+
+pub use error::{Context, Error, Result};
 
 /// Integer ceiling division.
 #[inline]

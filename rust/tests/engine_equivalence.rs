@@ -1,0 +1,136 @@
+//! Property tests for the execution engines: `SerialEngine` and
+//! `ThreadedEngine` must produce bit-identical `RunResult`s — output
+//! vector, breakdown, stats (cycles included) and energy — across
+//! formats x balancing schemes x sync schemes x thread counts, on both
+//! canonical and randomized inputs. The engines only move *where* the
+//! per-DPU simulations run; any divergence is a determinism bug.
+
+use sparsep::coordinator::{Engine, KernelSpec, Partitioning, RunResult, SpmvExecutor};
+use sparsep::kernels::SyncScheme;
+use sparsep::matrix::{CooMatrix, SpElem};
+use sparsep::pim::{PimConfig, PimSystem};
+use sparsep::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn assert_identical<T: SpElem>(a: &RunResult<T>, b: &RunResult<T>, tag: &str) {
+    assert_eq!(a.y, b.y, "{tag}: output vector differs");
+    assert_eq!(a.breakdown, b.breakdown, "{tag}: breakdown differs");
+    assert_eq!(a.stats, b.stats, "{tag}: stats differ");
+    assert_eq!(a.energy, b.energy, "{tag}: energy differs");
+}
+
+/// Run one (spec, matrix, system) with the serial engine and every
+/// threaded width, asserting bit-identical results throughout.
+fn check_engines<T: SpElem>(spec: &KernelSpec, m: &CooMatrix<T>, x: &[T], n_dpus: usize) {
+    let sys = || PimSystem {
+        cfg: PimConfig { n_dpus, ..Default::default() },
+    };
+    let serial_exec = SpmvExecutor::with_engine(sys(), Engine::Serial);
+    let serial = serial_exec.run(spec, m, x).unwrap();
+    for t in THREAD_COUNTS {
+        let exec = SpmvExecutor::with_engine(sys(), Engine::threaded(t));
+        let threaded = exec.run(spec, m, x).unwrap();
+        assert_identical(&serial, &threaded, &format!("{} d={n_dpus} t={t}", spec.name));
+        // Plan reuse must be deterministic too: executing the same plan
+        // twice on the threaded engine is bit-stable.
+        let plan = exec.plan(spec, m).unwrap();
+        let r1 = exec.execute(&plan, x).unwrap();
+        let r2 = exec.execute(&plan, x).unwrap();
+        assert_identical(&r1, &r2, &format!("{} plan-reuse t={t}", spec.name));
+        assert_identical(&serial, &r1, &format!("{} plan-vs-run t={t}", spec.name));
+    }
+}
+
+/// PROPERTY: all 25 kernels (formats x partitionings x balancing) are
+/// engine-independent on a skewed matrix — the case where per-DPU work,
+/// and therefore thread scheduling, is most uneven.
+#[test]
+fn prop_all25_identical_across_engines() {
+    let m = sparsep::matrix::generate::scale_free::<f64>(600, 600, 7, 0.7, 19);
+    let x: Vec<f64> = (0..600).map(|i| ((i % 13) as f64) - 6.0).collect();
+    for spec in KernelSpec::all25(4) {
+        check_engines(&spec, &m, &x, 16);
+    }
+}
+
+/// PROPERTY: the three sync schemes (which change per-tasklet cycle
+/// accounting, the part aggregated across threads) stay identical.
+#[test]
+fn prop_sync_schemes_identical_across_engines() {
+    let m = sparsep::matrix::generate::scale_free::<f64>(400, 400, 10, 0.8, 5);
+    let x: Vec<f64> = (0..400).map(|i| ((i % 9) as f64) - 4.0).collect();
+    for base in [KernelSpec::coo_nnz(), KernelSpec::bcoo_block()] {
+        for sync in [SyncScheme::LockFree, SyncScheme::CoarseLock, SyncScheme::FineLock] {
+            check_engines(&base.clone().with_sync(sync), &m, &x, 8);
+        }
+    }
+}
+
+/// PROPERTY: randomized (matrix, kernel, system) triples are engine-
+/// independent — including thread counts exceeding the DPU count and
+/// DPU counts that leave some workers empty.
+#[test]
+fn prop_random_runs_identical_across_engines() {
+    let mut rng = Rng::new(0xE9E9);
+    for trial in 0..40 {
+        let nrows = 1 + rng.gen_range(250);
+        let ncols = 1 + rng.gen_range(250);
+        let nnz = rng.gen_range(4 * nrows.min(ncols) + 1);
+        let triples: Vec<(u32, u32, f64)> = (0..nnz)
+            .map(|_| {
+                (
+                    rng.gen_range(nrows) as u32,
+                    rng.gen_range(ncols) as u32,
+                    (rng.gen_range(9) as f64) - 4.0,
+                )
+            })
+            .collect();
+        let m = CooMatrix::from_triples(nrows, ncols, triples);
+        let all = KernelSpec::all25(1 + rng.gen_range(8));
+        let spec = all[rng.gen_range(all.len())].clone();
+        let n_dpus = 1 + rng.gen_range(60);
+        let n_dpus = match spec.partitioning {
+            Partitioning::TwoD(_, stripes) => {
+                sparsep::util::round_up(n_dpus.max(stripes), stripes)
+            }
+            _ => n_dpus,
+        };
+        let x: Vec<f64> = (0..m.ncols()).map(|i| ((i % 11) as f64) - 5.0).collect();
+        let _ = trial;
+        check_engines(&spec, &m, &x, n_dpus);
+    }
+}
+
+/// PROPERTY: integer kernels (wrapping arithmetic) are engine-independent
+/// too — a different code path through the MAC accounting.
+#[test]
+fn prop_integer_runs_identical_across_engines() {
+    let m64 = sparsep::matrix::generate::uniform::<f64>(300, 300, 8, 13);
+    let mi: CooMatrix<i32> = m64.cast();
+    let x: Vec<i32> = (0..300).map(|i| (i % 7) as i32 - 3).collect();
+    for spec in [KernelSpec::coo_nnz(), KernelSpec::csr_nnz(), KernelSpec::bcoo_nnz()] {
+        check_engines(&spec, &mi, &x, 12);
+    }
+}
+
+/// PROPERTY: iterated execution over one plan is engine-independent
+/// end to end (vector feedback amplifies any divergence).
+#[test]
+fn prop_run_iterations_identical_across_engines() {
+    let m = sparsep::matrix::generate::uniform::<f64>(256, 256, 6, 29);
+    let x: Vec<f64> = (0..256).map(|i| ((i % 5) as f64) - 2.0).collect();
+    let spec = KernelSpec::coo_nnz();
+    let sys = || PimSystem::with_dpus(16);
+    let se = SpmvExecutor::with_engine(sys(), Engine::Serial);
+    let sp = se.plan(&spec, &m).unwrap();
+    let serial = se.run_iterations(&sp, &x, 5).unwrap();
+    for t in THREAD_COUNTS {
+        let te = SpmvExecutor::with_engine(sys(), Engine::threaded(t));
+        let tp = te.plan(&spec, &m).unwrap();
+        let threaded = te.run_iterations(&tp, &x, 5).unwrap();
+        assert_identical(&serial.last, &threaded.last, &format!("iterations t={t}"));
+        assert_eq!(serial.total, threaded.total, "iteration totals t={t}");
+        assert_eq!(serial.energy, threaded.energy, "iteration energy t={t}");
+    }
+}

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Coordinator perf smoke: wall-clock of 50 plan-once CG iterations on a
+# 100k x 100k scale-free SPD system, serial vs threaded engine. Emits
+# BENCH_coordinator.json at the repo root so successive PRs can track
+# the perf trajectory. Knobs:
+#
+#   BENCH_ROWS   (default 100000)   matrix dimension
+#   BENCH_ITERS  (default 50)       CG iterations
+#   BENCH_DPUS   (default 256)      simulated DPU count
+#   BENCH_THREADS (default: nproc)  threaded-engine workers
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+THREADS="${BENCH_THREADS:-$(nproc 2>/dev/null || echo 4)}"
+
+cargo run --release -- bench-coordinator \
+  --rows "${BENCH_ROWS:-100000}" \
+  --deg 8 \
+  --iters "${BENCH_ITERS:-50}" \
+  --dpus "${BENCH_DPUS:-256}" \
+  --threads "$THREADS" \
+  --out BENCH_coordinator.json
+
+cat BENCH_coordinator.json

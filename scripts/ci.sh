@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 gate + release examples: what every PR must keep green.
+#
+#   scripts/ci.sh            # build + test + examples
+#   SKIP_EXAMPLES=1 scripts/ci.sh   # tier-1 only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [[ "${SKIP_EXAMPLES:-0}" != "1" ]]; then
+  for ex in quickstart format_explorer scaling_study e2e_characterization; do
+    echo "== example: $ex (release) =="
+    cargo run --release --example "$ex"
+  done
+fi
+
+echo "CI OK"

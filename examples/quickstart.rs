@@ -67,7 +67,28 @@ fn main() -> sparsep::util::Result<()> {
         it.last.stats.matrix_load_s * 1e3
     );
 
-    // 6. The same matrix through every kernel family, one line each.
+    // 6. Batched serving (SpMM-style): a burst of queries against the
+    //    resident matrix executes as one engine wave — bit-identical to
+    //    looping execute, but the matrix streams once per vector block.
+    //    A PlanCache gives the same plan-once behavior to callers with
+    //    no place to hold plans (CLI commands, request handlers).
+    let cache: sparsep::coordinator::PlanCache<f32> = sparsep::coordinator::PlanCache::new();
+    let served = cache.plan(&exec, &KernelSpec::coo_nnz_rgrn(), &m)?;
+    let xs: Vec<Vec<f32>> = (0..8)
+        .map(|s| (0..m.ncols()).map(|i| ((i + s) % 5) as f32 - 2.0).collect())
+        .collect();
+    let batch = exec.execute_batch(&served, &xs)?;
+    assert_eq!(batch.runs[3].y, m.spmv(&xs[3]), "batched outputs are exact too");
+    println!(
+        "batched serving: {} vectors in one wave, {:.3} ms modeled total (cache: {} miss, {} hit capacity {})",
+        batch.len(),
+        batch.total().total_s() * 1e3,
+        cache.misses(),
+        cache.hits(),
+        cache.capacity()
+    );
+
+    // 7. The same matrix through every kernel family, one line each.
     println!("\nall-25 sweep (total end-to-end ms):");
     for spec in KernelSpec::all25(8) {
         let p = exec.plan(&spec, &m)?;

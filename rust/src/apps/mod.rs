@@ -53,7 +53,3 @@ pub(crate) fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// Euclidean norm.
-pub(crate) fn norm2(a: &[f64]) -> f64 {
-    dot(a, a).sqrt()
-}

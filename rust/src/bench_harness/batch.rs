@@ -1,0 +1,179 @@
+//! Batched-serving wall-clock benchmark (`sparsep bench-batch`).
+//!
+//! Measures the amortization the SpMM-style serving path buys: a batch
+//! of right-hand sides multiplied against one resident matrix through
+//! [`SpmvExecutor::execute_batch`] versus the same vectors looped
+//! through single-vector [`SpmvExecutor::execute`], on both engines.
+//! Plans come from a [`PlanCache`] (the serving-caller shape), and the
+//! JSON summary lands in `BENCH_batch.json` so successive PRs can track
+//! the batched-throughput trajectory next to `BENCH_coordinator.json`.
+
+use crate::coordinator::{Engine, KernelSpec, PlanCache, SpmvExecutor, VECTOR_BLOCK};
+use crate::matrix::generate;
+use crate::pim::{PimConfig, PimSystem};
+use crate::util::json::{num, obj, s};
+use crate::util::{Context, Result};
+use std::time::Instant;
+
+/// Knobs for [`run`] (CLI flags of `sparsep bench-batch`).
+#[derive(Clone, Debug)]
+pub struct BatchBenchOpts {
+    /// Matrix dimension (square, scale-free class).
+    pub rows: usize,
+    /// Average degree (non-zeros per row).
+    pub deg: usize,
+    /// Number of right-hand-side vectors.
+    pub batch: usize,
+    /// Simulated DPU count.
+    pub n_dpus: usize,
+    /// Threaded-engine worker count (0 = all cores).
+    pub threads: usize,
+    /// Kernel name (see `sparsep kernels`).
+    pub kernel: String,
+    /// Timed samples per measurement (min is reported).
+    pub samples: usize,
+    /// Output JSON path.
+    pub out: String,
+}
+
+impl Default for BatchBenchOpts {
+    fn default() -> BatchBenchOpts {
+        BatchBenchOpts {
+            rows: 50_000,
+            deg: 8,
+            batch: 32,
+            n_dpus: 256,
+            threads: 0,
+            kernel: "CSR.nnz".to_string(),
+            samples: 2,
+            out: "BENCH_batch.json".to_string(),
+        }
+    }
+}
+
+/// Run the benchmark and write the JSON summary to `opts.out`.
+pub fn run(opts: &BatchBenchOpts) -> Result<()> {
+    crate::ensure!(opts.batch >= 1, "bench-batch needs --batch >= 1");
+    crate::ensure!(opts.samples >= 1, "bench-batch needs --samples >= 1");
+    let spec = KernelSpec::by_name(&opts.kernel, 8)
+        .with_context(|| format!("unknown kernel {} (see `sparsep kernels`)", opts.kernel))?;
+    let m = generate::scale_free::<f64>(opts.rows, opts.rows, opts.deg, 0.6, 7);
+    let xs: Vec<Vec<f64>> = (0..opts.batch)
+        .map(|b| (0..m.ncols()).map(|i| ((i + 3 * b) % 9) as f64 - 4.0).collect())
+        .collect();
+    let sys = PimSystem::new(PimConfig { n_dpus: opts.n_dpus, ..Default::default() })?;
+    println!(
+        "bench-batch: {} x{} vectors on {}x{} ({} nnz), {} DPUs, vector block {}",
+        spec.name,
+        opts.batch,
+        m.nrows(),
+        m.ncols(),
+        m.nnz(),
+        opts.n_dpus,
+        VECTOR_BLOCK
+    );
+
+    // One shared cache: the looped and batched runs of each engine (and
+    // across engines with an identical bus model) plan exactly once.
+    let cache: PlanCache<f64> = PlanCache::new();
+    let wall = |engine: Engine| -> Result<(f64, f64)> {
+        let exec = SpmvExecutor::with_engine(sys.clone(), engine);
+        let plan = cache.plan(&exec, &spec, &m)?;
+        // Warmup + sanity: the batched path must agree with the looped
+        // one bit-for-bit.
+        let warm_single = exec.execute(&plan, &xs[0])?;
+        let warm_batch = exec.execute_batch(&plan, &xs[..2.min(xs.len())])?;
+        crate::ensure!(
+            warm_batch.runs[0].y == warm_single.y,
+            "batched output diverged from single-vector output"
+        );
+        let mut looped = f64::INFINITY;
+        let mut batched = f64::INFINITY;
+        for _ in 0..opts.samples {
+            let t0 = Instant::now();
+            for x in &xs {
+                let r = exec.execute(&plan, x)?;
+                std::hint::black_box(&r.y);
+            }
+            looped = looped.min(t0.elapsed().as_secs_f64());
+            let t1 = Instant::now();
+            let b = exec.execute_batch(&plan, &xs)?;
+            std::hint::black_box(&b.runs.last().unwrap().y);
+            batched = batched.min(t1.elapsed().as_secs_f64());
+        }
+        Ok((looped, batched))
+    };
+
+    let (serial_looped, serial_batched) = wall(Engine::Serial)?;
+    let (thr_looped, thr_batched) = wall(Engine::threaded(opts.threads))?;
+    let report = |name: &str, looped: f64, batched: f64| {
+        println!(
+            "  {:<8} looped {:>8.3}s | batched {:>8.3}s | speedup {:>5.2}x",
+            name,
+            looped,
+            batched,
+            looped / batched.max(1e-12)
+        );
+    };
+    report("serial", serial_looped, serial_batched);
+    report("threaded", thr_looped, thr_batched);
+    println!(
+        "  plan cache: {} hit(s), {} miss(es), {} resident",
+        cache.hits(),
+        cache.misses(),
+        cache.len()
+    );
+
+    let j = obj(vec![
+        ("bench", s("batch_spmm_serving")),
+        ("kernel", s(&spec.name)),
+        ("rows", num(m.nrows() as f64)),
+        ("nnz", num(m.nnz() as f64)),
+        ("batch", num(opts.batch as f64)),
+        ("vector_block", num(VECTOR_BLOCK as f64)),
+        ("dpus", num(opts.n_dpus as f64)),
+        ("host_threads", num(opts.threads as f64)),
+        ("samples", num(opts.samples as f64)),
+        ("serial_looped_wall_s", num(serial_looped)),
+        ("serial_batched_wall_s", num(serial_batched)),
+        ("threaded_looped_wall_s", num(thr_looped)),
+        ("threaded_batched_wall_s", num(thr_batched)),
+        ("serial_speedup", num(serial_looped / serial_batched.max(1e-12))),
+        ("threaded_speedup", num(thr_looped / thr_batched.max(1e-12))),
+        ("plan_cache_hits", num(cache.hits() as f64)),
+        ("plan_cache_misses", num(cache.misses() as f64)),
+    ]);
+    std::fs::write(&opts.out, j.to_string() + "\n")
+        .with_context(|| format!("write {}", opts.out))?;
+    println!("wrote {}", opts.out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_batch_smoke_writes_json() {
+        let dir = std::env::temp_dir().join("sparsep_bench_batch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_batch_test.json");
+        let opts = BatchBenchOpts {
+            rows: 400,
+            deg: 4,
+            batch: 5,
+            n_dpus: 8,
+            threads: 2,
+            samples: 1,
+            out: out.to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+        let txt = std::fs::read_to_string(&out).unwrap();
+        let j = crate::util::json::Json::parse(&txt).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("batch_spmm_serving"));
+        assert_eq!(j.get("batch").as_usize(), Some(5));
+        assert!(j.get("threaded_batched_wall_s").as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&out).ok();
+    }
+}

@@ -7,6 +7,7 @@
 //! regenerate every table/figure of the paper's evaluation (see
 //! DESIGN.md §3 for the experiment index).
 
+pub mod batch;
 pub mod figures;
 
 use std::time::Instant;

@@ -78,6 +78,8 @@ COMMANDS:
   suite [--full]                  print the matrix-suite table (Table 2)
   run --kernel K --matrix M       run one kernel; flags:
       [--dpus N] [--tasklets T] [--dtype D] [--stripes S] [--seed X]
+      [--batch B]                 B > 1: batched SpMM-style execution of
+                                  B vectors over one plan, all verified
   exp <id> [--scale F] [--full]   regenerate an experiment:
       e1 tasklet-scaling   e2 sync-schemes    e3 dtype
       e4 block-formats     e5 1d-scaling      e6 1d-breakdown
@@ -86,9 +88,15 @@ COMMANDS:
   adaptive --matrix M [--dpus N]  heuristic vs autotuned kernel choice
   solve --app cg|jacobi|pagerank --matrix M [--dpus N]
                                   iterative solver with SpMV on PIM
+      [--seeds a,b,c]             pagerank only: multi-seed personalized
+                                  PageRank via the batched serving path
   bench-coordinator               plan-once CG wall-clock, serial vs
       [--rows N] [--deg K] [--iters I] [--dpus N] [--out F]
                                   threaded; writes BENCH_coordinator.json
+  bench-batch                     batched vs looped single-vector SpMV
+      [--rows N] [--deg K] [--batch B] [--dpus N] [--kernel K]
+      [--threads T] [--samples S] [--out F]
+                                  wall-clock; writes BENCH_batch.json
   artifacts                       list AOT artifacts + PJRT platform
   xla --rows N --deg K            SpMV through the AOT XLA path, verified
   cpu --rows N --deg K [--threads T]  measured host-CPU baseline
@@ -134,10 +142,14 @@ fn run_spec<T: crate::matrix::SpElem>(
     spec: &KernelSpec,
     m64: &CooMatrix<f64>,
     exec: &SpmvExecutor,
+    batch: usize,
 ) -> Result<()> {
     let m: CooMatrix<T> = m64.cast();
-    let x: Vec<T> = (0..m.ncols()).map(|i| T::from_f64(((i % 9) as f64) - 4.0)).collect();
     let plan = exec.plan(spec, &m)?;
+    if batch > 1 {
+        return run_spec_batch(spec, &m, exec, &plan, batch);
+    }
+    let x: Vec<T> = (0..m.ncols()).map(|i| T::from_f64(((i % 9) as f64) - 4.0)).collect();
     let r = exec.execute(&plan, &x)?;
     // Verify against the host oracle.
     let ok = r.y == m.spmv(&x);
@@ -162,6 +174,52 @@ fn run_spec<T: crate::matrix::SpElem>(
         r.energy.total_j(), r.energy.dpu_j + r.energy.dpu_idle_j, r.energy.bus_j, r.energy.host_j);
     if !ok {
         bail!("verification failed");
+    }
+    Ok(())
+}
+
+/// Batched `run`: B deterministic vectors through one plan via
+/// [`SpmvExecutor::execute_batch`], every output verified against the
+/// host oracle.
+fn run_spec_batch<T: crate::matrix::SpElem>(
+    spec: &KernelSpec,
+    m: &CooMatrix<T>,
+    exec: &SpmvExecutor,
+    plan: &crate::coordinator::ExecutionPlan<T>,
+    batch: usize,
+) -> Result<()> {
+    let xs: Vec<Vec<T>> = (0..batch)
+        .map(|b| {
+            (0..m.ncols()).map(|i| T::from_f64((((i + 3 * b) % 9) as f64) - 4.0)).collect()
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let res = exec.execute_batch(plan, &xs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let ok = res.runs.iter().zip(&xs).all(|(r, x)| r.y == m.spmv(x));
+    let total = res.total();
+    println!("kernel     : {} (batched x{batch})", spec.name);
+    println!("dtype      : {}", T::DTYPE.name());
+    println!("matrix     : {} x {}, {} nnz", m.nrows(), m.ncols(), m.nnz());
+    println!("dpus       : {} ({} tasklets)", exec.sys.n_dpus(), exec.sys.tasklets());
+    println!(
+        "verified   : {}",
+        if ok { "OK (all outputs match host oracle)" } else { "MISMATCH" }
+    );
+    println!("matrix load: {:.3} ms (one-time, shared by the whole batch)", plan.matrix_load_s() * 1e3);
+    println!(
+        "modeled    : {:.3} ms total over the batch ({:.3} ms/vector)",
+        total.total_s() * 1e3,
+        total.total_s() / batch as f64 * 1e3
+    );
+    println!(
+        "host wall  : {:.3} ms for the batch ({:.3} ms/vector, {} engine)",
+        wall * 1e3,
+        wall / batch as f64 * 1e3,
+        engine_name(exec.engine)
+    );
+    if !ok {
+        bail!("batched verification failed");
     }
     Ok(())
 }
@@ -206,13 +264,14 @@ pub fn run(args: Args) -> Result<()> {
             let exec = SpmvExecutor::with_engine(PimSystem::new(cfg)?, engine_from_args(&args)?);
             let dt = DType::from_name(args.get("dtype").unwrap_or("fp64"))
                 .context("bad --dtype (int8|int16|int32|int64|fp32|fp64)")?;
+            let batch = args.get_usize("batch", 1)?;
             match dt {
-                DType::I8 => run_spec::<i8>(&spec, &m, &exec)?,
-                DType::I16 => run_spec::<i16>(&spec, &m, &exec)?,
-                DType::I32 => run_spec::<i32>(&spec, &m, &exec)?,
-                DType::I64 => run_spec::<i64>(&spec, &m, &exec)?,
-                DType::F32 => run_spec::<f32>(&spec, &m, &exec)?,
-                DType::F64 => run_spec::<f64>(&spec, &m, &exec)?,
+                DType::I8 => run_spec::<i8>(&spec, &m, &exec, batch)?,
+                DType::I16 => run_spec::<i16>(&spec, &m, &exec, batch)?,
+                DType::I32 => run_spec::<i32>(&spec, &m, &exec, batch)?,
+                DType::I64 => run_spec::<i64>(&spec, &m, &exec, batch)?,
+                DType::F32 => run_spec::<f32>(&spec, &m, &exec, batch)?,
+                DType::F64 => run_spec::<f64>(&spec, &m, &exec, batch)?,
             }
         }
         "exp" => {
@@ -309,19 +368,60 @@ pub fn run(args: Args) -> Result<()> {
                 }
                 "pagerank" => {
                     let p = crate::apps::pagerank::transition_matrix(&m);
-                    let r = crate::apps::pagerank::pagerank(&exec, &spec, &p, 0.85, 1e-9, 200)?;
-                    let mut top: Vec<(usize, f64)> =
-                        r.ranks.iter().copied().enumerate().collect();
-                    top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-                    println!("PageRank: converged={} iters={}", r.converged, r.iterations);
-                    println!("top nodes: {:?}", &top[..top.len().min(5)]);
-                    print_solve_stats(&r.stats);
+                    if let Some(list) = args.get("seeds") {
+                        // Multi-seed personalized PageRank: one batched
+                        // power iteration serves every seed.
+                        let seeds: Vec<usize> = list
+                            .split(',')
+                            .map(|t| t.trim().parse::<usize>())
+                            .collect::<std::result::Result<_, _>>()
+                            .context("--seeds must be a comma-separated list of node ids")?;
+                        let r = crate::apps::pagerank::personalized_pagerank(
+                            &exec, &spec, &p, &seeds, 0.85, 1e-9, 200,
+                        )?;
+                        println!(
+                            "personalized PageRank: {} seeds, converged={} iters={}",
+                            seeds.len(),
+                            r.converged,
+                            r.iterations
+                        );
+                        for (ranks, &seed) in r.ranks.iter().zip(&seeds) {
+                            let mut top: Vec<(usize, f64)> =
+                                ranks.iter().copied().enumerate().collect();
+                            top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                            println!("  seed {seed}: top {:?}", &top[..top.len().min(3)]);
+                        }
+                        print_solve_stats(&r.stats);
+                    } else {
+                        let r =
+                            crate::apps::pagerank::pagerank(&exec, &spec, &p, 0.85, 1e-9, 200)?;
+                        let mut top: Vec<(usize, f64)> =
+                            r.ranks.iter().copied().enumerate().collect();
+                        top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                        println!("PageRank: converged={} iters={}", r.converged, r.iterations);
+                        println!("top nodes: {:?}", &top[..top.len().min(5)]);
+                        print_solve_stats(&r.stats);
+                    }
                 }
                 other => bail!("unknown app {other}"),
             }
         }
         "bench-coordinator" => {
             bench_coordinator(&args)?;
+        }
+        "bench-batch" => {
+            let d = crate::bench_harness::batch::BatchBenchOpts::default();
+            let opts = crate::bench_harness::batch::BatchBenchOpts {
+                rows: args.get_usize("rows", d.rows)?,
+                deg: args.get_usize("deg", d.deg)?,
+                batch: args.get_usize("batch", d.batch)?,
+                n_dpus: args.get_usize("dpus", d.n_dpus)?,
+                threads: args.get_usize("threads", cpu::hw_threads())?,
+                kernel: args.get("kernel").unwrap_or(d.kernel.as_str()).to_string(),
+                samples: args.get_usize("samples", d.samples)?,
+                out: args.get("out").unwrap_or(d.out.as_str()).to_string(),
+            };
+            crate::bench_harness::batch::run(&opts)?;
         }
         "artifacts" => {
             let r = crate::runtime::ArtifactRunner::load_default()?;
@@ -502,5 +602,32 @@ mod tests {
     #[test]
     fn kernels_command_smoke() {
         run(Args::parse(["kernels"].map(String::from)).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn run_command_batched_smoke() {
+        let a = Args::parse(
+            ["run", "--kernel", "CSR.nnz", "--matrix", "mini-band", "--dpus", "8", "--batch", "5"]
+                .map(String::from),
+        )
+        .unwrap();
+        run(a).unwrap();
+    }
+
+    #[test]
+    fn solve_personalized_pagerank_smoke() {
+        let a = Args::parse(
+            ["solve", "--app", "pagerank", "--matrix", "mini-sf", "--dpus", "8", "--seeds", "0,3"]
+                .map(String::from),
+        )
+        .unwrap();
+        run(a).unwrap();
+        assert!(Args::parse(
+            ["solve", "--app", "pagerank", "--matrix", "mini-sf", "--seeds", "zero"]
+                .map(String::from)
+        )
+        .map(run)
+        .unwrap()
+        .is_err());
     }
 }

@@ -1,0 +1,231 @@
+//! Plan caching: plan-once-serve-many without hand-threading plans.
+//!
+//! [`super::ExecutionPlan`] already gives iterative apps plan reuse —
+//! when they can hold onto the plan. Serving-style callers often cannot:
+//! a CLI command, a request handler or a benchmark loop sees (matrix,
+//! kernel) pairs arrive repeatedly with no good place to stash the plan
+//! between calls. [`PlanCache`] closes that gap: plans are keyed by
+//! (matrix fingerprint, kernel spec, system shape) and built on first
+//! use, so every later call with an equal matrix and spec gets the
+//! cached plan in O(nnz) fingerprint time instead of a full re-plan
+//! (partitioning + per-DPU format conversion + transfer pricing).
+//!
+//! The cache is internally synchronized (`&self` API) and hands out
+//! [`Arc`]s, so one cache can serve concurrent request threads.
+
+use super::plan::ExecutionPlan;
+use super::spec::KernelSpec;
+use super::SpmvExecutor;
+use crate::matrix::{CooMatrix, SpElem};
+use crate::util::Result;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Default capacity of [`PlanCache::new`], in plans.
+pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 32;
+
+struct Inner<T: SpElem> {
+    map: HashMap<String, Arc<ExecutionPlan<T>>>,
+    /// Insertion order for FIFO eviction (keys always present in `map`).
+    order: VecDeque<String>,
+    hits: u64,
+    misses: u64,
+}
+
+/// A bounded, thread-safe cache of [`ExecutionPlan`]s keyed by matrix
+/// fingerprint + kernel spec + system shape.
+///
+/// Plans depend only on the (matrix, spec, bus-shape) triple — never on
+/// the input vector or the tasklet count — so the key carries exactly
+/// the matrix [`CooMatrix::fingerprint`], every [`KernelSpec`] field and
+/// the executor's `n_dpus` / `dpus_per_rank` / `bus_scale`. Eviction is
+/// FIFO once `capacity` distinct plans are resident.
+pub struct PlanCache<T: SpElem> {
+    inner: Mutex<Inner<T>>,
+    capacity: usize,
+}
+
+impl<T: SpElem> PlanCache<T> {
+    /// Cache with the default capacity
+    /// ([`DEFAULT_PLAN_CACHE_CAPACITY`]).
+    pub fn new() -> PlanCache<T> {
+        Self::with_capacity(DEFAULT_PLAN_CACHE_CAPACITY)
+    }
+
+    /// Cache holding at most `capacity` plans (clamped to >= 1).
+    pub fn with_capacity(capacity: usize) -> PlanCache<T> {
+        PlanCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                hits: 0,
+                misses: 0,
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The plan for (`spec`, `m`) on `exec`'s system: served from cache
+    /// when an equal matrix/spec/system was planned before, built via
+    /// [`SpmvExecutor::plan`] (and inserted) otherwise.
+    pub fn plan(
+        &self,
+        exec: &SpmvExecutor,
+        spec: &KernelSpec,
+        m: &CooMatrix<T>,
+    ) -> Result<Arc<ExecutionPlan<T>>> {
+        let key = Self::key(exec, spec, m);
+        {
+            let mut inner = self.lock();
+            if let Some(p) = inner.map.get(&key).cloned() {
+                inner.hits += 1;
+                return Ok(p);
+            }
+            inner.misses += 1;
+        }
+        // Plan outside the lock: planning is O(nnz)-heavy and must not
+        // serialize concurrent requests for *different* matrices. Two
+        // threads racing on the same key both plan; the loser's insert
+        // is dropped in favor of the winner's (plans for equal keys are
+        // interchangeable).
+        let built = Arc::new(exec.plan(spec, m)?);
+        let mut inner = self.lock();
+        if let Some(p) = inner.map.get(&key) {
+            return Ok(Arc::clone(p));
+        }
+        if inner.map.len() >= self.capacity {
+            if let Some(old) = inner.order.pop_front() {
+                inner.map.remove(&old);
+            }
+        }
+        inner.map.insert(key.clone(), Arc::clone(&built));
+        inner.order.push_back(key);
+        Ok(built)
+    }
+
+    /// Resident plan count.
+    pub fn len(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    /// True when no plans are resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups served from cache since construction (or [`Self::clear`]).
+    pub fn hits(&self) -> u64 {
+        self.lock().hits
+    }
+
+    /// Lookups that had to build a plan.
+    pub fn misses(&self) -> u64 {
+        self.lock().misses
+    }
+
+    /// Maximum resident plans.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Drop every resident plan and reset the hit/miss counters.
+    pub fn clear(&self) {
+        let mut inner = self.lock();
+        inner.map.clear();
+        inner.order.clear();
+        inner.hits = 0;
+        inner.misses = 0;
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner<T>> {
+        self.inner.lock().expect("plan cache poisoned")
+    }
+
+    /// Cache key: matrix fingerprint + the full spec + the system-shape
+    /// fields an [`ExecutionPlan`] is checked against at execute time.
+    /// `Debug` on [`KernelSpec`] covers every spec field; `bus_scale`
+    /// keys on its exact bits. Shape and nnz ride along next to the
+    /// 64-bit hash so whole classes of fingerprint collisions (any two
+    /// matrices differing in dimensions or population) cannot alias.
+    fn key(exec: &SpmvExecutor, spec: &KernelSpec, m: &CooMatrix<T>) -> String {
+        let cfg = &exec.sys.cfg;
+        format!(
+            "{:016x}:{}x{}n{}|d{}r{}b{:016x}|{:?}",
+            m.fingerprint(),
+            m.nrows(),
+            m.ncols(),
+            m.nnz(),
+            cfg.n_dpus,
+            cfg.dpus_per_rank,
+            cfg.bus_scale.to_bits(),
+            spec
+        )
+    }
+}
+
+impl<T: SpElem> Default for PlanCache<T> {
+    fn default() -> PlanCache<T> {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate;
+    use crate::pim::PimSystem;
+
+    #[test]
+    fn cache_hits_on_equal_matrix_and_spec() {
+        let m = generate::uniform::<f64>(128, 128, 4, 5);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
+        let cache = PlanCache::new();
+        let p1 = cache.plan(&exec, &KernelSpec::csr_nnz(), &m).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        // An equal (cloned) matrix hits: keys are content-based.
+        let p2 = cache.plan(&exec, &KernelSpec::csr_nnz(), &m.clone()).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert!(Arc::ptr_eq(&p1, &p2), "hit must return the resident plan");
+        // The cached plan executes like a fresh one.
+        let x = vec![1.0; 128];
+        let fresh = exec.run(&KernelSpec::csr_nnz(), &m, &x).unwrap();
+        let cached = exec.execute(&p2, &x).unwrap();
+        assert_eq!(cached.y, fresh.y);
+        assert_eq!(cached.breakdown, fresh.breakdown);
+    }
+
+    #[test]
+    fn cache_misses_on_different_spec_matrix_or_system() {
+        let m = generate::uniform::<f64>(96, 96, 4, 5);
+        let exec8 = SpmvExecutor::new(PimSystem::with_dpus(8));
+        let cache = PlanCache::new();
+        cache.plan(&exec8, &KernelSpec::csr_nnz(), &m).unwrap();
+        cache.plan(&exec8, &KernelSpec::coo_nnz(), &m).unwrap();
+        let m2 = generate::uniform::<f64>(96, 96, 4, 6);
+        cache.plan(&exec8, &KernelSpec::csr_nnz(), &m2).unwrap();
+        let exec16 = SpmvExecutor::new(PimSystem::with_dpus(16));
+        cache.plan(&exec16, &KernelSpec::csr_nnz(), &m).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 4));
+        assert_eq!(cache.len(), 4);
+    }
+
+    #[test]
+    fn capacity_evicts_fifo() {
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(4));
+        let cache = PlanCache::with_capacity(2);
+        let ms: Vec<_> =
+            (0..3).map(|s| generate::uniform::<f64>(64, 64, 3, s as u64)).collect();
+        for m in &ms {
+            cache.plan(&exec, &KernelSpec::coo_row(), m).unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+        // ms[0] was evicted -> miss; ms[2] is resident -> hit.
+        cache.plan(&exec, &KernelSpec::coo_row(), &ms[2]).unwrap();
+        assert_eq!(cache.hits(), 1);
+        cache.plan(&exec, &KernelSpec::coo_row(), &ms[0]).unwrap();
+        assert_eq!(cache.misses(), 4);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!((cache.hits(), cache.misses()), (0, 0));
+    }
+}

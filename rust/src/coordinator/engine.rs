@@ -14,6 +14,14 @@
 //! cycle maxima, energy sums) happens serially afterwards, so the two
 //! engines are bit-identical by construction — a property the
 //! `engine_equivalence` test suite locks in.
+//!
+//! The unit of work an engine schedules is whatever the caller indexes:
+//! single-vector execution maps over work items (one per DPU slice),
+//! and the batched path ([`super::SpmvExecutor::execute_batch`]) maps
+//! over (work-item x vector-block) units — so a batch keeps every
+//! worker busy even when the DPU count alone would not, with no engine
+//! changes and the same by-index determinism (locked by the
+//! `batch_equivalence` suite).
 
 /// Strategy for running independent per-DPU work items.
 pub trait ExecutionEngine {

@@ -126,6 +126,84 @@ impl<T> RunResult<T> {
     }
 }
 
+/// Result of one batched execution
+/// ([`super::SpmvExecutor::execute_batch`]): one full [`RunResult`] per
+/// input vector, in input order.
+///
+/// Every run is bit-identical to what a single-vector
+/// [`super::SpmvExecutor::execute`] of the same plan would have
+/// produced — the model prices each vector as an independent SpMV;
+/// batching amortizes the host-side simulation wall-clock (and, on a
+/// real system, per-launch overheads), not the modeled per-vector cost.
+#[derive(Clone, Debug)]
+pub struct BatchResult<T> {
+    /// Per-vector results, in input order.
+    pub runs: Vec<RunResult<T>>,
+}
+
+impl<T> BatchResult<T> {
+    /// Number of vectors in the batch.
+    pub fn len(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// True for an empty batch.
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    /// The output vectors, borrowed, in input order.
+    pub fn ys(&self) -> Vec<&[T]> {
+        self.runs.iter().map(|r| r.y.as_slice()).collect()
+    }
+
+    /// The output vectors, owned, in input order (drops the metrics).
+    pub fn into_ys(self) -> Vec<Vec<T>> {
+        self.runs.into_iter().map(|r| r.y).collect()
+    }
+
+    /// Modeled per-iteration cost summed across the batch.
+    pub fn total(&self) -> Breakdown {
+        let mut b = Breakdown::default();
+        for r in &self.runs {
+            b.accumulate(&r.breakdown);
+        }
+        b
+    }
+
+    /// Modeled energy summed across the batch.
+    pub fn energy(&self) -> Energy {
+        self.runs.iter().fold(Energy::default(), |acc, r| acc.add(r.energy))
+    }
+}
+
+/// Result of an iterated batched SpMV (`y_b <- A*y_b` for every vector
+/// in the batch, `iters` times) over one plan. Produced by
+/// [`super::SpmvExecutor::run_iterations_batch`].
+#[derive(Clone, Debug)]
+pub struct BatchIterationsResult<T> {
+    /// The final iteration (its `runs[b].y` are the overall outputs).
+    pub last: BatchResult<T>,
+    /// Per-iteration breakdowns summed over all iterations and vectors.
+    pub total: Breakdown,
+    /// Modeled energy summed over all iterations and vectors.
+    pub energy: Energy,
+    /// Number of iterations applied to every vector.
+    pub iters: usize,
+}
+
+impl<T> BatchIterationsResult<T> {
+    /// Number of vectors in the batch.
+    pub fn batch(&self) -> usize {
+        self.last.len()
+    }
+
+    /// Mean modeled time per (iteration, vector) SpMV, seconds.
+    pub fn per_spmv_s(&self) -> f64 {
+        self.total.total_s() / (self.iters.max(1) * self.last.len().max(1)) as f64
+    }
+}
+
 /// Result of an iterated SpMV (`y <- A*y`, `iters` times) over one plan:
 /// the final iteration's full [`RunResult`] plus cost totals across all
 /// iterations. Produced by [`super::SpmvExecutor::run_iterations`].
@@ -209,6 +287,30 @@ mod tests {
         let s = RunStats { bus_bytes_moved: 200, bus_bytes_payload: 100, ..Default::default() };
         assert_eq!(s.padding_overhead(), 2.0);
         assert_eq!(RunStats::default().padding_overhead(), 1.0);
+    }
+
+    #[test]
+    fn batch_result_helpers() {
+        let mk = |v: f64| RunResult {
+            y: vec![v],
+            breakdown: Breakdown { kernel_s: 1.0, ..Default::default() },
+            stats: RunStats::default(),
+            energy: Energy::default(),
+        };
+        let b = BatchResult { runs: vec![mk(1.0), mk(2.0)] };
+        assert_eq!(b.len(), 2);
+        assert!(!b.is_empty());
+        assert_eq!(b.total().kernel_s, 2.0);
+        assert_eq!(b.ys(), vec![&[1.0][..], &[2.0][..]]);
+        let it = BatchIterationsResult {
+            last: b.clone(),
+            total: Breakdown { kernel_s: 12.0, ..Default::default() },
+            energy: Energy::default(),
+            iters: 3,
+        };
+        assert_eq!(it.batch(), 2);
+        assert_eq!(it.per_spmv_s(), 2.0);
+        assert_eq!(b.into_ys(), vec![vec![1.0], vec![2.0]]);
     }
 
     #[test]

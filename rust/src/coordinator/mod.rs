@@ -20,18 +20,36 @@
 //!    self-application `y <- A*y` with accumulated cost, the shape of
 //!    every solver in [`crate::apps`].
 //!
+//! Two serving-oriented layers sit on top of that pipeline:
+//!
+//! * **Batch** ([`SpmvExecutor::execute_batch`] /
+//!   [`SpmvExecutor::run_iterations_batch`]): SpMM-style multi-vector
+//!   execution. A workload of N queries against one resident matrix
+//!   pays planning once and fans (work-item x vector-block) units
+//!   across the engine in a single wave; the CSR/COO kernels stream
+//!   each matrix slice once per block instead of once per vector.
+//!   Results are bit-identical to looping [`SpmvExecutor::execute`].
+//! * **Cache** ([`PlanCache`]): plans keyed by (matrix fingerprint,
+//!   kernel spec, system shape), so callers that cannot conveniently
+//!   hold onto an [`ExecutionPlan`] — CLI commands, serving loops —
+//!   still get plan-once-serve-many.
+//!
 //! [`SpmvExecutor::run`] remains as the one-shot convenience (plan +
 //! execute in one call) and is what single-SpMV callers should keep
-//! using.
+//! using. See `docs/ARCHITECTURE.md` for the full data-flow picture.
 
 pub mod adaptive;
+pub mod cache;
 pub mod engine;
 pub mod metrics;
 pub mod plan;
 pub mod spec;
 
+pub use cache::PlanCache;
 pub use engine::{Engine, ExecutionEngine, SerialEngine, ThreadedEngine};
-pub use metrics::{Breakdown, IterationsResult, RunResult, RunStats};
+pub use metrics::{
+    BatchIterationsResult, BatchResult, Breakdown, IterationsResult, RunResult, RunStats,
+};
 pub use plan::{DpuSlice, ExecutionPlan, WorkItem};
 pub use spec::{KernelSpec, Partitioning};
 
@@ -39,6 +57,15 @@ use crate::kernels::{self, DpuKernelOutput};
 use crate::matrix::{CooMatrix, SpElem};
 use crate::pim::{calib, Energy, PimSystem};
 use crate::util::Result;
+use std::ops::Range;
+
+/// Vectors per batched kernel invocation: [`SpmvExecutor::execute_batch`]
+/// splits a batch into blocks of this many vectors and schedules one
+/// (work-item x vector-block) unit per block per DPU slice. The value
+/// trades scheduling freedom (more, smaller units) against matrix-stream
+/// amortization (each unit walks its slice once for the whole block);
+/// the last block of a batch may be smaller ("ragged").
+pub const VECTOR_BLOCK: usize = 8;
 
 /// Host-side SpMV executor over a (simulated) PIM system.
 #[derive(Clone, Debug)]
@@ -75,6 +102,32 @@ impl SpmvExecutor {
         plan::build(&self.sys.cfg, spec, m)
     }
 
+    /// Shared execute-time compatibility checks: plans may legitimately
+    /// be executed on a different executor (e.g. sweeping tasklet counts
+    /// over one plan), so validate this executor's config too, not just
+    /// the planning one's — and reject executors whose bus model
+    /// disagrees with the one the plan's transfer costs were priced
+    /// under.
+    fn check_plan<T: SpElem>(&self, plan: &ExecutionPlan<T>) -> Result<()> {
+        crate::ensure!(
+            plan.n_dpus == self.sys.cfg.n_dpus,
+            "plan was built for {} DPUs but the executor has {}",
+            plan.n_dpus,
+            self.sys.cfg.n_dpus
+        );
+        self.sys.cfg.validate()?;
+        crate::ensure!(
+            plan.dpus_per_rank == self.sys.cfg.dpus_per_rank
+                && plan.bus_scale == self.sys.cfg.bus_scale,
+            "plan priced transfers for dpus_per_rank={} bus_scale={} but the executor has dpus_per_rank={} bus_scale={}; re-plan on this executor",
+            plan.dpus_per_rank,
+            plan.bus_scale,
+            self.sys.cfg.dpus_per_rank,
+            self.sys.cfg.bus_scale
+        );
+        Ok(())
+    }
+
     /// Execute one SpMV `y = A * x` over a prebuilt plan.
     pub fn execute<T: SpElem>(
         &self,
@@ -87,27 +140,7 @@ impl SpmvExecutor {
             x.len(),
             plan.ncols()
         );
-        crate::ensure!(
-            plan.n_dpus == self.sys.cfg.n_dpus,
-            "plan was built for {} DPUs but the executor has {}",
-            plan.n_dpus,
-            self.sys.cfg.n_dpus
-        );
-        // Plans may legitimately be executed on a different executor
-        // (e.g. sweeping tasklet counts over one plan), so validate this
-        // executor's config too, not just the planning one's — and
-        // reject executors whose bus model disagrees with the one the
-        // plan's transfer costs were priced under.
-        self.sys.cfg.validate()?;
-        crate::ensure!(
-            plan.dpus_per_rank == self.sys.cfg.dpus_per_rank
-                && plan.bus_scale == self.sys.cfg.bus_scale,
-            "plan priced transfers for dpus_per_rank={} bus_scale={} but the executor has dpus_per_rank={} bus_scale={}; re-plan on this executor",
-            plan.dpus_per_rank,
-            plan.bus_scale,
-            self.sys.cfg.dpus_per_rank,
-            self.sys.cfg.bus_scale
-        );
+        self.check_plan(plan)?;
         let cfg = &self.sys.cfg;
         let spec = &plan.spec;
         let items = plan.items();
@@ -118,19 +151,88 @@ impl SpmvExecutor {
         let outputs: Vec<DpuKernelOutput<T>> =
             self.engine.map_indexed(items.len(), |i| plan::run_item(cfg, spec, &items[i], x));
 
-        let mut y = vec![T::zero(); plan.nrows()];
-        for (item, out) in items.iter().zip(&outputs) {
-            if item.accumulate {
-                for (i, v) in out.y.iter().enumerate() {
-                    let r = item.y_start + i;
-                    y[r] = y[r].add(*v);
-                }
-            } else {
-                y[item.y_start..item.y_start + out.y.len()].copy_from_slice(&out.y);
+        let y = plan.merge_partials(&outputs);
+        Ok(self.finish(plan, &outputs, y))
+    }
+
+    /// Execute a batched SpMM-style run `Y = A * X` over a prebuilt
+    /// plan: one full [`RunResult`] per vector in `xs`, in input order,
+    /// each bit-identical to a single-vector [`Self::execute`] of the
+    /// same plan (locked by `tests/batch_equivalence.rs`).
+    ///
+    /// The batch is split into [`VECTOR_BLOCK`]-sized vector blocks and
+    /// every (work-item, block) pair becomes one engine unit, so:
+    ///
+    /// * batches scale across host threads even when the DPU count alone
+    ///   would leave workers idle, and the whole batch costs one thread
+    ///   fan-out instead of one per vector;
+    /// * the CSR/COO batched kernels stream each DPU slice once per
+    ///   block instead of once per vector (see
+    ///   [`crate::kernels::csr::run_csr_dpu_batch`]).
+    ///
+    /// An empty `xs` yields an empty result.
+    pub fn execute_batch<T: SpElem>(
+        &self,
+        plan: &ExecutionPlan<T>,
+        xs: &[Vec<T>],
+    ) -> Result<BatchResult<T>> {
+        for (i, x) in xs.iter().enumerate() {
+            crate::ensure!(
+                x.len() == plan.ncols(),
+                "xs[{i}] length {} != ncols {}",
+                x.len(),
+                plan.ncols()
+            );
+        }
+        self.check_plan(plan)?;
+        if xs.is_empty() {
+            return Ok(BatchResult { runs: Vec::new() });
+        }
+        let cfg = &self.sys.cfg;
+        let spec = &plan.spec;
+        let items = plan.items();
+        let n_items = items.len();
+        let blocks: Vec<Range<usize>> = (0..xs.len())
+            .step_by(VECTOR_BLOCK)
+            .map(|s| s..(s + VECTOR_BLOCK).min(xs.len()))
+            .collect();
+
+        // Per-block vector windows, built once here — not once per
+        // (item, block) unit inside the engine fan-out.
+        let windows: Vec<Vec<&[T]>> = blocks
+            .iter()
+            .map(|blk| xs[blk.clone()].iter().map(|x| x.as_slice()).collect())
+            .collect();
+
+        // (work-item x vector-block) units fan out across the engine in
+        // one wave; unit u covers item (u % n_items) for block
+        // (u / n_items). Reassembly below is by index, so results stay
+        // engine- and scheduling-independent.
+        let n_units = n_items * blocks.len();
+        let unit_outputs: Vec<Vec<DpuKernelOutput<T>>> =
+            self.engine.map_indexed(n_units, |u| {
+                plan::run_item_batch(cfg, spec, &items[u % n_items], &windows[u / n_items])
+            });
+
+        // Regroup: unit (b, i) holds item i's outputs for block b's
+        // vectors; each vector merges through the same per-plan merge as
+        // the single-vector path.
+        let mut runs = Vec::with_capacity(xs.len());
+        let mut unit_iter = unit_outputs.into_iter();
+        for blk in &blocks {
+            let mut per_item: Vec<std::vec::IntoIter<DpuKernelOutput<T>>> = (0..n_items)
+                .map(|_| unit_iter.next().expect("unit count mismatch").into_iter())
+                .collect();
+            for _ in blk.clone() {
+                let outputs: Vec<DpuKernelOutput<T>> = per_item
+                    .iter_mut()
+                    .map(|it| it.next().expect("batched kernel returned too few outputs"))
+                    .collect();
+                let y = plan.merge_partials(&outputs);
+                runs.push(self.finish(plan, &outputs, y));
             }
         }
-
-        Ok(self.finish(plan, &outputs, y))
+        Ok(BatchResult { runs })
     }
 
     /// Iterated SpMV `y <- A*y`, `iters` times starting from `x`, over a
@@ -162,6 +264,45 @@ impl SpmvExecutor {
             last = Some(r);
         }
         Ok(IterationsResult { last: last.unwrap(), total, energy, iters })
+    }
+
+    /// Iterated batched SpMV: every vector in `xs` is independently
+    /// self-applied (`y_b <- A*y_b`) `iters` times, advancing in
+    /// lockstep so each iteration is one [`Self::execute_batch`] wave —
+    /// the shape of multi-query iterative workloads like multi-seed
+    /// personalized PageRank ([`crate::apps::pagerank`]).
+    ///
+    /// Per-vector results are bit-identical to running
+    /// [`Self::run_iterations`] on each vector alone; `total` and
+    /// `energy` sum over all iterations *and* vectors.
+    pub fn run_iterations_batch<T: SpElem>(
+        &self,
+        plan: &ExecutionPlan<T>,
+        xs: &[Vec<T>],
+        iters: usize,
+    ) -> Result<BatchIterationsResult<T>> {
+        crate::ensure!(iters >= 1, "run_iterations_batch needs iters >= 1");
+        crate::ensure!(
+            iters == 1 || plan.nrows() == plan.ncols(),
+            "iterated SpMV needs a square matrix, got {}x{}",
+            plan.nrows(),
+            plan.ncols()
+        );
+        crate::ensure!(!xs.is_empty(), "run_iterations_batch needs at least one vector");
+        let mut cur: Vec<Vec<T>> = xs.to_vec();
+        let mut total = Breakdown::default();
+        let mut energy = Energy::default();
+        let mut last: Option<BatchResult<T>> = None;
+        for _ in 0..iters {
+            let batch = self.execute_batch(plan, &cur)?;
+            for (c, r) in cur.iter_mut().zip(batch.runs.iter()) {
+                total.accumulate(&r.breakdown);
+                energy = energy.add(r.energy);
+                c.clone_from(&r.y);
+            }
+            last = Some(batch);
+        }
+        Ok(BatchIterationsResult { last: last.unwrap(), total, energy, iters })
     }
 
     /// Execute one SpMV: `y = A * x` under `spec` (plan + execute in one
@@ -395,6 +536,66 @@ mod tests {
         assert!(r.energy.total_j() > 0.0);
         assert!(r.energy.dpu_j > 0.0);
         assert!(r.energy.bus_j > 0.0);
+    }
+
+    #[test]
+    fn execute_batch_matches_looped_execute() {
+        let m = generate::scale_free::<f64>(300, 300, 6, 0.6, 13);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
+        // 11 vectors: one full VECTOR_BLOCK plus a ragged tail.
+        let xs: Vec<Vec<f64>> = (0..11)
+            .map(|s| (0..300).map(|i| ((i + 7 * s) % 9) as f64 - 4.0).collect())
+            .collect();
+        for spec in [KernelSpec::coo_nnz(), KernelSpec::csr_nnz(), KernelSpec::two_d(Format::Coo, 4)] {
+            let plan = exec.plan(&spec, &m).unwrap();
+            let batch = exec.execute_batch(&plan, &xs).unwrap();
+            assert_eq!(batch.len(), xs.len(), "{}", spec.name);
+            for (x, r) in xs.iter().zip(&batch.runs) {
+                let single = exec.execute(&plan, x).unwrap();
+                assert_eq!(r.y, single.y, "{}", spec.name);
+                assert_eq!(r.breakdown, single.breakdown, "{}", spec.name);
+                assert_eq!(r.stats, single.stats, "{}", spec.name);
+                assert_eq!(r.energy, single.energy, "{}", spec.name);
+            }
+            // The plan-level convenience returns the same outputs.
+            let ys = plan.execute_batch(&exec, &xs).unwrap();
+            assert_eq!(ys, batch.runs.iter().map(|r| r.y.clone()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn execute_batch_edge_cases() {
+        let m = generate::uniform::<f64>(64, 64, 4, 3);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(4));
+        let plan = exec.plan(&KernelSpec::csr_row(), &m).unwrap();
+        assert!(exec.execute_batch(&plan, &[]).unwrap().is_empty());
+        // Batch of one behaves like execute.
+        let x = vec![1.0; 64];
+        let b = exec.execute_batch(&plan, std::slice::from_ref(&x)).unwrap();
+        assert_eq!(b.runs[0].y, exec.execute(&plan, &x).unwrap().y);
+        // Any wrong-length vector rejects the whole batch.
+        assert!(exec.execute_batch(&plan, &[vec![0.0; 64], vec![0.0; 63]]).is_err());
+    }
+
+    #[test]
+    fn run_iterations_batch_matches_per_vector_iterations() {
+        let m = generate::uniform::<f64>(128, 128, 5, 11);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
+        let plan = exec.plan(&KernelSpec::coo_nnz(), &m).unwrap();
+        let xs: Vec<Vec<f64>> =
+            (0..3).map(|s| (0..128).map(|i| ((i + s) % 5) as f64 - 2.0).collect()).collect();
+        let batch = exec.run_iterations_batch(&plan, &xs, 4).unwrap();
+        assert_eq!(batch.batch(), 3);
+        assert_eq!(batch.iters, 4);
+        let mut total = Breakdown::default();
+        for (x, last) in xs.iter().zip(&batch.last.runs) {
+            let single = exec.run_iterations(&plan, x, 4).unwrap();
+            assert_eq!(last.y, single.last.y);
+            total.accumulate(&single.total);
+        }
+        assert_eq!(batch.total, total);
+        assert!(exec.run_iterations_batch(&plan, &[], 2).is_err());
+        assert!(exec.run_iterations_batch(&plan, &xs, 0).is_err());
     }
 
     #[test]

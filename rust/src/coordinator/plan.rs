@@ -88,15 +88,19 @@ pub struct ExecutionPlan<T: SpElem> {
 }
 
 impl<T: SpElem> ExecutionPlan<T> {
+    /// Rows of the planned matrix.
     pub fn nrows(&self) -> usize {
         self.nrows
     }
+    /// Columns of the planned matrix.
     pub fn ncols(&self) -> usize {
         self.ncols
     }
+    /// Non-zeros of the planned matrix.
     pub fn nnz(&self) -> usize {
         self.nnz
     }
+    /// The per-DPU work items (slice + x-window + y-placement).
     pub fn items(&self) -> &[WorkItem<T>] {
         &self.items
     }
@@ -107,6 +111,65 @@ impl<T: SpElem> ExecutionPlan<T> {
     /// Total bytes of compressed matrix storage placed on the DPUs.
     pub fn matrix_bytes(&self) -> u64 {
         self.mat_load.payload_bytes
+    }
+
+    /// Host-side merge: assemble per-DPU partial outputs into the final
+    /// output vector — copy for exclusively-owned 1D row ranges,
+    /// accumulate for element-granular boundary rows and 2D tiles.
+    /// Shared by the single-vector and batched execution paths, which is
+    /// what makes the merge logic batch-aware: a batch merges each
+    /// vector's partials through exactly this code, in vector order.
+    pub(crate) fn merge_partials(&self, outputs: &[DpuKernelOutput<T>]) -> Vec<T> {
+        let mut y = vec![T::zero(); self.nrows];
+        for (item, out) in self.items.iter().zip(outputs) {
+            if item.accumulate {
+                for (i, v) in out.y.iter().enumerate() {
+                    let r = item.y_start + i;
+                    y[r] = y[r].add(*v);
+                }
+            } else {
+                y[item.y_start..item.y_start + out.y.len()].copy_from_slice(&out.y);
+            }
+        }
+        y
+    }
+
+    /// Batched SpMM-style execution `Y = A * X`: multiply this plan's
+    /// matrix by every vector in `xs` in one engine wave, returning the
+    /// output vectors in input order.
+    ///
+    /// This is the serving-path convenience over
+    /// [`super::SpmvExecutor::execute_batch`] (which additionally
+    /// returns the full per-vector metrics): the matrix stays resident
+    /// in the plan while any number of right-hand sides stream through.
+    /// Every output is bit-identical to a single-vector
+    /// [`super::SpmvExecutor::execute`] of the same plan.
+    ///
+    /// ```
+    /// use sparsep::coordinator::{KernelSpec, SpmvExecutor};
+    /// use sparsep::matrix::generate;
+    /// use sparsep::pim::PimSystem;
+    ///
+    /// let m = generate::uniform::<f64>(64, 64, 4, 7);
+    /// let exec = SpmvExecutor::new(PimSystem::with_dpus(4));
+    /// let plan = exec.plan(&KernelSpec::csr_nnz(), &m).unwrap();
+    ///
+    /// // Three queries against the resident matrix, one call.
+    /// let xs: Vec<Vec<f64>> =
+    ///     (0..3).map(|s| vec![s as f64 + 1.0; 64]).collect();
+    /// let ys = plan.execute_batch(&exec, &xs).unwrap();
+    ///
+    /// assert_eq!(ys.len(), 3);
+    /// for (x, y) in xs.iter().zip(&ys) {
+    ///     assert_eq!(y, &m.spmv(x));
+    /// }
+    /// ```
+    pub fn execute_batch(
+        &self,
+        exec: &super::SpmvExecutor,
+        xs: &[Vec<T>],
+    ) -> Result<Vec<Vec<T>>> {
+        Ok(exec.execute_batch(self, xs)?.into_ys())
     }
 }
 
@@ -152,6 +215,33 @@ pub(crate) fn run_item<T: SpElem>(
         }
         DpuSlice::Bcoo(m) => {
             kernels::bcoo::run_bcoo_dpu(cfg, m, xs, spec.tasklet_balance, spec.sync)
+        }
+    }
+}
+
+/// Run the batched kernel matching a work item's format on one DPU: one
+/// output per input vector, each bit-identical to [`run_item`] on that
+/// vector. `xs` holds full-length input vectors; the item's x-window is
+/// applied here.
+pub(crate) fn run_item_batch<T: SpElem>(
+    cfg: &PimConfig,
+    spec: &KernelSpec,
+    item: &WorkItem<T>,
+    xs: &[&[T]],
+) -> Vec<DpuKernelOutput<T>> {
+    let windows: Vec<&[T]> = xs.iter().map(|x| &x[item.x_range.clone()]).collect();
+    match &item.slice {
+        DpuSlice::Csr(m) => {
+            kernels::csr::run_csr_dpu_batch(cfg, m, &windows, spec.tasklet_balance, spec.sync)
+        }
+        DpuSlice::Coo(m) => {
+            kernels::coo::run_coo_dpu_batch(cfg, m, &windows, spec.tasklet_balance, spec.sync)
+        }
+        DpuSlice::Bcsr(m) => {
+            kernels::bcsr::run_bcsr_dpu_batch(cfg, m, &windows, spec.tasklet_balance, spec.sync)
+        }
+        DpuSlice::Bcoo(m) => {
+            kernels::bcoo::run_bcoo_dpu_batch(cfg, m, &windows, spec.tasklet_balance, spec.sync)
         }
     }
 }

@@ -135,6 +135,23 @@ pub fn run_bcoo_dpu<T: SpElem>(
     DpuKernelOutput::finish(cfg, y, counters)
 }
 
+/// Run the BCOO kernel on one DPU for a whole block of input vectors.
+///
+/// Looped single-vector fallback, like
+/// [`crate::kernels::bcsr::run_bcsr_dpu_batch`]: the dense block inner
+/// loop already amortizes per-block overhead, so fusion is not natural
+/// here. Per-vector results are trivially bit-identical to
+/// single-vector runs.
+pub fn run_bcoo_dpu_batch<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &BcooMatrix<T>,
+    xs: &[&[T]],
+    bal: TaskletBalance,
+    sync: SyncScheme,
+) -> Vec<DpuKernelOutput<T>> {
+    xs.iter().map(|x| run_bcoo_dpu(cfg, slice, x, bal, sync)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,5 +213,23 @@ mod tests {
     #[test]
     fn empty_ok() {
         check(&CooMatrix::<f64>::zeros(8, 8), (2, 2), 4, TaskletBalance::Blocks, SyncScheme::LockFree);
+    }
+
+    #[test]
+    fn batch_matches_looped_single_vector() {
+        let m = generate::blocked::<f64>(24, 24, 4, 5, 17);
+        let b = BcooMatrix::from_coo(&m, 4, 4);
+        let xs: Vec<Vec<f64>> = (0..3)
+            .map(|s| (0..24).map(|i| ((i + 2 * s) % 7) as f64 - 3.0).collect())
+            .collect();
+        let refs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        let batch = run_bcoo_dpu_batch(&cfg(8), &b, &refs, TaskletBalance::Blocks, SyncScheme::LockFree);
+        assert_eq!(batch.len(), 3);
+        for (x, out) in xs.iter().zip(&batch) {
+            let single = run_bcoo_dpu(&cfg(8), &b, x, TaskletBalance::Blocks, SyncScheme::LockFree);
+            assert_eq!(out.y, single.y);
+            assert_eq!(out.counters, single.counters);
+            assert_eq!(out.timing, single.timing);
+        }
     }
 }

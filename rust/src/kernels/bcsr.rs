@@ -151,6 +151,22 @@ pub fn run_bcsr_dpu<T: SpElem>(
     DpuKernelOutput::finish(cfg, y, counters)
 }
 
+/// Run the BCSR kernel on one DPU for a whole block of input vectors.
+///
+/// Looped single-vector fallback: the dense `br x bc` inner loop already
+/// amortizes index overhead per block, so a fused multi-vector walk buys
+/// little here (unlike [`crate::kernels::csr::run_csr_dpu_batch`]).
+/// Per-vector results are trivially bit-identical to single-vector runs.
+pub fn run_bcsr_dpu_batch<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &BcsrMatrix<T>,
+    xs: &[&[T]],
+    bal: TaskletBalance,
+    sync: SyncScheme,
+) -> Vec<DpuKernelOutput<T>> {
+    xs.iter().map(|x| run_bcsr_dpu(cfg, slice, x, bal, sync)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,5 +248,23 @@ mod tests {
     fn empty_ok() {
         let m = CooMatrix::<f64>::zeros(16, 16);
         check(&m, (4, 4), 8, TaskletBalance::Blocks, SyncScheme::LockFree);
+    }
+
+    #[test]
+    fn batch_matches_looped_single_vector() {
+        let m = generate::blocked::<f64>(32, 32, 4, 6, 9);
+        let b = BcsrMatrix::from_coo(&m, 4, 4);
+        let xs: Vec<Vec<f64>> = (0..4)
+            .map(|s| (0..32).map(|i| ((i + s) % 5) as f64 - 2.0).collect())
+            .collect();
+        let refs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        let batch = run_bcsr_dpu_batch(&cfg(8), &b, &refs, TaskletBalance::Blocks, SyncScheme::CoarseLock);
+        assert_eq!(batch.len(), 4);
+        for (x, out) in xs.iter().zip(&batch) {
+            let single = run_bcsr_dpu(&cfg(8), &b, x, TaskletBalance::Blocks, SyncScheme::CoarseLock);
+            assert_eq!(out.y, single.y);
+            assert_eq!(out.counters, single.counters);
+            assert_eq!(out.timing, single.timing);
+        }
     }
 }

@@ -29,81 +29,19 @@ pub fn run_coo_dpu<T: SpElem>(
 ) -> DpuKernelOutput<T> {
     assert_eq!(x.len(), slice.ncols(), "x length mismatch");
     let t = cfg.tasklets;
-    let nnz = slice.nnz();
     let dt = T::DTYPE;
     let mut y = vec![T::zero(); slice.nrows()];
     let mut counters = vec![TaskletCounters::default(); t];
 
-    // Element ranges per tasklet.
-    let elem_ranges: Vec<std::ops::Range<usize>> = match bal {
-        TaskletBalance::NnzElement => split_elements(nnz, t),
-        TaskletBalance::Nnz => {
-            // Row-granularity nnz balance: split row weights, then map
-            // row chunks back to element ranges (rows are contiguous in
-            // canonical COO order).
-            let weights = slice.row_counts();
-            let row_chunks = split_weighted(&weights, t);
-            let mut row_start_elem = vec![0usize; slice.nrows() + 1];
-            for &r in &slice.rows {
-                row_start_elem[r as usize + 1] += 1;
-            }
-            for r in 0..slice.nrows() {
-                row_start_elem[r + 1] += row_start_elem[r];
-            }
-            row_chunks
-                .iter()
-                .map(|rc| row_start_elem[rc.start]..row_start_elem[rc.end])
-                .collect()
-        }
-        TaskletBalance::Rows => {
-            let row_chunks = split_even(slice.nrows(), t);
-            let mut row_start_elem = vec![0usize; slice.nrows() + 1];
-            for &r in &slice.rows {
-                row_start_elem[r as usize + 1] += 1;
-            }
-            for r in 0..slice.nrows() {
-                row_start_elem[r + 1] += row_start_elem[r];
-            }
-            row_chunks
-                .iter()
-                .map(|rc| row_start_elem[rc.start]..row_start_elem[rc.end])
-                .collect()
-        }
-        TaskletBalance::Blocks => panic!("COO kernel does not support block balancing"),
-    };
-
-    // Which rows are shared by more than one tasklet? Only the rows at
-    // contiguous range boundaries can be (element-granularity splits),
-    // so a per-element membership test reduces to at most two integer
-    // compares — no hash probes in the inner loop (§Perf iteration 3).
-    let mut n_shared = 0usize;
-    let mut shared_bounds: Vec<(u32, u32)> = vec![(u32::MAX, u32::MAX); t];
-    if bal == TaskletBalance::NnzElement {
-        let mut last_shared = u32::MAX;
-        for i in 0..elem_ranges.len().saturating_sub(1) {
-            let (a, b) = (&elem_ranges[i], &elem_ranges[i + 1]);
-            if a.end > a.start && b.end > b.start && a.end < nnz {
-                let boundary_row = slice.rows[a.end - 1];
-                if boundary_row == slice.rows[b.start] {
-                    // Boundary rows are non-decreasing: dedup against the
-                    // previous one (a hot row can span many ranges).
-                    if boundary_row != last_shared {
-                        n_shared += 1;
-                        last_shared = boundary_row;
-                    }
-                    shared_bounds[i].1 = boundary_row; // tail of range i
-                    shared_bounds[i + 1].0 = boundary_row; // head of i+1
-                }
-            }
-        }
-    }
+    let elem_ranges = tasklet_elem_ranges(slice, t, bal);
+    let shared = shared_boundary_rows(slice, &elem_ranges, bal);
 
     for (tid, range) in elem_ranges.iter().enumerate() {
         let c = &mut counters[tid];
         if range.is_empty() {
             continue;
         }
-        let (shared_head, shared_tail) = shared_bounds[tid];
+        let (shared_head, shared_tail) = shared.bounds[tid];
         // Stream this tasklet's (row, col, val) triples MRAM->WRAM.
         acct::stream_matrix(c, range.len() * (8 + dt.size_bytes()));
         let mut current_row = u32::MAX;
@@ -128,10 +66,162 @@ pub fn run_coo_dpu<T: SpElem>(
 
     // Lock-free element-granularity: merge epilogue on tasklet 0.
     if bal == TaskletBalance::NnzElement && sync == SyncScheme::LockFree {
-        acct::lockfree_merge(&mut counters, n_shared, dt);
+        acct::lockfree_merge(&mut counters, shared.n_shared, dt);
     }
 
     DpuKernelOutput::finish(cfg, y, counters)
+}
+
+/// Per-tasklet element ranges for the COO balancing schemes — shared by
+/// the single-vector and batched entry points so they split identically.
+fn tasklet_elem_ranges<T: SpElem>(
+    slice: &CooMatrix<T>,
+    t: usize,
+    bal: TaskletBalance,
+) -> Vec<std::ops::Range<usize>> {
+    // Row-granularity schemes map row chunks back to element ranges
+    // (rows are contiguous in canonical COO order).
+    let row_start_elem = |slice: &CooMatrix<T>| {
+        let mut start = vec![0usize; slice.nrows() + 1];
+        for &r in &slice.rows {
+            start[r as usize + 1] += 1;
+        }
+        for r in 0..slice.nrows() {
+            start[r + 1] += start[r];
+        }
+        start
+    };
+    match bal {
+        TaskletBalance::NnzElement => split_elements(slice.nnz(), t),
+        TaskletBalance::Nnz => {
+            let weights = slice.row_counts();
+            let row_chunks = split_weighted(&weights, t);
+            let start = row_start_elem(slice);
+            row_chunks.iter().map(|rc| start[rc.start]..start[rc.end]).collect()
+        }
+        TaskletBalance::Rows => {
+            let row_chunks = split_even(slice.nrows(), t);
+            let start = row_start_elem(slice);
+            row_chunks.iter().map(|rc| start[rc.start]..start[rc.end]).collect()
+        }
+        TaskletBalance::Blocks => panic!("COO kernel does not support block balancing"),
+    }
+}
+
+/// Rows shared by more than one tasklet, per tasklet.
+struct SharedRows {
+    /// Distinct shared rows (lock-free merge epilogue size).
+    n_shared: usize,
+    /// Per tasklet: (head row shared with the previous range, tail row
+    /// shared with the next), `u32::MAX` when unshared.
+    bounds: Vec<(u32, u32)>,
+}
+
+/// Which rows are shared by more than one tasklet? Only the rows at
+/// contiguous range boundaries can be (element-granularity splits), so
+/// a per-element membership test reduces to at most two integer
+/// compares — no hash probes in the inner loop (§Perf iteration 3).
+fn shared_boundary_rows<T: SpElem>(
+    slice: &CooMatrix<T>,
+    elem_ranges: &[std::ops::Range<usize>],
+    bal: TaskletBalance,
+) -> SharedRows {
+    let nnz = slice.nnz();
+    let mut n_shared = 0usize;
+    let mut bounds: Vec<(u32, u32)> = vec![(u32::MAX, u32::MAX); elem_ranges.len()];
+    if bal == TaskletBalance::NnzElement {
+        let mut last_shared = u32::MAX;
+        for i in 0..elem_ranges.len().saturating_sub(1) {
+            let (a, b) = (&elem_ranges[i], &elem_ranges[i + 1]);
+            if a.end > a.start && b.end > b.start && a.end < nnz {
+                let boundary_row = slice.rows[a.end - 1];
+                if boundary_row == slice.rows[b.start] {
+                    // Boundary rows are non-decreasing: dedup against the
+                    // previous one (a hot row can span many ranges).
+                    if boundary_row != last_shared {
+                        n_shared += 1;
+                        last_shared = boundary_row;
+                    }
+                    bounds[i].1 = boundary_row; // tail of range i
+                    bounds[i + 1].0 = boundary_row; // head of i+1
+                }
+            }
+        }
+    }
+    SharedRows { n_shared, bounds }
+}
+
+/// Run the COO kernel on one DPU for a whole block of input vectors.
+///
+/// Fused SpMM-style variant of [`run_coo_dpu`]: one pass over the
+/// (row, col, val) triples updates every vector's output, so the
+/// host-side simulation streams the slice (and runs the cycle
+/// accounting) once per *block* instead of once per *vector*. Results
+/// are bit-identical to calling [`run_coo_dpu`] once per vector — the
+/// per-vector accumulation order is unchanged and the accounting is
+/// structure-only (see `finish_batch` in the module root).
+///
+/// The tasklet walk below deliberately mirrors [`run_coo_dpu`]'s (a
+/// shared walk would put a per-element vector loop on the single-vector
+/// hot path): any change to the accounting sequence there must be
+/// mirrored here, and `tests/batch_equivalence.rs` fails on any drift.
+pub fn run_coo_dpu_batch<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &CooMatrix<T>,
+    xs: &[&[T]],
+    bal: TaskletBalance,
+    sync: SyncScheme,
+) -> Vec<DpuKernelOutput<T>> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    if xs.len() == 1 {
+        return vec![run_coo_dpu(cfg, slice, xs[0], bal, sync)];
+    }
+    for x in xs {
+        assert_eq!(x.len(), slice.ncols(), "x length mismatch");
+    }
+    let t = cfg.tasklets;
+    let dt = T::DTYPE;
+    let mut ys: Vec<Vec<T>> = (0..xs.len()).map(|_| vec![T::zero(); slice.nrows()]).collect();
+    let mut counters = vec![TaskletCounters::default(); t];
+
+    let elem_ranges = tasklet_elem_ranges(slice, t, bal);
+    let shared = shared_boundary_rows(slice, &elem_ranges, bal);
+
+    for (tid, range) in elem_ranges.iter().enumerate() {
+        let c = &mut counters[tid];
+        if range.is_empty() {
+            continue;
+        }
+        let (shared_head, shared_tail) = shared.bounds[tid];
+        acct::stream_matrix(c, range.len() * (8 + dt.size_bytes()));
+        let mut current_row = u32::MAX;
+        let mut rows_here = 0usize;
+        for i in range.clone() {
+            let (r, col, v) = (slice.rows[i], slice.cols[i] as usize, slice.vals[i]);
+            if r != current_row {
+                acct::row(c);
+                current_row = r;
+                rows_here += 1;
+            }
+            acct::element(c, dt);
+            if r == shared_head || r == shared_tail {
+                acct::locked_update(c, dt, sync);
+            }
+            let ri = r as usize;
+            for (b, y) in ys.iter_mut().enumerate() {
+                y[ri] = y[ri].add(v.mul(xs[b][col]));
+            }
+        }
+        acct::writeback(c, rows_here, dt);
+    }
+
+    if bal == TaskletBalance::NnzElement && sync == SyncScheme::LockFree {
+        acct::lockfree_merge(&mut counters, shared.n_shared, dt);
+    }
+
+    super::finish_batch(cfg, ys, counters)
 }
 
 #[cfg(test)]
@@ -216,5 +306,28 @@ mod tests {
     fn empty_matrix_ok() {
         let m = CooMatrix::<f64>::zeros(8, 8);
         check(&m, 4, TaskletBalance::NnzElement, SyncScheme::LockFree);
+    }
+
+    #[test]
+    fn batch_matches_looped_single_vector() {
+        let m = generate::scale_free::<f64>(300, 300, 7, 0.7, 23);
+        let xs: Vec<Vec<f64>> = (0..6)
+            .map(|b| (0..300).map(|i| ((i + 5 * b) % 11) as f64 - 5.0).collect())
+            .collect();
+        let refs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        for bal in [TaskletBalance::Rows, TaskletBalance::Nnz, TaskletBalance::NnzElement] {
+            for sync in [SyncScheme::LockFree, SyncScheme::CoarseLock, SyncScheme::FineLock] {
+                let batch = run_coo_dpu_batch(&cfg(16), &m, &refs, bal, sync);
+                assert_eq!(batch.len(), xs.len());
+                for (x, out) in xs.iter().zip(&batch) {
+                    let single = run_coo_dpu(&cfg(16), &m, x, bal, sync);
+                    assert_eq!(out.y, single.y, "{bal:?} {sync:?}: y differs");
+                    assert_eq!(out.counters, single.counters, "{bal:?} {sync:?}: counters differ");
+                    assert_eq!(out.timing, single.timing, "{bal:?} {sync:?}: timing differs");
+                }
+            }
+        }
+        assert!(run_coo_dpu_batch(&cfg(4), &m, &[], TaskletBalance::NnzElement, SyncScheme::LockFree)
+            .is_empty());
     }
 }

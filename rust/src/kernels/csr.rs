@@ -31,14 +31,7 @@ pub fn run_csr_dpu<T: SpElem>(
 ) -> DpuKernelOutput<T> {
     assert_eq!(x.len(), slice.ncols(), "x length mismatch");
     let t = cfg.tasklets;
-    let ranges = match bal {
-        TaskletBalance::Rows => split_even(slice.nrows(), t),
-        TaskletBalance::Nnz => {
-            let weights: Vec<usize> = (0..slice.nrows()).map(|r| slice.row_nnz(r)).collect();
-            split_weighted(&weights, t)
-        }
-        other => panic!("CSR kernel does not support {:?} tasklet balancing", other),
-    };
+    let ranges = tasklet_row_ranges(slice, t, bal);
 
     let mut y = vec![T::zero(); slice.nrows()];
     let mut counters = vec![TaskletCounters::default(); t];
@@ -70,6 +63,92 @@ pub fn run_csr_dpu<T: SpElem>(
     }
 
     DpuKernelOutput::finish(cfg, y, counters)
+}
+
+/// Per-tasklet row ranges for the CSR balancing schemes — shared by the
+/// single-vector and batched entry points so they split identically.
+fn tasklet_row_ranges<T: SpElem>(
+    slice: &CsrMatrix<T>,
+    t: usize,
+    bal: TaskletBalance,
+) -> Vec<std::ops::Range<usize>> {
+    match bal {
+        TaskletBalance::Rows => split_even(slice.nrows(), t),
+        TaskletBalance::Nnz => {
+            let weights: Vec<usize> = (0..slice.nrows()).map(|r| slice.row_nnz(r)).collect();
+            split_weighted(&weights, t)
+        }
+        other => panic!("CSR kernel does not support {:?} tasklet balancing", other),
+    }
+}
+
+/// Run the CSR kernel on one DPU for a whole block of input vectors.
+///
+/// Fused SpMM-style variant of [`run_csr_dpu`]: the matrix slice is
+/// walked once and every vector's accumulator advances per non-zero, so
+/// the host-side simulation streams the slice (and runs the cycle
+/// accounting) once per *block* instead of once per *vector*. Results
+/// are bit-identical to calling [`run_csr_dpu`] once per vector: the
+/// per-vector MAC chains are evaluated in the same order, and the
+/// accounting is structure-only (see `finish_batch` in the module root).
+///
+/// The tasklet walk below deliberately mirrors [`run_csr_dpu`]'s (a
+/// shared walk would put a per-element vector loop on the single-vector
+/// hot path): any change to the accounting sequence there must be
+/// mirrored here, and `tests/batch_equivalence.rs` fails on any drift.
+pub fn run_csr_dpu_batch<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &CsrMatrix<T>,
+    xs: &[&[T]],
+    bal: TaskletBalance,
+    sync: SyncScheme,
+) -> Vec<DpuKernelOutput<T>> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    if xs.len() == 1 {
+        return vec![run_csr_dpu(cfg, slice, xs[0], bal, sync)];
+    }
+    for x in xs {
+        assert_eq!(x.len(), slice.ncols(), "x length mismatch");
+    }
+    let t = cfg.tasklets;
+    let nb = xs.len();
+    let dt = T::DTYPE;
+    let ranges = tasklet_row_ranges(slice, t, bal);
+    let mut ys: Vec<Vec<T>> = (0..nb).map(|_| vec![T::zero(); slice.nrows()]).collect();
+    let mut counters = vec![TaskletCounters::default(); t];
+    let mut accs: Vec<T> = vec![T::zero(); nb];
+
+    for (tid, range) in ranges.iter().enumerate() {
+        let c = &mut counters[tid];
+        if range.is_empty() {
+            continue;
+        }
+        let nnz_here: usize = range.clone().map(|r| slice.row_nnz(r)).sum();
+        acct::stream_matrix(
+            c,
+            (range.len() + 1) * 4 + nnz_here * (4 + dt.size_bytes()),
+        );
+        for r in range.clone() {
+            acct::row(c);
+            let (cols, vals) = slice.row(r);
+            accs.fill(T::zero());
+            for (col, v) in cols.iter().zip(vals) {
+                acct::element(c, dt);
+                let xi = *col as usize;
+                for (b, acc) in accs.iter_mut().enumerate() {
+                    *acc = T::mac(*acc, *v, xs[b][xi]);
+                }
+            }
+            for (b, acc) in accs.iter().enumerate() {
+                ys[b][r] = *acc;
+            }
+        }
+        acct::writeback(c, range.len(), dt);
+    }
+
+    super::finish_batch(cfg, ys, counters)
 }
 
 #[cfg(test)]
@@ -142,6 +221,32 @@ mod tests {
         let x = vec![1i8; 1024];
         let out = run_csr_dpu(&cfg(16), &csr, &x, TaskletBalance::Nnz, SyncScheme::LockFree);
         assert_eq!(out.timing.bottleneck(), "mram-dma");
+    }
+
+    #[test]
+    fn batch_matches_looped_single_vector() {
+        let m = generate::scale_free::<f64>(200, 200, 6, 0.6, 41);
+        let csr = CsrMatrix::from_coo(&m);
+        let xs: Vec<Vec<f64>> = (0..5)
+            .map(|b| (0..200).map(|i| ((i + 3 * b) % 9) as f64 - 4.0).collect())
+            .collect();
+        let refs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        for bal in [TaskletBalance::Rows, TaskletBalance::Nnz] {
+            let batch = run_csr_dpu_batch(&cfg(8), &csr, &refs, bal, SyncScheme::LockFree);
+            assert_eq!(batch.len(), 5);
+            for (x, out) in xs.iter().zip(&batch) {
+                let single = run_csr_dpu(&cfg(8), &csr, x, bal, SyncScheme::LockFree);
+                assert_eq!(out.y, single.y, "{bal:?}: y differs");
+                assert_eq!(out.counters, single.counters, "{bal:?}: counters differ");
+                assert_eq!(out.timing, single.timing, "{bal:?}: timing differs");
+            }
+        }
+        // Degenerate batches.
+        assert!(run_csr_dpu_batch(&cfg(4), &csr, &[], TaskletBalance::Nnz, SyncScheme::LockFree)
+            .is_empty());
+        let one = run_csr_dpu_batch(&cfg(4), &csr, &refs[..1], TaskletBalance::Nnz, SyncScheme::LockFree);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].y, csr.spmv(&xs[0]));
     }
 
     #[test]

@@ -13,6 +13,13 @@
 //!   blocked formats), [`TaskletBalance`];
 //! * synchronization among tasklets — lock-free, coarse-grained mutex,
 //!   fine-grained mutex, [`SyncScheme`].
+//!
+//! Every kernel also has a batched (multi-vector) entry point
+//! (`run_*_dpu_batch`) used by the SpMM-style serving path in
+//! [`crate::coordinator`]: CSR and COO fuse the batch into one pass over
+//! the matrix slice (accounting once, all vectors per element), the
+//! blocked formats loop the single-vector kernel. Either way the
+//! per-vector results are bit-identical to single-vector runs.
 
 pub mod bcoo;
 pub mod bcsr;
@@ -105,6 +112,27 @@ impl<T: SpElem> DpuKernelOutput<T> {
         let timing = dpu_time(cfg, &counters);
         DpuKernelOutput { y, counters, timing }
     }
+}
+
+/// Package the per-vector outputs of a batched (multi-vector) kernel
+/// that share one set of tasklet counters.
+///
+/// Kernel accounting is *structure-only*: instruction, DMA and
+/// synchronization counts depend on the matrix slice, the balancing
+/// scheme and the sync scheme — never on the input vector's values. A
+/// batched kernel therefore runs the accounting exactly once and every
+/// vector in the batch gets counters (and timing) bit-identical to a
+/// single-vector run — the equivalence the batch execution path
+/// guarantees and `tests/batch_equivalence.rs` locks in.
+pub(crate) fn finish_batch<T: SpElem>(
+    cfg: &PimConfig,
+    ys: Vec<Vec<T>>,
+    counters: Vec<TaskletCounters>,
+) -> Vec<DpuKernelOutput<T>> {
+    let timing = dpu_time(cfg, &counters);
+    ys.into_iter()
+        .map(|y| DpuKernelOutput { y, counters: counters.clone(), timing })
+        .collect()
 }
 
 /// Common per-kernel accounting helpers.

@@ -25,7 +25,12 @@
 //!   transfers once per (matrix, kernel) pair, and
 //!   [`coordinator::SpmvExecutor::execute`] runs the per-DPU kernels —
 //!   serially or on host threads via [`coordinator::Engine`] — and
-//!   produces the paper's load/kernel/retrieve/merge breakdowns.
+//!   produces the paper's load/kernel/retrieve/merge breakdowns. For
+//!   serving-style workloads, [`coordinator::SpmvExecutor::execute_batch`]
+//!   multiplies many vectors against one resident plan in a single
+//!   engine wave (SpMM-style, bit-identical to looped `execute`), and a
+//!   [`coordinator::PlanCache`] keys plans by matrix fingerprint so
+//!   callers without a place to hold plans still plan once.
 //! * [`baselines`] — processor-centric comparators (multithreaded host CPU
 //!   SpMV; analytic CPU/GPU roofline models).
 //! * [`runtime`] — PJRT runtime that loads AOT artifacts (HLO text) built
@@ -63,7 +68,17 @@
 //! // One-shot convenience (plan + execute in one call):
 //! let once = exec.run(&KernelSpec::coo_nnz(), &m, &x).unwrap();
 //! assert_eq!(once.y, run.y);
+//!
+//! // Batched serving (SpMM-style): N queries against the resident
+//! // matrix in one engine wave, bit-identical to looping `execute`.
+//! let xs: Vec<Vec<f32>> = (0..32).map(|_| x.clone()).collect();
+//! let batch = exec.execute_batch(&plan, &xs).unwrap();
+//! println!("{} outputs, {:.3} ms modeled", batch.len(), batch.total().total_s() * 1e3);
 //! ```
+//!
+//! The full pipeline — plan → execute → merge, the batched path, the
+//! plan cache and the module map — is documented with a data-flow
+//! diagram in `docs/ARCHITECTURE.md` at the repository root.
 
 pub mod util;
 pub mod matrix;

@@ -220,11 +220,71 @@ impl<T: SpElem> CooMatrix<T> {
     pub fn size_bytes(&self) -> usize {
         self.nnz() * (8 + T::DTYPE.size_bytes())
     }
+
+    /// Order-stable 64-bit fingerprint of the matrix content: shape,
+    /// sparsity pattern and native value bits
+    /// ([`SpElem::fingerprint_bits`], lossless for every dtype), FNV-1a
+    /// over the canonical (row, col) triple order.
+    /// [`crate::coordinator::PlanCache`] keys plans on it so equal
+    /// matrices share cached plans without the cache holding the
+    /// matrices themselves. One O(nnz) pass; not cryptographic —
+    /// accidental collisions are astronomically unlikely, adversarial
+    /// ones are constructible.
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x100000001b3;
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |v: u64| {
+            for byte in v.to_le_bytes() {
+                h = (h ^ byte as u64).wrapping_mul(PRIME);
+            }
+        };
+        mix(self.nrows as u64);
+        mix(self.ncols as u64);
+        mix(self.rows.len() as u64);
+        for i in 0..self.rows.len() {
+            mix(self.rows[i] as u64);
+            mix(self.cols[i] as u64);
+            mix(self.vals[i].fingerprint_bits());
+        }
+        h
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fingerprint_is_stable_and_content_sensitive() {
+        let a = small();
+        assert_eq!(a.fingerprint(), small().fingerprint(), "deterministic");
+        assert_eq!(a.fingerprint(), a.clone().fingerprint(), "clone-stable");
+        // A changed value, a changed pattern and a changed shape all move
+        // the fingerprint.
+        let v = CooMatrix::from_triples(
+            3,
+            3,
+            vec![(2, 1, 5.0), (0, 0, 1.0), (2, 0, 3.0), (0, 2, 2.0)],
+        );
+        assert_ne!(a.fingerprint(), v.fingerprint());
+        let p = CooMatrix::from_triples(
+            3,
+            3,
+            vec![(1, 1, 4.0), (0, 0, 1.0), (2, 0, 3.0), (0, 2, 2.0)],
+        );
+        assert_ne!(a.fingerprint(), p.fingerprint());
+        assert_ne!(
+            CooMatrix::<f64>::zeros(4, 4).fingerprint(),
+            CooMatrix::<f64>::zeros(4, 5).fingerprint()
+        );
+        // Native value bits: i64 values beyond f64's 53-bit mantissa
+        // (indistinguishable after an f64 round-trip) must still
+        // separate fingerprints.
+        let big = |v: i64| CooMatrix::from_triples(1, 1, vec![(0u32, 0u32, v)]);
+        assert_ne!(big(1i64 << 53).fingerprint(), big((1i64 << 53) + 1).fingerprint());
+        // ...and negative integers keep distinct patterns.
+        assert_ne!(big(-1).fingerprint(), big(1).fingerprint());
+    }
 
     fn small() -> CooMatrix<f64> {
         // [ 1 0 2 ]

@@ -83,6 +83,12 @@ pub trait SpElem: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
     fn from_f64(v: f64) -> Self;
     fn to_f64(self) -> f64;
 
+    /// The element's native bit pattern, widened to 64 bits — a lossless
+    /// identity for hashing (unlike `to_f64`, which collapses i64/u64
+    /// values beyond f64's 53-bit mantissa). Used by
+    /// [`crate::matrix::CooMatrix::fingerprint`].
+    fn fingerprint_bits(self) -> u64;
+
     /// Fused-style multiply-accumulate: `acc + a*b`. Kernels use this so
     /// that integer types get wrapping semantics (matching what the DPU's
     /// C code would do) and floats get the obvious thing.
@@ -120,6 +126,12 @@ macro_rules! impl_int {
             fn to_f64(self) -> f64 {
                 self as f64
             }
+            #[inline]
+            fn fingerprint_bits(self) -> u64 {
+                // Sign-extend through i64 so negative values keep a
+                // distinct, deterministic pattern per value.
+                self as i64 as u64
+            }
         }
     };
 }
@@ -151,6 +163,10 @@ macro_rules! impl_float {
             #[inline]
             fn to_f64(self) -> f64 {
                 self as f64
+            }
+            #[inline]
+            fn fingerprint_bits(self) -> u64 {
+                self.to_bits() as u64
             }
         }
     };

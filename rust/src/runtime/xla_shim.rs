@@ -61,7 +61,7 @@ impl PjRtBuffer {
 
 /// Host-side literal placeholder. Constructible (callers build inputs
 /// before executing), but every operation that would need real XLA
-/// data fails with [`unavailable`].
+/// data fails with the `unavailable` error above.
 pub struct Literal;
 
 impl Literal {

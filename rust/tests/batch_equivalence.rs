@@ -1,0 +1,196 @@
+//! Property tests for the batched (SpMM-style) execution path:
+//! `SpmvExecutor::execute_batch` must be bit-identical — output vector,
+//! breakdown, stats and energy, per vector — to looping the
+//! single-vector `execute` over the same plan, across all 25 kernel
+//! specs, both engines, and batch sizes including 1 and ragged last
+//! blocks. `run_iterations_batch` must match per-vector
+//! `run_iterations` the same way, and `PlanCache`-served plans must be
+//! indistinguishable from freshly built ones.
+
+use sparsep::coordinator::{
+    Engine, KernelSpec, Partitioning, PlanCache, RunResult, SpmvExecutor, VECTOR_BLOCK,
+};
+use sparsep::matrix::{CooMatrix, SpElem};
+use sparsep::pim::PimSystem;
+use sparsep::util::rng::Rng;
+
+fn assert_identical<T: SpElem>(a: &RunResult<T>, b: &RunResult<T>, tag: &str) {
+    assert_eq!(a.y, b.y, "{tag}: output vector differs");
+    assert_eq!(a.breakdown, b.breakdown, "{tag}: breakdown differs");
+    assert_eq!(a.stats, b.stats, "{tag}: stats differ");
+    assert_eq!(a.energy, b.energy, "{tag}: energy differs");
+}
+
+fn vectors(ncols: usize, batch: usize) -> Vec<Vec<f64>> {
+    (0..batch)
+        .map(|b| (0..ncols).map(|i| ((i + 5 * b) % 11) as f64 - 5.0).collect())
+        .collect()
+}
+
+/// Batched vs looped over one plan, one executor.
+fn check_batch<T: SpElem>(
+    exec: &SpmvExecutor,
+    spec: &KernelSpec,
+    m: &CooMatrix<T>,
+    xs: &[Vec<T>],
+    tag: &str,
+) {
+    let plan = exec.plan(spec, m).unwrap();
+    let batch = exec.execute_batch(&plan, xs).unwrap();
+    assert_eq!(batch.len(), xs.len(), "{tag}: batch size");
+    for (i, (x, run)) in xs.iter().zip(&batch.runs).enumerate() {
+        let single = exec.execute(&plan, x).unwrap();
+        assert_identical(run, &single, &format!("{tag} vec={i}"));
+    }
+}
+
+/// PROPERTY: all 25 kernels are batch/looped-identical on a skewed
+/// matrix — covering a ragged last block (11 = VECTOR_BLOCK + 3) — on
+/// the serial and threaded engines alike.
+#[test]
+fn prop_all25_batch_identical_to_looped() {
+    assert_eq!(VECTOR_BLOCK, 8, "batch sizes below assume the 8-vector block");
+    let m = sparsep::matrix::generate::scale_free::<f64>(320, 320, 6, 0.7, 29);
+    let xs = vectors(320, VECTOR_BLOCK + 3);
+    for spec in KernelSpec::all25(4) {
+        let serial = SpmvExecutor::new(PimSystem::with_dpus(16));
+        check_batch(&serial, &spec, &m, &xs, &format!("{} serial", spec.name));
+        let threaded = SpmvExecutor::threaded(PimSystem::with_dpus(16), 4);
+        check_batch(&threaded, &spec, &m, &xs, &format!("{} threaded", spec.name));
+    }
+}
+
+/// PROPERTY: every batch size around the block boundary — 1, a partial
+/// block, exact blocks, exact-plus-ragged — is identical to looped
+/// execution, and the engines agree with each other.
+#[test]
+fn prop_batch_sizes_identical_including_ragged() {
+    let m = sparsep::matrix::generate::scale_free::<f64>(256, 256, 7, 0.6, 51);
+    let specs = [
+        KernelSpec::coo_nnz(),
+        KernelSpec::csr_nnz(),
+        KernelSpec::two_d(sparsep::matrix::Format::Coo, 4),
+    ];
+    for batch in [1, 3, VECTOR_BLOCK - 1, VECTOR_BLOCK, VECTOR_BLOCK + 1, 2 * VECTOR_BLOCK, 2 * VECTOR_BLOCK + 5] {
+        let xs = vectors(256, batch);
+        for spec in &specs {
+            let serial = SpmvExecutor::new(PimSystem::with_dpus(8));
+            check_batch(&serial, spec, &m, &xs, &format!("{} b={batch} serial", spec.name));
+            for t in [1usize, 2, 8] {
+                let exec = SpmvExecutor::threaded(PimSystem::with_dpus(8), t);
+                let plan = exec.plan(spec, &m).unwrap();
+                let b = exec.execute_batch(&plan, &xs).unwrap();
+                let sb = serial.execute_batch(&serial.plan(spec, &m).unwrap(), &xs).unwrap();
+                for (i, (tr, sr)) in b.runs.iter().zip(&sb.runs).enumerate() {
+                    assert_identical(
+                        tr,
+                        sr,
+                        &format!("{} b={batch} t={t} vec={i} cross-engine", spec.name),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: randomized (matrix, kernel, system, batch-size) tuples are
+/// batch/looped-identical — including empty-ish DPUs, thread counts
+/// exceeding the unit count, and integer dtypes.
+#[test]
+fn prop_random_batches_identical_to_looped() {
+    let mut rng = Rng::new(0xBA7C);
+    for _trial in 0..25 {
+        let nrows = 1 + rng.gen_range(200);
+        let ncols = 1 + rng.gen_range(200);
+        let nnz = rng.gen_range(4 * nrows.min(ncols) + 1);
+        let triples: Vec<(u32, u32, f64)> = (0..nnz)
+            .map(|_| {
+                (
+                    rng.gen_range(nrows) as u32,
+                    rng.gen_range(ncols) as u32,
+                    (rng.gen_range(9) as f64) - 4.0,
+                )
+            })
+            .collect();
+        let m = CooMatrix::from_triples(nrows, ncols, triples);
+        let all = KernelSpec::all25(1 + rng.gen_range(6));
+        let spec = all[rng.gen_range(all.len())].clone();
+        let n_dpus = 1 + rng.gen_range(40);
+        let n_dpus = match spec.partitioning {
+            Partitioning::TwoD(_, stripes) => {
+                sparsep::util::round_up(n_dpus.max(stripes), stripes)
+            }
+            _ => n_dpus,
+        };
+        let batch = 1 + rng.gen_range(2 * VECTOR_BLOCK);
+        let xs = vectors(m.ncols(), batch);
+        let exec = if rng.gen_range(2) == 0 {
+            SpmvExecutor::new(PimSystem::with_dpus(n_dpus))
+        } else {
+            SpmvExecutor::threaded(PimSystem::with_dpus(n_dpus), 1 + rng.gen_range(8))
+        };
+        check_batch(&exec, &spec, &m, &xs, &format!("random {} d={n_dpus} b={batch}", spec.name));
+    }
+}
+
+/// PROPERTY: integer batches (wrapping arithmetic) are batch/looped-
+/// identical too.
+#[test]
+fn prop_integer_batches_identical() {
+    let m64 = sparsep::matrix::generate::uniform::<f64>(200, 200, 6, 31);
+    let mi: CooMatrix<i32> = m64.cast();
+    let xs: Vec<Vec<i32>> = (0..5)
+        .map(|b| (0..200).map(|i| ((i + b) % 7) as i32 - 3).collect())
+        .collect();
+    for spec in [KernelSpec::coo_nnz(), KernelSpec::csr_nnz(), KernelSpec::bcoo_nnz()] {
+        let exec = SpmvExecutor::threaded(PimSystem::with_dpus(12), 3);
+        check_batch(&exec, &spec, &mi, &xs, &format!("{} i32", spec.name));
+    }
+}
+
+/// PROPERTY: iterated batched execution matches per-vector
+/// `run_iterations` bit-for-bit, on both engines (vector feedback
+/// amplifies any divergence).
+#[test]
+fn prop_run_iterations_batch_identical_to_per_vector() {
+    let m = sparsep::matrix::generate::uniform::<f64>(192, 192, 5, 43);
+    let xs = vectors(192, 5);
+    let spec = KernelSpec::coo_nnz();
+    for engine in [Engine::Serial, Engine::threaded(4)] {
+        let exec = SpmvExecutor::with_engine(PimSystem::with_dpus(16), engine);
+        let plan = exec.plan(&spec, &m).unwrap();
+        let batch = exec.run_iterations_batch(&plan, &xs, 6).unwrap();
+        assert_eq!(batch.iters, 6);
+        let mut want_total = sparsep::coordinator::Breakdown::default();
+        for (x, last) in xs.iter().zip(&batch.last.runs) {
+            let single = exec.run_iterations(&plan, x, 6).unwrap();
+            assert_identical(last, &single.last, "iterated batch");
+            want_total.accumulate(&single.total);
+        }
+        assert_eq!(batch.total, want_total, "iterated totals");
+    }
+}
+
+/// PROPERTY: a PlanCache-served plan is indistinguishable from a fresh
+/// one — hit or miss — and the cache actually hits on equal content.
+#[test]
+fn prop_plan_cache_serves_equivalent_plans() {
+    let m = sparsep::matrix::generate::scale_free::<f64>(300, 300, 6, 0.6, 77);
+    let xs = vectors(300, VECTOR_BLOCK + 1);
+    let cache: PlanCache<f64> = PlanCache::new();
+    let exec = SpmvExecutor::threaded(PimSystem::with_dpus(16), 4);
+    for spec in [KernelSpec::csr_nnz(), KernelSpec::coo_nnz()] {
+        let fresh = exec.plan(&spec, &m).unwrap();
+        let miss = cache.plan(&exec, &spec, &m).unwrap();
+        // Equal matrix content (a clone) must hit, not re-plan.
+        let hit = cache.plan(&exec, &spec, &m.clone()).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&miss, &hit), "{}: clone must hit", spec.name);
+        let a = exec.execute_batch(&fresh, &xs).unwrap();
+        let b = exec.execute_batch(&hit, &xs).unwrap();
+        for (i, (ra, rb)) in a.runs.iter().zip(&b.runs).enumerate() {
+            assert_identical(ra, rb, &format!("{} cache vec={i}", spec.name));
+        }
+    }
+    assert_eq!(cache.hits(), 2);
+    assert_eq!(cache.misses(), 2);
+}

@@ -1,13 +1,19 @@
 #!/usr/bin/env bash
-# Coordinator perf smoke: wall-clock of 50 plan-once CG iterations on a
-# 100k x 100k scale-free SPD system, serial vs threaded engine. Emits
-# BENCH_coordinator.json at the repo root so successive PRs can track
-# the perf trajectory. Knobs:
+# Perf smokes, emitted as JSON at the repo root so successive PRs can
+# track the trajectory:
 #
-#   BENCH_ROWS   (default 100000)   matrix dimension
+#   BENCH_coordinator.json  50 plan-once CG iterations on a 100k x 100k
+#                           scale-free SPD system, serial vs threaded
+#   BENCH_batch.json        batched (SpMM-style) vs looped single-vector
+#                           serving of a vector batch over one plan
+#
+# Knobs:
+#   BENCH_ROWS   (default 100000)   CG matrix dimension
 #   BENCH_ITERS  (default 50)       CG iterations
 #   BENCH_DPUS   (default 256)      simulated DPU count
 #   BENCH_THREADS (default: nproc)  threaded-engine workers
+#   BENCH_BATCH_ROWS (default 50000)  batch-bench matrix dimension
+#   BENCH_BATCH  (default 32)       batch-bench vector count
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,3 +28,13 @@ cargo run --release -- bench-coordinator \
   --out BENCH_coordinator.json
 
 cat BENCH_coordinator.json
+
+cargo run --release -- bench-batch \
+  --rows "${BENCH_BATCH_ROWS:-50000}" \
+  --deg 8 \
+  --batch "${BENCH_BATCH:-32}" \
+  --dpus "${BENCH_DPUS:-256}" \
+  --threads "$THREADS" \
+  --out BENCH_batch.json
+
+cat BENCH_batch.json

@@ -12,6 +12,9 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== docs: cargo doc --no-deps (warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 if [[ "${SKIP_EXAMPLES:-0}" != "1" ]]; then
   for ex in quickstart format_explorer scaling_study e2e_characterization; do
     echo "== example: $ex (release) =="

@@ -55,7 +55,7 @@ fn main() -> sparsep::util::Result<()> {
         let mut best: Option<(String, f64, f64)> = None;
         for spec in KernelSpec::all25(8) {
             let plan = exec.plan(&spec, m)?;
-            let r = exec.execute(&plan, &x)?;
+            let r = plan.execute(&exec, &x)?;
             sparsep::ensure!(r.y == gold, "{name}/{}: output mismatch", spec.name);
             verified += 1;
             let total = r.breakdown.total_s();

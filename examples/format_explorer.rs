@@ -41,7 +41,7 @@ fn explore(name: &str, m: &CooMatrix<f64>) -> sparsep::util::Result<(String, f64
     let mut best = (String::new(), f64::INFINITY);
     for spec in KernelSpec::all25(8) {
         let plan = exec.plan(&spec, m)?;
-        let r = exec.execute(&plan, &x)?;
+        let r = plan.execute(&exec, &x)?;
         assert_eq!(r.y, m.spmv(&x), "{} must be exact", spec.name);
         let total = r.breakdown.total_s();
         t.row(&[

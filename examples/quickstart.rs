@@ -1,12 +1,12 @@
-//! Quickstart: plan one SpMV kernel over the simulated PIM system, then
-//! execute it many times — the plan-once/iterate-many shape every
-//! iterative app uses.
+//! Quickstart: stand up an `SpmvService`, register a matrix once, and
+//! serve requests against the handle — the load-once/serve-many shape
+//! the whole library is organized around.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use sparsep::coordinator::{Engine, KernelSpec, SpmvExecutor};
+use sparsep::coordinator::{KernelSpec, Request, ServiceBuilder};
 use sparsep::matrix::generate;
 use sparsep::pim::PimSystem;
 
@@ -21,24 +21,24 @@ fn main() -> sparsep::util::Result<()> {
         m.nnz()
     );
 
-    // 2. A PIM system: 256 DPUs, 16 tasklets each (UPMEM defaults). The
-    //    threaded engine runs the per-DPU kernel simulations on host
-    //    threads; results are bit-identical to the serial engine.
-    let exec = SpmvExecutor::with_engine(PimSystem::with_dpus(256), Engine::threaded(0));
+    // 2. A service over a PIM system: 256 DPUs, 16 tasklets each (UPMEM
+    //    defaults). The threaded engine runs per-DPU kernel simulations
+    //    on host threads; the request queue pipelines the load / kernel
+    //    / retrieve+merge stages across requests. Neither changes
+    //    results — responses are bit-identical to synchronous serial
+    //    execution.
+    let svc = ServiceBuilder::new()
+        .threads(0) // threaded engine, all cores
+        .build::<f32>(PimSystem::with_dpus(256))?;
 
-    // 3. Plan once: partitioning, per-DPU format conversion and transfer
-    //    pricing happen here — never again, however many vectors follow.
-    let plan = exec.plan(&KernelSpec::coo_nnz_rgrn(), &m)?;
-    println!(
-        "plan: {} DPU slices, {} B matrix placed once in {:.3} ms",
-        plan.items().len(),
-        plan.matrix_bytes(),
-        plan.matrix_load_s() * 1e3
-    );
+    // 3. Load once: partitioning, per-DPU format conversion and transfer
+    //    pricing happen here — never again, however many requests
+    //    follow. The handle is Copy; requests against it are hash-free.
+    let handle = svc.load(&m, &KernelSpec::coo_nnz_rgrn())?;
 
-    // 4. Execute: exact result + modeled breakdown.
+    // 4. One SpMV request: exact result + modeled breakdown.
     let x = vec![1.0f32; m.ncols()];
-    let run = exec.execute(&plan, &x)?;
+    let run = svc.spmv(&handle, &x)?;
     assert_eq!(run.y, m.spmv(&x), "simulator output is exact");
     let b = run.breakdown;
     println!("verified: output matches host oracle");
@@ -57,43 +57,57 @@ fn main() -> sparsep::util::Result<()> {
         run.energy.total_j()
     );
 
-    // 5. Iterate on the same plan (y <- A*y, like a power iteration):
-    //    the matrix never moves again, only the vector does.
-    let it = exec.run_iterations(&plan, &x, 20)?;
+    // 5. Typed requests + tickets: submit several kinds of work at
+    //    once, claim the responses in any order. While the kernel stage
+    //    simulates one request's block, the prep stage is already
+    //    staging the next and the merge stage is finishing the previous.
+    let t_batch = svc.submit(
+        handle,
+        Request::Batch {
+            xs: (0..8)
+                .map(|s| (0..m.ncols()).map(|i| ((i + s) % 5) as f32 - 2.0).collect())
+                .collect(),
+        },
+    )?;
+    let t_iter = svc.submit(handle, Request::Iterate { x: x.clone(), iters: 20 })?;
+    let t_one = svc.submit(handle, Request::Spmv { x: x.clone() })?;
+
+    // Out-of-order waits: responses park until claimed.
+    let one = svc.wait(t_one)?.into_spmv()?;
+    assert_eq!(one.y, run.y, "same request, same answer");
+    let it = svc.wait(t_iter)?.into_iterations()?;
     println!(
-        "20 iterations on one plan: {:.3} ms total ({:.3} ms/iter), placement paid once ({:.3} ms)",
+        "20 iterations on one handle: {:.3} ms total ({:.3} ms/iter), placement paid once ({:.3} ms)",
         it.total.total_s() * 1e3,
         it.per_iter_s() * 1e3,
         it.last.stats.matrix_load_s * 1e3
     );
-
-    // 6. Batched serving (SpMM-style): a burst of queries against the
-    //    resident matrix executes as one engine wave — bit-identical to
-    //    looping execute, but the matrix streams once per vector block.
-    //    A PlanCache gives the same plan-once behavior to callers with
-    //    no place to hold plans (CLI commands, request handlers).
-    let cache: sparsep::coordinator::PlanCache<f32> = sparsep::coordinator::PlanCache::new();
-    let served = cache.plan(&exec, &KernelSpec::coo_nnz_rgrn(), &m)?;
-    let xs: Vec<Vec<f32>> = (0..8)
-        .map(|s| (0..m.ncols()).map(|i| ((i + s) % 5) as f32 - 2.0).collect())
-        .collect();
-    let batch = exec.execute_batch(&served, &xs)?;
-    assert_eq!(batch.runs[3].y, m.spmv(&xs[3]), "batched outputs are exact too");
+    let batch = svc.wait(t_batch)?.into_batch()?;
     println!(
-        "batched serving: {} vectors in one wave, {:.3} ms modeled total (cache: {} miss, {} hit capacity {})",
+        "batched serving: {} vectors in one request, {:.3} ms modeled total",
         batch.len(),
-        batch.total().total_s() * 1e3,
-        cache.misses(),
-        cache.hits(),
-        cache.capacity()
+        batch.total().total_s() * 1e3
     );
 
+    // 6. The service's plan cache is content-keyed: loading an equal
+    //    matrix again (even a clone) is a hit, not a re-plan.
+    let again = svc.load(&m.clone(), &KernelSpec::coo_nnz_rgrn())?;
+    let st = svc.stats();
+    println!(
+        "service: {} requests served, cache {} hit / {} miss / {} build ({} handle(s))",
+        st.completed, st.cache_hits, st.cache_misses, st.plan_builds, st.loaded_handles
+    );
+    assert_eq!(st.plan_builds, 1, "the clone re-used the resident plan");
+    svc.unload(again);
+
     // 7. The same matrix through every kernel family, one line each.
+    //    (A fresh handle per spec; each load plans once.)
     println!("\nall-25 sweep (total end-to-end ms):");
     for spec in KernelSpec::all25(8) {
-        let p = exec.plan(&spec, &m)?;
-        let r = exec.execute(&p, &x)?;
+        let h = svc.load(&m, &spec)?;
+        let r = svc.spmv(&h, &x)?;
         println!("  {:<14} {:>9.3} ms", spec.name, r.breakdown.total_s() * 1e3);
+        svc.unload(h);
     }
     Ok(())
 }

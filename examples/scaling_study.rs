@@ -19,7 +19,7 @@ fn main() -> sparsep::util::Result<()> {
     let mut t = Table::new(&["dpus", "kernel GF/s", "e2e GF/s", "load-share", "dominant"]);
     for d in [16usize, 64, 256, 1024, 2048] {
         let exec = SpmvExecutor::with_engine(PimSystem::with_dpus(d), Engine::threaded(0));
-        let r = exec.run(&KernelSpec::coo_nnz_rgrn(), &m, &x)?;
+        let r = exec.plan(&KernelSpec::coo_nnz_rgrn(), &m)?.execute(&exec, &x)?;
         let b = r.breakdown;
         t.row(&[
             d.to_string(),
@@ -44,7 +44,7 @@ fn main() -> sparsep::util::Result<()> {
         for stripes in [2usize, 4, 8, 16, 32] {
             let spec = scheme.clone().with_stripes(stripes);
             let plan = exec.plan(&spec, &m)?;
-            let r = exec.execute(&plan, &x)?;
+            let r = plan.execute(&exec, &x)?;
             let g = r.e2e_gflops();
             if g > best.1 {
                 best = (stripes, g);
@@ -63,8 +63,8 @@ fn main() -> sparsep::util::Result<()> {
     }
 
     println!("\n== best 1D vs best 2D, end-to-end ==");
-    let one = exec.run(&KernelSpec::coo_nnz_rgrn(), &m, &x)?;
-    let two = exec.run(&KernelSpec::two_d_equally_wide(Format::Coo, 16), &m, &x)?;
+    let one = exec.plan(&KernelSpec::coo_nnz_rgrn(), &m)?.execute(&exec, &x)?;
+    let two = exec.plan(&KernelSpec::two_d_equally_wide(Format::Coo, 16), &m)?.execute(&exec, &x)?;
     println!(
         "1D COO.nnz-rgrn: {:.2} GF/s   2D RBDCOO/16: {:.2} GF/s   winner: {}",
         one.e2e_gflops(),

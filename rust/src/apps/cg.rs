@@ -1,4 +1,4 @@
-//! Conjugate Gradient on the PIM executor (scientific-computing workload).
+//! Conjugate Gradient on the PIM service (scientific-computing workload).
 //!
 //! Solves `A x = b` for a symmetric positive-definite sparse `A`. One
 //! SpMV per iteration runs on the (simulated) PIM system; dot products
@@ -7,7 +7,7 @@
 //! reductions — paper hardware suggestion #4).
 
 use super::{axpy, dot, SolveStats};
-use crate::coordinator::{KernelSpec, SpmvExecutor};
+use crate::coordinator::{KernelSpec, SpmvService};
 use crate::matrix::CooMatrix;
 use crate::util::Result;
 
@@ -22,9 +22,10 @@ pub struct CgResult {
 }
 
 /// Run CG with the given kernel until `||r|| < tol * ||b||` or
-/// `max_iters`.
+/// `max_iters`. Each iteration's SpMV is a request against the matrix
+/// registered with `svc`.
 pub fn solve(
-    exec: &SpmvExecutor,
+    svc: &SpmvService<f64>,
     spec: &KernelSpec,
     a: &CooMatrix<f64>,
     b: &[f64],
@@ -34,10 +35,11 @@ pub fn solve(
     crate::ensure!(a.nrows() == a.ncols(), "CG needs a square matrix");
     crate::ensure!(b.len() == a.nrows(), "b length");
     let n = a.nrows();
-    // Plan once: partitioning + format conversion + transfer pricing are
+    // Load once: partitioning + format conversion + transfer pricing are
     // amortized across every CG iteration (the paper's matrix placement
-    // is one-time, only the vector moves per iteration).
-    let plan = exec.plan(spec, a)?;
+    // is one-time, only the vector moves per iteration) — the handle
+    // pins the plan in the service's cache.
+    let handle = svc.load(a, spec)?;
     let mut stats = SolveStats::default();
     let mut x = vec![0.0f64; n];
     let mut r = b.to_vec(); // r = b - A*0
@@ -51,8 +53,9 @@ pub fn solve(
         if converged {
             break;
         }
-        // Ap = A * p on the PIM system.
-        let run = exec.execute(&plan, &p)?;
+        // Ap = A * p on the PIM system (the service's synchronous fast
+        // path: a blocking solver has nothing for the queue to overlap).
+        let run = svc.spmv(&handle, &p)?;
         stats.absorb(&run);
         let ap = run.y;
         let denom = dot(&p, &ap);
@@ -71,6 +74,9 @@ pub fn solve(
         }
         rs_old = rs_new;
     }
+    // Release the handle's plan pin: a long-lived service must not
+    // accumulate one resident plan per solve call.
+    svc.unload(handle);
     Ok(CgResult { x, residuals, converged, stats })
 }
 
@@ -98,16 +104,21 @@ pub fn spd_from(m: &CooMatrix<f64>) -> CooMatrix<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ServiceBuilder;
     use crate::matrix::generate;
     use crate::pim::PimSystem;
+
+    fn service(n_dpus: usize) -> SpmvService<f64> {
+        ServiceBuilder::new().build(PimSystem::with_dpus(n_dpus)).unwrap()
+    }
 
     #[test]
     fn cg_converges_on_spd_system() {
         let base = generate::uniform::<f64>(300, 300, 4, 5);
         let a = spd_from(&base);
         let b: Vec<f64> = (0..300).map(|i| ((i % 7) as f64) - 3.0).collect();
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(16));
-        let res = solve(&exec, &KernelSpec::csr_nnz(), &a, &b, 1e-8, 500).unwrap();
+        let svc = service(16);
+        let res = solve(&svc, &KernelSpec::csr_nnz(), &a, &b, 1e-8, 500).unwrap();
         assert!(res.converged, "CG should converge: {:?}", res.residuals.last());
         // Check the solution actually solves the system.
         let ax = a.spmv(&res.x);
@@ -125,8 +136,8 @@ mod tests {
         let base = generate::banded::<f64>(200, 4, 7);
         let a = spd_from(&base);
         let b = vec![1.0f64; 200];
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
-        let res = solve(&exec, &KernelSpec::coo_nnz(), &a, &b, 1e-10, 300).unwrap();
+        let svc = service(8);
+        let res = solve(&svc, &KernelSpec::coo_nnz(), &a, &b, 1e-10, 300).unwrap();
         assert!(res.converged);
         // load_s accumulates once per iteration.
         assert!(res.stats.pim.load_s > 0.0);
@@ -137,7 +148,7 @@ mod tests {
     #[test]
     fn cg_rejects_bad_shapes() {
         let a = generate::uniform::<f64>(10, 12, 2, 1);
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(2));
-        assert!(solve(&exec, &KernelSpec::csr_row(), &a, &vec![1.0; 10], 1e-6, 10).is_err());
+        let svc = service(2);
+        assert!(solve(&svc, &KernelSpec::csr_row(), &a, &vec![1.0; 10], 1e-6, 10).is_err());
     }
 }

@@ -1,9 +1,9 @@
-//! Jacobi iteration on the PIM executor — the simplest stationary
+//! Jacobi iteration on the PIM service — the simplest stationary
 //! solver, and a good stress of the coordinator because it needs the
 //! matrix *split* into diagonal and off-diagonal parts.
 
 use super::SolveStats;
-use crate::coordinator::{KernelSpec, SpmvExecutor};
+use crate::coordinator::{KernelSpec, SpmvService};
 use crate::matrix::CooMatrix;
 use crate::util::Result;
 
@@ -33,7 +33,7 @@ pub fn split_diagonal(a: &CooMatrix<f64>) -> (CooMatrix<f64>, Vec<f64>) {
 
 /// Jacobi: `x' = D^-1 (b - R x)` with the `R x` SpMV on PIM.
 pub fn solve(
-    exec: &SpmvExecutor,
+    svc: &SpmvService<f64>,
     spec: &KernelSpec,
     a: &CooMatrix<f64>,
     b: &[f64],
@@ -44,14 +44,15 @@ pub fn solve(
     let n = a.nrows();
     let (r_mat, diag) = split_diagonal(a);
     crate::ensure!(diag.iter().all(|&d| d != 0.0), "zero diagonal entry");
-    // Plan once over the off-diagonal matrix; every sweep reuses it.
-    let plan = exec.plan(spec, &r_mat)?;
+    // Load once over the off-diagonal matrix; every sweep reuses the
+    // handle's resident plan.
+    let handle = svc.load(&r_mat, spec)?;
     let mut stats = SolveStats::default();
     let mut x = vec![0.0f64; n];
     let mut converged = false;
     let mut iterations = 0;
     for _ in 0..max_iters {
-        let run = exec.execute(&plan, &x)?;
+        let run = svc.spmv(&handle, &x)?;
         stats.absorb(&run);
         let mut delta = 0.0f64;
         for i in 0..n {
@@ -65,6 +66,9 @@ pub fn solve(
             break;
         }
     }
+    // Release the handle's plan pin: a long-lived service must not
+    // accumulate one resident plan per solve call.
+    svc.unload(handle);
     Ok(JacobiResult { x, iterations, converged, stats })
 }
 
@@ -72,15 +76,20 @@ pub fn solve(
 mod tests {
     use super::*;
     use crate::apps::cg::spd_from;
+    use crate::coordinator::ServiceBuilder;
     use crate::matrix::generate;
     use crate::pim::PimSystem;
+
+    fn service(n_dpus: usize) -> SpmvService<f64> {
+        ServiceBuilder::new().build(PimSystem::with_dpus(n_dpus)).unwrap()
+    }
 
     #[test]
     fn jacobi_converges_on_diagonally_dominant_system() {
         let a = spd_from(&generate::uniform::<f64>(200, 200, 4, 3));
         let b: Vec<f64> = (0..200).map(|i| (i % 5) as f64).collect();
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
-        let res = solve(&exec, &KernelSpec::coo_nnz(), &a, &b, 1e-12, 2000).unwrap();
+        let svc = service(8);
+        let res = solve(&svc, &KernelSpec::coo_nnz(), &a, &b, 1e-12, 2000).unwrap();
         assert!(res.converged, "after {} iters", res.iterations);
         let ax = a.spmv(&res.x);
         for i in 0..200 {
@@ -101,7 +110,7 @@ mod tests {
     #[test]
     fn rejects_zero_diagonal() {
         let a = CooMatrix::from_triples(3, 3, vec![(0, 1, 1.0f64)]);
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(2));
-        assert!(solve(&exec, &KernelSpec::csr_row(), &a, &vec![1.0; 3], 1e-6, 10).is_err());
+        let svc = service(2);
+        assert!(solve(&svc, &KernelSpec::csr_row(), &a, &vec![1.0; 3], 1e-6, 10).is_err());
     }
 }

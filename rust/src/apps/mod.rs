@@ -1,11 +1,13 @@
 //! SpMV-consuming applications — the workloads the paper's introduction
 //! motivates (scientific computing, graph analytics, machine learning).
 //!
-//! Each solver iterates SpMV on the PIM executor while the host performs
-//! the vector operations, accumulating the full cost model across
-//! iterations (the setting where the paper's "matrix placement is
-//! one-time, vector transfer is per-iteration" methodology matters: an
-//! iterative solver calls SpMV hundreds of times on the same matrix).
+//! Each solver registers its matrix with an
+//! [`crate::coordinator::SpmvService`] once and iterates SpMV requests
+//! against the handle while the host performs the vector operations,
+//! accumulating the full cost model across iterations (the setting
+//! where the paper's "matrix placement is one-time, vector transfer is
+//! per-iteration" methodology matters: an iterative solver calls SpMV
+//! hundreds of times on the same matrix).
 
 pub mod cg;
 pub mod pagerank;

@@ -1,9 +1,9 @@
-//! PageRank power iteration on the PIM executor (graph-analytics
+//! PageRank power iteration on the PIM service (graph-analytics
 //! workload — the scale-free matrices of the paper's suite are exactly
 //! web/social graph adjacency structures).
 
 use super::SolveStats;
-use crate::coordinator::{KernelSpec, SpmvExecutor};
+use crate::coordinator::{KernelSpec, SpmvService};
 use crate::matrix::CooMatrix;
 use crate::util::Result;
 
@@ -35,7 +35,7 @@ pub fn transition_matrix(adj: &CooMatrix<f64>) -> CooMatrix<f64> {
 /// Power iteration: `rank = d * P * rank + (1-d)/n`, until the L1 delta
 /// falls below `tol`.
 pub fn pagerank(
-    exec: &SpmvExecutor,
+    svc: &SpmvService<f64>,
     spec: &KernelSpec,
     p: &CooMatrix<f64>,
     damping: f64,
@@ -44,8 +44,8 @@ pub fn pagerank(
 ) -> Result<PageRankResult> {
     crate::ensure!(p.nrows() == p.ncols(), "transition matrix must be square");
     let n = p.nrows();
-    // Plan once: the transition matrix is fixed across power iterations.
-    let plan = exec.plan(spec, p)?;
+    // Load once: the transition matrix is fixed across power iterations.
+    let handle = svc.load(p, spec)?;
     let mut stats = SolveStats::default();
     let mut rank = vec![1.0 / n as f64; n];
     let teleport = (1.0 - damping) / n as f64;
@@ -53,7 +53,7 @@ pub fn pagerank(
     let mut iterations = 0;
 
     for _ in 0..max_iters {
-        let run = exec.execute(&plan, &rank)?;
+        let run = svc.spmv(&handle, &rank)?;
         stats.absorb(&run);
         let mut next: Vec<f64> = run.y.iter().map(|v| damping * v + teleport).collect();
         // Redistribute dangling mass so the vector stays a distribution.
@@ -70,6 +70,9 @@ pub fn pagerank(
             break;
         }
     }
+    // Release the handle's plan pin: a long-lived service must not
+    // accumulate one resident plan per solve call.
+    svc.unload(handle);
     Ok(PageRankResult { ranks: rank, iterations, converged, stats })
 }
 
@@ -86,19 +89,19 @@ pub struct MultiPageRankResult {
     pub stats: SolveStats,
 }
 
-/// Multi-seed personalized PageRank on the PIM executor — the
+/// Multi-seed personalized PageRank on the PIM service — the
 /// scenario-diversity demo for the batched serving path: N teleport
 /// distributions (one per seed node) power-iterate against one resident
-/// transition matrix, advancing in lockstep through
-/// [`SpmvExecutor::execute_batch`] so every iteration is a single
-/// engine wave instead of N.
+/// transition matrix, advancing in lockstep through batched requests
+/// ([`crate::coordinator::Request::Batch`]) so every iteration is a
+/// single pipelined wave instead of N.
 ///
 /// Per seed `s`: `rank = d * P * rank + (1-d) * e_s`, with dangling and
 /// rounding mass redistributed to the seed so each vector stays a
 /// distribution. Iteration stops when the worst seed's L1 delta falls
 /// below `tol`.
 pub fn personalized_pagerank(
-    exec: &SpmvExecutor,
+    svc: &SpmvService<f64>,
     spec: &KernelSpec,
     p: &CooMatrix<f64>,
     seeds: &[usize],
@@ -112,9 +115,9 @@ pub fn personalized_pagerank(
     for &s in seeds {
         crate::ensure!(s < n, "seed {s} out of range for {n} nodes");
     }
-    // Plan once: the transition matrix is shared by every seed and every
+    // Load once: the transition matrix is shared by every seed and every
     // power iteration.
-    let plan = exec.plan(spec, p)?;
+    let handle = svc.load(p, spec)?;
     let mut stats = SolveStats::default();
     let mut ranks: Vec<Vec<f64>> = seeds
         .iter()
@@ -128,7 +131,7 @@ pub fn personalized_pagerank(
     let mut iterations = 0;
 
     for _ in 0..max_iters {
-        let batch = exec.execute_batch(&plan, &ranks)?;
+        let batch = svc.spmv_batch(&handle, &ranks)?;
         iterations += 1;
         stats.iterations = iterations;
         for run in &batch.runs {
@@ -153,6 +156,7 @@ pub fn personalized_pagerank(
             break;
         }
     }
+    svc.unload(handle); // release the plan pin (see `pagerank`)
     Ok(MultiPageRankResult { ranks, iterations, converged, stats })
 }
 
@@ -208,15 +212,20 @@ pub fn pagerank_host(p: &CooMatrix<f64>, damping: f64, tol: f64, max_iters: usiz
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ServiceBuilder;
     use crate::matrix::generate;
     use crate::pim::PimSystem;
+
+    fn service(n_dpus: usize) -> SpmvService<f64> {
+        ServiceBuilder::new().build(PimSystem::with_dpus(n_dpus)).unwrap()
+    }
 
     #[test]
     fn pagerank_matches_host_oracle_exactly() {
         let adj = generate::scale_free::<f64>(400, 400, 6, 0.6, 3);
         let p = transition_matrix(&adj);
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(16));
-        let res = pagerank(&exec, &KernelSpec::coo_nnz(), &p, 0.85, 1e-10, 100).unwrap();
+        let svc = service(16);
+        let res = pagerank(&svc, &KernelSpec::coo_nnz(), &p, 0.85, 1e-10, 100).unwrap();
         let oracle = pagerank_host(&p, 0.85, 1e-10, 100);
         // The PIM SpMV computes the same sums in a different association
         // order (per-DPU partials), so match to float round-off.
@@ -235,8 +244,8 @@ mod tests {
     fn ranks_form_a_distribution() {
         let adj = generate::uniform::<f64>(200, 200, 5, 9);
         let p = transition_matrix(&adj);
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
-        let res = pagerank(&exec, &KernelSpec::coo_nnz_rgrn(), &p, 0.85, 1e-9, 200).unwrap();
+        let svc = service(8);
+        let res = pagerank(&svc, &KernelSpec::coo_nnz_rgrn(), &p, 0.85, 1e-9, 200).unwrap();
         let sum: f64 = res.ranks.iter().sum();
         assert!((sum - 1.0).abs() < 1e-6, "mass {sum}");
         assert!(res.ranks.iter().all(|&r| r >= 0.0));
@@ -246,10 +255,10 @@ mod tests {
     fn personalized_multi_seed_matches_single_seed_host_oracle() {
         let adj = generate::scale_free::<f64>(300, 300, 6, 0.6, 7);
         let p = transition_matrix(&adj);
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
+        let svc = service(8);
         let seeds = [0usize, 17, 123, 250];
         let res =
-            personalized_pagerank(&exec, &KernelSpec::coo_nnz(), &p, &seeds, 0.85, 1e-10, 300)
+            personalized_pagerank(&svc, &KernelSpec::coo_nnz(), &p, &seeds, 0.85, 1e-10, 300)
                 .unwrap();
         assert!(res.converged);
         assert_eq!(res.ranks.len(), seeds.len());
@@ -283,9 +292,9 @@ mod tests {
         ];
         let adj = crate::matrix::CooMatrix::from_triples(6, 6, triples);
         let p = transition_matrix(&adj);
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(2));
+        let svc = service(2);
         let res =
-            personalized_pagerank(&exec, &KernelSpec::coo_row(), &p, &[0, 3], 0.85, 1e-12, 500)
+            personalized_pagerank(&svc, &KernelSpec::coo_row(), &p, &[0, 3], 0.85, 1e-12, 500)
                 .unwrap();
         for i in 0..3 {
             assert!(res.ranks[0][i] > res.ranks[0][i + 3], "seed-0 walk stays in cycle 0");
@@ -297,10 +306,10 @@ mod tests {
     fn personalized_rejects_bad_seeds() {
         let adj = generate::uniform::<f64>(50, 50, 4, 3);
         let p = transition_matrix(&adj);
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(4));
-        assert!(personalized_pagerank(&exec, &KernelSpec::coo_row(), &p, &[], 0.85, 1e-9, 10)
+        let svc = service(4);
+        assert!(personalized_pagerank(&svc, &KernelSpec::coo_row(), &p, &[], 0.85, 1e-9, 10)
             .is_err());
-        assert!(personalized_pagerank(&exec, &KernelSpec::coo_row(), &p, &[50], 0.85, 1e-9, 10)
+        assert!(personalized_pagerank(&svc, &KernelSpec::coo_row(), &p, &[50], 0.85, 1e-9, 10)
             .is_err());
     }
 
@@ -310,8 +319,8 @@ mod tests {
         let triples: Vec<(u32, u32, f64)> = (1..100u32).map(|i| (i, 0, 1.0)).collect();
         let adj = crate::matrix::CooMatrix::from_triples(100, 100, triples);
         let p = transition_matrix(&adj);
-        let exec = SpmvExecutor::new(PimSystem::with_dpus(4));
-        let res = pagerank(&exec, &KernelSpec::coo_nnz(), &p, 0.85, 1e-12, 200).unwrap();
+        let svc = service(4);
+        let res = pagerank(&svc, &KernelSpec::coo_nnz(), &p, 0.85, 1e-12, 200).unwrap();
         for i in 1..100 {
             assert!(res.ranks[0] > res.ranks[i], "hub must out-rank leaf {i}");
         }

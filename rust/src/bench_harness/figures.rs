@@ -8,7 +8,7 @@
 
 use super::{emit_jsonl, Table};
 use crate::baselines::{cpu, roofline};
-use crate::coordinator::{KernelSpec, SpmvExecutor};
+use crate::coordinator::{KernelSpec, RunResult, SpmvExecutor};
 use crate::kernels::SyncScheme;
 use crate::matrix::{generate, CooMatrix, CsrMatrix, DType, Format, MatrixStats, SpElem};
 use crate::pim::{calib, PimConfig, PimSystem};
@@ -34,6 +34,20 @@ fn exec(n_dpus: usize, tasklets: usize) -> SpmvExecutor {
         PimSystem { cfg: PimConfig { n_dpus, tasklets, ..Default::default() } },
         crate::coordinator::Engine::from_env(),
     )
+}
+
+/// One-shot plan + execute on `ex` — the synchronous
+/// [`crate::coordinator::ExecutionPlan`] path. Figure drivers sweep far
+/// too many distinct (matrix, spec, system) points to keep a resident
+/// service per point; serving-shaped callers use
+/// [`crate::coordinator::SpmvService`] instead.
+fn run_once<T: SpElem>(
+    ex: &SpmvExecutor,
+    spec: &KernelSpec,
+    m: &CooMatrix<T>,
+    x: &[T],
+) -> RunResult<T> {
+    ex.plan(spec, m).unwrap().execute(ex, x).unwrap()
 }
 
 // ---------------------------------------------------------------------
@@ -68,7 +82,8 @@ pub fn e1_tasklet_scaling(scale: Scale) -> Vec<(String, usize, u64)> {
             // not on the tasklet count: plan once, execute per point.
             let plan = exec(1, 16).plan(spec, m).unwrap();
             for &t in &tasklet_counts {
-                let r = exec(1, t).execute(&plan, &x).unwrap();
+                let ex = exec(1, t);
+                let r = plan.execute(&ex, &x).unwrap();
                 cells.push(format!("{:.2}ms", r.breakdown.kernel_s * 1e3));
                 out.push((format!("{}/{}", mname, spec.name), t, r.stats.kernel_cycles));
                 emit_jsonl(
@@ -119,7 +134,7 @@ pub fn e2_sync_schemes(scale: Scale) -> Vec<(String, u64)> {
             let mut cells = vec![mname.to_string(), kname.to_string()];
             for sync in [SyncScheme::LockFree, SyncScheme::CoarseLock, SyncScheme::FineLock] {
                 let spec = base.clone().with_sync(sync);
-                let r = exec(1, 16).run(&spec, m, &x).unwrap();
+                let r = run_once(&exec(1, 16), &spec, m, &x);
                 cells.push(format!("{:.2}ms", r.breakdown.kernel_s * 1e3));
                 out.push((format!("{mname}/{kname}/{}", sync.name()), r.stats.kernel_cycles));
                 emit_jsonl(
@@ -155,7 +170,7 @@ pub fn e3_dtype_sweep(scale: Scale) -> Vec<(DType, f64)> {
     fn run_one<T: SpElem>(m: &CooMatrix<f64>, x_len: usize) -> (u64, usize) {
         let mt: CooMatrix<T> = m.cast();
         let x = vec![T::one(); x_len];
-        let r = exec_one().run(&KernelSpec::csr_nnz(), &mt, &x).unwrap();
+        let r = run_once(&exec_one(), &KernelSpec::csr_nnz(), &mt, &x);
         (r.stats.kernel_cycles, mt.nnz())
     }
     fn exec_one() -> SpmvExecutor {
@@ -212,7 +227,7 @@ pub fn e4_block_formats(scale: Scale) -> Vec<(String, u64)> {
                 } else {
                     KernelSpec::bcoo_nnz().with_block(bs, bs)
                 };
-                let r = exec(1, 16).run(&spec, m, &x).unwrap();
+                let r = run_once(&exec(1, 16), &spec, m, &x);
                 let fill = crate::matrix::BcsrMatrix::from_coo(m, bs, bs).fill_ratio();
                 table.row(&[
                     mname.into(),
@@ -265,7 +280,7 @@ pub fn e5_scaling_1d(scale: Scale) -> Vec<(String, usize, f64)> {
         for spec in &kernels {
             let mut cells = vec![spec.name.clone()];
             for &d in &dpu_counts {
-                let r = exec(d, 16).run(spec, m, &x).unwrap();
+                let r = run_once(&exec(d, 16), spec, m, &x);
                 let g = r.kernel_gflops();
                 cells.push(format!("{g:.3}"));
                 out.push((format!("{mname}/{}", spec.name), d, g));
@@ -305,7 +320,7 @@ pub fn e6_breakdown_1d(scale: Scale) -> Vec<(usize, f64, f64, f64)> {
         Table::new(&["dpus", "load(x-bcast)", "kernel", "retrieve", "total", "dominant"]);
     let mut out = Vec::new();
     for d in [16usize, 64, 256, 1024, 2048] {
-        let r = exec(d, 16).run(&KernelSpec::coo_nnz_rgrn(), &m, &x).unwrap();
+        let r = run_once(&exec(d, 16), &KernelSpec::coo_nnz_rgrn(), &m, &x);
         let b = r.breakdown;
         table.row(&[
             d.to_string(),
@@ -352,7 +367,7 @@ pub fn e7_two_d(scale: Scale) -> Vec<(String, usize, f64)> {
         ]);
         for stripes in [2usize, 4, 8, 16, 32] {
             let spec = scheme_spec.clone().with_stripes(stripes);
-            let r = exec(n_dpus, 16).run(&spec, &m, &x).unwrap();
+            let r = run_once(&exec(n_dpus, 16), &spec, &m, &x);
             let b = r.breakdown;
             table.row(&[
                 stripes.to_string(),
@@ -414,8 +429,7 @@ pub fn e8_one_vs_two(scale: Scale) -> Vec<(String, f64, f64)> {
                 .iter()
                 .map(|sp| {
                     let ex = exec(n_dpus, 16);
-                    let plan = ex.plan(sp, &m).unwrap();
-                    let r = ex.execute(&plan, &x).unwrap();
+                    let r = run_once(&ex, sp, &m, &x);
                     (sp.name.clone(), r.breakdown.total_s())
                 })
                 .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
@@ -487,7 +501,7 @@ pub fn e9_cpu_gpu_pim(scale: Scale) -> Vec<E9Row> {
         let m: CooMatrix<f32> = m64.cast();
         let stats = MatrixStats::of(&m);
         let x = vec![1.0f32; m.ncols()];
-        let r = exec(n_dpus, 16).run(&KernelSpec::coo_nnz(), &m, &x).unwrap();
+        let r = run_once(&exec(n_dpus, 16), &KernelSpec::coo_nnz(), &m, &x);
         let pim_g = r.kernel_gflops();
         let pim_frac = roofline::pim_fraction_of_peak(pim_g, n_dpus, DType::F32);
         let cpu_frac = roofline::CPU.spmv_fraction_of_peak(&stats, DType::F32);
@@ -596,7 +610,7 @@ pub fn ablation_hw(scale: Scale) -> Vec<(String, f64)> {
             PimSystem { cfg },
             crate::coordinator::Engine::from_env(),
         );
-        let r = ex.run(&KernelSpec::coo_nnz_rgrn(), &m, &x).unwrap();
+        let r = run_once(&ex, &KernelSpec::coo_nnz_rgrn(), &m, &x);
         let b = r.breakdown;
         table.row(&[
             name.into(),

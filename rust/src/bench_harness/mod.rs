@@ -9,6 +9,7 @@
 
 pub mod batch;
 pub mod figures;
+pub mod service;
 
 use std::time::Instant;
 

@@ -1,0 +1,230 @@
+//! Serving-pipeline wall-clock benchmark (`sparsep bench-service`).
+//!
+//! Measures what the [`SpmvService`] request queue buys over synchronous
+//! execution: R batched requests served back-to-back through the
+//! pipelined engine (all tickets in flight, stages overlapping across
+//! requests and blocks) versus the same requests executed one after the
+//! other on the synchronous [`crate::coordinator::ExecutionPlan`] path,
+//! on the serial and threaded engines. Responses are bit-identical
+//! between the two paths (checked here and locked by
+//! `tests/service_equivalence.rs`); only the wall clock differs.
+//!
+//! The matrix is loaded (fingerprint + plan) ONCE per service before
+//! any timing — submissions against the [`MatrixHandle`] are hash-free,
+//! so the timed region measures serving, not hashing. The JSON summary
+//! lands in `BENCH_service.json` next to `BENCH_coordinator.json` and
+//! `BENCH_batch.json`.
+//!
+//! [`MatrixHandle`]: crate::coordinator::MatrixHandle
+
+use crate::coordinator::{
+    BlockPolicy, Engine, KernelSpec, PlanCache, Request, ServiceBuilder, SpmvExecutor,
+    SpmvService, VECTOR_BLOCK,
+};
+use crate::matrix::generate;
+use crate::pim::{PimConfig, PimSystem};
+use crate::util::json::{num, obj, s};
+use crate::util::{Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Knobs for [`run`] (CLI flags of `sparsep bench-service`).
+#[derive(Clone, Debug)]
+pub struct ServiceBenchOpts {
+    /// Matrix dimension (square, scale-free class).
+    pub rows: usize,
+    /// Average degree (non-zeros per row).
+    pub deg: usize,
+    /// Number of batched requests per measurement.
+    pub requests: usize,
+    /// Right-hand-side vectors per request.
+    pub batch: usize,
+    /// Simulated DPU count.
+    pub n_dpus: usize,
+    /// Threaded-engine worker count (0 = all cores).
+    pub threads: usize,
+    /// Kernel name (see `sparsep kernels`).
+    pub kernel: String,
+    /// Timed samples per measurement (min is reported).
+    pub samples: usize,
+    /// Service intake-queue depth.
+    pub queue_depth: usize,
+    /// Output JSON path.
+    pub out: String,
+}
+
+impl Default for ServiceBenchOpts {
+    fn default() -> ServiceBenchOpts {
+        ServiceBenchOpts {
+            rows: 50_000,
+            deg: 8,
+            requests: 8,
+            batch: 16,
+            n_dpus: 256,
+            threads: 0,
+            kernel: "CSR.nnz".to_string(),
+            samples: 2,
+            queue_depth: 16,
+            out: "BENCH_service.json".to_string(),
+        }
+    }
+}
+
+/// Run the benchmark and write the JSON summary to `opts.out`.
+pub fn run(opts: &ServiceBenchOpts) -> Result<()> {
+    crate::ensure!(opts.requests >= 1, "bench-service needs --requests >= 1");
+    crate::ensure!(opts.batch >= 1, "bench-service needs --batch >= 1");
+    crate::ensure!(opts.samples >= 1, "bench-service needs --samples >= 1");
+    let spec = KernelSpec::by_name(&opts.kernel, 8)
+        .with_context(|| format!("unknown kernel {} (see `sparsep kernels`)", opts.kernel))?;
+    let m = generate::scale_free::<f64>(opts.rows, opts.rows, opts.deg, 0.6, 7);
+    // Request payloads, deterministic and built outside every timed
+    // region (submission consumes owned vectors).
+    let payloads: Vec<Vec<Vec<f64>>> = (0..opts.requests)
+        .map(|r| {
+            (0..opts.batch)
+                .map(|b| (0..m.ncols()).map(|i| ((i + 3 * b + 7 * r) % 9) as f64 - 4.0).collect())
+                .collect()
+        })
+        .collect();
+    let sys = PimSystem::new(PimConfig { n_dpus: opts.n_dpus, ..Default::default() })?;
+    println!(
+        "bench-service: {} x{} requests x{} vectors on {}x{} ({} nnz), {} DPUs, queue depth {}",
+        spec.name,
+        opts.requests,
+        opts.batch,
+        m.nrows(),
+        m.ncols(),
+        m.nnz(),
+        opts.n_dpus,
+        opts.queue_depth
+    );
+
+    // One shared plan cache: the fingerprint + plan build happen once,
+    // before any timed region, and both engines (same bus shape) reuse
+    // the resident plan.
+    let cache: Arc<PlanCache<f64>> = Arc::new(PlanCache::new());
+    let plan = cache.plan(&SpmvExecutor::new(sys.clone()), &spec, &m)?;
+
+    let wall = |engine: Engine| -> Result<(f64, f64)> {
+        let exec = SpmvExecutor::with_engine(sys.clone(), engine);
+        // Pin the service to the synchronous path's block width: the two
+        // timed paths must differ only in request pipelining, not in how
+        // much matrix streaming each fused block amortizes.
+        let svc: SpmvService<f64> = ServiceBuilder::new()
+            .engine(engine)
+            .queue_depth(opts.queue_depth)
+            .vector_block(BlockPolicy::Fixed(VECTOR_BLOCK))
+            .build_with_cache(sys.clone(), Arc::clone(&cache))?;
+        let handle = svc.load(&m, &spec)?; // cache hit: no re-plan, out of timing
+        // Sanity: pipelined and synchronous answers agree bit-for-bit.
+        let warm_sync = plan.execute_batch_runs(&exec, &payloads[0])?;
+        let warm_svc = svc.spmv_batch(&handle, &payloads[0])?;
+        for (a, b) in warm_sync.runs.iter().zip(&warm_svc.runs) {
+            crate::ensure!(a.y == b.y, "pipelined output diverged from synchronous output");
+        }
+        let mut sync_s = f64::INFINITY;
+        let mut piped_s = f64::INFINITY;
+        for _ in 0..opts.samples {
+            // Synchronous: each request runs load->kernel->merge to
+            // completion before the next starts.
+            let t0 = Instant::now();
+            for xs in &payloads {
+                let b = plan.execute_batch_runs(&exec, xs)?;
+                std::hint::black_box(&b.runs.last().unwrap().y);
+            }
+            sync_s = sync_s.min(t0.elapsed().as_secs_f64());
+            // Pipelined: every ticket in flight at once; stages overlap
+            // across requests and blocks. Payload clones are built
+            // before the clock starts.
+            let owned: Vec<Vec<Vec<f64>>> = payloads.clone();
+            let t1 = Instant::now();
+            let tickets: Vec<_> = owned
+                .into_iter()
+                .map(|xs| svc.submit(handle, Request::Batch { xs }))
+                .collect::<Result<_>>()?;
+            for t in tickets {
+                let resp = svc.wait(t)?.into_batch()?;
+                std::hint::black_box(&resp.runs.last().unwrap().y);
+            }
+            piped_s = piped_s.min(t1.elapsed().as_secs_f64());
+        }
+        Ok((sync_s, piped_s))
+    };
+
+    let (serial_sync, serial_piped) = wall(Engine::Serial)?;
+    let (thr_sync, thr_piped) = wall(Engine::threaded(opts.threads))?;
+    let report = |name: &str, sync_s: f64, piped_s: f64| {
+        println!(
+            "  {:<8} synchronous {:>8.3}s | pipelined {:>8.3}s | speedup {:>5.2}x",
+            name,
+            sync_s,
+            piped_s,
+            sync_s / piped_s.max(1e-12)
+        );
+    };
+    report("serial", serial_sync, serial_piped);
+    report("threaded", thr_sync, thr_piped);
+    println!(
+        "  plan cache: {} hit(s), {} miss(es), {} build(s)",
+        cache.hits(),
+        cache.misses(),
+        cache.builds()
+    );
+
+    let j = obj(vec![
+        ("bench", s("service_request_pipeline")),
+        ("kernel", s(&spec.name)),
+        ("rows", num(m.nrows() as f64)),
+        ("nnz", num(m.nnz() as f64)),
+        ("requests", num(opts.requests as f64)),
+        ("batch", num(opts.batch as f64)),
+        ("dpus", num(opts.n_dpus as f64)),
+        ("host_threads", num(opts.threads as f64)),
+        ("queue_depth", num(opts.queue_depth as f64)),
+        ("samples", num(opts.samples as f64)),
+        ("serial_sync_wall_s", num(serial_sync)),
+        ("serial_pipelined_wall_s", num(serial_piped)),
+        ("threaded_sync_wall_s", num(thr_sync)),
+        ("threaded_pipelined_wall_s", num(thr_piped)),
+        ("serial_speedup", num(serial_sync / serial_piped.max(1e-12))),
+        ("threaded_speedup", num(thr_sync / thr_piped.max(1e-12))),
+        ("plan_builds", num(cache.builds() as f64)),
+    ]);
+    std::fs::write(&opts.out, j.to_string() + "\n")
+        .with_context(|| format!("write {}", opts.out))?;
+    println!("wrote {}", opts.out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_service_smoke_writes_json() {
+        let dir = std::env::temp_dir().join("sparsep_bench_service_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_service_test.json");
+        let opts = ServiceBenchOpts {
+            rows: 400,
+            deg: 4,
+            requests: 3,
+            batch: 4,
+            n_dpus: 8,
+            threads: 2,
+            samples: 1,
+            queue_depth: 2,
+            out: out.to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+        let txt = std::fs::read_to_string(&out).unwrap();
+        let j = crate::util::json::Json::parse(&txt).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("service_request_pipeline"));
+        assert_eq!(j.get("requests").as_usize(), Some(3));
+        assert_eq!(j.get("plan_builds").as_usize(), Some(1));
+        assert!(j.get("threaded_pipelined_wall_s").as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&out).ok();
+    }
+}

@@ -5,8 +5,11 @@
 
 use crate::baselines::cpu;
 use crate::bench_harness::figures::{self, Scale};
-use crate::coordinator::{Engine, KernelSpec, SpmvExecutor};
-use crate::matrix::{generate, CooMatrix, CsrMatrix, DType};
+use crate::coordinator::queue::DEFAULT_QUEUE_DEPTH;
+use crate::coordinator::{
+    BlockPolicy, Engine, KernelSpec, Request, ServiceBuilder, SpmvExecutor, SpmvService, Ticket,
+};
+use crate::matrix::{generate, CooMatrix, CsrMatrix, DType, SpElem};
 use crate::pim::{PimConfig, PimSystem};
 use crate::util::{Context, Result};
 use crate::bail;
@@ -76,10 +79,14 @@ USAGE: sparsep <command> [--flag value]...
 COMMANDS:
   kernels                         list the 25 SpMV kernels
   suite [--full]                  print the matrix-suite table (Table 2)
-  run --kernel K --matrix M       run one kernel; flags:
+  run --kernel K --matrix M       run one kernel through SpmvService:
       [--dpus N] [--tasklets T] [--dtype D] [--stripes S] [--seed X]
-      [--batch B]                 B > 1: batched SpMM-style execution of
-                                  B vectors over one plan, all verified
+      [--batch B]                 B > 1: batched SpMM-style request of
+                                  B vectors over one handle, all verified
+  serve --matrix M                demo serving loop: load once, submit a
+      [--requests R] [--batch B]  mixed request stream (spmv / batch /
+      [--iters I] [--dpus N]      iterate) with all tickets in flight,
+      [--kernel K] [--seed X]     wait out of order, verify every answer
   exp <id> [--scale F] [--full]   regenerate an experiment:
       e1 tasklet-scaling   e2 sync-schemes    e3 dtype
       e4 block-formats     e5 1d-scaling      e6 1d-breakdown
@@ -90,22 +97,30 @@ COMMANDS:
                                   iterative solver with SpMV on PIM
       [--seeds a,b,c]             pagerank only: multi-seed personalized
                                   PageRank via the batched serving path
-  bench-coordinator               plan-once CG wall-clock, serial vs
+  bench-coordinator               load-once CG wall-clock, serial vs
       [--rows N] [--deg K] [--iters I] [--dpus N] [--out F]
                                   threaded; writes BENCH_coordinator.json
   bench-batch                     batched vs looped single-vector SpMV
       [--rows N] [--deg K] [--batch B] [--dpus N] [--kernel K]
       [--threads T] [--samples S] [--out F]
                                   wall-clock; writes BENCH_batch.json
+  bench-service                   queued-pipelined service vs synchronous
+      [--rows N] [--deg K] [--requests R] [--batch B] [--dpus N]
+      [--kernel K] [--threads T] [--samples S] [--out F]
+                                  wall-clock; writes BENCH_service.json
   artifacts                       list AOT artifacts + PJRT platform
   xla --rows N --deg K            SpMV through the AOT XLA path, verified
   cpu --rows N --deg K [--threads T]  measured host-CPU baseline
   help                            this message
 
-ENGINE FLAGS (run / exp / adaptive / solve):
+SERVICE FLAGS (run / serve / solve):
   --engine serial|threaded        how per-DPU kernel simulations execute
   --threads N                     worker threads for the threaded engine
-  (results are bit-identical across engines; only wall-clock changes)"
+  --vector-block auto|N           vectors per fused batch block
+                                  (auto = adaptive policy, the default)
+  --queue-depth Q                 request intake depth before submit blocks
+  (results are bit-identical across engines, block widths and queue
+  depths; only wall-clock changes)"
     );
 }
 
@@ -120,6 +135,29 @@ fn engine_from_args(args: &Args) -> Result<Engine> {
         Some("threaded") => Ok(Engine::threaded(threads)),
         Some(other) => bail!("unknown --engine {other} (serial|threaded)"),
     }
+}
+
+/// Vector-block policy from `--vector-block` (`auto` or a fixed width;
+/// default adaptive).
+fn block_policy_from_args(args: &Args) -> Result<BlockPolicy> {
+    match args.get("vector-block") {
+        None | Some("auto") => Ok(BlockPolicy::Adaptive),
+        Some(v) => {
+            let width: usize =
+                v.parse().context("--vector-block must be `auto` or a positive integer")?;
+            crate::ensure!(width >= 1, "--vector-block must be `auto` or a positive integer");
+            Ok(BlockPolicy::Fixed(width))
+        }
+    }
+}
+
+/// Build an [`SpmvService`] from the common service flags.
+fn service_from_args<T: SpElem>(args: &Args, sys: PimSystem) -> Result<SpmvService<T>> {
+    ServiceBuilder::new()
+        .engine(engine_from_args(args)?)
+        .vector_block(block_policy_from_args(args)?)
+        .queue_depth(args.get_usize("queue-depth", DEFAULT_QUEUE_DEPTH)?)
+        .build(sys)
 }
 
 fn matrix_by_name(name: &str, seed: u64) -> Result<CooMatrix<f64>> {
@@ -138,26 +176,28 @@ fn matrix_by_name(name: &str, seed: u64) -> Result<CooMatrix<f64>> {
     )
 }
 
-fn run_spec<T: crate::matrix::SpElem>(
+fn run_spec<T: SpElem>(
     spec: &KernelSpec,
     m64: &CooMatrix<f64>,
-    exec: &SpmvExecutor,
+    svc: &SpmvService<T>,
     batch: usize,
 ) -> Result<()> {
     let m: CooMatrix<T> = m64.cast();
-    let plan = exec.plan(spec, &m)?;
+    // Register once: plan + fingerprint happen here, then requests
+    // against the handle are hash-free.
+    let handle = svc.load(&m, spec)?;
     if batch > 1 {
-        return run_spec_batch(spec, &m, exec, &plan, batch);
+        return run_spec_batch(spec, &m, svc, handle, batch);
     }
     let x: Vec<T> = (0..m.ncols()).map(|i| T::from_f64(((i % 9) as f64) - 4.0)).collect();
-    let r = exec.execute(&plan, &x)?;
+    let r = svc.spmv(&handle, &x)?;
     // Verify against the host oracle.
     let ok = r.y == m.spmv(&x);
     let b = r.breakdown;
     println!("kernel     : {}", spec.name);
     println!("dtype      : {}", T::DTYPE.name());
     println!("matrix     : {} x {}, {} nnz", m.nrows(), m.ncols(), m.nnz());
-    println!("dpus       : {} ({} tasklets)", r.stats.n_dpus, exec.sys.tasklets());
+    println!("dpus       : {} ({} tasklets)", r.stats.n_dpus, svc.system().tasklets());
     println!("verified   : {}", if ok { "OK (matches host oracle)" } else { "MISMATCH" });
     println!("matrix load: {:.3} ms (one-time)", r.stats.matrix_load_s * 1e3);
     println!(
@@ -178,14 +218,14 @@ fn run_spec<T: crate::matrix::SpElem>(
     Ok(())
 }
 
-/// Batched `run`: B deterministic vectors through one plan via
-/// [`SpmvExecutor::execute_batch`], every output verified against the
-/// host oracle.
-fn run_spec_batch<T: crate::matrix::SpElem>(
+/// Batched `run`: B deterministic vectors through one
+/// [`Request::Batch`] against the resident handle, every output
+/// verified against the host oracle.
+fn run_spec_batch<T: SpElem>(
     spec: &KernelSpec,
     m: &CooMatrix<T>,
-    exec: &SpmvExecutor,
-    plan: &crate::coordinator::ExecutionPlan<T>,
+    svc: &SpmvService<T>,
+    handle: crate::coordinator::MatrixHandle,
     batch: usize,
 ) -> Result<()> {
     let xs: Vec<Vec<T>> = (0..batch)
@@ -193,34 +233,174 @@ fn run_spec_batch<T: crate::matrix::SpElem>(
             (0..m.ncols()).map(|i| T::from_f64((((i + 3 * b) % 9) as f64) - 4.0)).collect()
         })
         .collect();
+    let block = svc.resolved_block(&handle, batch)?;
     let t0 = std::time::Instant::now();
-    let res = exec.execute_batch(plan, &xs)?;
+    let res = svc.spmv_batch(&handle, &xs)?;
     let wall = t0.elapsed().as_secs_f64();
     let ok = res.runs.iter().zip(&xs).all(|(r, x)| r.y == m.spmv(x));
     let total = res.total();
     println!("kernel     : {} (batched x{batch})", spec.name);
     println!("dtype      : {}", T::DTYPE.name());
     println!("matrix     : {} x {}, {} nnz", m.nrows(), m.ncols(), m.nnz());
-    println!("dpus       : {} ({} tasklets)", exec.sys.n_dpus(), exec.sys.tasklets());
+    println!("dpus       : {} ({} tasklets)", svc.system().n_dpus(), svc.system().tasklets());
     println!(
         "verified   : {}",
         if ok { "OK (all outputs match host oracle)" } else { "MISMATCH" }
     );
-    println!("matrix load: {:.3} ms (one-time, shared by the whole batch)", plan.matrix_load_s() * 1e3);
+    println!(
+        "matrix load: {:.3} ms (one-time, shared by the whole batch)",
+        res.runs.first().map_or(0.0, |r| r.stats.matrix_load_s) * 1e3
+    );
     println!(
         "modeled    : {:.3} ms total over the batch ({:.3} ms/vector)",
         total.total_s() * 1e3,
         total.total_s() / batch as f64 * 1e3
     );
     println!(
-        "host wall  : {:.3} ms for the batch ({:.3} ms/vector, {} engine)",
+        "host wall  : {:.3} ms for the batch ({:.3} ms/vector, {} engine, {:?} -> block {})",
         wall * 1e3,
         wall / batch as f64 * 1e3,
-        engine_name(exec.engine)
+        engine_name(svc.engine()),
+        svc.block_policy(),
+        block
     );
     if !ok {
         bail!("batched verification failed");
     }
+    Ok(())
+}
+
+/// `sparsep serve`: a deterministic demo of the serving API — load one
+/// matrix, put a mixed request stream in flight at once, wait for the
+/// tickets out of submission order, verify every answer against host
+/// oracles, and report throughput + service counters.
+fn serve(args: &Args) -> Result<()> {
+    let mname = args.get("matrix").unwrap_or("mini-sf");
+    let m = matrix_by_name(mname, args.get_usize("seed", 7)? as u64)?;
+    let cfg = PimConfig {
+        n_dpus: args.get_usize("dpus", 64)?,
+        tasklets: args.get_usize("tasklets", 16)?,
+        ..Default::default()
+    };
+    let svc: SpmvService<f64> = service_from_args(args, PimSystem::new(cfg)?)?;
+    let stripes = args.get_usize("stripes", 8)?;
+    let spec = match args.get("kernel") {
+        Some(k) => KernelSpec::by_name(k, stripes)
+            .with_context(|| format!("unknown kernel {k} (see `sparsep kernels`)"))?,
+        None => crate::coordinator::adaptive::select_heuristic(&m, &svc.system().cfg).spec,
+    };
+    let requests = args.get_usize("requests", 12)?;
+    let batch = args.get_usize("batch", 8)?;
+    let iters = args.get_usize("iters", 5)?;
+    let square = m.nrows() == m.ncols();
+    println!(
+        "serve: {} ({}x{}, {} nnz) via {} on {} DPUs, {} engine, {:?} blocks",
+        mname,
+        m.nrows(),
+        m.ncols(),
+        m.nnz(),
+        spec.name,
+        svc.system().n_dpus(),
+        engine_name(svc.engine()),
+        svc.block_policy()
+    );
+
+    let t_load = std::time::Instant::now();
+    let handle = svc.load(&m, &spec)?;
+    println!("load       : handle after {:.3} ms (fingerprint + plan, once)", t_load.elapsed().as_secs_f64() * 1e3);
+
+    // What each ticket should answer (host oracles computed up front).
+    enum Expect {
+        Spmv(Vec<f64>),
+        Batch(Vec<Vec<f64>>),
+        Iterate(Vec<f64>),
+    }
+    let vec_for = |s: usize| -> Vec<f64> {
+        (0..m.ncols()).map(|i| ((i + 3 * s) % 9) as f64 - 4.0).collect()
+    };
+    let mut plan_reqs: Vec<(Request<f64>, Expect)> = Vec::with_capacity(requests);
+    for r in 0..requests {
+        match r % 3 {
+            0 => {
+                let x = vec_for(r);
+                plan_reqs.push((Request::Spmv { x: x.clone() }, Expect::Spmv(m.spmv(&x))));
+            }
+            1 => {
+                let xs: Vec<Vec<f64>> = (0..batch).map(|b| vec_for(r + b)).collect();
+                let want = xs.iter().map(|x| m.spmv(x)).collect();
+                plan_reqs.push((Request::Batch { xs }, Expect::Batch(want)));
+            }
+            _ if square => {
+                let x = vec_for(r);
+                let mut want = x.clone();
+                for _ in 0..iters {
+                    want = m.spmv(&want);
+                }
+                plan_reqs.push((Request::Iterate { x, iters }, Expect::Iterate(want)));
+            }
+            _ => {
+                // Non-square matrices cannot iterate; substitute an spmv.
+                let x = vec_for(r);
+                plan_reqs.push((Request::Spmv { x: x.clone() }, Expect::Spmv(m.spmv(&x))));
+            }
+        }
+    }
+
+    // Submit everything, then claim tickets out of submission order
+    // (evens forward, odds backward) — responses park until claimed.
+    let t0 = std::time::Instant::now();
+    let mut pending: Vec<(Ticket, Expect)> = Vec::with_capacity(requests);
+    for (req, expect) in plan_reqs {
+        pending.push((svc.submit(handle, req)?, expect));
+    }
+    let submitted_in = t0.elapsed().as_secs_f64();
+    let mut order: Vec<usize> = (0..pending.len()).step_by(2).collect();
+    order.extend((0..pending.len()).skip(1).step_by(2).rev());
+    let mut counts = [0usize; 3];
+    let mut modeled_s = 0.0f64;
+    for idx in order {
+        let (ticket, expect) = &pending[idx];
+        let resp = svc.wait(*ticket)?;
+        match (resp, expect) {
+            (crate::coordinator::Response::Spmv(r), Expect::Spmv(want)) => {
+                crate::ensure!(&r.y == want, "spmv ticket {} mismatch", ticket.id());
+                counts[0] += 1;
+                modeled_s += r.breakdown.total_s();
+            }
+            (crate::coordinator::Response::Batch(b), Expect::Batch(want)) => {
+                crate::ensure!(
+                    b.runs.iter().map(|r| &r.y).eq(want.iter()),
+                    "batch ticket {} mismatch",
+                    ticket.id()
+                );
+                counts[1] += 1;
+                modeled_s += b.total().total_s();
+            }
+            (crate::coordinator::Response::Iterate(it), Expect::Iterate(want)) => {
+                crate::ensure!(&it.last.y == want, "iterate ticket {} mismatch", ticket.id());
+                counts[2] += 1;
+                modeled_s += it.total.total_s();
+            }
+            _ => bail!("response kind does not match request kind"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let st = svc.stats();
+    println!(
+        "requests   : {} ({} spmv / {} batch x{} / {} iterate x{}), all verified OK",
+        requests, counts[0], counts[1], batch, counts[2], iters
+    );
+    println!(
+        "wall       : {:.3} ms total ({:.3} ms submitting, {:.1} req/s)",
+        wall * 1e3,
+        submitted_in * 1e3,
+        requests as f64 / wall.max(1e-12)
+    );
+    println!("modeled    : {:.3} ms of simulated PIM time served", modeled_s * 1e3);
+    println!(
+        "service    : {} submitted / {} completed, cache {} hit / {} miss / {} build, {} plan(s) resident",
+        st.submitted, st.completed, st.cache_hits, st.cache_misses, st.plan_builds, st.resident_plans
+    );
     Ok(())
 }
 
@@ -261,18 +441,21 @@ pub fn run(args: Args) -> Result<()> {
                 tasklets: args.get_usize("tasklets", 16)?,
                 ..Default::default()
             };
-            let exec = SpmvExecutor::with_engine(PimSystem::new(cfg)?, engine_from_args(&args)?);
+            let sys = PimSystem::new(cfg)?;
             let dt = DType::from_name(args.get("dtype").unwrap_or("fp64"))
                 .context("bad --dtype (int8|int16|int32|int64|fp32|fp64)")?;
             let batch = args.get_usize("batch", 1)?;
             match dt {
-                DType::I8 => run_spec::<i8>(&spec, &m, &exec, batch)?,
-                DType::I16 => run_spec::<i16>(&spec, &m, &exec, batch)?,
-                DType::I32 => run_spec::<i32>(&spec, &m, &exec, batch)?,
-                DType::I64 => run_spec::<i64>(&spec, &m, &exec, batch)?,
-                DType::F32 => run_spec::<f32>(&spec, &m, &exec, batch)?,
-                DType::F64 => run_spec::<f64>(&spec, &m, &exec, batch)?,
+                DType::I8 => run_spec::<i8>(&spec, &m, &service_from_args(&args, sys)?, batch)?,
+                DType::I16 => run_spec::<i16>(&spec, &m, &service_from_args(&args, sys)?, batch)?,
+                DType::I32 => run_spec::<i32>(&spec, &m, &service_from_args(&args, sys)?, batch)?,
+                DType::I64 => run_spec::<i64>(&spec, &m, &service_from_args(&args, sys)?, batch)?,
+                DType::F32 => run_spec::<f32>(&spec, &m, &service_from_args(&args, sys)?, batch)?,
+                DType::F64 => run_spec::<f64>(&spec, &m, &service_from_args(&args, sys)?, batch)?,
             }
+        }
+        "serve" => {
+            serve(&args)?;
         }
         "exp" => {
             let id = args.get("id").map(str::to_string).unwrap_or_else(|| {
@@ -328,7 +511,7 @@ pub fn run(args: Args) -> Result<()> {
             let choice = crate::coordinator::adaptive::select_heuristic(&m, &exec.sys.cfg);
             println!("heuristic  : {}  ({})", choice.spec.name, choice.reason);
             let x: Vec<f64> = (0..m.ncols()).map(|i| (i % 7) as f64).collect();
-            let t_h = exec.run(&choice.spec, &m, &x)?.breakdown.total_s();
+            let t_h = exec.plan(&choice.spec, &m)?.execute(&exec, &x)?.breakdown.total_s();
             let (best, ranking) =
                 crate::coordinator::adaptive::autotune(&exec, &m, &x, args.get_usize("stripes", 8)?)?;
             println!("autotuned  : {}  ({:.3} ms)", best.name, ranking[0].1 * 1e3);
@@ -343,14 +526,14 @@ pub fn run(args: Args) -> Result<()> {
             let mname = args.get("matrix").unwrap_or("mini-unif");
             let m = matrix_by_name(mname, 7)?;
             let cfg = PimConfig { n_dpus: args.get_usize("dpus", 64)?, ..Default::default() };
-            let exec = SpmvExecutor::with_engine(PimSystem::new(cfg)?, engine_from_args(&args)?);
-            let spec = crate::coordinator::adaptive::select_heuristic(&m, &exec.sys.cfg).spec;
+            let svc: SpmvService<f64> = service_from_args(&args, PimSystem::new(cfg)?)?;
+            let spec = crate::coordinator::adaptive::select_heuristic(&m, &svc.system().cfg).spec;
             println!("matrix {} ({}x{}, {} nnz), kernel {}", mname, m.nrows(), m.ncols(), m.nnz(), spec.name);
             match app {
                 "cg" => {
                     let a = crate::apps::cg::spd_from(&m);
                     let b = vec![1.0f64; a.nrows()];
-                    let r = crate::apps::cg::solve(&exec, &spec, &a, &b, 1e-8, 1000)?;
+                    let r = crate::apps::cg::solve(&svc, &spec, &a, &b, 1e-8, 1000)?;
                     println!(
                         "CG: converged={} iters={} residual={:.2e}",
                         r.converged,
@@ -362,7 +545,7 @@ pub fn run(args: Args) -> Result<()> {
                 "jacobi" => {
                     let a = crate::apps::cg::spd_from(&m);
                     let b = vec![1.0f64; a.nrows()];
-                    let r = crate::apps::jacobi::solve(&exec, &spec, &a, &b, 1e-10, 5000)?;
+                    let r = crate::apps::jacobi::solve(&svc, &spec, &a, &b, 1e-10, 5000)?;
                     println!("Jacobi: converged={} iters={}", r.converged, r.iterations);
                     print_solve_stats(&r.stats);
                 }
@@ -377,7 +560,7 @@ pub fn run(args: Args) -> Result<()> {
                             .collect::<std::result::Result<_, _>>()
                             .context("--seeds must be a comma-separated list of node ids")?;
                         let r = crate::apps::pagerank::personalized_pagerank(
-                            &exec, &spec, &p, &seeds, 0.85, 1e-9, 200,
+                            &svc, &spec, &p, &seeds, 0.85, 1e-9, 200,
                         )?;
                         println!(
                             "personalized PageRank: {} seeds, converged={} iters={}",
@@ -394,7 +577,7 @@ pub fn run(args: Args) -> Result<()> {
                         print_solve_stats(&r.stats);
                     } else {
                         let r =
-                            crate::apps::pagerank::pagerank(&exec, &spec, &p, 0.85, 1e-9, 200)?;
+                            crate::apps::pagerank::pagerank(&svc, &spec, &p, 0.85, 1e-9, 200)?;
                         let mut top: Vec<(usize, f64)> =
                             r.ranks.iter().copied().enumerate().collect();
                         top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
@@ -422,6 +605,22 @@ pub fn run(args: Args) -> Result<()> {
                 out: args.get("out").unwrap_or(d.out.as_str()).to_string(),
             };
             crate::bench_harness::batch::run(&opts)?;
+        }
+        "bench-service" => {
+            let d = crate::bench_harness::service::ServiceBenchOpts::default();
+            let opts = crate::bench_harness::service::ServiceBenchOpts {
+                rows: args.get_usize("rows", d.rows)?,
+                deg: args.get_usize("deg", d.deg)?,
+                requests: args.get_usize("requests", d.requests)?,
+                batch: args.get_usize("batch", d.batch)?,
+                n_dpus: args.get_usize("dpus", d.n_dpus)?,
+                threads: args.get_usize("threads", cpu::hw_threads())?,
+                kernel: args.get("kernel").unwrap_or(d.kernel.as_str()).to_string(),
+                samples: args.get_usize("samples", d.samples)?,
+                queue_depth: args.get_usize("queue-depth", d.queue_depth)?,
+                out: args.get("out").unwrap_or(d.out.as_str()).to_string(),
+            };
+            crate::bench_harness::service::run(&opts)?;
         }
         "artifacts" => {
             let r = crate::runtime::ArtifactRunner::load_default()?;
@@ -509,11 +708,19 @@ fn bench_coordinator(args: &Args) -> Result<()> {
     let sys = PimSystem::new(PimConfig { n_dpus, ..Default::default() })?;
     let spec = KernelSpec::coo_nnz();
     // tol = 0 forces exactly `iters` SpMV iterations (no early exit), so
-    // the two engines do identical work.
+    // the two engines do identical work. Both services share one plan
+    // cache, pre-warmed HERE for the matrix CG actually loads (the SPD
+    // system `a`): the O(nnz) fingerprint + plan build stay outside both
+    // timed regions, so neither engine's wall clock includes planning
+    // and the serial/threaded comparison is symmetric.
+    let cache = std::sync::Arc::new(crate::coordinator::PlanCache::<f64>::new());
+    cache.plan(&SpmvExecutor::new(sys.clone()), &spec, &a)?;
     let wall = |engine: Engine| -> Result<(f64, usize)> {
-        let exec = SpmvExecutor::with_engine(sys.clone(), engine);
+        let svc: SpmvService<f64> = ServiceBuilder::new()
+            .engine(engine)
+            .build_with_cache(sys.clone(), std::sync::Arc::clone(&cache))?;
         let t0 = std::time::Instant::now();
-        let r = crate::apps::cg::solve(&exec, &spec, &a, &b, 0.0, iters)?;
+        let r = crate::apps::cg::solve(&svc, &spec, &a, &b, 0.0, iters)?;
         let dt = t0.elapsed().as_secs_f64();
         println!("  {:<8} {:>8.3}s wall ({} iters)", engine_name(engine), dt, r.stats.iterations);
         Ok((dt, r.stats.iterations))
@@ -608,6 +815,41 @@ mod tests {
     fn run_command_batched_smoke() {
         let a = Args::parse(
             ["run", "--kernel", "CSR.nnz", "--matrix", "mini-band", "--dpus", "8", "--batch", "5"]
+                .map(String::from),
+        )
+        .unwrap();
+        run(a).unwrap();
+    }
+
+    #[test]
+    fn run_command_batched_with_fixed_block() {
+        let a = Args::parse(
+            ["run", "--kernel", "BCOO.nnz", "--matrix", "mini-band", "--dpus", "8",
+             "--batch", "5", "--vector-block", "2"]
+                .map(String::from),
+        )
+        .unwrap();
+        run(a).unwrap();
+        // Bad block policies are rejected at parse time.
+        let bad = Args::parse(
+            ["run", "--kernel", "CSR.nnz", "--matrix", "mini-band", "--vector-block", "wide"]
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(bad).is_err());
+        let zero = Args::parse(
+            ["run", "--kernel", "CSR.nnz", "--matrix", "mini-band", "--vector-block", "0"]
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(zero).is_err());
+    }
+
+    #[test]
+    fn serve_command_smoke() {
+        let a = Args::parse(
+            ["serve", "--matrix", "mini-band", "--dpus", "8", "--requests", "7", "--batch", "3",
+             "--iters", "3", "--threads", "2", "--queue-depth", "2"]
                 .map(String::from),
         )
         .unwrap();

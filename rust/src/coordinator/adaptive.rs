@@ -107,7 +107,7 @@ pub fn autotune<T: SpElem>(
     let mut best: Option<(KernelSpec, f64)> = None;
     for spec in KernelSpec::all25(stripes) {
         let plan = exec.plan(&spec, m)?;
-        let r = exec.execute(&plan, x)?;
+        let r = plan.execute(exec, x)?;
         let t = r.breakdown.total_s();
         ranking.push((spec.name.clone(), t));
         if best.as_ref().map_or(true, |(_, bt)| t < *bt) {
@@ -196,7 +196,8 @@ mod tests {
             let (best_spec, ranking) = autotune(&exec, &m, &x, 8).unwrap();
             let best_t = ranking[0].1;
             let choice = select_heuristic(&m, &exec.sys.cfg);
-            let choice_t = exec.run(&choice.spec, &m, &x).unwrap().breakdown.total_s();
+            let choice_plan = exec.plan(&choice.spec, &m).unwrap();
+            let choice_t = choice_plan.execute(&exec, &x).unwrap().breakdown.total_s();
             assert!(
                 choice_t <= best_t * 2.0,
                 "{}: heuristic {} ({choice_t:.6}s) vs best {} ({best_t:.6}s)",

@@ -11,25 +11,37 @@
 //! (partitioning + per-DPU format conversion + transfer pricing).
 //!
 //! The cache is internally synchronized (`&self` API) and hands out
-//! [`Arc`]s, so one cache can serve concurrent request threads.
+//! [`Arc`]s, so one cache can serve concurrent request threads — it is
+//! what [`super::SpmvService`] keeps behind every [`MatrixHandle`]
+//! (shareable across services via `Arc`). Builds are **single-flight**:
+//! when several threads race on one key, exactly one plans while the
+//! others block on a condvar and then share the built plan — an
+//! expensive O(nnz)-plus-conversion plan is never computed twice for
+//! equal content.
+//!
+//! [`MatrixHandle`]: super::MatrixHandle
 
 use super::plan::ExecutionPlan;
 use super::spec::KernelSpec;
 use super::SpmvExecutor;
 use crate::matrix::{CooMatrix, SpElem};
 use crate::util::Result;
-use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Mutex};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Default capacity of [`PlanCache::new`], in plans.
 pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 32;
 
 struct Inner<T: SpElem> {
     map: HashMap<String, Arc<ExecutionPlan<T>>>,
+    /// Keys currently being planned by some thread (single-flight
+    /// markers; never present in `map` simultaneously).
+    building: HashSet<String>,
     /// Insertion order for FIFO eviction (keys always present in `map`).
     order: VecDeque<String>,
     hits: u64,
     misses: u64,
+    builds: u64,
 }
 
 /// A bounded, thread-safe cache of [`ExecutionPlan`]s keyed by matrix
@@ -39,9 +51,14 @@ struct Inner<T: SpElem> {
 /// the input vector or the tasklet count — so the key carries exactly
 /// the matrix [`CooMatrix::fingerprint`], every [`KernelSpec`] field and
 /// the executor's `n_dpus` / `dpus_per_rank` / `bus_scale`. Eviction is
-/// FIFO once `capacity` distinct plans are resident.
+/// FIFO once `capacity` distinct plans are resident. Concurrent lookups
+/// of one missing key build the plan exactly once (single-flight): the
+/// first thread plans (1 miss, 1 build), the rest wait and hit.
 pub struct PlanCache<T: SpElem> {
     inner: Mutex<Inner<T>>,
+    /// Signaled whenever a build finishes (successfully or not) so
+    /// single-flight waiters can re-check the map.
+    built: Condvar,
     capacity: usize,
 }
 
@@ -57,17 +74,21 @@ impl<T: SpElem> PlanCache<T> {
         PlanCache {
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
+                building: HashSet::new(),
                 order: VecDeque::new(),
                 hits: 0,
                 misses: 0,
+                builds: 0,
             }),
+            built: Condvar::new(),
             capacity: capacity.max(1),
         }
     }
 
     /// The plan for (`spec`, `m`) on `exec`'s system: served from cache
     /// when an equal matrix/spec/system was planned before, built via
-    /// [`SpmvExecutor::plan`] (and inserted) otherwise.
+    /// [`SpmvExecutor::plan`] (and inserted) otherwise. Concurrent calls
+    /// for one missing key plan exactly once; the waiters count as hits.
     pub fn plan(
         &self,
         exec: &SpmvExecutor,
@@ -77,30 +98,53 @@ impl<T: SpElem> PlanCache<T> {
         let key = Self::key(exec, spec, m);
         {
             let mut inner = self.lock();
-            if let Some(p) = inner.map.get(&key).cloned() {
-                inner.hits += 1;
-                return Ok(p);
+            loop {
+                if let Some(p) = inner.map.get(&key).cloned() {
+                    inner.hits += 1;
+                    return Ok(p);
+                }
+                if inner.building.contains(&key) {
+                    // Someone else is planning this key: wait for their
+                    // build to land, then re-check (the loop also covers
+                    // spurious wakeups and failed builds, where one
+                    // waiter takes over as the builder).
+                    inner = self.built.wait(inner).expect("plan cache poisoned");
+                    continue;
+                }
+                inner.misses += 1;
+                inner.building.insert(key.clone());
+                break;
             }
-            inner.misses += 1;
         }
         // Plan outside the lock: planning is O(nnz)-heavy and must not
-        // serialize concurrent requests for *different* matrices. Two
-        // threads racing on the same key both plan; the loser's insert
-        // is dropped in favor of the winner's (plans for equal keys are
-        // interchangeable).
-        let built = Arc::new(exec.plan(spec, m)?);
+        // serialize concurrent requests for *different* matrices. The
+        // `building` marker keeps same-key racers parked meanwhile; the
+        // guard releases it even if exec.plan panics (a wedged marker
+        // would park every future lookup of this key forever).
+        let mut guard = BuildGuard { cache: self, key: Some(key) };
+        let built = exec.plan(spec, m);
+        let key = guard.key.take().expect("build guard already disarmed");
+        drop(guard);
         let mut inner = self.lock();
-        if let Some(p) = inner.map.get(&key) {
-            return Ok(Arc::clone(p));
-        }
-        if inner.map.len() >= self.capacity {
-            if let Some(old) = inner.order.pop_front() {
-                inner.map.remove(&old);
+        inner.building.remove(&key);
+        let out = match built {
+            Err(e) => Err(e),
+            Ok(p) => {
+                let p = Arc::new(p);
+                inner.builds += 1;
+                if inner.map.len() >= self.capacity {
+                    if let Some(old) = inner.order.pop_front() {
+                        inner.map.remove(&old);
+                    }
+                }
+                inner.map.insert(key.clone(), Arc::clone(&p));
+                inner.order.push_back(key);
+                Ok(p)
             }
-        }
-        inner.map.insert(key.clone(), Arc::clone(&built));
-        inner.order.push_back(key);
-        Ok(built)
+        };
+        drop(inner);
+        self.built.notify_all();
+        out
     }
 
     /// Resident plan count.
@@ -113,14 +157,22 @@ impl<T: SpElem> PlanCache<T> {
         self.len() == 0
     }
 
-    /// Lookups served from cache since construction (or [`Self::clear`]).
+    /// Lookups served from cache since construction (or [`Self::clear`]),
+    /// including single-flight waiters that shared another thread's build.
     pub fn hits(&self) -> u64 {
         self.lock().hits
     }
 
-    /// Lookups that had to build a plan.
+    /// Lookups that had to build a plan (single-flight: one per
+    /// concurrent group).
     pub fn misses(&self) -> u64 {
         self.lock().misses
+    }
+
+    /// Successful plan builds since construction (or [`Self::clear`]) —
+    /// equals [`Self::misses`] unless a build failed.
+    pub fn builds(&self) -> u64 {
+        self.lock().builds
     }
 
     /// Maximum resident plans.
@@ -128,13 +180,15 @@ impl<T: SpElem> PlanCache<T> {
         self.capacity
     }
 
-    /// Drop every resident plan and reset the hit/miss counters.
+    /// Drop every resident plan and reset the hit/miss/build counters.
+    /// In-flight builds are unaffected (they land after the clear).
     pub fn clear(&self) {
         let mut inner = self.lock();
         inner.map.clear();
         inner.order.clear();
         inner.hits = 0;
         inner.misses = 0;
+        inner.builds = 0;
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner<T>> {
@@ -169,6 +223,29 @@ impl<T: SpElem> Default for PlanCache<T> {
     }
 }
 
+/// Releases a key's single-flight `building` marker if the plan build
+/// unwinds (panics) before the normal completion path disarms the
+/// guard — parked same-key waiters then retake the build instead of
+/// waiting forever.
+struct BuildGuard<'a, T: SpElem> {
+    cache: &'a PlanCache<T>,
+    key: Option<String>,
+}
+
+impl<T: SpElem> Drop for BuildGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(key) = self.key.take() {
+            // Unwinding: drop the marker and wake waiters. Plain lock()
+            // (not the expect wrapper) — double-panicking here would
+            // abort the process.
+            if let Ok(mut inner) = self.cache.inner.lock() {
+                inner.building.remove(&key);
+            }
+            self.cache.built.notify_all();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,8 +265,9 @@ mod tests {
         assert!(Arc::ptr_eq(&p1, &p2), "hit must return the resident plan");
         // The cached plan executes like a fresh one.
         let x = vec![1.0; 128];
-        let fresh = exec.run(&KernelSpec::csr_nnz(), &m, &x).unwrap();
-        let cached = exec.execute(&p2, &x).unwrap();
+        let fresh_plan = exec.plan(&KernelSpec::csr_nnz(), &m).unwrap();
+        let fresh = fresh_plan.execute(&exec, &x).unwrap();
+        let cached = p2.execute(&exec, &x).unwrap();
         assert_eq!(cached.y, fresh.y);
         assert_eq!(cached.breakdown, fresh.breakdown);
     }
@@ -206,6 +284,7 @@ mod tests {
         let exec16 = SpmvExecutor::new(PimSystem::with_dpus(16));
         cache.plan(&exec16, &KernelSpec::csr_nnz(), &m).unwrap();
         assert_eq!((cache.hits(), cache.misses()), (0, 4));
+        assert_eq!(cache.builds(), 4);
         assert_eq!(cache.len(), 4);
     }
 
@@ -227,5 +306,108 @@ mod tests {
         cache.clear();
         assert!(cache.is_empty());
         assert_eq!((cache.hits(), cache.misses()), (0, 0));
+        assert_eq!(cache.builds(), 0);
+    }
+
+    #[test]
+    fn eviction_order_is_strict_insertion_order() {
+        // Insert A, B (capacity 2), then C: A (oldest) must go, B and C
+        // must survive; re-inserting A then evicts B (not C). FIFO is by
+        // insertion, not by recency of use: touching A before inserting
+        // C must not save it.
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(4));
+        let cache = PlanCache::with_capacity(2);
+        let ms: Vec<_> =
+            (0..3).map(|s| generate::uniform::<f64>(48, 48, 3, 100 + s as u64)).collect();
+        let pa = cache.plan(&exec, &KernelSpec::coo_row(), &ms[0]).unwrap();
+        let pb = cache.plan(&exec, &KernelSpec::coo_row(), &ms[1]).unwrap();
+        // Touch A (a hit) — FIFO ignores it.
+        let pa2 = cache.plan(&exec, &KernelSpec::coo_row(), &ms[0]).unwrap();
+        assert!(Arc::ptr_eq(&pa, &pa2));
+        cache.plan(&exec, &KernelSpec::coo_row(), &ms[2]).unwrap(); // evicts A
+        let hits_before = cache.hits();
+        let pb2 = cache.plan(&exec, &KernelSpec::coo_row(), &ms[1]).unwrap(); // B resident
+        assert!(Arc::ptr_eq(&pb, &pb2), "B must have survived A's eviction");
+        assert_eq!(cache.hits(), hits_before + 1);
+        let misses_before = cache.misses();
+        cache.plan(&exec, &KernelSpec::coo_row(), &ms[0]).unwrap(); // A rebuilt, evicts B
+        assert_eq!(cache.misses(), misses_before + 1);
+        let misses_before = cache.misses();
+        cache.plan(&exec, &KernelSpec::coo_row(), &ms[1]).unwrap(); // B gone again
+        assert_eq!(cache.misses(), misses_before + 1);
+    }
+
+    #[test]
+    fn parallel_loads_of_one_matrix_plan_once() {
+        // Single-flight: N threads racing on one (matrix, spec, system)
+        // key must produce exactly one build / one miss; everyone shares
+        // the same Arc.
+        const THREADS: usize = 8;
+        let m = generate::scale_free::<f64>(400, 400, 6, 0.6, 9);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(16));
+        let cache: PlanCache<f64> = PlanCache::new();
+        let plans: Vec<Arc<ExecutionPlan<f64>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    let (cache, exec, m) = (&cache, &exec, &m);
+                    s.spawn(move || cache.plan(exec, &KernelSpec::coo_nnz(), m).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(cache.builds(), 1, "concurrent loads must plan once");
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), (THREADS - 1) as u64);
+        assert_eq!(cache.len(), 1);
+        for p in &plans[1..] {
+            assert!(Arc::ptr_eq(&plans[0], p), "all threads share one plan");
+        }
+    }
+
+    #[test]
+    fn parallel_loads_of_distinct_matrices_do_not_serialize_counts() {
+        // Different keys in parallel: every thread builds its own plan
+        // (no single-flight interference across keys) and the counters
+        // add up exactly.
+        const THREADS: usize = 6;
+        let ms: Vec<_> = (0..THREADS)
+            .map(|s| generate::uniform::<f64>(96, 96, 4, 50 + s as u64))
+            .collect();
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
+        let cache: PlanCache<f64> = PlanCache::new();
+        std::thread::scope(|s| {
+            for m in &ms {
+                let (cache, exec) = (&cache, &exec);
+                s.spawn(move || {
+                    // Two lookups per thread: the second is a guaranteed
+                    // hit for this thread's own key.
+                    cache.plan(exec, &KernelSpec::csr_nnz(), m).unwrap();
+                    cache.plan(exec, &KernelSpec::csr_nnz(), m).unwrap();
+                });
+            }
+        });
+        assert_eq!(cache.builds(), THREADS as u64);
+        assert_eq!(cache.misses(), THREADS as u64);
+        assert_eq!(cache.hits(), THREADS as u64);
+        assert_eq!(cache.len(), THREADS);
+    }
+
+    #[test]
+    fn failed_builds_release_the_single_flight_marker() {
+        // A 2D spec whose stripe count cannot divide the DPU grid fails
+        // to plan; the failure must not wedge later lookups of the same
+        // key (the building marker is released and retries re-plan).
+        let m = generate::uniform::<f64>(64, 64, 4, 3);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(6));
+        let bad = KernelSpec::two_d(crate::matrix::Format::Coo, 4); // 4 !| 6
+        let cache: PlanCache<f64> = PlanCache::new();
+        assert!(cache.plan(&exec, &bad, &m).is_err());
+        assert!(cache.plan(&exec, &bad, &m).is_err(), "retry must not deadlock");
+        assert_eq!(cache.builds(), 0);
+        assert_eq!(cache.misses(), 2, "each failed attempt is a miss");
+        assert!(cache.is_empty());
+        // A good spec still works afterwards.
+        assert!(cache.plan(&exec, &KernelSpec::coo_row(), &m).is_ok());
+        assert_eq!(cache.builds(), 1);
     }
 }

@@ -17,11 +17,18 @@
 //!
 //! The unit of work an engine schedules is whatever the caller indexes:
 //! single-vector execution maps over work items (one per DPU slice),
-//! and the batched path ([`super::SpmvExecutor::execute_batch`]) maps
-//! over (work-item x vector-block) units — so a batch keeps every
+//! and the batched path ([`super::ExecutionPlan::execute_batch_runs`])
+//! maps over (work-item x vector-block) units — so a batch keeps every
 //! worker busy even when the DPU count alone would not, with no engine
 //! changes and the same by-index determinism (locked by the
 //! `batch_equivalence` suite).
+//!
+//! [`super::SpmvService`]'s pipelined request engine layers on top: its
+//! kernel stage drives one engine wave per vector block while separate
+//! stage threads prepare the next block and merge the previous one, so
+//! the engine choice composes with (rather than competes against)
+//! request pipelining. The `service_equivalence` suite locks that the
+//! composition stays bit-identical to synchronous execution.
 
 /// Strategy for running independent per-DPU work items.
 pub trait ExecutionEngine {

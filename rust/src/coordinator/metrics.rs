@@ -7,6 +7,13 @@
 //! one-time matrix placement is reported separately, matching the
 //! paper's methodology (iterative solvers reuse the matrix across
 //! thousands of SpMV calls).
+//!
+//! Every [`super::SpmvService`] response carries exactly these metric
+//! types — a [`RunResult`] per [`super::Request::Spmv`], a
+//! [`BatchResult`] per [`super::Request::Batch`], an
+//! [`IterationsResult`] per [`super::Request::Iterate`] — and
+//! [`ServiceStats`] summarizes the service-level counters (requests,
+//! plan-cache traffic, resident plans).
 
 use crate::pim::Energy;
 
@@ -204,6 +211,35 @@ impl<T> BatchIterationsResult<T> {
     }
 }
 
+/// Service-level counters reported by [`super::SpmvService::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Requests accepted since the service was built: tickets issued by
+    /// `submit` plus synchronous fast-path calls.
+    pub submitted: u64,
+    /// Requests finished: responses published by the request engine
+    /// (claimed or not) plus synchronous fast-path calls.
+    pub completed: u64,
+    /// Plan-cache lookups served from cache (includes single-flight
+    /// waiters that shared a concurrent build).
+    pub cache_hits: u64,
+    /// Plan-cache lookups that had to build.
+    pub cache_misses: u64,
+    /// Successful plan builds.
+    pub plan_builds: u64,
+    /// Plans currently resident in the cache.
+    pub resident_plans: usize,
+    /// Matrix handles currently registered with the service.
+    pub loaded_handles: usize,
+}
+
+impl ServiceStats {
+    /// Requests submitted but not yet completed.
+    pub fn in_flight(&self) -> u64 {
+        self.submitted.saturating_sub(self.completed)
+    }
+}
+
 /// Result of an iterated SpMV (`y <- A*y`, `iters` times) over one plan:
 /// the final iteration's full [`RunResult`] plus cost totals across all
 /// iterations. Produced by [`super::SpmvExecutor::run_iterations`].
@@ -311,6 +347,13 @@ mod tests {
         assert_eq!(it.batch(), 2);
         assert_eq!(it.per_spmv_s(), 2.0);
         assert_eq!(b.into_ys(), vec![vec![1.0], vec![2.0]]);
+    }
+
+    #[test]
+    fn service_stats_in_flight() {
+        let s = ServiceStats { submitted: 5, completed: 3, ..Default::default() };
+        assert_eq!(s.in_flight(), 2);
+        assert_eq!(ServiceStats::default().in_flight(), 0);
     }
 
     #[test]

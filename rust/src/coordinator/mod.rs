@@ -1,7 +1,19 @@
 //! The SparseP host coordinator.
 //!
-//! This is the library's front door, structured as an explicit
-//! three-stage pipeline:
+//! The serving front door is [`SpmvService`]: a builder-configured,
+//! long-lived service that owns the [`PlanCache`] and the execution
+//! engine. Matrices are registered once with
+//! [`SpmvService::load`] -> [`MatrixHandle`] (content-fingerprinted,
+//! cache-backed); work is submitted as typed requests —
+//! [`Request::Spmv`], [`Request::Batch`], [`Request::Iterate`] —
+//! through [`SpmvService::submit`] -> [`Ticket`] /
+//! [`SpmvService::wait`] -> [`Response`]. A worker-thread request queue
+//! ([`queue`]) pipelines the plan/load, kernel, and retrieve/merge
+//! stages across queued requests and across vector blocks;
+//! responses are bit-identical to the synchronous path (locked by
+//! `tests/service_equivalence.rs`).
+//!
+//! Underneath the service sits an explicit three-stage pipeline:
 //!
 //! 1. **Plan** ([`SpmvExecutor::plan`] -> [`ExecutionPlan`]): given a
 //!    [`KernelSpec`] and a sparse matrix, partition the matrix across
@@ -10,47 +22,49 @@
 //!    placement, per-iteration vector load, output gather, host merge).
 //!    All of it depends only on the matrix and the spec — never on the
 //!    input vector — so iterative apps do it exactly once.
-//! 2. **Execute** ([`SpmvExecutor::execute`]): run the per-DPU kernels
+//! 2. **Execute** ([`ExecutionPlan::execute`]): run the per-DPU kernels
 //!    (exactly, with cycle accounting) over an input vector through an
 //!    [`Engine`] — serially or on real host threads — then merge
 //!    partials and return the exact output together with the paper's
 //!    load/kernel/retrieve/merge breakdown, structural statistics and
 //!    energy estimate. Results are bit-identical across engines.
-//! 3. **Iterate** ([`SpmvExecutor::run_iterations`]): repeated
+//! 3. **Iterate** ([`ExecutionPlan::run_iterations`]): repeated
 //!    self-application `y <- A*y` with accumulated cost, the shape of
 //!    every solver in [`crate::apps`].
 //!
-//! Two serving-oriented layers sit on top of that pipeline:
+//! Batched (SpMM-style) execution fans (work-item x vector-block)
+//! units across the engine; every kernel streams each matrix slice
+//! once per block instead of once per vector, and the block width is
+//! set by a [`BlockPolicy`]. The [`PlanCache`] keys plans by (matrix
+//! fingerprint, kernel spec, system shape) with single-flight builds,
+//! so concurrent requests for an equal matrix plan exactly once.
 //!
-//! * **Batch** ([`SpmvExecutor::execute_batch`] /
-//!   [`SpmvExecutor::run_iterations_batch`]): SpMM-style multi-vector
-//!   execution. A workload of N queries against one resident matrix
-//!   pays planning once and fans (work-item x vector-block) units
-//!   across the engine in a single wave; the CSR/COO kernels stream
-//!   each matrix slice once per block instead of once per vector.
-//!   Results are bit-identical to looping [`SpmvExecutor::execute`].
-//! * **Cache** ([`PlanCache`]): plans keyed by (matrix fingerprint,
-//!   kernel spec, system shape), so callers that cannot conveniently
-//!   hold onto an [`ExecutionPlan`] — CLI commands, serving loops —
-//!   still get plan-once-serve-many.
-//!
-//! [`SpmvExecutor::run`] remains as the one-shot convenience (plan +
-//! execute in one call) and is what single-SpMV callers should keep
-//! using. See `docs/ARCHITECTURE.md` for the full data-flow picture.
+//! The historical `SpmvExecutor::{execute, execute_batch,
+//! run_iterations, run_iterations_batch, run}` entry points remain as
+//! thin deprecated wrappers over the same one-shot execution path the
+//! service drives; new code should hold a service (serving) or an
+//! [`ExecutionPlan`] (synchronous). See `docs/ARCHITECTURE.md` for the
+//! full data-flow picture.
 
 pub mod adaptive;
 pub mod cache;
 pub mod engine;
 pub mod metrics;
 pub mod plan;
+pub mod queue;
+pub mod service;
 pub mod spec;
 
 pub use cache::PlanCache;
 pub use engine::{Engine, ExecutionEngine, SerialEngine, ThreadedEngine};
 pub use metrics::{
     BatchIterationsResult, BatchResult, Breakdown, IterationsResult, RunResult, RunStats,
+    ServiceStats,
 };
 pub use plan::{DpuSlice, ExecutionPlan, WorkItem};
+pub use service::{
+    BlockPolicy, MatrixHandle, Request, Response, ServiceBuilder, SpmvService, Ticket,
+};
 pub use spec::{KernelSpec, Partitioning};
 
 use crate::kernels::{self, DpuKernelOutput};
@@ -59,12 +73,14 @@ use crate::pim::{calib, Energy, PimSystem};
 use crate::util::Result;
 use std::ops::Range;
 
-/// Vectors per batched kernel invocation: [`SpmvExecutor::execute_batch`]
+/// Default vectors per batched kernel invocation: batched execution
 /// splits a batch into blocks of this many vectors and schedules one
 /// (work-item x vector-block) unit per block per DPU slice. The value
 /// trades scheduling freedom (more, smaller units) against matrix-stream
 /// amortization (each unit walks its slice once for the whole block);
-/// the last block of a batch may be smaller ("ragged").
+/// the last block of a batch may be smaller ("ragged"). [`SpmvService`]
+/// replaces this constant with a [`BlockPolicy`] resolved per batch;
+/// the block width never affects results, only wall-clock.
 pub const VECTOR_BLOCK: usize = 8;
 
 /// Host-side SpMV executor over a (simulated) PIM system.
@@ -129,7 +145,21 @@ impl SpmvExecutor {
     }
 
     /// Execute one SpMV `y = A * x` over a prebuilt plan.
+    #[deprecated(
+        note = "call ExecutionPlan::execute for the synchronous path, or route requests through coordinator::SpmvService"
+    )]
     pub fn execute<T: SpElem>(
+        &self,
+        plan: &ExecutionPlan<T>,
+        x: &[T],
+    ) -> Result<RunResult<T>> {
+        self.execute_inner(plan, x)
+    }
+
+    /// Shared synchronous single-vector execution (the body behind both
+    /// the deprecated [`Self::execute`] wrapper and
+    /// [`ExecutionPlan::execute`]).
+    pub(crate) fn execute_inner<T: SpElem>(
         &self,
         plan: &ExecutionPlan<T>,
         x: &[T],
@@ -171,10 +201,27 @@ impl SpmvExecutor {
     ///   [`crate::kernels::csr::run_csr_dpu_batch`]).
     ///
     /// An empty `xs` yields an empty result.
+    #[deprecated(
+        note = "call ExecutionPlan::execute_batch_runs for the synchronous path, or submit Request::Batch to coordinator::SpmvService"
+    )]
     pub fn execute_batch<T: SpElem>(
         &self,
         plan: &ExecutionPlan<T>,
         xs: &[Vec<T>],
+    ) -> Result<BatchResult<T>> {
+        self.execute_batch_inner(plan, xs, VECTOR_BLOCK)
+    }
+
+    /// Shared synchronous batched execution with an explicit vector-block
+    /// width (the body behind the deprecated [`Self::execute_batch`]
+    /// wrapper, [`ExecutionPlan::execute_batch_runs`] and the service's
+    /// [`BlockPolicy`]-sized batches). The block width shapes engine
+    /// units only; results are block-independent.
+    pub(crate) fn execute_batch_inner<T: SpElem>(
+        &self,
+        plan: &ExecutionPlan<T>,
+        xs: &[Vec<T>],
+        block: usize,
     ) -> Result<BatchResult<T>> {
         for (i, x) in xs.iter().enumerate() {
             crate::ensure!(
@@ -188,13 +235,14 @@ impl SpmvExecutor {
         if xs.is_empty() {
             return Ok(BatchResult { runs: Vec::new() });
         }
+        let block = block.max(1);
         let cfg = &self.sys.cfg;
         let spec = &plan.spec;
         let items = plan.items();
         let n_items = items.len();
         let blocks: Vec<Range<usize>> = (0..xs.len())
-            .step_by(VECTOR_BLOCK)
-            .map(|s| s..(s + VECTOR_BLOCK).min(xs.len()))
+            .step_by(block)
+            .map(|s| s..(s + block).min(xs.len()))
             .collect();
 
         // Per-block vector windows, built once here — not once per
@@ -239,7 +287,22 @@ impl SpmvExecutor {
     /// prebuilt plan (requires a square matrix for `iters > 1`). Returns
     /// the final run plus cost totals across all iterations — the
     /// plan-once/execute-many usage iterative solvers are built on.
+    #[deprecated(
+        note = "call ExecutionPlan::run_iterations for the synchronous path, or submit Request::Iterate to coordinator::SpmvService"
+    )]
     pub fn run_iterations<T: SpElem>(
+        &self,
+        plan: &ExecutionPlan<T>,
+        x: &[T],
+        iters: usize,
+    ) -> Result<IterationsResult<T>> {
+        self.run_iterations_inner(plan, x, iters)
+    }
+
+    /// Shared synchronous iterated execution (the body behind the
+    /// deprecated [`Self::run_iterations`] wrapper and
+    /// [`ExecutionPlan::run_iterations`]).
+    pub(crate) fn run_iterations_inner<T: SpElem>(
         &self,
         plan: &ExecutionPlan<T>,
         x: &[T],
@@ -257,7 +320,7 @@ impl SpmvExecutor {
         let mut energy = Energy::default();
         let mut last: Option<RunResult<T>> = None;
         for _ in 0..iters {
-            let r = self.execute(plan, &cur)?;
+            let r = self.execute_inner(plan, &cur)?;
             total.accumulate(&r.breakdown);
             energy = energy.add(r.energy);
             cur.clone_from(&r.y);
@@ -275,11 +338,27 @@ impl SpmvExecutor {
     /// Per-vector results are bit-identical to running
     /// [`Self::run_iterations`] on each vector alone; `total` and
     /// `energy` sum over all iterations *and* vectors.
+    #[deprecated(
+        note = "call ExecutionPlan::run_iterations_batch for the synchronous path, or submit requests to coordinator::SpmvService"
+    )]
     pub fn run_iterations_batch<T: SpElem>(
         &self,
         plan: &ExecutionPlan<T>,
         xs: &[Vec<T>],
         iters: usize,
+    ) -> Result<BatchIterationsResult<T>> {
+        self.run_iterations_batch_inner(plan, xs, iters, VECTOR_BLOCK)
+    }
+
+    /// Shared synchronous iterated batched execution (the body behind
+    /// the deprecated [`Self::run_iterations_batch`] wrapper and
+    /// [`ExecutionPlan::run_iterations_batch`]).
+    pub(crate) fn run_iterations_batch_inner<T: SpElem>(
+        &self,
+        plan: &ExecutionPlan<T>,
+        xs: &[Vec<T>],
+        iters: usize,
+        block: usize,
     ) -> Result<BatchIterationsResult<T>> {
         crate::ensure!(iters >= 1, "run_iterations_batch needs iters >= 1");
         crate::ensure!(
@@ -294,7 +373,7 @@ impl SpmvExecutor {
         let mut energy = Energy::default();
         let mut last: Option<BatchResult<T>> = None;
         for _ in 0..iters {
-            let batch = self.execute_batch(plan, &cur)?;
+            let batch = self.execute_batch_inner(plan, &cur, block)?;
             for (c, r) in cur.iter_mut().zip(batch.runs.iter()) {
                 total.accumulate(&r.breakdown);
                 energy = energy.add(r.energy);
@@ -306,8 +385,10 @@ impl SpmvExecutor {
     }
 
     /// Execute one SpMV: `y = A * x` under `spec` (plan + execute in one
-    /// call). Prefer [`Self::plan`] + [`Self::execute`] when the same
-    /// matrix is multiplied more than once.
+    /// call).
+    #[deprecated(
+        note = "use SpmvService::load + submit for serving, or plan() + ExecutionPlan::execute for one-shot execution"
+    )]
     pub fn run<T: SpElem>(
         &self,
         spec: &KernelSpec,
@@ -316,10 +397,10 @@ impl SpmvExecutor {
     ) -> Result<RunResult<T>> {
         crate::ensure!(x.len() == m.ncols(), "x length {} != ncols {}", x.len(), m.ncols());
         let plan = self.plan(spec, m)?;
-        self.execute(&plan, x)
+        self.execute_inner(&plan, x)
     }
 
-    fn finish<T: SpElem>(
+    pub(crate) fn finish<T: SpElem>(
         &self,
         plan: &ExecutionPlan<T>,
         outputs: &[DpuKernelOutput<T>],
@@ -369,7 +450,11 @@ impl SpmvExecutor {
     }
 }
 
+// These tests deliberately exercise the deprecated executor entry
+// points: they are compatibility wrappers whose behavior stays locked
+// until a future major removal.
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::matrix::{generate, Format};

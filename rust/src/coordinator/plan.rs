@@ -134,16 +134,66 @@ impl<T: SpElem> ExecutionPlan<T> {
         y
     }
 
+    /// Execute one SpMV `y = A * x` over this plan on `exec` — the
+    /// synchronous execution path (the pipelined serving path is
+    /// [`super::SpmvService`]). Results are bit-identical to routing the
+    /// same vector through a service.
+    pub fn execute(
+        &self,
+        exec: &super::SpmvExecutor,
+        x: &[T],
+    ) -> Result<super::RunResult<T>> {
+        exec.execute_inner(self, x)
+    }
+
+    /// Batched SpMM-style execution with full per-vector metrics: one
+    /// [`super::RunResult`] per vector in `xs`, in input order, each
+    /// bit-identical to a single-vector [`Self::execute`] of this plan.
+    /// The batch is split into [`super::VECTOR_BLOCK`]-sized vector
+    /// blocks; every (work-item, block) pair becomes one engine unit.
+    pub fn execute_batch_runs(
+        &self,
+        exec: &super::SpmvExecutor,
+        xs: &[Vec<T>],
+    ) -> Result<super::BatchResult<T>> {
+        exec.execute_batch_inner(self, xs, super::VECTOR_BLOCK)
+    }
+
+    /// Iterated SpMV `y <- A*y`, `iters` times starting from `x`
+    /// (requires a square matrix for `iters > 1`): the final run plus
+    /// cost totals across all iterations.
+    pub fn run_iterations(
+        &self,
+        exec: &super::SpmvExecutor,
+        x: &[T],
+        iters: usize,
+    ) -> Result<super::IterationsResult<T>> {
+        exec.run_iterations_inner(self, x, iters)
+    }
+
+    /// Iterated batched SpMV: every vector in `xs` independently
+    /// self-applied `iters` times, advancing in lockstep (one batched
+    /// wave per iteration). Per-vector results are bit-identical to
+    /// [`Self::run_iterations`] on each vector alone.
+    pub fn run_iterations_batch(
+        &self,
+        exec: &super::SpmvExecutor,
+        xs: &[Vec<T>],
+        iters: usize,
+    ) -> Result<super::BatchIterationsResult<T>> {
+        exec.run_iterations_batch_inner(self, xs, iters, super::VECTOR_BLOCK)
+    }
+
     /// Batched SpMM-style execution `Y = A * X`: multiply this plan's
     /// matrix by every vector in `xs` in one engine wave, returning the
     /// output vectors in input order.
     ///
-    /// This is the serving-path convenience over
-    /// [`super::SpmvExecutor::execute_batch`] (which additionally
-    /// returns the full per-vector metrics): the matrix stays resident
-    /// in the plan while any number of right-hand sides stream through.
-    /// Every output is bit-identical to a single-vector
-    /// [`super::SpmvExecutor::execute`] of the same plan.
+    /// This is the output-only convenience over
+    /// [`Self::execute_batch_runs`] (which additionally returns the
+    /// full per-vector metrics): the matrix stays resident in the plan
+    /// while any number of right-hand sides stream through. Every
+    /// output is bit-identical to a single-vector [`Self::execute`] of
+    /// the same plan.
     ///
     /// ```
     /// use sparsep::coordinator::{KernelSpec, SpmvExecutor};
@@ -169,7 +219,7 @@ impl<T: SpElem> ExecutionPlan<T> {
         exec: &super::SpmvExecutor,
         xs: &[Vec<T>],
     ) -> Result<Vec<Vec<T>>> {
-        Ok(exec.execute_batch(self, xs)?.into_ys())
+        Ok(self.execute_batch_runs(exec, xs)?.into_ys())
     }
 }
 

@@ -1,0 +1,498 @@
+//! The pipelined request engine behind [`super::SpmvService`].
+//!
+//! SparseP on real hardware spends most of an SpMV's end-to-end time
+//! moving data: the input-vector load and the output retrieve dominate
+//! once the DPU count grows (the paper's broadcast wall), so a serving
+//! system must overlap those phases across requests instead of running
+//! each request's load -> kernel -> retrieve/merge sequence to
+//! completion before starting the next. This module does that on the
+//! host side of the simulator: three stage threads connected by
+//! bounded, double-buffered hand-off channels,
+//!
+//! ```text
+//!  submit -> [intake queue] -> prep/load -> kernel -> retrieve/merge -> wait
+//!               (depth Q)      (stage 1)  (stage 2)     (stage 3)
+//! ```
+//!
+//! * **Stage 1 — prep/load** pops one request at a time, splits its
+//!   vectors into [`super::BlockPolicy`]-sized blocks (the per-request
+//!   width was resolved at submit) and streams one message per block
+//!   downstream — the host-side analogue of staging each block's input
+//!   vectors for transfer.
+//! * **Stage 2 — kernel** runs each block's per-DPU kernels through the
+//!   service's [`super::Engine`] (one engine wave per block over the
+//!   plan's work items).
+//! * **Stage 3 — retrieve/merge** merges per-DPU partials into output
+//!   vectors through the plan's merge metadata, prices the run, and
+//!   publishes the assembled [`super::Response`] under its ticket.
+//!
+//! While stage 2 simulates block *k*'s kernels, stage 1 is already
+//! preparing block *k+1* (possibly from the next queued request) and
+//! stage 3 is merging block *k-1*: the pipeline overlaps work across
+//! queued requests and across batch blocks. The inter-stage channels
+//! are bounded at [`HANDOFF_DEPTH`] (double buffering — one message
+//! being consumed, one ready), so a slow stage throttles its producer
+//! instead of ballooning memory.
+//!
+//! **Determinism.** Stages are single threads connected by FIFO
+//! channels, every per-(work-item, block) unit is computed by the same
+//! pure kernel calls as the synchronous path, and merging happens in
+//! block-then-vector order — so responses are bit-identical to
+//! [`super::ExecutionPlan::execute`] / `execute_batch_runs` /
+//! `run_iterations` on the same plan, regardless of engine, block
+//! width, queue depth or how requests interleave. The
+//! `tests/service_equivalence.rs` suite locks this in.
+//!
+//! Iterated requests ([`super::Request::Iterate`]) feed back: stage 3
+//! returns each iteration's output vector to stage 1 over an unbounded
+//! feedback channel, which emits the next iteration's blocks. Stage 1
+//! waits on that feedback (an iteration depends on its predecessor), so
+//! an iterate request serializes the *intake* while its in-flight
+//! blocks still overlap across the three stages; queued requests behind
+//! it wait their turn, preserving FIFO service order.
+
+use super::engine::ExecutionEngine;
+use super::plan::{self, ExecutionPlan};
+use super::service::Response;
+use super::{BatchResult, Breakdown, IterationsResult, RunResult, SpmvExecutor};
+use crate::format_err;
+use crate::kernels::DpuKernelOutput;
+use crate::matrix::SpElem;
+use crate::pim::Energy;
+use crate::util::Result;
+use std::collections::{HashMap, HashSet};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Inter-stage hand-off depth: each channel between pipeline stages
+/// holds this many in-flight block messages (double buffering: one
+/// being consumed, one staged behind it).
+pub const HANDOFF_DEPTH: usize = 2;
+
+/// Default intake-queue depth of [`super::ServiceBuilder`]: how many
+/// requests may sit between `submit` and stage 1 before `submit`
+/// blocks (backpressure).
+pub const DEFAULT_QUEUE_DEPTH: usize = 16;
+
+/// What the submitted request's response should look like.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum ResponseKind {
+    Spmv,
+    Batch,
+    Iterate,
+}
+
+/// One queued request, normalized: every kind is (vectors, iterations).
+pub(crate) struct Job<T: SpElem> {
+    pub ticket: u64,
+    pub plan: Arc<ExecutionPlan<T>>,
+    /// Input vectors (exactly one for `Spmv` and `Iterate`).
+    pub xs: Vec<Vec<T>>,
+    /// Self-application count (1 for `Spmv` / `Batch`).
+    pub iters: usize,
+    /// Resolved vector-block width for this request.
+    pub block: usize,
+    pub kind: ResponseKind,
+}
+
+/// Wave bookkeeping carried alongside every block message (a *wave* is
+/// one iteration of one ticket).
+#[derive(Clone, Copy, Debug)]
+struct WaveInfo {
+    kind: ResponseKind,
+    n_blocks: usize,
+    block_index: usize,
+    iter_index: usize,
+    iters_total: usize,
+}
+
+/// Stage 1 -> stage 2: one vector block to run kernels for.
+struct BlockMsg<T: SpElem> {
+    ticket: u64,
+    plan: Arc<ExecutionPlan<T>>,
+    xs: Arc<Vec<Vec<T>>>,
+    blk: Range<usize>,
+    wave: WaveInfo,
+}
+
+/// Stage 2 -> stage 3: the block's raw per-DPU outputs, indexed
+/// `[work_item][vector_in_block]`.
+struct MergeMsg<T: SpElem> {
+    ticket: u64,
+    plan: Arc<ExecutionPlan<T>>,
+    wave: WaveInfo,
+    outputs: Vec<Vec<DpuKernelOutput<T>>>,
+}
+
+/// Ticket completion store: `submit` registers, stage 3 publishes,
+/// `wait` claims. One mutex guards both maps so a ticket can never be
+/// claimed twice or waited on after being claimed.
+struct Completions<T: SpElem> {
+    state: Mutex<CompState<T>>,
+    ready: Condvar,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+}
+
+struct CompState<T: SpElem> {
+    /// Tickets issued and not yet claimed by a `wait`.
+    pending: HashSet<u64>,
+    /// Published responses awaiting their `wait`.
+    done: HashMap<u64, Result<Response<T>>>,
+}
+
+impl<T: SpElem> Completions<T> {
+    fn new() -> Completions<T> {
+        Completions {
+            state: Mutex::new(CompState { pending: HashSet::new(), done: HashMap::new() }),
+            ready: Condvar::new(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+        }
+    }
+
+    fn register(&self, ticket: u64) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.state.lock().expect("completion store poisoned").pending.insert(ticket);
+    }
+
+    fn publish(&self, ticket: u64, resp: Result<Response<T>>) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.state.lock().expect("completion store poisoned").done.insert(ticket, resp);
+        self.ready.notify_all();
+    }
+
+    fn wait(&self, ticket: u64) -> Result<Response<T>> {
+        let mut state = self.state.lock().expect("completion store poisoned");
+        loop {
+            if let Some(resp) = state.done.remove(&ticket) {
+                state.pending.remove(&ticket);
+                return resp;
+            }
+            if !state.pending.contains(&ticket) {
+                return Err(format_err!(
+                    "unknown ticket {ticket} (never submitted here, or already waited on)"
+                ));
+            }
+            state = self.ready.wait(state).expect("completion store poisoned");
+        }
+    }
+
+    /// Fail every registered ticket that has no response yet (a pipeline
+    /// stage died: nothing will ever publish them). Published-but-
+    /// unclaimed responses are left intact for their `wait`.
+    fn fail_all_unanswered(&self, why: &str) {
+        let mut state = self.state.lock().expect("completion store poisoned");
+        let orphans: Vec<u64> = state
+            .pending
+            .iter()
+            .copied()
+            .filter(|t| !state.done.contains_key(t))
+            .collect();
+        for t in orphans {
+            state.done.insert(t, Err(format_err!("{why}")));
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        drop(state);
+        self.ready.notify_all();
+    }
+}
+
+/// Failsafe carried by every stage thread: if the stage unwinds
+/// (panics), fail all unanswered tickets so `wait` errors loudly
+/// instead of blocking forever on a response nobody will publish.
+struct StageGuard<T: SpElem> {
+    comp: Arc<Completions<T>>,
+    stage: &'static str,
+}
+
+impl<T: SpElem> Drop for StageGuard<T> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.comp.fail_all_unanswered(&format!(
+                "request pipeline {} stage panicked",
+                self.stage
+            ));
+        }
+    }
+}
+
+/// The request queue [`super::SpmvService`] owns: intake channel,
+/// pipeline stage threads, and the completion store.
+pub(crate) struct RequestQueue<T: SpElem> {
+    /// `None` only during drop (taking it closes the intake).
+    intake: Option<SyncSender<Job<T>>>,
+    completions: Arc<Completions<T>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<T: SpElem> RequestQueue<T> {
+    /// Spawn the three pipeline stages for `exec` with an intake queue
+    /// of `queue_depth` requests.
+    pub(crate) fn spawn(exec: SpmvExecutor, queue_depth: usize) -> RequestQueue<T> {
+        let (tx_in, rx_in) = sync_channel::<Job<T>>(queue_depth.max(1));
+        let (tx_blk, rx_blk) = sync_channel::<BlockMsg<T>>(HANDOFF_DEPTH);
+        let (tx_mrg, rx_mrg) = sync_channel::<MergeMsg<T>>(HANDOFF_DEPTH);
+        let (tx_fb, rx_fb) = channel::<Vec<T>>();
+        let completions = Arc::new(Completions::new());
+
+        let comp1 = Arc::clone(&completions);
+        let h1 = std::thread::Builder::new()
+            .name("spmv-svc-prep".into())
+            .spawn(move || {
+                let _failsafe = StageGuard { comp: Arc::clone(&comp1), stage: "prep" };
+                stage_prep(rx_in, tx_blk, rx_fb, comp1)
+            })
+            .expect("spawn service prep stage");
+        let exec2 = exec.clone();
+        let comp2 = Arc::clone(&completions);
+        let h2 = std::thread::Builder::new()
+            .name("spmv-svc-kernel".into())
+            .spawn(move || {
+                let _failsafe = StageGuard { comp: comp2, stage: "kernel" };
+                stage_kernel(exec2, rx_blk, tx_mrg)
+            })
+            .expect("spawn service kernel stage");
+        let comp3 = Arc::clone(&completions);
+        let h3 = std::thread::Builder::new()
+            .name("spmv-svc-merge".into())
+            .spawn(move || {
+                let _failsafe = StageGuard { comp: Arc::clone(&comp3), stage: "merge" };
+                stage_merge(exec, rx_mrg, tx_fb, comp3)
+            })
+            .expect("spawn service merge stage");
+
+        RequestQueue { intake: Some(tx_in), completions, handles: vec![h1, h2, h3] }
+    }
+
+    /// Issue a ticket id into the completion store (before enqueueing
+    /// its job, so a fast pipeline can never publish an unregistered
+    /// ticket).
+    pub(crate) fn register(&self, ticket: u64) {
+        self.completions.register(ticket);
+    }
+
+    /// Publish a response directly, bypassing the pipeline (trivial
+    /// requests like an empty batch).
+    pub(crate) fn publish_direct(&self, ticket: u64, resp: Result<Response<T>>) {
+        self.completions.publish(ticket, resp);
+    }
+
+    /// Retract a registered ticket that never made it into the pipeline
+    /// (a failed `submit` returns an error instead of a ticket, so
+    /// nothing could ever claim a parked response for it).
+    pub(crate) fn cancel(&self, ticket: u64) {
+        let mut state = self.completions.state.lock().expect("completion store poisoned");
+        state.pending.remove(&ticket);
+        state.done.remove(&ticket);
+        // The request was never accepted: keep submitted == completed +
+        // in-flight truthful.
+        self.completions.submitted.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Enqueue a job; blocks while the intake queue is at capacity
+    /// (backpressure toward submitters).
+    pub(crate) fn submit(&self, job: Job<T>) -> Result<()> {
+        let ticket = job.ticket;
+        match self.intake.as_ref().expect("request queue already closed").send(job) {
+            Ok(()) => Ok(()),
+            Err(_) => {
+                // Pipeline stage died. The caller gets an Err instead of
+                // a ticket, so retract the registration entirely — a
+                // parked error response could never be claimed.
+                self.cancel(ticket);
+                Err(format_err!("request pipeline is down"))
+            }
+        }
+    }
+
+    /// Block until `ticket`'s response is published, then claim it.
+    pub(crate) fn wait(&self, ticket: u64) -> Result<Response<T>> {
+        self.completions.wait(ticket)
+    }
+
+    pub(crate) fn submitted(&self) -> u64 {
+        self.completions.submitted.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn completed(&self) -> u64 {
+        self.completions.completed.load(Ordering::Relaxed)
+    }
+}
+
+impl<T: SpElem> Drop for RequestQueue<T> {
+    fn drop(&mut self) {
+        // Closing the intake lets stage 1 drain remaining queued jobs
+        // and exit; the close then cascades down the stage channels.
+        self.intake.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Stage 1: normalize each job into per-iteration waves of vector
+/// blocks. For iterated jobs, wait for stage 3's feedback (the previous
+/// iteration's output) before emitting the next wave.
+fn stage_prep<T: SpElem>(
+    rx_in: Receiver<Job<T>>,
+    tx_blk: SyncSender<BlockMsg<T>>,
+    rx_fb: Receiver<Vec<T>>,
+    comp: Arc<Completions<T>>,
+) {
+    while let Ok(job) = rx_in.recv() {
+        let Job { ticket, plan, xs, iters, block, kind } = job;
+        debug_assert!(!xs.is_empty(), "empty batches resolve at submit");
+        let mut xs = Arc::new(xs);
+        let mut alive = true;
+        'iterations: for iter in 0..iters {
+            let n = xs.len();
+            let blocks: Vec<Range<usize>> =
+                (0..n).step_by(block.max(1)).map(|s| s..(s + block.max(1)).min(n)).collect();
+            let n_blocks = blocks.len();
+            for (bi, blk) in blocks.into_iter().enumerate() {
+                let msg = BlockMsg {
+                    ticket,
+                    plan: Arc::clone(&plan),
+                    xs: Arc::clone(&xs),
+                    blk,
+                    wave: WaveInfo {
+                        kind,
+                        n_blocks,
+                        block_index: bi,
+                        iter_index: iter,
+                        iters_total: iters,
+                    },
+                };
+                if tx_blk.send(msg).is_err() {
+                    alive = false;
+                    break 'iterations;
+                }
+            }
+            if iter + 1 < iters {
+                match rx_fb.recv() {
+                    Ok(y) => xs = Arc::new(vec![y]),
+                    Err(_) => {
+                        alive = false;
+                        break 'iterations;
+                    }
+                }
+            }
+        }
+        if !alive {
+            comp.publish(ticket, Err(format_err!("request pipeline shut down mid-request")));
+            // Downstream stages are gone. Fail everything already queued
+            // (and anything submitted from now on) so no wait() hangs;
+            // this loop ends when the service drops the intake sender.
+            while let Ok(dead) = rx_in.recv() {
+                comp.publish(
+                    dead.ticket,
+                    Err(format_err!("request pipeline went down before this request ran")),
+                );
+            }
+            return;
+        }
+    }
+}
+
+/// Stage 2: one engine wave per block over the plan's work items. The
+/// per-(item, block) computation is exactly the synchronous path's
+/// [`plan::run_item_batch`], so outputs are bit-identical by
+/// construction.
+fn stage_kernel<T: SpElem>(
+    exec: SpmvExecutor,
+    rx_blk: Receiver<BlockMsg<T>>,
+    tx_mrg: SyncSender<MergeMsg<T>>,
+) {
+    while let Ok(BlockMsg { ticket, plan, xs, blk, wave }) = rx_blk.recv() {
+        let cfg = &exec.sys.cfg;
+        let windows: Vec<&[T]> = xs[blk].iter().map(|x| x.as_slice()).collect();
+        let items = plan.items();
+        let outputs: Vec<Vec<DpuKernelOutput<T>>> = exec
+            .engine
+            .map_indexed(items.len(), |i| {
+                plan::run_item_batch(cfg, &plan.spec, &items[i], &windows)
+            });
+        if tx_mrg.send(MergeMsg { ticket, plan, wave, outputs }).is_err() {
+            return;
+        }
+    }
+}
+
+/// Stage 3: merge per-DPU partials vector by vector, accumulate
+/// iteration totals, feed iterate outputs back to stage 1, and publish
+/// completed responses. Waves of one ticket arrive contiguously (the
+/// stages are FIFO), so a little local state suffices.
+fn stage_merge<T: SpElem>(
+    exec: SpmvExecutor,
+    rx_mrg: Receiver<MergeMsg<T>>,
+    tx_fb: Sender<Vec<T>>,
+    comp: Arc<Completions<T>>,
+) {
+    let mut runs: Vec<RunResult<T>> = Vec::new();
+    let mut total = Breakdown::default();
+    let mut energy = Energy::default();
+    while let Ok(MergeMsg { ticket, plan, wave, outputs }) = rx_mrg.recv() {
+        if wave.block_index == 0 && wave.iter_index == 0 {
+            runs.clear();
+            total = Breakdown::default();
+            energy = Energy::default();
+        }
+        // outputs[item][vec]: regroup by vector through the same
+        // per-plan merge as the synchronous path, in vector order.
+        let blk_len = outputs.first().map_or(0, |o| o.len());
+        let mut per_item: Vec<std::vec::IntoIter<DpuKernelOutput<T>>> =
+            outputs.into_iter().map(|o| o.into_iter()).collect();
+        for _ in 0..blk_len {
+            let outs: Vec<DpuKernelOutput<T>> = per_item
+                .iter_mut()
+                .map(|it| it.next().expect("batched kernel returned too few outputs"))
+                .collect();
+            let y = plan.merge_partials(&outs);
+            runs.push(exec.finish(&plan, &outs, y));
+        }
+        if wave.block_index + 1 != wave.n_blocks {
+            continue; // wave still streaming in
+        }
+        match wave.kind {
+            ResponseKind::Spmv => {
+                let run = runs.pop().expect("spmv wave produced no run");
+                runs.clear();
+                comp.publish(ticket, Ok(Response::Spmv(run)));
+            }
+            ResponseKind::Batch => {
+                comp.publish(ticket, Ok(Response::Batch(BatchResult { runs: std::mem::take(&mut runs) })));
+            }
+            ResponseKind::Iterate => {
+                // Same accumulation sequence as the synchronous
+                // run_iterations: totals per iteration, in order.
+                for r in &runs {
+                    total.accumulate(&r.breakdown);
+                    energy = energy.add(r.energy);
+                }
+                let last = runs.pop().expect("iterate wave produced no run");
+                runs.clear();
+                if wave.iter_index + 1 < wave.iters_total {
+                    if tx_fb.send(last.y).is_err() {
+                        return; // stage 1 is gone; shutting down
+                    }
+                } else {
+                    comp.publish(
+                        ticket,
+                        Ok(Response::Iterate(IterationsResult {
+                            last,
+                            total,
+                            energy,
+                            iters: wave.iters_total,
+                        })),
+                    );
+                    total = Breakdown::default();
+                    energy = Energy::default();
+                }
+            }
+        }
+    }
+}

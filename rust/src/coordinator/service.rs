@@ -1,0 +1,693 @@
+//! `SpmvService` — the handle-based serving API.
+//!
+//! The executor/plan layer answers "how do I run one SpMV"; this module
+//! answers the serving question the ROADMAP's north star asks: many
+//! callers, many requests, one resident set of matrices. A
+//! [`SpmvService`] is a long-lived object, configured once through
+//! [`ServiceBuilder`] (engine, plan-cache capacity, intake-queue depth,
+//! vector-block policy), that owns the [`super::PlanCache`] and a
+//! pipelined request engine ([`super::queue`]).
+//!
+//! The serving vocabulary is small:
+//!
+//! * [`SpmvService::load`] registers a matrix under a [`KernelSpec`]
+//!   and returns a [`MatrixHandle`] — planning (partition + per-DPU
+//!   format conversion + transfer pricing) happens here, once,
+//!   content-fingerprinted through the plan cache. Loading an equal
+//!   matrix again is a cache hit, not a re-plan.
+//! * [`SpmvService::submit`] enqueues a typed [`Request`] against a
+//!   handle and returns a [`Ticket`] immediately (blocking only when
+//!   the intake queue is at its configured depth).
+//! * [`SpmvService::wait`] blocks until the ticket's [`Response`] is
+//!   ready. Tickets may be waited on in any order — responses park in
+//!   a completion store until claimed.
+//!
+//! Responses are **bit-identical** to the synchronous
+//! [`super::ExecutionPlan`] path (`tests/service_equivalence.rs` locks
+//! all 25 kernels x engines x request mixes), so the pipeline buys
+//! wall-clock overlap, never answer drift.
+
+use super::cache::{PlanCache, DEFAULT_PLAN_CACHE_CAPACITY};
+use super::plan::ExecutionPlan;
+use super::queue::{Job, RequestQueue, ResponseKind, DEFAULT_QUEUE_DEPTH};
+use super::spec::KernelSpec;
+use super::{
+    BatchResult, Engine, IterationsResult, RunResult, ServiceStats, SpmvExecutor, VECTOR_BLOCK,
+};
+use crate::matrix::{CooMatrix, SpElem};
+use crate::pim::PimSystem;
+use crate::util::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Distinguishes services within a process so handles and tickets from
+/// one service are rejected by another instead of aliasing.
+static NEXT_SERVICE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// How a batch is cut into vector blocks (the fused-kernel unit: each
+/// (work-item, block) pair streams the matrix slice once for the whole
+/// block). The width never changes results — only how much matrix
+/// streaming is amortized per pass versus how many independently
+/// schedulable units the engine gets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockPolicy {
+    /// Always use this many vectors per block (clamped to >= 1).
+    /// `Fixed(VECTOR_BLOCK)` reproduces the executor path's historical
+    /// behavior.
+    Fixed(usize),
+    /// Choose the width from the batch width and the mean per-DPU slice
+    /// population: big slices amortize more streaming per fused pass
+    /// (wider blocks), small slices leave the engine starved for units
+    /// (narrower blocks).
+    Adaptive,
+}
+
+impl BlockPolicy {
+    /// Resolve the block width for a `batch`-vector request over slices
+    /// averaging `mean_slice_nnz` stored non-zeros.
+    pub fn resolve(self, batch: usize, mean_slice_nnz: usize) -> usize {
+        match self {
+            BlockPolicy::Fixed(b) => b.max(1),
+            BlockPolicy::Adaptive => {
+                if batch <= 1 {
+                    return 1;
+                }
+                // Each fused pass streams the whole slice once; the
+                // per-vector cost it amortizes grows with the slice, so
+                // wider blocks pay off on fat slices. Thin slices finish
+                // fast either way — prefer more, smaller units so the
+                // threaded engine's dynamic scheduler has freedom.
+                let width = if mean_slice_nnz >= 1 << 16 {
+                    4 * VECTOR_BLOCK
+                } else if mean_slice_nnz >= 1 << 12 {
+                    2 * VECTOR_BLOCK
+                } else if mean_slice_nnz >= 1 << 8 {
+                    VECTOR_BLOCK
+                } else {
+                    VECTOR_BLOCK / 2
+                };
+                width.max(1).min(batch)
+            }
+        }
+    }
+}
+
+impl Default for BlockPolicy {
+    fn default() -> BlockPolicy {
+        BlockPolicy::Adaptive
+    }
+}
+
+/// A matrix registered with one [`SpmvService`]: cheap to copy, valid
+/// until [`SpmvService::unload`] (or the service drops). The plan
+/// behind it stays resident — submitting against a handle never
+/// re-fingerprints or re-plans the matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MatrixHandle {
+    svc: u64,
+    id: u64,
+    nrows: usize,
+    ncols: usize,
+}
+
+impl MatrixHandle {
+    /// Rows of the registered matrix.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Columns of the registered matrix.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+}
+
+/// A submitted request's claim check (copyable; see
+/// [`SpmvService::wait`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Ticket {
+    svc: u64,
+    id: u64,
+}
+
+impl Ticket {
+    /// Monotonic per-service ticket number (submission order).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// A unit of work against a resident matrix.
+#[derive(Clone, Debug)]
+pub enum Request<T> {
+    /// One SpMV `y = A * x`.
+    Spmv { x: Vec<T> },
+    /// SpMM-style multi-vector execution `Y = A * X` (may be empty).
+    Batch { xs: Vec<Vec<T>> },
+    /// Iterated self-application `y <- A * y`, `iters` times starting
+    /// from `x` (requires a square matrix for `iters > 1`).
+    Iterate { x: Vec<T>, iters: usize },
+}
+
+/// The completed result of a [`Request`], mirroring its shape.
+#[derive(Clone, Debug)]
+pub enum Response<T> {
+    /// Result of [`Request::Spmv`].
+    Spmv(RunResult<T>),
+    /// Result of [`Request::Batch`] (one run per vector, input order).
+    Batch(BatchResult<T>),
+    /// Result of [`Request::Iterate`].
+    Iterate(IterationsResult<T>),
+}
+
+impl<T> Response<T> {
+    /// Response kind name (logs, errors).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Response::Spmv(_) => "spmv",
+            Response::Batch(_) => "batch",
+            Response::Iterate(_) => "iterate",
+        }
+    }
+
+    /// Unwrap a [`Response::Spmv`].
+    pub fn into_spmv(self) -> Result<RunResult<T>> {
+        match self {
+            Response::Spmv(r) => Ok(r),
+            other => Err(crate::format_err!("expected an spmv response, got {}", other.kind())),
+        }
+    }
+
+    /// Unwrap a [`Response::Batch`].
+    pub fn into_batch(self) -> Result<BatchResult<T>> {
+        match self {
+            Response::Batch(b) => Ok(b),
+            other => Err(crate::format_err!("expected a batch response, got {}", other.kind())),
+        }
+    }
+
+    /// Unwrap a [`Response::Iterate`].
+    pub fn into_iterations(self) -> Result<IterationsResult<T>> {
+        match self {
+            Response::Iterate(it) => Ok(it),
+            other => {
+                Err(crate::format_err!("expected an iterate response, got {}", other.kind()))
+            }
+        }
+    }
+}
+
+/// Configuration for [`SpmvService`] (see [`SpmvService::builder`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceBuilder {
+    engine: Engine,
+    cache_capacity: usize,
+    queue_depth: usize,
+    block_policy: BlockPolicy,
+}
+
+impl ServiceBuilder {
+    /// Defaults: serial engine, [`DEFAULT_PLAN_CACHE_CAPACITY`] plans,
+    /// [`DEFAULT_QUEUE_DEPTH`] queued requests, adaptive vector blocks.
+    pub fn new() -> ServiceBuilder {
+        ServiceBuilder {
+            engine: Engine::Serial,
+            cache_capacity: DEFAULT_PLAN_CACHE_CAPACITY,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            block_policy: BlockPolicy::Adaptive,
+        }
+    }
+
+    /// Execution engine for per-DPU kernel simulations (never affects
+    /// results, only wall-clock).
+    pub fn engine(mut self, engine: Engine) -> ServiceBuilder {
+        self.engine = engine;
+        self
+    }
+
+    /// Shorthand for `engine(Engine::threaded(threads))` (0 = all
+    /// hardware threads).
+    pub fn threads(mut self, threads: usize) -> ServiceBuilder {
+        self.engine = Engine::threaded(threads);
+        self
+    }
+
+    /// Plan-cache capacity in plans (clamped to >= 1).
+    pub fn cache_capacity(mut self, capacity: usize) -> ServiceBuilder {
+        self.cache_capacity = capacity;
+        self
+    }
+
+    /// Intake-queue depth: how many requests may sit between `submit`
+    /// and the pipeline before `submit` blocks (clamped to >= 1).
+    pub fn queue_depth(mut self, depth: usize) -> ServiceBuilder {
+        self.queue_depth = depth;
+        self
+    }
+
+    /// Vector-block policy for batched requests.
+    pub fn vector_block(mut self, policy: BlockPolicy) -> ServiceBuilder {
+        self.block_policy = policy;
+        self
+    }
+
+    /// Build a service over `sys` with its own plan cache.
+    pub fn build<T: SpElem>(self, sys: PimSystem) -> Result<SpmvService<T>> {
+        let cache = Arc::new(PlanCache::with_capacity(self.cache_capacity));
+        self.build_with_cache(sys, cache)
+    }
+
+    /// Build a service over `sys` sharing an external plan cache —
+    /// several services (e.g. per-tasklet-count sweeps over one bus
+    /// shape) then plan each matrix exactly once between them.
+    pub fn build_with_cache<T: SpElem>(
+        self,
+        sys: PimSystem,
+        cache: Arc<PlanCache<T>>,
+    ) -> Result<SpmvService<T>> {
+        sys.cfg.validate()?;
+        let exec = SpmvExecutor::with_engine(sys, self.engine);
+        let queue = RequestQueue::spawn(exec.clone(), self.queue_depth);
+        Ok(SpmvService {
+            id: NEXT_SERVICE_ID.fetch_add(1, Ordering::Relaxed),
+            exec,
+            cache,
+            plans: Mutex::new(HashMap::new()),
+            next_handle: AtomicU64::new(1),
+            next_ticket: AtomicU64::new(1),
+            sync_served: AtomicU64::new(0),
+            block_policy: self.block_policy,
+            queue,
+        })
+    }
+}
+
+impl Default for ServiceBuilder {
+    fn default() -> ServiceBuilder {
+        ServiceBuilder::new()
+    }
+}
+
+/// A long-lived SpMV serving endpoint: resident matrices behind
+/// [`MatrixHandle`]s, typed requests through a pipelined worker queue.
+/// The service is `Sync` — one instance can take `load`/`submit`/`wait`
+/// calls from many host threads concurrently.
+pub struct SpmvService<T: SpElem> {
+    id: u64,
+    exec: SpmvExecutor,
+    cache: Arc<PlanCache<T>>,
+    plans: Mutex<HashMap<u64, Arc<ExecutionPlan<T>>>>,
+    next_handle: AtomicU64,
+    next_ticket: AtomicU64,
+    /// Requests served on the synchronous fast path ([`Self::spmv`] and
+    /// friends), counted next to the queue's submitted/completed.
+    sync_served: AtomicU64,
+    block_policy: BlockPolicy,
+    queue: RequestQueue<T>,
+}
+
+impl<T: SpElem> SpmvService<T> {
+    /// Start configuring a service.
+    pub fn builder() -> ServiceBuilder {
+        ServiceBuilder::new()
+    }
+
+    /// Register `m` under `spec`: plan (or fetch the cached plan for
+    /// equal content) and pin it behind a handle. O(nnz) fingerprint +
+    /// first-time planning cost; submissions against the handle are
+    /// hash-free.
+    pub fn load(&self, m: &CooMatrix<T>, spec: &KernelSpec) -> Result<MatrixHandle> {
+        let plan = self.cache.plan(&self.exec, spec, m)?;
+        let handle = MatrixHandle {
+            svc: self.id,
+            id: self.next_handle.fetch_add(1, Ordering::Relaxed),
+            nrows: plan.nrows(),
+            ncols: plan.ncols(),
+        };
+        self.plans.lock().expect("service registry poisoned").insert(handle.id, plan);
+        Ok(handle)
+    }
+
+    /// Drop a handle's plan pin. Returns whether the handle was loaded.
+    /// (The plan may stay resident in the cache for future loads.)
+    pub fn unload(&self, handle: MatrixHandle) -> bool {
+        handle.svc == self.id
+            && self.plans.lock().expect("service registry poisoned").remove(&handle.id).is_some()
+    }
+
+    /// Enqueue `req` against `handle`. Validates shapes up front (a bad
+    /// request fails here, not at `wait`), then hands the work to the
+    /// pipelined request engine. Returns the claim [`Ticket`]; blocks
+    /// only while the intake queue is at its configured depth.
+    ///
+    /// Every issued ticket should eventually be claimed with
+    /// [`Self::wait`]: unclaimed responses park in the completion store
+    /// (holding their output vectors) until the ticket is waited on or
+    /// the service is dropped.
+    ///
+    /// ```
+    /// use sparsep::coordinator::{KernelSpec, Request, ServiceBuilder};
+    /// use sparsep::matrix::generate;
+    /// use sparsep::pim::PimSystem;
+    ///
+    /// let svc = ServiceBuilder::new()
+    ///     .threads(2)
+    ///     .build::<f64>(PimSystem::with_dpus(4))
+    ///     .unwrap();
+    /// let m = generate::uniform::<f64>(64, 64, 4, 7);
+    /// let h = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
+    ///
+    /// // Two tickets in flight at once, waited out of submission order.
+    /// let t1 = svc.submit(h, Request::Spmv { x: vec![1.0; 64] }).unwrap();
+    /// let t2 = svc.submit(h, Request::Batch { xs: vec![vec![2.0; 64]; 3] }).unwrap();
+    /// let batch = svc.wait(t2).unwrap().into_batch().unwrap();
+    /// let run = svc.wait(t1).unwrap().into_spmv().unwrap();
+    ///
+    /// assert_eq!(run.y, m.spmv(&vec![1.0; 64]));
+    /// assert_eq!(batch.len(), 3);
+    /// assert_eq!(batch.runs[0].y, m.spmv(&vec![2.0; 64]));
+    /// ```
+    pub fn submit(&self, handle: MatrixHandle, req: Request<T>) -> Result<Ticket> {
+        let plan = self.plan_for(&handle)?;
+        let check_len = |x: &Vec<T>, what: &str| {
+            crate::ensure!(
+                x.len() == plan.ncols(),
+                "{what} length {} != ncols {}",
+                x.len(),
+                plan.ncols()
+            );
+            Ok(())
+        };
+        let (xs, iters, kind) = match req {
+            Request::Spmv { x } => {
+                check_len(&x, "x")?;
+                (vec![x], 1, ResponseKind::Spmv)
+            }
+            Request::Batch { xs } => {
+                for (i, x) in xs.iter().enumerate() {
+                    check_len(x, &format!("xs[{i}]"))?;
+                }
+                (xs, 1, ResponseKind::Batch)
+            }
+            Request::Iterate { x, iters } => {
+                check_len(&x, "x")?;
+                crate::ensure!(iters >= 1, "Request::Iterate needs iters >= 1");
+                crate::ensure!(
+                    iters == 1 || plan.nrows() == plan.ncols(),
+                    "iterated SpMV needs a square matrix, got {}x{}",
+                    plan.nrows(),
+                    plan.ncols()
+                );
+                (vec![x], iters, ResponseKind::Iterate)
+            }
+        };
+        let ticket = Ticket { svc: self.id, id: self.next_ticket.fetch_add(1, Ordering::Relaxed) };
+        self.queue.register(ticket.id);
+        if xs.is_empty() {
+            // An empty batch has nothing to pipeline: resolve it now.
+            self.queue
+                .publish_direct(ticket.id, Ok(Response::Batch(BatchResult { runs: Vec::new() })));
+            return Ok(ticket);
+        }
+        let block = self.block_policy.resolve(xs.len(), Self::mean_slice_nnz(&plan));
+        self.queue.submit(Job { ticket: ticket.id, plan, xs, iters, block, kind })?;
+        Ok(ticket)
+    }
+
+    /// Block until `ticket`'s response is ready and claim it. Tickets
+    /// may be waited on in any order; waiting twice (or on a foreign
+    /// ticket) is an error, not a hang.
+    pub fn wait(&self, ticket: Ticket) -> Result<Response<T>> {
+        crate::ensure!(ticket.svc == self.id, "ticket belongs to a different service");
+        self.queue.wait(ticket.id)
+    }
+
+    /// One SpMV against the handle, on the caller's thread — the
+    /// synchronous **fast path**. A blocking caller has nothing for the
+    /// pipeline to overlap, so this skips the queue round trip and the
+    /// owned-vector copy; the result is bit-identical to
+    /// `wait(submit(Request::Spmv))` (locked by
+    /// `tests/service_equivalence.rs`). Iterative solvers call this in
+    /// their hot loop.
+    pub fn spmv(&self, handle: &MatrixHandle, x: &[T]) -> Result<RunResult<T>> {
+        let plan = self.plan_for(handle)?;
+        self.sync_served.fetch_add(1, Ordering::Relaxed);
+        self.exec.execute_inner(&plan, x)
+    }
+
+    /// One batched request against the handle, on the caller's thread
+    /// (synchronous fast path; see [`Self::spmv`]). Uses the same
+    /// [`BlockPolicy`] as queued batches.
+    pub fn spmv_batch(&self, handle: &MatrixHandle, xs: &[Vec<T>]) -> Result<BatchResult<T>> {
+        let plan = self.plan_for(handle)?;
+        let block = self.block_policy.resolve(xs.len(), Self::mean_slice_nnz(&plan));
+        self.sync_served.fetch_add(1, Ordering::Relaxed);
+        self.exec.execute_batch_inner(&plan, xs, block)
+    }
+
+    /// One iterated request against the handle, on the caller's thread
+    /// (synchronous fast path; see [`Self::spmv`]).
+    pub fn iterate(
+        &self,
+        handle: &MatrixHandle,
+        x: &[T],
+        iters: usize,
+    ) -> Result<IterationsResult<T>> {
+        let plan = self.plan_for(handle)?;
+        self.sync_served.fetch_add(1, Ordering::Relaxed);
+        self.exec.run_iterations_inner(&plan, x, iters)
+    }
+
+    /// The vector-block width this service would use for a
+    /// `batch`-vector request against `handle` (diagnostics; the width
+    /// never changes results).
+    pub fn resolved_block(&self, handle: &MatrixHandle, batch: usize) -> Result<usize> {
+        let plan = self.plan_for(handle)?;
+        Ok(self.block_policy.resolve(batch, Self::mean_slice_nnz(&plan)))
+    }
+
+    /// Look up a handle's resident plan (shared by `submit`, the fast
+    /// path and diagnostics).
+    fn plan_for(&self, handle: &MatrixHandle) -> Result<Arc<ExecutionPlan<T>>> {
+        crate::ensure!(
+            handle.svc == self.id,
+            "matrix handle belongs to a different service"
+        );
+        self.plans
+            .lock()
+            .expect("service registry poisoned")
+            .get(&handle.id)
+            .cloned()
+            .ok_or_else(|| crate::format_err!("unknown matrix handle (already unloaded?)"))
+    }
+
+    /// The configured vector-block policy.
+    pub fn block_policy(&self) -> BlockPolicy {
+        self.block_policy
+    }
+
+    /// The engine driving per-DPU kernel simulations.
+    pub fn engine(&self) -> Engine {
+        self.exec.engine
+    }
+
+    /// The simulated PIM system this service serves.
+    pub fn system(&self) -> &PimSystem {
+        &self.exec.sys
+    }
+
+    /// Service-level counters (requests, plan-cache traffic).
+    /// Fast-path requests count as submitted-and-completed.
+    pub fn stats(&self) -> ServiceStats {
+        let sync = self.sync_served.load(Ordering::Relaxed);
+        ServiceStats {
+            submitted: self.queue.submitted() + sync,
+            completed: self.queue.completed() + sync,
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            plan_builds: self.cache.builds(),
+            resident_plans: self.cache.len(),
+            loaded_handles: self.plans.lock().expect("service registry poisoned").len(),
+        }
+    }
+
+    fn mean_slice_nnz(plan: &ExecutionPlan<T>) -> usize {
+        plan.nnz() / plan.items().len().max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate;
+
+    fn service(n_dpus: usize) -> SpmvService<f64> {
+        ServiceBuilder::new().build(PimSystem::with_dpus(n_dpus)).unwrap()
+    }
+
+    #[test]
+    fn load_submit_wait_roundtrip() {
+        let svc = service(8);
+        let m = generate::scale_free::<f64>(200, 200, 6, 0.6, 5);
+        let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+        assert_eq!((h.nrows(), h.ncols()), (200, 200));
+        let x: Vec<f64> = (0..200).map(|i| ((i % 7) as f64) - 3.0).collect();
+        let r = svc.spmv(&h, &x).unwrap();
+        assert_eq!(r.y, m.spmv(&x));
+        // The fast path answers bit-identically to submit + wait.
+        let queued =
+            svc.wait(svc.submit(h, Request::Spmv { x: x.clone() }).unwrap()).unwrap();
+        match queued {
+            Response::Spmv(q) => {
+                assert_eq!(q.y, r.y);
+                assert_eq!(q.breakdown, r.breakdown);
+                assert_eq!(q.stats, r.stats);
+                assert_eq!(q.energy, r.energy);
+            }
+            other => panic!("expected spmv, got {}", other.kind()),
+        }
+        let st = svc.stats();
+        assert_eq!(st.submitted, 2, "fast path + queued request");
+        assert_eq!(st.completed, 2);
+        assert_eq!(st.in_flight(), 0);
+        assert_eq!(st.loaded_handles, 1);
+    }
+
+    #[test]
+    fn out_of_order_waits_resolve_correctly() {
+        let svc = service(8);
+        let m = generate::uniform::<f64>(96, 96, 4, 11);
+        let h = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
+        let xs: Vec<Vec<f64>> = (0..4)
+            .map(|s| (0..96).map(|i| ((i + 11 * s) % 5) as f64 - 2.0).collect())
+            .collect();
+        let tickets: Vec<Ticket> =
+            xs.iter().map(|x| svc.submit(h, Request::Spmv { x: x.clone() }).unwrap()).collect();
+        // Claim in reverse submission order.
+        for (x, t) in xs.iter().zip(&tickets).rev() {
+            let r = svc.wait(*t).unwrap().into_spmv().unwrap();
+            assert_eq!(r.y, m.spmv(x));
+        }
+        // A second wait on a claimed ticket errors instead of hanging.
+        assert!(svc.wait(tickets[0]).is_err());
+    }
+
+    #[test]
+    fn submit_validates_shapes_up_front() {
+        let svc = service(4);
+        let m = generate::uniform::<f64>(64, 64, 4, 3);
+        let h = svc.load(&m, &KernelSpec::coo_row()).unwrap();
+        assert!(svc.submit(h, Request::Spmv { x: vec![0.0; 63] }).is_err());
+        assert!(svc
+            .submit(h, Request::Batch { xs: vec![vec![0.0; 64], vec![0.0; 1]] })
+            .is_err());
+        assert!(svc.submit(h, Request::Iterate { x: vec![0.0; 64], iters: 0 }).is_err());
+        let rect = generate::uniform::<f64>(48, 64, 3, 3);
+        let hr = svc.load(&rect, &KernelSpec::coo_row()).unwrap();
+        assert!(svc.submit(hr, Request::Iterate { x: vec![0.0; 64], iters: 2 }).is_err());
+        assert!(svc.submit(hr, Request::Iterate { x: vec![0.0; 64], iters: 1 }).is_ok());
+    }
+
+    #[test]
+    fn empty_batch_resolves_immediately() {
+        let svc = service(4);
+        let m = generate::uniform::<f64>(32, 32, 3, 1);
+        let h = svc.load(&m, &KernelSpec::coo_row()).unwrap();
+        // Queued: resolved at submit time without touching the pipeline.
+        let t = svc.submit(h, Request::Batch { xs: Vec::new() }).unwrap();
+        assert!(svc.wait(t).unwrap().into_batch().unwrap().is_empty());
+        // Fast path agrees.
+        assert!(svc.spmv_batch(&h, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn handles_and_tickets_are_service_scoped() {
+        let a = service(4);
+        let b = service(4);
+        let m = generate::uniform::<f64>(32, 32, 3, 2);
+        let ha = a.load(&m, &KernelSpec::coo_row()).unwrap();
+        assert!(b.submit(ha, Request::Spmv { x: vec![0.0; 32] }).is_err());
+        let ta = a.submit(ha, Request::Spmv { x: vec![0.0; 32] }).unwrap();
+        assert!(b.wait(ta).is_err());
+        assert!(a.wait(ta).is_ok());
+        // Unloading invalidates the handle for new submissions.
+        assert!(a.unload(ha));
+        assert!(!a.unload(ha));
+        assert!(a.submit(ha, Request::Spmv { x: vec![0.0; 32] }).is_err());
+    }
+
+    #[test]
+    fn equal_matrices_share_one_plan_build() {
+        let svc = service(8);
+        let m = generate::uniform::<f64>(128, 128, 4, 9);
+        let h1 = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
+        let h2 = svc.load(&m.clone(), &KernelSpec::csr_nnz()).unwrap();
+        assert_ne!(h1, h2, "handles are distinct registrations");
+        let st = svc.stats();
+        assert_eq!(st.plan_builds, 1, "equal content must not re-plan");
+        assert_eq!(st.cache_hits, 1);
+        assert_eq!(st.loaded_handles, 2);
+    }
+
+    #[test]
+    fn block_policy_resolution() {
+        assert_eq!(BlockPolicy::Fixed(0).resolve(10, 1000), 1);
+        assert_eq!(BlockPolicy::Fixed(5).resolve(10, 1000), 5);
+        assert_eq!(BlockPolicy::Adaptive.resolve(1, 1 << 20), 1);
+        assert_eq!(BlockPolicy::Adaptive.resolve(3, 1 << 20), 3, "clamped to batch");
+        assert_eq!(BlockPolicy::Adaptive.resolve(100, 1 << 20), 4 * VECTOR_BLOCK);
+        assert_eq!(BlockPolicy::Adaptive.resolve(100, 1 << 13), 2 * VECTOR_BLOCK);
+        assert_eq!(BlockPolicy::Adaptive.resolve(100, 1 << 10), VECTOR_BLOCK);
+        assert_eq!(BlockPolicy::Adaptive.resolve(100, 10), VECTOR_BLOCK / 2);
+    }
+
+    #[test]
+    fn block_policies_do_not_change_results() {
+        let m = generate::scale_free::<f64>(160, 160, 6, 0.7, 21);
+        let xs: Vec<Vec<f64>> = (0..11)
+            .map(|s| (0..160).map(|i| ((i + 3 * s) % 9) as f64 - 4.0).collect())
+            .collect();
+        let mut golds: Option<Vec<Vec<f64>>> = None;
+        for policy in [
+            BlockPolicy::Fixed(1),
+            BlockPolicy::Fixed(3),
+            BlockPolicy::Fixed(64),
+            BlockPolicy::Adaptive,
+        ] {
+            let svc: SpmvService<f64> = ServiceBuilder::new()
+                .vector_block(policy)
+                .build(PimSystem::with_dpus(8))
+                .unwrap();
+            let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+            let b = svc.spmv_batch(&h, &xs).unwrap();
+            let ys: Vec<Vec<f64>> = b.runs.iter().map(|r| r.y.clone()).collect();
+            match &golds {
+                None => golds = Some(ys),
+                Some(g) => assert_eq!(&ys, g, "{policy:?} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_service() {
+        let svc = std::sync::Arc::new(service(8));
+        let m = generate::uniform::<f64>(120, 120, 5, 17);
+        let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+        std::thread::scope(|s| {
+            for tid in 0..4usize {
+                let svc = Arc::clone(&svc);
+                let m = &m;
+                s.spawn(move || {
+                    for k in 0..3usize {
+                        let x: Vec<f64> =
+                            (0..120).map(|i| ((i + 7 * tid + k) % 5) as f64 - 2.0).collect();
+                        let r = svc.spmv(&h, &x).unwrap();
+                        assert_eq!(r.y, m.spmv(&x));
+                    }
+                });
+            }
+        });
+        assert_eq!(svc.stats().completed, 12);
+    }
+}

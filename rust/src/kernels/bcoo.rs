@@ -11,27 +11,21 @@ use crate::matrix::{BcooMatrix, SpElem};
 use crate::partition::balance::split_elements;
 use crate::pim::{calib, PimConfig, TaskletCounters};
 
-/// Run the BCOO kernel on one DPU.
-///
-/// All balancing schemes reduce to a contiguous block-range split (BCOO
-/// blocks all have equal weight `br*bc`, so `Blocks`, `Nnz` and
-/// `NnzElement` coincide; `Rows` additionally snaps range boundaries to
-/// block-row transitions, making it lock-free).
-pub fn run_bcoo_dpu<T: SpElem>(
-    cfg: &PimConfig,
-    slice: &BcooMatrix<T>,
-    x: &[T],
-    bal: TaskletBalance,
-    sync: SyncScheme,
-) -> DpuKernelOutput<T> {
-    assert_eq!(x.len(), slice.ncols(), "x length mismatch");
-    let t = cfg.tasklets;
-    let dt = T::DTYPE;
-    let (br, bc) = (slice.br, slice.bc);
-    let nblocks = slice.nblocks();
-    let mut y = vec![T::zero(); slice.nrows()];
-    let mut counters = vec![TaskletCounters::default(); t];
+/// Per-tasklet block split plus shared-block-row metadata — computed
+/// identically for the single-vector and batched entry points so the
+/// two walks (and their accounting) can never drift apart.
+struct BlockSplit {
+    ranges: Vec<std::ops::Range<usize>>,
+    shares_rows: bool,
+    /// Distinct shared block rows (lock-free merge epilogue size).
+    n_shared: usize,
+    /// Per tasklet: (head block row shared with the previous range,
+    /// tail shared with the next), `u32::MAX` when unshared.
+    shared_bounds: Vec<(u32, u32)>,
+}
 
+fn split_blocks<T: SpElem>(slice: &BcooMatrix<T>, t: usize, bal: TaskletBalance) -> BlockSplit {
+    let nblocks = slice.nblocks();
     let mut ranges = split_elements(nblocks, t);
     let mut shares_rows = true;
     if bal == TaskletBalance::Rows {
@@ -80,6 +74,31 @@ pub fn run_bcoo_dpu<T: SpElem>(
             }
         }
     }
+    BlockSplit { ranges, shares_rows, n_shared, shared_bounds }
+}
+
+/// Run the BCOO kernel on one DPU.
+///
+/// All balancing schemes reduce to a contiguous block-range split (BCOO
+/// blocks all have equal weight `br*bc`, so `Blocks`, `Nnz` and
+/// `NnzElement` coincide; `Rows` additionally snaps range boundaries to
+/// block-row transitions, making it lock-free).
+pub fn run_bcoo_dpu<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &BcooMatrix<T>,
+    x: &[T],
+    bal: TaskletBalance,
+    sync: SyncScheme,
+) -> DpuKernelOutput<T> {
+    assert_eq!(x.len(), slice.ncols(), "x length mismatch");
+    let t = cfg.tasklets;
+    let dt = T::DTYPE;
+    let (br, bc) = (slice.br, slice.bc);
+    let mut y = vec![T::zero(); slice.nrows()];
+    let mut counters = vec![TaskletCounters::default(); t];
+
+    let BlockSplit { ranges, shares_rows, n_shared, shared_bounds } =
+        split_blocks(slice, t, bal);
 
     for (tid, range) in ranges.iter().enumerate() {
         let c = &mut counters[tid];
@@ -137,11 +156,21 @@ pub fn run_bcoo_dpu<T: SpElem>(
 
 /// Run the BCOO kernel on one DPU for a whole block of input vectors.
 ///
-/// Looped single-vector fallback, like
-/// [`crate::kernels::bcsr::run_bcsr_dpu_batch`]: the dense block inner
-/// loop already amortizes per-block overhead, so fusion is not natural
-/// here. Per-vector results are trivially bit-identical to
-/// single-vector runs.
+/// Fused SpMM-style variant of [`run_bcoo_dpu`]: the block stream is
+/// walked once and every vector's accumulator advances per block
+/// element, so the host-side simulation streams the slice (and runs the
+/// cycle accounting) once per *vector block* instead of once per
+/// vector — the same fusion as
+/// [`crate::kernels::coo::run_coo_dpu_batch`]. Results are
+/// bit-identical to calling [`run_bcoo_dpu`] once per vector: per
+/// vector, the MAC chain over each dense block row is evaluated in the
+/// same order, and the accounting is structure-only (see `finish_batch`
+/// in the module root).
+///
+/// The tasklet walk below deliberately mirrors [`run_bcoo_dpu`]'s (a
+/// shared walk would put a per-element vector loop on the single-vector
+/// hot path): any change to the accounting sequence there must be
+/// mirrored here, and `tests/batch_equivalence.rs` fails on any drift.
 pub fn run_bcoo_dpu_batch<T: SpElem>(
     cfg: &PimConfig,
     slice: &BcooMatrix<T>,
@@ -149,7 +178,82 @@ pub fn run_bcoo_dpu_batch<T: SpElem>(
     bal: TaskletBalance,
     sync: SyncScheme,
 ) -> Vec<DpuKernelOutput<T>> {
-    xs.iter().map(|x| run_bcoo_dpu(cfg, slice, x, bal, sync)).collect()
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    if xs.len() == 1 {
+        return vec![run_bcoo_dpu(cfg, slice, xs[0], bal, sync)];
+    }
+    for x in xs {
+        assert_eq!(x.len(), slice.ncols(), "x length mismatch");
+    }
+    let t = cfg.tasklets;
+    let dt = T::DTYPE;
+    let (br, bc) = (slice.br, slice.bc);
+    let nb = xs.len();
+    let mut ys: Vec<Vec<T>> = (0..nb).map(|_| vec![T::zero(); slice.nrows()]).collect();
+    let mut counters = vec![TaskletCounters::default(); t];
+    let mut accs: Vec<T> = vec![T::zero(); nb];
+
+    let BlockSplit { ranges, shares_rows, n_shared, shared_bounds } =
+        split_blocks(slice, t, bal);
+
+    for (tid, range) in ranges.iter().enumerate() {
+        let c = &mut counters[tid];
+        if range.is_empty() {
+            continue;
+        }
+        let (shared_head, shared_tail) = shared_bounds[tid];
+        acct::stream_matrix(c, range.len() * (8 + br * bc * dt.size_bytes()));
+        let mut rows_touched = 0usize;
+        let mut current_brow = u32::MAX;
+        for bidx in range.clone() {
+            let bri_u32 = slice.block_rows[bidx];
+            let bri = bri_u32 as usize;
+            if bri_u32 != current_brow {
+                current_brow = bri_u32;
+                rows_touched += 1;
+            }
+            let bcol = slice.block_cols[bidx] as usize;
+            let blk = slice.block(bidx);
+            c.instrs += calib::BLOCK_LOOP_INSTRS;
+            c.instrs += (br * bc) as u64 * (calib::mac_instrs(dt) + 2);
+            c.dma(bc * dt.size_bytes());
+            let row0 = bri * br;
+            let col0 = bcol * bc;
+            let is_shared = bri_u32 == shared_head || bri_u32 == shared_tail;
+            for rr in 0..br {
+                let r = row0 + rr;
+                if r >= slice.nrows() {
+                    break;
+                }
+                accs.fill(T::zero());
+                for cc in 0..bc {
+                    let ccol = col0 + cc;
+                    if ccol >= slice.ncols() {
+                        break;
+                    }
+                    let v = blk[rr * bc + cc];
+                    for (b, acc) in accs.iter_mut().enumerate() {
+                        *acc = T::mac(*acc, v, xs[b][ccol]);
+                    }
+                }
+                if is_shared {
+                    acct::locked_update(c, dt, sync);
+                }
+                for (b, acc) in accs.iter().enumerate() {
+                    ys[b][r] = ys[b][r].add(*acc);
+                }
+            }
+        }
+        acct::writeback(c, rows_touched * br, dt);
+    }
+
+    if shares_rows && sync == SyncScheme::LockFree {
+        acct::lockfree_merge(&mut counters, n_shared * br, dt);
+    }
+
+    super::finish_batch(cfg, ys, counters)
 }
 
 #[cfg(test)]
@@ -213,6 +317,35 @@ mod tests {
     #[test]
     fn empty_ok() {
         check(&CooMatrix::<f64>::zeros(8, 8), (2, 2), 4, TaskletBalance::Blocks, SyncScheme::LockFree);
+    }
+
+    #[test]
+    fn fused_batch_matches_looped_across_schemes() {
+        // Irregular shape + every (balance, sync) pair: the fused walk
+        // must be bit-identical to looped single-vector runs, counters
+        // and timing included.
+        let m = generate::scale_free::<f64>(61, 47, 5, 0.7, 29);
+        let b = BcooMatrix::from_coo(&m, 4, 4);
+        let xs: Vec<Vec<f64>> = (0..6)
+            .map(|s| (0..47).map(|i| ((i + 5 * s) % 11) as f64 - 5.0).collect())
+            .collect();
+        let refs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        for bal in [TaskletBalance::Rows, TaskletBalance::Blocks, TaskletBalance::Nnz] {
+            for sync in [SyncScheme::LockFree, SyncScheme::CoarseLock, SyncScheme::FineLock] {
+                let batch = run_bcoo_dpu_batch(&cfg(16), &b, &refs, bal, sync);
+                assert_eq!(batch.len(), xs.len());
+                for (x, out) in xs.iter().zip(&batch) {
+                    let single = run_bcoo_dpu(&cfg(16), &b, x, bal, sync);
+                    assert_eq!(out.y, single.y, "{bal:?} {sync:?}: y differs");
+                    assert_eq!(out.counters, single.counters, "{bal:?} {sync:?}: counters differ");
+                    assert_eq!(out.timing, single.timing, "{bal:?} {sync:?}: timing differs");
+                }
+            }
+        }
+        assert!(
+            run_bcoo_dpu_batch(&cfg(4), &b, &[], TaskletBalance::Blocks, SyncScheme::LockFree)
+                .is_empty()
+        );
     }
 
     #[test]

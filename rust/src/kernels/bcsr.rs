@@ -28,28 +28,31 @@ fn block_compute(c: &mut TaskletCounters, br: usize, bc: usize, dt: crate::matri
     c.dma(bc * dt.size_bytes()); // contiguous x[col0..col0+bc] gather
 }
 
-/// Run the BCSR kernel on one DPU.
-pub fn run_bcsr_dpu<T: SpElem>(
-    cfg: &PimConfig,
-    slice: &BcsrMatrix<T>,
-    x: &[T],
-    bal: TaskletBalance,
-    sync: SyncScheme,
-) -> DpuKernelOutput<T> {
-    assert_eq!(x.len(), slice.ncols(), "x length mismatch");
-    let t = cfg.tasklets;
-    let dt = T::DTYPE;
+/// Per-tasklet block split plus shared-block-row metadata — computed
+/// identically for the single-vector and batched entry points so the
+/// two walks (and their accounting) can never drift apart.
+struct BlockSplit {
+    ranges: Vec<std::ops::Range<usize>>,
+    shares_rows: bool,
+    /// Block index -> block row, for detecting shared block rows.
+    block_row_of: Vec<u32>,
+    /// Distinct shared block rows (lock-free merge epilogue size).
+    n_shared: usize,
+    /// Per tasklet: (head block row shared with the previous range,
+    /// tail shared with the next), `u32::MAX` when unshared.
+    shared_bounds: Vec<(u32, u32)>,
+}
+
+fn split_blocks<T: SpElem>(slice: &BcsrMatrix<T>, t: usize, bal: TaskletBalance) -> BlockSplit {
     let (br, bc) = (slice.br, slice.bc);
     let nbr = slice.n_block_rows();
-    let mut y = vec![T::zero(); slice.nrows()];
-    let mut counters = vec![TaskletCounters::default(); t];
 
     // Map balancing scheme to per-tasklet block index ranges. Blocks of a
     // block row are contiguous in BCSR storage, so block-row-granularity
     // chunks are block ranges too.
     let block_start: Vec<usize> =
         (0..=nbr).map(|i| slice.block_row_ptr[i] as usize).collect();
-    let (block_ranges, shares_rows): (Vec<std::ops::Range<usize>>, bool) = match bal {
+    let (ranges, shares_rows): (Vec<std::ops::Range<usize>>, bool) = match bal {
         TaskletBalance::Rows => {
             let rc = split_even(nbr, t);
             (rc.iter().map(|r| block_start[r.start]..block_start[r.end]).collect(), false)
@@ -67,7 +70,6 @@ pub fn run_bcsr_dpu<T: SpElem>(
         }
     };
 
-    // Block index -> block row, for detecting shared block rows.
     let mut block_row_of = vec![0u32; slice.nblocks()];
     for i in 0..nbr {
         for b in block_start[i]..block_start[i + 1] {
@@ -81,8 +83,8 @@ pub fn run_bcsr_dpu<T: SpElem>(
     let mut shared_bounds: Vec<(u32, u32)> = vec![(u32::MAX, u32::MAX); t];
     if shares_rows {
         let mut last_shared = u32::MAX;
-        for i in 0..block_ranges.len().saturating_sub(1) {
-            let (a, b) = (&block_ranges[i], &block_ranges[i + 1]);
+        for i in 0..ranges.len().saturating_sub(1) {
+            let (a, b) = (&ranges[i], &ranges[i + 1]);
             if !a.is_empty() && !b.is_empty() && a.end < slice.nblocks() {
                 let row = block_row_of[a.end - 1];
                 if row == block_row_of[b.start] {
@@ -96,6 +98,26 @@ pub fn run_bcsr_dpu<T: SpElem>(
             }
         }
     }
+    BlockSplit { ranges, shares_rows, block_row_of, n_shared, shared_bounds }
+}
+
+/// Run the BCSR kernel on one DPU.
+pub fn run_bcsr_dpu<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &BcsrMatrix<T>,
+    x: &[T],
+    bal: TaskletBalance,
+    sync: SyncScheme,
+) -> DpuKernelOutput<T> {
+    assert_eq!(x.len(), slice.ncols(), "x length mismatch");
+    let t = cfg.tasklets;
+    let dt = T::DTYPE;
+    let (br, bc) = (slice.br, slice.bc);
+    let mut y = vec![T::zero(); slice.nrows()];
+    let mut counters = vec![TaskletCounters::default(); t];
+
+    let BlockSplit { ranges: block_ranges, shares_rows, block_row_of, n_shared, shared_bounds } =
+        split_blocks(slice, t, bal);
 
     for (tid, range) in block_ranges.iter().enumerate() {
         let c = &mut counters[tid];
@@ -153,10 +175,21 @@ pub fn run_bcsr_dpu<T: SpElem>(
 
 /// Run the BCSR kernel on one DPU for a whole block of input vectors.
 ///
-/// Looped single-vector fallback: the dense `br x bc` inner loop already
-/// amortizes index overhead per block, so a fused multi-vector walk buys
-/// little here (unlike [`crate::kernels::csr::run_csr_dpu_batch`]).
-/// Per-vector results are trivially bit-identical to single-vector runs.
+/// Fused SpMM-style variant of [`run_bcsr_dpu`]: the block stream is
+/// walked once and every vector's accumulator advances per block
+/// element, so the host-side simulation streams the slice (and runs the
+/// cycle accounting) once per *vector block* instead of once per
+/// vector — the same fusion as
+/// [`crate::kernels::csr::run_csr_dpu_batch`]. Results are
+/// bit-identical to calling [`run_bcsr_dpu`] once per vector: per
+/// vector, the MAC chain over each dense block row is evaluated in the
+/// same order, and the accounting is structure-only (see `finish_batch`
+/// in the module root).
+///
+/// The tasklet walk below deliberately mirrors [`run_bcsr_dpu`]'s (a
+/// shared walk would put a per-element vector loop on the single-vector
+/// hot path): any change to the accounting sequence there must be
+/// mirrored here, and `tests/batch_equivalence.rs` fails on any drift.
 pub fn run_bcsr_dpu_batch<T: SpElem>(
     cfg: &PimConfig,
     slice: &BcsrMatrix<T>,
@@ -164,7 +197,80 @@ pub fn run_bcsr_dpu_batch<T: SpElem>(
     bal: TaskletBalance,
     sync: SyncScheme,
 ) -> Vec<DpuKernelOutput<T>> {
-    xs.iter().map(|x| run_bcsr_dpu(cfg, slice, x, bal, sync)).collect()
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    if xs.len() == 1 {
+        return vec![run_bcsr_dpu(cfg, slice, xs[0], bal, sync)];
+    }
+    for x in xs {
+        assert_eq!(x.len(), slice.ncols(), "x length mismatch");
+    }
+    let t = cfg.tasklets;
+    let dt = T::DTYPE;
+    let (br, bc) = (slice.br, slice.bc);
+    let nb = xs.len();
+    let mut ys: Vec<Vec<T>> = (0..nb).map(|_| vec![T::zero(); slice.nrows()]).collect();
+    let mut counters = vec![TaskletCounters::default(); t];
+    let mut accs: Vec<T> = vec![T::zero(); nb];
+
+    let BlockSplit { ranges: block_ranges, shares_rows, block_row_of, n_shared, shared_bounds } =
+        split_blocks(slice, t, bal);
+
+    for (tid, range) in block_ranges.iter().enumerate() {
+        let c = &mut counters[tid];
+        if range.is_empty() {
+            continue;
+        }
+        let (shared_head, shared_tail) = shared_bounds[tid];
+        acct::stream_matrix(c, range.len() * (4 + br * bc * dt.size_bytes()));
+        let mut rows_touched = 0usize;
+        let mut current_brow = u32::MAX;
+        for bidx in range.clone() {
+            let bri_u32 = block_row_of[bidx];
+            let bri = bri_u32 as usize;
+            if bri_u32 != current_brow {
+                current_brow = bri_u32;
+                rows_touched += 1;
+            }
+            let bcol = slice.block_cols[bidx] as usize;
+            let blk = &slice.vals[bidx * br * bc..(bidx + 1) * br * bc];
+            block_compute(c, br, bc, dt);
+            let row0 = bri * br;
+            let col0 = bcol * bc;
+            let is_shared = bri_u32 == shared_head || bri_u32 == shared_tail;
+            for rr in 0..br {
+                let r = row0 + rr;
+                if r >= slice.nrows() {
+                    break;
+                }
+                accs.fill(T::zero());
+                for cc in 0..bc {
+                    let ccol = col0 + cc;
+                    if ccol >= slice.ncols() {
+                        break;
+                    }
+                    let v = blk[rr * bc + cc];
+                    for (b, acc) in accs.iter_mut().enumerate() {
+                        *acc = T::mac(*acc, v, xs[b][ccol]);
+                    }
+                }
+                if is_shared {
+                    acct::locked_update(c, dt, sync);
+                }
+                for (b, acc) in accs.iter().enumerate() {
+                    ys[b][r] = ys[b][r].add(*acc);
+                }
+            }
+        }
+        acct::writeback(c, rows_touched * br, dt);
+    }
+
+    if shares_rows && sync == SyncScheme::LockFree {
+        acct::lockfree_merge(&mut counters, n_shared * br, dt);
+    }
+
+    super::finish_batch(cfg, ys, counters)
 }
 
 #[cfg(test)]
@@ -248,6 +354,35 @@ mod tests {
     fn empty_ok() {
         let m = CooMatrix::<f64>::zeros(16, 16);
         check(&m, (4, 4), 8, TaskletBalance::Blocks, SyncScheme::LockFree);
+    }
+
+    #[test]
+    fn fused_batch_matches_looped_across_schemes() {
+        // Unaligned shape + every (balance, sync) pair: the fused walk
+        // must be bit-identical to looped single-vector runs, counters
+        // and timing included.
+        let m = generate::scale_free::<f64>(60, 52, 5, 0.6, 33);
+        let b = BcsrMatrix::from_coo(&m, 4, 4);
+        let xs: Vec<Vec<f64>> = (0..7)
+            .map(|s| (0..52).map(|i| ((i + 3 * s) % 9) as f64 - 4.0).collect())
+            .collect();
+        let refs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        for bal in [TaskletBalance::Rows, TaskletBalance::Nnz, TaskletBalance::Blocks] {
+            for sync in [SyncScheme::LockFree, SyncScheme::CoarseLock, SyncScheme::FineLock] {
+                let batch = run_bcsr_dpu_batch(&cfg(16), &b, &refs, bal, sync);
+                assert_eq!(batch.len(), xs.len());
+                for (x, out) in xs.iter().zip(&batch) {
+                    let single = run_bcsr_dpu(&cfg(16), &b, x, bal, sync);
+                    assert_eq!(out.y, single.y, "{bal:?} {sync:?}: y differs");
+                    assert_eq!(out.counters, single.counters, "{bal:?} {sync:?}: counters differ");
+                    assert_eq!(out.timing, single.timing, "{bal:?} {sync:?}: timing differs");
+                }
+            }
+        }
+        assert!(
+            run_bcsr_dpu_batch(&cfg(4), &b, &[], TaskletBalance::Blocks, SyncScheme::LockFree)
+                .is_empty()
+        );
     }
 
     #[test]

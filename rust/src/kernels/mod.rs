@@ -16,10 +16,12 @@
 //!
 //! Every kernel also has a batched (multi-vector) entry point
 //! (`run_*_dpu_batch`) used by the SpMM-style serving path in
-//! [`crate::coordinator`]: CSR and COO fuse the batch into one pass over
-//! the matrix slice (accounting once, all vectors per element), the
-//! blocked formats loop the single-vector kernel. Either way the
-//! per-vector results are bit-identical to single-vector runs.
+//! [`crate::coordinator`]: all four formats fuse the batch into one
+//! pass over the matrix slice (accounting once, every vector's
+//! accumulator advanced per element/block), so a vector block streams
+//! the slice once instead of once per vector. Per-vector results are
+//! bit-identical to single-vector runs (locked by
+//! `tests/batch_equivalence.rs`).
 
 pub mod bcoo;
 pub mod bcsr;

@@ -20,17 +20,23 @@
 //!   synchronization scheme), executed functionally with cycle accounting.
 //! * [`partition`] — 1D and 2D matrix partitioning across DPUs, and
 //!   tasklet-level load balancers.
-//! * [`coordinator`] — the host-side library, a plan/execute pipeline:
-//!   [`coordinator::SpmvExecutor::plan`] partitions + converts + prices
-//!   transfers once per (matrix, kernel) pair, and
-//!   [`coordinator::SpmvExecutor::execute`] runs the per-DPU kernels —
+//! * [`coordinator`] — the host-side library. The serving front door is
+//!   [`coordinator::SpmvService`]: a builder-configured, long-lived
+//!   service that owns the plan cache and the execution engine;
+//!   matrices are registered once ([`coordinator::SpmvService::load`]
+//!   -> [`coordinator::MatrixHandle`], content-fingerprinted), and
+//!   typed requests ([`coordinator::Request`]) flow through a pipelined
+//!   worker queue ([`coordinator::SpmvService::submit`] ->
+//!   [`coordinator::Ticket`] / [`coordinator::SpmvService::wait`]).
+//!   Underneath: [`coordinator::SpmvExecutor::plan`] partitions +
+//!   converts + prices transfers once per (matrix, kernel) pair, and
+//!   [`coordinator::ExecutionPlan::execute`] runs the per-DPU kernels —
 //!   serially or on host threads via [`coordinator::Engine`] — and
-//!   produces the paper's load/kernel/retrieve/merge breakdowns. For
-//!   serving-style workloads, [`coordinator::SpmvExecutor::execute_batch`]
-//!   multiplies many vectors against one resident plan in a single
-//!   engine wave (SpMM-style, bit-identical to looped `execute`), and a
-//!   [`coordinator::PlanCache`] keys plans by matrix fingerprint so
-//!   callers without a place to hold plans still plan once.
+//!   produces the paper's load/kernel/retrieve/merge breakdowns.
+//!   Batched (SpMM-style) execution streams each matrix slice once per
+//!   vector block, with the width set by a
+//!   [`coordinator::BlockPolicy`]; everything is bit-identical to
+//!   synchronous serial execution.
 //! * [`baselines`] — processor-centric comparators (multithreaded host CPU
 //!   SpMV; analytic CPU/GPU roofline models).
 //! * [`runtime`] — PJRT runtime that loads AOT artifacts (HLO text) built
@@ -38,47 +44,56 @@
 //! * [`bench_harness`] — a small measurement harness (criterion is not
 //!   available offline) + per-figure drivers for the paper's evaluation.
 //!
-//! ## Quickstart: plan once, execute many
+//! ## Quickstart: load once, serve many
 //!
-//! Iterative apps (CG, Jacobi, PageRank — hundreds of SpMVs on one
-//! matrix) plan once and stream vectors through the plan; that mirrors
-//! the paper's cost model, where matrix placement is a one-time cost and
-//! only the input vector moves per iteration:
+//! Serving workloads (and the iterative apps in [`apps`] — CG, Jacobi,
+//! PageRank: hundreds of SpMVs on one matrix) register the matrix once
+//! and stream requests against the handle; that mirrors the paper's
+//! cost model, where matrix placement is a one-time cost and only the
+//! input vector moves per request:
 //!
 //! ```no_run
 //! use sparsep::matrix::generate;
 //! use sparsep::pim::PimSystem;
-//! use sparsep::coordinator::{Engine, SpmvExecutor, KernelSpec};
+//! use sparsep::coordinator::{KernelSpec, Request, ServiceBuilder};
 //!
 //! let m = generate::scale_free::<f32>(10_000, 10_000, 8, 0.6, 7);
-//! // Threaded engine: per-DPU kernel simulations run on host threads
-//! // (results are bit-identical to Engine::Serial).
-//! let exec = SpmvExecutor::with_engine(PimSystem::with_dpus(256), Engine::threaded(0));
+//! // Threaded engine + pipelined request queue: wall-clock knobs only,
+//! // responses are bit-identical to synchronous serial execution.
+//! let svc = ServiceBuilder::new()
+//!     .threads(0)
+//!     .build::<f32>(PimSystem::with_dpus(256))
+//!     .unwrap();
 //!
-//! // Plan once: partitioning, per-DPU format conversion, transfer sizing.
-//! let plan = exec.plan(&KernelSpec::csr_nnz(), &m).unwrap();
+//! // Load once: partitioning, per-DPU format conversion, transfer
+//! // sizing — content-fingerprinted through the service's plan cache.
+//! let h = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
 //!
-//! // Execute many: only the vector changes per call.
+//! // Serve many: typed requests, tickets claimable in any order.
 //! let x = vec![1.0f32; m.ncols()];
-//! let run = exec.execute(&plan, &x).unwrap();
-//! println!("y[0]={} breakdown={:?}", run.y[0], run.breakdown);
-//! let iterated = exec.run_iterations(&plan, &x, 50).unwrap();
-//! println!("50 iterations: {:.3} ms total", iterated.total.total_s() * 1e3);
+//! let t1 = svc.submit(h, Request::Spmv { x: x.clone() }).unwrap();
+//! let t2 = svc.submit(h, Request::Batch {
+//!     xs: (0..32).map(|_| x.clone()).collect(),
+//! }).unwrap();
+//! let t3 = svc.submit(h, Request::Iterate { x: x.clone(), iters: 50 }).unwrap();
 //!
-//! // One-shot convenience (plan + execute in one call):
-//! let once = exec.run(&KernelSpec::coo_nnz(), &m, &x).unwrap();
-//! assert_eq!(once.y, run.y);
-//!
-//! // Batched serving (SpMM-style): N queries against the resident
-//! // matrix in one engine wave, bit-identical to looping `execute`.
-//! let xs: Vec<Vec<f32>> = (0..32).map(|_| x.clone()).collect();
-//! let batch = exec.execute_batch(&plan, &xs).unwrap();
+//! let batch = svc.wait(t2).unwrap().into_batch().unwrap();
 //! println!("{} outputs, {:.3} ms modeled", batch.len(), batch.total().total_s() * 1e3);
+//! let run = svc.wait(t1).unwrap().into_spmv().unwrap();
+//! println!("y[0]={} breakdown={:?}", run.y[0], run.breakdown);
+//! let iterated = svc.wait(t3).unwrap().into_iterations().unwrap();
+//! println!("50 iterations: {:.3} ms total", iterated.total.total_s() * 1e3);
 //! ```
 //!
-//! The full pipeline — plan → execute → merge, the batched path, the
-//! plan cache and the module map — is documented with a data-flow
-//! diagram in `docs/ARCHITECTURE.md` at the repository root.
+//! For one-shot synchronous execution, plan directly:
+//! `exec.plan(&spec, &m)?` then [`coordinator::ExecutionPlan::execute`]
+//! — the service's responses are bit-identical to that path by
+//! construction (locked by `tests/service_equivalence.rs`).
+//!
+//! The full picture — service / request / queue layer, plan → execute →
+//! merge pipeline, the batched path and the plan cache — is documented
+//! with data-flow diagrams in `docs/ARCHITECTURE.md` at the repository
+//! root.
 
 pub mod util;
 pub mod matrix;

@@ -7,6 +7,13 @@
 //! `run_iterations` the same way, and `PlanCache`-served plans must be
 //! indistinguishable from freshly built ones.
 
+// These suites deliberately exercise `SpmvExecutor`'s deprecated
+// compatibility wrappers (`execute` / `execute_batch` / `run_iterations`
+// / `run_iterations_batch` / `run`): they lock the wrappers' behavior
+// until a future major removal. New code routes through
+// `coordinator::SpmvService` or `ExecutionPlan::{execute, ...}`.
+#![allow(deprecated)]
+
 use sparsep::coordinator::{
     Engine, KernelSpec, Partitioning, PlanCache, RunResult, SpmvExecutor, VECTOR_BLOCK,
 };

@@ -5,6 +5,13 @@
 //! canonical and randomized inputs. The engines only move *where* the
 //! per-DPU simulations run; any divergence is a determinism bug.
 
+// These suites deliberately exercise `SpmvExecutor`'s deprecated
+// compatibility wrappers (`execute` / `execute_batch` / `run_iterations`
+// / `run_iterations_batch` / `run`): they lock the wrappers' behavior
+// until a future major removal. New code routes through
+// `coordinator::SpmvService` or `ExecutionPlan::{execute, ...}`.
+#![allow(deprecated)]
+
 use sparsep::coordinator::{Engine, KernelSpec, Partitioning, RunResult, SpmvExecutor};
 use sparsep::kernels::SyncScheme;
 use sparsep::matrix::{CooMatrix, SpElem};

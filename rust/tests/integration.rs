@@ -1,6 +1,13 @@
 //! Integration tests: the public API exercised end to end, across
 //! formats, partitionings, data types and system shapes.
 
+// These suites deliberately exercise `SpmvExecutor`'s deprecated
+// compatibility wrappers (`execute` / `execute_batch` / `run_iterations`
+// / `run_iterations_batch` / `run`): they lock the wrappers' behavior
+// until a future major removal. New code routes through
+// `coordinator::SpmvService` or `ExecutionPlan::{execute, ...}`.
+#![allow(deprecated)]
+
 use sparsep::coordinator::{KernelSpec, SpmvExecutor};
 use sparsep::matrix::{generate, mtx, CooMatrix, CsrMatrix, Format};
 use sparsep::pim::{PimConfig, PimSystem};

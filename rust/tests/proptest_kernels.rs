@@ -3,6 +3,13 @@
 //! always produce the exact host-oracle result and satisfy the
 //! coordinator's structural invariants.
 
+// These suites deliberately exercise `SpmvExecutor`'s deprecated
+// compatibility wrappers (`execute` / `execute_batch` / `run_iterations`
+// / `run_iterations_batch` / `run`): they lock the wrappers' behavior
+// until a future major removal. New code routes through
+// `coordinator::SpmvService` or `ExecutionPlan::{execute, ...}`.
+#![allow(deprecated)]
+
 use sparsep::coordinator::{KernelSpec, Partitioning, SpmvExecutor};
 use sparsep::kernels::SyncScheme;
 use sparsep::matrix::CooMatrix;

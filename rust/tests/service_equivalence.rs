@@ -1,0 +1,276 @@
+//! Property tests for the serving API: `SpmvService` responses must be
+//! bit-identical — output vectors, breakdowns, stats and energy — to
+//! the synchronous `ExecutionPlan` path, across all 25 kernel specs,
+//! both engines, and every request kind (single SpMV, ragged batch,
+//! iterate), including out-of-order waits on >= 4 concurrent tickets.
+//! The pipelined request queue, the vector-block policy and the queue
+//! depth are wall-clock knobs only; any answer drift is a bug.
+
+use sparsep::coordinator::{
+    BatchResult, BlockPolicy, Engine, IterationsResult, KernelSpec, Request, Response, RunResult,
+    ServiceBuilder, SpmvExecutor, SpmvService, Ticket, VECTOR_BLOCK,
+};
+use sparsep::matrix::{generate, CooMatrix, SpElem};
+use sparsep::pim::PimSystem;
+
+const BATCH: usize = VECTOR_BLOCK + 3; // one full block + a ragged tail
+
+fn assert_identical<T: SpElem>(a: &RunResult<T>, b: &RunResult<T>, tag: &str) {
+    assert_eq!(a.y, b.y, "{tag}: output vector differs");
+    assert_eq!(a.breakdown, b.breakdown, "{tag}: breakdown differs");
+    assert_eq!(a.stats, b.stats, "{tag}: stats differ");
+    assert_eq!(a.energy, b.energy, "{tag}: energy differs");
+}
+
+fn assert_batch_identical<T: SpElem>(a: &BatchResult<T>, b: &BatchResult<T>, tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: batch size differs");
+    for (i, (ra, rb)) in a.runs.iter().zip(&b.runs).enumerate() {
+        assert_identical(ra, rb, &format!("{tag} vec={i}"));
+    }
+}
+
+fn assert_iters_identical<T: SpElem>(
+    a: &IterationsResult<T>,
+    b: &IterationsResult<T>,
+    tag: &str,
+) {
+    assert_identical(&a.last, &b.last, &format!("{tag} last"));
+    assert_eq!(a.total, b.total, "{tag}: iteration totals differ");
+    assert_eq!(a.energy, b.energy, "{tag}: iteration energy differs");
+    assert_eq!(a.iters, b.iters, "{tag}: iteration count differs");
+}
+
+fn vectors(ncols: usize, batch: usize) -> Vec<Vec<f64>> {
+    (0..batch)
+        .map(|b| (0..ncols).map(|i| ((i + 5 * b) % 11) as f64 - 5.0).collect())
+        .collect()
+}
+
+/// Submit the full request mix as >= 4 concurrent tickets, wait for
+/// them OUT of submission order, and compare every response against
+/// the synchronous `ExecutionPlan` path on an equally-configured
+/// executor.
+fn check_service(engine: Engine, spec: &KernelSpec, m: &CooMatrix<f64>, tag: &str) {
+    const ITERS: usize = 5;
+    let sys = PimSystem::with_dpus(16);
+    let exec = SpmvExecutor::with_engine(sys.clone(), engine);
+    let plan = exec.plan(spec, m).unwrap();
+    let svc: SpmvService<f64> =
+        ServiceBuilder::new().engine(engine).build(sys).unwrap();
+    let handle = svc.load(m, spec).unwrap();
+
+    let x1: Vec<f64> = (0..m.ncols()).map(|i| ((i % 13) as f64) - 6.0).collect();
+    let x2: Vec<f64> = (0..m.ncols()).map(|i| ((i % 7) as f64) - 3.0).collect();
+    let xs = vectors(m.ncols(), BATCH);
+    let square = m.nrows() == m.ncols();
+    let iters = if square { ITERS } else { 1 };
+
+    // Four tickets in flight at once...
+    let t_spmv1 = svc.submit(handle, Request::Spmv { x: x1.clone() }).unwrap();
+    let t_batch = svc.submit(handle, Request::Batch { xs: xs.clone() }).unwrap();
+    let t_iter = svc.submit(handle, Request::Iterate { x: x1.clone(), iters }).unwrap();
+    let t_spmv2 = svc.submit(handle, Request::Spmv { x: x2.clone() }).unwrap();
+
+    // ...claimed out of submission order.
+    let iter_resp = match svc.wait(t_iter).unwrap() {
+        Response::Iterate(it) => it,
+        other => panic!("{tag}: expected iterate, got {}", other.kind()),
+    };
+    let spmv2_resp = match svc.wait(t_spmv2).unwrap() {
+        Response::Spmv(r) => r,
+        other => panic!("{tag}: expected spmv, got {}", other.kind()),
+    };
+    let batch_resp = match svc.wait(t_batch).unwrap() {
+        Response::Batch(b) => b,
+        other => panic!("{tag}: expected batch, got {}", other.kind()),
+    };
+    let spmv1_resp = match svc.wait(t_spmv1).unwrap() {
+        Response::Spmv(r) => r,
+        other => panic!("{tag}: expected spmv, got {}", other.kind()),
+    };
+
+    // The synchronous ExecutionPlan path is the reference.
+    assert_identical(&spmv1_resp, &plan.execute(&exec, &x1).unwrap(), &format!("{tag} spmv1"));
+    assert_identical(&spmv2_resp, &plan.execute(&exec, &x2).unwrap(), &format!("{tag} spmv2"));
+    assert_batch_identical(
+        &batch_resp,
+        &plan.execute_batch_runs(&exec, &xs).unwrap(),
+        &format!("{tag} batch"),
+    );
+    assert_iters_identical(
+        &iter_resp,
+        &plan.run_iterations(&exec, &x1, iters).unwrap(),
+        &format!("{tag} iterate"),
+    );
+}
+
+/// PROPERTY: all 25 kernels x {serial, threaded} serve the full request
+/// mix bit-identically to synchronous execution, with >= 4 concurrent
+/// tickets waited out of order.
+#[test]
+fn prop_all25_service_identical_to_synchronous() {
+    let m = generate::scale_free::<f64>(256, 256, 6, 0.7, 29);
+    for spec in KernelSpec::all25(4) {
+        check_service(Engine::Serial, &spec, &m, &format!("{} serial", spec.name));
+        check_service(Engine::threaded(4), &spec, &m, &format!("{} threaded", spec.name));
+    }
+}
+
+/// PROPERTY: neither the vector-block policy nor the queue depth can
+/// change a response — only the wall clock.
+#[test]
+fn prop_block_policy_and_queue_depth_do_not_change_responses() {
+    let m = generate::scale_free::<f64>(192, 192, 6, 0.6, 51);
+    let spec = KernelSpec::coo_nnz();
+    let xs = vectors(192, BATCH);
+    let exec = SpmvExecutor::new(PimSystem::with_dpus(8));
+    let gold = exec.plan(&spec, &m).unwrap().execute_batch_runs(&exec, &xs).unwrap();
+    for policy in [
+        BlockPolicy::Fixed(1),
+        BlockPolicy::Fixed(2),
+        BlockPolicy::Fixed(VECTOR_BLOCK),
+        BlockPolicy::Fixed(1024),
+        BlockPolicy::Adaptive,
+    ] {
+        for depth in [1usize, 2, 64] {
+            let svc: SpmvService<f64> = ServiceBuilder::new()
+                .vector_block(policy)
+                .queue_depth(depth)
+                .build(PimSystem::with_dpus(8))
+                .unwrap();
+            let h = svc.load(&m, &spec).unwrap();
+            // Through the pipelined queue...
+            let t = svc.submit(h, Request::Batch { xs: xs.clone() }).unwrap();
+            let b = svc.wait(t).unwrap().into_batch().unwrap();
+            assert_batch_identical(&b, &gold, &format!("{policy:?} depth={depth} queued"));
+            // ...and through the synchronous fast path.
+            let fast = svc.spmv_batch(&h, &xs).unwrap();
+            assert_batch_identical(&fast, &gold, &format!("{policy:?} depth={depth} fast"));
+        }
+    }
+}
+
+/// PROPERTY: a deep pipeline of interleaved request kinds, all in
+/// flight simultaneously and waited in reverse, matches per-request
+/// synchronous execution (requests must not bleed into each other in
+/// the stage hand-off).
+#[test]
+fn prop_deep_interleaved_pipeline_isolates_requests() {
+    let m = generate::uniform::<f64>(160, 160, 5, 43);
+    let spec = KernelSpec::csr_nnz();
+    for engine in [Engine::Serial, Engine::threaded(2)] {
+        let sys = PimSystem::with_dpus(8);
+        let exec = SpmvExecutor::with_engine(sys.clone(), engine);
+        let plan = exec.plan(&spec, &m).unwrap();
+        let svc: SpmvService<f64> = ServiceBuilder::new()
+            .engine(engine)
+            .queue_depth(3) // deliberately shallow: submit must backpressure, not wedge
+            .build(sys)
+            .unwrap();
+        let h = svc.load(&m, &spec).unwrap();
+
+        enum Want {
+            Spmv(Vec<f64>),
+            Batch(Vec<Vec<f64>>),
+            Iter(Vec<f64>, usize),
+        }
+        let mut tickets: Vec<(Ticket, Want)> = Vec::new();
+        for r in 0..12usize {
+            let x: Vec<f64> = (0..160).map(|i| ((i + 9 * r) % 7) as f64 - 3.0).collect();
+            match r % 3 {
+                0 => {
+                    let t = svc.submit(h, Request::Spmv { x: x.clone() }).unwrap();
+                    tickets.push((t, Want::Spmv(x)));
+                }
+                1 => {
+                    let xs = vec![x.clone(), x.iter().map(|v| v + 1.0).collect(), x];
+                    let t = svc.submit(h, Request::Batch { xs: xs.clone() }).unwrap();
+                    tickets.push((t, Want::Batch(xs)));
+                }
+                _ => {
+                    let iters = 1 + r % 4;
+                    let t = svc.submit(h, Request::Iterate { x: x.clone(), iters }).unwrap();
+                    tickets.push((t, Want::Iter(x, iters)));
+                }
+            }
+        }
+        for (i, (ticket, want)) in tickets.into_iter().enumerate().rev() {
+            let tag = format!("req {i}");
+            match (svc.wait(ticket).unwrap(), want) {
+                (Response::Spmv(r), Want::Spmv(x)) => {
+                    assert_identical(&r, &plan.execute(&exec, &x).unwrap(), &tag);
+                }
+                (Response::Batch(b), Want::Batch(xs)) => {
+                    assert_batch_identical(
+                        &b,
+                        &plan.execute_batch_runs(&exec, &xs).unwrap(),
+                        &tag,
+                    );
+                }
+                (Response::Iterate(it), Want::Iter(x, iters)) => {
+                    assert_iters_identical(
+                        &it,
+                        &plan.run_iterations(&exec, &x, iters).unwrap(),
+                        &tag,
+                    );
+                }
+                (resp, _) => panic!("{tag}: response kind {} mismatched", resp.kind()),
+            }
+        }
+    }
+}
+
+/// PROPERTY: integer dtypes (wrapping arithmetic) serve identically
+/// too — a different code path through the MAC accounting.
+#[test]
+fn prop_integer_service_identical_to_synchronous() {
+    let m64 = generate::uniform::<f64>(128, 128, 5, 31);
+    let mi: CooMatrix<i32> = m64.cast();
+    let xs: Vec<Vec<i32>> = (0..5)
+        .map(|b| (0..128).map(|i| ((i + b) % 7) as i32 - 3).collect())
+        .collect();
+    for spec in [KernelSpec::coo_nnz(), KernelSpec::csr_nnz(), KernelSpec::bcoo_nnz()] {
+        let sys = PimSystem::with_dpus(8);
+        let exec = SpmvExecutor::with_engine(sys.clone(), Engine::threaded(3));
+        let plan = exec.plan(&spec, &mi).unwrap();
+        let svc: SpmvService<i32> =
+            ServiceBuilder::new().threads(3).build(sys).unwrap();
+        let h = svc.load(&mi, &spec).unwrap();
+        let b = svc.spmv_batch(&h, &xs).unwrap();
+        assert_batch_identical(
+            &b,
+            &plan.execute_batch_runs(&exec, &xs).unwrap(),
+            &format!("{} i32", spec.name),
+        );
+        let it = svc.iterate(&h, &xs[0], 4).unwrap();
+        assert_iters_identical(
+            &it,
+            &plan.run_iterations(&exec, &xs[0], 4).unwrap(),
+            &format!("{} i32 iterate", spec.name),
+        );
+    }
+}
+
+/// PROPERTY: many handles on one service stay isolated — interleaved
+/// tickets against different matrices and specs answer from the right
+/// plan.
+#[test]
+fn prop_multiple_handles_do_not_cross_talk() {
+    let ma = generate::scale_free::<f64>(120, 120, 6, 0.6, 3);
+    let mb = generate::uniform::<f64>(96, 96, 4, 9);
+    let sys = PimSystem::with_dpus(8);
+    let exec = SpmvExecutor::new(sys.clone());
+    let plan_a = exec.plan(&KernelSpec::coo_nnz(), &ma).unwrap();
+    let plan_b = exec.plan(&KernelSpec::csr_row(), &mb).unwrap();
+    let svc: SpmvService<f64> = ServiceBuilder::new().build(sys).unwrap();
+    let ha = svc.load(&ma, &KernelSpec::coo_nnz()).unwrap();
+    let hb = svc.load(&mb, &KernelSpec::csr_row()).unwrap();
+    let xa: Vec<f64> = (0..120).map(|i| (i % 9) as f64 - 4.0).collect();
+    let xb: Vec<f64> = (0..96).map(|i| (i % 5) as f64 - 2.0).collect();
+    let ta = svc.submit(ha, Request::Spmv { x: xa.clone() }).unwrap();
+    let tb = svc.submit(hb, Request::Spmv { x: xb.clone() }).unwrap();
+    let rb = svc.wait(tb).unwrap().into_spmv().unwrap();
+    let ra = svc.wait(ta).unwrap().into_spmv().unwrap();
+    assert_identical(&ra, &plan_a.execute(&exec, &xa).unwrap(), "handle a");
+    assert_identical(&rb, &plan_b.execute(&exec, &xb).unwrap(), "handle b");
+}

@@ -2,10 +2,13 @@
 # Perf smokes, emitted as JSON at the repo root so successive PRs can
 # track the trajectory:
 #
-#   BENCH_coordinator.json  50 plan-once CG iterations on a 100k x 100k
+#   BENCH_coordinator.json  50 load-once CG iterations on a 100k x 100k
 #                           scale-free SPD system, serial vs threaded
 #   BENCH_batch.json        batched (SpMM-style) vs looped single-vector
 #                           serving of a vector batch over one plan
+#   BENCH_service.json      queued-pipelined SpmvService vs synchronous
+#                           execution of a batched request stream,
+#                           serial + threaded
 #
 # Knobs:
 #   BENCH_ROWS   (default 100000)   CG matrix dimension
@@ -14,6 +17,8 @@
 #   BENCH_THREADS (default: nproc)  threaded-engine workers
 #   BENCH_BATCH_ROWS (default 50000)  batch-bench matrix dimension
 #   BENCH_BATCH  (default 32)       batch-bench vector count
+#   BENCH_REQUESTS (default 8)      service-bench batched requests
+#   BENCH_SERVICE_BATCH (default 16)  vectors per service request
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -38,3 +43,14 @@ cargo run --release -- bench-batch \
   --out BENCH_batch.json
 
 cat BENCH_batch.json
+
+cargo run --release -- bench-service \
+  --rows "${BENCH_BATCH_ROWS:-50000}" \
+  --deg 8 \
+  --requests "${BENCH_REQUESTS:-8}" \
+  --batch "${BENCH_SERVICE_BATCH:-16}" \
+  --dpus "${BENCH_DPUS:-256}" \
+  --threads "$THREADS" \
+  --out BENCH_service.json
+
+cat BENCH_service.json

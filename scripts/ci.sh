@@ -12,6 +12,13 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== lint: cargo clippy --all-targets (warnings are errors) =="
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "clippy component unavailable; skipping lint gate"
+fi
+
 echo "== docs: cargo doc --no-deps (warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

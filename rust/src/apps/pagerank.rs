@@ -3,7 +3,7 @@
 //! web/social graph adjacency structures).
 
 use super::SolveStats;
-use crate::coordinator::{KernelSpec, SpmvService};
+use crate::coordinator::{KernelSpec, Request, ShardedService, SpmvService, TenantId};
 use crate::matrix::CooMatrix;
 use crate::util::Result;
 
@@ -141,13 +141,7 @@ pub fn personalized_pagerank(
         }
         let mut max_delta = 0.0f64;
         for ((rank, run), &seed) in ranks.iter_mut().zip(&batch.runs).zip(seeds) {
-            let mut next: Vec<f64> = run.y.iter().map(|v| damping * v).collect();
-            next[seed] += 1.0 - damping;
-            // Dangling nodes leak `damping * mass`; in the personalized
-            // walk that mass restarts at the seed.
-            let mass: f64 = next.iter().sum();
-            next[seed] += 1.0 - mass;
-            let delta: f64 = next.iter().zip(rank.iter()).map(|(a, b)| (a - b).abs()).sum();
+            let (next, delta) = personalized_step(&run.y, rank, seed, damping);
             max_delta = max_delta.max(delta);
             *rank = next;
         }
@@ -160,6 +154,177 @@ pub fn personalized_pagerank(
     Ok(MultiPageRankResult { ranks, iterations, converged, stats })
 }
 
+/// One step of the personalized power iteration for a single seed:
+/// damp the SpMV output, teleport to the seed, and return the seed's
+/// restart-corrected next distribution plus the L1 delta. Shared by the
+/// single-service, multi-tenant and host-oracle paths so they iterate
+/// the *same* math.
+fn personalized_step(y: &[f64], rank: &[f64], seed: usize, damping: f64) -> (Vec<f64>, f64) {
+    let mut next: Vec<f64> = y.iter().map(|v| damping * v).collect();
+    next[seed] += 1.0 - damping;
+    // Dangling nodes leak `damping * mass`; in the personalized walk
+    // that mass restarts at the seed.
+    let mass: f64 = next.iter().sum();
+    next[seed] += 1.0 - mass;
+    let delta: f64 = next.iter().zip(rank).map(|(a, b)| (a - b).abs()).sum();
+    (next, delta)
+}
+
+/// Multi-tenant personalized PageRank on a [`ShardedService`] — the
+/// serving-tier demo: every tenant brings its own seed set, loads its
+/// own handle over the shared transition matrix (the shared plan cache
+/// makes the per-shard plans build once), and power-iterates through
+/// batched requests submitted on its own [`TenantId`] — so concurrent
+/// tenants' waves are admitted by the weighted-round-robin scheduler,
+/// not by submission luck. Each tenant stops when *its* worst seed
+/// converges; all unconverged tenants' waves stay in flight together.
+///
+/// Returns one [`MultiPageRankResult`] per entry of `tenant_seeds`, in
+/// input order, each bit-for-bit the same math as
+/// [`personalized_pagerank`] runs on a plain service. Handles are
+/// unloaded before returning (a long-lived facade must not accumulate
+/// plan pins per call).
+pub fn multi_tenant_personalized_pagerank(
+    svc: &ShardedService<f64>,
+    spec: &KernelSpec,
+    p: &CooMatrix<f64>,
+    tenant_seeds: &[(TenantId, Vec<usize>)],
+    damping: f64,
+    tol: f64,
+    max_iters: usize,
+) -> Result<Vec<MultiPageRankResult>> {
+    crate::ensure!(p.nrows() == p.ncols(), "transition matrix must be square");
+    crate::ensure!(!tenant_seeds.is_empty(), "need at least one tenant");
+    let n = p.nrows();
+    for (t, seeds) in tenant_seeds {
+        crate::ensure!(!seeds.is_empty(), "tenant {} needs at least one seed", t.index());
+        for &s in seeds {
+            crate::ensure!(s < n, "seed {s} out of range for {n} nodes");
+        }
+    }
+
+    struct TenantRun {
+        tenant: TenantId,
+        seeds: Vec<usize>,
+        handle: crate::coordinator::ShardedHandle,
+        ranks: Vec<Vec<f64>>,
+        stats: SolveStats,
+        iterations: usize,
+        converged: bool,
+    }
+    let mut runs: Vec<TenantRun> = Vec::with_capacity(tenant_seeds.len());
+    for (t, seeds) in tenant_seeds {
+        let handle = match svc.load_for(*t, p, spec) {
+            Ok(h) => h,
+            Err(e) => {
+                // Roll back earlier tenants' loads: no exit path may
+                // leave plan pins behind on a long-lived facade.
+                for r in &runs {
+                    svc.unload(r.handle);
+                }
+                return Err(e);
+            }
+        };
+        runs.push(TenantRun {
+            tenant: *t,
+            seeds: seeds.clone(),
+            handle,
+            ranks: seeds
+                .iter()
+                .map(|&s| {
+                    let mut e = vec![0.0; n];
+                    e[s] = 1.0;
+                    e
+                })
+                .collect(),
+            stats: SolveStats::default(),
+            iterations: 0,
+            converged: false,
+        });
+    }
+
+    // The iteration loop as an inner closure so every exit path —
+    // success or error — flows through the handle unload below: a
+    // failing wave must not leave plan pins behind on a long-lived
+    // facade.
+    let mut iterate_all = || -> Result<()> {
+        for _ in 0..max_iters {
+            // One batched wave per unconverged tenant, all in flight at
+            // once; the facade's scheduler interleaves them fairly. A
+            // failing submit does not short-circuit: every ticket
+            // already issued must still be claimed below, or its
+            // response would park in the facade's completion store for
+            // the service's lifetime.
+            let mut tickets: Vec<(usize, crate::coordinator::ShardedTicket)> = Vec::new();
+            let mut wave_err = None;
+            for (i, r) in runs.iter().enumerate().filter(|(_, r)| !r.converged) {
+                match svc.submit_for(r.tenant, r.handle, Request::Batch { xs: r.ranks.clone() })
+                {
+                    Ok(t) => tickets.push((i, t)),
+                    Err(e) => {
+                        wave_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            if tickets.is_empty() && wave_err.is_none() {
+                break;
+            }
+            for (i, ticket) in tickets {
+                // Claim every ticket even after an error (discarding
+                // the response); the first error wins.
+                let batch = match svc.wait(ticket).and_then(crate::coordinator::Response::into_batch) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        wave_err = wave_err.or(Some(e));
+                        continue;
+                    }
+                };
+                if wave_err.is_some() {
+                    continue;
+                }
+                let run = &mut runs[i];
+                run.iterations += 1;
+                run.stats.iterations = run.iterations;
+                for r in &batch.runs {
+                    run.stats.pim.accumulate(&r.breakdown);
+                    run.stats.energy_j += r.energy.total_j();
+                    run.stats.matrix_load_s = r.stats.matrix_load_s; // one-time
+                }
+                let mut max_delta = 0.0f64;
+                for ((rank, r), &seed) in run.ranks.iter_mut().zip(&batch.runs).zip(&run.seeds)
+                {
+                    let (next, delta) = personalized_step(&r.y, rank, seed, damping);
+                    max_delta = max_delta.max(delta);
+                    *rank = next;
+                }
+                if max_delta < tol {
+                    run.converged = true;
+                }
+            }
+            if let Some(e) = wave_err {
+                return Err(e);
+            }
+        }
+        Ok(())
+    };
+    let outcome = iterate_all();
+    let results = runs
+        .into_iter()
+        .map(|r| {
+            svc.unload(r.handle); // release this tenant's plan pins
+            MultiPageRankResult {
+                ranks: r.ranks,
+                iterations: r.iterations,
+                converged: r.converged,
+                stats: r.stats,
+            }
+        })
+        .collect();
+    outcome?;
+    Ok(results)
+}
+
 /// Host-only oracle for [`personalized_pagerank`] (single seed), used by
 /// tests and verification.
 pub fn personalized_pagerank_host(
@@ -169,16 +334,11 @@ pub fn personalized_pagerank_host(
     tol: f64,
     max_iters: usize,
 ) -> Vec<f64> {
-    let n = p.nrows();
-    let mut rank = vec![0.0; n];
+    let mut rank = vec![0.0; p.nrows()];
     rank[seed] = 1.0;
     for _ in 0..max_iters {
         let y = p.spmv(&rank);
-        let mut next: Vec<f64> = y.iter().map(|v| damping * v).collect();
-        next[seed] += 1.0 - damping;
-        let mass: f64 = next.iter().sum();
-        next[seed] += 1.0 - mass;
-        let delta: f64 = next.iter().zip(&rank).map(|(a, b)| (a - b).abs()).sum();
+        let (next, delta) = personalized_step(&y, &rank, seed, damping);
         rank = next;
         if delta < tol {
             break;
@@ -299,6 +459,85 @@ mod tests {
         for i in 0..3 {
             assert!(res.ranks[0][i] > res.ranks[0][i + 3], "seed-0 walk stays in cycle 0");
             assert!(res.ranks[1][i + 3] > res.ranks[1][i], "seed-3 walk stays in cycle 1");
+        }
+    }
+
+    #[test]
+    fn multi_tenant_personalized_matches_host_oracle() {
+        use crate::coordinator::{ShardedServiceBuilder, TenantSpec};
+        let adj = generate::scale_free::<f64>(250, 250, 6, 0.6, 13);
+        let p = transition_matrix(&adj);
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(3)
+            .tenants(vec![TenantSpec::new("research", 2), TenantSpec::new("ads", 1)])
+            .build(PimSystem::with_dpus(8))
+            .unwrap();
+        let (tr, ta) = (svc.tenant("research").unwrap(), svc.tenant("ads").unwrap());
+        let assignments = vec![(tr, vec![0usize, 41, 199]), (ta, vec![7usize, 120])];
+        let results = multi_tenant_personalized_pagerank(
+            &svc, &KernelSpec::coo_nnz(), &p, &assignments, 0.85, 1e-10, 300,
+        )
+        .unwrap();
+        assert_eq!(results.len(), 2);
+        for ((_, seeds), res) in assignments.iter().zip(&results) {
+            assert!(res.converged);
+            assert_eq!(res.ranks.len(), seeds.len());
+            for (ranks, &seed) in res.ranks.iter().zip(seeds) {
+                let oracle = personalized_pagerank_host(&p, seed, 0.85, 1e-10, 300);
+                for i in 0..250 {
+                    assert!(
+                        (ranks[i] - oracle[i]).abs() <= 1e-8,
+                        "seed {seed} rank {i}: {} vs {}",
+                        ranks[i],
+                        oracle[i]
+                    );
+                }
+                let mass: f64 = ranks.iter().sum();
+                assert!((mass - 1.0).abs() < 1e-9, "seed {seed} mass {mass}");
+            }
+            assert!(res.stats.pim.total_s() > 0.0);
+        }
+        // Handles were released on return (no plan-pin accumulation).
+        assert_eq!(svc.stats().loaded_handles, 0, "handles must be released");
+    }
+
+    #[test]
+    fn multi_tenant_personalized_validates_inputs() {
+        use crate::coordinator::ShardedServiceBuilder;
+        let adj = generate::uniform::<f64>(40, 40, 4, 3);
+        let p = transition_matrix(&adj);
+        let svc: ShardedService<f64> =
+            ShardedServiceBuilder::new().shards(2).build(PimSystem::with_dpus(4)).unwrap();
+        let t = svc.default_tenant();
+        assert!(multi_tenant_personalized_pagerank(
+            &svc, &KernelSpec::coo_row(), &p, &[], 0.85, 1e-9, 10
+        )
+        .is_err());
+        assert!(multi_tenant_personalized_pagerank(
+            &svc, &KernelSpec::coo_row(), &p, &[(t, vec![])], 0.85, 1e-9, 10
+        )
+        .is_err());
+        assert!(multi_tenant_personalized_pagerank(
+            &svc, &KernelSpec::coo_row(), &p, &[(t, vec![40])], 0.85, 1e-9, 10
+        )
+        .is_err());
+        // A valid single-tenant run agrees with the plain-service path.
+        let plain = super::personalized_pagerank(
+            &service(4), &KernelSpec::coo_row(), &p, &[3, 9], 0.85, 1e-10, 200,
+        )
+        .unwrap();
+        let sharded = multi_tenant_personalized_pagerank(
+            &svc, &KernelSpec::coo_row(), &p, &[(t, vec![3, 9])], 0.85, 1e-10, 200,
+        )
+        .unwrap();
+        // Same update rule; the sharded SpMV associates row sums
+        // differently (per-shard partials), so allow float round-off
+        // plus up to one extra iteration near the tolerance crossing.
+        assert!(sharded[0].converged && plain.converged);
+        for (a, b) in sharded[0].ranks.iter().zip(&plain.ranks) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() <= 1e-8, "{x} vs {y}");
+            }
         }
     }
 

@@ -10,6 +10,7 @@
 pub mod batch;
 pub mod figures;
 pub mod service;
+pub mod shard;
 
 use std::time::Instant;
 

@@ -1,0 +1,193 @@
+//! Sharded-serving wall-clock benchmark (`sparsep bench-shard`).
+//!
+//! Measures what spreading one logical matrix across `S` simulated rank
+//! groups buys: the same batched request stream served by a
+//! [`ShardedService`] at shard counts {1, 2, 4, 8} (each shard its own
+//! backend pipeline over `dpus_per_shard` DPUs), on the serial and
+//! threaded engines. Gathered outputs are verified against the host
+//! oracle once per configuration; shard count never changes answers
+//! (locked by `tests/shard_equivalence.rs`), only wall clock.
+//!
+//! The matrix is loaded (shard planning + per-slice plans) once per
+//! facade before any timing. The JSON summary lands in
+//! `BENCH_shard.json` next to the other `BENCH_*.json` trajectories.
+
+use crate::coordinator::{Engine, KernelSpec, Request, ShardedService, ShardedServiceBuilder};
+use crate::matrix::generate;
+use crate::pim::{PimConfig, PimSystem};
+use crate::util::json::{arr, num, obj, s};
+use crate::util::{Context, Result};
+use std::time::Instant;
+
+/// Shard counts every run sweeps.
+pub const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Knobs for [`run`] (CLI flags of `sparsep bench-shard`).
+#[derive(Clone, Debug)]
+pub struct ShardBenchOpts {
+    /// Matrix dimension (square, scale-free class).
+    pub rows: usize,
+    /// Average degree (non-zeros per row).
+    pub deg: usize,
+    /// Batched requests per measurement.
+    pub requests: usize,
+    /// Right-hand-side vectors per request.
+    pub batch: usize,
+    /// Simulated DPUs per shard (each shard is one rank group).
+    pub dpus_per_shard: usize,
+    /// Threaded-engine worker count (0 = all cores).
+    pub threads: usize,
+    /// Kernel name (see `sparsep kernels`).
+    pub kernel: String,
+    /// Timed samples per configuration (min is reported).
+    pub samples: usize,
+    /// Output JSON path.
+    pub out: String,
+}
+
+impl Default for ShardBenchOpts {
+    fn default() -> ShardBenchOpts {
+        ShardBenchOpts {
+            rows: 50_000,
+            deg: 8,
+            requests: 8,
+            batch: 8,
+            dpus_per_shard: 64,
+            threads: 0,
+            kernel: "CSR.nnz".to_string(),
+            samples: 2,
+            out: "BENCH_shard.json".to_string(),
+        }
+    }
+}
+
+/// Run the benchmark and write the JSON summary to `opts.out`.
+pub fn run(opts: &ShardBenchOpts) -> Result<()> {
+    crate::ensure!(opts.requests >= 1, "bench-shard needs --requests >= 1");
+    crate::ensure!(opts.batch >= 1, "bench-shard needs --batch >= 1");
+    crate::ensure!(opts.samples >= 1, "bench-shard needs --samples >= 1");
+    let spec = KernelSpec::by_name(&opts.kernel, 8)
+        .with_context(|| format!("unknown kernel {} (see `sparsep kernels`)", opts.kernel))?;
+    let m = generate::scale_free::<f64>(opts.rows, opts.rows, opts.deg, 0.6, 7);
+    let payloads: Vec<Vec<Vec<f64>>> = (0..opts.requests)
+        .map(|r| {
+            (0..opts.batch)
+                .map(|b| {
+                    (0..m.ncols()).map(|i| ((i + 3 * b + 7 * r) % 9) as f64 - 4.0).collect()
+                })
+                .collect()
+        })
+        .collect();
+    let sys = PimSystem::new(PimConfig { n_dpus: opts.dpus_per_shard, ..Default::default() })?;
+    println!(
+        "bench-shard: {} x{} requests x{} vectors on {}x{} ({} nnz), {} DPUs/shard, shards {:?}",
+        spec.name,
+        opts.requests,
+        opts.batch,
+        m.nrows(),
+        m.ncols(),
+        m.nnz(),
+        opts.dpus_per_shard,
+        SHARD_COUNTS
+    );
+
+    let one = |engine: Engine, shards: usize, verify: bool| -> Result<f64> {
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(shards)
+            .engine(engine)
+            .build(sys.clone())?;
+        let handle = svc.load(&m, &spec)?; // shard planning + plans, out of timing
+        if verify {
+            let b = svc.spmv_batch(&handle, &payloads[0])?;
+            for (x, run) in payloads[0].iter().zip(&b.runs) {
+                crate::ensure!(run.y == m.spmv(x), "sharded output diverged from host oracle");
+            }
+        }
+        let mut best = f64::INFINITY;
+        for _ in 0..opts.samples {
+            let owned: Vec<Vec<Vec<f64>>> = payloads.clone();
+            let t0 = Instant::now();
+            let tickets: Vec<_> = owned
+                .into_iter()
+                .map(|xs| svc.submit(handle, Request::Batch { xs }))
+                .collect::<Result<_>>()?;
+            for t in tickets {
+                let resp = svc.wait(t)?.into_batch()?;
+                std::hint::black_box(&resp.runs.last().unwrap().y);
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        Ok(best)
+    };
+
+    let mut serial_walls = Vec::with_capacity(SHARD_COUNTS.len());
+    let mut threaded_walls = Vec::with_capacity(SHARD_COUNTS.len());
+    for (i, &shards) in SHARD_COUNTS.iter().enumerate() {
+        let serial = one(Engine::Serial, shards, i == 0)?;
+        let threaded = one(Engine::threaded(opts.threads), shards, false)?;
+        println!(
+            "  shards {:>2}: serial {:>8.3}s | threaded {:>8.3}s | serial 1-shard/{}-shard {:>5.2}x",
+            shards,
+            serial,
+            threaded,
+            shards,
+            serial_walls.first().copied().unwrap_or(serial) / serial.max(1e-12)
+        );
+        serial_walls.push(serial);
+        threaded_walls.push(threaded);
+    }
+
+    let j = obj(vec![
+        ("bench", s("sharded_service_scaling")),
+        ("kernel", s(&spec.name)),
+        ("rows", num(m.nrows() as f64)),
+        ("nnz", num(m.nnz() as f64)),
+        ("requests", num(opts.requests as f64)),
+        ("batch", num(opts.batch as f64)),
+        ("dpus_per_shard", num(opts.dpus_per_shard as f64)),
+        ("host_threads", num(opts.threads as f64)),
+        ("samples", num(opts.samples as f64)),
+        ("shard_counts", arr(SHARD_COUNTS.iter().map(|&c| num(c as f64)).collect())),
+        ("serial_wall_s", arr(serial_walls.iter().map(|&w| num(w)).collect())),
+        ("threaded_wall_s", arr(threaded_walls.iter().map(|&w| num(w)).collect())),
+        (
+            "serial_speedup_max_shards",
+            num(serial_walls[0] / serial_walls.last().copied().unwrap_or(1.0).max(1e-12)),
+        ),
+    ]);
+    std::fs::write(&opts.out, j.to_string() + "\n")
+        .with_context(|| format!("write {}", opts.out))?;
+    println!("wrote {}", opts.out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_shard_smoke_writes_json() {
+        let dir = std::env::temp_dir().join("sparsep_bench_shard_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_shard_test.json");
+        let opts = ShardBenchOpts {
+            rows: 300,
+            deg: 4,
+            requests: 2,
+            batch: 3,
+            dpus_per_shard: 4,
+            threads: 2,
+            samples: 1,
+            out: out.to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+        let txt = std::fs::read_to_string(&out).unwrap();
+        let j = crate::util::json::Json::parse(&txt).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("sharded_service_scaling"));
+        assert_eq!(j.get("shard_counts").as_arr().unwrap().len(), SHARD_COUNTS.len());
+        assert_eq!(j.get("serial_wall_s").as_arr().unwrap().len(), SHARD_COUNTS.len());
+        assert!(j.get("threaded_wall_s").as_arr().unwrap()[0].as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&out).ok();
+    }
+}

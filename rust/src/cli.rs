@@ -7,7 +7,8 @@ use crate::baselines::cpu;
 use crate::bench_harness::figures::{self, Scale};
 use crate::coordinator::queue::DEFAULT_QUEUE_DEPTH;
 use crate::coordinator::{
-    BlockPolicy, Engine, KernelSpec, Request, ServiceBuilder, SpmvExecutor, SpmvService, Ticket,
+    BlockPolicy, Engine, KernelSpec, Request, ServiceBuilder, ShardedService,
+    ShardedServiceBuilder, ShardedTicket, SpmvExecutor, SpmvService, TenantId, TenantSpec, Ticket,
 };
 use crate::matrix::{generate, CooMatrix, CsrMatrix, DType, SpElem};
 use crate::pim::{PimConfig, PimSystem};
@@ -87,6 +88,10 @@ COMMANDS:
       [--requests R] [--batch B]  mixed request stream (spmv / batch /
       [--iters I] [--dpus N]      iterate) with all tickets in flight,
       [--kernel K] [--seed X]     wait out of order, verify every answer
+      [--shards S]                S > 0: serve through a ShardedService
+      [--tenants name:w[:q],...]  (S rank groups, --dpus per shard) with
+                                  weighted-round-robin multi-tenant
+                                  scheduling (weight w, in-flight quota q)
   exp <id> [--scale F] [--full]   regenerate an experiment:
       e1 tasklet-scaling   e2 sync-schemes    e3 dtype
       e4 block-formats     e5 1d-scaling      e6 1d-breakdown
@@ -108,6 +113,11 @@ COMMANDS:
       [--rows N] [--deg K] [--requests R] [--batch B] [--dpus N]
       [--kernel K] [--threads T] [--samples S] [--out F]
                                   wall-clock; writes BENCH_service.json
+  bench-shard                     sharded serving at 1/2/4/8 shards,
+      [--rows N] [--deg K] [--requests R] [--batch B] [--dpus N]
+      [--kernel K] [--threads T] [--samples S] [--out F]
+                                  serial + threaded wall-clock;
+                                  writes BENCH_shard.json (--dpus = per shard)
   artifacts                       list AOT artifacts + PJRT platform
   xla --rows N --deg K            SpMV through the AOT XLA path, verified
   cpu --rows N --deg K [--threads T]  measured host-CPU baseline
@@ -270,11 +280,223 @@ fn run_spec_batch<T: SpElem>(
     Ok(())
 }
 
+/// Expected host-oracle answer of one serve-demo request.
+enum ServeExpect {
+    Spmv(Vec<f64>),
+    Batch(Vec<Vec<f64>>),
+    Iterate(Vec<f64>),
+}
+
+/// The serve demo's deterministic request mix — spmv / batch / iterate
+/// round-robin (iterate degrades to spmv on non-square matrices) —
+/// each paired with its host-oracle expectation. Shared by the plain
+/// and sharded `serve` paths so the mix can never drift between them.
+fn serve_demo_requests(
+    m: &CooMatrix<f64>,
+    requests: usize,
+    batch: usize,
+    iters: usize,
+) -> Vec<(Request<f64>, ServeExpect)> {
+    let vec_for = |s: usize| -> Vec<f64> {
+        (0..m.ncols()).map(|i| ((i + 3 * s) % 9) as f64 - 4.0).collect()
+    };
+    let square = m.nrows() == m.ncols();
+    let mut out = Vec::with_capacity(requests);
+    for r in 0..requests {
+        let entry = match r % 3 {
+            0 => {
+                let x = vec_for(r);
+                let want = m.spmv(&x);
+                (Request::Spmv { x }, ServeExpect::Spmv(want))
+            }
+            1 => {
+                let xs: Vec<Vec<f64>> = (0..batch).map(|b| vec_for(r + b)).collect();
+                let want = xs.iter().map(|x| m.spmv(x)).collect();
+                (Request::Batch { xs }, ServeExpect::Batch(want))
+            }
+            _ if square => {
+                let x = vec_for(r);
+                let mut want = x.clone();
+                for _ in 0..iters {
+                    want = m.spmv(&want);
+                }
+                (Request::Iterate { x, iters }, ServeExpect::Iterate(want))
+            }
+            _ => {
+                // Non-square matrices cannot iterate; substitute an spmv.
+                let x = vec_for(r);
+                let want = m.spmv(&x);
+                (Request::Spmv { x }, ServeExpect::Spmv(want))
+            }
+        };
+        out.push(entry);
+    }
+    out
+}
+
+/// Claim the demo's tickets out of submission order (evens forward,
+/// odds backward), verify every response against its oracle, and
+/// return the per-kind counts (`[spmv, batch, iterate]`) plus the
+/// modeled simulated seconds served. Generic over the ticket type so
+/// the plain and sharded paths share one verifier.
+fn serve_claim_and_verify<TK: Copy>(
+    pending: &[(TK, ServeExpect)],
+    wait: impl Fn(TK) -> Result<crate::coordinator::Response<f64>>,
+) -> Result<([usize; 3], f64)> {
+    let mut order: Vec<usize> = (0..pending.len()).step_by(2).collect();
+    order.extend((0..pending.len()).skip(1).step_by(2).rev());
+    let mut counts = [0usize; 3];
+    let mut modeled_s = 0.0f64;
+    for idx in order {
+        let (ticket, expect) = &pending[idx];
+        match (wait(*ticket)?, expect) {
+            (crate::coordinator::Response::Spmv(r), ServeExpect::Spmv(want)) => {
+                crate::ensure!(&r.y == want, "spmv request {idx} mismatch");
+                counts[0] += 1;
+                modeled_s += r.breakdown.total_s();
+            }
+            (crate::coordinator::Response::Batch(b), ServeExpect::Batch(want)) => {
+                crate::ensure!(
+                    b.runs.iter().map(|r| &r.y).eq(want.iter()),
+                    "batch request {idx} mismatch"
+                );
+                counts[1] += 1;
+                modeled_s += b.total().total_s();
+            }
+            (crate::coordinator::Response::Iterate(it), ServeExpect::Iterate(want)) => {
+                crate::ensure!(&it.last.y == want, "iterate request {idx} mismatch");
+                counts[2] += 1;
+                modeled_s += it.total.total_s();
+            }
+            _ => bail!("response kind does not match request kind"),
+        }
+    }
+    Ok((counts, modeled_s))
+}
+
+/// `sparsep serve --shards S [--tenants spec]`: the multi-tenant
+/// sharded serving demo — one logical matrix split across S rank
+/// groups, every tenant loading its own handle (shared plan cache:
+/// equal slices plan once) and submitting a mixed request stream
+/// through the weighted-round-robin scheduler; all tickets in flight,
+/// waited out of order, every answer verified against host oracles.
+fn serve_sharded(args: &Args) -> Result<()> {
+    let mname = args.get("matrix").unwrap_or("mini-sf");
+    let m = matrix_by_name(mname, args.get_usize("seed", 7)? as u64)?;
+    let shards = args.get_usize("shards", 2)?;
+    let tenants = match args.get("tenants") {
+        Some(spec) => TenantSpec::parse_list(spec)?,
+        None => vec![TenantSpec::new("default", 1)],
+    };
+    let cfg = PimConfig {
+        n_dpus: args.get_usize("dpus", 64)?,
+        tasklets: args.get_usize("tasklets", 16)?,
+        ..Default::default()
+    };
+    let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+        .shards(shards)
+        .engine(engine_from_args(args)?)
+        .vector_block(block_policy_from_args(args)?)
+        .queue_depth(args.get_usize("queue-depth", DEFAULT_QUEUE_DEPTH)?)
+        .tenants(tenants.clone())
+        .build(PimSystem::new(cfg.clone())?)?;
+    let stripes = args.get_usize("stripes", 8)?;
+    let spec = match args.get("kernel") {
+        Some(k) => KernelSpec::by_name(k, stripes)
+            .with_context(|| format!("unknown kernel {k} (see `sparsep kernels`)"))?,
+        // Select against the per-shard system actually being served
+        // (same config serve() would use), not a default one.
+        None => crate::coordinator::adaptive::select_heuristic(&m, &cfg).spec,
+    };
+    let requests = args.get_usize("requests", 12)?;
+    let batch = args.get_usize("batch", 8)?;
+    let iters = args.get_usize("iters", 5)?;
+    println!(
+        "serve (sharded): {} ({}x{}, {} nnz) via {} on {} shard(s) x {} DPUs, tenants {:?}",
+        mname,
+        m.nrows(),
+        m.ncols(),
+        m.nnz(),
+        spec.name,
+        svc.shard_count(),
+        cfg.n_dpus,
+        svc.tenant_names()
+    );
+
+    // Every tenant loads its own handle over the same matrix — the
+    // shared plan cache makes the per-shard plans build exactly once.
+    let t_load = std::time::Instant::now();
+    let handles: Vec<(TenantId, crate::coordinator::ShardedHandle)> = tenants
+        .iter()
+        .map(|ts| {
+            let t = svc
+                .tenant(&ts.name)
+                .ok_or_else(|| crate::format_err!("tenant {:?} not registered", ts.name))?;
+            svc.load_for(t, &m, &spec).map(|h| (t, h))
+        })
+        .collect::<Result<_>>()?;
+    println!(
+        "load       : {} handle(s) after {:.3} ms ({} plan build(s) for {} shard slices)",
+        handles.len(),
+        t_load.elapsed().as_secs_f64() * 1e3,
+        svc.stats().plan_builds,
+        svc.shard_count()
+    );
+
+    let plan_reqs = serve_demo_requests(&m, requests, batch, iters);
+    let t0 = std::time::Instant::now();
+    let mut pending: Vec<(ShardedTicket, ServeExpect)> = Vec::with_capacity(requests);
+    for (r, (req, expect)) in plan_reqs.into_iter().enumerate() {
+        let (tenant, handle) = handles[r % handles.len()];
+        pending.push((svc.submit_for(tenant, handle, req)?, expect));
+    }
+    let (counts, modeled_s) = serve_claim_and_verify(&pending, |t| svc.wait(t))?;
+    let wall = t0.elapsed().as_secs_f64();
+    let st = svc.stats();
+    println!(
+        "requests   : {} ({} spmv / {} batch x{} / {} iterate x{}), all verified OK",
+        requests, counts[0], counts[1], batch, counts[2], iters
+    );
+    println!(
+        "wall       : {:.3} ms total ({:.1} req/s)",
+        wall * 1e3,
+        requests as f64 / wall.max(1e-12)
+    );
+    println!("modeled    : {:.3} ms of simulated PIM time served", modeled_s * 1e3);
+    println!(
+        "service    : {} submitted / {} completed, cache {} hit / {} miss / {} build, {} plan(s) resident",
+        st.submitted, st.completed, st.cache_hits, st.cache_misses, st.plan_builds, st.resident_plans
+    );
+    for t in &st.tenants {
+        let quota = if t.max_in_flight == usize::MAX {
+            "inf".to_string()
+        } else {
+            t.max_in_flight.to_string()
+        };
+        println!(
+            "  tenant {:<10} weight {:>2} quota {:>4}: {} submitted, {} completed",
+            t.name, t.weight, quota, t.enqueued, t.completed
+        );
+    }
+    // Tenant unload demo: evict the first tenant's handles and reclaim
+    // its plans from the shared cache.
+    let (first, _) = handles[0];
+    let (unloaded, evicted) = svc.unload_tenant(first)?;
+    println!(
+        "unload     : tenant {:?} released {} handle(s), {} plan(s) evicted from cache",
+        st.tenants[0].name, unloaded, evicted
+    );
+    Ok(())
+}
+
 /// `sparsep serve`: a deterministic demo of the serving API — load one
 /// matrix, put a mixed request stream in flight at once, wait for the
 /// tickets out of submission order, verify every answer against host
 /// oracles, and report throughput + service counters.
 fn serve(args: &Args) -> Result<()> {
+    if args.get("shards").is_some() || args.get("tenants").is_some() {
+        return serve_sharded(args);
+    }
     let mname = args.get("matrix").unwrap_or("mini-sf");
     let m = matrix_by_name(mname, args.get_usize("seed", 7)? as u64)?;
     let cfg = PimConfig {
@@ -292,7 +514,6 @@ fn serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 12)?;
     let batch = args.get_usize("batch", 8)?;
     let iters = args.get_usize("iters", 5)?;
-    let square = m.nrows() == m.ncols();
     println!(
         "serve: {} ({}x{}, {} nnz) via {} on {} DPUs, {} engine, {:?} blocks",
         mname,
@@ -310,80 +531,17 @@ fn serve(args: &Args) -> Result<()> {
     println!("load       : handle after {:.3} ms (fingerprint + plan, once)", t_load.elapsed().as_secs_f64() * 1e3);
 
     // What each ticket should answer (host oracles computed up front).
-    enum Expect {
-        Spmv(Vec<f64>),
-        Batch(Vec<Vec<f64>>),
-        Iterate(Vec<f64>),
-    }
-    let vec_for = |s: usize| -> Vec<f64> {
-        (0..m.ncols()).map(|i| ((i + 3 * s) % 9) as f64 - 4.0).collect()
-    };
-    let mut plan_reqs: Vec<(Request<f64>, Expect)> = Vec::with_capacity(requests);
-    for r in 0..requests {
-        match r % 3 {
-            0 => {
-                let x = vec_for(r);
-                plan_reqs.push((Request::Spmv { x: x.clone() }, Expect::Spmv(m.spmv(&x))));
-            }
-            1 => {
-                let xs: Vec<Vec<f64>> = (0..batch).map(|b| vec_for(r + b)).collect();
-                let want = xs.iter().map(|x| m.spmv(x)).collect();
-                plan_reqs.push((Request::Batch { xs }, Expect::Batch(want)));
-            }
-            _ if square => {
-                let x = vec_for(r);
-                let mut want = x.clone();
-                for _ in 0..iters {
-                    want = m.spmv(&want);
-                }
-                plan_reqs.push((Request::Iterate { x, iters }, Expect::Iterate(want)));
-            }
-            _ => {
-                // Non-square matrices cannot iterate; substitute an spmv.
-                let x = vec_for(r);
-                plan_reqs.push((Request::Spmv { x: x.clone() }, Expect::Spmv(m.spmv(&x))));
-            }
-        }
-    }
+    let plan_reqs = serve_demo_requests(&m, requests, batch, iters);
 
     // Submit everything, then claim tickets out of submission order
     // (evens forward, odds backward) — responses park until claimed.
     let t0 = std::time::Instant::now();
-    let mut pending: Vec<(Ticket, Expect)> = Vec::with_capacity(requests);
+    let mut pending: Vec<(Ticket, ServeExpect)> = Vec::with_capacity(requests);
     for (req, expect) in plan_reqs {
         pending.push((svc.submit(handle, req)?, expect));
     }
     let submitted_in = t0.elapsed().as_secs_f64();
-    let mut order: Vec<usize> = (0..pending.len()).step_by(2).collect();
-    order.extend((0..pending.len()).skip(1).step_by(2).rev());
-    let mut counts = [0usize; 3];
-    let mut modeled_s = 0.0f64;
-    for idx in order {
-        let (ticket, expect) = &pending[idx];
-        let resp = svc.wait(*ticket)?;
-        match (resp, expect) {
-            (crate::coordinator::Response::Spmv(r), Expect::Spmv(want)) => {
-                crate::ensure!(&r.y == want, "spmv ticket {} mismatch", ticket.id());
-                counts[0] += 1;
-                modeled_s += r.breakdown.total_s();
-            }
-            (crate::coordinator::Response::Batch(b), Expect::Batch(want)) => {
-                crate::ensure!(
-                    b.runs.iter().map(|r| &r.y).eq(want.iter()),
-                    "batch ticket {} mismatch",
-                    ticket.id()
-                );
-                counts[1] += 1;
-                modeled_s += b.total().total_s();
-            }
-            (crate::coordinator::Response::Iterate(it), Expect::Iterate(want)) => {
-                crate::ensure!(&it.last.y == want, "iterate ticket {} mismatch", ticket.id());
-                counts[2] += 1;
-                modeled_s += it.total.total_s();
-            }
-            _ => bail!("response kind does not match request kind"),
-        }
-    }
+    let (counts, modeled_s) = serve_claim_and_verify(&pending, |t| svc.wait(t))?;
     let wall = t0.elapsed().as_secs_f64();
     let st = svc.stats();
     println!(
@@ -622,6 +780,21 @@ pub fn run(args: Args) -> Result<()> {
             };
             crate::bench_harness::service::run(&opts)?;
         }
+        "bench-shard" => {
+            let d = crate::bench_harness::shard::ShardBenchOpts::default();
+            let opts = crate::bench_harness::shard::ShardBenchOpts {
+                rows: args.get_usize("rows", d.rows)?,
+                deg: args.get_usize("deg", d.deg)?,
+                requests: args.get_usize("requests", d.requests)?,
+                batch: args.get_usize("batch", d.batch)?,
+                dpus_per_shard: args.get_usize("dpus", d.dpus_per_shard)?,
+                threads: args.get_usize("threads", cpu::hw_threads())?,
+                kernel: args.get("kernel").unwrap_or(d.kernel.as_str()).to_string(),
+                samples: args.get_usize("samples", d.samples)?,
+                out: args.get("out").unwrap_or(d.out.as_str()).to_string(),
+            };
+            crate::bench_harness::shard::run(&opts)?;
+        }
         "artifacts" => {
             let r = crate::runtime::ArtifactRunner::load_default()?;
             println!("PJRT platform: {}", r.platform());
@@ -854,6 +1027,24 @@ mod tests {
         )
         .unwrap();
         run(a).unwrap();
+    }
+
+    #[test]
+    fn serve_sharded_command_smoke() {
+        let a = Args::parse(
+            ["serve", "--matrix", "mini-band", "--dpus", "8", "--shards", "3", "--requests", "7",
+             "--batch", "3", "--iters", "3", "--tenants", "alice:3,bob:1:4"]
+                .map(String::from),
+        )
+        .unwrap();
+        run(a).unwrap();
+        // A bad tenant spec is rejected.
+        let bad = Args::parse(
+            ["serve", "--matrix", "mini-band", "--shards", "2", "--tenants", "alice"]
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(bad).is_err());
     }
 
     #[test]

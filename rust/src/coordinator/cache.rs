@@ -180,6 +180,34 @@ impl<T: SpElem> PlanCache<T> {
         self.capacity
     }
 
+    /// Drop every resident plan that nothing outside the cache still
+    /// references (its `Arc` strong count is 1 — the cache's own pin),
+    /// returning how many were evicted. Counters are untouched.
+    ///
+    /// This is the handle-eviction hook for serving facades: when a
+    /// tenant unloads ([`crate::coordinator::ShardedService::unload_tenant`]),
+    /// the per-shard [`crate::coordinator::MatrixHandle`] pins drop, and
+    /// this reclaims the now-orphaned plans instead of letting them
+    /// squat in the FIFO until capacity pressure. Plans another tenant
+    /// (or an in-flight request) still holds stay resident. Sound under
+    /// concurrency: a plan whose only `Arc` lives in the locked map
+    /// cannot gain a new reference while we hold the lock.
+    pub fn evict_unreferenced(&self) -> usize {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        let before = inner.map.len();
+        let map = &mut inner.map;
+        inner.order.retain(|k| match map.get(k) {
+            Some(p) if Arc::strong_count(p) == 1 => {
+                map.remove(k);
+                false
+            }
+            Some(_) => true,
+            None => false,
+        });
+        before - map.len()
+    }
+
     /// Drop every resident plan and reset the hit/miss/build counters.
     /// In-flight builds are unaffected (they land after the clear).
     pub fn clear(&self) {
@@ -335,6 +363,29 @@ mod tests {
         let misses_before = cache.misses();
         cache.plan(&exec, &KernelSpec::coo_row(), &ms[1]).unwrap(); // B gone again
         assert_eq!(cache.misses(), misses_before + 1);
+    }
+
+    #[test]
+    fn evict_unreferenced_drops_only_orphaned_plans() {
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(4));
+        let cache: PlanCache<f64> = PlanCache::new();
+        let ma = generate::uniform::<f64>(64, 64, 3, 1);
+        let mb = generate::uniform::<f64>(64, 64, 3, 2);
+        let pa = cache.plan(&exec, &KernelSpec::coo_row(), &ma).unwrap();
+        drop(cache.plan(&exec, &KernelSpec::coo_row(), &mb).unwrap());
+        assert_eq!(cache.len(), 2);
+        // `pa` is still pinned by this test (a stand-in for a loaded
+        // handle); only `mb`'s plan is orphaned.
+        assert_eq!(cache.evict_unreferenced(), 1);
+        assert_eq!(cache.len(), 1);
+        let hits = cache.hits();
+        cache.plan(&exec, &KernelSpec::coo_row(), &ma).unwrap();
+        assert_eq!(cache.hits(), hits + 1, "pinned plan must remain resident");
+        drop(pa);
+        // Both references gone now (the re-lookup Arc was dropped too).
+        assert_eq!(cache.evict_unreferenced(), 1);
+        assert!(cache.is_empty());
+        assert_eq!(cache.evict_unreferenced(), 0);
     }
 
     #[test]

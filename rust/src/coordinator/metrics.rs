@@ -240,6 +240,63 @@ impl ServiceStats {
     }
 }
 
+/// Per-tenant scheduling counters reported by
+/// [`super::ShardedService::stats`] (one per registered tenant, in
+/// registration order).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Tenant name.
+    pub name: String,
+    /// Weighted-round-robin share (dispatches per scheduling cycle).
+    pub weight: usize,
+    /// In-flight quota (`usize::MAX` = unlimited).
+    pub max_in_flight: usize,
+    /// Requests accepted into the tenant's queue.
+    pub enqueued: u64,
+    /// Requests dispatched to the shard backends.
+    pub dispatched: u64,
+    /// Requests completed (response published).
+    pub completed: u64,
+    /// Requests currently dispatched but not completed.
+    pub in_flight: usize,
+    /// Requests still queued behind the scheduler.
+    pub queued: usize,
+}
+
+/// Facade-level counters reported by [`super::ShardedService::stats`]:
+/// scheduled-request totals plus the shared plan-cache traffic and the
+/// per-tenant scheduling counters.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardedStats {
+    /// Shard (backend service) count.
+    pub shards: usize,
+    /// Requests accepted by the facade: tickets issued by `submit` /
+    /// `submit_for` plus synchronous fast-path calls.
+    pub submitted: u64,
+    /// Requests finished: responses published (claimed or not) plus
+    /// synchronous fast-path calls.
+    pub completed: u64,
+    /// Sharded handles currently registered with the facade.
+    pub loaded_handles: usize,
+    /// Shared plan-cache lookups served from cache.
+    pub cache_hits: u64,
+    /// Shared plan-cache lookups that had to build.
+    pub cache_misses: u64,
+    /// Successful plan builds in the shared cache.
+    pub plan_builds: u64,
+    /// Plans resident in the shared cache.
+    pub resident_plans: usize,
+    /// Per-tenant scheduling counters, in registration order.
+    pub tenants: Vec<TenantStats>,
+}
+
+impl ShardedStats {
+    /// Requests submitted but not yet completed.
+    pub fn in_flight(&self) -> u64 {
+        self.submitted.saturating_sub(self.completed)
+    }
+}
+
 /// Result of an iterated SpMV (`y <- A*y`, `iters` times) over one plan:
 /// the final iteration's full [`RunResult`] plus cost totals across all
 /// iterations. Produced by [`super::SpmvExecutor::run_iterations`].

@@ -39,6 +39,15 @@
 //! fingerprint, kernel spec, system shape) with single-flight builds,
 //! so concurrent requests for an equal matrix plan exactly once.
 //!
+//! Above the single service sits the multi-rank serving tier:
+//! [`ShardedService`] ([`shard`]) splits one logical matrix's rows
+//! across `S` backend services (one per simulated rank group, sharing
+//! one plan cache), scatters each request, gathers and merges the
+//! partial responses (bit-identical outputs to the unsharded path —
+//! `tests/shard_equivalence.rs`), and admits multi-tenant traffic
+//! through a deterministic weighted-round-robin scheduler with
+//! per-tenant in-flight quotas ([`scheduler`]).
+//!
 //! The historical `SpmvExecutor::{execute, execute_batch,
 //! run_iterations, run_iterations_batch, run}` entry points remain as
 //! thin deprecated wrappers over the same one-shot execution path the
@@ -52,18 +61,24 @@ pub mod engine;
 pub mod metrics;
 pub mod plan;
 pub mod queue;
+pub mod scheduler;
 pub mod service;
+pub mod shard;
 pub mod spec;
 
 pub use cache::PlanCache;
 pub use engine::{Engine, ExecutionEngine, SerialEngine, ThreadedEngine};
 pub use metrics::{
     BatchIterationsResult, BatchResult, Breakdown, IterationsResult, RunResult, RunStats,
-    ServiceStats,
+    ServiceStats, ShardedStats, TenantStats,
 };
 pub use plan::{DpuSlice, ExecutionPlan, WorkItem};
+pub use scheduler::{FairScheduler, TenantId, TenantSpec};
 pub use service::{
     BlockPolicy, MatrixHandle, Request, Response, ServiceBuilder, SpmvService, Ticket,
+};
+pub use shard::{
+    plan_shards, ScheduleLog, ShardedHandle, ShardedService, ShardedServiceBuilder, ShardedTicket,
 };
 pub use spec::{KernelSpec, Partitioning};
 

@@ -130,7 +130,10 @@ struct MergeMsg<T: SpElem> {
 /// Ticket completion store: `submit` registers, stage 3 publishes,
 /// `wait` claims. One mutex guards both maps so a ticket can never be
 /// claimed twice or waited on after being claimed.
-struct Completions<T: SpElem> {
+///
+/// `pub(crate)` because [`super::shard::ShardedService`]'s dispatcher /
+/// gather pair reuses exactly this store for its own tickets.
+pub(crate) struct Completions<T: SpElem> {
     state: Mutex<CompState<T>>,
     ready: Condvar,
     submitted: AtomicU64,
@@ -145,7 +148,7 @@ struct CompState<T: SpElem> {
 }
 
 impl<T: SpElem> Completions<T> {
-    fn new() -> Completions<T> {
+    pub(crate) fn new() -> Completions<T> {
         Completions {
             state: Mutex::new(CompState { pending: HashSet::new(), done: HashMap::new() }),
             ready: Condvar::new(),
@@ -154,18 +157,35 @@ impl<T: SpElem> Completions<T> {
         }
     }
 
-    fn register(&self, ticket: u64) {
+    pub(crate) fn register(&self, ticket: u64) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
         self.state.lock().expect("completion store poisoned").pending.insert(ticket);
     }
 
-    fn publish(&self, ticket: u64, resp: Result<Response<T>>) {
+    pub(crate) fn publish(&self, ticket: u64, resp: Result<Response<T>>) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.state.lock().expect("completion store poisoned").done.insert(ticket, resp);
         self.ready.notify_all();
     }
 
-    fn wait(&self, ticket: u64) -> Result<Response<T>> {
+    /// Non-blocking claim: `Ok(Some)` when the response is ready,
+    /// `Ok(None)` when the ticket is registered but still in flight,
+    /// `Err` for unknown / already-claimed tickets.
+    pub(crate) fn try_claim(&self, ticket: u64) -> Result<Option<Response<T>>> {
+        let mut state = self.state.lock().expect("completion store poisoned");
+        if let Some(resp) = state.done.remove(&ticket) {
+            state.pending.remove(&ticket);
+            return resp.map(Some);
+        }
+        if state.pending.contains(&ticket) {
+            return Ok(None);
+        }
+        Err(format_err!(
+            "unknown ticket {ticket} (never submitted here, or already waited on)"
+        ))
+    }
+
+    pub(crate) fn wait(&self, ticket: u64) -> Result<Response<T>> {
         let mut state = self.state.lock().expect("completion store poisoned");
         loop {
             if let Some(resp) = state.done.remove(&ticket) {
@@ -181,10 +201,20 @@ impl<T: SpElem> Completions<T> {
         }
     }
 
+    /// Tickets registered since construction.
+    pub(crate) fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// Responses published since construction.
+    pub(crate) fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
     /// Fail every registered ticket that has no response yet (a pipeline
     /// stage died: nothing will ever publish them). Published-but-
     /// unclaimed responses are left intact for their `wait`.
-    fn fail_all_unanswered(&self, why: &str) {
+    pub(crate) fn fail_all_unanswered(&self, why: &str) {
         let mut state = self.state.lock().expect("completion store poisoned");
         let orphans: Vec<u64> = state
             .pending
@@ -204,9 +234,11 @@ impl<T: SpElem> Completions<T> {
 /// Failsafe carried by every stage thread: if the stage unwinds
 /// (panics), fail all unanswered tickets so `wait` errors loudly
 /// instead of blocking forever on a response nobody will publish.
-struct StageGuard<T: SpElem> {
-    comp: Arc<Completions<T>>,
-    stage: &'static str,
+/// (`pub(crate)`: the sharded facade's dispatcher/gather threads carry
+/// the same guard over their shared [`Completions`] store.)
+pub(crate) struct StageGuard<T: SpElem> {
+    pub(crate) comp: Arc<Completions<T>>,
+    pub(crate) stage: &'static str,
 }
 
 impl<T: SpElem> Drop for StageGuard<T> {
@@ -312,6 +344,12 @@ impl<T: SpElem> RequestQueue<T> {
     /// Block until `ticket`'s response is published, then claim it.
     pub(crate) fn wait(&self, ticket: u64) -> Result<Response<T>> {
         self.completions.wait(ticket)
+    }
+
+    /// Non-blocking poll for `ticket`'s response (see
+    /// [`Completions::try_claim`]).
+    pub(crate) fn try_wait(&self, ticket: u64) -> Result<Option<Response<T>>> {
+        self.completions.try_claim(ticket)
     }
 
     pub(crate) fn submitted(&self) -> u64 {

@@ -1,0 +1,482 @@
+//! Fair multi-tenant request scheduling — the admission layer in front
+//! of the sharded serving queue.
+//!
+//! A production SpMV service is shared: several tenants (applications,
+//! users, jobs) submit request streams against one pool of simulated
+//! PIM ranks, and the PIM benchmarking literature's first lesson about
+//! shared accelerators applies — without an explicit scheduler, a
+//! flooding tenant owns the queue and every other tenant's latency is
+//! unbounded. This module provides the deterministic core that
+//! [`super::ShardedService`] puts in front of its dispatcher:
+//!
+//! * every tenant is declared up front as a [`TenantSpec`] — a name, a
+//!   **weight** (its share of dispatch slots in weighted round-robin),
+//!   and a **quota** (`max_in_flight`: how many of its requests may
+//!   occupy the shard pipelines simultaneously);
+//! * [`FairScheduler`] keeps one FIFO queue per tenant and dispatches
+//!   by **weighted round-robin**: in each cycle tenant *t* may dispatch
+//!   up to `weight_t` requests before the cursor moves on, and a tenant
+//!   at its in-flight quota is skipped until a completion frees a slot.
+//!
+//! The scheduler is intentionally **not** thread-safe and performs no
+//! blocking: [`FairScheduler::pop`] either returns the next dispatch or
+//! `None` (nothing eligible). The service wraps it in a mutex/condvar
+//! pair; tests drive it directly, which is what makes the fairness
+//! properties *deterministic* — the dispatch order for a given enqueue
+//! history is a pure function, locked by the unit tests below and the
+//! end-to-end suite in `tests/shard_equivalence.rs`.
+//!
+//! **Starvation bound.** A tenant with queued work and free quota waits
+//! at most `sum(weight_other)` dispatches between two of its own: each
+//! other tenant serves at most its weight per cycle before the cursor
+//! reaches the waiting tenant again. A flooding tenant therefore cannot
+//! starve anyone — it only fills the slots its weight entitles it to.
+
+use super::metrics::TenantStats;
+use crate::util::Result;
+use std::collections::VecDeque;
+
+/// A tenant's identity within one scheduler (and the
+/// [`super::ShardedService`] that owns it). Copyable tag carried by
+/// submissions; obtained from [`FairScheduler::tenant`] /
+/// `ShardedService::tenant`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub(crate) usize);
+
+impl TenantId {
+    /// Index of this tenant in registration order.
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Declared scheduling parameters of one tenant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantSpec {
+    /// Tenant name (unique within a scheduler).
+    pub name: String,
+    /// Weighted-round-robin share: up to this many dispatches per cycle
+    /// (>= 1).
+    pub weight: usize,
+    /// In-flight quota: at most this many of the tenant's requests may
+    /// be dispatched-but-not-completed at once (>= 1).
+    pub max_in_flight: usize,
+}
+
+impl TenantSpec {
+    /// A tenant with the given weight and an effectively unlimited
+    /// in-flight quota.
+    pub fn new(name: &str, weight: usize) -> TenantSpec {
+        TenantSpec { name: name.to_string(), weight, max_in_flight: usize::MAX }
+    }
+
+    /// Set the in-flight quota.
+    pub fn with_quota(mut self, max_in_flight: usize) -> TenantSpec {
+        self.max_in_flight = max_in_flight;
+        self
+    }
+
+    /// Parse a CLI-style tenant list: comma-separated
+    /// `name:weight[:quota]` entries, e.g. `alice:3,bob:1` or
+    /// `batch:1:2,online:4:8`. Weight and quota must be >= 1.
+    pub fn parse_list(spec: &str) -> Result<Vec<TenantSpec>> {
+        let mut out = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = entry.split(':').collect();
+            crate::ensure!(
+                parts.len() == 2 || parts.len() == 3,
+                "tenant entry {entry:?} must be name:weight or name:weight:quota"
+            );
+            let weight: usize = parts[1]
+                .trim()
+                .parse()
+                .map_err(|_| crate::format_err!("tenant {entry:?}: weight must be an integer"))?;
+            let mut t = TenantSpec::new(parts[0].trim(), weight);
+            if parts.len() == 3 {
+                let quota: usize = parts[2].trim().parse().map_err(|_| {
+                    crate::format_err!("tenant {entry:?}: quota must be an integer")
+                })?;
+                t = t.with_quota(quota);
+            }
+            out.push(t);
+        }
+        crate::ensure!(!out.is_empty(), "tenant spec {spec:?} declares no tenants");
+        Ok(out)
+    }
+}
+
+struct TenantState<W> {
+    spec: TenantSpec,
+    queue: VecDeque<W>,
+    in_flight: usize,
+    enqueued: u64,
+    dispatched: u64,
+    completed: u64,
+}
+
+/// Deterministic weighted-round-robin scheduler with per-tenant
+/// in-flight quotas. Single-threaded by design; see the module docs.
+pub struct FairScheduler<W> {
+    tenants: Vec<TenantState<W>>,
+    /// Tenant whose turn it currently is.
+    cursor: usize,
+    /// Dispatches already granted to `cursor`'s current turn.
+    served_in_turn: usize,
+}
+
+impl<W> FairScheduler<W> {
+    /// Build a scheduler over the declared tenants (>= 1, unique names,
+    /// weights and quotas >= 1).
+    pub fn new(specs: Vec<TenantSpec>) -> Result<FairScheduler<W>> {
+        crate::ensure!(!specs.is_empty(), "a scheduler needs at least one tenant");
+        for (i, s) in specs.iter().enumerate() {
+            crate::ensure!(s.weight >= 1, "tenant {:?}: weight must be >= 1", s.name);
+            crate::ensure!(s.max_in_flight >= 1, "tenant {:?}: quota must be >= 1", s.name);
+            crate::ensure!(
+                !specs[..i].iter().any(|o| o.name == s.name),
+                "duplicate tenant name {:?}",
+                s.name
+            );
+        }
+        Ok(FairScheduler {
+            tenants: specs
+                .into_iter()
+                .map(|spec| TenantState {
+                    spec,
+                    queue: VecDeque::new(),
+                    in_flight: 0,
+                    enqueued: 0,
+                    dispatched: 0,
+                    completed: 0,
+                })
+                .collect(),
+            cursor: 0,
+            served_in_turn: 0,
+        })
+    }
+
+    /// Number of registered tenants.
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Look a tenant up by name.
+    pub fn tenant(&self, name: &str) -> Option<TenantId> {
+        self.tenants.iter().position(|t| t.spec.name == name).map(TenantId)
+    }
+
+    /// The tenant's declared spec.
+    pub fn spec(&self, t: TenantId) -> &TenantSpec {
+        &self.tenants[t.0].spec
+    }
+
+    /// Append `work` to the tenant's FIFO queue.
+    pub fn enqueue(&mut self, t: TenantId, work: W) {
+        let st = &mut self.tenants[t.0];
+        st.enqueued += 1;
+        st.queue.push_back(work);
+    }
+
+    /// Dispatch the next eligible request under weighted round-robin:
+    /// the cursor tenant serves until its weight for this turn is
+    /// exhausted, its queue empties, or it hits its in-flight quota;
+    /// then the turn passes on. Returns `None` when no tenant is
+    /// eligible (all queues empty or quota-blocked).
+    ///
+    /// A `pop` that dispatches nothing is **side-effect-free**: the
+    /// cursor and turn budget are restored, so fruitless polls (e.g.
+    /// spurious wakeups of a dispatcher loop) can never rotate the
+    /// schedule — the dispatch order stays a pure function of the
+    /// enqueue/complete history.
+    pub fn pop(&mut self) -> Option<(TenantId, W)> {
+        let n = self.tenants.len();
+        let (cursor_before, served_before) = (self.cursor, self.served_in_turn);
+        // Up to n advances brings the cursor full circle (with a fresh
+        // turn for the starting tenant); one more check covers it.
+        let mut advances = 0;
+        while advances <= n {
+            let t = self.cursor;
+            let st = &mut self.tenants[t];
+            if self.served_in_turn < st.spec.weight
+                && st.in_flight < st.spec.max_in_flight
+                && !st.queue.is_empty()
+            {
+                self.served_in_turn += 1;
+                st.in_flight += 1;
+                st.dispatched += 1;
+                let work = st.queue.pop_front().expect("non-empty queue");
+                return Some((TenantId(t), work));
+            }
+            self.cursor = (t + 1) % n;
+            self.served_in_turn = 0;
+            advances += 1;
+        }
+        self.cursor = cursor_before;
+        self.served_in_turn = served_before;
+        None
+    }
+
+    /// Record a dispatched request's completion, freeing one of the
+    /// tenant's in-flight quota slots.
+    pub fn complete(&mut self, t: TenantId) {
+        let st = &mut self.tenants[t.0];
+        debug_assert!(st.in_flight > 0, "completion without a dispatch");
+        st.in_flight = st.in_flight.saturating_sub(1);
+        st.completed += 1;
+    }
+
+    /// Total requests queued (not yet dispatched) across tenants.
+    pub fn queued(&self) -> usize {
+        self.tenants.iter().map(|t| t.queue.len()).sum()
+    }
+
+    /// Total dispatched-but-not-completed requests across tenants.
+    pub fn in_flight(&self) -> usize {
+        self.tenants.iter().map(|t| t.in_flight).sum()
+    }
+
+    /// Drain every queued (never-dispatched) request, in tenant order
+    /// (used at shutdown to fail their tickets loudly).
+    pub fn drain_queued(&mut self) -> Vec<(TenantId, W)> {
+        let mut out = Vec::new();
+        for (i, st) in self.tenants.iter_mut().enumerate() {
+            while let Some(w) = st.queue.pop_front() {
+                out.push((TenantId(i), w));
+            }
+        }
+        out
+    }
+
+    /// Per-tenant counters, in registration order.
+    pub fn stats(&self) -> Vec<TenantStats> {
+        self.tenants
+            .iter()
+            .map(|t| TenantStats {
+                name: t.spec.name.clone(),
+                weight: t.spec.weight,
+                max_in_flight: t.spec.max_in_flight,
+                enqueued: t.enqueued,
+                dispatched: t.dispatched,
+                completed: t.completed,
+                in_flight: t.in_flight,
+                queued: t.queue.len(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(specs: &[(&str, usize, usize)]) -> FairScheduler<usize> {
+        FairScheduler::new(
+            specs.iter().map(|&(n, w, q)| TenantSpec::new(n, w).with_quota(q)).collect(),
+        )
+        .unwrap()
+    }
+
+    /// Drain the scheduler assuming every dispatch completes before the
+    /// next pop (serialized execution): the pure WRR order.
+    fn drain_serialized(s: &mut FairScheduler<usize>) -> Vec<String> {
+        let mut order = Vec::new();
+        while let Some((t, _)) = s.pop() {
+            order.push(s.spec(t).name.clone());
+            s.complete(t);
+        }
+        order
+    }
+
+    #[test]
+    fn weighted_round_robin_order_is_deterministic() {
+        // The satellite's canonical case: two tenants at 1:3 submitting
+        // identical streams interleave exactly A B B B A B B B ...
+        let mut s = sched(&[("a", 1, usize::MAX), ("b", 3, usize::MAX)]);
+        let a = s.tenant("a").unwrap();
+        let b = s.tenant("b").unwrap();
+        for i in 0..4 {
+            s.enqueue(a, i);
+        }
+        for i in 0..12 {
+            s.enqueue(b, i);
+        }
+        let order = drain_serialized(&mut s);
+        let want: Vec<String> = (0..4)
+            .flat_map(|_| ["a", "b", "b", "b"])
+            .map(str::to_string)
+            .collect();
+        assert_eq!(order, want);
+    }
+
+    #[test]
+    fn flooding_tenant_cannot_starve_the_other() {
+        // Tenant a floods 50 requests; b has 5. With weights 1:1, b's
+        // i-th dispatch happens by global position 2*i + 1 (bounded
+        // wait), after which a drains alone.
+        let mut s = sched(&[("a", 1, usize::MAX), ("b", 1, usize::MAX)]);
+        let (a, b) = (s.tenant("a").unwrap(), s.tenant("b").unwrap());
+        for i in 0..50 {
+            s.enqueue(a, i);
+        }
+        for i in 0..5 {
+            s.enqueue(b, i);
+        }
+        let order = drain_serialized(&mut s);
+        assert_eq!(order.len(), 55);
+        let b_positions: Vec<usize> = order
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| (n == "b").then_some(i))
+            .collect();
+        assert_eq!(b_positions.len(), 5);
+        for (i, &pos) in b_positions.iter().enumerate() {
+            assert!(
+                pos <= 2 * i + 1,
+                "b's dispatch {i} waited until position {pos} (bound {})",
+                2 * i + 1
+            );
+        }
+        // The tail is all a: the flood still gets served afterwards.
+        assert!(order[10..].iter().all(|n| n == "a"));
+    }
+
+    #[test]
+    fn quota_blocks_dispatch_until_completion() {
+        let mut s = sched(&[("a", 2, 1)]);
+        let a = s.tenant("a").unwrap();
+        s.enqueue(a, 1);
+        s.enqueue(a, 2);
+        let (t, w) = s.pop().expect("first dispatch");
+        assert_eq!((t, w), (a, 1));
+        // Quota 1: nothing more until the first completes.
+        assert!(s.pop().is_none(), "quota must block the second dispatch");
+        assert_eq!(s.in_flight(), 1);
+        assert_eq!(s.queued(), 1);
+        s.complete(a);
+        assert_eq!(s.pop(), Some((a, 2)));
+        s.complete(a);
+        assert!(s.pop().is_none());
+        let st = &s.stats()[0];
+        assert_eq!((st.enqueued, st.dispatched, st.completed), (2, 2, 2));
+    }
+
+    #[test]
+    fn quota_blocked_tenant_does_not_block_others() {
+        let mut s = sched(&[("a", 3, 1), ("b", 1, usize::MAX)]);
+        let (a, b) = (s.tenant("a").unwrap(), s.tenant("b").unwrap());
+        for i in 0..3 {
+            s.enqueue(a, i);
+            s.enqueue(b, 10 + i);
+        }
+        // a dispatches once (quota 1), then b flows while a is blocked.
+        assert_eq!(s.pop(), Some((a, 0)));
+        assert_eq!(s.pop(), Some((b, 10)));
+        assert_eq!(s.pop(), Some((b, 11)));
+        assert_eq!(s.pop(), Some((b, 12)));
+        assert!(s.pop().is_none(), "a quota-blocked, b drained");
+        s.complete(a);
+        assert_eq!(s.pop(), Some((a, 1)));
+    }
+
+    #[test]
+    fn fruitless_pops_do_not_rotate_the_schedule() {
+        // A pop that dispatches nothing must be side-effect-free: any
+        // number of empty polls (spurious dispatcher wakeups) before
+        // work arrives cannot change who dispatches first or the WRR
+        // interleaving after it.
+        let mut s = sched(&[("a", 1, usize::MAX), ("b", 3, usize::MAX)]);
+        let (a, b) = (s.tenant("a").unwrap(), s.tenant("b").unwrap());
+        for _ in 0..5 {
+            assert!(s.pop().is_none());
+        }
+        for i in 0..2 {
+            s.enqueue(a, i);
+        }
+        for i in 0..6 {
+            s.enqueue(b, i);
+        }
+        let order = drain_serialized(&mut s);
+        let want: Vec<String> =
+            (0..2).flat_map(|_| ["a", "b", "b", "b"]).map(str::to_string).collect();
+        assert_eq!(order, want, "empty polls must not have rotated the cursor");
+        // Mid-stream fruitless polls are harmless too.
+        let mut s = sched(&[("a", 2, usize::MAX)]);
+        let a = s.tenant("a").unwrap();
+        s.enqueue(a, 1);
+        assert_eq!(s.pop(), Some((a, 1)));
+        assert!(s.pop().is_none());
+        assert!(s.pop().is_none());
+        s.enqueue(a, 2);
+        // Turn budget was restored: the second dispatch still fits in
+        // the same weight-2 turn.
+        assert_eq!(s.pop(), Some((a, 2)));
+        s.complete(a);
+        s.complete(a);
+    }
+
+    #[test]
+    fn single_tenant_keeps_dispatching_across_turns() {
+        // A lone tenant's weight never limits throughput: the cursor
+        // cycles back and its turn refreshes.
+        let mut s = sched(&[("only", 2, usize::MAX)]);
+        let t = s.tenant("only").unwrap();
+        for i in 0..7 {
+            s.enqueue(t, i);
+        }
+        let got: Vec<usize> = std::iter::from_fn(|| s.pop().map(|(_, w)| w)).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn empty_queue_tenants_are_skipped() {
+        let mut s = sched(&[("a", 4, usize::MAX), ("b", 4, usize::MAX), ("c", 4, usize::MAX)]);
+        let c = s.tenant("c").unwrap();
+        s.enqueue(c, 9);
+        assert_eq!(s.pop(), Some((c, 9)));
+        assert!(s.pop().is_none());
+    }
+
+    #[test]
+    fn drain_queued_returns_undispatched_work() {
+        let mut s = sched(&[("a", 1, usize::MAX), ("b", 1, usize::MAX)]);
+        let (a, b) = (s.tenant("a").unwrap(), s.tenant("b").unwrap());
+        s.enqueue(a, 1);
+        s.enqueue(b, 2);
+        s.enqueue(a, 3);
+        let _ = s.pop();
+        let rest = s.drain_queued();
+        assert_eq!(rest, vec![(a, 3), (b, 2)]);
+        assert_eq!(s.queued(), 0);
+    }
+
+    #[test]
+    fn constructor_validates() {
+        assert!(FairScheduler::<usize>::new(vec![]).is_err());
+        assert!(FairScheduler::<usize>::new(vec![TenantSpec::new("a", 0)]).is_err());
+        assert!(
+            FairScheduler::<usize>::new(vec![TenantSpec::new("a", 1).with_quota(0)]).is_err()
+        );
+        assert!(FairScheduler::<usize>::new(vec![
+            TenantSpec::new("a", 1),
+            TenantSpec::new("a", 2),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn parse_list_roundtrips() {
+        let ts = TenantSpec::parse_list("alice:3,bob:1").unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!((ts[0].name.as_str(), ts[0].weight, ts[0].max_in_flight), ("alice", 3, usize::MAX));
+        let ts = TenantSpec::parse_list("batch:1:2, online:4:8").unwrap();
+        assert_eq!((ts[1].name.as_str(), ts[1].weight, ts[1].max_in_flight), ("online", 4, 8));
+        assert!(TenantSpec::parse_list("").is_err());
+        assert!(TenantSpec::parse_list("a").is_err());
+        assert!(TenantSpec::parse_list("a:x").is_err());
+        assert!(TenantSpec::parse_list("a:1:y").is_err());
+    }
+}

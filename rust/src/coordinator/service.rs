@@ -423,6 +423,18 @@ impl<T: SpElem> SpmvService<T> {
         self.queue.wait(ticket.id)
     }
 
+    /// Non-blocking poll: claim `ticket`'s response if it is ready
+    /// (`Ok(Some)`), report "still in flight" (`Ok(None)`) otherwise.
+    /// Unknown or already-claimed tickets are an error, exactly like
+    /// [`Self::wait`]. This is the first step toward an async front
+    /// end: one host thread can drive many tickets (or many services)
+    /// by polling instead of parking a thread per response. A ticket
+    /// claimed here must not be waited on again.
+    pub fn try_wait(&self, ticket: Ticket) -> Result<Option<Response<T>>> {
+        crate::ensure!(ticket.svc == self.id, "ticket belongs to a different service");
+        self.queue.try_wait(ticket.id)
+    }
+
     /// One SpMV against the handle, on the caller's thread — the
     /// synchronous **fast path**. A blocking caller has nothing for the
     /// pipeline to overlap, so this skips the queue round trip and the
@@ -587,6 +599,65 @@ mod tests {
         let hr = svc.load(&rect, &KernelSpec::coo_row()).unwrap();
         assert!(svc.submit(hr, Request::Iterate { x: vec![0.0; 64], iters: 2 }).is_err());
         assert!(svc.submit(hr, Request::Iterate { x: vec![0.0; 64], iters: 1 }).is_ok());
+    }
+
+    #[test]
+    fn try_wait_polls_to_the_same_response_as_wait() {
+        let svc = service(8);
+        let m = generate::uniform::<f64>(96, 96, 4, 19);
+        let h = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
+        let x: Vec<f64> = (0..96).map(|i| ((i % 5) as f64) - 2.0).collect();
+        // Two identical requests: one claimed by blocking wait, one by
+        // polling; the responses must be bit-identical.
+        let t_wait = svc.submit(h, Request::Spmv { x: x.clone() }).unwrap();
+        let t_poll = svc.submit(h, Request::Spmv { x: x.clone() }).unwrap();
+        let gold = svc.wait(t_wait).unwrap().into_spmv().unwrap();
+        let polled = loop {
+            match svc.try_wait(t_poll).unwrap() {
+                Some(resp) => break resp.into_spmv().unwrap(),
+                None => std::thread::yield_now(),
+            }
+        };
+        assert_eq!(polled.y, gold.y);
+        assert_eq!(polled.breakdown, gold.breakdown);
+        assert_eq!(polled.stats, gold.stats);
+        assert_eq!(polled.energy, gold.energy);
+        // The poll claimed the ticket: both further polls and waits err.
+        assert!(svc.try_wait(t_poll).is_err());
+        assert!(svc.wait(t_poll).is_err());
+        // Foreign tickets are rejected up front.
+        let other = service(8);
+        assert!(other.try_wait(t_wait).is_err());
+    }
+
+    #[test]
+    fn try_wait_reports_in_flight_without_claiming() {
+        // Deep iterate request: the first poll(s) race the pipeline, so
+        // Ok(None) must leave the ticket claimable.
+        let svc = service(4);
+        let m = generate::uniform::<f64>(64, 64, 4, 23);
+        let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+        let x = vec![1.0f64; 64];
+        let t = svc.submit(h, Request::Iterate { x: x.clone(), iters: 8 }).unwrap();
+        let mut polls = 0usize;
+        let resp = loop {
+            match svc.try_wait(t).unwrap() {
+                Some(resp) => break resp,
+                None => {
+                    polls += 1;
+                    std::thread::yield_now();
+                }
+            }
+        };
+        let it = resp.into_iterations().unwrap();
+        let mut want = x;
+        for _ in 0..8 {
+            want = m.spmv(&want);
+        }
+        assert_eq!(it.last.y, want);
+        // polls is timing-dependent (>= 0); the point is no poll lost
+        // the ticket before the response landed.
+        let _ = polls;
     }
 
     #[test]

@@ -1,0 +1,1295 @@
+//! `ShardedService` — multi-tenant serving over several simulated PIM
+//! rank groups.
+//!
+//! SparseP's multi-rank experiments show where the real scaling
+//! headroom lives: one logical matrix spread across *independent* PIM
+//! ranks, each rank transferring and computing in parallel, with the
+//! host balancing load across them. A single [`super::SpmvService`]
+//! models one rank group; this module composes `S` of them behind one
+//! facade:
+//!
+//! * **Shard planning** ([`plan_shards`]) splits the matrix's rows into
+//!   `S` contiguous, nnz-balanced, never-empty ranges (reusing the
+//!   [`crate::partition::balance`] primitives — the same weighted
+//!   splitting the 1D partitioners use across DPUs, applied one level
+//!   up, across rank groups). Every row and every non-zero lands in
+//!   exactly one shard, and the ranges tile `[0, nrows)` — properties
+//!   locked by `tests/proptest_shard.rs`.
+//! * **Scatter/gather**: a [`Request::Spmv`] fans one sub-SpMV per
+//!   shard (row sharding keeps the full column space, so each shard
+//!   reads the whole input vector — the 1D broadcast, one level up);
+//!   a [`Request::Batch`] fans one sub-batch per shard; gather
+//!   concatenates the per-shard output segments in shard (row) order
+//!   and folds the metrics (see *merged metrics* below).
+//!   [`Request::Iterate`] keeps its feedback loop **across** shards:
+//!   each iteration gathers the full output vector and scatters it back
+//!   as the next iteration's input, because every shard's slice reads
+//!   columns other shards produced.
+//! * **Fair scheduling**: submissions carry a [`TenantId`]; a
+//!   deterministic weighted-round-robin scheduler with per-tenant
+//!   in-flight quotas ([`super::scheduler`]) sits between `submit` and
+//!   the dispatcher, so a flooding tenant cannot starve the others.
+//! * **Handle eviction**: handles are owned by tenants;
+//!   [`ShardedService::unload_tenant`] drops every per-shard plan pin
+//!   the tenant held and reclaims orphaned plans from the shared
+//!   [`PlanCache`] ([`PlanCache::evict_unreferenced`]).
+//!
+//! All `S` backends share one [`PlanCache`]
+//! (via [`super::ServiceBuilder::build_with_cache`]): equal shard
+//! slices (e.g. two tenants loading the same matrix) plan once.
+//!
+//! ## Determinism and the differential harness
+//!
+//! The sharded path must *buy scale, not drift*. Two contracts, locked
+//! by `tests/shard_equivalence.rs`:
+//!
+//! 1. **Output equivalence**: the gathered output vector is
+//!    bit-identical to serving the whole matrix through a single
+//!    unsharded [`super::SpmvService`] with the same per-rank system —
+//!    for all 25 kernels, both engines, every request kind, any shard
+//!    count. (Rows never span shards, and the generators' integer-exact
+//!    values make even the element-granular and 2D kernels' partial-sum
+//!    regroupings exact.)
+//! 2. **`S = 1` degeneration**: with one shard, every response — output
+//!    vector, breakdown, stats, energy — is bit-identical to the plain
+//!    service, because the single "shard" is the whole matrix and the
+//!    metric fold over one part is the identity.
+//!
+//! **Merged metrics** model `S` rank groups operating concurrently:
+//! per-phase times (`load`/`kernel`/`retrieve`/`merge`), the one-time
+//! matrix placement and the DPU imbalance take the **max** across
+//! shards (the critical path / worst rank group); bus bytes, DPU count,
+//! nnz and energy **sum** (they are additive resources). Iterate totals
+//! accumulate the merged per-iteration breakdowns in iteration order,
+//! exactly like the single-service accumulator.
+
+use super::cache::PlanCache;
+use super::queue::{Completions, StageGuard, DEFAULT_QUEUE_DEPTH};
+use super::scheduler::{FairScheduler, TenantId, TenantSpec};
+use super::service::{BlockPolicy, MatrixHandle, Request, Response, ServiceBuilder, SpmvService, Ticket};
+use super::spec::KernelSpec;
+use super::{
+    BatchResult, Breakdown, Engine, IterationsResult, RunResult, ShardedStats,
+};
+use crate::format_err;
+use crate::matrix::{CooMatrix, SpElem};
+use crate::partition::balance::split_weighted;
+use crate::pim::{Energy, PimSystem};
+use crate::util::Result;
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Distinguishes sharded services within a process (handles and tickets
+/// from one facade are rejected by another).
+static NEXT_SHARDED_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Split `m`'s rows into (at most) `shards` contiguous ranges, balanced
+/// by non-zeros at row granularity — the across-rank-group analogue of
+/// the 1D `*.nnz` partitioning. Guarantees, for any input:
+///
+/// * the returned ranges tile `[0, nrows)` in order (every row in
+///   exactly one shard, hence every stored non-zero in exactly one
+///   shard);
+/// * no range is empty: the effective shard count is
+///   `min(shards, nrows)` (and a 0-row matrix yields one `0..0` shard).
+pub fn plan_shards<T: SpElem>(m: &CooMatrix<T>, shards: usize) -> Vec<Range<usize>> {
+    let nrows = m.nrows();
+    if nrows == 0 {
+        return vec![0..0];
+    }
+    let s = shards.max(1).min(nrows);
+    if s == 1 {
+        return vec![0..nrows];
+    }
+    let raw = split_weighted(&m.row_counts(), s);
+    // `split_weighted` balances weight but may emit empty ranges on
+    // degenerate distributions (e.g. all the weight in the last row).
+    // Re-derive boundaries with a forward pass that forces every shard
+    // to own >= 1 row while staying as close to the balanced cut as the
+    // remaining row budget allows.
+    let mut b: Vec<usize> = Vec::with_capacity(s + 1);
+    b.push(0);
+    for r in &raw {
+        b.push(r.end);
+    }
+    for i in 1..=s {
+        let lo = b[i - 1] + 1;
+        let hi = nrows - (s - i);
+        b[i] = b[i].clamp(lo, hi);
+    }
+    (0..s).map(|i| b[i]..b[i + 1]).collect()
+}
+
+/// A matrix registered with one [`ShardedService`]: cheap to copy,
+/// valid until [`ShardedService::unload`] / `unload_tenant` (or the
+/// facade drops). Behind it sit one per-shard [`MatrixHandle`] and plan
+/// per rank group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ShardedHandle {
+    svc: u64,
+    id: u64,
+    nrows: usize,
+    ncols: usize,
+}
+
+impl ShardedHandle {
+    /// Rows of the registered (whole) matrix.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Columns of the registered (whole) matrix.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+}
+
+/// A submitted sharded request's claim check (copyable; see
+/// [`ShardedService::wait`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ShardedTicket {
+    svc: u64,
+    id: u64,
+}
+
+impl ShardedTicket {
+    /// Monotonic per-facade ticket number (submission order).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// What one registered matrix looks like to the facade: the per-shard
+/// handles (index i belongs to backend i), the row ranges they cover,
+/// and the owning tenant.
+struct ShardEntry {
+    handles: Vec<MatrixHandle>,
+    ranges: Vec<Range<usize>>,
+    nrows: usize,
+    ncols: usize,
+    owner: TenantId,
+}
+
+/// One scheduled-but-not-dispatched request.
+struct DispatchJob<T: SpElem> {
+    ticket: u64,
+    entry: Arc<ShardEntry>,
+    req: Request<T>,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum GatherKind {
+    Spmv,
+    Batch,
+    Iterate,
+}
+
+/// Dispatcher -> gather hand-off: the sub-tickets of one facade
+/// request, to be waited, merged and published in dispatch order.
+struct GatherItem {
+    ticket: u64,
+    tenant: TenantId,
+    entry: Arc<ShardEntry>,
+    kind: GatherKind,
+    subtickets: Vec<Ticket>,
+    iters: usize,
+}
+
+/// Recorded dispatch/completion order (enable with
+/// [`ShardedServiceBuilder::record_schedule`]); the deterministic
+/// fairness tests read it back via [`ShardedService::schedule_log`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ScheduleLog {
+    /// Tenant of each dispatched request, in dispatch order.
+    pub dispatched: Vec<TenantId>,
+    /// Tenant of each completed request, in completion (publish) order.
+    pub completed: Vec<TenantId>,
+}
+
+struct SchedState<T: SpElem> {
+    fair: FairScheduler<DispatchJob<T>>,
+    paused: bool,
+    shutdown: bool,
+    log: Option<ScheduleLog>,
+}
+
+struct Sched<T: SpElem> {
+    state: Mutex<SchedState<T>>,
+    /// Signaled on enqueue, completion, resume and shutdown.
+    ready: Condvar,
+}
+
+impl<T: SpElem> Sched<T> {
+    fn lock(&self) -> std::sync::MutexGuard<'_, SchedState<T>> {
+        self.state.lock().expect("sharded scheduler poisoned")
+    }
+
+    /// Record a facade request's completion: free its tenant's quota
+    /// slot, log it, and wake the dispatcher.
+    fn complete(&self, tenant: TenantId) {
+        let mut st = self.lock();
+        if let Some(log) = st.log.as_mut() {
+            log.completed.push(tenant);
+        }
+        st.fair.complete(tenant);
+        drop(st);
+        self.ready.notify_all();
+    }
+}
+
+/// Configuration for [`ShardedService`] (see
+/// [`ShardedService::builder`]).
+#[derive(Clone, Debug)]
+pub struct ShardedServiceBuilder {
+    shards: usize,
+    engine: Engine,
+    cache_capacity: usize,
+    queue_depth: usize,
+    block_policy: BlockPolicy,
+    tenants: Vec<TenantSpec>,
+    record_schedule: bool,
+    start_paused: bool,
+}
+
+impl ShardedServiceBuilder {
+    /// Defaults: 2 shards, serial engine, default cache/queue/block
+    /// settings, one `"default"` tenant (weight 1, unlimited quota).
+    pub fn new() -> ShardedServiceBuilder {
+        ShardedServiceBuilder {
+            shards: 2,
+            engine: Engine::Serial,
+            cache_capacity: super::cache::DEFAULT_PLAN_CACHE_CAPACITY,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            block_policy: BlockPolicy::Adaptive,
+            tenants: Vec::new(),
+            record_schedule: false,
+            start_paused: false,
+        }
+    }
+
+    /// Number of shard backends (simulated rank groups), clamped to
+    /// >= 1. Matrices with fewer rows than shards use fewer shards.
+    pub fn shards(mut self, shards: usize) -> ShardedServiceBuilder {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Execution engine for every backend (never affects results).
+    pub fn engine(mut self, engine: Engine) -> ShardedServiceBuilder {
+        self.engine = engine;
+        self
+    }
+
+    /// Shorthand for `engine(Engine::threaded(threads))`.
+    pub fn threads(mut self, threads: usize) -> ShardedServiceBuilder {
+        self.engine = Engine::threaded(threads);
+        self
+    }
+
+    /// Shared plan-cache capacity (plans, across all shards).
+    pub fn cache_capacity(mut self, capacity: usize) -> ShardedServiceBuilder {
+        self.cache_capacity = capacity;
+        self
+    }
+
+    /// Per-backend intake-queue depth.
+    pub fn queue_depth(mut self, depth: usize) -> ShardedServiceBuilder {
+        self.queue_depth = depth;
+        self
+    }
+
+    /// Vector-block policy for batched requests (per backend).
+    pub fn vector_block(mut self, policy: BlockPolicy) -> ShardedServiceBuilder {
+        self.block_policy = policy;
+        self
+    }
+
+    /// Declare the tenants (replaces any previous declaration). Without
+    /// a declaration the facade runs a single `"default"` tenant.
+    pub fn tenants(mut self, tenants: Vec<TenantSpec>) -> ShardedServiceBuilder {
+        self.tenants = tenants;
+        self
+    }
+
+    /// Record the dispatch/completion schedule (see
+    /// [`ShardedService::schedule_log`]). Off by default — the log
+    /// grows with every request.
+    pub fn record_schedule(mut self, record: bool) -> ShardedServiceBuilder {
+        self.record_schedule = record;
+        self
+    }
+
+    /// Start with the scheduler paused: submissions queue behind the
+    /// scheduler until [`ShardedService::resume`]. This is what makes
+    /// the fairness tests deterministic — enqueue everything, then let
+    /// weighted round-robin order the dispatches.
+    pub fn start_paused(mut self, paused: bool) -> ShardedServiceBuilder {
+        self.start_paused = paused;
+        self
+    }
+
+    /// Build the facade: `shards` backends over clones of
+    /// `per_shard_sys` (one simulated rank group each), sharing a fresh
+    /// plan cache.
+    pub fn build<T: SpElem>(self, per_shard_sys: PimSystem) -> Result<ShardedService<T>> {
+        let cache = Arc::new(PlanCache::with_capacity(self.cache_capacity));
+        self.build_with_cache(per_shard_sys, cache)
+    }
+
+    /// Build the facade over an externally shared plan cache (several
+    /// facades — or a facade plus plain services — then plan equal
+    /// content exactly once between them).
+    pub fn build_with_cache<T: SpElem>(
+        self,
+        per_shard_sys: PimSystem,
+        cache: Arc<PlanCache<T>>,
+    ) -> Result<ShardedService<T>> {
+        let mut backends = Vec::with_capacity(self.shards);
+        for _ in 0..self.shards {
+            backends.push(
+                ServiceBuilder::new()
+                    .engine(self.engine)
+                    .queue_depth(self.queue_depth)
+                    .vector_block(self.block_policy)
+                    .build_with_cache(per_shard_sys.clone(), Arc::clone(&cache))?,
+            );
+        }
+        let tenants = if self.tenants.is_empty() {
+            vec![TenantSpec::new("default", 1)]
+        } else {
+            self.tenants
+        };
+        let tenant_names: Vec<String> = tenants.iter().map(|t| t.name.clone()).collect();
+        let fair = FairScheduler::new(tenants)?;
+
+        let shards = Arc::new(backends);
+        let completions = Arc::new(Completions::new());
+        let sched = Arc::new(Sched {
+            state: Mutex::new(SchedState {
+                fair,
+                paused: self.start_paused,
+                shutdown: false,
+                log: self.record_schedule.then(ScheduleLog::default),
+            }),
+            ready: Condvar::new(),
+        });
+        let (tx, rx) = channel::<GatherItem>();
+
+        let (d_shards, d_sched, d_comp) =
+            (Arc::clone(&shards), Arc::clone(&sched), Arc::clone(&completions));
+        let h_dispatch = std::thread::Builder::new()
+            .name("spmv-shard-dispatch".into())
+            .spawn(move || {
+                let _failsafe =
+                    StageGuard { comp: Arc::clone(&d_comp), stage: "shard dispatch" };
+                run_dispatcher(d_shards, d_sched, d_comp, tx)
+            })
+            .expect("spawn sharded dispatch thread");
+        let (g_shards, g_sched, g_comp) =
+            (Arc::clone(&shards), Arc::clone(&sched), Arc::clone(&completions));
+        let h_gather = std::thread::Builder::new()
+            .name("spmv-shard-gather".into())
+            .spawn(move || {
+                let _failsafe =
+                    StageGuard { comp: Arc::clone(&g_comp), stage: "shard gather" };
+                run_gather(g_shards, g_sched, g_comp, rx)
+            })
+            .expect("spawn sharded gather thread");
+
+        Ok(ShardedService {
+            id: NEXT_SHARDED_ID.fetch_add(1, Ordering::Relaxed),
+            shards,
+            cache,
+            registry: Mutex::new(HashMap::new()),
+            next_handle: AtomicU64::new(1),
+            next_ticket: AtomicU64::new(1),
+            sync_served: AtomicU64::new(0),
+            tenant_names,
+            completions,
+            sched,
+            threads: vec![h_dispatch, h_gather],
+        })
+    }
+}
+
+impl Default for ShardedServiceBuilder {
+    fn default() -> ShardedServiceBuilder {
+        ShardedServiceBuilder::new()
+    }
+}
+
+/// A multi-tenant serving facade over `S` shard backends (one
+/// [`SpmvService`] per simulated rank group). `Sync`: many host threads
+/// may `load` / `submit` / `wait` concurrently; a dispatcher thread
+/// orders admissions through the fair scheduler and a gather thread
+/// merges per-shard partial responses in dispatch order.
+///
+/// ```
+/// use sparsep::coordinator::{KernelSpec, Request, ShardedServiceBuilder};
+/// use sparsep::matrix::generate;
+/// use sparsep::pim::PimSystem;
+///
+/// let svc = ShardedServiceBuilder::new()
+///     .shards(3)
+///     .build::<f64>(PimSystem::with_dpus(4))
+///     .unwrap();
+/// let m = generate::uniform::<f64>(60, 60, 4, 7);
+/// let h = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
+///
+/// // Two tickets in flight, claimed out of submission order; the
+/// // gathered outputs match the host oracle exactly.
+/// let t1 = svc.submit(h, Request::Spmv { x: vec![1.0; 60] }).unwrap();
+/// let t2 = svc.submit(h, Request::Batch { xs: vec![vec![2.0; 60]; 2] }).unwrap();
+/// let batch = svc.wait(t2).unwrap().into_batch().unwrap();
+/// let run = svc.wait(t1).unwrap().into_spmv().unwrap();
+/// assert_eq!(run.y, m.spmv(&vec![1.0; 60]));
+/// assert_eq!(batch.runs[1].y, m.spmv(&vec![2.0; 60]));
+/// ```
+pub struct ShardedService<T: SpElem> {
+    id: u64,
+    shards: Arc<Vec<SpmvService<T>>>,
+    cache: Arc<PlanCache<T>>,
+    registry: Mutex<HashMap<u64, Arc<ShardEntry>>>,
+    next_handle: AtomicU64,
+    next_ticket: AtomicU64,
+    /// Requests served on the synchronous fast path.
+    sync_served: AtomicU64,
+    tenant_names: Vec<String>,
+    completions: Arc<Completions<T>>,
+    sched: Arc<Sched<T>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl<T: SpElem> ShardedService<T> {
+    /// Start configuring a sharded service.
+    pub fn builder() -> ShardedServiceBuilder {
+        ShardedServiceBuilder::new()
+    }
+
+    /// Number of shard backends.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The default tenant (always registered first).
+    pub fn default_tenant(&self) -> TenantId {
+        TenantId(0)
+    }
+
+    /// Look a tenant up by name.
+    pub fn tenant(&self, name: &str) -> Option<TenantId> {
+        self.tenant_names.iter().position(|n| n == name).map(TenantId)
+    }
+
+    /// Registered tenant names, in registration (scheduling) order.
+    pub fn tenant_names(&self) -> &[String] {
+        &self.tenant_names
+    }
+
+    fn check_tenant(&self, tenant: TenantId) -> Result<()> {
+        crate::ensure!(
+            tenant.index() < self.tenant_names.len(),
+            "tenant id {} is not registered with this service",
+            tenant.index()
+        );
+        Ok(())
+    }
+
+    /// Register `m` for the default tenant (see [`Self::load_for`]).
+    pub fn load(&self, m: &CooMatrix<T>, spec: &KernelSpec) -> Result<ShardedHandle> {
+        self.load_for(self.default_tenant(), m, spec)
+    }
+
+    /// Register `m` under `spec` for `tenant`: plan the row shards
+    /// ([`plan_shards`]), load one slice per shard backend (through the
+    /// shared plan cache — equal slices plan once), and pin them behind
+    /// one facade handle owned by the tenant.
+    pub fn load_for(
+        &self,
+        tenant: TenantId,
+        m: &CooMatrix<T>,
+        spec: &KernelSpec,
+    ) -> Result<ShardedHandle> {
+        self.check_tenant(tenant)?;
+        let ranges = plan_shards(m, self.shards.len());
+        let mut handles = Vec::with_capacity(ranges.len());
+        for (svc, r) in self.shards.iter().zip(&ranges) {
+            let slice = m.row_range_slice(r.start, r.end);
+            match svc.load(&slice, spec) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Roll back the shards already pinned.
+                    for (svc2, h) in self.shards.iter().zip(handles) {
+                        svc2.unload(h);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let handle = ShardedHandle {
+            svc: self.id,
+            id: self.next_handle.fetch_add(1, Ordering::Relaxed),
+            nrows: m.nrows(),
+            ncols: m.ncols(),
+        };
+        let entry = Arc::new(ShardEntry {
+            handles,
+            ranges,
+            nrows: m.nrows(),
+            ncols: m.ncols(),
+            owner: tenant,
+        });
+        self.registry.lock().expect("shard registry poisoned").insert(handle.id, entry);
+        Ok(handle)
+    }
+
+    /// The row ranges `handle`'s shards cover, in shard order
+    /// (diagnostics and the shard-planning property tests).
+    pub fn shard_ranges(&self, handle: &ShardedHandle) -> Result<Vec<Range<usize>>> {
+        Ok(self.entry_for(handle)?.ranges.clone())
+    }
+
+    /// Drop a handle's per-shard plan pins. Returns whether the handle
+    /// was loaded. (Plans may stay resident in the shared cache; see
+    /// [`Self::unload_tenant`] for reclamation.)
+    ///
+    /// Unloading races loudly, never silently: requests still queued
+    /// behind the scheduler fail at dispatch, and an in-flight
+    /// [`Request::Iterate`] whose later iterations re-scatter through
+    /// the backend handles fails at its next iteration boundary. (This
+    /// is stricter than the unsharded [`SpmvService`], whose pipeline
+    /// pins the plan at dispatch — already-dispatched sharded spmv and
+    /// batch sub-requests are likewise unaffected.)
+    pub fn unload(&self, handle: ShardedHandle) -> bool {
+        if handle.svc != self.id {
+            return false;
+        }
+        let entry = self.registry.lock().expect("shard registry poisoned").remove(&handle.id);
+        match entry {
+            None => false,
+            Some(e) => {
+                for (svc, h) in self.shards.iter().zip(&e.handles) {
+                    svc.unload(*h);
+                }
+                true
+            }
+        }
+    }
+
+    /// Evict everything `tenant` has loaded: drop all its handles'
+    /// per-shard plan pins, then reclaim now-unreferenced plans from
+    /// the shared cache. Returns `(handles_unloaded, plans_evicted)`.
+    /// Requests of the tenant still queued behind the scheduler will
+    /// fail at dispatch with an unknown-handle error, and in-flight
+    /// iterates at their next iteration boundary (loudly, not
+    /// silently; see [`Self::unload`]).
+    pub fn unload_tenant(&self, tenant: TenantId) -> Result<(usize, usize)> {
+        self.check_tenant(tenant)?;
+        let victims: Vec<Arc<ShardEntry>> = {
+            let mut reg = self.registry.lock().expect("shard registry poisoned");
+            let ids: Vec<u64> = reg
+                .iter()
+                .filter(|(_, e)| e.owner == tenant)
+                .map(|(id, _)| *id)
+                .collect();
+            ids.into_iter().map(|id| reg.remove(&id).expect("registry id")).collect()
+        };
+        for e in &victims {
+            for (svc, h) in self.shards.iter().zip(&e.handles) {
+                svc.unload(*h);
+            }
+        }
+        let evicted = self.cache.evict_unreferenced();
+        Ok((victims.len(), evicted))
+    }
+
+    /// Submit for the default tenant (see [`Self::submit_for`]).
+    pub fn submit(&self, handle: ShardedHandle, req: Request<T>) -> Result<ShardedTicket> {
+        self.submit_for(self.default_tenant(), handle, req)
+    }
+
+    /// Enqueue `req` against `handle` on behalf of `tenant`. Shapes are
+    /// validated up front; the request then queues behind the fair
+    /// scheduler (weighted round-robin across tenants, per-tenant
+    /// in-flight quotas) until the dispatcher scatters it across the
+    /// shard backends. Returns immediately with the claim ticket.
+    pub fn submit_for(
+        &self,
+        tenant: TenantId,
+        handle: ShardedHandle,
+        req: Request<T>,
+    ) -> Result<ShardedTicket> {
+        self.check_tenant(tenant)?;
+        let entry = self.entry_for(&handle)?;
+        let check_len = |x: &Vec<T>, what: &str| {
+            crate::ensure!(
+                x.len() == entry.ncols,
+                "{what} length {} != ncols {}",
+                x.len(),
+                entry.ncols
+            );
+            Ok(())
+        };
+        let mut empty_batch = false;
+        match &req {
+            Request::Spmv { x } => check_len(x, "x")?,
+            Request::Batch { xs } => {
+                for (i, x) in xs.iter().enumerate() {
+                    check_len(x, &format!("xs[{i}]"))?;
+                }
+                empty_batch = xs.is_empty();
+            }
+            Request::Iterate { x, iters } => {
+                check_len(x, "x")?;
+                crate::ensure!(*iters >= 1, "Request::Iterate needs iters >= 1");
+                crate::ensure!(
+                    *iters == 1 || entry.nrows == entry.ncols,
+                    "iterated SpMV needs a square matrix, got {}x{}",
+                    entry.nrows,
+                    entry.ncols
+                );
+            }
+        }
+        let ticket =
+            ShardedTicket { svc: self.id, id: self.next_ticket.fetch_add(1, Ordering::Relaxed) };
+        self.completions.register(ticket.id);
+        if empty_batch {
+            // Nothing to scatter: resolve now, skipping the scheduler.
+            self.completions
+                .publish(ticket.id, Ok(Response::Batch(BatchResult { runs: Vec::new() })));
+            return Ok(ticket);
+        }
+        {
+            let mut st = self.sched.lock();
+            if st.shutdown {
+                // Unreachable in practice (drop takes &mut self), kept
+                // as a loud failure instead of a lost ticket.
+                self.completions
+                    .publish(ticket.id, Err(format_err!("sharded service is shut down")));
+                return Ok(ticket);
+            }
+            st.fair.enqueue(tenant, DispatchJob { ticket: ticket.id, entry, req });
+        }
+        self.sched.ready.notify_all();
+        Ok(ticket)
+    }
+
+    /// Block until `ticket`'s merged response is ready and claim it.
+    /// Tickets complete out of order; waiting twice (or on a foreign
+    /// ticket) is an error, not a hang.
+    pub fn wait(&self, ticket: ShardedTicket) -> Result<Response<T>> {
+        crate::ensure!(ticket.svc == self.id, "ticket belongs to a different service");
+        self.completions.wait(ticket.id)
+    }
+
+    /// Non-blocking poll: like [`SpmvService::try_wait`], for sharded
+    /// tickets.
+    pub fn try_wait(&self, ticket: ShardedTicket) -> Result<Option<Response<T>>> {
+        crate::ensure!(ticket.svc == self.id, "ticket belongs to a different service");
+        self.completions.try_claim(ticket.id)
+    }
+
+    /// One SpMV on the caller's thread — the synchronous fast path
+    /// (bypasses the scheduler, like [`SpmvService::spmv`] bypasses the
+    /// request queue). Sub-requests still pipeline across all shards
+    /// concurrently. Bit-identical to `wait(submit(Request::Spmv))`.
+    pub fn spmv(&self, handle: &ShardedHandle, x: &[T]) -> Result<RunResult<T>> {
+        let entry = self.entry_for(handle)?;
+        crate::ensure!(x.len() == entry.ncols, "x length {} != ncols {}", x.len(), entry.ncols);
+        self.sync_served.fetch_add(1, Ordering::Relaxed);
+        let ts = submit_spmv_all(&self.shards, &entry, x)?;
+        Ok(merge_shard_runs(wait_all_spmv(&self.shards, &ts)?))
+    }
+
+    /// One batched request on the caller's thread (synchronous fast
+    /// path; see [`Self::spmv`]).
+    pub fn spmv_batch(&self, handle: &ShardedHandle, xs: &[Vec<T>]) -> Result<BatchResult<T>> {
+        let entry = self.entry_for(handle)?;
+        for (i, x) in xs.iter().enumerate() {
+            crate::ensure!(
+                x.len() == entry.ncols,
+                "xs[{i}] length {} != ncols {}",
+                x.len(),
+                entry.ncols
+            );
+        }
+        self.sync_served.fetch_add(1, Ordering::Relaxed);
+        if xs.is_empty() {
+            return Ok(BatchResult { runs: Vec::new() });
+        }
+        let ts = submit_batch_all(&self.shards, &entry, xs)?;
+        Ok(merge_shard_batches(wait_all_batch(&self.shards, &ts)?))
+    }
+
+    /// One iterated request on the caller's thread (synchronous fast
+    /// path; see [`Self::spmv`]). The iterate feedback loop runs across
+    /// shards: each iteration gathers the full output and scatters it
+    /// back as the next input.
+    pub fn iterate(
+        &self,
+        handle: &ShardedHandle,
+        x: &[T],
+        iters: usize,
+    ) -> Result<IterationsResult<T>> {
+        let entry = self.entry_for(handle)?;
+        crate::ensure!(x.len() == entry.ncols, "x length {} != ncols {}", x.len(), entry.ncols);
+        crate::ensure!(iters >= 1, "iterate needs iters >= 1");
+        crate::ensure!(
+            iters == 1 || entry.nrows == entry.ncols,
+            "iterated SpMV needs a square matrix, got {}x{}",
+            entry.nrows,
+            entry.ncols
+        );
+        self.sync_served.fetch_add(1, Ordering::Relaxed);
+        let ts = submit_spmv_all(&self.shards, &entry, x)?;
+        match gather_iterate(&self.shards, &entry, ts, iters)? {
+            Response::Iterate(it) => Ok(it),
+            other => Err(format_err!("internal: iterate gathered a {} response", other.kind())),
+        }
+    }
+
+    /// Pause dispatching: already-dispatched requests finish, new and
+    /// queued ones hold behind the scheduler until [`Self::resume`].
+    pub fn pause(&self) {
+        self.sched.lock().paused = true;
+    }
+
+    /// Resume dispatching (see [`Self::pause`] and
+    /// [`ShardedServiceBuilder::start_paused`]).
+    pub fn resume(&self) {
+        self.sched.lock().paused = false;
+        self.sched.ready.notify_all();
+    }
+
+    /// The recorded dispatch/completion schedule, if
+    /// [`ShardedServiceBuilder::record_schedule`] was enabled.
+    pub fn schedule_log(&self) -> Option<ScheduleLog> {
+        self.sched.lock().log.clone()
+    }
+
+    /// Facade-level counters: scheduled + fast-path requests, the
+    /// shared plan-cache traffic, and per-tenant scheduling counters.
+    pub fn stats(&self) -> ShardedStats {
+        let sync = self.sync_served.load(Ordering::Relaxed);
+        let tenants = self.sched.lock().fair.stats();
+        ShardedStats {
+            shards: self.shards.len(),
+            submitted: self.completions.submitted() + sync,
+            completed: self.completions.completed() + sync,
+            loaded_handles: self.registry.lock().expect("shard registry poisoned").len(),
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            plan_builds: self.cache.builds(),
+            resident_plans: self.cache.len(),
+            tenants,
+        }
+    }
+
+    fn entry_for(&self, handle: &ShardedHandle) -> Result<Arc<ShardEntry>> {
+        crate::ensure!(
+            handle.svc == self.id,
+            "matrix handle belongs to a different service"
+        );
+        self.registry
+            .lock()
+            .expect("shard registry poisoned")
+            .get(&handle.id)
+            .cloned()
+            .ok_or_else(|| format_err!("unknown matrix handle (already unloaded?)"))
+    }
+}
+
+impl<T: SpElem> Drop for ShardedService<T> {
+    fn drop(&mut self) {
+        self.sched.lock().shutdown = true;
+        self.sched.ready.notify_all();
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+        // Requests still queued behind the scheduler never dispatched:
+        // fail their tickets loudly so a late `wait` errors instead of
+        // hanging. (Dispatched requests were drained by the gather
+        // thread before it exited.)
+        let queued = self.sched.lock().fair.drain_queued();
+        for (_, job) in queued {
+            self.completions.publish(
+                job.ticket,
+                Err(format_err!("sharded service shut down before this request was dispatched")),
+            );
+        }
+        self.completions.fail_all_unanswered("sharded service shut down");
+    }
+}
+
+/// Dispatcher: pull admissions from the fair scheduler in WRR order and
+/// scatter each request's sub-requests across the shard backends. A
+/// single thread, so every shard's intake sees facade requests in the
+/// same (dispatch) order.
+fn run_dispatcher<T: SpElem>(
+    shards: Arc<Vec<SpmvService<T>>>,
+    sched: Arc<Sched<T>>,
+    comp: Arc<Completions<T>>,
+    tx: Sender<GatherItem>,
+) {
+    loop {
+        let (tenant, job) = {
+            let mut st = sched.lock();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let popped = if st.paused { None } else { st.fair.pop() };
+                if let Some((tenant, job)) = popped {
+                    if let Some(log) = st.log.as_mut() {
+                        log.dispatched.push(tenant);
+                    }
+                    break (tenant, job);
+                }
+                st = sched.ready.wait(st).expect("sharded scheduler poisoned");
+            }
+        };
+        let DispatchJob { ticket, entry, req } = job;
+        let submitted = match req {
+            Request::Spmv { x } => {
+                submit_spmv_all(&shards, &entry, &x).map(|ts| (GatherKind::Spmv, ts, 1))
+            }
+            Request::Batch { xs } => {
+                submit_batch_all(&shards, &entry, &xs).map(|ts| (GatherKind::Batch, ts, 1))
+            }
+            Request::Iterate { x, iters } => {
+                submit_spmv_all(&shards, &entry, &x).map(|ts| (GatherKind::Iterate, ts, iters))
+            }
+        };
+        match submitted {
+            Ok((kind, subtickets, iters)) => {
+                let item = GatherItem { ticket, tenant, entry, kind, subtickets, iters };
+                if let Err(e) = tx.send(item) {
+                    // Gather thread is gone (shutdown / panic): claim
+                    // the orphaned sub-responses and fail the ticket.
+                    let item = e.0;
+                    for (svc, t) in shards.iter().zip(item.subtickets) {
+                        let _ = svc.wait(t);
+                    }
+                    comp.publish(
+                        item.ticket,
+                        Err(format_err!("sharded gather stage is down")),
+                    );
+                    sched.complete(tenant);
+                }
+            }
+            Err(e) => {
+                // Scatter failed (e.g. the handle was evicted while the
+                // request sat in the scheduler queue).
+                comp.publish(ticket, Err(e));
+                sched.complete(tenant);
+            }
+        }
+    }
+}
+
+/// Gather: wait each dispatched request's sub-tickets (FIFO in dispatch
+/// order), merge the per-shard partials, drive iterate feedback, and
+/// publish the response.
+fn run_gather<T: SpElem>(
+    shards: Arc<Vec<SpmvService<T>>>,
+    sched: Arc<Sched<T>>,
+    comp: Arc<Completions<T>>,
+    rx: Receiver<GatherItem>,
+) {
+    while let Ok(GatherItem { ticket, tenant, entry, kind, subtickets, iters }) = rx.recv() {
+        let resp = match kind {
+            GatherKind::Spmv => {
+                wait_all_spmv(&shards, &subtickets).map(|p| Response::Spmv(merge_shard_runs(p)))
+            }
+            GatherKind::Batch => wait_all_batch(&shards, &subtickets)
+                .map(|p| Response::Batch(merge_shard_batches(p))),
+            GatherKind::Iterate => gather_iterate(&shards, &entry, subtickets, iters),
+        };
+        sched.complete(tenant);
+        comp.publish(ticket, resp);
+    }
+}
+
+/// Scatter one SpMV: every shard reads the full input vector (row
+/// sharding keeps the column space) and computes its row range.
+///
+/// Each shard currently receives its own copy of the payload (the
+/// backend request type owns its vectors); that is O(S x payload)
+/// memcpy per scatter, dwarfed by the per-nnz kernel simulation. An
+/// `Arc`-shared payload variant of [`Request`] is the known follow-on
+/// if real transfer fan-out ever becomes the bottleneck (ROADMAP).
+fn submit_spmv_all<T: SpElem>(
+    shards: &[SpmvService<T>],
+    entry: &ShardEntry,
+    x: &[T],
+) -> Result<Vec<Ticket>> {
+    let mut ts = Vec::with_capacity(entry.handles.len());
+    for (svc, h) in shards.iter().zip(&entry.handles) {
+        match svc.submit(*h, Request::Spmv { x: x.to_vec() }) {
+            Ok(t) => ts.push(t),
+            Err(e) => {
+                abort_subs(shards, ts);
+                return Err(e);
+            }
+        }
+    }
+    Ok(ts)
+}
+
+/// Scatter one batch: every shard serves the whole vector set against
+/// its row range.
+fn submit_batch_all<T: SpElem>(
+    shards: &[SpmvService<T>],
+    entry: &ShardEntry,
+    xs: &[Vec<T>],
+) -> Result<Vec<Ticket>> {
+    let mut ts = Vec::with_capacity(entry.handles.len());
+    for (svc, h) in shards.iter().zip(&entry.handles) {
+        match svc.submit(*h, Request::Batch { xs: xs.to_vec() }) {
+            Ok(t) => ts.push(t),
+            Err(e) => {
+                abort_subs(shards, ts);
+                return Err(e);
+            }
+        }
+    }
+    Ok(ts)
+}
+
+/// A scatter failed part-way: claim the sub-responses already in flight
+/// so nothing parks forever in a shard's completion store.
+fn abort_subs<T: SpElem>(shards: &[SpmvService<T>], ts: Vec<Ticket>) {
+    for (svc, t) in shards.iter().zip(ts) {
+        let _ = svc.wait(t);
+    }
+}
+
+/// Wait all sub-SpMVs, in shard order. Every sub-ticket is claimed even
+/// when one fails (no parked responses leak); the first error wins.
+fn wait_all_spmv<T: SpElem>(
+    shards: &[SpmvService<T>],
+    ts: &[Ticket],
+) -> Result<Vec<RunResult<T>>> {
+    let mut out = Vec::with_capacity(ts.len());
+    let mut err = None;
+    for (svc, t) in shards.iter().zip(ts) {
+        match svc.wait(*t).and_then(Response::into_spmv) {
+            Ok(r) => out.push(r),
+            Err(e) => err = err.or(Some(e)),
+        }
+    }
+    match err {
+        None => Ok(out),
+        Some(e) => Err(e),
+    }
+}
+
+/// Wait all sub-batches, in shard order (see [`wait_all_spmv`]).
+fn wait_all_batch<T: SpElem>(
+    shards: &[SpmvService<T>],
+    ts: &[Ticket],
+) -> Result<Vec<BatchResult<T>>> {
+    let mut out = Vec::with_capacity(ts.len());
+    let mut err = None;
+    for (svc, t) in shards.iter().zip(ts) {
+        match svc.wait(*t).and_then(Response::into_batch) {
+            Ok(b) => out.push(b),
+            Err(e) => err = err.or(Some(e)),
+        }
+    }
+    match err {
+        None => Ok(out),
+        Some(e) => Err(e),
+    }
+}
+
+/// The iterate feedback loop across shards: wait the current wave,
+/// merge, accumulate totals like the single-service accumulator
+/// (breakdown then energy, in iteration order), and scatter the merged
+/// output as the next iteration's input.
+fn gather_iterate<T: SpElem>(
+    shards: &[SpmvService<T>],
+    entry: &ShardEntry,
+    mut subtickets: Vec<Ticket>,
+    iters: usize,
+) -> Result<Response<T>> {
+    let mut total = Breakdown::default();
+    let mut energy = Energy::default();
+    let mut last: Option<RunResult<T>> = None;
+    for iter in 0..iters {
+        let merged = merge_shard_runs(wait_all_spmv(shards, &subtickets)?);
+        total.accumulate(&merged.breakdown);
+        energy = energy.add(merged.energy);
+        if iter + 1 < iters {
+            subtickets = submit_spmv_all(shards, entry, &merged.y)?;
+        }
+        last = Some(merged);
+    }
+    Ok(Response::Iterate(IterationsResult {
+        last: last.expect("iters >= 1 was validated at submit"),
+        total,
+        energy,
+        iters,
+    }))
+}
+
+/// Merge per-shard [`RunResult`]s (in shard order) into the facade's
+/// response: outputs concatenate; per-phase times, matrix placement and
+/// DPU imbalance take the max across the concurrently-operating rank
+/// groups (critical path); bus bytes, DPU count, nnz and energy sum.
+/// Folding one part is the identity — `S = 1` degenerates bit-exactly
+/// to the plain service.
+fn merge_shard_runs<T: SpElem>(parts: Vec<RunResult<T>>) -> RunResult<T> {
+    let mut it = parts.into_iter();
+    let mut merged = it.next().expect("at least one shard result");
+    for p in it {
+        merged.y.extend(p.y);
+        let b = &mut merged.breakdown;
+        b.load_s = b.load_s.max(p.breakdown.load_s);
+        b.kernel_s = b.kernel_s.max(p.breakdown.kernel_s);
+        b.retrieve_s = b.retrieve_s.max(p.breakdown.retrieve_s);
+        b.merge_s = b.merge_s.max(p.breakdown.merge_s);
+        let s = &mut merged.stats;
+        s.dpu_imbalance = s.dpu_imbalance.max(p.stats.dpu_imbalance);
+        s.kernel_cycles = s.kernel_cycles.max(p.stats.kernel_cycles);
+        s.bus_bytes_moved += p.stats.bus_bytes_moved;
+        s.bus_bytes_payload += p.stats.bus_bytes_payload;
+        s.matrix_load_s = s.matrix_load_s.max(p.stats.matrix_load_s);
+        s.n_dpus += p.stats.n_dpus;
+        s.nnz += p.stats.nnz;
+        merged.energy = merged.energy.add(p.energy);
+    }
+    merged
+}
+
+/// Merge per-shard [`BatchResult`]s: vector `v`'s response merges the
+/// shards' `runs[v]` through [`merge_shard_runs`], in input order.
+fn merge_shard_batches<T: SpElem>(parts: Vec<BatchResult<T>>) -> BatchResult<T> {
+    let nvec = parts.first().map_or(0, |b| b.len());
+    debug_assert!(parts.iter().all(|b| b.len() == nvec), "shard batch sizes diverged");
+    let mut per_shard: Vec<std::vec::IntoIter<RunResult<T>>> =
+        parts.into_iter().map(|b| b.runs.into_iter()).collect();
+    let mut runs = Vec::with_capacity(nvec);
+    for _ in 0..nvec {
+        let vparts: Vec<RunResult<T>> = per_shard
+            .iter_mut()
+            .map(|it| it.next().expect("shard batch returned too few runs"))
+            .collect();
+        runs.push(merge_shard_runs(vparts));
+    }
+    BatchResult { runs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate;
+
+    fn sharded(shards: usize, dpus: usize) -> ShardedService<f64> {
+        ShardedServiceBuilder::new()
+            .shards(shards)
+            .build(PimSystem::with_dpus(dpus))
+            .unwrap()
+    }
+
+    #[test]
+    fn plan_shards_tiles_rows_without_empties() {
+        let m = generate::scale_free::<f64>(157, 157, 6, 0.7, 3);
+        for s in [1usize, 2, 3, 5, 8, 157, 500] {
+            let ranges = plan_shards(&m, s);
+            assert_eq!(ranges.len(), s.min(157), "shards={s}");
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, 157);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "ranges must tile contiguously");
+            }
+            assert!(ranges.iter().all(|r| !r.is_empty()), "shards={s}: empty range");
+        }
+    }
+
+    #[test]
+    fn plan_shards_handles_degenerate_weight_distributions() {
+        // All the weight in the last row used to make split_weighted
+        // emit an empty tail chunk; the fixup must still tile.
+        let triples: Vec<(u32, u32, f64)> = (0..9).map(|c| (9u32, c, 1.0)).collect();
+        let m = CooMatrix::from_triples(10, 10, triples);
+        let ranges = plan_shards(&m, 4);
+        assert_eq!(ranges.len(), 4);
+        assert_eq!(ranges[0].start, 0);
+        assert_eq!(ranges.last().unwrap().end, 10);
+        assert!(ranges.iter().all(|r| !r.is_empty()));
+        // Zero-row matrix: one degenerate shard.
+        let empty = CooMatrix::<f64>::zeros(0, 5);
+        assert_eq!(plan_shards(&empty, 3), vec![0..0]);
+    }
+
+    #[test]
+    fn sharded_spmv_matches_host_oracle() {
+        let m = generate::scale_free::<f64>(150, 150, 6, 0.6, 11);
+        let x: Vec<f64> = (0..150).map(|i| ((i % 9) as f64) - 4.0).collect();
+        for shards in [1usize, 2, 3, 5] {
+            let svc = sharded(shards, 8);
+            let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+            assert_eq!((h.nrows(), h.ncols()), (150, 150));
+            // Fast path and the scheduled path agree with the oracle.
+            let fast = svc.spmv(&h, &x).unwrap();
+            assert_eq!(fast.y, m.spmv(&x), "shards={shards} fast path");
+            let queued = svc
+                .wait(svc.submit(h, Request::Spmv { x: x.clone() }).unwrap())
+                .unwrap()
+                .into_spmv()
+                .unwrap();
+            assert_eq!(queued.y, fast.y, "shards={shards} queued vs fast");
+            assert_eq!(queued.breakdown, fast.breakdown);
+            assert_eq!(queued.stats, fast.stats);
+            assert_eq!(queued.energy, fast.energy);
+            assert_eq!(queued.stats.nnz, m.nnz());
+            assert_eq!(queued.stats.n_dpus, 8 * svc.shard_count().min(150));
+        }
+    }
+
+    #[test]
+    fn handles_and_tickets_are_facade_scoped() {
+        let a = sharded(2, 4);
+        let b = sharded(2, 4);
+        let m = generate::uniform::<f64>(40, 40, 3, 2);
+        let ha = a.load(&m, &KernelSpec::coo_row()).unwrap();
+        assert!(b.submit(ha, Request::Spmv { x: vec![0.0; 40] }).is_err());
+        let ta = a.submit(ha, Request::Spmv { x: vec![0.0; 40] }).unwrap();
+        assert!(b.wait(ta).is_err());
+        assert!(a.wait(ta).is_ok());
+        assert!(a.wait(ta).is_err(), "double wait must error");
+        assert!(a.unload(ha));
+        assert!(!a.unload(ha));
+        assert!(a.submit(ha, Request::Spmv { x: vec![0.0; 40] }).is_err());
+    }
+
+    #[test]
+    fn submit_validates_shapes_up_front() {
+        let svc = sharded(3, 4);
+        let m = generate::uniform::<f64>(48, 48, 4, 5);
+        let h = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
+        assert!(svc.submit(h, Request::Spmv { x: vec![0.0; 47] }).is_err());
+        assert!(svc
+            .submit(h, Request::Batch { xs: vec![vec![0.0; 48], vec![0.0; 1]] })
+            .is_err());
+        assert!(svc.submit(h, Request::Iterate { x: vec![0.0; 48], iters: 0 }).is_err());
+        let rect = generate::uniform::<f64>(32, 48, 3, 5);
+        let hr = svc.load(&rect, &KernelSpec::csr_nnz()).unwrap();
+        assert!(svc.submit(hr, Request::Iterate { x: vec![0.0; 48], iters: 2 }).is_err());
+        assert!(svc.submit(hr, Request::Iterate { x: vec![0.0; 48], iters: 1 }).is_ok());
+        // Unknown tenants are rejected.
+        assert!(svc.submit_for(TenantId(7), h, Request::Spmv { x: vec![0.0; 48] }).is_err());
+        // Empty batches resolve immediately.
+        let t = svc.submit(h, Request::Batch { xs: Vec::new() }).unwrap();
+        assert!(svc.wait(t).unwrap().into_batch().unwrap().is_empty());
+        assert!(svc.spmv_batch(&h, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn unload_tenant_evicts_handles_and_plans() {
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(2)
+            .tenants(vec![TenantSpec::new("a", 1), TenantSpec::new("b", 1)])
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        let (ta, tb) = (svc.tenant("a").unwrap(), svc.tenant("b").unwrap());
+        let ma = generate::uniform::<f64>(64, 64, 4, 1);
+        let mb = generate::uniform::<f64>(64, 64, 4, 2);
+        let ha = svc.load_for(ta, &ma, &KernelSpec::coo_row()).unwrap();
+        let hb = svc.load_for(tb, &mb, &KernelSpec::coo_row()).unwrap();
+        let st = svc.stats();
+        assert_eq!(st.loaded_handles, 2);
+        assert_eq!(st.resident_plans, 4, "2 matrices x 2 shard slices");
+        let (unloaded, evicted) = svc.unload_tenant(ta).unwrap();
+        assert_eq!(unloaded, 1);
+        assert_eq!(evicted, 2, "tenant a's two shard plans reclaimed");
+        assert_eq!(svc.stats().resident_plans, 2);
+        // a's handle is gone, b's still serves.
+        assert!(svc.submit_for(ta, ha, Request::Spmv { x: vec![0.0; 64] }).is_err());
+        let x: Vec<f64> = (0..64).map(|i| (i % 5) as f64 - 2.0).collect();
+        let r = svc.spmv(&hb, &x).unwrap();
+        assert_eq!(r.y, mb.spmv(&x));
+        assert!(svc.unload_tenant(TenantId(9)).is_err());
+    }
+
+    #[test]
+    fn queued_request_fails_loudly_when_its_handle_is_evicted() {
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(2)
+            .start_paused(true)
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        let m = generate::uniform::<f64>(32, 32, 3, 3);
+        let h = svc.load(&m, &KernelSpec::coo_row()).unwrap();
+        let t = svc.submit(h, Request::Spmv { x: vec![1.0; 32] }).unwrap();
+        // Evict while the request is still queued behind the (paused)
+        // scheduler, then let it dispatch.
+        assert!(svc.unload(h));
+        svc.resume();
+        assert!(svc.wait(t).is_err(), "dispatch against an evicted handle must fail");
+        // The facade stays serviceable.
+        let h2 = svc.load(&m, &KernelSpec::coo_row()).unwrap();
+        let x = vec![1.0; 32];
+        assert_eq!(svc.spmv(&h2, &x).unwrap().y, m.spmv(&x));
+    }
+
+    #[test]
+    fn drop_with_queued_requests_fails_their_tickets() {
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(2)
+            .start_paused(true)
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        let m = generate::uniform::<f64>(24, 24, 3, 4);
+        let h = svc.load(&m, &KernelSpec::coo_row()).unwrap();
+        let _t = svc.submit(h, Request::Spmv { x: vec![1.0; 24] }).unwrap();
+        // Dropping with a queued (never-dispatched) request must not
+        // hang; the ticket is failed internally.
+        drop(svc);
+    }
+
+    #[test]
+    fn wrr_schedule_is_deterministic_end_to_end() {
+        // The satellite's fairness contract, end to end: tenants at
+        // weight 1:3 with everything enqueued up front dispatch AND
+        // complete in exactly the weighted-round-robin order.
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(2)
+            .tenants(vec![TenantSpec::new("a", 1), TenantSpec::new("b", 3)])
+            .start_paused(true)
+            .record_schedule(true)
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        let (ta, tb) = (svc.tenant("a").unwrap(), svc.tenant("b").unwrap());
+        let m = generate::uniform::<f64>(48, 48, 4, 9);
+        let ha = svc.load_for(ta, &m, &KernelSpec::coo_nnz()).unwrap();
+        let hb = svc.load_for(tb, &m, &KernelSpec::coo_nnz()).unwrap();
+        let x: Vec<f64> = (0..48).map(|i| (i % 7) as f64 - 3.0).collect();
+        let mut tickets = Vec::new();
+        for _ in 0..3 {
+            tickets.push(svc.submit_for(ta, ha, Request::Spmv { x: x.clone() }).unwrap());
+        }
+        for _ in 0..9 {
+            tickets.push(svc.submit_for(tb, hb, Request::Spmv { x: x.clone() }).unwrap());
+        }
+        svc.resume();
+        for t in tickets {
+            let r = svc.wait(t).unwrap().into_spmv().unwrap();
+            assert_eq!(r.y, m.spmv(&x));
+        }
+        let log = svc.schedule_log().unwrap();
+        let want: Vec<TenantId> =
+            (0..3).flat_map(|_| [ta, tb, tb, tb]).collect();
+        assert_eq!(log.dispatched, want, "dispatch order must be the WRR schedule");
+        assert_eq!(log.completed, want, "completion order must follow dispatch order");
+        let st = svc.stats();
+        assert_eq!(st.tenants[ta.index()].completed, 3);
+        assert_eq!(st.tenants[tb.index()].completed, 9);
+        assert_eq!(st.in_flight(), 0);
+    }
+}

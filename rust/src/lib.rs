@@ -36,7 +36,13 @@
 //!   Batched (SpMM-style) execution streams each matrix slice once per
 //!   vector block, with the width set by a
 //!   [`coordinator::BlockPolicy`]; everything is bit-identical to
-//!   synchronous serial execution.
+//!   synchronous serial execution. One level up,
+//!   [`coordinator::ShardedService`] shards one logical matrix's rows
+//!   across several backend services (simulated rank groups sharing one
+//!   plan cache) with scatter/gather request routing and a
+//!   deterministic weighted-round-robin multi-tenant scheduler
+//!   ([`coordinator::scheduler`]) — gathered outputs stay bit-identical
+//!   to the unsharded path (`tests/shard_equivalence.rs`).
 //! * [`baselines`] — processor-centric comparators (multithreaded host CPU
 //!   SpMV; analytic CPU/GPU roofline models).
 //! * [`runtime`] — PJRT runtime that loads AOT artifacts (HLO text) built
@@ -90,10 +96,10 @@
 //! — the service's responses are bit-identical to that path by
 //! construction (locked by `tests/service_equivalence.rs`).
 //!
-//! The full picture — service / request / queue layer, plan → execute →
-//! merge pipeline, the batched path and the plan cache — is documented
-//! with data-flow diagrams in `docs/ARCHITECTURE.md` at the repository
-//! root.
+//! The full picture — the sharded multi-tenant tier, service / request
+//! / queue layer, plan → execute → merge pipeline, the batched path and
+//! the plan cache — is documented with data-flow diagrams in
+//! `docs/ARCHITECTURE.md` at the repository root.
 
 pub mod util;
 pub mod matrix;

@@ -1,0 +1,160 @@
+//! Property tests for shard planning and the scatter/gather layer
+//! (hand-rolled; proptest is not in the offline vendor set): for random
+//! COO matrices and shard counts,
+//!
+//! * the planned shard row-ranges tile `[0, nrows)` contiguously with
+//!   no empty shard (effective count `min(shards, nrows)`), so every
+//!   row — and therefore every stored non-zero — lands in exactly one
+//!   shard;
+//! * slicing the matrix by those ranges partitions the non-zeros
+//!   exactly (counts and triples add back up);
+//! * gathering a `ShardedService`'s per-shard outputs reconstructs the
+//!   host-oracle SpMV bit-exactly.
+
+use sparsep::coordinator::{plan_shards, KernelSpec, ShardedService, ShardedServiceBuilder};
+use sparsep::matrix::CooMatrix;
+use sparsep::pim::PimSystem;
+use sparsep::util::rng::Rng;
+
+/// Random sparse matrix with rng-chosen shape and density (integer
+/// values: sums are exact in f64, so bit-equality with the host oracle
+/// is meaningful).
+fn random_matrix(rng: &mut Rng) -> CooMatrix<f64> {
+    let nrows = 1 + rng.gen_range(200);
+    let ncols = 1 + rng.gen_range(200);
+    let nnz = rng.gen_range(4 * nrows.min(ncols) + 1);
+    let mut triples = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        triples.push((
+            rng.gen_range(nrows) as u32,
+            rng.gen_range(ncols) as u32,
+            (rng.gen_range(9) as f64) - 4.0,
+        ));
+    }
+    CooMatrix::from_triples(nrows, ncols, triples)
+}
+
+/// PROPERTY: shard ranges tile the row space, never empty, and
+/// partition the non-zeros exactly.
+#[test]
+fn prop_shard_ranges_tile_rows_and_nnz() {
+    let mut rng = Rng::new(0x5AADED);
+    for trial in 0..200 {
+        let m = random_matrix(&mut rng);
+        let shards = 1 + rng.gen_range(12);
+        let ranges = plan_shards(&m, shards);
+        let tag = format!(
+            "trial {trial}: {}x{} nnz={} shards={shards}",
+            m.nrows(),
+            m.ncols(),
+            m.nnz()
+        );
+        assert_eq!(ranges.len(), shards.min(m.nrows()).max(1), "{tag}: shard count");
+        assert_eq!(ranges[0].start, 0, "{tag}: first range must start at row 0");
+        assert_eq!(ranges.last().unwrap().end, m.nrows(), "{tag}: last range must end at nrows");
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "{tag}: ranges must tile contiguously");
+        }
+        if m.nrows() > 0 {
+            assert!(ranges.iter().all(|r| !r.is_empty()), "{tag}: empty shard range");
+        }
+        // Row/nnz partition: slicing by the ranges recovers every
+        // non-zero exactly once, in order.
+        let mut sliced_nnz = 0usize;
+        let mut gathered: Vec<(u32, u32, f64)> = Vec::with_capacity(m.nnz());
+        for r in &ranges {
+            let slice = m.row_range_slice(r.start, r.end);
+            assert_eq!(slice.nrows(), r.len(), "{tag}: slice row count");
+            assert_eq!(slice.ncols(), m.ncols(), "{tag}: slices keep the column space");
+            sliced_nnz += slice.nnz();
+            gathered.extend(
+                slice.iter().map(|(row, col, v)| (row + r.start as u32, col, v)),
+            );
+        }
+        assert_eq!(sliced_nnz, m.nnz(), "{tag}: non-zeros must partition exactly");
+        let original: Vec<(u32, u32, f64)> = m.iter().collect();
+        assert_eq!(gathered, original, "{tag}: gathered triples must reconstruct the matrix");
+    }
+}
+
+/// PROPERTY: shard-count balance — nnz-weighted planning never gives a
+/// shard more non-zeros than one row short of the whole matrix, and on
+/// matrices with spread-out rows the heaviest shard is within a row of
+/// the greedy balanced cut (sanity envelope, not a tight bound).
+#[test]
+fn prop_shard_planning_balances_nnz() {
+    let mut rng = Rng::new(0xBA1A2CE);
+    for _ in 0..100 {
+        let m = random_matrix(&mut rng);
+        let shards = 2 + rng.gen_range(6);
+        let ranges = plan_shards(&m, shards);
+        let counts = m.row_counts();
+        let per_shard: Vec<usize> =
+            ranges.iter().map(|r| counts[r.clone()].iter().sum()).collect();
+        let total: usize = per_shard.iter().sum();
+        assert_eq!(total, m.nnz());
+        let max_row = counts.iter().copied().max().unwrap_or(0);
+        let ideal = m.nnz().div_ceil(ranges.len());
+        let heaviest = per_shard.iter().copied().max().unwrap_or(0);
+        // Loose envelope: greedy row-granular splitting underfills each
+        // chunk by < one row, and the shortfall compounds harmonically
+        // into the tail chunk — 3x the heaviest row safely covers every
+        // shard count the suite uses. The point is "roughly balanced",
+        // not "one shard takes all".
+        assert!(
+            heaviest <= ideal + 3 * max_row,
+            "heaviest shard {heaviest} exceeds ideal {ideal} + 3 * max row {max_row} ({}x{} nnz={} shards={})",
+            m.nrows(),
+            m.ncols(),
+            m.nnz(),
+            ranges.len()
+        );
+    }
+}
+
+/// PROPERTY: gather reconstructs the host oracle bit-exactly for random
+/// matrices, shard counts and kernels — spmv, batch and iterate.
+#[test]
+fn prop_sharded_gather_reconstructs_oracle() {
+    let mut rng = Rng::new(0xC0DE5A);
+    let kernels =
+        [KernelSpec::coo_nnz(), KernelSpec::csr_nnz(), KernelSpec::coo_row(), KernelSpec::bcoo_nnz()];
+    for trial in 0..25usize {
+        let m = random_matrix(&mut rng);
+        let shards = 1 + rng.gen_range(6);
+        let spec = &kernels[rng.gen_range(kernels.len())];
+        let n_dpus = 1 + rng.gen_range(12);
+        let tag = format!(
+            "trial {trial}: {}x{} nnz={} shards={shards} dpus={n_dpus} {}",
+            m.nrows(),
+            m.ncols(),
+            m.nnz(),
+            spec.name
+        );
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(shards)
+            .build(PimSystem::with_dpus(n_dpus))
+            .unwrap();
+        let h = svc.load(&m, spec).unwrap();
+        let x: Vec<f64> =
+            (0..m.ncols()).map(|i| ((i * 7 + trial) % 11) as f64 - 5.0).collect();
+        let r = svc.spmv(&h, &x).unwrap();
+        assert_eq!(r.y, m.spmv(&x), "{tag}: spmv");
+        assert_eq!(r.stats.nnz, m.nnz(), "{tag}: merged nnz");
+        let xs: Vec<Vec<f64>> = (0..3usize)
+            .map(|b| (0..m.ncols()).map(|i| ((i + 3 * b) % 9) as f64 - 4.0).collect())
+            .collect();
+        let batch = svc.spmv_batch(&h, &xs).unwrap();
+        for (x, run) in xs.iter().zip(&batch.runs) {
+            assert_eq!(run.y, m.spmv(x), "{tag}: batch");
+        }
+        if m.nrows() == m.ncols() {
+            let it = svc.iterate(&h, &x, 3).unwrap();
+            let mut want = x.clone();
+            for _ in 0..3 {
+                want = m.spmv(&want);
+            }
+            assert_eq!(it.last.y, want, "{tag}: iterate");
+        }
+    }
+}

@@ -1,0 +1,430 @@
+//! Differential harness for the sharded serving tier.
+//!
+//! The multi-rank literature's validation rule: multi-rank behavior is
+//! checked against a single-rank oracle. Two oracles lock
+//! `ShardedService` down:
+//!
+//! 1. **Single-service oracle** — the whole matrix served by one
+//!    unsharded `SpmvService` with the same per-rank system. The
+//!    gathered output vectors must be **bit-identical** for every shard
+//!    count S ∈ {1, 2, 3, 5}, all 25 kernel specs, both engines, and
+//!    every request kind (spmv, ragged batch, iterate), with >= 4
+//!    concurrent tickets waited out of submission order. (The suite's
+//!    generator values are integer-exact, so even the element-granular
+//!    and 2D kernels' partial-sum regroupings cannot round.) For
+//!    **S = 1** the *entire* response — breakdown, stats, energy — must
+//!    degenerate bit-exactly to the plain service's.
+//! 2. **Per-shard synchronous reference** — each shard slice planned
+//!    and executed independently on a plain `SpmvExecutor`, merged by a
+//!    test-local reimplementation of the documented aggregation
+//!    (concatenate outputs; max the per-phase times, placement and
+//!    imbalance; sum bytes, DPUs, nnz, energy). The facade's full
+//!    `Response` must be bit-identical — this pins the scatter/gather
+//!    and scheduler plumbing to the simple sequential semantics.
+
+use sparsep::coordinator::{
+    BatchResult, Breakdown, Engine, IterationsResult, KernelSpec, Request, Response, RunResult,
+    ServiceBuilder, ShardedService, ShardedServiceBuilder, ShardedTicket, SpmvExecutor,
+    SpmvService, VECTOR_BLOCK,
+};
+use sparsep::matrix::{generate, CooMatrix};
+use sparsep::pim::{Energy, PimSystem};
+use std::ops::Range;
+
+const N: usize = 120;
+const BATCH: usize = VECTOR_BLOCK + 3; // one full block + a ragged tail
+const ITERS: usize = 4;
+const DPUS_PER_SHARD: usize = 8;
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 5];
+
+fn matrix() -> CooMatrix<f64> {
+    generate::scale_free::<f64>(N, N, 6, 0.7, 29)
+}
+
+fn x1() -> Vec<f64> {
+    (0..N).map(|i| ((i % 13) as f64) - 6.0).collect()
+}
+
+fn x2() -> Vec<f64> {
+    (0..N).map(|i| ((i % 7) as f64) - 3.0).collect()
+}
+
+fn batch_xs() -> Vec<Vec<f64>> {
+    (0..BATCH)
+        .map(|b| (0..N).map(|i| ((i + 5 * b) % 11) as f64 - 5.0).collect())
+        .collect()
+}
+
+fn assert_runs_identical(a: &RunResult<f64>, b: &RunResult<f64>, tag: &str) {
+    assert_eq!(a.y, b.y, "{tag}: output vector differs");
+    assert_eq!(a.breakdown, b.breakdown, "{tag}: breakdown differs");
+    assert_eq!(a.stats, b.stats, "{tag}: stats differ");
+    assert_eq!(a.energy, b.energy, "{tag}: energy differs");
+}
+
+fn assert_batches_identical(a: &BatchResult<f64>, b: &BatchResult<f64>, tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: batch size differs");
+    for (i, (ra, rb)) in a.runs.iter().zip(&b.runs).enumerate() {
+        assert_runs_identical(ra, rb, &format!("{tag} vec={i}"));
+    }
+}
+
+fn assert_iters_identical(a: &IterationsResult<f64>, b: &IterationsResult<f64>, tag: &str) {
+    assert_runs_identical(&a.last, &b.last, &format!("{tag} last"));
+    assert_eq!(a.total, b.total, "{tag}: iteration totals differ");
+    assert_eq!(a.energy, b.energy, "{tag}: iteration energy differs");
+    assert_eq!(a.iters, b.iters, "{tag}: iteration count differs");
+}
+
+/// What the single unsharded service answers for the request mix.
+struct Oracle {
+    spmv1: RunResult<f64>,
+    spmv2: RunResult<f64>,
+    batch: BatchResult<f64>,
+    iter: IterationsResult<f64>,
+}
+
+fn single_service_oracle(engine: Engine, spec: &KernelSpec, m: &CooMatrix<f64>) -> Oracle {
+    let svc: SpmvService<f64> = ServiceBuilder::new()
+        .engine(engine)
+        .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+        .unwrap();
+    let h = svc.load(m, spec).unwrap();
+    let t1 = svc.submit(h, Request::Spmv { x: x1() }).unwrap();
+    let tb = svc.submit(h, Request::Batch { xs: batch_xs() }).unwrap();
+    let ti = svc.submit(h, Request::Iterate { x: x1(), iters: ITERS }).unwrap();
+    let t2 = svc.submit(h, Request::Spmv { x: x2() }).unwrap();
+    Oracle {
+        iter: svc.wait(ti).unwrap().into_iterations().unwrap(),
+        spmv2: svc.wait(t2).unwrap().into_spmv().unwrap(),
+        batch: svc.wait(tb).unwrap().into_batch().unwrap(),
+        spmv1: svc.wait(t1).unwrap().into_spmv().unwrap(),
+    }
+}
+
+/// Test-local reimplementation of the documented shard-merge semantics
+/// (deliberately independent of `coordinator::shard`'s code).
+fn merge_expected(parts: Vec<RunResult<f64>>) -> RunResult<f64> {
+    let mut y = Vec::new();
+    let mut breakdown = Breakdown::default();
+    let mut energy = Energy::default();
+    let mut stats = parts[0].stats;
+    stats.bus_bytes_moved = 0;
+    stats.bus_bytes_payload = 0;
+    stats.n_dpus = 0;
+    stats.nnz = 0;
+    stats.kernel_cycles = 0;
+    stats.dpu_imbalance = f64::MIN;
+    stats.matrix_load_s = f64::MIN;
+    for (i, p) in parts.iter().enumerate() {
+        y.extend_from_slice(&p.y);
+        breakdown.load_s = breakdown.load_s.max(p.breakdown.load_s);
+        breakdown.kernel_s = breakdown.kernel_s.max(p.breakdown.kernel_s);
+        breakdown.retrieve_s = breakdown.retrieve_s.max(p.breakdown.retrieve_s);
+        breakdown.merge_s = breakdown.merge_s.max(p.breakdown.merge_s);
+        stats.dpu_imbalance = stats.dpu_imbalance.max(p.stats.dpu_imbalance);
+        stats.kernel_cycles = stats.kernel_cycles.max(p.stats.kernel_cycles);
+        stats.bus_bytes_moved += p.stats.bus_bytes_moved;
+        stats.bus_bytes_payload += p.stats.bus_bytes_payload;
+        stats.matrix_load_s = stats.matrix_load_s.max(p.stats.matrix_load_s);
+        stats.n_dpus += p.stats.n_dpus;
+        stats.nnz += p.stats.nnz;
+        energy = if i == 0 { p.energy } else { energy.add(p.energy) };
+    }
+    RunResult { y, breakdown, stats, energy }
+}
+
+/// Per-shard synchronous reference: plan every slice on a plain
+/// executor and execute the request mix shard by shard, merging with
+/// [`merge_expected`].
+struct Reference {
+    exec: SpmvExecutor,
+    plans: Vec<sparsep::coordinator::ExecutionPlan<f64>>,
+}
+
+impl Reference {
+    fn new(
+        engine: Engine,
+        spec: &KernelSpec,
+        m: &CooMatrix<f64>,
+        ranges: &[Range<usize>],
+    ) -> Reference {
+        let exec = SpmvExecutor::with_engine(PimSystem::with_dpus(DPUS_PER_SHARD), engine);
+        let plans = ranges
+            .iter()
+            .map(|r| exec.plan(spec, &m.row_range_slice(r.start, r.end)).unwrap())
+            .collect();
+        Reference { exec, plans }
+    }
+
+    fn spmv(&self, x: &[f64]) -> RunResult<f64> {
+        merge_expected(self.plans.iter().map(|p| p.execute(&self.exec, x).unwrap()).collect())
+    }
+
+    fn batch(&self, xs: &[Vec<f64>]) -> BatchResult<f64> {
+        let per_shard: Vec<BatchResult<f64>> =
+            self.plans.iter().map(|p| p.execute_batch_runs(&self.exec, xs).unwrap()).collect();
+        let runs = (0..xs.len())
+            .map(|v| merge_expected(per_shard.iter().map(|b| b.runs[v].clone()).collect()))
+            .collect();
+        BatchResult { runs }
+    }
+
+    fn iterate(&self, x: &[f64], iters: usize) -> IterationsResult<f64> {
+        let mut total = Breakdown::default();
+        let mut energy = Energy::default();
+        let mut cur = x.to_vec();
+        let mut last = None;
+        for _ in 0..iters {
+            let merged = self.spmv(&cur);
+            total.accumulate(&merged.breakdown);
+            energy = energy.add(merged.energy);
+            cur.clone_from(&merged.y);
+            last = Some(merged);
+        }
+        IterationsResult { last: last.unwrap(), total, energy, iters }
+    }
+}
+
+/// Serve the full request mix through a sharded facade (>= 4 tickets in
+/// flight, waited out of submission order) and check both oracles.
+fn check_sharded(
+    engine: Engine,
+    spec: &KernelSpec,
+    m: &CooMatrix<f64>,
+    shards: usize,
+    oracle: &Oracle,
+    tag: &str,
+) {
+    let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+        .shards(shards)
+        .engine(engine)
+        .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+        .unwrap();
+    let h = svc.load(m, spec).unwrap();
+    let ranges = svc.shard_ranges(&h).unwrap();
+    assert_eq!(ranges.len(), shards.min(N), "{tag}: shard count");
+    let reference = Reference::new(engine, spec, m, &ranges);
+
+    // Four tickets in flight at once...
+    let t1 = svc.submit(h, Request::Spmv { x: x1() }).unwrap();
+    let tb = svc.submit(h, Request::Batch { xs: batch_xs() }).unwrap();
+    let ti = svc.submit(h, Request::Iterate { x: x1(), iters: ITERS }).unwrap();
+    let t2 = svc.submit(h, Request::Spmv { x: x2() }).unwrap();
+
+    // ...claimed out of submission order.
+    let iter_resp = match svc.wait(ti).unwrap() {
+        Response::Iterate(it) => it,
+        other => panic!("{tag}: expected iterate, got {}", other.kind()),
+    };
+    let spmv2 = match svc.wait(t2).unwrap() {
+        Response::Spmv(r) => r,
+        other => panic!("{tag}: expected spmv, got {}", other.kind()),
+    };
+    let batch = match svc.wait(tb).unwrap() {
+        Response::Batch(b) => b,
+        other => panic!("{tag}: expected batch, got {}", other.kind()),
+    };
+    let spmv1 = match svc.wait(t1).unwrap() {
+        Response::Spmv(r) => r,
+        other => panic!("{tag}: expected spmv, got {}", other.kind()),
+    };
+    // A second wait on a claimed ticket errors instead of hanging.
+    assert!(svc.wait(t1).is_err(), "{tag}: double wait must error");
+
+    // Oracle 1: outputs bit-identical to the unsharded single service.
+    assert_eq!(spmv1.y, oracle.spmv1.y, "{tag}: spmv1 output != single-service oracle");
+    assert_eq!(spmv2.y, oracle.spmv2.y, "{tag}: spmv2 output != single-service oracle");
+    assert_eq!(batch.len(), oracle.batch.len(), "{tag}: batch size");
+    for (v, (a, b)) in batch.runs.iter().zip(&oracle.batch.runs).enumerate() {
+        assert_eq!(a.y, b.y, "{tag}: batch vec {v} output != single-service oracle");
+    }
+    assert_eq!(iter_resp.last.y, oracle.iter.last.y, "{tag}: iterate output != oracle");
+    assert_eq!(iter_resp.iters, oracle.iter.iters, "{tag}: iterate count");
+
+    // S = 1 degenerates to the plain service, metrics and all.
+    if shards == 1 {
+        assert_runs_identical(&spmv1, &oracle.spmv1, &format!("{tag} S=1 spmv1"));
+        assert_runs_identical(&spmv2, &oracle.spmv2, &format!("{tag} S=1 spmv2"));
+        assert_batches_identical(&batch, &oracle.batch, &format!("{tag} S=1 batch"));
+        assert_iters_identical(&iter_resp, &oracle.iter, &format!("{tag} S=1 iterate"));
+    }
+
+    // Oracle 2: the full responses (metrics included) are bit-identical
+    // to the per-shard synchronous reference.
+    assert_runs_identical(&spmv1, &reference.spmv(&x1()), &format!("{tag} ref spmv1"));
+    assert_runs_identical(&spmv2, &reference.spmv(&x2()), &format!("{tag} ref spmv2"));
+    assert_batches_identical(&batch, &reference.batch(&batch_xs()), &format!("{tag} ref batch"));
+    assert_iters_identical(
+        &iter_resp,
+        &reference.iterate(&x1(), ITERS),
+        &format!("{tag} ref iterate"),
+    );
+}
+
+/// PROPERTY: all 25 kernels x {serial, threaded} x S in {1,2,3,5} serve
+/// the full request mix with outputs bit-identical to the unsharded
+/// single-service oracle, and full responses bit-identical to the
+/// per-shard synchronous reference, with out-of-order waits.
+#[test]
+fn prop_all25_sharded_identical_to_single_service_oracle() {
+    let m = matrix();
+    for spec in KernelSpec::all25(4) {
+        for (engine, ename) in [(Engine::Serial, "serial"), (Engine::threaded(2), "threaded")] {
+            let oracle = single_service_oracle(engine, &spec, &m);
+            for shards in SHARD_COUNTS {
+                let tag = format!("{} {} S={}", spec.name, ename, shards);
+                check_sharded(engine, &spec, &m, shards, &oracle, &tag);
+            }
+        }
+    }
+}
+
+/// Deterministic end-to-end fairness: two tenants at weight 1:3
+/// submitting identical request streams complete in exactly the
+/// weighted-round-robin interleaving, and their answers are oracle-
+/// exact. (Everything is enqueued while the scheduler is paused, so the
+/// schedule is a pure function of the weights.)
+#[test]
+fn fairness_weighted_round_robin_completion_order() {
+    use sparsep::coordinator::{TenantId, TenantSpec};
+    let m = matrix();
+    let spec = KernelSpec::csr_nnz();
+    let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+        .shards(2)
+        // Unlimited quotas: the dispatch order must be a pure function
+        // of the weights (quota blocking is deterministically covered by
+        // the scheduler's unit tests).
+        .tenants(vec![TenantSpec::new("a", 1), TenantSpec::new("b", 3)])
+        .start_paused(true)
+        .record_schedule(true)
+        .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+        .unwrap();
+    let (ta, tb) = (svc.tenant("a").unwrap(), svc.tenant("b").unwrap());
+    let ha = svc.load_for(ta, &m, &spec).unwrap();
+    let hb = svc.load_for(tb, &m, &spec).unwrap();
+    let want_y = m.spmv(&x1());
+    let mut tickets: Vec<ShardedTicket> = Vec::new();
+    for _ in 0..4 {
+        tickets.push(svc.submit_for(ta, ha, Request::Spmv { x: x1() }).unwrap());
+    }
+    for _ in 0..12 {
+        tickets.push(svc.submit_for(tb, hb, Request::Spmv { x: x1() }).unwrap());
+    }
+    svc.resume();
+    for t in &tickets {
+        let r = svc.wait(*t).unwrap().into_spmv().unwrap();
+        assert_eq!(r.y, want_y);
+    }
+    let log = svc.schedule_log().unwrap();
+    let want: Vec<TenantId> = (0..4).flat_map(|_| [ta, tb, tb, tb]).collect();
+    assert_eq!(log.dispatched, want, "dispatch order != weighted round-robin schedule");
+    assert_eq!(log.completed, want, "completion order != weighted round-robin schedule");
+}
+
+/// A flooding tenant cannot starve the other: with equal weights, the
+/// victim's i-th completion happens by global position 2i + 1 no matter
+/// how deep the flooder's backlog is (bounded wait).
+#[test]
+fn fairness_flooding_tenant_cannot_starve() {
+    use sparsep::coordinator::TenantSpec;
+    let m = matrix();
+    let spec = KernelSpec::coo_row();
+    let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+        .shards(2)
+        .tenants(vec![TenantSpec::new("flooder", 1), TenantSpec::new("victim", 1)])
+        .start_paused(true)
+        .record_schedule(true)
+        .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+        .unwrap();
+    let (tf, tv) = (svc.tenant("flooder").unwrap(), svc.tenant("victim").unwrap());
+    let hf = svc.load_for(tf, &m, &spec).unwrap();
+    let hv = svc.load_for(tv, &m, &spec).unwrap();
+    let mut tickets = Vec::new();
+    for _ in 0..24 {
+        tickets.push(svc.submit_for(tf, hf, Request::Spmv { x: x2() }).unwrap());
+    }
+    for _ in 0..6 {
+        tickets.push(svc.submit_for(tv, hv, Request::Spmv { x: x2() }).unwrap());
+    }
+    svc.resume();
+    for t in &tickets {
+        svc.wait(*t).unwrap();
+    }
+    let log = svc.schedule_log().unwrap();
+    assert_eq!(log.completed.len(), 30);
+    let victim_positions: Vec<usize> = log
+        .completed
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &t)| (t == tv).then_some(i))
+        .collect();
+    assert_eq!(victim_positions.len(), 6);
+    for (i, &pos) in victim_positions.iter().enumerate() {
+        assert!(
+            pos <= 2 * i + 1,
+            "victim completion {i} at position {pos} exceeds the bounded-wait bound {}",
+            2 * i + 1
+        );
+    }
+    let st = svc.stats();
+    assert_eq!(st.tenants[tf.index()].completed, 24);
+    assert_eq!(st.tenants[tv.index()].completed, 6);
+}
+
+/// Sharded tickets poll through `try_wait` to the same response `wait`
+/// would have claimed, and a claimed ticket stays claimed.
+#[test]
+fn sharded_try_wait_polls_to_the_wait_response() {
+    let m = matrix();
+    let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+        .shards(3)
+        .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+        .unwrap();
+    let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+    let t_wait = svc.submit(h, Request::Spmv { x: x1() }).unwrap();
+    let t_poll = svc.submit(h, Request::Spmv { x: x1() }).unwrap();
+    let gold = svc.wait(t_wait).unwrap().into_spmv().unwrap();
+    let polled = loop {
+        match svc.try_wait(t_poll).unwrap() {
+            Some(resp) => break resp.into_spmv().unwrap(),
+            None => std::thread::yield_now(),
+        }
+    };
+    assert_runs_identical(&polled, &gold, "sharded try_wait");
+    assert!(svc.try_wait(t_poll).is_err(), "claimed ticket must not be claimable again");
+    assert!(svc.wait(t_poll).is_err());
+}
+
+/// Concurrent submitters from many host threads share one facade: every
+/// answer stays oracle-exact and the counters add up.
+#[test]
+fn concurrent_submitters_share_one_facade() {
+    let m = matrix();
+    let svc = std::sync::Arc::new(
+        ShardedServiceBuilder::new()
+            .shards(3)
+            .build::<f64>(PimSystem::with_dpus(DPUS_PER_SHARD))
+            .unwrap(),
+    );
+    let h = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
+    std::thread::scope(|s| {
+        for tid in 0..4usize {
+            let svc = std::sync::Arc::clone(&svc);
+            let m = &m;
+            s.spawn(move || {
+                for k in 0..3usize {
+                    let x: Vec<f64> =
+                        (0..N).map(|i| ((i + 7 * tid + k) % 5) as f64 - 2.0).collect();
+                    let t = svc.submit(h, Request::Spmv { x: x.clone() }).unwrap();
+                    let r = svc.wait(t).unwrap().into_spmv().unwrap();
+                    assert_eq!(r.y, m.spmv(&x));
+                }
+            });
+        }
+    });
+    let st = svc.stats();
+    assert_eq!(st.submitted, 12);
+    assert_eq!(st.completed, 12);
+    assert_eq!(st.in_flight(), 0);
+}

@@ -9,6 +9,9 @@
 #   BENCH_service.json      queued-pipelined SpmvService vs synchronous
 #                           execution of a batched request stream,
 #                           serial + threaded
+#   BENCH_shard.json        the same request stream served by a
+#                           ShardedService at 1/2/4/8 shards (rank
+#                           groups), serial + threaded
 #
 # Knobs:
 #   BENCH_ROWS   (default 100000)   CG matrix dimension
@@ -19,6 +22,9 @@
 #   BENCH_BATCH  (default 32)       batch-bench vector count
 #   BENCH_REQUESTS (default 8)      service-bench batched requests
 #   BENCH_SERVICE_BATCH (default 16)  vectors per service request
+#   BENCH_SHARD_ROWS (default 50000)  shard-bench matrix dimension
+#   BENCH_SHARD_BATCH (default 8)   vectors per sharded request
+#   BENCH_SHARD_DPUS (default 64)   simulated DPUs per shard
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -54,3 +60,14 @@ cargo run --release -- bench-service \
   --out BENCH_service.json
 
 cat BENCH_service.json
+
+cargo run --release -- bench-shard \
+  --rows "${BENCH_SHARD_ROWS:-50000}" \
+  --deg 8 \
+  --requests "${BENCH_REQUESTS:-8}" \
+  --batch "${BENCH_SHARD_BATCH:-8}" \
+  --dpus "${BENCH_SHARD_DPUS:-64}" \
+  --threads "$THREADS" \
+  --out BENCH_shard.json
+
+cat BENCH_shard.json

@@ -12,6 +12,16 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+# The sharding/differential suites (incl. the deterministic fairness
+# tests, `fairness_*` in shard_equivalence) are the PR-4 acceptance
+# gates. They already ran inside the unfiltered tier-1 above; the named
+# re-run is deliberate redundancy so the gate stays visible and cannot
+# be lost to a future filtered/partial tier-1 invocation. Both suites
+# are seconds-scale (tiny matrices).
+echo "== sharding: differential + shard-planning + fairness suites =="
+cargo test -q --test shard_equivalence
+cargo test -q --test proptest_shard
+
 echo "== lint: cargo clippy --all-targets (warnings are errors) =="
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings

@@ -61,16 +61,18 @@ fn main() -> sparsep::util::Result<()> {
     //    once, claim the responses in any order. While the kernel stage
     //    simulates one request's block, the prep stage is already
     //    staging the next and the merge stage is finishing the previous.
+    //    Payloads are shared `Arc<[T]>` slices (`Vec<T>` converts in):
+    //    submitting clones references, never vector data.
     let t_batch = svc.submit(
         handle,
-        Request::Batch {
-            xs: (0..8)
+        Request::batch(
+            (0..8)
                 .map(|s| (0..m.ncols()).map(|i| ((i + s) % 5) as f32 - 2.0).collect())
-                .collect(),
-        },
+                .collect::<Vec<Vec<f32>>>(),
+        ),
     )?;
-    let t_iter = svc.submit(handle, Request::Iterate { x: x.clone(), iters: 20 })?;
-    let t_one = svc.submit(handle, Request::Spmv { x: x.clone() })?;
+    let t_iter = svc.submit(handle, Request::iterate(x.clone(), 20))?;
+    let t_one = svc.submit(handle, Request::spmv(x.clone()))?;
 
     // Out-of-order waits: responses park until claimed.
     let one = svc.wait(t_one)?.into_spmv()?;

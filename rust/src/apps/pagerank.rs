@@ -258,7 +258,7 @@ pub fn multi_tenant_personalized_pagerank(
             let mut tickets: Vec<(usize, crate::coordinator::ShardedTicket)> = Vec::new();
             let mut wave_err = None;
             for (i, r) in runs.iter().enumerate().filter(|(_, r)| !r.converged) {
-                match svc.submit_for(r.tenant, r.handle, Request::Batch { xs: r.ranks.clone() })
+                match svc.submit_for(r.tenant, r.handle, Request::batch(r.ranks.clone()))
                 {
                     Ok(t) => tickets.push((i, t)),
                     Err(e) => {

@@ -1,0 +1,231 @@
+//! Host hot-path benchmark (`sparsep bench-hotpath`).
+//!
+//! Quantifies the hot-path overhaul end to end, old vs new:
+//!
+//! * **engine**: iterated SpMV over one plan on the legacy
+//!   spawn-per-wave [`ThreadedEngine`] versus the persistent
+//!   [`PooledEngine`] (and serial as the floor) — the purest view of
+//!   what removing per-wave thread spawn/join buys, since an iterate is
+//!   one engine wave per iteration.
+//! * **serving**: the same engines behind a [`ShardedService`] at 1 and
+//!   4 shards, for all three request kinds (spmv / batch / iterate) —
+//!   this additionally exercises the `Arc` zero-copy scatter (payloads
+//!   shared across shards instead of memcpy'd per shard) and the
+//!   plan-time tasklet splits (kernels stop re-splitting per wave).
+//!
+//! Results are bit-identical across all engines and shard counts
+//! (locked by `engine_equivalence` / `shard_equivalence`); only wall
+//! clock differs. The JSON summary lands in `BENCH_hotpath.json` next
+//! to the other `BENCH_*.json` trajectories.
+//!
+//! [`ThreadedEngine`]: crate::coordinator::ThreadedEngine
+//! [`PooledEngine`]: crate::coordinator::PooledEngine
+
+use crate::coordinator::{
+    Engine, KernelSpec, ShardedService, ShardedServiceBuilder, SpmvExecutor,
+};
+use crate::matrix::generate;
+use crate::pim::{PimConfig, PimSystem};
+use crate::util::json::{num, s, Json};
+use crate::util::{Context, Result};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Shard counts the serving matrix sweeps.
+pub const SHARD_COUNTS: [usize; 2] = [1, 4];
+
+/// Sequential spmv requests per sample (the spmv row measures per-call
+/// overhead, so one call would be noise).
+const SPMV_CALLS: usize = 8;
+
+/// Knobs for [`run`] (CLI flags of `sparsep bench-hotpath`).
+#[derive(Clone, Debug)]
+pub struct HotpathBenchOpts {
+    /// Matrix dimension (square, scale-free class).
+    pub rows: usize,
+    /// Average degree (non-zeros per row).
+    pub deg: usize,
+    /// Iterations of the iterate measurements (= engine waves).
+    pub iters: usize,
+    /// Right-hand-side vectors of the batch measurement.
+    pub batch: usize,
+    /// Simulated DPU count (per shard on the serving rows).
+    pub n_dpus: usize,
+    /// Worker count for both threaded engines (0 = all cores).
+    pub threads: usize,
+    /// Kernel name (see `sparsep kernels`).
+    pub kernel: String,
+    /// Timed samples per measurement (min is reported).
+    pub samples: usize,
+    /// Output JSON path.
+    pub out: String,
+}
+
+impl Default for HotpathBenchOpts {
+    fn default() -> HotpathBenchOpts {
+        HotpathBenchOpts {
+            rows: 20_000,
+            deg: 8,
+            iters: 80,
+            batch: 16,
+            n_dpus: 256,
+            threads: 0,
+            kernel: "CSR.nnz".to_string(),
+            samples: 2,
+            out: "BENCH_hotpath.json".to_string(),
+        }
+    }
+}
+
+fn x_for(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i % 9) as f64) - 4.0).collect()
+}
+
+/// Run the benchmark and write the JSON summary to `opts.out`.
+pub fn run(opts: &HotpathBenchOpts) -> Result<()> {
+    crate::ensure!(opts.iters >= 1, "bench-hotpath needs --iters >= 1");
+    crate::ensure!(opts.batch >= 1, "bench-hotpath needs --batch >= 1");
+    crate::ensure!(opts.samples >= 1, "bench-hotpath needs --samples >= 1");
+    let spec = KernelSpec::by_name(&opts.kernel, 8)
+        .with_context(|| format!("unknown kernel {} (see `sparsep kernels`)", opts.kernel))?;
+    let m = generate::scale_free::<f64>(opts.rows, opts.rows, opts.deg, 0.6, 7);
+    let sys = PimSystem::new(PimConfig { n_dpus: opts.n_dpus, ..Default::default() })?;
+    let x = x_for(m.ncols());
+    let xs: Vec<Vec<f64>> = (0..opts.batch)
+        .map(|b| (0..m.ncols()).map(|i| ((i + 3 * b) % 9) as f64 - 4.0).collect())
+        .collect();
+    let engines = [
+        ("serial", Engine::Serial),
+        ("spawning", Engine::spawning(opts.threads)),
+        ("pooled", Engine::threaded(opts.threads)),
+    ];
+    println!(
+        "bench-hotpath: {} on {}x{} ({} nnz), {} DPUs, iterate x{}, batch x{}, spmv x{}",
+        spec.name,
+        m.nrows(),
+        m.ncols(),
+        m.nnz(),
+        opts.n_dpus,
+        opts.iters,
+        opts.batch,
+        SPMV_CALLS
+    );
+
+    let mut fields: BTreeMap<String, Json> = BTreeMap::new();
+    fields.insert("bench".into(), s("hotpath_overhaul"));
+    fields.insert("kernel".into(), s(&spec.name));
+    fields.insert("rows".into(), num(m.nrows() as f64));
+    fields.insert("nnz".into(), num(m.nnz() as f64));
+    fields.insert("iters".into(), num(opts.iters as f64));
+    fields.insert("batch".into(), num(opts.batch as f64));
+    fields.insert("spmv_calls".into(), num(SPMV_CALLS as f64));
+    fields.insert("dpus".into(), num(opts.n_dpus as f64));
+    fields.insert("host_threads".into(), num(opts.threads as f64));
+    fields.insert("samples".into(), num(opts.samples as f64));
+
+    // --- engine level: one plan, `iters` waves of run_iterations -----
+    // The plan is built once and shared (plans are engine-independent);
+    // the timed region is purely waves of kernel simulation, so the
+    // spawn-per-wave tax is the whole difference between the rows.
+    let plan = SpmvExecutor::new(sys.clone()).plan(&spec, &m)?;
+    let mut engine_iter = BTreeMap::new();
+    for (name, engine) in engines {
+        let exec = SpmvExecutor::with_engine(sys.clone(), engine);
+        // Untimed warm-up wave: the pooled engine spawns its
+        // process-wide workers on first use, and that one-time cost
+        // must not land in the timed region (it is exactly the cost the
+        // pool exists to amortize away).
+        let _ = plan.run_iterations(&exec, &x, 1)?;
+        let mut best = f64::INFINITY;
+        for _ in 0..opts.samples {
+            let t0 = Instant::now();
+            let it = plan.run_iterations(&exec, &x, opts.iters)?;
+            std::hint::black_box(&it.last.y);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        println!("  engine iterate {name:<9} {best:>8.3}s");
+        fields.insert(format!("engine_iterate_{name}_wall_s"), num(best));
+        engine_iter.insert(name, best);
+    }
+    let engine_speedup =
+        engine_iter["spawning"] / engine_iter["pooled"].max(1e-12);
+    println!("  engine iterate pooled-vs-spawning speedup {engine_speedup:>5.2}x");
+    fields.insert("pooled_vs_spawning_iterate_speedup".into(), num(engine_speedup));
+
+    // --- serving level: spmv / batch / iterate x engines x shards ----
+    for shards in SHARD_COUNTS {
+        for (name, engine) in engines {
+            let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+                .shards(shards)
+                .engine(engine)
+                .build(sys.clone())?;
+            let handle = svc.load(&m, &spec)?; // plans + splits, out of timing
+            // Verify once per configuration (results never depend on
+            // engine or shard count; the suites lock this, the bench
+            // spot-checks it).
+            crate::ensure!(
+                svc.spmv(&handle, &x)?.y == m.spmv(&x),
+                "hot-path output diverged from host oracle ({name}, {shards} shards)"
+            );
+            let (mut spmv_s, mut batch_s, mut iter_s) =
+                (f64::INFINITY, f64::INFINITY, f64::INFINITY);
+            for _ in 0..opts.samples {
+                let t0 = Instant::now();
+                for _ in 0..SPMV_CALLS {
+                    std::hint::black_box(&svc.spmv(&handle, &x)?.y);
+                }
+                spmv_s = spmv_s.min(t0.elapsed().as_secs_f64());
+                let t1 = Instant::now();
+                std::hint::black_box(&svc.spmv_batch(&handle, &xs)?.runs.last().unwrap().y);
+                batch_s = batch_s.min(t1.elapsed().as_secs_f64());
+                let t2 = Instant::now();
+                std::hint::black_box(&svc.iterate(&handle, &x, opts.iters)?.last.y);
+                iter_s = iter_s.min(t2.elapsed().as_secs_f64());
+            }
+            println!(
+                "  shards {shards} {name:<9} spmv {spmv_s:>8.3}s | batch {batch_s:>8.3}s | iterate {iter_s:>8.3}s"
+            );
+            fields.insert(format!("{name}_s{shards}_spmv_wall_s"), num(spmv_s));
+            fields.insert(format!("{name}_s{shards}_batch_wall_s"), num(batch_s));
+            fields.insert(format!("{name}_s{shards}_iterate_wall_s"), num(iter_s));
+        }
+    }
+
+    let j = Json::Obj(fields);
+    std::fs::write(&opts.out, j.to_string() + "\n")
+        .with_context(|| format!("write {}", opts.out))?;
+    println!("wrote {}", opts.out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_hotpath_smoke_writes_json() {
+        let dir = std::env::temp_dir().join("sparsep_bench_hotpath_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_hotpath_test.json");
+        let opts = HotpathBenchOpts {
+            rows: 300,
+            deg: 4,
+            iters: 3,
+            batch: 3,
+            n_dpus: 8,
+            threads: 2,
+            samples: 1,
+            out: out.to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+        let txt = std::fs::read_to_string(&out).unwrap();
+        let j = crate::util::json::Json::parse(&txt).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("hotpath_overhaul"));
+        assert!(j.get("engine_iterate_pooled_wall_s").as_f64().unwrap() > 0.0);
+        assert!(j.get("engine_iterate_spawning_wall_s").as_f64().unwrap() > 0.0);
+        assert!(j.get("pooled_s1_iterate_wall_s").as_f64().unwrap() > 0.0);
+        assert!(j.get("serial_s4_batch_wall_s").as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&out).ok();
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod batch;
 pub mod figures;
+pub mod hotpath;
 pub mod service;
 pub mod shard;
 

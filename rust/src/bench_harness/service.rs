@@ -135,9 +135,13 @@ pub fn run(opts: &ServiceBenchOpts) -> Result<()> {
             }
             sync_s = sync_s.min(t0.elapsed().as_secs_f64());
             // Pipelined: every ticket in flight at once; stages overlap
-            // across requests and blocks. Payload clones are built
-            // before the clock starts.
-            let owned: Vec<Vec<Vec<f64>>> = payloads.clone();
+            // across requests and blocks. Payload Arcs are built before
+            // the clock starts (request payloads are shared slices —
+            // submitting clones references, not vector data).
+            let owned: Vec<Vec<std::sync::Arc<[f64]>>> = payloads
+                .iter()
+                .map(|xs| xs.iter().map(|v| std::sync::Arc::from(&v[..])).collect())
+                .collect();
             let t1 = Instant::now();
             let tickets: Vec<_> = owned
                 .into_iter()

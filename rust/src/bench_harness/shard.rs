@@ -105,7 +105,12 @@ pub fn run(opts: &ShardBenchOpts) -> Result<()> {
         }
         let mut best = f64::INFINITY;
         for _ in 0..opts.samples {
-            let owned: Vec<Vec<Vec<f64>>> = payloads.clone();
+            // Payload Arcs built outside the clock; the facade's scatter
+            // shares them across shards instead of copying per shard.
+            let owned: Vec<Vec<std::sync::Arc<[f64]>>> = payloads
+                .iter()
+                .map(|xs| xs.iter().map(|v| std::sync::Arc::from(&v[..])).collect())
+                .collect();
             let t0 = Instant::now();
             let tickets: Vec<_> = owned
                 .into_iter()

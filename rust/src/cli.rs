@@ -118,13 +118,24 @@ COMMANDS:
       [--kernel K] [--threads T] [--samples S] [--out F]
                                   serial + threaded wall-clock;
                                   writes BENCH_shard.json (--dpus = per shard)
+  bench-hotpath                   host hot-path overhaul bench: pooled
+      [--rows N] [--deg K] [--iters I] [--batch B] [--dpus N]
+      [--kernel K] [--threads T] [--samples S] [--out F]
+                                  worker-pool engine vs legacy spawn-per-
+                                  wave threading vs serial, for spmv /
+                                  batch / iterate at 1 and 4 shards;
+                                  writes BENCH_hotpath.json
   artifacts                       list AOT artifacts + PJRT platform
   xla --rows N --deg K            SpMV through the AOT XLA path, verified
   cpu --rows N --deg K [--threads T]  measured host-CPU baseline
   help                            this message
 
 SERVICE FLAGS (run / serve / solve):
-  --engine serial|threaded        how per-DPU kernel simulations execute
+  --engine serial|threaded|pooled|spawning
+                                  how per-DPU kernel simulations execute
+                                  (threaded == pooled: the persistent
+                                  worker pool; spawning: legacy per-wave
+                                  thread spawn/join)
   --threads N                     worker threads for the threaded engine
   --vector-block auto|N           vectors per fused batch block
                                   (auto = adaptive policy, the default)
@@ -136,14 +147,18 @@ SERVICE FLAGS (run / serve / solve):
 
 /// Engine selection from `--engine` / `--threads` (defaults to the
 /// `SPARSEP_ENGINE` / `SPARSEP_THREADS` environment, i.e. serial).
+/// `threaded` (and its alias `pooled`) is the persistent worker-pool
+/// engine; `spawning` is the legacy spawn-per-wave threading kept as
+/// the `bench-hotpath` baseline.
 fn engine_from_args(args: &Args) -> Result<Engine> {
     let threads = args.get_usize("threads", 0)?;
     match args.get("engine") {
         None if threads > 0 => Ok(Engine::threaded(threads)),
         None => Ok(Engine::from_env()),
         Some("serial") => Ok(Engine::Serial),
-        Some("threaded") => Ok(Engine::threaded(threads)),
-        Some(other) => bail!("unknown --engine {other} (serial|threaded)"),
+        Some("threaded") | Some("pooled") => Ok(Engine::threaded(threads)),
+        Some("spawning") => Ok(Engine::spawning(threads)),
+        Some(other) => bail!("unknown --engine {other} (serial|threaded|pooled|spawning)"),
     }
 }
 
@@ -307,12 +322,12 @@ fn serve_demo_requests(
             0 => {
                 let x = vec_for(r);
                 let want = m.spmv(&x);
-                (Request::Spmv { x }, ServeExpect::Spmv(want))
+                (Request::spmv(x), ServeExpect::Spmv(want))
             }
             1 => {
                 let xs: Vec<Vec<f64>> = (0..batch).map(|b| vec_for(r + b)).collect();
                 let want = xs.iter().map(|x| m.spmv(x)).collect();
-                (Request::Batch { xs }, ServeExpect::Batch(want))
+                (Request::batch(xs), ServeExpect::Batch(want))
             }
             _ if square => {
                 let x = vec_for(r);
@@ -320,13 +335,13 @@ fn serve_demo_requests(
                 for _ in 0..iters {
                     want = m.spmv(&want);
                 }
-                (Request::Iterate { x, iters }, ServeExpect::Iterate(want))
+                (Request::iterate(x, iters), ServeExpect::Iterate(want))
             }
             _ => {
                 // Non-square matrices cannot iterate; substitute an spmv.
                 let x = vec_for(r);
                 let want = m.spmv(&x);
-                (Request::Spmv { x }, ServeExpect::Spmv(want))
+                (Request::spmv(x), ServeExpect::Spmv(want))
             }
         };
         out.push(entry);
@@ -779,6 +794,21 @@ pub fn run(args: Args) -> Result<()> {
                 out: args.get("out").unwrap_or(d.out.as_str()).to_string(),
             };
             crate::bench_harness::service::run(&opts)?;
+        }
+        "bench-hotpath" => {
+            let d = crate::bench_harness::hotpath::HotpathBenchOpts::default();
+            let opts = crate::bench_harness::hotpath::HotpathBenchOpts {
+                rows: args.get_usize("rows", d.rows)?,
+                deg: args.get_usize("deg", d.deg)?,
+                iters: args.get_usize("iters", d.iters)?,
+                batch: args.get_usize("batch", d.batch)?,
+                n_dpus: args.get_usize("dpus", d.n_dpus)?,
+                threads: args.get_usize("threads", cpu::hw_threads())?,
+                kernel: args.get("kernel").unwrap_or(d.kernel.as_str()).to_string(),
+                samples: args.get_usize("samples", d.samples)?,
+                out: args.get("out").unwrap_or(d.out.as_str()).to_string(),
+            };
+            crate::bench_harness::hotpath::run(&opts)?;
         }
         "bench-shard" => {
             let d = crate::bench_harness::shard::ShardBenchOpts::default();

@@ -6,12 +6,24 @@
 //! with `n_dpus` in *wall-clock* even though the modeled system is
 //! parallel. An [`ExecutionEngine`] closes that gap: it maps a pure
 //! per-DPU function over the work items, either serially
-//! ([`SerialEngine`]) or on `std::thread` scoped threads
-//! ([`ThreadedEngine`]).
+//! ([`SerialEngine`]), on `std::thread` scoped threads spawned per wave
+//! ([`ThreadedEngine`]), or on a persistent worker pool
+//! ([`PooledEngine`] — the default behind [`Engine::threaded`]).
+//!
+//! The pooled engine exists because spawn/join is a per-*wave* cost:
+//! iterative apps (CG / Jacobi / PageRank), the pipelined request
+//! queue's kernel stage, and every `ShardedService` backend drive one
+//! engine wave per iteration / vector block, so spawning fresh OS
+//! threads each time puts thread creation on the host hot path — the
+//! very orchestration overhead the PIM benchmarking literature warns
+//! dominates kernel time on real systems. Pool workers are long-lived,
+//! fed waves over a condvar-guarded queue, and shared process-wide (one
+//! pool per worker count), so concurrent services feed the same
+//! workers instead of oversubscribing the host.
 //!
 //! Engines only change *where* the per-item closures run. Results are
 //! collected back in item order and every aggregation (output vector,
-//! cycle maxima, energy sums) happens serially afterwards, so the two
+//! cycle maxima, energy sums) happens serially afterwards, so all the
 //! engines are bit-identical by construction — a property the
 //! `engine_equivalence` test suite locks in.
 //!
@@ -97,7 +109,11 @@ impl Default for ThreadedEngine {
 
 impl ExecutionEngine for ThreadedEngine {
     fn name(&self) -> &'static str {
-        "threaded"
+        // Matches the engine's CLI/env identity (`--engine spawning`,
+        // `SPARSEP_ENGINE=spawning`): "threaded" now names the pooled
+        // default, and operator-facing output must not suggest the
+        // pooled engine ran when the spawn-per-wave baseline did.
+        "spawning"
     }
 
     fn map_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
@@ -140,12 +156,295 @@ impl ExecutionEngine for ThreadedEngine {
                 parts.push(h.join().expect("execution-engine worker panicked"));
             }
         });
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for (i, r) in parts.into_iter().flatten() {
-            debug_assert!(out[i].is_none());
-            out[i] = Some(r);
+        // Reassemble by index: flatten the per-worker parts (each already
+        // ascending — workers pull from a monotonic counter) and sort into
+        // a single pre-sized buffer, instead of the old Vec<Option<R>> +
+        // unwrap pass that allocated and walked the output twice.
+        let mut tagged: Vec<(usize, R)> = Vec::with_capacity(n);
+        for part in parts {
+            tagged.extend(part);
         }
-        out.into_iter().map(|r| r.expect("execution engine missed an index")).collect()
+        tagged.sort_unstable_by_key(|&(i, _)| i);
+        debug_assert!(
+            tagged.windows(2).all(|w| w[0].0 != w[1].0),
+            "execution engine computed an index twice"
+        );
+        assert_eq!(tagged.len(), n, "execution engine missed an index");
+        tagged.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+/// Persistent worker-pool engine: long-lived workers fed waves of
+/// indexed work over a condvar-guarded queue, with the same
+/// atomic-counter dynamic load balancing as [`ThreadedEngine`] and the
+/// same by-index reassembly — bit-identical results, locked by the
+/// `engine_equivalence` suite.
+///
+/// Pools are process-wide, keyed by worker count: every engine value
+/// with the same `threads` shares one set of workers, so the pipelined
+/// request queue, iterative apps and all `ShardedService` backends feed
+/// the same pool instead of each spawning (and joining) fresh OS
+/// threads once per wave. The submitting thread also helps drain its
+/// own wave, so small waves skip a context switch entirely and a wave
+/// can never deadlock behind a busy pool. Workers park on a condvar
+/// while idle and live for the process lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PooledEngine {
+    /// Worker count; 0 means "all available hardware threads".
+    pub threads: usize,
+}
+
+impl PooledEngine {
+    pub fn new(threads: usize) -> PooledEngine {
+        PooledEngine { threads }
+    }
+
+    /// Resolved worker count (>= 1).
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+}
+
+impl ExecutionEngine for PooledEngine {
+    fn name(&self) -> &'static str {
+        "pooled"
+    }
+
+    fn map_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let workers = self.effective_threads();
+        if workers <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        // One parking slot per index: each index is claimed by exactly
+        // one thread (atomic counter) and written under its own
+        // uncontended lock; collection below is by index, so which
+        // worker ran what can never leak into results.
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let task = |i: usize| {
+            let r = f(i);
+            *slots[i].lock().expect("pool result slot poisoned") = Some(r);
+        };
+        pool::global(workers).run_wave(n, &task);
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .expect("pool result slot poisoned")
+                    .expect("pooled engine missed an index")
+            })
+            .collect()
+    }
+}
+
+use std::sync::Mutex;
+
+/// The process-wide worker pools behind [`PooledEngine`].
+mod pool {
+    use std::collections::{HashMap, VecDeque};
+    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+    /// Lifetime-erased pointer to a wave's per-index task. The submitter
+    /// blocks inside [`WorkerPool::run_wave`] until every index of its
+    /// wave has been computed and the wave is retired from the queue, so
+    /// the pointee outlives every dereference: workers only touch the
+    /// pointer after claiming a not-yet-completed index (which keeps the
+    /// submitter blocked), and panics inside the task are caught in
+    /// [`Wave::drain`] — no unwind can exit `run_wave` (or kill a
+    /// worker) while the wave is still queued.
+    #[derive(Clone, Copy)]
+    struct TaskPtr {
+        data: *const (),
+        call: unsafe fn(*const (), usize),
+    }
+
+    unsafe impl Send for TaskPtr {}
+    unsafe impl Sync for TaskPtr {}
+
+    unsafe fn call_task<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+        (*(data as *const F))(i)
+    }
+
+    /// One wave of `n` indexed work items shared between the submitting
+    /// thread and the pool workers.
+    struct Wave {
+        task: TaskPtr,
+        n: usize,
+        /// Next index to claim (dynamic load balancing: skewed per-item
+        /// cost cannot strand one thread with all the heavy items).
+        next: AtomicUsize,
+        /// Indices fully computed; the wave is done at `n`.
+        completed: AtomicUsize,
+        done: Mutex<bool>,
+        done_cv: Condvar,
+        /// First panic payload captured from the task closure, re-raised
+        /// on the submitting thread after the wave completes — the
+        /// pooled analogue of the spawn-per-wave engine's
+        /// `join().expect(...)` propagation.
+        panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    }
+
+    impl Wave {
+        /// Claim and compute indices until the counter is exhausted.
+        /// Run by pool workers and by the submitting thread alike.
+        fn drain(&self) {
+            loop {
+                let i = self.next.fetch_add(1, Ordering::Relaxed);
+                if i >= self.n {
+                    return;
+                }
+                // The claimed index is not yet completed, so the
+                // submitter is still blocked and the task pointer valid.
+                //
+                // Panics must not escape: a dying pool worker would
+                // strand the submitter (completed never reaches n), and
+                // a submitter unwinding out of its own drain would leave
+                // a dangling task pointer queued. Catch, record, count
+                // the index as completed, and let the submitter re-raise
+                // once the wave is retired. (AssertUnwindSafe: a
+                // panicked index leaves its result slot unwritten, but
+                // the submitter re-raises before reading any slot, so a
+                // broken invariant is never observed.)
+                let outcome = catch_unwind(AssertUnwindSafe(|| unsafe {
+                    (self.task.call)(self.task.data, i)
+                }));
+                if let Err(payload) = outcome {
+                    let mut first = self.panic.lock().expect("wave panic slot poisoned");
+                    if first.is_none() {
+                        *first = Some(payload);
+                    }
+                }
+                // AcqRel chains every worker's writes into the release
+                // sequence the final increment publishes, so the
+                // submitter (synchronizing through `done`) observes all
+                // result slots.
+                if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+                    *self.done.lock().expect("wave done flag poisoned") = true;
+                    self.done_cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// A set of persistent workers plus the queue of in-flight waves.
+    /// Multiple waves may be in flight at once (concurrent services);
+    /// workers always serve the oldest wave that still has unclaimed
+    /// indices.
+    pub(super) struct WorkerPool {
+        queue: Mutex<VecDeque<Arc<Wave>>>,
+        work_ready: Condvar,
+    }
+
+    impl WorkerPool {
+        fn with_workers(workers: usize) -> Arc<WorkerPool> {
+            let pool = Arc::new(WorkerPool {
+                queue: Mutex::new(VecDeque::new()),
+                work_ready: Condvar::new(),
+            });
+            for k in 0..workers {
+                let p = Arc::clone(&pool);
+                std::thread::Builder::new()
+                    .name(format!("sparsep-pool{workers}-w{k}"))
+                    .spawn(move || p.worker_loop())
+                    .expect("spawn pool worker");
+            }
+            pool
+        }
+
+        fn worker_loop(&self) {
+            loop {
+                let wave = {
+                    let mut q = self.queue.lock().expect("pool queue poisoned");
+                    loop {
+                        if let Some(w) =
+                            q.iter().find(|w| w.next.load(Ordering::Relaxed) < w.n)
+                        {
+                            break Arc::clone(w);
+                        }
+                        q = self.work_ready.wait(q).expect("pool queue poisoned");
+                    }
+                };
+                wave.drain();
+            }
+        }
+
+        /// Publish one wave, help drain it, and block until every index
+        /// has been computed. On return no thread holds the task pointer.
+        pub(super) fn run_wave<F: Fn(usize) + Sync>(&self, n: usize, task: &F) {
+            debug_assert!(n > 0);
+            let wave = Arc::new(Wave {
+                task: TaskPtr { data: task as *const F as *const (), call: call_task::<F> },
+                n,
+                next: AtomicUsize::new(0),
+                completed: AtomicUsize::new(0),
+                done: Mutex::new(false),
+                done_cv: Condvar::new(),
+                panic: Mutex::new(None),
+            });
+            self.queue.lock().expect("pool queue poisoned").push_back(Arc::clone(&wave));
+            self.work_ready.notify_all();
+            // Help drain our own wave: a small wave finishes on this
+            // thread without a context switch, and even a fully busy
+            // pool cannot deadlock a submitter.
+            wave.drain();
+            // Wait for stragglers still computing their last claimed
+            // index on other workers.
+            let mut done = wave.done.lock().expect("wave done flag poisoned");
+            while !*done {
+                done = wave.done_cv.wait(done).expect("wave done flag poisoned");
+            }
+            drop(done);
+            // Retire the wave: after run_wave returns (or unwinds via
+            // the re-raise below), the caller's task closure is dead, so
+            // it must leave the queue with it. (Workers that still hold
+            // an Arc see an exhausted counter and never touch the task
+            // pointer again.)
+            {
+                let mut q = self.queue.lock().expect("pool queue poisoned");
+                if let Some(pos) = q.iter().position(|w| Arc::ptr_eq(w, &wave)) {
+                    q.remove(pos);
+                }
+            }
+            // A task panicked (on whichever thread ran it): re-raise on
+            // the submitter, exactly like the spawn-per-wave engine's
+            // `join().expect(...)` would have. The wave is already
+            // retired, so the unwind is safe.
+            if let Some(payload) = wave.panic.lock().expect("wave panic slot poisoned").take() {
+                resume_unwind(payload);
+            }
+        }
+    }
+
+    /// The process-wide pool for `workers` workers, created on first
+    /// use. Pools are never torn down — idle workers cost a parked
+    /// thread each, and sharing them is exactly what keeps thread
+    /// spawn/join off the per-wave hot path.
+    ///
+    /// The registry lock only guards the map; pool *construction* —
+    /// worker spawning, which can fail under thread-limit pressure —
+    /// runs outside it through a per-size once-cell. A failed spawn
+    /// therefore panics only the calling wave (and is retried on the
+    /// next call: a panicking `get_or_init` leaves the cell empty)
+    /// instead of poisoning the registry for every future wave in the
+    /// process.
+    pub(super) fn global(workers: usize) -> Arc<WorkerPool> {
+        type Registry = Mutex<HashMap<usize, Arc<OnceLock<Arc<WorkerPool>>>>>;
+        static POOLS: OnceLock<Registry> = OnceLock::new();
+        let registry = POOLS.get_or_init(|| Mutex::new(HashMap::new()));
+        let cell = {
+            let mut map = registry.lock().expect("pool registry poisoned");
+            Arc::clone(map.entry(workers).or_default())
+        };
+        Arc::clone(cell.get_or_init(|| WorkerPool::with_workers(workers)))
     }
 }
 
@@ -153,33 +452,67 @@ impl ExecutionEngine for ThreadedEngine {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
     Serial,
+    /// Legacy spawn-per-wave threading (kept for the hot-path benches;
+    /// [`Engine::threaded`] now builds the pooled engine instead).
     Threaded(ThreadedEngine),
+    /// Persistent worker pool — the threaded default.
+    Pooled(PooledEngine),
 }
 
 impl Engine {
-    /// Threaded engine with `threads` workers (0 = all hardware threads).
+    /// Threaded engine with `threads` workers (0 = all hardware
+    /// threads). Since the hot-path overhaul this is the *pooled*
+    /// engine: waves run on persistent workers instead of paying thread
+    /// spawn/join per wave. Results are bit-identical either way
+    /// (`engine_equivalence`); use [`Engine::spawning`] for the legacy
+    /// spawn-per-wave behavior.
     pub fn threaded(threads: usize) -> Engine {
+        Engine::Pooled(PooledEngine::new(threads))
+    }
+
+    /// Legacy spawn-per-wave threaded engine (what [`Engine::threaded`]
+    /// used to build) — the old-vs-new baseline of `bench-hotpath`.
+    pub fn spawning(threads: usize) -> Engine {
         Engine::Threaded(ThreadedEngine::new(threads))
     }
 
     /// Engine selection from the environment: `SPARSEP_ENGINE`
-    /// (`serial` | `threaded`, default serial) and `SPARSEP_THREADS`
-    /// (worker count for the threaded engine, default all cores). This
-    /// is how the CLI's `--engine` / `--threads` flags reach code that
-    /// builds its own executors (the bench-harness figure drivers call
-    /// this explicitly; `SpmvExecutor::new` itself stays deterministic
-    /// and defaults to serial).
+    /// (`serial` | `threaded`/`pooled` | `spawning`, default serial) and
+    /// `SPARSEP_THREADS` (worker count, default all cores). This is how
+    /// the CLI's `--engine` / `--threads` flags reach code that builds
+    /// its own executors (the bench-harness figure drivers call this
+    /// explicitly; `SpmvExecutor::new` itself stays deterministic and
+    /// defaults to serial).
     pub fn from_env() -> Engine {
-        let threads = std::env::var("SPARSEP_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or(0);
-        match std::env::var("SPARSEP_ENGINE").as_deref() {
-            Ok("threaded") => Engine::threaded(threads),
-            Ok("serial") | Err(_) => Engine::Serial,
-            Ok(other) => {
+        let engine = std::env::var("SPARSEP_ENGINE").ok();
+        let threads = std::env::var("SPARSEP_THREADS").ok();
+        Engine::resolve(engine.as_deref(), threads.as_deref())
+    }
+
+    /// The resolution (and warning) logic behind [`Engine::from_env`],
+    /// split out over plain values so the error paths are unit-testable
+    /// without mutating the process environment (`set_var` races other
+    /// test threads reading it).
+    fn resolve(engine: Option<&str>, threads: Option<&str>) -> Engine {
+        let threads = match threads {
+            None => 0,
+            Some(v) => match v.trim().parse::<usize>() {
+                Ok(n) => n,
+                Err(_) => {
+                    eprintln!(
+                        "warning: unparseable SPARSEP_THREADS={v:?} (expected a worker count); using all cores"
+                    );
+                    0
+                }
+            },
+        };
+        match engine {
+            Some("threaded") | Some("pooled") => Engine::threaded(threads),
+            Some("spawning") => Engine::spawning(threads),
+            Some("serial") | None => Engine::Serial,
+            Some(other) => {
                 eprintln!(
-                    "warning: unrecognized SPARSEP_ENGINE={other:?} (expected serial|threaded); using serial"
+                    "warning: unrecognized SPARSEP_ENGINE={other:?} (expected serial|threaded|pooled|spawning); using serial"
                 );
                 Engine::Serial
             }
@@ -194,8 +527,12 @@ impl Engine {
         match self {
             Engine::Serial => std::env::set_var("SPARSEP_ENGINE", "serial"),
             Engine::Threaded(t) => {
-                std::env::set_var("SPARSEP_ENGINE", "threaded");
+                std::env::set_var("SPARSEP_ENGINE", "spawning");
                 std::env::set_var("SPARSEP_THREADS", t.threads.to_string());
+            }
+            Engine::Pooled(p) => {
+                std::env::set_var("SPARSEP_ENGINE", "threaded");
+                std::env::set_var("SPARSEP_THREADS", p.threads.to_string());
             }
         }
     }
@@ -212,6 +549,7 @@ impl ExecutionEngine for Engine {
         match self {
             Engine::Serial => SerialEngine.name(),
             Engine::Threaded(t) => t.name(),
+            Engine::Pooled(p) => p.name(),
         }
     }
 
@@ -223,6 +561,7 @@ impl ExecutionEngine for Engine {
         match self {
             Engine::Serial => SerialEngine.map_indexed(n, f),
             Engine::Threaded(t) => t.map_indexed(n, f),
+            Engine::Pooled(p) => p.map_indexed(n, f),
         }
     }
 }
@@ -272,9 +611,14 @@ mod tests {
     #[test]
     fn engine_enum_delegates() {
         assert_eq!(Engine::Serial.name(), "serial");
-        assert_eq!(Engine::threaded(2).name(), "threaded");
+        assert_eq!(Engine::threaded(2).name(), "pooled", "threaded default is the pool");
+        assert_eq!(Engine::spawning(2).name(), "spawning", "legacy engine owns its CLI name");
         assert_eq!(
             Engine::threaded(3).map_indexed(10, |i| i),
+            Engine::Serial.map_indexed(10, |i| i)
+        );
+        assert_eq!(
+            Engine::spawning(3).map_indexed(10, |i| i),
             Engine::Serial.map_indexed(10, |i| i)
         );
     }
@@ -283,5 +627,105 @@ mod tests {
     fn effective_threads_resolves_zero() {
         assert!(ThreadedEngine::new(0).effective_threads() >= 1);
         assert_eq!(ThreadedEngine::new(6).effective_threads(), 6);
+        assert!(PooledEngine::new(0).effective_threads() >= 1);
+        assert_eq!(PooledEngine::new(6).effective_threads(), 6);
+    }
+
+    #[test]
+    fn pooled_matches_serial_for_any_worker_count() {
+        let work = |i: usize| (i, i * 31 + 7);
+        let want = SerialEngine.map_indexed(113, work);
+        for t in [1usize, 2, 3, 8, 64] {
+            let got = PooledEngine::new(t).map_indexed(113, work);
+            assert_eq!(got, want, "workers={t}");
+        }
+    }
+
+    #[test]
+    fn pooled_handles_empty_and_single() {
+        assert_eq!(PooledEngine::new(4).map_indexed(0, |i| i), Vec::<usize>::new());
+        assert_eq!(PooledEngine::new(4).map_indexed(1, |i| i + 9), vec![9]);
+    }
+
+    #[test]
+    fn pooled_reuses_workers_across_waves() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        // Several waves on one engine: the union of worker threads ever
+        // seen is capped at the pool size, where spawn-per-wave
+        // threading would mint fresh threads every wave. (A union bound
+        // is scheduling-independent — even an unlucky scheduler can
+        // only ever pick subsets of the same persistent workers; an
+        // intersection-style assertion would flake on loaded CI.)
+        let me = std::thread::current().id();
+        let engine = PooledEngine::new(4);
+        let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        for _ in 0..3 {
+            engine.map_indexed(64, |i| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+                std::thread::sleep(std::time::Duration::from_micros(300));
+                i
+            });
+        }
+        let mut ids = ids.into_inner().unwrap();
+        ids.remove(&me); // the submitter helps drain its own waves
+        assert!(!ids.is_empty(), "expected pool workers to participate");
+        assert!(
+            ids.len() <= 4,
+            "3 waves on a 4-worker pool saw {} distinct worker threads — workers did not persist",
+            ids.len()
+        );
+    }
+
+    #[test]
+    fn pooled_propagates_task_panics_and_pool_survives() {
+        // A panicking task must reach the submitter (like the
+        // spawn-per-wave engine's join().expect) — not strand it on the
+        // done condvar or kill a pool worker.
+        let outcome = std::panic::catch_unwind(|| {
+            PooledEngine::new(3).map_indexed(32, |i| {
+                assert!(i != 17, "injected task failure");
+                i
+            })
+        });
+        assert!(outcome.is_err(), "a task panic must propagate to the submitter");
+        // The pool is intact afterwards: the same workers serve the
+        // next wave to completion.
+        let got = PooledEngine::new(3).map_indexed(16, |i| i + 1);
+        assert_eq!(got, (1..=16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pooled_concurrent_waves_do_not_cross_talk() {
+        // Several submitters share one pool at once; every wave must
+        // come back complete and in index order.
+        std::thread::scope(|s| {
+            for k in 0..4usize {
+                s.spawn(move || {
+                    let got = PooledEngine::new(3).map_indexed(200, move |i| i * 7 + k);
+                    let want: Vec<usize> = (0..200).map(|i| i * 7 + k).collect();
+                    assert_eq!(got, want, "submitter {k}");
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn env_resolution_warns_and_falls_back_on_bad_values() {
+        // Both env-var error paths, exercised through the pure
+        // resolution core (no set_var: mutating the process environment
+        // would race every other test thread reading it).
+        // A bogus engine name falls back to serial...
+        assert_eq!(Engine::resolve(Some("warp-drive"), Some("many")), Engine::Serial);
+        // ...and an unparseable thread count falls back to 0 (all
+        // cores), not garbage — for every engine kind.
+        assert_eq!(Engine::resolve(Some("threaded"), Some("many")), Engine::threaded(0));
+        assert_eq!(Engine::resolve(Some("spawning"), Some("lots")), Engine::spawning(0));
+        // The healthy paths resolve exactly.
+        assert_eq!(Engine::resolve(None, None), Engine::Serial);
+        assert_eq!(Engine::resolve(Some("serial"), Some("3")), Engine::Serial);
+        assert_eq!(Engine::resolve(Some("threaded"), Some("3")), Engine::threaded(3));
+        assert_eq!(Engine::resolve(Some("pooled"), Some("3")), Engine::threaded(3));
+        assert_eq!(Engine::resolve(Some("spawning"), Some("3")), Engine::spawning(3));
     }
 }

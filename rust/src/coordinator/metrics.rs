@@ -245,8 +245,9 @@ impl ServiceStats {
 /// registration order).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TenantStats {
-    /// Tenant name.
-    pub name: String,
+    /// Tenant name (interned: shares the scheduler's `Arc<str>`, so
+    /// snapshotting stats allocates no strings).
+    pub name: std::sync::Arc<str>,
     /// Weighted-round-robin share (dispatches per scheduling cycle).
     pub weight: usize,
     /// In-flight quota (`usize::MAX` = unlimited).

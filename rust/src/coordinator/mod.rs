@@ -67,7 +67,7 @@ pub mod shard;
 pub mod spec;
 
 pub use cache::PlanCache;
-pub use engine::{Engine, ExecutionEngine, SerialEngine, ThreadedEngine};
+pub use engine::{Engine, ExecutionEngine, PooledEngine, SerialEngine, ThreadedEngine};
 pub use metrics::{
     BatchIterationsResult, BatchResult, Breakdown, IterationsResult, RunResult, RunStats,
     ServiceStats, ShardedStats, TenantStats,

@@ -50,6 +50,12 @@ pub struct WorkItem<T: SpElem> {
     pub accumulate: bool,
     /// Non-zeros in the slice (imbalance accounting).
     pub nnz: usize,
+    /// Plan-time per-tasklet split for this slice (computed for the
+    /// planning system's tasklet count): kernels consume it instead of
+    /// re-running their O(nrows)-and-worse split passes per invocation.
+    /// Executors with a *different* tasklet count (tasklet sweeps over
+    /// one plan are allowed) recompute on the fly.
+    pub(crate) split: kernels::TaskletSplit,
 }
 
 /// A reusable execution plan for one (matrix, spec, system) triple.
@@ -121,6 +127,16 @@ impl<T: SpElem> ExecutionPlan<T> {
     /// vector's partials through exactly this code, in vector order.
     pub(crate) fn merge_partials(&self, outputs: &[DpuKernelOutput<T>]) -> Vec<T> {
         let mut y = vec![T::zero(); self.nrows];
+        self.merge_partials_into(outputs, &mut y);
+        y
+    }
+
+    /// [`Self::merge_partials`] into a caller-supplied buffer (already
+    /// zeroed, length `nrows`) — the request queue's merge stage feeds
+    /// recycled buffers from its output pool through here so iterate
+    /// requests stop allocating one output vector per iteration.
+    pub(crate) fn merge_partials_into(&self, outputs: &[DpuKernelOutput<T>], y: &mut [T]) {
+        debug_assert_eq!(y.len(), self.nrows);
         for (item, out) in self.items.iter().zip(outputs) {
             if item.accumulate {
                 for (i, v) in out.y.iter().enumerate() {
@@ -131,7 +147,6 @@ impl<T: SpElem> ExecutionPlan<T> {
                 y[item.y_start..item.y_start + out.y.len()].copy_from_slice(&out.y);
             }
         }
-        y
     }
 
     /// Execute one SpMV `y = A * x` over this plan on `exec` — the
@@ -249,7 +264,25 @@ fn convert_slice<T: SpElem>(spec: &KernelSpec, coo: CooMatrix<T>) -> (DpuSlice<T
     }
 }
 
-/// Run the kernel matching a work item's format on one DPU.
+/// Compute the plan-time tasklet split for one converted slice.
+fn split_for<T: SpElem>(
+    cfg: &PimConfig,
+    spec: &KernelSpec,
+    slice: &DpuSlice<T>,
+) -> kernels::TaskletSplit {
+    let (t, bal) = (cfg.tasklets, spec.tasklet_balance);
+    match slice {
+        DpuSlice::Csr(m) => kernels::TaskletSplit::Csr(kernels::csr::csr_split(m, t, bal)),
+        DpuSlice::Coo(m) => kernels::TaskletSplit::Coo(kernels::coo::coo_split(m, t, bal)),
+        DpuSlice::Bcsr(m) => kernels::TaskletSplit::Bcsr(kernels::bcsr::bcsr_split(m, t, bal)),
+        DpuSlice::Bcoo(m) => kernels::TaskletSplit::Bcoo(kernels::bcoo::bcoo_split(m, t, bal)),
+    }
+}
+
+/// Run the kernel matching a work item's format on one DPU, consuming
+/// the item's plan-time tasklet split when the executing system's
+/// tasklet count matches the planned one (the common case); tasklet
+/// sweeps over one plan recompute the split on the fly.
 pub(crate) fn run_item<T: SpElem>(
     cfg: &PimConfig,
     spec: &KernelSpec,
@@ -257,22 +290,37 @@ pub(crate) fn run_item<T: SpElem>(
     x: &[T],
 ) -> DpuKernelOutput<T> {
     let xs = &x[item.x_range.clone()];
-    match &item.slice {
-        DpuSlice::Csr(m) => kernels::csr::run_csr_dpu(cfg, m, xs, spec.tasklet_balance, spec.sync),
-        DpuSlice::Coo(m) => kernels::coo::run_coo_dpu(cfg, m, xs, spec.tasklet_balance, spec.sync),
-        DpuSlice::Bcsr(m) => {
-            kernels::bcsr::run_bcsr_dpu(cfg, m, xs, spec.tasklet_balance, spec.sync)
+    let (bal, sync) = (spec.tasklet_balance, spec.sync);
+    if item.split.tasklets() != cfg.tasklets {
+        return match &item.slice {
+            DpuSlice::Csr(m) => kernels::csr::run_csr_dpu(cfg, m, xs, bal, sync),
+            DpuSlice::Coo(m) => kernels::coo::run_coo_dpu(cfg, m, xs, bal, sync),
+            DpuSlice::Bcsr(m) => kernels::bcsr::run_bcsr_dpu(cfg, m, xs, bal, sync),
+            DpuSlice::Bcoo(m) => kernels::bcoo::run_bcoo_dpu(cfg, m, xs, bal, sync),
+        };
+    }
+    match (&item.slice, &item.split) {
+        (DpuSlice::Csr(m), kernels::TaskletSplit::Csr(s)) => {
+            kernels::csr::run_csr_dpu_cached(cfg, m, xs, s, sync)
         }
-        DpuSlice::Bcoo(m) => {
-            kernels::bcoo::run_bcoo_dpu(cfg, m, xs, spec.tasklet_balance, spec.sync)
+        (DpuSlice::Coo(m), kernels::TaskletSplit::Coo(s)) => {
+            kernels::coo::run_coo_dpu_cached(cfg, m, xs, s, bal, sync)
         }
+        (DpuSlice::Bcsr(m), kernels::TaskletSplit::Bcsr(s)) => {
+            kernels::bcsr::run_bcsr_dpu_cached(cfg, m, xs, s, sync)
+        }
+        (DpuSlice::Bcoo(m), kernels::TaskletSplit::Bcoo(s)) => {
+            kernels::bcoo::run_bcoo_dpu_cached(cfg, m, xs, s, sync)
+        }
+        _ => unreachable!("work-item split format always matches its slice format"),
     }
 }
 
 /// Run the batched kernel matching a work item's format on one DPU: one
 /// output per input vector, each bit-identical to [`run_item`] on that
 /// vector. `xs` holds full-length input vectors; the item's x-window is
-/// applied here.
+/// applied here. The plan-time tasklet split is consumed exactly like
+/// [`run_item`] does.
 pub(crate) fn run_item_batch<T: SpElem>(
     cfg: &PimConfig,
     spec: &KernelSpec,
@@ -280,19 +328,29 @@ pub(crate) fn run_item_batch<T: SpElem>(
     xs: &[&[T]],
 ) -> Vec<DpuKernelOutput<T>> {
     let windows: Vec<&[T]> = xs.iter().map(|x| &x[item.x_range.clone()]).collect();
-    match &item.slice {
-        DpuSlice::Csr(m) => {
-            kernels::csr::run_csr_dpu_batch(cfg, m, &windows, spec.tasklet_balance, spec.sync)
+    let (bal, sync) = (spec.tasklet_balance, spec.sync);
+    if item.split.tasklets() != cfg.tasklets {
+        return match &item.slice {
+            DpuSlice::Csr(m) => kernels::csr::run_csr_dpu_batch(cfg, m, &windows, bal, sync),
+            DpuSlice::Coo(m) => kernels::coo::run_coo_dpu_batch(cfg, m, &windows, bal, sync),
+            DpuSlice::Bcsr(m) => kernels::bcsr::run_bcsr_dpu_batch(cfg, m, &windows, bal, sync),
+            DpuSlice::Bcoo(m) => kernels::bcoo::run_bcoo_dpu_batch(cfg, m, &windows, bal, sync),
+        };
+    }
+    match (&item.slice, &item.split) {
+        (DpuSlice::Csr(m), kernels::TaskletSplit::Csr(s)) => {
+            kernels::csr::run_csr_dpu_batch_cached(cfg, m, &windows, s, sync)
         }
-        DpuSlice::Coo(m) => {
-            kernels::coo::run_coo_dpu_batch(cfg, m, &windows, spec.tasklet_balance, spec.sync)
+        (DpuSlice::Coo(m), kernels::TaskletSplit::Coo(s)) => {
+            kernels::coo::run_coo_dpu_batch_cached(cfg, m, &windows, s, bal, sync)
         }
-        DpuSlice::Bcsr(m) => {
-            kernels::bcsr::run_bcsr_dpu_batch(cfg, m, &windows, spec.tasklet_balance, spec.sync)
+        (DpuSlice::Bcsr(m), kernels::TaskletSplit::Bcsr(s)) => {
+            kernels::bcsr::run_bcsr_dpu_batch_cached(cfg, m, &windows, s, sync)
         }
-        DpuSlice::Bcoo(m) => {
-            kernels::bcoo::run_bcoo_dpu_batch(cfg, m, &windows, spec.tasklet_balance, spec.sync)
+        (DpuSlice::Bcoo(m), kernels::TaskletSplit::Bcoo(s)) => {
+            kernels::bcoo::run_bcoo_dpu_batch_cached(cfg, m, &windows, s, sync)
         }
+        _ => unreachable!("work-item split format always matches its slice format"),
     }
 }
 
@@ -367,12 +425,14 @@ fn build_one_d<T: SpElem>(
         let nnz = coo.nnz();
         let (slice, bytes) = convert_slice(spec, coo);
         slice_bytes.push(bytes);
+        let split = split_for(cfg, spec, &slice);
         items.push(WorkItem {
             slice,
             x_range: 0..m.ncols(),
             y_start: range.start,
             accumulate: false,
             nnz,
+            split,
         });
     }
 
@@ -424,12 +484,15 @@ fn build_one_d_elem<T: SpElem>(
         slice_bytes.push(slice.size_bytes());
         y_sizes.push(slice.nrows() * dt.size_bytes());
         partial_rows += slice.nrows();
+        let slice = DpuSlice::Coo(slice);
+        let split = split_for(cfg, spec, &slice);
         items.push(WorkItem {
-            slice: DpuSlice::Coo(slice),
+            slice,
             x_range: 0..m.ncols(),
             y_start: first_row,
             accumulate: true,
             nnz,
+            split,
         });
     }
 
@@ -496,12 +559,14 @@ fn build_two_d<T: SpElem>(
             x_sizes.push(cr.len() * dt.size_bytes());
             y_sizes.push(tile.rows.len() * dt.size_bytes());
             merged_bytes += (tile.rows.len() * dt.size_bytes()) as u64;
+            let split = split_for(cfg, spec, &slice);
             items.push(WorkItem {
                 slice,
                 x_range: cr.clone(),
                 y_start: tile.rows.start,
                 accumulate: true,
                 nnz,
+                split,
             });
         }
     }
@@ -568,6 +633,26 @@ mod tests {
         assert!(p.items().iter().all(|it| it.accumulate));
         assert!(p.items().iter().all(|it| it.x_range.len() == 64));
         assert!(p.merged_bytes > 0);
+    }
+
+    #[test]
+    fn plan_caches_tasklet_splits_for_every_format() {
+        let m = generate::scale_free::<f64>(200, 200, 6, 0.6, 5);
+        let cfg = PimSystem::with_dpus(8).cfg;
+        for spec in [
+            KernelSpec::csr_nnz(),
+            KernelSpec::coo_nnz(),
+            KernelSpec::bcsr_nnz(),
+            KernelSpec::bcoo_nnz(),
+            KernelSpec::two_d(Format::Coo, 4),
+        ] {
+            let p = build(&cfg, &spec, &m).unwrap();
+            assert!(
+                p.items().iter().all(|it| it.split.tasklets() == cfg.tasklets),
+                "{}: every work item must carry a split for the planned tasklet count",
+                spec.name
+            );
+        }
     }
 
     #[test]

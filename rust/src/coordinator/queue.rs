@@ -50,6 +50,15 @@
 //! an iterate request serializes the *intake* while its in-flight
 //! blocks still overlap across the three stages; queued requests behind
 //! it wait their turn, preserving FIFO service order.
+//!
+//! **Zero-copy payloads.** Vector payloads flow through the pipeline as
+//! the `Arc<[T]>`s the request carried: block messages clone references
+//! into stage 2, never vector data. Iterate feedback is zero-copy too —
+//! stage 3 moves each iteration's owned output vector to stage 1, which
+//! feeds it to the next wave as-is; when that wave retires the buffer,
+//! stage 1 returns it to stage 3's length-keyed pool over a recycle
+//! channel, so a steady-state iterate ping-pongs two buffers with no
+//! per-iteration allocation or copy at all.
 
 use super::engine::ExecutionEngine;
 use super::plan::{self, ExecutionPlan};
@@ -86,11 +95,13 @@ pub(crate) enum ResponseKind {
 }
 
 /// One queued request, normalized: every kind is (vectors, iterations).
+/// Payloads arrive as the `Arc<[T]>`s the [`super::Request`] carried —
+/// the pipeline never copies vector data, it only clones references.
 pub(crate) struct Job<T: SpElem> {
     pub ticket: u64,
     pub plan: Arc<ExecutionPlan<T>>,
     /// Input vectors (exactly one for `Spmv` and `Iterate`).
-    pub xs: Vec<Vec<T>>,
+    pub xs: Vec<Arc<[T]>>,
     /// Self-application count (1 for `Spmv` / `Batch`).
     pub iters: usize,
     /// Resolved vector-block width for this request.
@@ -109,11 +120,53 @@ struct WaveInfo {
     iters_total: usize,
 }
 
-/// Stage 1 -> stage 2: one vector block to run kernels for.
+/// The vector set one wave reads: the request's shared payload slices,
+/// or — for iterate feedback — the previous iteration's owned output,
+/// moved through the pipeline without copying its data (wrapping a
+/// `Vec<T>` in `Arc<Vec<T>>` moves three words, not the buffer).
+enum WaveXs<T: SpElem> {
+    /// Request payloads as submitted (`Arc` clones, never copies).
+    Shared(Arc<Vec<Arc<[T]>>>),
+    /// One iterate-feedback vector (iterations are single-vector).
+    Fed(Arc<Vec<T>>),
+}
+
+impl<T: SpElem> WaveXs<T> {
+    fn len(&self) -> usize {
+        match self {
+            WaveXs::Shared(v) => v.len(),
+            WaveXs::Fed(_) => 1,
+        }
+    }
+
+    /// Vector `i` of the wave, as a slice.
+    fn window(&self, i: usize) -> &[T] {
+        match self {
+            WaveXs::Shared(v) => &v[i][..],
+            WaveXs::Fed(v) => {
+                debug_assert_eq!(i, 0, "feedback waves hold exactly one vector");
+                &v[..]
+            }
+        }
+    }
+}
+
+impl<T: SpElem> Clone for WaveXs<T> {
+    fn clone(&self) -> WaveXs<T> {
+        match self {
+            WaveXs::Shared(v) => WaveXs::Shared(Arc::clone(v)),
+            WaveXs::Fed(v) => WaveXs::Fed(Arc::clone(v)),
+        }
+    }
+}
+
+/// Stage 1 -> stage 2: one vector block to run kernels for. `xs` is the
+/// whole wave's vector set (shared, not copied); `blk` selects this
+/// message's block.
 struct BlockMsg<T: SpElem> {
     ticket: u64,
     plan: Arc<ExecutionPlan<T>>,
-    xs: Arc<Vec<Vec<T>>>,
+    xs: WaveXs<T>,
     blk: Range<usize>,
     wave: WaveInfo,
 }
@@ -269,6 +322,10 @@ impl<T: SpElem> RequestQueue<T> {
         let (tx_blk, rx_blk) = sync_channel::<BlockMsg<T>>(HANDOFF_DEPTH);
         let (tx_mrg, rx_mrg) = sync_channel::<MergeMsg<T>>(HANDOFF_DEPTH);
         let (tx_fb, rx_fb) = channel::<Vec<T>>();
+        // Buffer-return loop: stage 1 sends retired iterate payloads
+        // back to stage 3's pool, so a steady-state iterate ping-pongs
+        // two buffers with no allocation at all.
+        let (tx_rec, rx_rec) = channel::<Vec<T>>();
         let completions = Arc::new(Completions::new());
 
         let comp1 = Arc::clone(&completions);
@@ -276,7 +333,7 @@ impl<T: SpElem> RequestQueue<T> {
             .name("spmv-svc-prep".into())
             .spawn(move || {
                 let _failsafe = StageGuard { comp: Arc::clone(&comp1), stage: "prep" };
-                stage_prep(rx_in, tx_blk, rx_fb, comp1)
+                stage_prep(rx_in, tx_blk, rx_fb, tx_rec, comp1)
             })
             .expect("spawn service prep stage");
         let exec2 = exec.clone();
@@ -293,7 +350,7 @@ impl<T: SpElem> RequestQueue<T> {
             .name("spmv-svc-merge".into())
             .spawn(move || {
                 let _failsafe = StageGuard { comp: Arc::clone(&comp3), stage: "merge" };
-                stage_merge(exec, rx_mrg, tx_fb, comp3)
+                stage_merge(exec, rx_mrg, tx_fb, rx_rec, comp3)
             })
             .expect("spawn service merge stage");
 
@@ -379,12 +436,23 @@ fn stage_prep<T: SpElem>(
     rx_in: Receiver<Job<T>>,
     tx_blk: SyncSender<BlockMsg<T>>,
     rx_fb: Receiver<Vec<T>>,
+    tx_rec: Sender<Vec<T>>,
     comp: Arc<Completions<T>>,
 ) {
+    // Retire an iterate payload: if stage 2 has dropped its block
+    // clones, the buffer flows back to the merge stage's pool instead
+    // of being freed (send errors just mean stage 3 is shutting down).
+    let recycle = |xs: WaveXs<T>| {
+        if let WaveXs::Fed(arc) = xs {
+            if let Ok(buf) = Arc::try_unwrap(arc) {
+                let _ = tx_rec.send(buf);
+            }
+        }
+    };
     while let Ok(job) = rx_in.recv() {
         let Job { ticket, plan, xs, iters, block, kind } = job;
         debug_assert!(!xs.is_empty(), "empty batches resolve at submit");
-        let mut xs = Arc::new(xs);
+        let mut xs = WaveXs::Shared(Arc::new(xs));
         let mut alive = true;
         'iterations: for iter in 0..iters {
             let n = xs.len();
@@ -395,7 +463,7 @@ fn stage_prep<T: SpElem>(
                 let msg = BlockMsg {
                     ticket,
                     plan: Arc::clone(&plan),
-                    xs: Arc::clone(&xs),
+                    xs: xs.clone(),
                     blk,
                     wave: WaveInfo {
                         kind,
@@ -412,7 +480,11 @@ fn stage_prep<T: SpElem>(
             }
             if iter + 1 < iters {
                 match rx_fb.recv() {
-                    Ok(y) => xs = Arc::new(vec![y]),
+                    // Zero-copy feedback: the iteration's owned output
+                    // becomes the next wave's input without touching the
+                    // buffer; the retired previous input goes back to
+                    // the pool.
+                    Ok(y) => recycle(std::mem::replace(&mut xs, WaveXs::Fed(Arc::new(y)))),
                     Err(_) => {
                         alive = false;
                         break 'iterations;
@@ -420,6 +492,7 @@ fn stage_prep<T: SpElem>(
                 }
             }
         }
+        recycle(xs);
         if !alive {
             comp.publish(ticket, Err(format_err!("request pipeline shut down mid-request")));
             // Downstream stages are gone. Fail everything already queued
@@ -447,7 +520,7 @@ fn stage_kernel<T: SpElem>(
 ) {
     while let Ok(BlockMsg { ticket, plan, xs, blk, wave }) = rx_blk.recv() {
         let cfg = &exec.sys.cfg;
-        let windows: Vec<&[T]> = xs[blk].iter().map(|x| x.as_slice()).collect();
+        let windows: Vec<&[T]> = blk.map(|i| xs.window(i)).collect();
         let items = plan.items();
         let outputs: Vec<Vec<DpuKernelOutput<T>>> = exec
             .engine
@@ -460,6 +533,67 @@ fn stage_kernel<T: SpElem>(
     }
 }
 
+/// How many spare buffers [`BufferPool`] keeps per output length.
+const BUFFER_POOL_PER_LEN: usize = 8;
+
+/// How many distinct output lengths [`BufferPool`] retains at once. A
+/// long-lived service sees a new length per distinct matrix row count
+/// (load/unload churn, multi-tenant); without this cap the pool would
+/// pin up to [`BUFFER_POOL_PER_LEN`] dead buffers per length forever.
+const BUFFER_POOL_LENS: usize = 8;
+
+/// Free-list of merge-output buffers keyed by length, local to the
+/// merge stage (single-threaded: no locks). Iterate payloads are the
+/// only buffers that die inside the pipeline: an iteration's output is
+/// moved (never copied) to stage 1 as the next wave's input, and once
+/// that wave retires it, stage 1 returns the buffer over the recycle
+/// channel — the next iteration's merge takes it back zeroed. A
+/// steady-state iterate therefore ping-pongs two `nrows`-sized buffers
+/// with no allocation per iteration. Keying is by vector length: one
+/// request's batch width only decides how many same-length buffers are
+/// in flight at once, which the per-length cap bounds.
+struct BufferPool<T: SpElem> {
+    free: HashMap<usize, Vec<Vec<T>>>,
+}
+
+impl<T: SpElem> BufferPool<T> {
+    fn new() -> BufferPool<T> {
+        BufferPool { free: HashMap::new() }
+    }
+
+    /// A zeroed buffer of `len` elements, recycled when available.
+    fn take_zeroed(&mut self, len: usize) -> Vec<T> {
+        match self.free.get_mut(&len).and_then(Vec::pop) {
+            Some(mut buf) => {
+                buf.fill(T::zero());
+                buf
+            }
+            None => vec![T::zero(); len],
+        }
+    }
+
+    /// Return a dead buffer for reuse (bounded: at most
+    /// [`BUFFER_POOL_PER_LEN`] buffers for each of at most
+    /// [`BUFFER_POOL_LENS`] distinct lengths; anything beyond is simply
+    /// dropped, so the pool's footprint cannot grow with the number of
+    /// matrix shapes a long-lived service ever iterates).
+    fn put(&mut self, buf: Vec<T>) {
+        let len = buf.len();
+        if let Some(list) = self.free.get_mut(&len) {
+            if list.len() < BUFFER_POOL_PER_LEN {
+                list.push(buf);
+            }
+        } else if self.free.len() < BUFFER_POOL_LENS {
+            // Evict empty per-length lists before refusing a new length
+            // (take() drains lists; a dead length must not squat a slot).
+            self.free.retain(|_, list| !list.is_empty());
+            if self.free.len() < BUFFER_POOL_LENS {
+                self.free.insert(len, vec![buf]);
+            }
+        }
+    }
+}
+
 /// Stage 3: merge per-DPU partials vector by vector, accumulate
 /// iteration totals, feed iterate outputs back to stage 1, and publish
 /// completed responses. Waves of one ticket arrive contiguously (the
@@ -468,12 +602,19 @@ fn stage_merge<T: SpElem>(
     exec: SpmvExecutor,
     rx_mrg: Receiver<MergeMsg<T>>,
     tx_fb: Sender<Vec<T>>,
+    rx_rec: Receiver<Vec<T>>,
     comp: Arc<Completions<T>>,
 ) {
     let mut runs: Vec<RunResult<T>> = Vec::new();
     let mut total = Breakdown::default();
     let mut energy = Energy::default();
+    let mut pool: BufferPool<T> = BufferPool::new();
     while let Ok(MergeMsg { ticket, plan, wave, outputs }) = rx_mrg.recv() {
+        // Collect buffers stage 1 retired since the last merge (iterate
+        // payloads whose wave finished): the pool hands them back below.
+        while let Ok(buf) = rx_rec.try_recv() {
+            pool.put(buf);
+        }
         if wave.block_index == 0 && wave.iter_index == 0 {
             runs.clear();
             total = Breakdown::default();
@@ -489,7 +630,8 @@ fn stage_merge<T: SpElem>(
                 .iter_mut()
                 .map(|it| it.next().expect("batched kernel returned too few outputs"))
                 .collect();
-            let y = plan.merge_partials(&outs);
+            let mut y = pool.take_zeroed(plan.nrows());
+            plan.merge_partials_into(&outs, &mut y);
             runs.push(exec.finish(&plan, &outs, y));
         }
         if wave.block_index + 1 != wave.n_blocks {
@@ -514,6 +656,10 @@ fn stage_merge<T: SpElem>(
                 let last = runs.pop().expect("iterate wave produced no run");
                 runs.clear();
                 if wave.iter_index + 1 < wave.iters_total {
+                    // Zero-copy feedback: move the owned output vector
+                    // to stage 1 — it becomes the next wave's input
+                    // without copying, and comes back through the
+                    // recycle channel once that wave retires it.
                     if tx_fb.send(last.y).is_err() {
                         return; // stage 1 is gone; shutting down
                     }
@@ -532,5 +678,60 @@ fn stage_merge<T: SpElem>(
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fed_wave_moves_the_buffer_without_copying() {
+        // The iterate-feedback zero-copy lock: wrapping an owned output
+        // into a Fed wave must reuse the exact heap buffer (Arc<Vec<T>>
+        // moves the Vec header, never the data), reads must see it, and
+        // retiring a uniquely-owned Fed must hand the SAME buffer back
+        // for recycling.
+        let y: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let ptr = y.as_ptr();
+        let xs: WaveXs<f64> = WaveXs::Fed(Arc::new(y));
+        assert_eq!(xs.len(), 1);
+        assert_eq!(xs.window(0).as_ptr(), ptr, "feedback wrap must not copy the buffer");
+        // Block-message clones share; once they drop, the buffer is
+        // uniquely owned again and unwraps to the original allocation.
+        let block_clone = xs.clone();
+        drop(block_clone);
+        match xs {
+            WaveXs::Fed(arc) => {
+                let back = Arc::try_unwrap(arc).expect("uniquely owned after clones drop");
+                assert_eq!(back.as_ptr(), ptr, "recycled buffer is the original allocation");
+            }
+            WaveXs::Shared(_) => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn buffer_pool_recycles_zeroed_and_stays_bounded() {
+        let mut pool: BufferPool<f64> = BufferPool::new();
+        let buf = vec![7.0f64; 32];
+        let ptr = buf.as_ptr();
+        pool.put(buf);
+        let back = pool.take_zeroed(32);
+        assert_eq!(back.as_ptr(), ptr, "same-length take must reuse the recycled buffer");
+        assert!(back.iter().all(|&v| v == 0.0), "recycled buffers come back zeroed");
+        // Unknown lengths allocate fresh.
+        assert_eq!(pool.take_zeroed(5).len(), 5);
+        // Retention is bounded in both dimensions: per length and in
+        // distinct lengths.
+        for round in 0..3 {
+            for len in 1..=4 * BUFFER_POOL_LENS {
+                pool.put(vec![round as f64; len]);
+            }
+        }
+        assert!(pool.free.len() <= BUFFER_POOL_LENS, "distinct-length cap breached");
+        assert!(
+            pool.free.values().all(|l| l.len() <= BUFFER_POOL_PER_LEN),
+            "per-length cap breached"
+        );
     }
 }

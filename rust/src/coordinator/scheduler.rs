@@ -35,6 +35,7 @@
 use super::metrics::TenantStats;
 use crate::util::Result;
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// A tenant's identity within one scheduler (and the
 /// [`super::ShardedService`] that owns it). Copyable tag carried by
@@ -53,8 +54,12 @@ impl TenantId {
 /// Declared scheduling parameters of one tenant.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TenantSpec {
-    /// Tenant name (unique within a scheduler).
-    pub name: String,
+    /// Tenant name (unique within a scheduler). Interned as `Arc<str>`:
+    /// everything that reports the name — per-decision stats snapshots,
+    /// the facade's tenant table, log lines — bumps a reference count
+    /// instead of allocating a `String` clone, keeping the WRR
+    /// dispatch/record loop allocation-free.
+    pub name: Arc<str>,
     /// Weighted-round-robin share: up to this many dispatches per cycle
     /// (>= 1).
     pub weight: usize,
@@ -67,7 +72,7 @@ impl TenantSpec {
     /// A tenant with the given weight and an effectively unlimited
     /// in-flight quota.
     pub fn new(name: &str, weight: usize) -> TenantSpec {
-        TenantSpec { name: name.to_string(), weight, max_in_flight: usize::MAX }
+        TenantSpec { name: Arc::from(name), weight, max_in_flight: usize::MAX }
     }
 
     /// Set the in-flight quota.
@@ -166,7 +171,7 @@ impl<W> FairScheduler<W> {
 
     /// Look a tenant up by name.
     pub fn tenant(&self, name: &str) -> Option<TenantId> {
-        self.tenants.iter().position(|t| t.spec.name == name).map(TenantId)
+        self.tenants.iter().position(|t| &*t.spec.name == name).map(TenantId)
     }
 
     /// The tenant's declared spec.
@@ -251,12 +256,13 @@ impl<W> FairScheduler<W> {
         out
     }
 
-    /// Per-tenant counters, in registration order.
+    /// Per-tenant counters, in registration order. Names are shared
+    /// `Arc<str>` handles — snapshotting stats never allocates strings.
     pub fn stats(&self) -> Vec<TenantStats> {
         self.tenants
             .iter()
             .map(|t| TenantStats {
-                name: t.spec.name.clone(),
+                name: Arc::clone(&t.spec.name),
                 weight: t.spec.weight,
                 max_in_flight: t.spec.max_in_flight,
                 enqueued: t.enqueued,
@@ -285,7 +291,7 @@ mod tests {
     fn drain_serialized(s: &mut FairScheduler<usize>) -> Vec<String> {
         let mut order = Vec::new();
         while let Some((t, _)) = s.pop() {
-            order.push(s.spec(t).name.clone());
+            order.push(s.spec(t).name.to_string());
             s.complete(t);
         }
         order
@@ -471,9 +477,9 @@ mod tests {
     fn parse_list_roundtrips() {
         let ts = TenantSpec::parse_list("alice:3,bob:1").unwrap();
         assert_eq!(ts.len(), 2);
-        assert_eq!((ts[0].name.as_str(), ts[0].weight, ts[0].max_in_flight), ("alice", 3, usize::MAX));
+        assert_eq!((&*ts[0].name, ts[0].weight, ts[0].max_in_flight), ("alice", 3, usize::MAX));
         let ts = TenantSpec::parse_list("batch:1:2, online:4:8").unwrap();
-        assert_eq!((ts[1].name.as_str(), ts[1].weight, ts[1].max_in_flight), ("online", 4, 8));
+        assert_eq!((&*ts[1].name, ts[1].weight, ts[1].max_in_flight), ("online", 4, 8));
         assert!(TenantSpec::parse_list("").is_err());
         assert!(TenantSpec::parse_list("a").is_err());
         assert!(TenantSpec::parse_list("a:x").is_err());

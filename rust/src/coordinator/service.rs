@@ -139,15 +139,48 @@ impl Ticket {
 }
 
 /// A unit of work against a resident matrix.
+///
+/// Payloads are reference-counted slices (`Arc<[T]>`), not owned
+/// vectors: cloning a request — which is exactly what the sharded
+/// facade's dispatcher does to scatter one request across `S` shard
+/// backends — shares the allocation instead of copying it, so an
+/// S-shard scatter costs S reference-count bumps where it used to cost
+/// S payload memcpys. `Vec<T>` converts in via the std
+/// `From<Vec<T>> for Arc<[T]>` impl; the [`Request::spmv`],
+/// [`Request::batch`] and [`Request::iterate`] constructors accept
+/// either form.
 #[derive(Clone, Debug)]
 pub enum Request<T> {
     /// One SpMV `y = A * x`.
-    Spmv { x: Vec<T> },
+    Spmv { x: Arc<[T]> },
     /// SpMM-style multi-vector execution `Y = A * X` (may be empty).
-    Batch { xs: Vec<Vec<T>> },
+    Batch { xs: Vec<Arc<[T]>> },
     /// Iterated self-application `y <- A * y`, `iters` times starting
     /// from `x` (requires a square matrix for `iters > 1`).
-    Iterate { x: Vec<T>, iters: usize },
+    Iterate { x: Arc<[T]>, iters: usize },
+}
+
+impl<T> Request<T> {
+    /// One SpMV request; takes `Vec<T>`, `Arc<[T]>`, or anything else
+    /// that converts into a shared slice.
+    pub fn spmv(x: impl Into<Arc<[T]>>) -> Request<T> {
+        Request::Spmv { x: x.into() }
+    }
+
+    /// A batched request over any iterable of convertible payloads
+    /// (e.g. a `Vec<Vec<T>>`, or already-shared `Arc<[T]>`s).
+    pub fn batch<I>(xs: I) -> Request<T>
+    where
+        I: IntoIterator,
+        I::Item: Into<Arc<[T]>>,
+    {
+        Request::Batch { xs: xs.into_iter().map(Into::into).collect() }
+    }
+
+    /// An iterated request (see [`Request::Iterate`]).
+    pub fn iterate(x: impl Into<Arc<[T]>>, iters: usize) -> Request<T> {
+        Request::Iterate { x: x.into(), iters }
+    }
 }
 
 /// The completed result of a [`Request`], mirroring its shape.
@@ -359,8 +392,10 @@ impl<T: SpElem> SpmvService<T> {
     /// let h = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
     ///
     /// // Two tickets in flight at once, waited out of submission order.
-    /// let t1 = svc.submit(h, Request::Spmv { x: vec![1.0; 64] }).unwrap();
-    /// let t2 = svc.submit(h, Request::Batch { xs: vec![vec![2.0; 64]; 3] }).unwrap();
+    /// // Payloads are Arc<[T]> — Vec<T> converts in, and an Arc you
+    /// // already hold is shared, never copied.
+    /// let t1 = svc.submit(h, Request::spmv(vec![1.0; 64])).unwrap();
+    /// let t2 = svc.submit(h, Request::batch(vec![vec![2.0; 64]; 3])).unwrap();
     /// let batch = svc.wait(t2).unwrap().into_batch().unwrap();
     /// let run = svc.wait(t1).unwrap().into_spmv().unwrap();
     ///
@@ -370,7 +405,7 @@ impl<T: SpElem> SpmvService<T> {
     /// ```
     pub fn submit(&self, handle: MatrixHandle, req: Request<T>) -> Result<Ticket> {
         let plan = self.plan_for(&handle)?;
-        let check_len = |x: &Vec<T>, what: &str| {
+        let check_len = |x: &[T], what: &str| {
             crate::ensure!(
                 x.len() == plan.ncols(),
                 "{what} length {} != ncols {}",
@@ -549,7 +584,7 @@ mod tests {
         assert_eq!(r.y, m.spmv(&x));
         // The fast path answers bit-identically to submit + wait.
         let queued =
-            svc.wait(svc.submit(h, Request::Spmv { x: x.clone() }).unwrap()).unwrap();
+            svc.wait(svc.submit(h, Request::spmv(x.clone())).unwrap()).unwrap();
         match queued {
             Response::Spmv(q) => {
                 assert_eq!(q.y, r.y);
@@ -575,7 +610,7 @@ mod tests {
             .map(|s| (0..96).map(|i| ((i + 11 * s) % 5) as f64 - 2.0).collect())
             .collect();
         let tickets: Vec<Ticket> =
-            xs.iter().map(|x| svc.submit(h, Request::Spmv { x: x.clone() }).unwrap()).collect();
+            xs.iter().map(|x| svc.submit(h, Request::spmv(x.clone())).unwrap()).collect();
         // Claim in reverse submission order.
         for (x, t) in xs.iter().zip(&tickets).rev() {
             let r = svc.wait(*t).unwrap().into_spmv().unwrap();
@@ -590,15 +625,15 @@ mod tests {
         let svc = service(4);
         let m = generate::uniform::<f64>(64, 64, 4, 3);
         let h = svc.load(&m, &KernelSpec::coo_row()).unwrap();
-        assert!(svc.submit(h, Request::Spmv { x: vec![0.0; 63] }).is_err());
+        assert!(svc.submit(h, Request::spmv(vec![0.0; 63])).is_err());
         assert!(svc
-            .submit(h, Request::Batch { xs: vec![vec![0.0; 64], vec![0.0; 1]] })
+            .submit(h, Request::batch(vec![vec![0.0; 64], vec![0.0; 1]]))
             .is_err());
-        assert!(svc.submit(h, Request::Iterate { x: vec![0.0; 64], iters: 0 }).is_err());
+        assert!(svc.submit(h, Request::iterate(vec![0.0; 64], 0)).is_err());
         let rect = generate::uniform::<f64>(48, 64, 3, 3);
         let hr = svc.load(&rect, &KernelSpec::coo_row()).unwrap();
-        assert!(svc.submit(hr, Request::Iterate { x: vec![0.0; 64], iters: 2 }).is_err());
-        assert!(svc.submit(hr, Request::Iterate { x: vec![0.0; 64], iters: 1 }).is_ok());
+        assert!(svc.submit(hr, Request::iterate(vec![0.0; 64], 2)).is_err());
+        assert!(svc.submit(hr, Request::iterate(vec![0.0; 64], 1)).is_ok());
     }
 
     #[test]
@@ -609,8 +644,8 @@ mod tests {
         let x: Vec<f64> = (0..96).map(|i| ((i % 5) as f64) - 2.0).collect();
         // Two identical requests: one claimed by blocking wait, one by
         // polling; the responses must be bit-identical.
-        let t_wait = svc.submit(h, Request::Spmv { x: x.clone() }).unwrap();
-        let t_poll = svc.submit(h, Request::Spmv { x: x.clone() }).unwrap();
+        let t_wait = svc.submit(h, Request::spmv(x.clone())).unwrap();
+        let t_poll = svc.submit(h, Request::spmv(x.clone())).unwrap();
         let gold = svc.wait(t_wait).unwrap().into_spmv().unwrap();
         let polled = loop {
             match svc.try_wait(t_poll).unwrap() {
@@ -638,7 +673,7 @@ mod tests {
         let m = generate::uniform::<f64>(64, 64, 4, 23);
         let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
         let x = vec![1.0f64; 64];
-        let t = svc.submit(h, Request::Iterate { x: x.clone(), iters: 8 }).unwrap();
+        let t = svc.submit(h, Request::iterate(x.clone(), 8)).unwrap();
         let mut polls = 0usize;
         let resp = loop {
             match svc.try_wait(t).unwrap() {
@@ -678,14 +713,14 @@ mod tests {
         let b = service(4);
         let m = generate::uniform::<f64>(32, 32, 3, 2);
         let ha = a.load(&m, &KernelSpec::coo_row()).unwrap();
-        assert!(b.submit(ha, Request::Spmv { x: vec![0.0; 32] }).is_err());
-        let ta = a.submit(ha, Request::Spmv { x: vec![0.0; 32] }).unwrap();
+        assert!(b.submit(ha, Request::spmv(vec![0.0; 32])).is_err());
+        let ta = a.submit(ha, Request::spmv(vec![0.0; 32])).unwrap();
         assert!(b.wait(ta).is_err());
         assert!(a.wait(ta).is_ok());
         // Unloading invalidates the handle for new submissions.
         assert!(a.unload(ha));
         assert!(!a.unload(ha));
-        assert!(a.submit(ha, Request::Spmv { x: vec![0.0; 32] }).is_err());
+        assert!(a.submit(ha, Request::spmv(vec![0.0; 32])).is_err());
     }
 
     #[test]

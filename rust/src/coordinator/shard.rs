@@ -363,7 +363,7 @@ impl ShardedServiceBuilder {
         } else {
             self.tenants
         };
-        let tenant_names: Vec<String> = tenants.iter().map(|t| t.name.clone()).collect();
+        let tenant_names: Vec<Arc<str>> = tenants.iter().map(|t| Arc::clone(&t.name)).collect();
         let fair = FairScheduler::new(tenants)?;
 
         let shards = Arc::new(backends);
@@ -442,8 +442,8 @@ impl Default for ShardedServiceBuilder {
 ///
 /// // Two tickets in flight, claimed out of submission order; the
 /// // gathered outputs match the host oracle exactly.
-/// let t1 = svc.submit(h, Request::Spmv { x: vec![1.0; 60] }).unwrap();
-/// let t2 = svc.submit(h, Request::Batch { xs: vec![vec![2.0; 60]; 2] }).unwrap();
+/// let t1 = svc.submit(h, Request::spmv(vec![1.0; 60])).unwrap();
+/// let t2 = svc.submit(h, Request::batch(vec![vec![2.0; 60]; 2])).unwrap();
 /// let batch = svc.wait(t2).unwrap().into_batch().unwrap();
 /// let run = svc.wait(t1).unwrap().into_spmv().unwrap();
 /// assert_eq!(run.y, m.spmv(&vec![1.0; 60]));
@@ -458,7 +458,7 @@ pub struct ShardedService<T: SpElem> {
     next_ticket: AtomicU64,
     /// Requests served on the synchronous fast path.
     sync_served: AtomicU64,
-    tenant_names: Vec<String>,
+    tenant_names: Vec<Arc<str>>,
     completions: Arc<Completions<T>>,
     sched: Arc<Sched<T>>,
     threads: Vec<JoinHandle<()>>,
@@ -482,11 +482,11 @@ impl<T: SpElem> ShardedService<T> {
 
     /// Look a tenant up by name.
     pub fn tenant(&self, name: &str) -> Option<TenantId> {
-        self.tenant_names.iter().position(|n| n == name).map(TenantId)
+        self.tenant_names.iter().position(|n| &**n == name).map(TenantId)
     }
 
     /// Registered tenant names, in registration (scheduling) order.
-    pub fn tenant_names(&self) -> &[String] {
+    pub fn tenant_names(&self) -> &[Arc<str>] {
         &self.tenant_names
     }
 
@@ -625,7 +625,7 @@ impl<T: SpElem> ShardedService<T> {
     ) -> Result<ShardedTicket> {
         self.check_tenant(tenant)?;
         let entry = self.entry_for(&handle)?;
-        let check_len = |x: &Vec<T>, what: &str| {
+        let check_len = |x: &[T], what: &str| {
             crate::ensure!(
                 x.len() == entry.ncols,
                 "{what} length {} != ncols {}",
@@ -701,7 +701,9 @@ impl<T: SpElem> ShardedService<T> {
         let entry = self.entry_for(handle)?;
         crate::ensure!(x.len() == entry.ncols, "x length {} != ncols {}", x.len(), entry.ncols);
         self.sync_served.fetch_add(1, Ordering::Relaxed);
-        let ts = submit_spmv_all(&self.shards, &entry, x)?;
+        // One wrap; the scatter below shares it across all shards.
+        let x: Arc<[T]> = Arc::from(x);
+        let ts = submit_spmv_all(&self.shards, &entry, &x)?;
         Ok(merge_shard_runs(wait_all_spmv(&self.shards, &ts)?))
     }
 
@@ -721,7 +723,9 @@ impl<T: SpElem> ShardedService<T> {
         if xs.is_empty() {
             return Ok(BatchResult { runs: Vec::new() });
         }
-        let ts = submit_batch_all(&self.shards, &entry, xs)?;
+        // One wrap per vector; the scatter shares them across shards.
+        let xs: Vec<Arc<[T]>> = xs.iter().map(|v| Arc::from(&v[..])).collect();
+        let ts = submit_batch_all(&self.shards, &entry, &xs)?;
         Ok(merge_shard_batches(wait_all_batch(&self.shards, &ts)?))
     }
 
@@ -745,7 +749,8 @@ impl<T: SpElem> ShardedService<T> {
             entry.ncols
         );
         self.sync_served.fetch_add(1, Ordering::Relaxed);
-        let ts = submit_spmv_all(&self.shards, &entry, x)?;
+        let x: Arc<[T]> = Arc::from(x);
+        let ts = submit_spmv_all(&self.shards, &entry, &x)?;
         match gather_iterate(&self.shards, &entry, ts, iters)? {
             Response::Iterate(it) => Ok(it),
             other => Err(format_err!("internal: iterate gathered a {} response", other.kind())),
@@ -917,19 +922,18 @@ fn run_gather<T: SpElem>(
 /// Scatter one SpMV: every shard reads the full input vector (row
 /// sharding keeps the column space) and computes its row range.
 ///
-/// Each shard currently receives its own copy of the payload (the
-/// backend request type owns its vectors); that is O(S x payload)
-/// memcpy per scatter, dwarfed by the per-nnz kernel simulation. An
-/// `Arc`-shared payload variant of [`Request`] is the known follow-on
-/// if real transfer fan-out ever becomes the bottleneck (ROADMAP).
+/// The payload is an `Arc<[T]>`: all `S` sub-requests share one
+/// allocation (S reference-count bumps), where this scatter used to
+/// memcpy the vector once per shard — the O(S x payload) copy the
+/// ROADMAP called out. `tests/zero_copy.rs` locks the sharing in.
 fn submit_spmv_all<T: SpElem>(
     shards: &[SpmvService<T>],
     entry: &ShardEntry,
-    x: &[T],
+    x: &Arc<[T]>,
 ) -> Result<Vec<Ticket>> {
     let mut ts = Vec::with_capacity(entry.handles.len());
     for (svc, h) in shards.iter().zip(&entry.handles) {
-        match svc.submit(*h, Request::Spmv { x: x.to_vec() }) {
+        match svc.submit(*h, Request::Spmv { x: Arc::clone(x) }) {
             Ok(t) => ts.push(t),
             Err(e) => {
                 abort_subs(shards, ts);
@@ -941,11 +945,12 @@ fn submit_spmv_all<T: SpElem>(
 }
 
 /// Scatter one batch: every shard serves the whole vector set against
-/// its row range.
+/// its row range. Like [`submit_spmv_all`], the per-vector `Arc`s are
+/// shared across shards, never copied.
 fn submit_batch_all<T: SpElem>(
     shards: &[SpmvService<T>],
     entry: &ShardEntry,
-    xs: &[Vec<T>],
+    xs: &[Arc<[T]>],
 ) -> Result<Vec<Ticket>> {
     let mut ts = Vec::with_capacity(entry.handles.len());
     for (svc, h) in shards.iter().zip(&entry.handles) {
@@ -1025,7 +1030,10 @@ fn gather_iterate<T: SpElem>(
         total.accumulate(&merged.breakdown);
         energy = energy.add(merged.energy);
         if iter + 1 < iters {
-            subtickets = submit_spmv_all(shards, entry, &merged.y)?;
+            // Re-wrap the gathered output once per iteration; every
+            // shard's sub-request then shares that one allocation.
+            let next: Arc<[T]> = Arc::from(&merged.y[..]);
+            subtickets = submit_spmv_all(shards, entry, &next)?;
         }
         last = Some(merged);
     }
@@ -1139,7 +1147,7 @@ mod tests {
             let fast = svc.spmv(&h, &x).unwrap();
             assert_eq!(fast.y, m.spmv(&x), "shards={shards} fast path");
             let queued = svc
-                .wait(svc.submit(h, Request::Spmv { x: x.clone() }).unwrap())
+                .wait(svc.submit(h, Request::spmv(x.clone())).unwrap())
                 .unwrap()
                 .into_spmv()
                 .unwrap();
@@ -1158,14 +1166,14 @@ mod tests {
         let b = sharded(2, 4);
         let m = generate::uniform::<f64>(40, 40, 3, 2);
         let ha = a.load(&m, &KernelSpec::coo_row()).unwrap();
-        assert!(b.submit(ha, Request::Spmv { x: vec![0.0; 40] }).is_err());
-        let ta = a.submit(ha, Request::Spmv { x: vec![0.0; 40] }).unwrap();
+        assert!(b.submit(ha, Request::spmv(vec![0.0; 40])).is_err());
+        let ta = a.submit(ha, Request::spmv(vec![0.0; 40])).unwrap();
         assert!(b.wait(ta).is_err());
         assert!(a.wait(ta).is_ok());
         assert!(a.wait(ta).is_err(), "double wait must error");
         assert!(a.unload(ha));
         assert!(!a.unload(ha));
-        assert!(a.submit(ha, Request::Spmv { x: vec![0.0; 40] }).is_err());
+        assert!(a.submit(ha, Request::spmv(vec![0.0; 40])).is_err());
     }
 
     #[test]
@@ -1173,17 +1181,17 @@ mod tests {
         let svc = sharded(3, 4);
         let m = generate::uniform::<f64>(48, 48, 4, 5);
         let h = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
-        assert!(svc.submit(h, Request::Spmv { x: vec![0.0; 47] }).is_err());
+        assert!(svc.submit(h, Request::spmv(vec![0.0; 47])).is_err());
         assert!(svc
-            .submit(h, Request::Batch { xs: vec![vec![0.0; 48], vec![0.0; 1]] })
+            .submit(h, Request::batch(vec![vec![0.0; 48], vec![0.0; 1]]))
             .is_err());
-        assert!(svc.submit(h, Request::Iterate { x: vec![0.0; 48], iters: 0 }).is_err());
+        assert!(svc.submit(h, Request::iterate(vec![0.0; 48], 0)).is_err());
         let rect = generate::uniform::<f64>(32, 48, 3, 5);
         let hr = svc.load(&rect, &KernelSpec::csr_nnz()).unwrap();
-        assert!(svc.submit(hr, Request::Iterate { x: vec![0.0; 48], iters: 2 }).is_err());
-        assert!(svc.submit(hr, Request::Iterate { x: vec![0.0; 48], iters: 1 }).is_ok());
+        assert!(svc.submit(hr, Request::iterate(vec![0.0; 48], 2)).is_err());
+        assert!(svc.submit(hr, Request::iterate(vec![0.0; 48], 1)).is_ok());
         // Unknown tenants are rejected.
-        assert!(svc.submit_for(TenantId(7), h, Request::Spmv { x: vec![0.0; 48] }).is_err());
+        assert!(svc.submit_for(TenantId(7), h, Request::spmv(vec![0.0; 48])).is_err());
         // Empty batches resolve immediately.
         let t = svc.submit(h, Request::Batch { xs: Vec::new() }).unwrap();
         assert!(svc.wait(t).unwrap().into_batch().unwrap().is_empty());
@@ -1210,7 +1218,7 @@ mod tests {
         assert_eq!(evicted, 2, "tenant a's two shard plans reclaimed");
         assert_eq!(svc.stats().resident_plans, 2);
         // a's handle is gone, b's still serves.
-        assert!(svc.submit_for(ta, ha, Request::Spmv { x: vec![0.0; 64] }).is_err());
+        assert!(svc.submit_for(ta, ha, Request::spmv(vec![0.0; 64])).is_err());
         let x: Vec<f64> = (0..64).map(|i| (i % 5) as f64 - 2.0).collect();
         let r = svc.spmv(&hb, &x).unwrap();
         assert_eq!(r.y, mb.spmv(&x));
@@ -1226,7 +1234,7 @@ mod tests {
             .unwrap();
         let m = generate::uniform::<f64>(32, 32, 3, 3);
         let h = svc.load(&m, &KernelSpec::coo_row()).unwrap();
-        let t = svc.submit(h, Request::Spmv { x: vec![1.0; 32] }).unwrap();
+        let t = svc.submit(h, Request::spmv(vec![1.0; 32])).unwrap();
         // Evict while the request is still queued behind the (paused)
         // scheduler, then let it dispatch.
         assert!(svc.unload(h));
@@ -1247,7 +1255,7 @@ mod tests {
             .unwrap();
         let m = generate::uniform::<f64>(24, 24, 3, 4);
         let h = svc.load(&m, &KernelSpec::coo_row()).unwrap();
-        let _t = svc.submit(h, Request::Spmv { x: vec![1.0; 24] }).unwrap();
+        let _t = svc.submit(h, Request::spmv(vec![1.0; 24])).unwrap();
         // Dropping with a queued (never-dispatched) request must not
         // hang; the ticket is failed internally.
         drop(svc);
@@ -1272,10 +1280,10 @@ mod tests {
         let x: Vec<f64> = (0..48).map(|i| (i % 7) as f64 - 3.0).collect();
         let mut tickets = Vec::new();
         for _ in 0..3 {
-            tickets.push(svc.submit_for(ta, ha, Request::Spmv { x: x.clone() }).unwrap());
+            tickets.push(svc.submit_for(ta, ha, Request::spmv(x.clone())).unwrap());
         }
         for _ in 0..9 {
-            tickets.push(svc.submit_for(tb, hb, Request::Spmv { x: x.clone() }).unwrap());
+            tickets.push(svc.submit_for(tb, hb, Request::spmv(x.clone())).unwrap());
         }
         svc.resume();
         for t in tickets {

@@ -11,10 +11,15 @@ use crate::matrix::{BcooMatrix, SpElem};
 use crate::partition::balance::split_elements;
 use crate::pim::{calib, PimConfig, TaskletCounters};
 
-/// Per-tasklet block split plus shared-block-row metadata — computed
-/// identically for the single-vector and batched entry points so the
-/// two walks (and their accounting) can never drift apart.
-struct BlockSplit {
+/// Plan-time per-tasklet split for the BCOO kernel: block ranges plus
+/// shared-block-row metadata — computed identically for the
+/// single-vector and batched entry points so the two walks (and their
+/// accounting) can never drift apart, and cached per work item by the
+/// execution plan.
+#[derive(Clone, Debug)]
+pub struct BcooSplit {
+    /// Tasklet count the split was computed for.
+    pub(crate) tasklets: usize,
     ranges: Vec<std::ops::Range<usize>>,
     shares_rows: bool,
     /// Distinct shared block rows (lock-free merge epilogue size).
@@ -24,7 +29,8 @@ struct BlockSplit {
     shared_bounds: Vec<(u32, u32)>,
 }
 
-fn split_blocks<T: SpElem>(slice: &BcooMatrix<T>, t: usize, bal: TaskletBalance) -> BlockSplit {
+/// Compute the per-tasklet block split (see [`BcooSplit`]).
+pub fn bcoo_split<T: SpElem>(slice: &BcooMatrix<T>, t: usize, bal: TaskletBalance) -> BcooSplit {
     let nblocks = slice.nblocks();
     let mut ranges = split_elements(nblocks, t);
     let mut shares_rows = true;
@@ -74,7 +80,7 @@ fn split_blocks<T: SpElem>(slice: &BcooMatrix<T>, t: usize, bal: TaskletBalance)
             }
         }
     }
-    BlockSplit { ranges, shares_rows, n_shared, shared_bounds }
+    BcooSplit { tasklets: t, ranges, shares_rows, n_shared, shared_bounds }
 }
 
 /// Run the BCOO kernel on one DPU.
@@ -90,15 +96,29 @@ pub fn run_bcoo_dpu<T: SpElem>(
     bal: TaskletBalance,
     sync: SyncScheme,
 ) -> DpuKernelOutput<T> {
+    run_bcoo_dpu_cached(cfg, slice, x, &bcoo_split(slice, cfg.tasklets, bal), sync)
+}
+
+/// [`run_bcoo_dpu`] with a precomputed [`BcooSplit`] — the
+/// plan-time-split entry point (the execution plan caches one split per
+/// work item). `split` must have been computed for `cfg.tasklets`
+/// tasklets.
+pub fn run_bcoo_dpu_cached<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &BcooMatrix<T>,
+    x: &[T],
+    split: &BcooSplit,
+    sync: SyncScheme,
+) -> DpuKernelOutput<T> {
     assert_eq!(x.len(), slice.ncols(), "x length mismatch");
     let t = cfg.tasklets;
+    debug_assert_eq!(split.tasklets, t, "split cached for a different tasklet count");
     let dt = T::DTYPE;
     let (br, bc) = (slice.br, slice.bc);
     let mut y = vec![T::zero(); slice.nrows()];
     let mut counters = vec![TaskletCounters::default(); t];
 
-    let BlockSplit { ranges, shares_rows, n_shared, shared_bounds } =
-        split_blocks(slice, t, bal);
+    let BcooSplit { ranges, shares_rows, n_shared, shared_bounds, .. } = split;
 
     for (tid, range) in ranges.iter().enumerate() {
         let c = &mut counters[tid];
@@ -147,8 +167,8 @@ pub fn run_bcoo_dpu<T: SpElem>(
         acct::writeback(c, rows_touched * br, dt);
     }
 
-    if shares_rows && sync == SyncScheme::LockFree {
-        acct::lockfree_merge(&mut counters, n_shared * br, dt);
+    if *shares_rows && sync == SyncScheme::LockFree {
+        acct::lockfree_merge(&mut counters, *n_shared * br, dt);
     }
 
     DpuKernelOutput::finish(cfg, y, counters)
@@ -178,16 +198,29 @@ pub fn run_bcoo_dpu_batch<T: SpElem>(
     bal: TaskletBalance,
     sync: SyncScheme,
 ) -> Vec<DpuKernelOutput<T>> {
+    run_bcoo_dpu_batch_cached(cfg, slice, xs, &bcoo_split(slice, cfg.tasklets, bal), sync)
+}
+
+/// [`run_bcoo_dpu_batch`] with a precomputed [`BcooSplit`] (see
+/// [`run_bcoo_dpu_cached`]).
+pub fn run_bcoo_dpu_batch_cached<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &BcooMatrix<T>,
+    xs: &[&[T]],
+    split: &BcooSplit,
+    sync: SyncScheme,
+) -> Vec<DpuKernelOutput<T>> {
     if xs.is_empty() {
         return Vec::new();
     }
     if xs.len() == 1 {
-        return vec![run_bcoo_dpu(cfg, slice, xs[0], bal, sync)];
+        return vec![run_bcoo_dpu_cached(cfg, slice, xs[0], split, sync)];
     }
     for x in xs {
         assert_eq!(x.len(), slice.ncols(), "x length mismatch");
     }
     let t = cfg.tasklets;
+    debug_assert_eq!(split.tasklets, t, "split cached for a different tasklet count");
     let dt = T::DTYPE;
     let (br, bc) = (slice.br, slice.bc);
     let nb = xs.len();
@@ -195,8 +228,7 @@ pub fn run_bcoo_dpu_batch<T: SpElem>(
     let mut counters = vec![TaskletCounters::default(); t];
     let mut accs: Vec<T> = vec![T::zero(); nb];
 
-    let BlockSplit { ranges, shares_rows, n_shared, shared_bounds } =
-        split_blocks(slice, t, bal);
+    let BcooSplit { ranges, shares_rows, n_shared, shared_bounds, .. } = split;
 
     for (tid, range) in ranges.iter().enumerate() {
         let c = &mut counters[tid];
@@ -249,8 +281,8 @@ pub fn run_bcoo_dpu_batch<T: SpElem>(
         acct::writeback(c, rows_touched * br, dt);
     }
 
-    if shares_rows && sync == SyncScheme::LockFree {
-        acct::lockfree_merge(&mut counters, n_shared * br, dt);
+    if *shares_rows && sync == SyncScheme::LockFree {
+        acct::lockfree_merge(&mut counters, *n_shared * br, dt);
     }
 
     super::finish_batch(cfg, ys, counters)

@@ -28,10 +28,16 @@ fn block_compute(c: &mut TaskletCounters, br: usize, bc: usize, dt: crate::matri
     c.dma(bc * dt.size_bytes()); // contiguous x[col0..col0+bc] gather
 }
 
-/// Per-tasklet block split plus shared-block-row metadata — computed
-/// identically for the single-vector and batched entry points so the
-/// two walks (and their accounting) can never drift apart.
-struct BlockSplit {
+/// Plan-time per-tasklet split for the BCSR kernel: block ranges plus
+/// shared-block-row metadata — computed identically for the
+/// single-vector and batched entry points so the two walks (and their
+/// accounting) can never drift apart, and cached per work item by the
+/// execution plan (the `block_row_of` map alone is an O(nblocks) build
+/// per invocation otherwise).
+#[derive(Clone, Debug)]
+pub struct BcsrSplit {
+    /// Tasklet count the split was computed for.
+    pub(crate) tasklets: usize,
     ranges: Vec<std::ops::Range<usize>>,
     shares_rows: bool,
     /// Block index -> block row, for detecting shared block rows.
@@ -43,7 +49,8 @@ struct BlockSplit {
     shared_bounds: Vec<(u32, u32)>,
 }
 
-fn split_blocks<T: SpElem>(slice: &BcsrMatrix<T>, t: usize, bal: TaskletBalance) -> BlockSplit {
+/// Compute the per-tasklet block split (see [`BcsrSplit`]).
+pub fn bcsr_split<T: SpElem>(slice: &BcsrMatrix<T>, t: usize, bal: TaskletBalance) -> BcsrSplit {
     let (br, bc) = (slice.br, slice.bc);
     let nbr = slice.n_block_rows();
 
@@ -98,7 +105,7 @@ fn split_blocks<T: SpElem>(slice: &BcsrMatrix<T>, t: usize, bal: TaskletBalance)
             }
         }
     }
-    BlockSplit { ranges, shares_rows, block_row_of, n_shared, shared_bounds }
+    BcsrSplit { tasklets: t, ranges, shares_rows, block_row_of, n_shared, shared_bounds }
 }
 
 /// Run the BCSR kernel on one DPU.
@@ -109,15 +116,31 @@ pub fn run_bcsr_dpu<T: SpElem>(
     bal: TaskletBalance,
     sync: SyncScheme,
 ) -> DpuKernelOutput<T> {
+    run_bcsr_dpu_cached(cfg, slice, x, &bcsr_split(slice, cfg.tasklets, bal), sync)
+}
+
+/// [`run_bcsr_dpu`] with a precomputed [`BcsrSplit`] — the
+/// plan-time-split entry point (the execution plan caches one split per
+/// work item). `split` must have been computed for `cfg.tasklets`
+/// tasklets.
+pub fn run_bcsr_dpu_cached<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &BcsrMatrix<T>,
+    x: &[T],
+    split: &BcsrSplit,
+    sync: SyncScheme,
+) -> DpuKernelOutput<T> {
     assert_eq!(x.len(), slice.ncols(), "x length mismatch");
     let t = cfg.tasklets;
+    debug_assert_eq!(split.tasklets, t, "split cached for a different tasklet count");
     let dt = T::DTYPE;
     let (br, bc) = (slice.br, slice.bc);
     let mut y = vec![T::zero(); slice.nrows()];
     let mut counters = vec![TaskletCounters::default(); t];
 
-    let BlockSplit { ranges: block_ranges, shares_rows, block_row_of, n_shared, shared_bounds } =
-        split_blocks(slice, t, bal);
+    let BcsrSplit {
+        ranges: block_ranges, shares_rows, block_row_of, n_shared, shared_bounds, ..
+    } = split;
 
     for (tid, range) in block_ranges.iter().enumerate() {
         let c = &mut counters[tid];
@@ -166,8 +189,8 @@ pub fn run_bcsr_dpu<T: SpElem>(
         acct::writeback(c, rows_touched * br, dt);
     }
 
-    if shares_rows && sync == SyncScheme::LockFree {
-        acct::lockfree_merge(&mut counters, n_shared * br, dt);
+    if *shares_rows && sync == SyncScheme::LockFree {
+        acct::lockfree_merge(&mut counters, *n_shared * br, dt);
     }
 
     DpuKernelOutput::finish(cfg, y, counters)
@@ -197,16 +220,29 @@ pub fn run_bcsr_dpu_batch<T: SpElem>(
     bal: TaskletBalance,
     sync: SyncScheme,
 ) -> Vec<DpuKernelOutput<T>> {
+    run_bcsr_dpu_batch_cached(cfg, slice, xs, &bcsr_split(slice, cfg.tasklets, bal), sync)
+}
+
+/// [`run_bcsr_dpu_batch`] with a precomputed [`BcsrSplit`] (see
+/// [`run_bcsr_dpu_cached`]).
+pub fn run_bcsr_dpu_batch_cached<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &BcsrMatrix<T>,
+    xs: &[&[T]],
+    split: &BcsrSplit,
+    sync: SyncScheme,
+) -> Vec<DpuKernelOutput<T>> {
     if xs.is_empty() {
         return Vec::new();
     }
     if xs.len() == 1 {
-        return vec![run_bcsr_dpu(cfg, slice, xs[0], bal, sync)];
+        return vec![run_bcsr_dpu_cached(cfg, slice, xs[0], split, sync)];
     }
     for x in xs {
         assert_eq!(x.len(), slice.ncols(), "x length mismatch");
     }
     let t = cfg.tasklets;
+    debug_assert_eq!(split.tasklets, t, "split cached for a different tasklet count");
     let dt = T::DTYPE;
     let (br, bc) = (slice.br, slice.bc);
     let nb = xs.len();
@@ -214,8 +250,9 @@ pub fn run_bcsr_dpu_batch<T: SpElem>(
     let mut counters = vec![TaskletCounters::default(); t];
     let mut accs: Vec<T> = vec![T::zero(); nb];
 
-    let BlockSplit { ranges: block_ranges, shares_rows, block_row_of, n_shared, shared_bounds } =
-        split_blocks(slice, t, bal);
+    let BcsrSplit {
+        ranges: block_ranges, shares_rows, block_row_of, n_shared, shared_bounds, ..
+    } = split;
 
     for (tid, range) in block_ranges.iter().enumerate() {
         let c = &mut counters[tid];
@@ -266,8 +303,8 @@ pub fn run_bcsr_dpu_batch<T: SpElem>(
         acct::writeback(c, rows_touched * br, dt);
     }
 
-    if shares_rows && sync == SyncScheme::LockFree {
-        acct::lockfree_merge(&mut counters, n_shared * br, dt);
+    if *shares_rows && sync == SyncScheme::LockFree {
+        acct::lockfree_merge(&mut counters, *n_shared * br, dt);
     }
 
     super::finish_batch(cfg, ys, counters)

@@ -27,14 +27,31 @@ pub fn run_coo_dpu<T: SpElem>(
     bal: TaskletBalance,
     sync: SyncScheme,
 ) -> DpuKernelOutput<T> {
+    run_coo_dpu_cached(cfg, slice, x, &coo_split(slice, cfg.tasklets, bal), bal, sync)
+}
+
+/// [`run_coo_dpu`] with a precomputed [`CooSplit`] — the plan-time-split
+/// entry point: the execution plan caches the split per work item, so
+/// repeated invocations skip the O(nnz) row-count pass and the
+/// shared-boundary-row scan. `split` must have been computed for
+/// `cfg.tasklets` tasklets under the same `bal`.
+pub fn run_coo_dpu_cached<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &CooMatrix<T>,
+    x: &[T],
+    split: &CooSplit,
+    bal: TaskletBalance,
+    sync: SyncScheme,
+) -> DpuKernelOutput<T> {
     assert_eq!(x.len(), slice.ncols(), "x length mismatch");
     let t = cfg.tasklets;
+    debug_assert_eq!(split.tasklets, t, "split cached for a different tasklet count");
     let dt = T::DTYPE;
     let mut y = vec![T::zero(); slice.nrows()];
     let mut counters = vec![TaskletCounters::default(); t];
 
-    let elem_ranges = tasklet_elem_ranges(slice, t, bal);
-    let shared = shared_boundary_rows(slice, &elem_ranges, bal);
+    let elem_ranges = &split.elem_ranges;
+    let shared = &split.shared;
 
     for (tid, range) in elem_ranges.iter().enumerate() {
         let c = &mut counters[tid];
@@ -70,6 +87,28 @@ pub fn run_coo_dpu<T: SpElem>(
     }
 
     DpuKernelOutput::finish(cfg, y, counters)
+}
+
+/// Plan-time per-tasklet split for the COO kernel: the element ranges
+/// plus the shared-boundary-row metadata for one tasklet count under
+/// one balancing scheme. Computing it costs an O(nnz) row-count pass
+/// (row-granularity schemes) plus the boundary scan, which is why the
+/// execution plan caches one per work item.
+#[derive(Clone, Debug)]
+pub struct CooSplit {
+    /// Tasklet count the ranges were computed for.
+    pub(crate) tasklets: usize,
+    pub(crate) elem_ranges: Vec<std::ops::Range<usize>>,
+    pub(crate) shared: SharedRows,
+}
+
+/// Compute the per-tasklet element split — shared by the single-vector
+/// and batched entry points (and cached at plan time) so every walk
+/// splits identically.
+pub fn coo_split<T: SpElem>(slice: &CooMatrix<T>, t: usize, bal: TaskletBalance) -> CooSplit {
+    let elem_ranges = tasklet_elem_ranges(slice, t, bal);
+    let shared = shared_boundary_rows(slice, &elem_ranges, bal);
+    CooSplit { tasklets: t, elem_ranges, shared }
 }
 
 /// Per-tasklet element ranges for the COO balancing schemes — shared by
@@ -109,7 +148,8 @@ fn tasklet_elem_ranges<T: SpElem>(
 }
 
 /// Rows shared by more than one tasklet, per tasklet.
-struct SharedRows {
+#[derive(Clone, Debug)]
+pub(crate) struct SharedRows {
     /// Distinct shared rows (lock-free merge epilogue size).
     n_shared: usize,
     /// Per tasklet: (head row shared with the previous range, tail row
@@ -172,22 +212,36 @@ pub fn run_coo_dpu_batch<T: SpElem>(
     bal: TaskletBalance,
     sync: SyncScheme,
 ) -> Vec<DpuKernelOutput<T>> {
+    run_coo_dpu_batch_cached(cfg, slice, xs, &coo_split(slice, cfg.tasklets, bal), bal, sync)
+}
+
+/// [`run_coo_dpu_batch`] with a precomputed [`CooSplit`] (see
+/// [`run_coo_dpu_cached`]).
+pub fn run_coo_dpu_batch_cached<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &CooMatrix<T>,
+    xs: &[&[T]],
+    split: &CooSplit,
+    bal: TaskletBalance,
+    sync: SyncScheme,
+) -> Vec<DpuKernelOutput<T>> {
     if xs.is_empty() {
         return Vec::new();
     }
     if xs.len() == 1 {
-        return vec![run_coo_dpu(cfg, slice, xs[0], bal, sync)];
+        return vec![run_coo_dpu_cached(cfg, slice, xs[0], split, bal, sync)];
     }
     for x in xs {
         assert_eq!(x.len(), slice.ncols(), "x length mismatch");
     }
     let t = cfg.tasklets;
+    debug_assert_eq!(split.tasklets, t, "split cached for a different tasklet count");
     let dt = T::DTYPE;
     let mut ys: Vec<Vec<T>> = (0..xs.len()).map(|_| vec![T::zero(); slice.nrows()]).collect();
     let mut counters = vec![TaskletCounters::default(); t];
 
-    let elem_ranges = tasklet_elem_ranges(slice, t, bal);
-    let shared = shared_boundary_rows(slice, &elem_ranges, bal);
+    let elem_ranges = &split.elem_ranges;
+    let shared = &split.shared;
 
     for (tid, range) in elem_ranges.iter().enumerate() {
         let c = &mut counters[tid];

@@ -27,11 +27,27 @@ pub fn run_csr_dpu<T: SpElem>(
     slice: &CsrMatrix<T>,
     x: &[T],
     bal: TaskletBalance,
+    sync: SyncScheme,
+) -> DpuKernelOutput<T> {
+    run_csr_dpu_cached(cfg, slice, x, &csr_split(slice, cfg.tasklets, bal), sync)
+}
+
+/// [`run_csr_dpu`] with a precomputed [`CsrSplit`] — the plan-time-split
+/// entry point: [`crate::coordinator::ExecutionPlan`] caches the split
+/// per work item so repeated invocations (iterative apps, batched
+/// serving) skip the O(nrows) weight scan + `split_weighted` pass.
+/// `split` must have been computed for `cfg.tasklets` tasklets.
+pub fn run_csr_dpu_cached<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &CsrMatrix<T>,
+    x: &[T],
+    split: &CsrSplit,
     _sync: SyncScheme,
 ) -> DpuKernelOutput<T> {
     assert_eq!(x.len(), slice.ncols(), "x length mismatch");
     let t = cfg.tasklets;
-    let ranges = tasklet_row_ranges(slice, t, bal);
+    debug_assert_eq!(split.tasklets, t, "split cached for a different tasklet count");
+    let ranges = &split.ranges;
 
     let mut y = vec![T::zero(); slice.nrows()];
     let mut counters = vec![TaskletCounters::default(); t];
@@ -65,21 +81,31 @@ pub fn run_csr_dpu<T: SpElem>(
     DpuKernelOutput::finish(cfg, y, counters)
 }
 
-/// Per-tasklet row ranges for the CSR balancing schemes — shared by the
-/// single-vector and batched entry points so they split identically.
-fn tasklet_row_ranges<T: SpElem>(
-    slice: &CsrMatrix<T>,
-    t: usize,
-    bal: TaskletBalance,
-) -> Vec<std::ops::Range<usize>> {
-    match bal {
+/// Plan-time per-tasklet split for the CSR kernel: the row ranges for
+/// one tasklet count under one balancing scheme. Computing it costs an
+/// O(nrows) weight scan for `Nnz` balancing, which is why the execution
+/// plan caches one per work item instead of re-splitting per kernel
+/// invocation.
+#[derive(Clone, Debug)]
+pub struct CsrSplit {
+    /// Tasklet count the ranges were computed for.
+    pub(crate) tasklets: usize,
+    pub(crate) ranges: Vec<std::ops::Range<usize>>,
+}
+
+/// Compute the per-tasklet row split — shared by the single-vector and
+/// batched entry points (and cached at plan time) so every walk splits
+/// identically.
+pub fn csr_split<T: SpElem>(slice: &CsrMatrix<T>, t: usize, bal: TaskletBalance) -> CsrSplit {
+    let ranges = match bal {
         TaskletBalance::Rows => split_even(slice.nrows(), t),
         TaskletBalance::Nnz => {
             let weights: Vec<usize> = (0..slice.nrows()).map(|r| slice.row_nnz(r)).collect();
             split_weighted(&weights, t)
         }
         other => panic!("CSR kernel does not support {:?} tasklet balancing", other),
-    }
+    };
+    CsrSplit { tasklets: t, ranges }
 }
 
 /// Run the CSR kernel on one DPU for a whole block of input vectors.
@@ -103,19 +129,32 @@ pub fn run_csr_dpu_batch<T: SpElem>(
     bal: TaskletBalance,
     sync: SyncScheme,
 ) -> Vec<DpuKernelOutput<T>> {
+    run_csr_dpu_batch_cached(cfg, slice, xs, &csr_split(slice, cfg.tasklets, bal), sync)
+}
+
+/// [`run_csr_dpu_batch`] with a precomputed [`CsrSplit`] (see
+/// [`run_csr_dpu_cached`]).
+pub fn run_csr_dpu_batch_cached<T: SpElem>(
+    cfg: &PimConfig,
+    slice: &CsrMatrix<T>,
+    xs: &[&[T]],
+    split: &CsrSplit,
+    sync: SyncScheme,
+) -> Vec<DpuKernelOutput<T>> {
     if xs.is_empty() {
         return Vec::new();
     }
     if xs.len() == 1 {
-        return vec![run_csr_dpu(cfg, slice, xs[0], bal, sync)];
+        return vec![run_csr_dpu_cached(cfg, slice, xs[0], split, sync)];
     }
     for x in xs {
         assert_eq!(x.len(), slice.ncols(), "x length mismatch");
     }
     let t = cfg.tasklets;
+    debug_assert_eq!(split.tasklets, t, "split cached for a different tasklet count");
     let nb = xs.len();
     let dt = T::DTYPE;
-    let ranges = tasklet_row_ranges(slice, t, bal);
+    let ranges = &split.ranges;
     let mut ys: Vec<Vec<T>> = (0..nb).map(|_| vec![T::zero(); slice.nrows()]).collect();
     let mut counters = vec![TaskletCounters::default(); t];
     let mut accs: Vec<T> = vec![T::zero(); nb];

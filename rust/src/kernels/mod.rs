@@ -94,6 +94,35 @@ impl SyncScheme {
     }
 }
 
+/// Plan-time per-tasklet split for one DPU slice, format-matched to the
+/// slice's compressed representation. The execution plan computes one
+/// per work item at plan time (for the planning system's tasklet
+/// count), so kernels stop re-running their O(nrows)/O(nnz)/O(nblocks)
+/// split passes on every invocation — iterative apps and batched
+/// serving pay the split exactly once per (matrix, spec) pair. Kernels
+/// executed under a *different* tasklet count (plans may legitimately
+/// be swept across tasklet configurations) fall back to computing the
+/// split on the fly.
+#[derive(Clone, Debug)]
+pub enum TaskletSplit {
+    Csr(csr::CsrSplit),
+    Coo(coo::CooSplit),
+    Bcsr(bcsr::BcsrSplit),
+    Bcoo(bcoo::BcooSplit),
+}
+
+impl TaskletSplit {
+    /// Tasklet count this split was computed for.
+    pub fn tasklets(&self) -> usize {
+        match self {
+            TaskletSplit::Csr(s) => s.tasklets,
+            TaskletSplit::Coo(s) => s.tasklets,
+            TaskletSplit::Bcsr(s) => s.tasklets,
+            TaskletSplit::Bcoo(s) => s.tasklets,
+        }
+    }
+}
+
 /// Result of running one DPU kernel.
 #[derive(Clone, Debug)]
 pub struct DpuKernelOutput<T: SpElem> {

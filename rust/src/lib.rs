@@ -64,24 +64,31 @@
 //! use sparsep::coordinator::{KernelSpec, Request, ServiceBuilder};
 //!
 //! let m = generate::scale_free::<f32>(10_000, 10_000, 8, 0.6, 7);
-//! // Threaded engine + pipelined request queue: wall-clock knobs only,
+//! // Pooled engine + pipelined request queue: wall-clock knobs only,
 //! // responses are bit-identical to synchronous serial execution.
+//! // `.threads(0)` is the persistent worker-pool engine
+//! // (`coordinator::PooledEngine`) on all cores — waves run on
+//! // long-lived workers, never paying thread spawn/join per request.
 //! let svc = ServiceBuilder::new()
 //!     .threads(0)
 //!     .build::<f32>(PimSystem::with_dpus(256))
 //!     .unwrap();
 //!
-//! // Load once: partitioning, per-DPU format conversion, transfer
-//! // sizing — content-fingerprinted through the service's plan cache.
+//! // Load once: partitioning, per-DPU format conversion, per-tasklet
+//! // splits and transfer sizing — content-fingerprinted through the
+//! // service's plan cache.
 //! let h = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
 //!
 //! // Serve many: typed requests, tickets claimable in any order.
+//! // Payloads are shared `Arc<[T]>` slices — `Vec<T>` converts in, and
+//! // an Arc you already hold is shared, never copied (a sharded
+//! // facade's scatter hands the same allocation to every shard).
 //! let x = vec![1.0f32; m.ncols()];
-//! let t1 = svc.submit(h, Request::Spmv { x: x.clone() }).unwrap();
-//! let t2 = svc.submit(h, Request::Batch {
-//!     xs: (0..32).map(|_| x.clone()).collect(),
-//! }).unwrap();
-//! let t3 = svc.submit(h, Request::Iterate { x: x.clone(), iters: 50 }).unwrap();
+//! let t1 = svc.submit(h, Request::spmv(x.clone())).unwrap();
+//! let t2 = svc.submit(h, Request::batch(
+//!     (0..32).map(|_| x.clone()).collect::<Vec<_>>(),
+//! )).unwrap();
+//! let t3 = svc.submit(h, Request::iterate(x.clone(), 50)).unwrap();
 //!
 //! let batch = svc.wait(t2).unwrap().into_batch().unwrap();
 //! println!("{} outputs, {:.3} ms modeled", batch.len(), batch.total().total_s() * 1e3);

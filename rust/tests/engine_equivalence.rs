@@ -1,9 +1,11 @@
-//! Property tests for the execution engines: `SerialEngine` and
-//! `ThreadedEngine` must produce bit-identical `RunResult`s — output
-//! vector, breakdown, stats (cycles included) and energy — across
-//! formats x balancing schemes x sync schemes x thread counts, on both
-//! canonical and randomized inputs. The engines only move *where* the
-//! per-DPU simulations run; any divergence is a determinism bug.
+//! Property tests for the execution engines: `SerialEngine`, the legacy
+//! spawn-per-wave `ThreadedEngine`, and the persistent worker-pool
+//! `PooledEngine` (the threaded default) must produce bit-identical
+//! `RunResult`s — output vector, breakdown, stats (cycles included) and
+//! energy — across formats x balancing schemes x sync schemes x thread
+//! counts, on both canonical and randomized inputs. The engines only
+//! move *where* the per-DPU simulations run; any divergence is a
+//! determinism bug.
 
 // These suites deliberately exercise `SpmvExecutor`'s deprecated
 // compatibility wrappers (`execute` / `execute_batch` / `run_iterations`
@@ -28,7 +30,8 @@ fn assert_identical<T: SpElem>(a: &RunResult<T>, b: &RunResult<T>, tag: &str) {
 }
 
 /// Run one (spec, matrix, system) with the serial engine and every
-/// threaded width, asserting bit-identical results throughout.
+/// concurrent engine (legacy spawn-per-wave threading AND the pooled
+/// default) at every width, asserting bit-identical results throughout.
 fn check_engines<T: SpElem>(spec: &KernelSpec, m: &CooMatrix<T>, x: &[T], n_dpus: usize) {
     let sys = || PimSystem {
         cfg: PimConfig { n_dpus, ..Default::default() },
@@ -36,16 +39,22 @@ fn check_engines<T: SpElem>(spec: &KernelSpec, m: &CooMatrix<T>, x: &[T], n_dpus
     let serial_exec = SpmvExecutor::with_engine(sys(), Engine::Serial);
     let serial = serial_exec.run(spec, m, x).unwrap();
     for t in THREAD_COUNTS {
-        let exec = SpmvExecutor::with_engine(sys(), Engine::threaded(t));
-        let threaded = exec.run(spec, m, x).unwrap();
-        assert_identical(&serial, &threaded, &format!("{} d={n_dpus} t={t}", spec.name));
-        // Plan reuse must be deterministic too: executing the same plan
-        // twice on the threaded engine is bit-stable.
-        let plan = exec.plan(spec, m).unwrap();
-        let r1 = exec.execute(&plan, x).unwrap();
-        let r2 = exec.execute(&plan, x).unwrap();
-        assert_identical(&r1, &r2, &format!("{} plan-reuse t={t}", spec.name));
-        assert_identical(&serial, &r1, &format!("{} plan-vs-run t={t}", spec.name));
+        for engine in [Engine::spawning(t), Engine::threaded(t)] {
+            let exec = SpmvExecutor::with_engine(sys(), engine);
+            let threaded = exec.run(spec, m, x).unwrap();
+            assert_identical(
+                &serial,
+                &threaded,
+                &format!("{} d={n_dpus} t={t} {engine:?}", spec.name),
+            );
+            // Plan reuse must be deterministic too: executing the same
+            // plan twice on a concurrent engine is bit-stable.
+            let plan = exec.plan(spec, m).unwrap();
+            let r1 = exec.execute(&plan, x).unwrap();
+            let r2 = exec.execute(&plan, x).unwrap();
+            assert_identical(&r1, &r2, &format!("{} plan-reuse t={t} {engine:?}", spec.name));
+            assert_identical(&serial, &r1, &format!("{} plan-vs-run t={t} {engine:?}", spec.name));
+        }
     }
 }
 
@@ -133,11 +142,50 @@ fn prop_run_iterations_identical_across_engines() {
     let sp = se.plan(&spec, &m).unwrap();
     let serial = se.run_iterations(&sp, &x, 5).unwrap();
     for t in THREAD_COUNTS {
-        let te = SpmvExecutor::with_engine(sys(), Engine::threaded(t));
-        let tp = te.plan(&spec, &m).unwrap();
-        let threaded = te.run_iterations(&tp, &x, 5).unwrap();
-        assert_identical(&serial.last, &threaded.last, &format!("iterations t={t}"));
-        assert_eq!(serial.total, threaded.total, "iteration totals t={t}");
-        assert_eq!(serial.energy, threaded.energy, "iteration energy t={t}");
+        for engine in [Engine::spawning(t), Engine::threaded(t)] {
+            let te = SpmvExecutor::with_engine(sys(), engine);
+            let tp = te.plan(&spec, &m).unwrap();
+            let threaded = te.run_iterations(&tp, &x, 5).unwrap();
+            assert_identical(&serial.last, &threaded.last, &format!("iterations t={t} {engine:?}"));
+            assert_eq!(serial.total, threaded.total, "iteration totals t={t} {engine:?}");
+            assert_eq!(serial.energy, threaded.energy, "iteration energy t={t} {engine:?}");
+        }
+    }
+}
+
+/// PROPERTY: a plan built under one tasklet count executes bit-identically
+/// on an executor with a *different* tasklet count (the cached plan-time
+/// split must fall back to an on-the-fly split, never a stale one) —
+/// compared against a plan built natively for that count, on every
+/// engine.
+#[test]
+fn prop_plan_time_splits_respect_executor_tasklet_count() {
+    let m = sparsep::matrix::generate::scale_free::<f64>(300, 300, 6, 0.7, 41);
+    let x: Vec<f64> = (0..300).map(|i| ((i % 11) as f64) - 5.0).collect();
+    let sys_with = |tasklets: usize| PimSystem {
+        cfg: PimConfig { n_dpus: 8, tasklets, ..Default::default() },
+    };
+    for spec in [
+        KernelSpec::csr_nnz(),
+        KernelSpec::coo_nnz(),
+        KernelSpec::bcsr_nnz(),
+        KernelSpec::bcoo_nnz(),
+    ] {
+        // Plan under 16 tasklets, execute under 4 (and vice versa).
+        for (plan_t, exec_t) in [(16usize, 4usize), (4, 16)] {
+            let planner = SpmvExecutor::new(sys_with(plan_t));
+            let plan = planner.plan(&spec, &m).unwrap();
+            for engine in [Engine::Serial, Engine::spawning(3), Engine::threaded(3)] {
+                let exec = SpmvExecutor::with_engine(sys_with(exec_t), engine);
+                let native_plan = exec.plan(&spec, &m).unwrap();
+                let crossed = exec.execute(&plan, &x).unwrap();
+                let native = exec.execute(&native_plan, &x).unwrap();
+                assert_identical(
+                    &crossed,
+                    &native,
+                    &format!("{} plan@{plan_t} exec@{exec_t} {engine:?}", spec.name),
+                );
+            }
+        }
     }
 }

@@ -66,10 +66,10 @@ fn check_service(engine: Engine, spec: &KernelSpec, m: &CooMatrix<f64>, tag: &st
     let iters = if square { ITERS } else { 1 };
 
     // Four tickets in flight at once...
-    let t_spmv1 = svc.submit(handle, Request::Spmv { x: x1.clone() }).unwrap();
-    let t_batch = svc.submit(handle, Request::Batch { xs: xs.clone() }).unwrap();
-    let t_iter = svc.submit(handle, Request::Iterate { x: x1.clone(), iters }).unwrap();
-    let t_spmv2 = svc.submit(handle, Request::Spmv { x: x2.clone() }).unwrap();
+    let t_spmv1 = svc.submit(handle, Request::spmv(x1.clone())).unwrap();
+    let t_batch = svc.submit(handle, Request::batch(xs.clone())).unwrap();
+    let t_iter = svc.submit(handle, Request::iterate(x1.clone(), iters)).unwrap();
+    let t_spmv2 = svc.submit(handle, Request::spmv(x2.clone())).unwrap();
 
     // ...claimed out of submission order.
     let iter_resp = match svc.wait(t_iter).unwrap() {
@@ -140,7 +140,7 @@ fn prop_block_policy_and_queue_depth_do_not_change_responses() {
                 .unwrap();
             let h = svc.load(&m, &spec).unwrap();
             // Through the pipelined queue...
-            let t = svc.submit(h, Request::Batch { xs: xs.clone() }).unwrap();
+            let t = svc.submit(h, Request::batch(xs.clone())).unwrap();
             let b = svc.wait(t).unwrap().into_batch().unwrap();
             assert_batch_identical(&b, &gold, &format!("{policy:?} depth={depth} queued"));
             // ...and through the synchronous fast path.
@@ -179,17 +179,17 @@ fn prop_deep_interleaved_pipeline_isolates_requests() {
             let x: Vec<f64> = (0..160).map(|i| ((i + 9 * r) % 7) as f64 - 3.0).collect();
             match r % 3 {
                 0 => {
-                    let t = svc.submit(h, Request::Spmv { x: x.clone() }).unwrap();
+                    let t = svc.submit(h, Request::spmv(x.clone())).unwrap();
                     tickets.push((t, Want::Spmv(x)));
                 }
                 1 => {
                     let xs = vec![x.clone(), x.iter().map(|v| v + 1.0).collect(), x];
-                    let t = svc.submit(h, Request::Batch { xs: xs.clone() }).unwrap();
+                    let t = svc.submit(h, Request::batch(xs.clone())).unwrap();
                     tickets.push((t, Want::Batch(xs)));
                 }
                 _ => {
                     let iters = 1 + r % 4;
-                    let t = svc.submit(h, Request::Iterate { x: x.clone(), iters }).unwrap();
+                    let t = svc.submit(h, Request::iterate(x.clone(), iters)).unwrap();
                     tickets.push((t, Want::Iter(x, iters)));
                 }
             }
@@ -267,8 +267,8 @@ fn prop_multiple_handles_do_not_cross_talk() {
     let hb = svc.load(&mb, &KernelSpec::csr_row()).unwrap();
     let xa: Vec<f64> = (0..120).map(|i| (i % 9) as f64 - 4.0).collect();
     let xb: Vec<f64> = (0..96).map(|i| (i % 5) as f64 - 2.0).collect();
-    let ta = svc.submit(ha, Request::Spmv { x: xa.clone() }).unwrap();
-    let tb = svc.submit(hb, Request::Spmv { x: xb.clone() }).unwrap();
+    let ta = svc.submit(ha, Request::spmv(xa.clone())).unwrap();
+    let tb = svc.submit(hb, Request::spmv(xb.clone())).unwrap();
     let rb = svc.wait(tb).unwrap().into_spmv().unwrap();
     let ra = svc.wait(ta).unwrap().into_spmv().unwrap();
     assert_identical(&ra, &plan_a.execute(&exec, &xa).unwrap(), "handle a");

@@ -90,10 +90,10 @@ fn single_service_oracle(engine: Engine, spec: &KernelSpec, m: &CooMatrix<f64>) 
         .build(PimSystem::with_dpus(DPUS_PER_SHARD))
         .unwrap();
     let h = svc.load(m, spec).unwrap();
-    let t1 = svc.submit(h, Request::Spmv { x: x1() }).unwrap();
-    let tb = svc.submit(h, Request::Batch { xs: batch_xs() }).unwrap();
-    let ti = svc.submit(h, Request::Iterate { x: x1(), iters: ITERS }).unwrap();
-    let t2 = svc.submit(h, Request::Spmv { x: x2() }).unwrap();
+    let t1 = svc.submit(h, Request::spmv(x1())).unwrap();
+    let tb = svc.submit(h, Request::batch(batch_xs())).unwrap();
+    let ti = svc.submit(h, Request::iterate(x1(), ITERS)).unwrap();
+    let t2 = svc.submit(h, Request::spmv(x2())).unwrap();
     Oracle {
         iter: svc.wait(ti).unwrap().into_iterations().unwrap(),
         spmv2: svc.wait(t2).unwrap().into_spmv().unwrap(),
@@ -207,10 +207,10 @@ fn check_sharded(
     let reference = Reference::new(engine, spec, m, &ranges);
 
     // Four tickets in flight at once...
-    let t1 = svc.submit(h, Request::Spmv { x: x1() }).unwrap();
-    let tb = svc.submit(h, Request::Batch { xs: batch_xs() }).unwrap();
-    let ti = svc.submit(h, Request::Iterate { x: x1(), iters: ITERS }).unwrap();
-    let t2 = svc.submit(h, Request::Spmv { x: x2() }).unwrap();
+    let t1 = svc.submit(h, Request::spmv(x1())).unwrap();
+    let tb = svc.submit(h, Request::batch(batch_xs())).unwrap();
+    let ti = svc.submit(h, Request::iterate(x1(), ITERS)).unwrap();
+    let t2 = svc.submit(h, Request::spmv(x2())).unwrap();
 
     // ...claimed out of submission order.
     let iter_resp = match svc.wait(ti).unwrap() {
@@ -306,10 +306,10 @@ fn fairness_weighted_round_robin_completion_order() {
     let want_y = m.spmv(&x1());
     let mut tickets: Vec<ShardedTicket> = Vec::new();
     for _ in 0..4 {
-        tickets.push(svc.submit_for(ta, ha, Request::Spmv { x: x1() }).unwrap());
+        tickets.push(svc.submit_for(ta, ha, Request::spmv(x1())).unwrap());
     }
     for _ in 0..12 {
-        tickets.push(svc.submit_for(tb, hb, Request::Spmv { x: x1() }).unwrap());
+        tickets.push(svc.submit_for(tb, hb, Request::spmv(x1())).unwrap());
     }
     svc.resume();
     for t in &tickets {
@@ -342,10 +342,10 @@ fn fairness_flooding_tenant_cannot_starve() {
     let hv = svc.load_for(tv, &m, &spec).unwrap();
     let mut tickets = Vec::new();
     for _ in 0..24 {
-        tickets.push(svc.submit_for(tf, hf, Request::Spmv { x: x2() }).unwrap());
+        tickets.push(svc.submit_for(tf, hf, Request::spmv(x2())).unwrap());
     }
     for _ in 0..6 {
-        tickets.push(svc.submit_for(tv, hv, Request::Spmv { x: x2() }).unwrap());
+        tickets.push(svc.submit_for(tv, hv, Request::spmv(x2())).unwrap());
     }
     svc.resume();
     for t in &tickets {
@@ -382,8 +382,8 @@ fn sharded_try_wait_polls_to_the_wait_response() {
         .build(PimSystem::with_dpus(DPUS_PER_SHARD))
         .unwrap();
     let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
-    let t_wait = svc.submit(h, Request::Spmv { x: x1() }).unwrap();
-    let t_poll = svc.submit(h, Request::Spmv { x: x1() }).unwrap();
+    let t_wait = svc.submit(h, Request::spmv(x1())).unwrap();
+    let t_poll = svc.submit(h, Request::spmv(x1())).unwrap();
     let gold = svc.wait(t_wait).unwrap().into_spmv().unwrap();
     let polled = loop {
         match svc.try_wait(t_poll).unwrap() {
@@ -416,7 +416,7 @@ fn concurrent_submitters_share_one_facade() {
                 for k in 0..3usize {
                     let x: Vec<f64> =
                         (0..N).map(|i| ((i + 7 * tid + k) % 5) as f64 - 2.0).collect();
-                    let t = svc.submit(h, Request::Spmv { x: x.clone() }).unwrap();
+                    let t = svc.submit(h, Request::spmv(x.clone())).unwrap();
                     let r = svc.wait(t).unwrap().into_spmv().unwrap();
                     assert_eq!(r.y, m.spmv(&x));
                 }

@@ -12,6 +12,9 @@
 #   BENCH_shard.json        the same request stream served by a
 #                           ShardedService at 1/2/4/8 shards (rank
 #                           groups), serial + threaded
+#   BENCH_hotpath.json      hot-path overhaul: persistent pooled engine
+#                           vs legacy spawn-per-wave threading vs serial
+#                           for spmv/batch/iterate at 1 and 4 shards
 #
 # Knobs:
 #   BENCH_ROWS   (default 100000)   CG matrix dimension
@@ -25,6 +28,9 @@
 #   BENCH_SHARD_ROWS (default 50000)  shard-bench matrix dimension
 #   BENCH_SHARD_BATCH (default 8)   vectors per sharded request
 #   BENCH_SHARD_DPUS (default 64)   simulated DPUs per shard
+#   BENCH_HOTPATH_ROWS (default 20000)  hotpath-bench matrix dimension
+#   BENCH_HOTPATH_ITERS (default 80)    hotpath iterate depth (waves)
+#   BENCH_HOTPATH_BATCH (default 16)    hotpath batch width
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -71,3 +77,14 @@ cargo run --release -- bench-shard \
   --out BENCH_shard.json
 
 cat BENCH_shard.json
+
+cargo run --release -- bench-hotpath \
+  --rows "${BENCH_HOTPATH_ROWS:-20000}" \
+  --deg 8 \
+  --iters "${BENCH_HOTPATH_ITERS:-80}" \
+  --batch "${BENCH_HOTPATH_BATCH:-16}" \
+  --dpus "${BENCH_DPUS:-256}" \
+  --threads "$THREADS" \
+  --out BENCH_hotpath.json
+
+cat BENCH_hotpath.json

@@ -22,6 +22,15 @@ echo "== sharding: differential + shard-planning + fairness suites =="
 cargo test -q --test shard_equivalence
 cargo test -q --test proptest_shard
 
+# Hot-path gates (PR 5): the engine-equivalence suite now covers the
+# persistent PooledEngine next to the legacy spawn-per-wave threading,
+# and the zero-copy suite locks the Arc payload sharing (pointer
+# identity across the sharded scatter, paused-scheduler reference
+# counting, iterate feedback re-wrap). Same deliberate redundancy.
+echo "== hot path: engine equivalence (pooled + spawning) + zero-copy payloads =="
+cargo test -q --test engine_equivalence
+cargo test -q --test zero_copy
+
 echo "== lint: cargo clippy --all-targets (warnings are errors) =="
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings

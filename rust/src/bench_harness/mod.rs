@@ -12,6 +12,7 @@ pub mod figures;
 pub mod hotpath;
 pub mod service;
 pub mod shard;
+pub mod tune;
 
 use std::time::Instant;
 

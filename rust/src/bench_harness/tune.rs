@@ -1,0 +1,214 @@
+//! Autotuner benchmark/driver (`sparsep tune`).
+//!
+//! Runs the [`crate::coordinator::tuner`] search over the generated
+//! suite, persists the winners as a loadable calibration table, and
+//! writes `BENCH_tune.json` reporting calibrated-vs-heuristic speedup
+//! per matrix class. Because the heuristic configuration is measured as
+//! candidate zero of the same sweep, every row's speedup is ≥ 1.0 by
+//! construction — this harness additionally *enforces* it (within
+//! `tolerance`, guarding against pathological measurement environments)
+//! so `scripts/ci.sh` can gate on the exit status alone.
+
+use crate::coordinator::calibration::CalibrationTable;
+use crate::coordinator::tuner::{tune, TuneOpts};
+use crate::coordinator::Engine;
+use crate::util::json::{num, s, Json};
+use crate::util::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Knobs for [`run`] (CLI flags of `sparsep tune`). Zero-valued numeric
+/// fields mean "use the mode's default" ([`TuneOpts::quick`] /
+/// [`TuneOpts::full`]).
+#[derive(Clone, Debug)]
+pub struct TuneBenchOpts {
+    /// `true` = mini-suite smoke search (seconds; the CI gate),
+    /// `false` = full paper-scale search (minutes; run offline).
+    pub quick: bool,
+    /// Simulated DPUs per rank group (0 = mode default).
+    pub n_dpus: usize,
+    /// Tasklets per DPU (0 = mode default).
+    pub tasklets: usize,
+    /// Host threads for wall-clock measurement (0 = serial engine,
+    /// the most reproducible choice).
+    pub threads: usize,
+    /// Timed repetitions per candidate (0 = mode default).
+    pub samples: usize,
+    /// Matrix-generator seed (0 = mode default).
+    pub seed: u64,
+    /// Where the calibration table lands (`run/serve --calibration`
+    /// loads this file).
+    pub table_out: String,
+    /// Where the JSON report lands.
+    pub out: String,
+    /// Largest tolerated shortfall of `min(speedup)` below 1.0 before
+    /// the run fails. Speedups are ≥ 1.0 by construction; the slack
+    /// only absorbs measurement pathologies.
+    pub tolerance: f64,
+}
+
+impl Default for TuneBenchOpts {
+    fn default() -> TuneBenchOpts {
+        TuneBenchOpts {
+            quick: false,
+            n_dpus: 0,
+            tasklets: 0,
+            threads: 0,
+            samples: 0,
+            seed: 0,
+            table_out: "calibration.json".to_string(),
+            out: "BENCH_tune.json".to_string(),
+            tolerance: 0.02,
+        }
+    }
+}
+
+/// Run the search, save the table, write and gate the report.
+pub fn run(opts: &TuneBenchOpts) -> Result<()> {
+    crate::ensure!(opts.tolerance >= 0.0, "tune needs --tolerance >= 0");
+    let mut topts = if opts.quick { TuneOpts::quick() } else { TuneOpts::full() };
+    if opts.n_dpus > 0 {
+        topts.n_dpus = opts.n_dpus;
+    }
+    if opts.tasklets > 0 {
+        topts.tasklets = opts.tasklets;
+    }
+    if opts.samples > 0 {
+        topts.samples = opts.samples;
+    }
+    if opts.seed > 0 {
+        topts.seed = opts.seed;
+    }
+    if opts.threads > 0 {
+        topts.engine = Engine::threaded(opts.threads);
+    }
+    println!(
+        "tune: {} search, {} DPUs x {} tasklets, batches {:?}, blocks {:?}, shards {:?}, top-{} kernels, {} samples",
+        if topts.quick { "quick" } else { "full" },
+        topts.n_dpus,
+        topts.tasklets,
+        topts.batches,
+        topts.block_grid,
+        topts.shard_grid,
+        topts.top_kernels,
+        topts.samples
+    );
+
+    let report = tune(&topts)?;
+    report.table.save(Path::new(&opts.table_out))?;
+
+    let mut table = super::Table::new(&[
+        "matrix", "class", "batch", "heuristic", "h_wall_ms", "winner", "block", "shards",
+        "wall_ms", "speedup",
+    ]);
+    let mut rows_json = Vec::with_capacity(report.rows.len());
+    // Per-class fold: min and geometric mean of the speedups.
+    let mut per_class: BTreeMap<String, (f64, f64, usize)> = BTreeMap::new();
+    for r in &report.rows {
+        table.row(&[
+            r.matrix.clone(),
+            r.class.clone(),
+            r.batch.to_string(),
+            r.heuristic_kernel.clone(),
+            format!("{:.3}", r.heuristic_wall_s * 1e3),
+            r.kernel.clone(),
+            r.block.to_string(),
+            r.shards.to_string(),
+            format!("{:.3}", r.wall_s * 1e3),
+            format!("{:.2}x", r.speedup),
+        ]);
+        rows_json.push(crate::util::json::obj(vec![
+            ("matrix", s(&r.matrix)),
+            ("class", s(&r.class)),
+            ("batch", num(r.batch as f64)),
+            ("heuristic_kernel", s(&r.heuristic_kernel)),
+            ("heuristic_block", num(r.heuristic_block as f64)),
+            ("heuristic_wall_s", num(r.heuristic_wall_s)),
+            ("kernel", s(&r.kernel)),
+            ("block", num(r.block as f64)),
+            ("shards", num(r.shards as f64)),
+            ("wall_s", num(r.wall_s)),
+            ("speedup", num(r.speedup)),
+        ]));
+        let c = per_class.entry(r.class.clone()).or_insert((f64::INFINITY, 0.0, 0));
+        c.0 = c.0.min(r.speedup);
+        c.1 += r.speedup.ln();
+        c.2 += 1;
+    }
+    table.print();
+
+    let mut fields: BTreeMap<String, Json> = BTreeMap::new();
+    fields.insert("bench".into(), s("tune"));
+    fields.insert("mode".into(), s(if topts.quick { "quick" } else { "full" }));
+    fields.insert("dpus".into(), num(topts.n_dpus as f64));
+    fields.insert("tasklets".into(), num(topts.tasklets as f64));
+    fields.insert("samples".into(), num(topts.samples as f64));
+    fields.insert("seed".into(), num(topts.seed as f64));
+    fields.insert("entries".into(), num(report.table.len() as f64));
+    fields.insert("calibration_table".into(), s(&opts.table_out));
+    fields.insert("rows".into(), Json::Arr(rows_json));
+    for (class, (min, lnsum, n)) in &per_class {
+        let geo = (lnsum / *n as f64).exp();
+        println!("  class {class:<11} min {min:>5.2}x  geomean {geo:>5.2}x over {n} cells");
+        fields.insert(format!("class_{class}_min_speedup"), num(*min));
+        fields.insert(format!("class_{class}_geomean_speedup"), num(geo));
+    }
+    let min_speedup = report.min_speedup();
+    fields.insert("min_speedup".into(), num(min_speedup));
+    std::fs::write(&opts.out, Json::Obj(fields).to_string() + "\n")
+        .with_context(|| format!("write {}", opts.out))?;
+    println!("wrote {} and {}", opts.out, opts.table_out);
+
+    // The CI gate: calibrated selection must never lose to the
+    // heuristic baseline beyond the tolerance. By construction the
+    // minimum is ≥ 1.0; tripping this means the harness itself broke.
+    crate::ensure!(
+        min_speedup >= 1.0 - opts.tolerance,
+        "calibrated selection regressed vs the heuristic: min speedup {min_speedup:.4} < {:.4}",
+        1.0 - opts.tolerance
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tune_bench_smoke_writes_report_and_loadable_table() {
+        let dir = std::env::temp_dir().join("sparsep_bench_tune_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_tune_test.json");
+        let table_out = dir.join("calibration_test.json");
+        let opts = TuneBenchOpts {
+            quick: true,
+            n_dpus: 16,
+            tasklets: 8,
+            samples: 1,
+            table_out: table_out.to_str().unwrap().to_string(),
+            out: out.to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+
+        let txt = std::fs::read_to_string(&out).unwrap();
+        let j = Json::parse(&txt).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("tune"));
+        assert_eq!(j.get("mode").as_str(), Some("quick"));
+        let rows = j.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 4, "one row per mini-suite matrix");
+        for r in rows {
+            assert!(r.get("speedup").as_f64().unwrap() >= 1.0);
+            assert!(r.get("wall_s").as_f64().unwrap() > 0.0);
+        }
+        assert!(j.get("min_speedup").as_f64().unwrap() >= 1.0);
+        assert!(j.get("class_regular_min_speedup").as_f64().unwrap() >= 1.0);
+        assert!(j.get("class_scale-free_min_speedup").as_f64().unwrap() >= 1.0);
+
+        // The emitted table is loadable (checksum verifies) and usable.
+        let table = CalibrationTable::load(&table_out).unwrap();
+        assert_eq!(table.len(), 4);
+        std::fs::remove_file(&out).ok();
+        std::fs::remove_file(&table_out).ok();
+    }
+}

@@ -7,7 +7,7 @@ use crate::baselines::cpu;
 use crate::bench_harness::figures::{self, Scale};
 use crate::coordinator::queue::DEFAULT_QUEUE_DEPTH;
 use crate::coordinator::{
-    BlockPolicy, Engine, KernelSpec, Request, ServiceBuilder, ShardedService,
+    BlockPolicy, CalibrationTable, Engine, KernelSpec, Request, ServiceBuilder, ShardedService,
     ShardedServiceBuilder, ShardedTicket, SpmvExecutor, SpmvService, TenantId, TenantSpec, Ticket,
 };
 use crate::matrix::{generate, CooMatrix, CsrMatrix, DType, SpElem};
@@ -80,18 +80,28 @@ USAGE: sparsep <command> [--flag value]...
 COMMANDS:
   kernels                         list the 25 SpMV kernels
   suite [--full]                  print the matrix-suite table (Table 2)
-  run --kernel K --matrix M       run one kernel through SpmvService:
-      [--dpus N] [--tasklets T] [--dtype D] [--stripes S] [--seed X]
+  run --matrix M [--kernel K]     run one kernel through SpmvService
+      [--dpus N] [--tasklets T]   (no --kernel: auto-select, calibrated
+      [--dtype D] [--stripes S]   when --calibration is loaded):
+      [--seed X]
       [--batch B]                 B > 1: batched SpMM-style request of
                                   B vectors over one handle, all verified
   serve --matrix M                demo serving loop: load once, submit a
       [--requests R] [--batch B]  mixed request stream (spmv / batch /
       [--iters I] [--dpus N]      iterate) with all tickets in flight,
       [--kernel K] [--seed X]     wait out of order, verify every answer
-      [--shards S]                S > 0: serve through a ShardedService
+      [--shards S|auto]           S > 0: serve through a ShardedService
       [--tenants name:w[:q],...]  (S rank groups, --dpus per shard) with
                                   weighted-round-robin multi-tenant
-                                  scheduling (weight w, in-flight quota q)
+                                  scheduling (weight w, in-flight quota q);
+                                  auto: shard count from the calibration
+  tune [--quick]                  search-based autotuner: sweep kernel x
+      [--dpus N] [--tasklets T]   block x shard per (matrix, batch) cell,
+      [--threads T] [--samples S] write the winners as a calibration
+      [--seed X] [--tolerance E]  table for --calibration, and report
+      [--out calibration.json]    calibrated-vs-heuristic speedup per
+      [--report BENCH_tune.json]  class (fails if any cell regresses
+                                  beyond E); --quick = mini-suite smoke
   exp <id> [--scale F] [--full]   regenerate an experiment:
       e1 tasklet-scaling   e2 sync-schemes    e3 dtype
       e4 block-formats     e5 1d-scaling      e6 1d-breakdown
@@ -140,8 +150,11 @@ SERVICE FLAGS (run / serve / solve):
   --vector-block auto|N           vectors per fused batch block
                                   (auto = adaptive policy, the default)
   --queue-depth Q                 request intake depth before submit blocks
-  (results are bit-identical across engines, block widths and queue
-  depths; only wall-clock changes)"
+  --calibration file.json         load a `sparsep tune` calibration table:
+                                  kernel/block/shard choices come from
+                                  measured winners instead of heuristics
+  (results are bit-identical across engines, block widths, queue depths
+  and calibration tables; only wall-clock changes)"
     );
 }
 
@@ -176,13 +189,30 @@ fn block_policy_from_args(args: &Args) -> Result<BlockPolicy> {
     }
 }
 
+/// Load the table behind `--calibration file.json`, if given. A path
+/// that does not load (missing file, corrupt checksum) is a hard error
+/// rather than a silent fallback to the heuristics.
+fn calibration_from_args(args: &Args) -> Result<Option<std::sync::Arc<CalibrationTable>>> {
+    match args.get("calibration") {
+        None => Ok(None),
+        Some(path) => {
+            let t = CalibrationTable::load(std::path::Path::new(path))
+                .with_context(|| format!("load --calibration {path}"))?;
+            Ok(Some(std::sync::Arc::new(t)))
+        }
+    }
+}
+
 /// Build an [`SpmvService`] from the common service flags.
 fn service_from_args<T: SpElem>(args: &Args, sys: PimSystem) -> Result<SpmvService<T>> {
-    ServiceBuilder::new()
+    let mut b = ServiceBuilder::new()
         .engine(engine_from_args(args)?)
         .vector_block(block_policy_from_args(args)?)
-        .queue_depth(args.get_usize("queue-depth", DEFAULT_QUEUE_DEPTH)?)
-        .build(sys)
+        .queue_depth(args.get_usize("queue-depth", DEFAULT_QUEUE_DEPTH)?);
+    if let Some(table) = calibration_from_args(args)? {
+        b = b.calibration(table);
+    }
+    b.build(sys)
 }
 
 fn matrix_by_name(name: &str, seed: u64) -> Result<CooMatrix<f64>> {
@@ -398,7 +428,6 @@ fn serve_claim_and_verify<TK: Copy>(
 fn serve_sharded(args: &Args) -> Result<()> {
     let mname = args.get("matrix").unwrap_or("mini-sf");
     let m = matrix_by_name(mname, args.get_usize("seed", 7)? as u64)?;
-    let shards = args.get_usize("shards", 2)?;
     let tenants = match args.get("tenants") {
         Some(spec) => TenantSpec::parse_list(spec)?,
         None => vec![TenantSpec::new("default", 1)],
@@ -408,24 +437,43 @@ fn serve_sharded(args: &Args) -> Result<()> {
         tasklets: args.get_usize("tasklets", 16)?,
         ..Default::default()
     };
-    let svc: ShardedService<f64> = ShardedServiceBuilder::new()
-        .shards(shards)
+    let requests = args.get_usize("requests", 12)?;
+    let batch = args.get_usize("batch", 8)?;
+    let iters = args.get_usize("iters", 5)?;
+    let calibration = calibration_from_args(args)?;
+    let mut builder = ShardedServiceBuilder::new()
         .engine(engine_from_args(args)?)
         .vector_block(block_policy_from_args(args)?)
         .queue_depth(args.get_usize("queue-depth", DEFAULT_QUEUE_DEPTH)?)
-        .tenants(tenants.clone())
-        .build(PimSystem::new(cfg.clone())?)?;
+        .tenants(tenants.clone());
+    if let Some(table) = &calibration {
+        builder = builder.calibration(std::sync::Arc::clone(table));
+    }
+    // `--shards auto` asks the calibration table for the shard count
+    // (no table / no entry: the builder's default stands).
+    builder = match args.get("shards") {
+        Some("auto") => builder.shards_for_matrix(&m, batch),
+        _ => builder.shards(args.get_usize("shards", 2)?),
+    };
+    let svc: ShardedService<f64> = builder.build(PimSystem::new(cfg.clone())?)?;
     let stripes = args.get_usize("stripes", 8)?;
     let spec = match args.get("kernel") {
         Some(k) => KernelSpec::by_name(k, stripes)
             .with_context(|| format!("unknown kernel {k} (see `sparsep kernels`)"))?,
         // Select against the per-shard system actually being served
-        // (same config serve() would use), not a default one.
-        None => crate::coordinator::adaptive::select_heuristic(&m, &cfg).spec,
+        // (same config serve() would use), not a default one; with a
+        // calibration table loaded the choice is measured, not guessed.
+        None => {
+            let c = crate::coordinator::adaptive::select_auto(
+                &m,
+                &cfg,
+                batch,
+                calibration.as_deref(),
+            );
+            println!("selected   : {}  ({})", c.spec.name, c.reason);
+            c.spec
+        }
     };
-    let requests = args.get_usize("requests", 12)?;
-    let batch = args.get_usize("batch", 8)?;
-    let iters = args.get_usize("iters", 5)?;
     println!(
         "serve (sharded): {} ({}x{}, {} nnz) via {} on {} shard(s) x {} DPUs, tenants {:?}",
         mname,
@@ -520,15 +568,24 @@ fn serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let svc: SpmvService<f64> = service_from_args(args, PimSystem::new(cfg)?)?;
+    let requests = args.get_usize("requests", 12)?;
+    let batch = args.get_usize("batch", 8)?;
+    let iters = args.get_usize("iters", 5)?;
     let stripes = args.get_usize("stripes", 8)?;
     let spec = match args.get("kernel") {
         Some(k) => KernelSpec::by_name(k, stripes)
             .with_context(|| format!("unknown kernel {k} (see `sparsep kernels`)"))?,
-        None => crate::coordinator::adaptive::select_heuristic(&m, &svc.system().cfg).spec,
+        None => {
+            let c = crate::coordinator::adaptive::select_auto(
+                &m,
+                &svc.system().cfg,
+                batch,
+                calibration_from_args(args)?.as_deref(),
+            );
+            println!("selected   : {}  ({})", c.spec.name, c.reason);
+            c.spec
+        }
     };
-    let requests = args.get_usize("requests", 12)?;
-    let batch = args.get_usize("batch", 8)?;
-    let iters = args.get_usize("iters", 5)?;
     println!(
         "serve: {} ({}x{}, {} nnz) via {} on {} DPUs, {} engine, {:?} blocks",
         mname,
@@ -603,10 +660,6 @@ pub fn run(args: Args) -> Result<()> {
             figures::e10_suite_table(args.get_bool("full"));
         }
         "run" => {
-            let kname = args.get("kernel").context("--kernel required (see `sparsep kernels`)")?;
-            let stripes = args.get_usize("stripes", 8)?;
-            let spec = KernelSpec::by_name(kname, stripes)
-                .with_context(|| format!("unknown kernel {kname}"))?;
             let mname = args.get("matrix").unwrap_or("mini-sf");
             let m = matrix_by_name(mname, args.get_usize("seed", 7)? as u64)?;
             let cfg = PimConfig {
@@ -614,10 +667,27 @@ pub fn run(args: Args) -> Result<()> {
                 tasklets: args.get_usize("tasklets", 16)?,
                 ..Default::default()
             };
+            let batch = args.get_usize("batch", 1)?;
+            let stripes = args.get_usize("stripes", 8)?;
+            let spec = match args.get("kernel") {
+                Some(kname) => KernelSpec::by_name(kname, stripes)
+                    .with_context(|| format!("unknown kernel {kname} (see `sparsep kernels`)"))?,
+                // No --kernel: pick one — calibrated when a table is
+                // loaded, the static heuristic otherwise.
+                None => {
+                    let c = crate::coordinator::adaptive::select_auto(
+                        &m,
+                        &cfg,
+                        batch,
+                        calibration_from_args(&args)?.as_deref(),
+                    );
+                    println!("selected   : {}  ({})", c.spec.name, c.reason);
+                    c.spec
+                }
+            };
             let sys = PimSystem::new(cfg)?;
             let dt = DType::from_name(args.get("dtype").unwrap_or("fp64"))
                 .context("bad --dtype (int8|int16|int32|int64|fp32|fp64)")?;
-            let batch = args.get_usize("batch", 1)?;
             match dt {
                 DType::I8 => run_spec::<i8>(&spec, &m, &service_from_args(&args, sys)?, batch)?,
                 DType::I16 => run_spec::<i16>(&spec, &m, &service_from_args(&args, sys)?, batch)?,
@@ -685,8 +755,12 @@ pub fn run(args: Args) -> Result<()> {
             println!("heuristic  : {}  ({})", choice.spec.name, choice.reason);
             let x: Vec<f64> = (0..m.ncols()).map(|i| (i % 7) as f64).collect();
             let t_h = exec.plan(&choice.spec, &m)?.execute(&exec, &x)?.breakdown.total_s();
-            let (best, ranking) =
-                crate::coordinator::adaptive::autotune(&exec, &m, &x, args.get_usize("stripes", 8)?)?;
+            let (best, ranking) = crate::coordinator::adaptive::autotune(
+                &exec,
+                &m,
+                std::slice::from_ref(&x),
+                args.get_usize("stripes", 8)?,
+            )?;
             println!("autotuned  : {}  ({:.3} ms)", best.name, ranking[0].1 * 1e3);
             println!("heuristic time: {:.3} ms ({:.2}x of best)", t_h * 1e3, t_h / ranking[0].1);
             println!("top 5:");
@@ -761,6 +835,21 @@ pub fn run(args: Args) -> Result<()> {
                 }
                 other => bail!("unknown app {other}"),
             }
+        }
+        "tune" => {
+            let d = crate::bench_harness::tune::TuneBenchOpts::default();
+            let opts = crate::bench_harness::tune::TuneBenchOpts {
+                quick: args.get_bool("quick"),
+                n_dpus: args.get_usize("dpus", d.n_dpus)?,
+                tasklets: args.get_usize("tasklets", d.tasklets)?,
+                threads: args.get_usize("threads", d.threads)?,
+                samples: args.get_usize("samples", d.samples)?,
+                seed: args.get_usize("seed", d.seed as usize)? as u64,
+                table_out: args.get("out").unwrap_or(d.table_out.as_str()).to_string(),
+                out: args.get("report").unwrap_or(d.out.as_str()).to_string(),
+                tolerance: args.get_f64("tolerance", d.tolerance)?,
+            };
+            crate::bench_harness::tune::run(&opts)?;
         }
         "bench-coordinator" => {
             bench_coordinator(&args)?;
@@ -1075,6 +1164,59 @@ mod tests {
         )
         .unwrap();
         assert!(run(bad).is_err());
+    }
+
+    #[test]
+    fn tune_then_calibrated_run_and_serve_smoke() {
+        let dir = std::env::temp_dir().join("sparsep_cli_tune_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let table = dir.join("calibration_cli.json");
+        let report = dir.join("BENCH_tune_cli.json");
+        let a = Args::parse(
+            ["tune", "--quick", "--dpus", "16", "--tasklets", "8", "--samples", "1",
+             "--out", table.to_str().unwrap(), "--report", report.to_str().unwrap()]
+                .map(String::from),
+        )
+        .unwrap();
+        run(a).unwrap();
+
+        // `run` without --kernel auto-selects from the table just tuned.
+        let a = Args::parse(
+            ["run", "--matrix", "mini-band", "--dpus", "16", "--batch", "3",
+             "--calibration", table.to_str().unwrap()]
+                .map(String::from),
+        )
+        .unwrap();
+        run(a).unwrap();
+
+        // Sharded serve with calibrated spec + automatic shard count.
+        let a = Args::parse(
+            ["serve", "--matrix", "mini-band", "--dpus", "8", "--shards", "auto",
+             "--requests", "4", "--batch", "2", "--iters", "2",
+             "--calibration", table.to_str().unwrap()]
+                .map(String::from),
+        )
+        .unwrap();
+        run(a).unwrap();
+
+        // A table that cannot load is a hard error, not a fallback.
+        let bad = Args::parse(
+            ["run", "--matrix", "mini-band", "--calibration", "/nonexistent/cal.json"]
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(bad).is_err());
+        std::fs::remove_file(&table).ok();
+        std::fs::remove_file(&report).ok();
+    }
+
+    #[test]
+    fn run_without_kernel_uses_the_heuristic() {
+        let a = Args::parse(
+            ["run", "--matrix", "mini-band", "--dpus", "8"].map(String::from),
+        )
+        .unwrap();
+        run(a).unwrap();
     }
 
     #[test]

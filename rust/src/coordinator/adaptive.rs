@@ -7,22 +7,32 @@
 //! > sparsity pattern of the input matrix and the characteristics of
 //! > the underlying PIM hardware."
 //!
-//! Two selectors:
+//! Three selectors, cheapest to dearest:
 //! * [`select_heuristic`] — O(1) decision rules over [`MatrixStats`] and
 //!   the [`PimConfig`], encoding the paper's findings (block structure
 //!   -> BCOO; high CV -> element-granularity COO; many DPUs + wide
 //!   vector -> 2D; etc.).
+//! * [`select_auto`] — consult a measured
+//!   [`CalibrationTable`](super::calibration::CalibrationTable) by
+//!   nearest-neighbor over normalized sparsity statistics (batch-aware),
+//!   falling back to the heuristic when no table is loaded or the
+//!   recorded winner cannot be reconstructed on this system.
 //! * [`autotune`] — exhaustive search over the 25 kernels on the actual
-//!   executor (ground truth, costs 25 simulated runs).
+//!   executor (ground truth; 25 planned-and-executed runs). This is the
+//!   inner measurement primitive of the offline search in
+//!   [`super::tuner`], and it is batch-aware: ranking a kernel for a
+//!   `B`-vector serving workload measures a `B`-vector batch, not a
+//!   single SpMV.
 //!
 //! The unit tests check the heuristic agrees with the autotuner's
 //! *family* (1D vs 2D, balanced vs not) on the canonical matrix classes.
 
+use super::calibration::CalibrationTable;
 use super::{KernelSpec, SpmvExecutor};
 use crate::matrix::{BcsrMatrix, CooMatrix, Format, MatrixStats, SpElem};
 use crate::pim::PimConfig;
 
-/// Why the heuristic picked what it picked (for logs and the CLI).
+/// Why the selector picked what it picked (for logs and the CLI).
 #[derive(Clone, Debug)]
 pub struct Choice {
     pub spec: KernelSpec,
@@ -85,30 +95,96 @@ pub fn select_heuristic<T: SpElem>(m: &CooMatrix<T>, cfg: &PimConfig) -> Choice 
     }
 }
 
-/// Largest power-of-two stripe count <= sqrt(n_dpus) that divides it —
-/// balances the broadcast saving against partial-result volume.
-fn pick_stripes(n_dpus: usize) -> usize {
-    let mut s = 1usize;
-    while s * 2 * s * 2 <= n_dpus && n_dpus % (s * 2) == 0 {
-        s *= 2;
-    }
-    s.max(2.min(n_dpus))
+/// Calibrated selection: nearest-neighbor over the table's normalized
+/// feature vectors (batch-aware). `None` when the table is empty or the
+/// recorded winner's kernel name cannot be reconstructed on this build —
+/// callers fall back to [`select_heuristic`].
+pub fn select_calibrated<T: SpElem>(
+    m: &CooMatrix<T>,
+    cfg: &PimConfig,
+    batch: usize,
+    table: &CalibrationTable,
+) -> Option<Choice> {
+    let stats = MatrixStats::of(m);
+    let entry = table.lookup(&stats, batch)?;
+    let spec = table.spec_for(entry, cfg)?;
+    Some(Choice {
+        reason: format!(
+            "calibrated: nearest entry {} @batch {} ({}, measured {:.3} ms vs heuristic {:.3} ms) -> {}",
+            entry.matrix,
+            entry.batch,
+            entry.class,
+            entry.wall_s * 1e3,
+            entry.heuristic_wall_s * 1e3,
+            spec.name
+        ),
+        spec,
+    })
 }
 
-/// Ground-truth selection: run all 25 kernels, return the fastest
-/// end-to-end plus the full ranking.
+/// The serving stack's selection entry point: calibrated when a table is
+/// loaded (and usable), heuristic otherwise. This is what replaces every
+/// direct `select_heuristic` call on the `run`/`serve` paths.
+pub fn select_auto<T: SpElem>(
+    m: &CooMatrix<T>,
+    cfg: &PimConfig,
+    batch: usize,
+    table: Option<&CalibrationTable>,
+) -> Choice {
+    table
+        .and_then(|t| select_calibrated(m, cfg, batch, t))
+        .unwrap_or_else(|| select_heuristic(m, cfg))
+}
+
+/// Stripe count for the heuristic's 2D picks: the largest power-of-two
+/// `s` with `(2s)^2 <= n_dpus` that divides `n_dpus` — balancing the
+/// broadcast saving against partial-result volume. When no power of two
+/// divides (odd DPU counts), fall back to the largest divisor
+/// `<= sqrt(n_dpus)`, and to 1 when none exists (prime counts): the 2D
+/// partitioner requires stripes to divide the DPU count, so returning a
+/// non-divisor (as this function once did for primes) would make every
+/// 2D plan fail.
+pub(crate) fn pick_stripes(n_dpus: usize) -> usize {
+    let n = n_dpus.max(1);
+    let mut s = 1usize;
+    while s * 2 * s * 2 <= n && n % (s * 2) == 0 {
+        s *= 2;
+    }
+    if s > 1 {
+        return s;
+    }
+    // Odd (or tiny) counts: largest divisor <= sqrt(n); 1 for primes.
+    let mut best = 1;
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            best = d;
+        }
+        d += 1;
+    }
+    best
+}
+
+/// Ground-truth selection: plan and execute all 25 kernels on the actual
+/// (simulated) system and return the fastest end-to-end plus the full
+/// ranking. Batch-aware: `xs` is the vector batch of the workload being
+/// tuned for (one vector = classic single-SpMV tuning); a kernel's score
+/// is its summed modeled time over the whole batch, so kernels whose
+/// load cost amortizes across vectors rank accordingly. This is the
+/// inner measurement primitive [`super::tuner::tune`] builds on.
 pub fn autotune<T: SpElem>(
     exec: &SpmvExecutor,
     m: &CooMatrix<T>,
-    x: &[T],
+    xs: &[Vec<T>],
     stripes: usize,
 ) -> crate::util::Result<(KernelSpec, Vec<(String, f64)>)> {
+    crate::ensure!(!xs.is_empty(), "autotune needs at least one vector");
     let mut ranking = Vec::new();
     let mut best: Option<(KernelSpec, f64)> = None;
     for spec in KernelSpec::all25(stripes) {
         let plan = exec.plan(&spec, m)?;
-        let r = plan.execute(exec, x)?;
-        let t = r.breakdown.total_s();
+        let batch = plan.execute_batch_runs(exec, xs)?;
+        let t: f64 = batch.runs.iter().map(|r| r.breakdown.total_s()).sum();
         ranking.push((spec.name.clone(), t));
         if best.as_ref().map_or(true, |(_, bt)| t < *bt) {
             best = Some((spec, t));
@@ -121,6 +197,7 @@ pub fn autotune<T: SpElem>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::calibration::CalibrationEntry;
     use crate::coordinator::Partitioning;
     use crate::matrix::generate;
     use crate::pim::PimSystem;
@@ -186,6 +263,66 @@ mod tests {
     }
 
     #[test]
+    fn pick_stripes_handles_prime_and_odd_counts() {
+        // Primes: no divisor <= sqrt(n) but 1 — must return 1, never a
+        // non-divisor (the old code returned 2 for every prime).
+        for p in [2usize, 3, 7, 13, 97, 101, 1021] {
+            assert_eq!(pick_stripes(p), if p == 4 { 2 } else { 1 }, "prime {p}");
+        }
+        // Odd composites: largest divisor <= sqrt(n).
+        assert_eq!(pick_stripes(9), 3);
+        assert_eq!(pick_stripes(15), 3);
+        assert_eq!(pick_stripes(81), 9);
+        assert_eq!(pick_stripes(45), 5);
+        // Every count yields a divisor.
+        for n in 1..=300 {
+            let s = pick_stripes(n);
+            assert!(s >= 1 && n % s == 0, "pick_stripes({n}) = {s}");
+        }
+        assert_eq!(pick_stripes(0), 1, "degenerate count clamps");
+    }
+
+    #[test]
+    fn select_auto_falls_back_without_a_table() {
+        let m = generate::uniform::<f64>(512, 512, 6, 3);
+        let h = select_heuristic(&m, &cfg(16));
+        let a = select_auto(&m, &cfg(16), 1, None);
+        assert_eq!(a.spec.name, h.spec.name);
+        // An empty table falls back too.
+        let empty = CalibrationTable::default();
+        let a = select_auto(&m, &cfg(16), 1, Some(&empty));
+        assert_eq!(a.spec.name, h.spec.name);
+    }
+
+    #[test]
+    fn select_auto_uses_the_table_when_loaded() {
+        let m = generate::uniform::<f64>(512, 512, 6, 3);
+        let st = MatrixStats::of(&m);
+        let table = CalibrationTable::new(vec![CalibrationEntry {
+            matrix: "probe".into(),
+            class: st.class().into(),
+            features: st.feature_vector(),
+            batch: 1,
+            kernel: "BCOO.nnz".into(),
+            stripes: 0,
+            block: 4,
+            shards: 2,
+            wall_s: 1e-3,
+            heuristic_wall_s: 2e-3,
+        }]);
+        let c = select_auto(&m, &cfg(16), 1, Some(&table));
+        assert_eq!(c.spec.name, "BCOO.nnz", "{}", c.reason);
+        assert!(c.reason.contains("calibrated"), "{}", c.reason);
+        // A table whose winner can't be reconstructed falls back.
+        let bogus = CalibrationTable::new(vec![CalibrationEntry {
+            kernel: "NOPE".into(),
+            ..table.entries()[0].clone()
+        }]);
+        let c = select_auto(&m, &cfg(16), 1, Some(&bogus));
+        assert_eq!(c.spec.name, select_heuristic(&m, &cfg(16)).spec.name);
+    }
+
+    #[test]
     fn heuristic_close_to_autotuned_ground_truth() {
         // The heuristic need not be optimal, but it must land within 2x
         // of the autotuner's best on each canonical class.
@@ -193,7 +330,8 @@ mod tests {
             let m = (e.gen)(11);
             let x: Vec<f64> = (0..m.ncols()).map(|i| (i % 7) as f64).collect();
             let exec = SpmvExecutor::new(PimSystem::with_dpus(64));
-            let (best_spec, ranking) = autotune(&exec, &m, &x, 8).unwrap();
+            let (best_spec, ranking) =
+                autotune(&exec, &m, std::slice::from_ref(&x), 8).unwrap();
             let best_t = ranking[0].1;
             let choice = select_heuristic(&m, &exec.sys.cfg);
             let choice_plan = exec.plan(&choice.spec, &m).unwrap();
@@ -213,8 +351,29 @@ mod tests {
         let m = generate::uniform::<f64>(256, 256, 6, 5);
         let x = vec![1.0f64; 256];
         let exec = SpmvExecutor::new(PimSystem::with_dpus(16));
-        let (_, ranking) = autotune(&exec, &m, &x, 4).unwrap();
+        let (_, ranking) = autotune(&exec, &m, std::slice::from_ref(&x), 4).unwrap();
         assert_eq!(ranking.len(), 25);
         assert!(ranking.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn autotune_is_batch_aware() {
+        // A B-vector batch costs B x the modeled single-vector time for
+        // every kernel (modeled costs are per vector), so the batched
+        // ranking must agree with B * the single-vector ranking — and an
+        // empty batch is rejected.
+        let m = generate::uniform::<f64>(256, 256, 6, 5);
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(16));
+        let xs: Vec<Vec<f64>> = (0..3)
+            .map(|s| (0..256).map(|i| ((i + s) % 7) as f64).collect())
+            .collect();
+        let (_, single) = autotune(&exec, &m, &xs[..1], 4).unwrap();
+        let (_, batched) = autotune(&exec, &m, &xs, 4).unwrap();
+        let single: std::collections::HashMap<_, _> = single.into_iter().collect();
+        for (name, t) in &batched {
+            let expect = single[name] * 3.0;
+            assert!((t - expect).abs() <= 1e-9 * expect.max(1e-30), "{name}: {t} vs {expect}");
+        }
+        assert!(autotune(&exec, &m, &[], 4).is_err());
     }
 }

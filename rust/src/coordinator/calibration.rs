@@ -1,0 +1,400 @@
+//! Calibration table — the persisted output of the search-based
+//! autotuner ([`super::tuner`]) and the lookup structure the serving
+//! stack consults at plan/serve time.
+//!
+//! The paper's central finding is that the best (format, partitioning,
+//! balance) choice depends on the sparsity pattern, and that the
+//! performance cliffs of a real PIM system are discovered by
+//! measurement, not modeled a priori. The tuner therefore *measures*:
+//! it sweeps kernel/block/shard configurations over a generated matrix
+//! suite and records each winner here, keyed by the matrix's
+//! [`MatrixStats`] feature vector. At serve time an unseen matrix is
+//! matched to its nearest calibrated neighbor over normalized features;
+//! when no table is loaded (or no kernel of the recorded name exists),
+//! callers fall back to the hand-tuned heuristics unchanged.
+//!
+//! ## On-disk format
+//!
+//! One JSON object:
+//!
+//! ```json
+//! {"version": 1, "checksum": "0f3a...", "entries": [ ... ]}
+//! ```
+//!
+//! `checksum` is the FNV-1a hash (hex, 16 digits) of the serialized
+//! `entries` array — the same hash family
+//! [`crate::matrix::CooMatrix::fingerprint`] uses for plan-cache keys.
+//! [`CalibrationTable::from_json_str`] recomputes it and rejects files
+//! whose payload does not match (truncated copies, hand edits, bit
+//! rot), so a corrupt table can never silently steer kernel selection.
+//!
+//! ## Determinism
+//!
+//! Entries are kept sorted by `(matrix, batch)` and lookups keep the
+//! *first* entry at the minimum distance (strict `<` improvement), so
+//! nearest-neighbor ties break identically across runs, processes and
+//! serialize/parse round trips.
+
+use crate::matrix::MatrixStats;
+use crate::pim::PimConfig;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::{Context, Result};
+
+use super::spec::KernelSpec;
+
+/// Dimensionality of [`MatrixStats::feature_vector`].
+pub const FEATURE_DIM: usize = 6;
+
+/// Current on-disk format version.
+pub const TABLE_VERSION: u64 = 1;
+
+/// Per-feature normalization scales: roughly the dynamic range each
+/// component spans across the evaluation suite, so no single axis
+/// dominates the nearest-neighbor distance. Order matches
+/// [`MatrixStats::feature_vector`]: log2 rows, log2 cols, log2 nnz/row,
+/// CV, class indicator, log10 density.
+const FEATURE_SCALE: [f64; FEATURE_DIM] = [16.0, 16.0, 8.0, 1.0, 1.0, 6.0];
+
+/// Weight of the batch-width term in the lookup distance (log2 batch,
+/// scaled like the feature axes).
+const BATCH_SCALE: f64 = 4.0;
+
+/// One calibrated winner: the configuration that measured fastest for
+/// a (matrix, batch-width) point of the tuning suite.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationEntry {
+    /// Suite name of the matrix this entry was tuned on.
+    pub matrix: String,
+    /// The paper's class ("regular" / "scale-free") — informational.
+    pub class: String,
+    /// [`MatrixStats::feature_vector`] of the tuning matrix.
+    pub features: [f64; FEATURE_DIM],
+    /// Batch width the entry was tuned for (1 = single-vector SpMV).
+    pub batch: usize,
+    /// Winning kernel, by paper name (reconstructed via
+    /// [`KernelSpec::by_name`]).
+    pub kernel: String,
+    /// Stripe count the winner was tuned with (0 for 1D kernels, where
+    /// the axis does not exist). Sanitized against the serving system's
+    /// DPU count at reconstruction time.
+    pub stripes: usize,
+    /// Winning vector-block width.
+    pub block: usize,
+    /// Winning shard count for the sharded facade.
+    pub shards: usize,
+    /// The winner's measured wall-clock (seconds, min over samples).
+    pub wall_s: f64,
+    /// The heuristic baseline's wall-clock measured in the same sweep.
+    pub heuristic_wall_s: f64,
+}
+
+impl CalibrationEntry {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("matrix", s(&self.matrix)),
+            ("class", s(&self.class)),
+            ("features", arr(self.features.iter().map(|&f| num(f)).collect())),
+            ("batch", num(self.batch as f64)),
+            ("kernel", s(&self.kernel)),
+            ("stripes", num(self.stripes as f64)),
+            ("block", num(self.block as f64)),
+            ("shards", num(self.shards as f64)),
+            ("wall_s", num(self.wall_s)),
+            ("heuristic_wall_s", num(self.heuristic_wall_s)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<CalibrationEntry> {
+        let field = |k: &str| -> Result<f64> {
+            j.get(k).as_f64().ok_or_else(|| crate::format_err!("entry missing numeric {k:?}"))
+        };
+        let fs = j.get("features").as_arr().context("entry missing features array")?;
+        crate::ensure!(
+            fs.len() == FEATURE_DIM,
+            "entry has {} features, expected {FEATURE_DIM}",
+            fs.len()
+        );
+        let mut features = [0.0; FEATURE_DIM];
+        for (d, f) in features.iter_mut().zip(fs) {
+            *d = f.as_f64().context("non-numeric feature")?;
+        }
+        Ok(CalibrationEntry {
+            matrix: j.get("matrix").as_str().context("entry missing matrix")?.to_string(),
+            class: j.get("class").as_str().context("entry missing class")?.to_string(),
+            features,
+            batch: field("batch")? as usize,
+            kernel: j.get("kernel").as_str().context("entry missing kernel")?.to_string(),
+            stripes: field("stripes")? as usize,
+            block: field("block")? as usize,
+            shards: field("shards")? as usize,
+            wall_s: field("wall_s")?,
+            heuristic_wall_s: field("heuristic_wall_s")?,
+        })
+    }
+}
+
+/// A set of calibrated winners with nearest-neighbor lookup. See the
+/// module docs for format and determinism guarantees.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CalibrationTable {
+    entries: Vec<CalibrationEntry>,
+}
+
+impl CalibrationTable {
+    /// Build a table from entries (sorted internally for deterministic
+    /// tie-breaking; see module docs).
+    pub fn new(mut entries: Vec<CalibrationEntry>) -> CalibrationTable {
+        entries.sort_by(|a, b| (a.matrix.as_str(), a.batch).cmp(&(b.matrix.as_str(), b.batch)));
+        CalibrationTable { entries }
+    }
+
+    /// The calibrated entries, in the canonical sorted order.
+    pub fn entries(&self) -> &[CalibrationEntry] {
+        &self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Nearest calibrated entry for a matrix with statistics `stats`
+    /// served at `batch` vectors per request. `None` only for an empty
+    /// table. Ties keep the first entry in canonical order.
+    pub fn lookup(&self, stats: &MatrixStats, batch: usize) -> Option<&CalibrationEntry> {
+        let probe = stats.feature_vector();
+        let probe_b = (batch.max(1) as f64).log2();
+        let mut best: Option<(&CalibrationEntry, f64)> = None;
+        for e in &self.entries {
+            let mut d = feature_distance(&probe, &e.features);
+            let db = (probe_b - (e.batch.max(1) as f64).log2()) / BATCH_SCALE;
+            d += db * db;
+            if best.as_ref().map_or(true, |(_, bd)| d < *bd) {
+                best = Some((e, d));
+            }
+        }
+        best.map(|(e, _)| e)
+    }
+
+    /// Reconstruct the kernel the entry recorded, sanitized for `cfg`:
+    /// a 2D stripe count that does not divide the serving system's DPU
+    /// count is replaced by the largest divisor not above it (stripes of
+    /// 1 always divide), so the returned spec always plans. `None` when
+    /// the recorded kernel name is unknown (e.g. a table from a future
+    /// version) — callers fall back to the heuristic.
+    pub fn spec_for(&self, e: &CalibrationEntry, cfg: &PimConfig) -> Option<KernelSpec> {
+        let want = if e.stripes == 0 { 1 } else { e.stripes };
+        KernelSpec::by_name(&e.kernel, sanitize_stripes(cfg.n_dpus, want))
+    }
+
+    // --- serialization ----------------------------------------------
+
+    fn entries_json(&self) -> Json {
+        Json::Arr(self.entries.iter().map(|e| e.to_json()).collect())
+    }
+
+    /// Serialize to the on-disk JSON document (checksummed payload).
+    pub fn to_json_string(&self) -> String {
+        let entries = self.entries_json();
+        let checksum = format!("{:016x}", fnv1a(entries.to_string().as_bytes()));
+        obj(vec![
+            ("version", num(TABLE_VERSION as f64)),
+            ("checksum", s(&checksum)),
+            ("entries", entries),
+        ])
+        .to_string()
+            + "\n"
+    }
+
+    /// Parse and verify a table document: the version must be known and
+    /// the payload must match its recorded checksum.
+    pub fn from_json_str(text: &str) -> Result<CalibrationTable> {
+        let doc = Json::parse(text).map_err(|e| crate::format_err!("calibration table: {e}"))?;
+        let version = doc.get("version").as_usize().context("calibration table missing version")?;
+        crate::ensure!(
+            version as u64 == TABLE_VERSION,
+            "calibration table version {version} (this build reads {TABLE_VERSION})"
+        );
+        let recorded = doc.get("checksum").as_str().context("calibration table missing checksum")?;
+        let entries_j = doc.get("entries");
+        crate::ensure!(entries_j.as_arr().is_some(), "calibration table missing entries array");
+        let actual = format!("{:016x}", fnv1a(entries_j.to_string().as_bytes()));
+        crate::ensure!(
+            recorded == actual,
+            "calibration table checksum mismatch (recorded {recorded}, payload hashes to {actual}); refusing a corrupt table"
+        );
+        let entries = entries_j
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(CalibrationEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CalibrationTable::new(entries))
+    }
+
+    /// Write the table to `path`.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json_string())
+            .with_context(|| format!("write calibration table {}", path.display()))
+    }
+
+    /// Load and verify a table from `path`.
+    pub fn load(path: &std::path::Path) -> Result<CalibrationTable> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read calibration table {}", path.display()))?;
+        Self::from_json_str(&text)
+            .with_context(|| format!("parse calibration table {}", path.display()))
+    }
+}
+
+/// Normalized squared distance between two feature vectors.
+fn feature_distance(a: &[f64; FEATURE_DIM], b: &[f64; FEATURE_DIM]) -> f64 {
+    let mut d = 0.0;
+    for i in 0..FEATURE_DIM {
+        let t = (a[i] - b[i]) / FEATURE_SCALE[i];
+        d += t * t;
+    }
+    d
+}
+
+/// Largest divisor of `n_dpus` that is `<= want` (at least 1, which
+/// divides everything). This is how recorded stripe counts survive a
+/// move to a system with a different DPU count: the 2D partitioner
+/// requires stripes to divide the DPU count, so a calibrated spec is
+/// snapped to the nearest feasible stripe count at or below the
+/// recorded one instead of failing to plan.
+pub fn sanitize_stripes(n_dpus: usize, want: usize) -> usize {
+    let n = n_dpus.max(1);
+    let mut d = want.clamp(1, n);
+    while d > 1 && n % d != 0 {
+        d -= 1;
+    }
+    d
+}
+
+/// FNV-1a 64-bit (same family as the matrix fingerprint).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::generate;
+
+    fn entry(matrix: &str, batch: usize, kernel: &str, features: [f64; FEATURE_DIM]) -> CalibrationEntry {
+        CalibrationEntry {
+            matrix: matrix.to_string(),
+            class: "regular".to_string(),
+            features,
+            batch,
+            kernel: kernel.to_string(),
+            stripes: 4,
+            block: 8,
+            shards: 2,
+            wall_s: 1e-3,
+            heuristic_wall_s: 2e-3,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_entries_and_lookups() {
+        let m = generate::banded::<f64>(256, 8, 1);
+        let st = MatrixStats::of(&m);
+        let t = CalibrationTable::new(vec![
+            entry("a", 1, "CSR.nnz", st.feature_vector()),
+            entry("b", 8, "COO.nnz", [1.0; FEATURE_DIM]),
+        ]);
+        let text = t.to_json_string();
+        let back = CalibrationTable::from_json_str(&text).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(
+            t.lookup(&st, 1).unwrap().kernel,
+            back.lookup(&st, 1).unwrap().kernel
+        );
+        // Serialization is a fixed point: parse -> serialize is stable.
+        assert_eq!(back.to_json_string(), text);
+    }
+
+    #[test]
+    fn checksum_rejects_corruption() {
+        let t = CalibrationTable::new(vec![entry("a", 1, "CSR.nnz", [0.5; FEATURE_DIM])]);
+        let text = t.to_json_string();
+        // Flip payload content without touching the recorded checksum.
+        let bad = text.replace("CSR.nnz", "COO.nnz");
+        assert_ne!(bad, text);
+        let err = CalibrationTable::from_json_str(&bad).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // A wrong version is rejected too.
+        let vbad = text.replace("\"version\":1", "\"version\":99");
+        assert!(CalibrationTable::from_json_str(&vbad).is_err());
+        // And so is plain garbage.
+        assert!(CalibrationTable::from_json_str("{not json").is_err());
+    }
+
+    #[test]
+    fn lookup_ties_break_deterministically() {
+        // Two entries at the exact same feature point: the lookup must
+        // keep the first in canonical (matrix, batch) order, however
+        // the entries were supplied.
+        let f = [0.25; FEATURE_DIM];
+        let fwd = CalibrationTable::new(vec![entry("a", 4, "CSR.nnz", f), entry("b", 4, "COO.nnz", f)]);
+        let rev = CalibrationTable::new(vec![entry("b", 4, "COO.nnz", f), entry("a", 4, "CSR.nnz", f)]);
+        let m = generate::banded::<f64>(64, 4, 1);
+        let st = MatrixStats::of(&m);
+        assert_eq!(fwd.lookup(&st, 4).unwrap().matrix, "a");
+        assert_eq!(rev.lookup(&st, 4).unwrap().matrix, "a");
+        assert!(CalibrationTable::default().lookup(&st, 4).is_none());
+    }
+
+    #[test]
+    fn lookup_is_batch_aware() {
+        let m = generate::banded::<f64>(256, 8, 1);
+        let st = MatrixStats::of(&m);
+        let f = st.feature_vector();
+        let t = CalibrationTable::new(vec![
+            entry("a", 1, "CSR.nnz", f),
+            entry("a", 32, "COO.nnz", f),
+        ]);
+        assert_eq!(t.lookup(&st, 1).unwrap().kernel, "CSR.nnz");
+        assert_eq!(t.lookup(&st, 32).unwrap().kernel, "COO.nnz");
+    }
+
+    #[test]
+    fn sanitize_stripes_always_divides() {
+        for n in [1usize, 2, 6, 7, 13, 16, 64, 97, 100, 1021] {
+            for want in [0usize, 1, 2, 3, 8, 64, 10_000] {
+                let s = sanitize_stripes(n, want);
+                assert!(s >= 1 && n % s == 0, "sanitize({n}, {want}) = {s}");
+                assert!(s <= want.max(1));
+            }
+        }
+        assert_eq!(sanitize_stripes(64, 8), 8, "feasible counts pass through");
+        assert_eq!(sanitize_stripes(7, 8), 7);
+        assert_eq!(sanitize_stripes(7, 5), 1, "prime: only 1 divides below sqrt-ish asks");
+    }
+
+    #[test]
+    fn spec_for_always_plans() {
+        let e = entry("a", 1, "DCOO", [0.0; FEATURE_DIM]);
+        // 7 DPUs: recorded stripes 4 do not divide; snapped to 1.
+        let cfg = PimConfig { n_dpus: 7, ..Default::default() };
+        let t = CalibrationTable::new(vec![e.clone()]);
+        let spec = t.spec_for(&e, &cfg).unwrap();
+        let m = generate::uniform::<f64>(64, 64, 4, 3);
+        let exec = crate::coordinator::SpmvExecutor::new(crate::pim::PimSystem::new(cfg).unwrap());
+        assert!(exec.plan(&spec, &m).is_ok());
+        // Unknown kernel names report None instead of a bogus spec.
+        let mut bogus = e;
+        bogus.kernel = "NOPE".into();
+        assert!(t.spec_for(&bogus, &PimConfig::default()).is_none());
+    }
+}

@@ -48,6 +48,16 @@
 //! through a deterministic weighted-round-robin scheduler with
 //! per-tenant in-flight quotas ([`scheduler`]).
 //!
+//! The hand-tuned selection knobs (kernel heuristics, vector-block
+//! cutoffs, shard count) can be replaced wholesale by measurement: the
+//! offline search loop in [`tuner`] sweeps kernel × block × shard
+//! configurations over the generated suite and persists the winners in
+//! a checksummed [`calibration::CalibrationTable`]; at serve time
+//! [`adaptive::select_auto`], the service's block resolution, and
+//! [`ShardedServiceBuilder::shards_for_matrix`] consult it by
+//! nearest-neighbor over sparsity statistics, falling back to the
+//! heuristics when no table is loaded.
+//!
 //! The historical `SpmvExecutor::{execute, execute_batch,
 //! run_iterations, run_iterations_batch, run}` entry points remain as
 //! thin deprecated wrappers over the same one-shot execution path the
@@ -57,6 +67,7 @@
 
 pub mod adaptive;
 pub mod cache;
+pub mod calibration;
 pub mod engine;
 pub mod metrics;
 pub mod plan;
@@ -65,8 +76,10 @@ pub mod scheduler;
 pub mod service;
 pub mod shard;
 pub mod spec;
+pub mod tuner;
 
 pub use cache::PlanCache;
+pub use calibration::{CalibrationEntry, CalibrationTable};
 pub use engine::{Engine, ExecutionEngine, PooledEngine, SerialEngine, ThreadedEngine};
 pub use metrics::{
     BatchIterationsResult, BatchResult, Breakdown, IterationsResult, RunResult, RunStats,
@@ -81,6 +94,7 @@ pub use shard::{
     plan_shards, ScheduleLog, ShardedHandle, ShardedService, ShardedServiceBuilder, ShardedTicket,
 };
 pub use spec::{KernelSpec, Partitioning};
+pub use tuner::{tune, TuneOpts, TuneReport, TuneRow};
 
 use crate::kernels::{self, DpuKernelOutput};
 use crate::matrix::{CooMatrix, SpElem};

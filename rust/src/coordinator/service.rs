@@ -28,13 +28,14 @@
 //! wall-clock overlap, never answer drift.
 
 use super::cache::{PlanCache, DEFAULT_PLAN_CACHE_CAPACITY};
+use super::calibration::CalibrationTable;
 use super::plan::ExecutionPlan;
 use super::queue::{Job, RequestQueue, ResponseKind, DEFAULT_QUEUE_DEPTH};
 use super::spec::KernelSpec;
 use super::{
     BatchResult, Engine, IterationsResult, RunResult, ServiceStats, SpmvExecutor, VECTOR_BLOCK,
 };
-use crate::matrix::{CooMatrix, SpElem};
+use crate::matrix::{CooMatrix, MatrixStats, SpElem};
 use crate::pim::PimSystem;
 use crate::util::Result;
 use std::collections::HashMap;
@@ -232,23 +233,26 @@ impl<T> Response<T> {
 }
 
 /// Configuration for [`SpmvService`] (see [`SpmvService::builder`]).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServiceBuilder {
     engine: Engine,
     cache_capacity: usize,
     queue_depth: usize,
     block_policy: BlockPolicy,
+    calibration: Option<Arc<CalibrationTable>>,
 }
 
 impl ServiceBuilder {
     /// Defaults: serial engine, [`DEFAULT_PLAN_CACHE_CAPACITY`] plans,
-    /// [`DEFAULT_QUEUE_DEPTH`] queued requests, adaptive vector blocks.
+    /// [`DEFAULT_QUEUE_DEPTH`] queued requests, adaptive vector blocks,
+    /// no calibration table.
     pub fn new() -> ServiceBuilder {
         ServiceBuilder {
             engine: Engine::Serial,
             cache_capacity: DEFAULT_PLAN_CACHE_CAPACITY,
             queue_depth: DEFAULT_QUEUE_DEPTH,
             block_policy: BlockPolicy::Adaptive,
+            calibration: None,
         }
     }
 
@@ -285,6 +289,19 @@ impl ServiceBuilder {
         self
     }
 
+    /// Attach a measured [`CalibrationTable`]
+    /// (see [`super::tuner::tune`]): with [`BlockPolicy::Adaptive`],
+    /// batched requests take their vector-block width from the table's
+    /// nearest calibrated entry (matched by the loaded matrix's
+    /// statistics, batch-aware) instead of the hand-tuned cutoffs.
+    /// Block width never changes results, only wall-clock — so a
+    /// calibrated service answers bit-identically to an uncalibrated
+    /// one (locked by `tests/calibration.rs`).
+    pub fn calibration(mut self, table: Arc<CalibrationTable>) -> ServiceBuilder {
+        self.calibration = Some(table);
+        self
+    }
+
     /// Build a service over `sys` with its own plan cache.
     pub fn build<T: SpElem>(self, sys: PimSystem) -> Result<SpmvService<T>> {
         let cache = Arc::new(PlanCache::with_capacity(self.cache_capacity));
@@ -307,10 +324,12 @@ impl ServiceBuilder {
             exec,
             cache,
             plans: Mutex::new(HashMap::new()),
+            handle_stats: Mutex::new(HashMap::new()),
             next_handle: AtomicU64::new(1),
             next_ticket: AtomicU64::new(1),
             sync_served: AtomicU64::new(0),
             block_policy: self.block_policy,
+            calibration: self.calibration,
             queue,
         })
     }
@@ -331,12 +350,16 @@ pub struct SpmvService<T: SpElem> {
     exec: SpmvExecutor,
     cache: Arc<PlanCache<T>>,
     plans: Mutex<HashMap<u64, Arc<ExecutionPlan<T>>>>,
+    /// Per-handle sparsity statistics, populated at [`Self::load`] only
+    /// when a calibration table is attached (they feed its lookups).
+    handle_stats: Mutex<HashMap<u64, MatrixStats>>,
     next_handle: AtomicU64,
     next_ticket: AtomicU64,
     /// Requests served on the synchronous fast path ([`Self::spmv`] and
     /// friends), counted next to the queue's submitted/completed.
     sync_served: AtomicU64,
     block_policy: BlockPolicy,
+    calibration: Option<Arc<CalibrationTable>>,
     queue: RequestQueue<T>,
 }
 
@@ -358,6 +381,14 @@ impl<T: SpElem> SpmvService<T> {
             nrows: plan.nrows(),
             ncols: plan.ncols(),
         };
+        if self.calibration.is_some() {
+            // O(nnz) stats pass, once per load, only when a table will
+            // actually consult them.
+            self.handle_stats
+                .lock()
+                .expect("service registry poisoned")
+                .insert(handle.id, MatrixStats::of(m));
+        }
         self.plans.lock().expect("service registry poisoned").insert(handle.id, plan);
         Ok(handle)
     }
@@ -365,8 +396,11 @@ impl<T: SpElem> SpmvService<T> {
     /// Drop a handle's plan pin. Returns whether the handle was loaded.
     /// (The plan may stay resident in the cache for future loads.)
     pub fn unload(&self, handle: MatrixHandle) -> bool {
-        handle.svc == self.id
-            && self.plans.lock().expect("service registry poisoned").remove(&handle.id).is_some()
+        if handle.svc != self.id {
+            return false;
+        }
+        self.handle_stats.lock().expect("service registry poisoned").remove(&handle.id);
+        self.plans.lock().expect("service registry poisoned").remove(&handle.id).is_some()
     }
 
     /// Enqueue `req` against `handle`. Validates shapes up front (a bad
@@ -445,7 +479,7 @@ impl<T: SpElem> SpmvService<T> {
                 .publish_direct(ticket.id, Ok(Response::Batch(BatchResult { runs: Vec::new() })));
             return Ok(ticket);
         }
-        let block = self.block_policy.resolve(xs.len(), Self::mean_slice_nnz(&plan));
+        let block = self.resolve_block(&handle, &plan, xs.len());
         self.queue.submit(Job { ticket: ticket.id, plan, xs, iters, block, kind })?;
         Ok(ticket)
     }
@@ -488,7 +522,7 @@ impl<T: SpElem> SpmvService<T> {
     /// [`BlockPolicy`] as queued batches.
     pub fn spmv_batch(&self, handle: &MatrixHandle, xs: &[Vec<T>]) -> Result<BatchResult<T>> {
         let plan = self.plan_for(handle)?;
-        let block = self.block_policy.resolve(xs.len(), Self::mean_slice_nnz(&plan));
+        let block = self.resolve_block(handle, &plan, xs.len());
         self.sync_served.fetch_add(1, Ordering::Relaxed);
         self.exec.execute_batch_inner(&plan, xs, block)
     }
@@ -511,7 +545,23 @@ impl<T: SpElem> SpmvService<T> {
     /// never changes results).
     pub fn resolved_block(&self, handle: &MatrixHandle, batch: usize) -> Result<usize> {
         let plan = self.plan_for(handle)?;
-        Ok(self.block_policy.resolve(batch, Self::mean_slice_nnz(&plan)))
+        Ok(self.resolve_block(handle, &plan, batch))
+    }
+
+    /// Resolve the vector-block width for a `batch`-vector request
+    /// against `handle`: when a calibration table is attached and the
+    /// policy is [`BlockPolicy::Adaptive`], the width comes from the
+    /// table's nearest measured entry (clamped to the batch);
+    /// otherwise — `Fixed` policies, no table, or a handle loaded
+    /// before the stats pass existed — the policy's own rule applies.
+    fn resolve_block(&self, handle: &MatrixHandle, plan: &ExecutionPlan<T>, batch: usize) -> usize {
+        if let (Some(table), BlockPolicy::Adaptive) = (&self.calibration, self.block_policy) {
+            let stats = self.handle_stats.lock().expect("service registry poisoned");
+            if let Some(e) = stats.get(&handle.id).and_then(|s| table.lookup(s, batch)) {
+                return e.block.max(1).min(batch.max(1));
+            }
+        }
+        self.block_policy.resolve(batch, Self::mean_slice_nnz(plan))
     }
 
     /// Look up a handle's resident plan (shared by `submit`, the fast
@@ -746,6 +796,55 @@ mod tests {
         assert_eq!(BlockPolicy::Adaptive.resolve(100, 1 << 13), 2 * VECTOR_BLOCK);
         assert_eq!(BlockPolicy::Adaptive.resolve(100, 1 << 10), VECTOR_BLOCK);
         assert_eq!(BlockPolicy::Adaptive.resolve(100, 10), VECTOR_BLOCK / 2);
+    }
+
+    #[test]
+    fn calibrated_block_resolution_overrides_adaptive() {
+        use crate::coordinator::calibration::{CalibrationEntry, CalibrationTable};
+        use crate::matrix::MatrixStats;
+        let m = generate::uniform::<f64>(128, 128, 4, 9);
+        let st = MatrixStats::of(&m);
+        let table = Arc::new(CalibrationTable::new(vec![CalibrationEntry {
+            matrix: "probe".into(),
+            class: st.class().into(),
+            features: st.feature_vector(),
+            batch: 8,
+            kernel: "CSR.nnz".into(),
+            stripes: 0,
+            block: 5,
+            shards: 1,
+            wall_s: 1e-3,
+            heuristic_wall_s: 2e-3,
+        }]));
+        let svc: SpmvService<f64> = ServiceBuilder::new()
+            .calibration(Arc::clone(&table))
+            .build(PimSystem::with_dpus(8))
+            .unwrap();
+        let h = svc.load(&m, &KernelSpec::csr_nnz()).unwrap();
+        // Calibrated width, clamped to the batch.
+        assert_eq!(svc.resolved_block(&h, 8).unwrap(), 5);
+        assert_eq!(svc.resolved_block(&h, 3).unwrap(), 3, "clamped to batch");
+        // Fixed policies ignore the table.
+        let fixed: SpmvService<f64> = ServiceBuilder::new()
+            .calibration(table)
+            .vector_block(BlockPolicy::Fixed(2))
+            .build(PimSystem::with_dpus(8))
+            .unwrap();
+        let hf = fixed.load(&m, &KernelSpec::csr_nnz()).unwrap();
+        assert_eq!(fixed.resolved_block(&hf, 8).unwrap(), 2);
+        // An empty table falls back to the hand-tuned adaptive rule —
+        // identical to a service with no table at all.
+        let plain = service(8);
+        let hp = plain.load(&m, &KernelSpec::csr_nnz()).unwrap();
+        let empty: SpmvService<f64> = ServiceBuilder::new()
+            .calibration(Arc::new(CalibrationTable::default()))
+            .build(PimSystem::with_dpus(8))
+            .unwrap();
+        let he = empty.load(&m, &KernelSpec::csr_nnz()).unwrap();
+        assert_eq!(
+            empty.resolved_block(&he, 8).unwrap(),
+            plain.resolved_block(&hp, 8).unwrap()
+        );
     }
 
     #[test]

@@ -64,6 +64,7 @@
 //! exactly like the single-service accumulator.
 
 use super::cache::PlanCache;
+use super::calibration::CalibrationTable;
 use super::queue::{Completions, StageGuard, DEFAULT_QUEUE_DEPTH};
 use super::scheduler::{FairScheduler, TenantId, TenantSpec};
 use super::service::{BlockPolicy, MatrixHandle, Request, Response, ServiceBuilder, SpmvService, Ticket};
@@ -72,7 +73,7 @@ use super::{
     BatchResult, Breakdown, Engine, IterationsResult, RunResult, ShardedStats,
 };
 use crate::format_err;
-use crate::matrix::{CooMatrix, SpElem};
+use crate::matrix::{CooMatrix, MatrixStats, SpElem};
 use crate::partition::balance::split_weighted;
 use crate::pim::{Energy, PimSystem};
 use crate::util::Result;
@@ -250,6 +251,7 @@ pub struct ShardedServiceBuilder {
     cache_capacity: usize,
     queue_depth: usize,
     block_policy: BlockPolicy,
+    calibration: Option<Arc<CalibrationTable>>,
     tenants: Vec<TenantSpec>,
     record_schedule: bool,
     start_paused: bool,
@@ -257,7 +259,8 @@ pub struct ShardedServiceBuilder {
 
 impl ShardedServiceBuilder {
     /// Defaults: 2 shards, serial engine, default cache/queue/block
-    /// settings, one `"default"` tenant (weight 1, unlimited quota).
+    /// settings, no calibration table, one `"default"` tenant (weight 1,
+    /// unlimited quota).
     pub fn new() -> ShardedServiceBuilder {
         ShardedServiceBuilder {
             shards: 2,
@@ -265,6 +268,7 @@ impl ShardedServiceBuilder {
             cache_capacity: super::cache::DEFAULT_PLAN_CACHE_CAPACITY,
             queue_depth: DEFAULT_QUEUE_DEPTH,
             block_policy: BlockPolicy::Adaptive,
+            calibration: None,
             tenants: Vec::new(),
             record_schedule: false,
             start_paused: false,
@@ -305,6 +309,37 @@ impl ShardedServiceBuilder {
     /// Vector-block policy for batched requests (per backend).
     pub fn vector_block(mut self, policy: BlockPolicy) -> ShardedServiceBuilder {
         self.block_policy = policy;
+        self
+    }
+
+    /// Attach a measured [`CalibrationTable`] (see
+    /// [`super::tuner::tune`]): every shard backend consults it for
+    /// adaptive vector-block widths, and [`Self::shards_for_matrix`]
+    /// consults it for the shard count itself. Configuration only —
+    /// calibration never changes results (locked by
+    /// `tests/calibration.rs`).
+    pub fn calibration(mut self, table: Arc<CalibrationTable>) -> ShardedServiceBuilder {
+        self.calibration = Some(table);
+        self
+    }
+
+    /// Pick the shard count from the attached calibration table: the
+    /// nearest measured entry for `m` at `batch_hint` vectors per
+    /// request supplies its winning shard count. A no-op without a
+    /// table (or with an empty one) — the configured [`Self::shards`]
+    /// count stands, so callers can chain this unconditionally.
+    pub fn shards_for_matrix<T: SpElem>(
+        mut self,
+        m: &CooMatrix<T>,
+        batch_hint: usize,
+    ) -> ShardedServiceBuilder {
+        if let Some(e) = self
+            .calibration
+            .as_ref()
+            .and_then(|t| t.lookup(&MatrixStats::of(m), batch_hint))
+        {
+            self.shards = e.shards.max(1);
+        }
         self
     }
 
@@ -350,13 +385,14 @@ impl ShardedServiceBuilder {
     ) -> Result<ShardedService<T>> {
         let mut backends = Vec::with_capacity(self.shards);
         for _ in 0..self.shards {
-            backends.push(
-                ServiceBuilder::new()
-                    .engine(self.engine)
-                    .queue_depth(self.queue_depth)
-                    .vector_block(self.block_policy)
-                    .build_with_cache(per_shard_sys.clone(), Arc::clone(&cache))?,
-            );
+            let mut builder = ServiceBuilder::new()
+                .engine(self.engine)
+                .queue_depth(self.queue_depth)
+                .vector_block(self.block_policy);
+            if let Some(table) = &self.calibration {
+                builder = builder.calibration(Arc::clone(table));
+            }
+            backends.push(builder.build_with_cache(per_shard_sys.clone(), Arc::clone(&cache))?);
         }
         let tenants = if self.tenants.is_empty() {
             vec![TenantSpec::new("default", 1)]
@@ -1133,6 +1169,51 @@ mod tests {
         // Zero-row matrix: one degenerate shard.
         let empty = CooMatrix::<f64>::zeros(0, 5);
         assert_eq!(plan_shards(&empty, 3), vec![0..0]);
+    }
+
+    #[test]
+    fn shards_for_matrix_consults_the_calibration_table() {
+        use super::super::calibration::{CalibrationEntry, CalibrationTable};
+        let m = generate::uniform::<f64>(96, 96, 4, 5);
+        let st = MatrixStats::of(&m);
+        let table = Arc::new(CalibrationTable::new(vec![CalibrationEntry {
+            matrix: "probe".into(),
+            class: st.class().into(),
+            features: st.feature_vector(),
+            batch: 4,
+            kernel: "COO.nnz".into(),
+            stripes: 0,
+            block: 2,
+            shards: 3,
+            wall_s: 1e-3,
+            heuristic_wall_s: 2e-3,
+        }]));
+        // Calibrated: the table's winner sets S.
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .calibration(Arc::clone(&table))
+            .shards_for_matrix(&m, 4)
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        assert_eq!(svc.shard_count(), 3);
+        // And serves correctly at that count.
+        let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+        let x: Vec<f64> = (0..96).map(|i| (i % 7) as f64 - 3.0).collect();
+        assert_eq!(svc.spmv(&h, &x).unwrap().y, m.spmv(&x));
+        // Without a table the chain is a no-op: configured count stands.
+        let plain: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(5)
+            .shards_for_matrix(&m, 4)
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        assert_eq!(plain.shard_count(), 5);
+        // An empty table is a no-op too.
+        let empty: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(5)
+            .calibration(Arc::new(CalibrationTable::default()))
+            .shards_for_matrix(&m, 4)
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        assert_eq!(empty.shard_count(), 5);
     }
 
     #[test]

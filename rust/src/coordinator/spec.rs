@@ -291,6 +291,16 @@ impl KernelSpec {
     pub fn is_two_d(&self) -> bool {
         matches!(self.partitioning, Partitioning::TwoD(..))
     }
+
+    /// The 2D stripe count (`None` for 1D kernels, where the axis does
+    /// not exist). This is what the autotuner records in a calibration
+    /// entry so the winning spec can be reconstructed on load.
+    pub fn stripes(&self) -> Option<usize> {
+        match self.partitioning {
+            Partitioning::OneD(_) => None,
+            Partitioning::TwoD(_, n) => Some(n),
+        }
+    }
 }
 
 impl std::fmt::Display for KernelSpec {
@@ -334,5 +344,8 @@ mod tests {
     fn two_d_flags() {
         assert!(!KernelSpec::csr_row().is_two_d());
         assert!(KernelSpec::two_d(Format::Csr, 2).is_two_d());
+        assert_eq!(KernelSpec::csr_row().stripes(), None);
+        assert_eq!(KernelSpec::two_d(Format::Csr, 2).stripes(), Some(2));
+        assert_eq!(KernelSpec::two_d(Format::Coo, 4).with_stripes(16).stripes(), Some(16));
     }
 }

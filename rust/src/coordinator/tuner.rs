@@ -1,0 +1,405 @@
+//! `tuner` — the offline search loop behind the calibration table.
+//!
+//! SparseP's central finding is that no single (format, partitioning,
+//! balance) choice wins across sparsity patterns; the paper picks the
+//! winner empirically per matrix class. This module turns that empirical
+//! procedure into a subsystem: **enumerate → measure → keep the
+//! winners**, persisting the winners in a
+//! [`CalibrationTable`](super::calibration::CalibrationTable) that the
+//! serving stack consults at load time (see
+//! [`super::adaptive::select_auto`], the service's block resolution, and
+//! [`super::ShardedServiceBuilder::shards_for_matrix`]).
+//!
+//! The search is two-staged, because the two halves of the configuration
+//! space are observable through different instruments:
+//!
+//! 1. **Kernel ranking (modeled).** The per-run
+//!    [`Breakdown`](super::Breakdown) is a deterministic model of the
+//!    PIM system — perfect for ranking the 25
+//!    [`KernelSpec`](super::KernelSpec)s (it is exactly what they
+//!    differ in) and immune to host noise. [`super::adaptive::autotune`]
+//!    is the measurement primitive: all 25 kernels planned and executed
+//!    on the actual engine against the actual vector batch.
+//! 2. **Block × shard sweep (wall-clock).** Vector-block width and
+//!    shard count never change modeled time — they change *host*
+//!    pipeline behavior (streaming amortization, schedulable units,
+//!    scatter/gather overlap). So stage 2 measures host wall-clock:
+//!    the top-K kernels from stage 1 crossed with the block and shard
+//!    grids, each configuration served through a real
+//!    [`ShardedService`](super::ShardedService) (min over `samples`
+//!    timed repetitions, after an untimed warmup).
+//!
+//! **The heuristic is candidate zero.** The baseline configuration —
+//! [`select_heuristic`](super::adaptive::select_heuristic)'s spec with
+//! [`BlockPolicy::Adaptive`]'s width on one shard — is measured first,
+//! in the same harness as every other candidate, and the winner is the
+//! minimum over *all* candidates including it. Calibrated selection is
+//! therefore never slower than the heuristic on the tuned suite by
+//! construction; the per-row `speedup = heuristic_wall / winner_wall`
+//! is ≥ 1.0 identically, not statistically.
+
+use super::adaptive::{self, pick_stripes};
+use super::calibration::{CalibrationEntry, CalibrationTable};
+use super::service::BlockPolicy;
+use super::shard::ShardedServiceBuilder;
+use super::spec::KernelSpec;
+use super::{Engine, SpmvExecutor};
+use crate::matrix::{generate, CooMatrix, MatrixStats};
+use crate::pim::{PimConfig, PimSystem};
+use crate::util::Result;
+use std::time::Instant;
+
+/// Search-space definition for one [`tune`] run.
+#[derive(Clone, Debug)]
+pub struct TuneOpts {
+    /// DPUs per rank group (per shard backend).
+    pub n_dpus: usize,
+    /// Tasklets per DPU.
+    pub tasklets: usize,
+    /// Host engine driving per-DPU simulations during wall-clock
+    /// measurement (never affects results).
+    pub engine: Engine,
+    /// Batch widths to tune for (each gets its own table entries —
+    /// lookups are batch-aware).
+    pub batches: Vec<usize>,
+    /// Vector-block widths to sweep (stage 2).
+    pub block_grid: Vec<usize>,
+    /// Shard counts to sweep (stage 2).
+    pub shard_grid: Vec<usize>,
+    /// How many stage-1 kernels advance to the wall-clock sweep.
+    pub top_kernels: usize,
+    /// Timed repetitions per candidate; the minimum is kept.
+    pub samples: usize,
+    /// Matrix-generator seed (the suite is deterministic given this).
+    pub seed: u64,
+    /// `true` = mini suite (CI smoke), `false` = full paper-scale suite.
+    pub quick: bool,
+}
+
+impl TuneOpts {
+    /// CI-sized search: the mini suite, one batch width, coarse grids.
+    /// Runs in seconds; exists so `tune --quick` can gate every build.
+    pub fn quick() -> TuneOpts {
+        TuneOpts {
+            n_dpus: 64,
+            tasklets: 16,
+            engine: Engine::Serial,
+            batches: vec![8],
+            block_grid: vec![2, 8, 32],
+            shard_grid: vec![1, 2],
+            top_kernels: 2,
+            samples: 2,
+            seed: 3,
+            quick: true,
+        }
+    }
+
+    /// The full search: paper-scale suite, three batch regimes, fine
+    /// block/shard grids. Minutes, not seconds — run offline, ship the
+    /// table.
+    pub fn full() -> TuneOpts {
+        TuneOpts {
+            n_dpus: 256,
+            tasklets: 16,
+            engine: Engine::Serial,
+            batches: vec![1, 8, 32],
+            block_grid: vec![1, 2, 4, 8, 16, 32],
+            shard_grid: vec![1, 2, 4, 8],
+            top_kernels: 3,
+            samples: 3,
+            seed: 3,
+            quick: false,
+        }
+    }
+}
+
+/// One (matrix, batch) cell of the search: the measured heuristic
+/// baseline, the winning configuration, and their ratio.
+#[derive(Clone, Debug)]
+pub struct TuneRow {
+    pub matrix: String,
+    pub class: String,
+    pub batch: usize,
+    /// The heuristic baseline actually measured (candidate zero).
+    pub heuristic_kernel: String,
+    pub heuristic_block: usize,
+    pub heuristic_wall_s: f64,
+    /// The winner (minimum wall-clock over all candidates).
+    pub kernel: String,
+    pub block: usize,
+    pub shards: usize,
+    pub wall_s: f64,
+    /// `heuristic_wall_s / wall_s` — ≥ 1.0 by construction (the
+    /// heuristic is one of the candidates the minimum ranges over).
+    pub speedup: f64,
+}
+
+/// The result of one [`tune`] run: the per-cell rows (reporting) and
+/// the winners as a loadable [`CalibrationTable`] (serving).
+#[derive(Clone, Debug)]
+pub struct TuneReport {
+    pub rows: Vec<TuneRow>,
+    pub table: CalibrationTable,
+}
+
+impl TuneReport {
+    /// Smallest per-row speedup (the CI gate's statistic). 1.0 for an
+    /// empty report.
+    pub fn min_speedup(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 1.0;
+        }
+        self.rows.iter().map(|r| r.speedup).fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Deterministic input batch: `batch` vectors of small integer-exact
+/// values (keyed off `seed` so distinct runs are distinct but
+/// reproducible).
+fn make_vectors(ncols: usize, batch: usize, seed: u64) -> Vec<Vec<f64>> {
+    (0..batch.max(1))
+        .map(|v| {
+            (0..ncols)
+                .map(|i| ((i as u64 + 13 * v as u64 + seed) % 11) as f64 - 5.0)
+                .collect()
+        })
+        .collect()
+}
+
+/// Measure one candidate configuration: host wall-clock of a
+/// `batch`-vector request served through a [`ShardedServiceBuilder`]
+/// stack (`shards` backends, `engine`, fixed-or-adaptive block), min
+/// over `samples` repetitions after one untimed warmup. Returns
+/// `(wall_s, resolved_block)` — the block actually used, so adaptive
+/// baselines record a concrete width in the table.
+fn measure_wall(
+    sys: &PimSystem,
+    engine: Engine,
+    m: &CooMatrix<f64>,
+    spec: &KernelSpec,
+    policy: BlockPolicy,
+    shards: usize,
+    xs: &[Vec<f64>],
+    samples: usize,
+) -> Result<(f64, usize)> {
+    let svc = ShardedServiceBuilder::new()
+        .shards(shards)
+        .engine(engine)
+        .vector_block(policy)
+        .build::<f64>(sys.clone())?;
+    let h = svc.load(m, spec)?;
+    // Warmup: touches every plan and warms the engine's worker pool so
+    // the timed repetitions measure steady state.
+    svc.spmv_batch(&h, xs)?;
+    let mut best = f64::INFINITY;
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        svc.spmv_batch(&h, xs)?;
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    let block = match policy {
+        BlockPolicy::Fixed(b) => b.max(1).min(xs.len().max(1)),
+        // Ask a plain (unsharded) probe what Adaptive resolves to for
+        // this plan shape — the concrete width the table records.
+        BlockPolicy::Adaptive => {
+            let plan = SpmvExecutor::with_engine(sys.clone(), engine).plan(spec, m)?;
+            policy.resolve(xs.len(), plan.nnz() / plan.items().len().max(1))
+        }
+    };
+    Ok((best, block))
+}
+
+/// Run the search over the generated suite and return the winners.
+///
+/// Per (matrix, batch) cell: stage 1 ranks all 25 kernels by modeled
+/// time ([`adaptive::autotune`]); stage 2 sweeps the top-K kernels ×
+/// `block_grid` × `shard_grid` by host wall-clock, with the heuristic
+/// configuration measured first as candidate zero. Deterministic
+/// iteration order + strict-minimum keep-first makes the winner (and
+/// hence the table) reproducible for a given `TuneOpts` up to host
+/// timing noise.
+pub fn tune(opts: &TuneOpts) -> Result<TuneReport> {
+    crate::ensure!(!opts.batches.is_empty(), "tune needs at least one batch width");
+    crate::ensure!(!opts.block_grid.is_empty(), "tune needs a non-empty block grid");
+    crate::ensure!(!opts.shard_grid.is_empty(), "tune needs a non-empty shard grid");
+    let sys = PimSystem::new(PimConfig {
+        n_dpus: opts.n_dpus,
+        tasklets: opts.tasklets,
+        ..Default::default()
+    })?;
+    let exec = SpmvExecutor::new(sys.clone());
+    let stripes = pick_stripes(opts.n_dpus);
+    let suite = if opts.quick { generate::mini_suite() } else { generate::suite() };
+
+    let mut rows = Vec::new();
+    let mut entries = Vec::new();
+    for e in &suite {
+        let m = (e.gen)(opts.seed);
+        let stats = MatrixStats::of(&m);
+        for &batch in &opts.batches {
+            let xs = make_vectors(m.ncols(), batch, opts.seed);
+
+            // Stage 1: modeled ranking of all 25 kernels on this batch.
+            let (_, ranking) = adaptive::autotune(&exec, &m, &xs, stripes)?;
+            let finalists: Vec<KernelSpec> = ranking
+                .iter()
+                .take(opts.top_kernels.max(1))
+                .filter_map(|(name, _)| KernelSpec::by_name(name, stripes))
+                .collect();
+
+            // Candidate zero: the heuristic baseline, measured through
+            // the identical harness (1 shard, adaptive block).
+            let heur = adaptive::select_heuristic(&m, &sys.cfg);
+            let (heur_wall, heur_block) = measure_wall(
+                &sys,
+                opts.engine,
+                &m,
+                &heur.spec,
+                BlockPolicy::Adaptive,
+                1,
+                &xs,
+                opts.samples,
+            )?;
+            let mut best = (heur.spec.clone(), heur_block, 1usize, heur_wall);
+
+            // Stage 2: wall-clock sweep, strict-minimum, keep-first.
+            for spec in &finalists {
+                for &block in &opts.block_grid {
+                    // Widths beyond the batch clamp to it — dedup.
+                    if block > batch.max(1) && opts.block_grid.iter().any(|&b| b == batch.max(1)) {
+                        continue;
+                    }
+                    for &shards in &opts.shard_grid {
+                        let (wall, used_block) = measure_wall(
+                            &sys,
+                            opts.engine,
+                            &m,
+                            spec,
+                            BlockPolicy::Fixed(block),
+                            shards,
+                            &xs,
+                            opts.samples,
+                        )?;
+                        if wall < best.3 {
+                            best = (spec.clone(), used_block, shards, wall);
+                        }
+                    }
+                }
+            }
+
+            let (spec, block, shards, wall) = best;
+            rows.push(TuneRow {
+                matrix: e.name.to_string(),
+                class: e.class.to_string(),
+                batch,
+                heuristic_kernel: heur.spec.name.clone(),
+                heuristic_block: heur_block,
+                heuristic_wall_s: heur_wall,
+                kernel: spec.name.clone(),
+                block,
+                shards,
+                wall_s: wall,
+                speedup: heur_wall / wall.max(f64::MIN_POSITIVE),
+            });
+            entries.push(CalibrationEntry {
+                matrix: e.name.to_string(),
+                class: e.class.to_string(),
+                features: stats.feature_vector(),
+                batch,
+                kernel: spec.name.clone(),
+                stripes: spec.stripes().unwrap_or(0),
+                block,
+                shards,
+                wall_s: wall,
+                heuristic_wall_s: heur_wall,
+            });
+        }
+    }
+    Ok(TuneReport { rows, table: CalibrationTable::new(entries) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::PimSystem;
+
+    /// A deliberately tiny search so the test stays fast while still
+    /// exercising both stages end to end.
+    fn tiny_opts() -> TuneOpts {
+        TuneOpts {
+            n_dpus: 16,
+            tasklets: 8,
+            engine: Engine::Serial,
+            batches: vec![2],
+            block_grid: vec![1, 2],
+            shard_grid: vec![1, 2],
+            top_kernels: 1,
+            samples: 1,
+            seed: 7,
+            quick: true,
+        }
+    }
+
+    #[test]
+    fn tune_produces_winners_no_worse_than_the_heuristic() {
+        let report = tune(&tiny_opts()).unwrap();
+        assert_eq!(report.rows.len(), 4, "one row per mini-suite matrix x batch");
+        for row in &report.rows {
+            assert!(
+                row.speedup >= 1.0,
+                "{} @batch {}: calibrated {} must not lose to heuristic {} ({} vs {})",
+                row.matrix,
+                row.batch,
+                row.kernel,
+                row.heuristic_kernel,
+                row.wall_s,
+                row.heuristic_wall_s
+            );
+            assert!(row.wall_s > 0.0 && row.heuristic_wall_s > 0.0);
+            assert!(row.block >= 1 && row.shards >= 1);
+        }
+        assert!(report.min_speedup() >= 1.0);
+    }
+
+    #[test]
+    fn tune_table_round_trips_and_its_specs_plan() {
+        let opts = tiny_opts();
+        let report = tune(&opts).unwrap();
+        let table = &report.table;
+        assert_eq!(table.len(), report.rows.len());
+
+        // Round trip through the on-disk format.
+        let doc = table.to_json_string();
+        let back = CalibrationTable::from_json_str(&doc).unwrap();
+        assert_eq!(&back, table);
+
+        // Every recorded winner must reconstruct and plan on the matrix
+        // it was tuned for — and on a hostile DPU count.
+        let exec = SpmvExecutor::new(PimSystem::with_dpus(opts.n_dpus));
+        let exec_odd = SpmvExecutor::new(PimSystem::with_dpus(7));
+        for e in table.entries() {
+            let suite_entry = generate::mini_suite()
+                .into_iter()
+                .find(|s| s.name == e.matrix)
+                .expect("table entry names a suite matrix");
+            let m = (suite_entry.gen)(opts.seed);
+            for ex in [&exec, &exec_odd] {
+                let spec = table.spec_for(e, &ex.sys.cfg).expect("winner reconstructs");
+                ex.plan(&spec, &m).expect("calibrated winner must plan");
+            }
+        }
+    }
+
+    #[test]
+    fn tune_validates_its_grids() {
+        let mut o = tiny_opts();
+        o.batches.clear();
+        assert!(tune(&o).is_err());
+        let mut o = tiny_opts();
+        o.block_grid.clear();
+        assert!(tune(&o).is_err());
+        let mut o = tiny_opts();
+        o.shard_grid.clear();
+        assert!(tune(&o).is_err());
+    }
+}

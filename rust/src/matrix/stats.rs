@@ -47,6 +47,23 @@ impl MatrixStats {
         }
     }
 
+    /// Feature vector for calibration-table lookups
+    /// ([`crate::coordinator::calibration`]): the statistics the paper's
+    /// analysis keys on, log-scaled where the raw value spans orders of
+    /// magnitude so nearest-neighbor distances behave. Components:
+    /// log2 rows, log2 cols, log2 mean nnz/row, CV of nnz/row, the
+    /// class indicator (1 = scale-free), log10 density.
+    pub fn feature_vector(&self) -> [f64; 6] {
+        [
+            (self.nrows.max(1) as f64).log2(),
+            (self.ncols.max(1) as f64).log2(),
+            self.nnz_per_row_mean.max(1.0).log2(),
+            self.nnz_per_row_cv,
+            if self.nnz_per_row_cv > 0.5 { 1.0 } else { 0.0 },
+            self.density.max(1e-12).log10(),
+        ]
+    }
+
     /// The paper's two-way classification.
     pub fn class(&self) -> &'static str {
         if self.nnz_per_row_cv > 0.5 {
@@ -101,6 +118,20 @@ mod tests {
         let s = MatrixStats::of(&m);
         assert_eq!(s.class(), "scale-free");
         assert!(s.max_row_nnz > 4 * s.min_row_nnz.max(1));
+    }
+
+    #[test]
+    fn feature_vector_is_finite_and_class_sensitive() {
+        let reg = MatrixStats::of(&generate::banded::<f64>(512, 8, 1));
+        let sf = MatrixStats::of(&generate::scale_free::<f64>(2048, 2048, 8, 0.6, 2));
+        for f in reg.feature_vector().iter().chain(sf.feature_vector().iter()) {
+            assert!(f.is_finite());
+        }
+        assert_eq!(reg.feature_vector()[4], 0.0);
+        assert_eq!(sf.feature_vector()[4], 1.0);
+        // Empty-ish matrices don't produce -inf features.
+        let tiny = MatrixStats::of(&generate::diagonal::<f64>(1, 1));
+        assert!(tiny.feature_vector().iter().all(|f| f.is_finite()));
     }
 
     #[test]

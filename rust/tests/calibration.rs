@@ -1,0 +1,242 @@
+//! Calibration-table contract tests (hand-rolled; proptest/serde are
+//! not in the offline vendor set):
+//!
+//! * JSON round-trip preserves the table bit-for-bit — every lookup
+//!   answers identically before and after a save/load cycle;
+//! * the checksum rejects corrupted files instead of silently serving
+//!   wrong winners;
+//! * nearest-neighbor ties break deterministically (first entry in the
+//!   canonical `(matrix, batch)` order wins, every time);
+//! * PROPERTY: for random matrices and random synthetic tables over all
+//!   25 kernel names with arbitrary stripe counts, a calibrated
+//!   selection always yields a spec that `plan()`s on the target system
+//!   — calibration can never pick an unplannable configuration;
+//! * DIFFERENTIAL (the acceptance criterion): serving the same spec
+//!   through a calibrated service and an uncalibrated one produces
+//!   bit-identical outputs — calibration only ever changes wall-clock.
+
+use sparsep::coordinator::adaptive::{select_auto, select_calibrated};
+use sparsep::coordinator::calibration::sanitize_stripes;
+use sparsep::coordinator::{
+    BlockPolicy, CalibrationEntry, CalibrationTable, KernelSpec, ServiceBuilder, SpmvExecutor,
+};
+use sparsep::matrix::{generate, CooMatrix, MatrixStats};
+use sparsep::pim::{PimConfig, PimSystem};
+use sparsep::util::rng::Rng;
+
+/// A synthetic calibration entry measured "on" matrix `m`.
+fn entry_for(m: &CooMatrix<f64>, name: &str, kernel: &str, stripes: usize, batch: usize, block: usize, shards: usize) -> CalibrationEntry {
+    CalibrationEntry {
+        matrix: name.to_string(),
+        class: "synthetic".to_string(),
+        features: MatrixStats::of(m).feature_vector(),
+        batch,
+        kernel: kernel.to_string(),
+        stripes,
+        block,
+        shards,
+        wall_s: 1e-3,
+        heuristic_wall_s: 2e-3,
+    }
+}
+
+fn random_matrix(rng: &mut Rng) -> CooMatrix<f64> {
+    let nrows = 1 + rng.gen_range(300);
+    let ncols = 1 + rng.gen_range(300);
+    let nnz = rng.gen_range(3 * nrows.min(ncols) + 1);
+    let mut triples = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        triples.push((
+            rng.gen_range(nrows) as u32,
+            rng.gen_range(ncols) as u32,
+            (rng.gen_range(9) as f64) - 4.0,
+        ));
+    }
+    CooMatrix::from_triples(nrows, ncols, triples)
+}
+
+#[test]
+fn round_trip_preserves_every_lookup() {
+    let band = generate::banded::<f64>(600, 4, 11);
+    let sf = generate::scale_free::<f64>(500, 500, 6, 0.6, 11);
+    let unif = generate::uniform::<f64>(400, 500, 5, 11);
+    let table = CalibrationTable::new(vec![
+        entry_for(&band, "band", "CSR.nnz", 0, 1, 1, 1),
+        entry_for(&band, "band", "BCOO.nnz", 0, 16, 8, 2),
+        entry_for(&sf, "sf", "DCOO", 4, 8, 4, 2),
+        entry_for(&unif, "unif", "COO.nnz", 0, 8, 8, 4),
+    ]);
+
+    let text = table.to_json_string();
+    let back = CalibrationTable::from_json_str(&text).unwrap();
+    assert_eq!(table, back, "round trip must be exact");
+    // Serialization is a fixed point: serialize(parse(s)) == s.
+    assert_eq!(back.to_json_string(), text);
+
+    // Identical lookups on both sides for a spread of probes.
+    for m in [&band, &sf, &unif] {
+        let stats = MatrixStats::of(m);
+        for batch in [1usize, 4, 8, 16, 64] {
+            let a = table.lookup(&stats, batch).expect("non-empty table always answers");
+            let b = back.lookup(&stats, batch).unwrap();
+            assert_eq!(a, b, "lookup drifted across a save/load cycle");
+        }
+    }
+
+    // And through actual files.
+    let dir = std::env::temp_dir().join("sparsep_calibration_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("round_trip.json");
+    table.save(&path).unwrap();
+    let loaded = CalibrationTable::load(&path).unwrap();
+    assert_eq!(loaded, table);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn checksum_rejects_corruption() {
+    let band = generate::banded::<f64>(600, 4, 12);
+    let table = CalibrationTable::new(vec![entry_for(&band, "band", "CSR.nnz", 0, 8, 4, 2)]);
+    let text = table.to_json_string();
+
+    // Flip the kernel name inside the entries payload; the header
+    // checksum no longer matches.
+    let corrupt = text.replace("CSR.nnz", "COO.nnz");
+    assert_ne!(corrupt, text, "corruption must actually change the payload");
+    let err = CalibrationTable::from_json_str(&corrupt).unwrap_err();
+    assert!(
+        err.to_string().contains("checksum"),
+        "corruption must be reported as a checksum failure, got: {err}"
+    );
+
+    // Truncation and garbage also fail loudly.
+    assert!(CalibrationTable::from_json_str(&text[..text.len() / 2]).is_err());
+    assert!(CalibrationTable::from_json_str("not json at all").is_err());
+
+    // And a corrupted file on disk is a load error.
+    let dir = std::env::temp_dir().join("sparsep_calibration_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("corrupt.json");
+    std::fs::write(&path, &corrupt).unwrap();
+    assert!(CalibrationTable::load(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn nearest_neighbor_ties_break_deterministically() {
+    let band = generate::banded::<f64>(600, 4, 11);
+    // Two entries with IDENTICAL features and batch but different
+    // winners: the probe is equidistant from both. The table sorts by
+    // (matrix, batch), so "aaa" must win — on every call, and
+    // regardless of insertion order.
+    let forward = CalibrationTable::new(vec![
+        entry_for(&band, "aaa", "CSR.nnz", 0, 8, 2, 1),
+        entry_for(&band, "zzz", "COO.nnz", 0, 8, 4, 2),
+    ]);
+    let reversed = CalibrationTable::new(vec![
+        entry_for(&band, "zzz", "COO.nnz", 0, 8, 4, 2),
+        entry_for(&band, "aaa", "CSR.nnz", 0, 8, 2, 1),
+    ]);
+    let stats = MatrixStats::of(&band);
+    for _ in 0..10 {
+        assert_eq!(forward.lookup(&stats, 8).unwrap().matrix, "aaa");
+        assert_eq!(reversed.lookup(&stats, 8).unwrap().matrix, "aaa");
+    }
+}
+
+/// PROPERTY: whatever the table holds — any of the 25 kernel names,
+/// any stripe count, matched against any random matrix and system size
+/// — the calibrated spec plans. `sanitize_stripes` guarantees the 2D
+/// divisibility constraint on the *serving* system even when the table
+/// was tuned on a differently-sized one.
+#[test]
+fn prop_calibrated_specs_always_plan() {
+    let mut rng = Rng::new(0xCA11B8);
+    let names: Vec<String> =
+        KernelSpec::all25(8).iter().map(|k| k.name.to_string()).collect();
+    for trial in 0..60usize {
+        let m = random_matrix(&mut rng);
+        let kernel = &names[rng.gen_range(names.len())];
+        let stripes = rng.gen_range(17); // 0 (= 1D convention) ..= 16
+        let batch = 1 + rng.gen_range(16);
+        let entry = entry_for(&m, "probe", kernel, stripes, batch, 1 + rng.gen_range(8), 1);
+        let table = CalibrationTable::new(vec![entry]);
+        let n_dpus = 1 + rng.gen_range(96); // includes primes and odds
+        let cfg = PimConfig { n_dpus, ..Default::default() };
+        let tag = format!("trial {trial}: {kernel} stripes={stripes} dpus={n_dpus}");
+        let choice = select_calibrated(&m, &cfg, batch, &table)
+            .unwrap_or_else(|| panic!("{tag}: single-entry table must answer"));
+        if let Some(s) = choice.spec.stripes() {
+            assert_eq!(n_dpus % s, 0, "{tag}: stripes {s} must divide the DPU count");
+        }
+        let exec = SpmvExecutor::new(PimSystem::new(cfg).unwrap());
+        exec.plan(&choice.spec, &m)
+            .unwrap_or_else(|e| panic!("{tag}: calibrated spec failed to plan: {e}"));
+    }
+}
+
+#[test]
+fn sanitize_stripes_always_divides() {
+    for n in 1..=200usize {
+        for want in 0..=20usize {
+            let s = sanitize_stripes(n, want);
+            assert!(s >= 1 && n % s == 0, "sanitize_stripes({n}, {want}) = {s}");
+            assert!(s <= want.max(1), "never exceeds the request");
+        }
+    }
+}
+
+/// DIFFERENTIAL: attaching a calibration table never changes results.
+/// Same matrix, same spec, same requests — one service calibrated, one
+/// not — must produce bit-identical outputs even when the table steers
+/// the batch block width away from the adaptive policy's choice.
+#[test]
+fn calibrated_service_is_bit_identical_to_uncalibrated() {
+    let m = generate::scale_free::<f64>(400, 400, 6, 0.6, 13);
+    let spec = KernelSpec::csr_nnz();
+    let sys = PimSystem::new(PimConfig { n_dpus: 16, ..Default::default() }).unwrap();
+
+    // A table whose nearest entry prescribes an unusual block width so
+    // the calibrated path demonstrably diverges from Adaptive.
+    let table = CalibrationTable::new(vec![entry_for(&m, "sf", "CSR.nnz", 0, 8, 3, 1)]);
+
+    let plain = ServiceBuilder::new()
+        .vector_block(BlockPolicy::Adaptive)
+        .build::<f64>(sys.clone())
+        .unwrap();
+    let calibrated = ServiceBuilder::new()
+        .vector_block(BlockPolicy::Adaptive)
+        .calibration(std::sync::Arc::new(table.clone()))
+        .build::<f64>(sys.clone())
+        .unwrap();
+
+    let hp = plain.load(&m, &spec).unwrap();
+    let hc = calibrated.load(&m, &spec).unwrap();
+    let xs: Vec<Vec<f64>> = (0..8usize)
+        .map(|b| (0..m.ncols()).map(|i| ((i + 5 * b) % 9) as f64 - 4.0).collect())
+        .collect();
+
+    // The calibrated service really does resolve a different block...
+    assert_eq!(calibrated.resolved_block(&hc, 8).unwrap(), 3);
+
+    // ...and still answers bit-identically, for every request kind.
+    let want = m.spmv(&xs[0]);
+    assert_eq!(plain.spmv(&hp, &xs[0]).unwrap().y, want);
+    assert_eq!(calibrated.spmv(&hc, &xs[0]).unwrap().y, want);
+    let bp = plain.spmv_batch(&hp, &xs).unwrap();
+    let bc = calibrated.spmv_batch(&hc, &xs).unwrap();
+    for ((rp, rc), x) in bp.runs.iter().zip(&bc.runs).zip(&xs) {
+        assert_eq!(rp.y, rc.y, "calibration changed a batch result");
+        assert_eq!(rc.y, m.spmv(x), "host oracle");
+    }
+    let ip = plain.iterate(&hp, &xs[0], 4).unwrap();
+    let ic = calibrated.iterate(&hc, &xs[0], 4).unwrap();
+    assert_eq!(ip.last.y, ic.last.y, "calibration changed an iterate result");
+
+    // `select_auto` with this table picks the calibrated kernel; the
+    // reason string says so (observability contract for the CLI).
+    let cfg = PimConfig { n_dpus: 16, ..Default::default() };
+    let c = select_auto(&m, &cfg, 8, Some(&table));
+    assert_eq!(c.spec.name, "CSR.nnz");
+    assert!(c.reason.starts_with("calibrated"), "reason = {}", c.reason);
+}

@@ -15,6 +15,11 @@
 #   BENCH_hotpath.json      hot-path overhaul: persistent pooled engine
 #                           vs legacy spawn-per-wave threading vs serial
 #                           for spmv/batch/iterate at 1 and 4 shards
+#   BENCH_tune.json         autotuner search: calibrated-vs-heuristic
+#                           wall-clock per (matrix, batch) cell; also
+#                           writes calibration.json, the table
+#                           run/serve --calibration loads (fails if any
+#                           cell regresses beyond the tolerance)
 #
 # Knobs:
 #   BENCH_ROWS   (default 100000)   CG matrix dimension
@@ -88,3 +93,18 @@ cargo run --release -- bench-hotpath \
   --out BENCH_hotpath.json
 
 cat BENCH_hotpath.json
+
+# --quick = mini-suite smoke search (seconds). BENCH_TUNE_FULL=1 runs
+# the paper-scale search instead (minutes).
+if [[ "${BENCH_TUNE_FULL:-0}" == "1" ]]; then
+  cargo run --release -- tune \
+    --dpus "${BENCH_DPUS:-256}" \
+    --out calibration.json \
+    --report BENCH_tune.json
+else
+  cargo run --release -- tune --quick \
+    --out calibration.json \
+    --report BENCH_tune.json
+fi
+
+cat BENCH_tune.json

@@ -31,6 +31,17 @@ echo "== hot path: engine equivalence (pooled + spawning) + zero-copy payloads =
 cargo test -q --test engine_equivalence
 cargo test -q --test zero_copy
 
+# Autotuner gates (PR 6): the calibration suite locks table round-trip
+# + checksum rejection + deterministic ties + calibrated-specs-always-
+# plan + the calibrated/uncalibrated differential; the quick tune run
+# is the perf gate — the heuristic configuration is measured as
+# candidate zero of the same sweep, so calibrated winners are >= 1.0x
+# by construction and the harness fails (in-process --tolerance check)
+# if any (matrix, batch) cell regresses.
+echo "== autotuner: calibration suite + quick search gate =="
+cargo test -q --test calibration
+cargo run --release -- tune --quick --out calibration.json --report BENCH_tune.json
+
 echo "== lint: cargo clippy --all-targets (warnings are errors) =="
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings

@@ -10,6 +10,7 @@
 pub mod batch;
 pub mod figures;
 pub mod hotpath;
+pub mod resilience;
 pub mod service;
 pub mod shard;
 pub mod tune;

@@ -1,0 +1,274 @@
+//! Resilience-tier benchmark (`sparsep bench-resilience`).
+//!
+//! Two measurements over the sharded multi-tenant facade:
+//!
+//! 1. **Recovery overhead** — the same SpMV request stream served twice
+//!    at the same shard count: once fault-free, once under a seeded
+//!    [`FaultPlan`] that kills one shard backend at every request's
+//!    dispatch. Every kill forces a supervised respawn from the shared
+//!    plan cache plus a re-scatter of the affected sub-request, so the
+//!    wall-clock ratio is the end-to-end price of recovery. Outputs are
+//!    verified against the host oracle in both modes — recovery never
+//!    changes answers (locked by `tests/chaos_equivalence.rs`).
+//!
+//! 2. **Shed behaviour** — a paused facade with a per-tenant admission
+//!    cap is offered more requests than it will admit. Sheds are typed
+//!    ([`Response::Overloaded`]) and deterministic
+//!    (`offered - max_queue` of them), and the survivors' latency
+//!    distribution comes straight from the per-tenant histograms
+//!    (p50/p99/p999).
+//!
+//! The chaos seed is printed up front so any failure reproduces with
+//! the same fault schedule. The JSON summary lands in
+//! `BENCH_resilience.json` next to the other `BENCH_*.json` files.
+
+use crate::coordinator::{
+    Engine, Fault, FaultPlan, KernelSpec, Request, Response, ShardedService,
+    ShardedServiceBuilder,
+};
+use crate::matrix::generate;
+use crate::pim::{PimConfig, PimSystem};
+use crate::util::json::{num, obj, s};
+use crate::util::{Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Knobs for [`run`] (CLI flags of `sparsep bench-resilience`).
+#[derive(Clone, Debug)]
+pub struct ResilienceBenchOpts {
+    /// Matrix dimension (square, scale-free class).
+    pub rows: usize,
+    /// Average degree (non-zeros per row).
+    pub deg: usize,
+    /// SpMV requests per measured stream.
+    pub requests: usize,
+    /// Shard count for both facades.
+    pub shards: usize,
+    /// Simulated DPUs per shard.
+    pub dpus_per_shard: usize,
+    /// Threaded-engine worker count (0 = all cores).
+    pub threads: usize,
+    /// Kernel name (see `sparsep kernels`).
+    pub kernel: String,
+    /// Timed samples per mode (min is reported).
+    pub samples: usize,
+    /// Per-tenant admission cap for the shed measurement.
+    pub max_queue: usize,
+    /// Requests offered to the capped facade (> max_queue sheds).
+    pub offered: usize,
+    /// Fault-plan seed (printed; failures reproduce from it).
+    pub seed: u64,
+    /// Output JSON path.
+    pub out: String,
+}
+
+impl Default for ResilienceBenchOpts {
+    fn default() -> ResilienceBenchOpts {
+        ResilienceBenchOpts {
+            rows: 20_000,
+            deg: 8,
+            requests: 8,
+            shards: 4,
+            dpus_per_shard: 16,
+            threads: 0,
+            kernel: "CSR.nnz".to_string(),
+            samples: 2,
+            max_queue: 4,
+            offered: 16,
+            seed: 0xC4A0_5EED,
+            out: "BENCH_resilience.json".to_string(),
+        }
+    }
+}
+
+/// Kill plan for the chaos stream: every queued request's dispatch
+/// kills one shard, round-robin over the shard count, so each measured
+/// request pays a respawn + re-scatter. `tickets` must cover every
+/// sample's submissions (facade ticket ids keep counting across
+/// samples) — otherwise later samples would run fault-free and the
+/// min-of-samples would measure the clean path.
+fn kill_every_request(seed: u64, tickets: usize, shards: usize) -> FaultPlan {
+    let mut plan = FaultPlan::new(seed);
+    for t in 1..=tickets as u64 {
+        plan = plan.on_dispatch(t, Fault::KillShard { shard: (t as usize - 1) % shards });
+    }
+    plan
+}
+
+/// Run the benchmark and write the JSON summary to `opts.out`.
+pub fn run(opts: &ResilienceBenchOpts) -> Result<()> {
+    crate::ensure!(opts.requests >= 1, "bench-resilience needs --requests >= 1");
+    crate::ensure!(opts.shards >= 1, "bench-resilience needs --shards >= 1");
+    crate::ensure!(opts.samples >= 1, "bench-resilience needs --samples >= 1");
+    crate::ensure!(opts.max_queue >= 1, "bench-resilience needs --max-queue >= 1");
+    crate::ensure!(
+        opts.offered > opts.max_queue,
+        "bench-resilience needs --offered > --max-queue (otherwise nothing sheds)"
+    );
+    let spec = KernelSpec::by_name(&opts.kernel, 8)
+        .with_context(|| format!("unknown kernel {} (see `sparsep kernels`)", opts.kernel))?;
+    let m = generate::scale_free::<f64>(opts.rows, opts.rows, opts.deg, 0.6, 7);
+    let xs: Vec<Vec<f64>> = (0..opts.requests.max(opts.offered))
+        .map(|r| (0..m.ncols()).map(|i| ((i + 5 * r) % 9) as f64 - 4.0).collect())
+        .collect();
+    let sys = PimSystem::new(PimConfig { n_dpus: opts.dpus_per_shard, ..Default::default() })?;
+    let engine = Engine::threaded(opts.threads);
+    println!(
+        "bench-resilience: {} x{} requests on {}x{} ({} nnz), {} shards x {} DPUs, chaos seed {:#x}",
+        spec.name,
+        opts.requests,
+        m.nrows(),
+        m.ncols(),
+        m.nnz(),
+        opts.shards,
+        opts.dpus_per_shard,
+        opts.seed
+    );
+
+    // -- Measurement 1: recovery overhead ---------------------------------
+    let stream = |plan: Option<FaultPlan>| -> Result<(f64, u64)> {
+        let mut b = ShardedServiceBuilder::new().shards(opts.shards).engine(engine);
+        if let Some(p) = plan {
+            b = b.fault_injector(Arc::new(p));
+        }
+        let svc: ShardedService<f64> = b.build(sys.clone())?;
+        let handle = svc.load(&m, &spec)?;
+        // Verify once, out of timing: recovery must not change answers.
+        let r = svc.spmv(&handle, &xs[0])?;
+        crate::ensure!(r.y == m.spmv(&xs[0]), "sharded output diverged from host oracle");
+        let mut best = f64::INFINITY;
+        for _ in 0..opts.samples {
+            let t0 = Instant::now();
+            let tickets: Vec<_> = xs[..opts.requests]
+                .iter()
+                .map(|x| svc.submit(handle, Request::spmv(x.clone())))
+                .collect::<Result<_>>()?;
+            for t in tickets {
+                let run = svc.wait(t)?.into_spmv()?;
+                std::hint::black_box(&run.y);
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        Ok((best, svc.stats().respawns))
+    };
+    let (clean_wall, clean_respawns) = stream(None)?;
+    crate::ensure!(clean_respawns == 0, "fault-free stream must not respawn");
+    let plan = kill_every_request(opts.seed, opts.requests * opts.samples, opts.shards);
+    let (chaos_wall, chaos_respawns) = stream(Some(plan))?;
+    crate::ensure!(
+        chaos_respawns >= (opts.requests * opts.samples) as u64,
+        "kill plan must force a respawn per measured request"
+    );
+    let overhead = chaos_wall / clean_wall.max(1e-12);
+    println!(
+        "  recovery: fault-free {clean_wall:>8.3}s | kill-per-request {chaos_wall:>8.3}s \
+         ({overhead:>5.2}x, {chaos_respawns} respawns)"
+    );
+
+    // -- Measurement 2: typed shedding under overload ---------------------
+    let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+        .shards(opts.shards)
+        .engine(engine)
+        .max_queue(opts.max_queue)
+        .start_paused(true)
+        .build(sys.clone())?;
+    let handle = svc.load(&m, &spec)?;
+    let tickets: Vec<_> = xs[..opts.offered]
+        .iter()
+        .map(|x| svc.submit(handle, Request::spmv(x.clone())))
+        .collect::<Result<_>>()?;
+    svc.resume();
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    for t in tickets {
+        match svc.wait(t)? {
+            Response::Overloaded => shed += 1,
+            resp => {
+                std::hint::black_box(&resp.into_spmv()?.y);
+                served += 1;
+            }
+        }
+    }
+    let want_shed = opts.offered - opts.max_queue;
+    crate::ensure!(
+        (served, shed) == (opts.max_queue, want_shed),
+        "expected {} served / {} shed, got {} / {}",
+        opts.max_queue,
+        want_shed,
+        served,
+        shed
+    );
+    let st = svc.stats();
+    let lat = &st.tenants[0].latency;
+    crate::ensure!(lat.count == served as u64, "latency histogram must count served only");
+    let shed_rate = shed as f64 / opts.offered as f64;
+    println!(
+        "  shedding: offered {} cap {} -> {} served / {} shed ({:.0}% shed rate), \
+         latency p50 {}us p99 {}us p999 {}us",
+        opts.offered, opts.max_queue, served, shed, 100.0 * shed_rate,
+        lat.p50_us, lat.p99_us, lat.p999_us
+    );
+
+    let j = obj(vec![
+        ("bench", s("resilience_tier")),
+        ("kernel", s(&spec.name)),
+        ("rows", num(m.nrows() as f64)),
+        ("nnz", num(m.nnz() as f64)),
+        ("shards", num(opts.shards as f64)),
+        ("dpus_per_shard", num(opts.dpus_per_shard as f64)),
+        ("host_threads", num(opts.threads as f64)),
+        ("requests", num(opts.requests as f64)),
+        ("samples", num(opts.samples as f64)),
+        ("chaos_seed", num(opts.seed as f64)),
+        ("clean_wall_s", num(clean_wall)),
+        ("chaos_wall_s", num(chaos_wall)),
+        ("recovery_overhead_x", num(overhead)),
+        ("respawns", num(chaos_respawns as f64)),
+        ("offered", num(opts.offered as f64)),
+        ("max_queue", num(opts.max_queue as f64)),
+        ("served", num(served as f64)),
+        ("shed", num(shed as f64)),
+        ("shed_rate", num(shed_rate)),
+        ("served_p50_us", num(lat.p50_us as f64)),
+        ("served_p99_us", num(lat.p99_us as f64)),
+        ("served_p999_us", num(lat.p999_us as f64)),
+    ]);
+    std::fs::write(&opts.out, j.to_string() + "\n")
+        .with_context(|| format!("write {}", opts.out))?;
+    println!("wrote {}", opts.out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_resilience_smoke_writes_json() {
+        let dir = std::env::temp_dir().join("sparsep_bench_resilience_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_resilience_test.json");
+        let opts = ResilienceBenchOpts {
+            rows: 300,
+            deg: 4,
+            requests: 3,
+            shards: 2,
+            dpus_per_shard: 4,
+            threads: 2,
+            samples: 1,
+            max_queue: 2,
+            offered: 5,
+            out: out.to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+        let txt = std::fs::read_to_string(&out).unwrap();
+        let j = crate::util::json::Json::parse(&txt).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("resilience_tier"));
+        assert!(j.get("respawns").as_f64().unwrap() >= 1.0);
+        assert_eq!(j.get("served").as_f64(), Some(2.0));
+        assert_eq!(j.get("shed").as_f64(), Some(3.0));
+        assert!(j.get("recovery_overhead_x").as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&out).ok();
+    }
+}

@@ -7,8 +7,9 @@ use crate::baselines::cpu;
 use crate::bench_harness::figures::{self, Scale};
 use crate::coordinator::queue::DEFAULT_QUEUE_DEPTH;
 use crate::coordinator::{
-    BlockPolicy, CalibrationTable, Engine, KernelSpec, Request, ServiceBuilder, ShardedService,
-    ShardedServiceBuilder, ShardedTicket, SpmvExecutor, SpmvService, TenantId, TenantSpec, Ticket,
+    BlockPolicy, CalibrationTable, Engine, FaultPlan, KernelSpec, Request, ServiceBuilder,
+    ShardedService, ShardedServiceBuilder, ShardedTicket, SpmvExecutor, SpmvService, TenantId,
+    TenantSpec, Ticket,
 };
 use crate::matrix::{generate, CooMatrix, CsrMatrix, DType, SpElem};
 use crate::pim::{PimConfig, PimSystem};
@@ -95,6 +96,16 @@ COMMANDS:
                                   weighted-round-robin multi-tenant
                                   scheduling (weight w, in-flight quota q);
                                   auto: shard count from the calibration
+      [--chaos] [--chaos-seed X]  seeded fault injection (kill/delay/drop/
+                                  stall); killed shard backends respawn
+                                  from the shared plan cache, answers stay
+                                  bit-identical, seed printed for replay
+      [--deadline-ms D]           earliest-deadline-first dispatch within
+                                  each tenant (WRR across tenants intact)
+      [--max-queue Q]             per-tenant admission cap; overflow sheds
+                                  as typed Overloaded, never silently
+      [--timeout-ms T]            bound waits: a wedged shard surfaces as
+                                  a typed ShardTimeout naming the shard
   tune [--quick]                  search-based autotuner: sweep kernel x
       [--dpus N] [--tasklets T]   block x shard per (matrix, batch) cell,
       [--threads T] [--samples S] write the winners as a calibration
@@ -128,6 +139,15 @@ COMMANDS:
       [--kernel K] [--threads T] [--samples S] [--out F]
                                   serial + threaded wall-clock;
                                   writes BENCH_shard.json (--dpus = per shard)
+  bench-resilience                resilience tier: recovery overhead
+      [--rows N] [--deg K] [--requests R] [--shards S] [--dpus N]
+      [--kernel K] [--threads T] [--samples S] [--max-queue Q]
+      [--offered L] [--seed X] [--out F]
+                                  (kill-per-request vs fault-free wall,
+                                  verified bit-identical) + typed shed
+                                  rate and served-latency percentiles
+                                  under overload; writes
+                                  BENCH_resilience.json
   bench-hotpath                   host hot-path overhaul bench: pooled
       [--rows N] [--deg K] [--iters I] [--batch B] [--dpus N]
       [--kernel K] [--threads T] [--samples S] [--out F]
@@ -381,20 +401,24 @@ fn serve_demo_requests(
 
 /// Claim the demo's tickets out of submission order (evens forward,
 /// odds backward), verify every response against its oracle, and
-/// return the per-kind counts (`[spmv, batch, iterate]`) plus the
-/// modeled simulated seconds served. Generic over the ticket type so
-/// the plain and sharded paths share one verifier.
+/// return the per-kind counts (`[spmv, batch, iterate]`), the number of
+/// typed [`Response::Overloaded`] sheds (admission control under
+/// `--max-queue`; never a silent drop), and the modeled simulated
+/// seconds served. Generic over the ticket type so the plain and
+/// sharded paths share one verifier.
 fn serve_claim_and_verify<TK: Copy>(
     pending: &[(TK, ServeExpect)],
     wait: impl Fn(TK) -> Result<crate::coordinator::Response<f64>>,
-) -> Result<([usize; 3], f64)> {
+) -> Result<([usize; 3], usize, f64)> {
     let mut order: Vec<usize> = (0..pending.len()).step_by(2).collect();
     order.extend((0..pending.len()).skip(1).step_by(2).rev());
     let mut counts = [0usize; 3];
+    let mut shed = 0usize;
     let mut modeled_s = 0.0f64;
     for idx in order {
         let (ticket, expect) = &pending[idx];
         match (wait(*ticket)?, expect) {
+            (crate::coordinator::Response::Overloaded, _) => shed += 1,
             (crate::coordinator::Response::Spmv(r), ServeExpect::Spmv(want)) => {
                 crate::ensure!(&r.y == want, "spmv request {idx} mismatch");
                 counts[0] += 1;
@@ -416,7 +440,7 @@ fn serve_claim_and_verify<TK: Copy>(
             _ => bail!("response kind does not match request kind"),
         }
     }
-    Ok((counts, modeled_s))
+    Ok((counts, shed, modeled_s))
 }
 
 /// `sparsep serve --shards S [--tenants spec]`: the multi-tenant
@@ -455,6 +479,36 @@ fn serve_sharded(args: &Args) -> Result<()> {
         Some("auto") => builder.shards_for_matrix(&m, batch),
         _ => builder.shards(args.get_usize("shards", 2)?),
     };
+    // Resilience knobs: per-tenant admission cap (sheds surface as
+    // typed Overloaded responses), bounded waits (wedged shards surface
+    // as typed ShardTimeout errors), and a seeded chaos plan.
+    if args.get("max-queue").is_some() {
+        let cap = args.get_usize("max-queue", 0)?;
+        crate::ensure!(cap >= 1, "--max-queue must be >= 1");
+        builder = builder.max_queue(cap);
+    }
+    if args.get("timeout-ms").is_some() {
+        let ms = args.get_usize("timeout-ms", 0)?;
+        crate::ensure!(ms >= 1, "--timeout-ms must be >= 1");
+        builder = builder.wait_timeout(std::time::Duration::from_millis(ms as u64));
+    }
+    let chaos = args.get_bool("chaos") || args.get("chaos-seed").is_some();
+    if chaos {
+        let seed = args.get_usize("chaos-seed", 0xC4A05)? as u64;
+        // Aim kills within the requested shard count; out-of-range
+        // targets under `--shards auto` are harmless no-ops. Random
+        // plans draw from kill / dropped-completion / delay — every
+        // answer still verifies bit-identically below.
+        let chaos_shards = args.get_usize("shards", 2).unwrap_or(2).max(1);
+        let plan = FaultPlan::random(seed, requests as u64, chaos_shards, 0.4);
+        println!(
+            "chaos      : {} fault(s) over {} ticket(s) from seed {seed:#x} \
+             (reproduce with --chaos-seed {seed})",
+            plan.len(),
+            requests
+        );
+        builder = builder.fault_injector(std::sync::Arc::new(plan));
+    }
     let svc: ShardedService<f64> = builder.build(PimSystem::new(cfg.clone())?)?;
     let stripes = args.get_usize("stripes", 8)?;
     let spec = match args.get("kernel") {
@@ -506,20 +560,49 @@ fn serve_sharded(args: &Args) -> Result<()> {
         svc.shard_count()
     );
 
+    // `--deadline-ms D` tags every request with a deadline D from its
+    // submit instant: the dispatcher serves earliest-deadline-first
+    // within each tenant (cross-tenant weighted round-robin is
+    // untouched). Deadlines order dispatch; they never cancel work.
+    let deadline = match args.get("deadline-ms") {
+        Some(_) => {
+            let ms = args.get_usize("deadline-ms", 0)?;
+            crate::ensure!(ms >= 1, "--deadline-ms must be >= 1");
+            Some(std::time::Duration::from_millis(ms as u64))
+        }
+        None => None,
+    };
     let plan_reqs = serve_demo_requests(&m, requests, batch, iters);
     let t0 = std::time::Instant::now();
     let mut pending: Vec<(ShardedTicket, ServeExpect)> = Vec::with_capacity(requests);
     for (r, (req, expect)) in plan_reqs.into_iter().enumerate() {
         let (tenant, handle) = handles[r % handles.len()];
-        pending.push((svc.submit_for(tenant, handle, req)?, expect));
+        let ticket = match deadline {
+            Some(d) => svc.submit_with_deadline(tenant, handle, req, d)?,
+            None => svc.submit_for(tenant, handle, req)?,
+        };
+        pending.push((ticket, expect));
     }
-    let (counts, modeled_s) = serve_claim_and_verify(&pending, |t| svc.wait(t))?;
+    let (counts, shed, modeled_s) = serve_claim_and_verify(&pending, |t| svc.wait(t))?;
     let wall = t0.elapsed().as_secs_f64();
     let st = svc.stats();
     println!(
-        "requests   : {} ({} spmv / {} batch x{} / {} iterate x{}), all verified OK",
-        requests, counts[0], counts[1], batch, counts[2], iters
+        "requests   : {} ({} spmv / {} batch x{} / {} iterate x{}), all verified OK{}",
+        requests - shed,
+        counts[0],
+        counts[1],
+        batch,
+        counts[2],
+        iters,
+        if shed > 0 {
+            format!("; {shed} shed as typed Overloaded (admission cap)")
+        } else {
+            String::new()
+        }
     );
+    if st.respawns > 0 {
+        println!("respawns   : {} shard backend(s) respawned from the shared plan cache", st.respawns);
+    }
     println!(
         "wall       : {:.3} ms total ({:.1} req/s)",
         wall * 1e3,
@@ -537,8 +620,17 @@ fn serve_sharded(args: &Args) -> Result<()> {
             t.max_in_flight.to_string()
         };
         println!(
-            "  tenant {:<10} weight {:>2} quota {:>4}: {} submitted, {} completed",
-            t.name, t.weight, quota, t.enqueued, t.completed
+            "  tenant {:<10} weight {:>2} quota {:>4}: {} submitted, {} completed, {} shed, \
+             latency p50/p99/p999 {}/{}/{} us",
+            t.name,
+            t.weight,
+            quota,
+            t.enqueued,
+            t.completed,
+            t.shed,
+            t.latency.p50_us,
+            t.latency.p99_us,
+            t.latency.p999_us
         );
     }
     // Tenant unload demo: evict the first tenant's handles and reclaim
@@ -613,7 +705,8 @@ fn serve(args: &Args) -> Result<()> {
         pending.push((svc.submit(handle, req)?, expect));
     }
     let submitted_in = t0.elapsed().as_secs_f64();
-    let (counts, modeled_s) = serve_claim_and_verify(&pending, |t| svc.wait(t))?;
+    // The plain (unsharded) service has no admission cap: shed is 0.
+    let (counts, _shed, modeled_s) = serve_claim_and_verify(&pending, |t| svc.wait(t))?;
     let wall = t0.elapsed().as_secs_f64();
     let st = svc.stats();
     println!(
@@ -913,6 +1006,24 @@ pub fn run(args: Args) -> Result<()> {
                 out: args.get("out").unwrap_or(d.out.as_str()).to_string(),
             };
             crate::bench_harness::shard::run(&opts)?;
+        }
+        "bench-resilience" => {
+            let d = crate::bench_harness::resilience::ResilienceBenchOpts::default();
+            let opts = crate::bench_harness::resilience::ResilienceBenchOpts {
+                rows: args.get_usize("rows", d.rows)?,
+                deg: args.get_usize("deg", d.deg)?,
+                requests: args.get_usize("requests", d.requests)?,
+                shards: args.get_usize("shards", d.shards)?,
+                dpus_per_shard: args.get_usize("dpus", d.dpus_per_shard)?,
+                threads: args.get_usize("threads", cpu::hw_threads())?,
+                kernel: args.get("kernel").unwrap_or(d.kernel.as_str()).to_string(),
+                samples: args.get_usize("samples", d.samples)?,
+                max_queue: args.get_usize("max-queue", d.max_queue)?,
+                offered: args.get_usize("offered", d.offered)?,
+                seed: args.get_usize("seed", d.seed as usize)? as u64,
+                out: args.get("out").unwrap_or(d.out.as_str()).to_string(),
+            };
+            crate::bench_harness::resilience::run(&opts)?;
         }
         "artifacts" => {
             let r = crate::runtime::ArtifactRunner::load_default()?;

@@ -1,0 +1,287 @@
+//! Deterministic fault injection for the sharded serving tier.
+//!
+//! Chaos testing a *simulation* has one enormous advantage over chaos
+//! testing production: faults can be exactly reproducible. This module
+//! keeps that property end to end:
+//!
+//! * [`FaultInjector`] is the hook trait [`super::ShardedService`]
+//!   consults from its dispatcher (before scattering a request across
+//!   the shard backends) and its gather thread (before reassembling the
+//!   sub-responses). Production builds configure no injector — the hook
+//!   is an `Option<Arc<dyn FaultInjector>>` checked once per request,
+//!   so the fault machinery costs nothing when unused.
+//! * [`Fault`] is the taxonomy: kill a backend shard service, delay a
+//!   stage, drop a sub-response, or wedge a shard outright. Every fault
+//!   is *recoverable by construction* — supervision respawns killed
+//!   backends from the shared plan cache and re-scatters the affected
+//!   sub-requests, so gathered outputs stay bit-identical to the
+//!   fault-free oracle (locked by `tests/chaos_equivalence.rs`).
+//! * [`FaultPlan`] is the standard injector: an explicit per-ticket
+//!   fault schedule, buildable by hand ([`FaultPlan::on_dispatch`] /
+//!   [`FaultPlan::on_gather`]) or generated from a seed
+//!   ([`FaultPlan::random`]) via the crate's deterministic PRNG. The
+//!   same seed always yields the same schedule — a failing chaos run
+//!   prints its seed and is reproduced with one command.
+//!
+//! The slow-tenant *flood* scenario needs no injector: floods are
+//! driven from the submit side (a tenant outrunning its queue-depth
+//! cap) and answered by admission control with
+//! [`super::Response::Overloaded`]; the chaos suite covers it next to
+//! the injected faults.
+
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::fmt;
+
+/// One injected fault. `shard` indexes the facade's backend services
+/// (`0..shard_count`); faults naming a shard the current request does
+/// not touch are ignored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Kill backend `shard`: the service object is torn down and its
+    /// in-flight sub-responses are lost. Supervision respawns the
+    /// backend from the shared plan cache (re-planning equal slices is
+    /// a cache *hit*, never a rebuild) and the affected sub-requests
+    /// are re-scattered.
+    KillShard { shard: usize },
+    /// Sleep `millis` before the stage proceeds (a delayed stage
+    /// completion). Changes timing only — results are bit-identical.
+    Delay { millis: u64 },
+    /// Drop shard `shard`'s completed sub-response on the floor
+    /// (gather-side only): the gather thread discards it and
+    /// re-scatters that shard's sub-request to the (live) backend.
+    DropCompletion { shard: usize },
+    /// Wedge shard `shard`: its sub-response never arrives. With a
+    /// configured `wait_timeout` the gather thread fails the request
+    /// with a typed `ShardTimeout` naming the shard; without one the
+    /// stall is ignored (the pre-timeout facade would hang forever —
+    /// exactly the hazard `wait_timeout` exists to fix).
+    StallShard { shard: usize },
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Fault::KillShard { shard } => write!(f, "kill-shard({shard})"),
+            Fault::Delay { millis } => write!(f, "delay({millis}ms)"),
+            Fault::DropCompletion { shard } => write!(f, "drop-completion({shard})"),
+            Fault::StallShard { shard } => write!(f, "stall-shard({shard})"),
+        }
+    }
+}
+
+/// Hook consulted by the sharded facade's dispatcher and gather
+/// threads. Implementations must be cheap and deterministic: the hooks
+/// are called once per scheduled request per stage, on the stage's own
+/// thread.
+pub trait FaultInjector: Send + Sync {
+    /// Faults to inject when the dispatcher picks up facade ticket
+    /// `ticket`, *before* it scatters sub-requests. `KillShard` here
+    /// exercises the detect-dead-backend path: the scatter finds the
+    /// slot dead and supervision respawns it first.
+    fn at_dispatch(&self, ticket: u64) -> Vec<Fault> {
+        let _ = ticket;
+        Vec::new()
+    }
+
+    /// Faults to inject when the gather thread starts reassembling
+    /// facade ticket `ticket`. `KillShard` here loses the shard's
+    /// in-flight sub-response (respawn + re-scatter recovers it);
+    /// `DropCompletion` discards the sub-response after completion.
+    fn at_gather(&self, ticket: u64) -> Vec<Fault> {
+        let _ = ticket;
+        Vec::new()
+    }
+}
+
+/// An explicit, reproducible fault schedule keyed by facade ticket id.
+///
+/// Ticket ids are assigned by the facade in submission order starting
+/// at 1, so a schedule written against "the 3rd submitted request" is
+/// stable run to run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    seed: u64,
+    dispatch: HashMap<u64, Vec<Fault>>,
+    gather: HashMap<u64, Vec<Fault>>,
+}
+
+/// The named chaos scenarios the differential suite sweeps. Each maps
+/// to a one-fault [`FaultPlan`] shape; [`FaultPlan::random`] mixes them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// A backend is dead when the dispatcher tries to scatter to it.
+    KillAtDispatch,
+    /// A backend dies after the scatter, losing its in-flight
+    /// sub-response.
+    KillAtGather,
+    /// A completed sub-response is dropped and must be re-executed.
+    DroppedCompletion,
+    /// A stage completes late (sleep); results must not change.
+    DelayedStage,
+}
+
+impl Scenario {
+    /// All injectable scenarios, in a fixed order (the chaos suite
+    /// iterates this).
+    pub const ALL: [Scenario; 4] = [
+        Scenario::KillAtDispatch,
+        Scenario::KillAtGather,
+        Scenario::DroppedCompletion,
+        Scenario::DelayedStage,
+    ];
+
+    /// Short name for logs and failure messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::KillAtDispatch => "kill-at-dispatch",
+            Scenario::KillAtGather => "kill-at-gather",
+            Scenario::DroppedCompletion => "dropped-completion",
+            Scenario::DelayedStage => "delayed-stage",
+        }
+    }
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing). `seed` is carried for
+    /// reporting; use the builder methods to add faults.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// The seed this plan reports (and, for [`FaultPlan::random`], was
+    /// generated from).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Add a dispatch-stage fault for facade ticket `ticket`.
+    pub fn on_dispatch(mut self, ticket: u64, fault: Fault) -> FaultPlan {
+        self.dispatch.entry(ticket).or_default().push(fault);
+        self
+    }
+
+    /// Add a gather-stage fault for facade ticket `ticket`.
+    pub fn on_gather(mut self, ticket: u64, fault: Fault) -> FaultPlan {
+        self.gather.entry(ticket).or_default().push(fault);
+        self
+    }
+
+    /// A one-fault plan for the named scenario: ticket `ticket`, shard
+    /// `shard` (delays hit the dispatch stage of the same ticket).
+    pub fn scenario(seed: u64, s: Scenario, ticket: u64, shard: usize) -> FaultPlan {
+        let plan = FaultPlan::new(seed);
+        match s {
+            Scenario::KillAtDispatch => plan.on_dispatch(ticket, Fault::KillShard { shard }),
+            Scenario::KillAtGather => plan.on_gather(ticket, Fault::KillShard { shard }),
+            Scenario::DroppedCompletion => {
+                plan.on_gather(ticket, Fault::DropCompletion { shard })
+            }
+            Scenario::DelayedStage => plan.on_dispatch(ticket, Fault::Delay { millis: 5 }),
+        }
+    }
+
+    /// A seed-reproducible random schedule over tickets `1..=tickets`:
+    /// each ticket independently draws one fault with probability
+    /// `p_fault` — scenario and target shard uniform from
+    /// [`Scenario::ALL`] and `0..shards`. Identical `(seed, tickets,
+    /// shards, p_fault)` always builds an identical plan (locked by a
+    /// unit test), so any failing chaos run reproduces from its printed
+    /// seed alone.
+    pub fn random(seed: u64, tickets: u64, shards: usize, p_fault: f64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xC0A5_7E57_F417_7B1A);
+        let mut plan = FaultPlan::new(seed);
+        for ticket in 1..=tickets {
+            if !rng.gen_bool(p_fault) {
+                continue;
+            }
+            let shard = rng.gen_range(shards.max(1));
+            plan = match Scenario::ALL[rng.gen_range(Scenario::ALL.len())] {
+                Scenario::KillAtDispatch => {
+                    plan.on_dispatch(ticket, Fault::KillShard { shard })
+                }
+                Scenario::KillAtGather => plan.on_gather(ticket, Fault::KillShard { shard }),
+                Scenario::DroppedCompletion => {
+                    plan.on_gather(ticket, Fault::DropCompletion { shard })
+                }
+                Scenario::DelayedStage => {
+                    plan.on_dispatch(ticket, Fault::Delay { millis: 1 + rng.gen_range(3) as u64 })
+                }
+            };
+        }
+        plan
+    }
+
+    /// Total faults scheduled across both stages.
+    pub fn len(&self) -> usize {
+        self.dispatch.values().map(Vec::len).sum::<usize>()
+            + self.gather.values().map(Vec::len).sum::<usize>()
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.dispatch.is_empty() && self.gather.is_empty()
+    }
+}
+
+impl FaultInjector for FaultPlan {
+    fn at_dispatch(&self, ticket: u64) -> Vec<Fault> {
+        self.dispatch.get(&ticket).cloned().unwrap_or_default()
+    }
+
+    fn at_gather(&self, ticket: u64) -> Vec<Fault> {
+        self.gather.get(&ticket).cloned().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_builder_routes_faults_to_the_right_stage() {
+        let plan = FaultPlan::new(42)
+            .on_dispatch(3, Fault::KillShard { shard: 1 })
+            .on_dispatch(3, Fault::Delay { millis: 2 })
+            .on_gather(5, Fault::DropCompletion { shard: 0 });
+        assert_eq!(plan.seed(), 42);
+        assert_eq!(plan.len(), 3);
+        assert!(!plan.is_empty());
+        assert_eq!(
+            plan.at_dispatch(3),
+            vec![Fault::KillShard { shard: 1 }, Fault::Delay { millis: 2 }]
+        );
+        assert_eq!(plan.at_gather(3), vec![]);
+        assert_eq!(plan.at_gather(5), vec![Fault::DropCompletion { shard: 0 }]);
+        assert_eq!(plan.at_dispatch(99), vec![]);
+        assert!(FaultPlan::new(0).is_empty());
+    }
+
+    #[test]
+    fn random_plans_are_seed_reproducible() {
+        // The one-command-reproduction guarantee: identical inputs must
+        // build identical schedules, different seeds almost surely not.
+        let a = FaultPlan::random(0xDEAD_BEEF, 64, 5, 0.5);
+        let b = FaultPlan::random(0xDEAD_BEEF, 64, 5, 0.5);
+        assert_eq!(a, b, "same seed must reproduce the exact schedule");
+        assert!(!a.is_empty(), "p=0.5 over 64 tickets injects something");
+        let c = FaultPlan::random(0xDEAD_BEEF + 1, 64, 5, 0.5);
+        assert_ne!(a, c, "a different seed must draw a different schedule");
+        // p=1 faults every ticket exactly once; p=0 faults none.
+        assert_eq!(FaultPlan::random(7, 10, 3, 1.0).len(), 10);
+        assert!(FaultPlan::random(7, 10, 3, 0.0).is_empty());
+    }
+
+    #[test]
+    fn scenario_constructors_cover_the_taxonomy() {
+        for s in Scenario::ALL {
+            let plan = FaultPlan::scenario(9, s, 2, 1);
+            assert_eq!(plan.len(), 1, "{}", s.name());
+            let injected = [plan.at_dispatch(2), plan.at_gather(2)].concat();
+            assert_eq!(injected.len(), 1);
+            // Display names are stable (failure messages key on them).
+            assert!(!format!("{}", injected[0]).is_empty());
+        }
+        assert_eq!(Scenario::KillAtGather.name(), "kill-at-gather");
+    }
+}

@@ -240,6 +240,103 @@ impl ServiceStats {
     }
 }
 
+/// Log-bucketed latency histogram: bucket `i` counts samples in
+/// `[2^(i-1), 2^i)` microseconds (bucket 0 holds sub-microsecond
+/// samples). Recording is O(1) with no allocation; quantiles report a
+/// bucket's inclusive upper bound, so snapshots are exact integers —
+/// deterministic and `Eq`-comparable, never interpolated floats.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    buckets: [u64; Self::BUCKETS],
+    count: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: [0; Self::BUCKETS], count: 0, max_us: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    /// Bucket count: 48 power-of-two buckets span sub-microsecond to
+    /// ~4.5 years, so no realistic latency saturates the top bucket.
+    pub const BUCKETS: usize = 48;
+
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        // Number of significant bits: 0us -> bucket 0, 1us -> 1,
+        // [2,4)us -> 2, ... clamped into the top bucket.
+        ((u64::BITS - us.leading_zeros()) as usize).min(Self::BUCKETS - 1)
+    }
+
+    /// Record one latency sample, in microseconds.
+    pub fn record(&mut self, us: u64) {
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The quantile `q` in `[0, 1]` as the inclusive upper bound (in
+    /// microseconds) of the bucket holding the rank-`ceil(q*count)`
+    /// sample; 0 when empty. The true sample is never larger.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                // Bucket i covers [2^(i-1), 2^i): upper bound 2^i - 1,
+                // except bucket 0 which only holds 0us samples. The
+                // max bucket is additionally capped by the observed max.
+                let hi = if i == 0 { 0 } else { (1u64 << i.min(63)) - 1 };
+                return hi.min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Freeze p50/p99/p999 (plus count and max) into an `Eq`-comparable
+    /// integer snapshot.
+    pub fn snapshot(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            count: self.count,
+            p50_us: self.quantile_us(0.50),
+            p99_us: self.quantile_us(0.99),
+            p999_us: self.quantile_us(0.999),
+            max_us: self.max_us,
+        }
+    }
+}
+
+/// Integer-microsecond percentile snapshot of a [`LatencyHistogram`]
+/// (all fields are exact integers so the containing [`TenantStats`]
+/// stays `Eq`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LatencySnapshot {
+    /// Latency samples recorded (completed scheduled requests).
+    pub count: u64,
+    /// Median: inclusive upper bound of the p50 bucket, microseconds.
+    pub p50_us: u64,
+    /// 99th percentile bucket upper bound, microseconds.
+    pub p99_us: u64,
+    /// 99.9th percentile bucket upper bound, microseconds.
+    pub p999_us: u64,
+    /// Largest single sample, microseconds.
+    pub max_us: u64,
+}
+
 /// Per-tenant scheduling counters reported by
 /// [`super::ShardedService::stats`] (one per registered tenant, in
 /// registration order).
@@ -258,10 +355,16 @@ pub struct TenantStats {
     pub dispatched: u64,
     /// Requests completed (response published).
     pub completed: u64,
+    /// Requests shed by admission control with [`super::Response::Overloaded`]
+    /// (never queued; not counted in `enqueued`).
+    pub shed: u64,
     /// Requests currently dispatched but not completed.
     pub in_flight: usize,
     /// Requests still queued behind the scheduler.
     pub queued: usize,
+    /// Submit-to-publish latency percentiles over this tenant's
+    /// completed scheduled requests (log-bucketed; integer us).
+    pub latency: LatencySnapshot,
 }
 
 /// Facade-level counters reported by [`super::ShardedService::stats`]:
@@ -287,6 +390,9 @@ pub struct ShardedStats {
     pub plan_builds: u64,
     /// Plans resident in the shared cache.
     pub resident_plans: usize,
+    /// Backend shard services respawned by supervision after a kill
+    /// (each respawn re-plans from the shared cache: hits, not builds).
+    pub respawns: u64,
     /// Per-tenant scheduling counters, in registration order.
     pub tenants: Vec<TenantStats>,
 }
@@ -412,6 +518,47 @@ mod tests {
         let s = ServiceStats { submitted: 5, completed: 3, ..Default::default() };
         assert_eq!(s.in_flight(), 2);
         assert_eq!(ServiceStats::default().in_flight(), 0);
+    }
+
+    #[test]
+    fn latency_histogram_buckets_and_quantiles() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.snapshot(), LatencySnapshot::default(), "empty = all zeros");
+        // 100 samples of 100us: every quantile lands in the [64,128)
+        // bucket, reported as its inclusive upper bound capped by max.
+        for _ in 0..100 {
+            h.record(100);
+        }
+        assert_eq!(h.count(), 100);
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.max_us, 100);
+        assert_eq!(s.p50_us, 100, "bucket bound 127 capped by observed max");
+        assert_eq!(s.p99_us, 100);
+        assert_eq!(s.p999_us, 100);
+        // One slow outlier dominates the tail but not the median.
+        h.record(1_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.p50_us, 100);
+        assert_eq!(s.max_us, 1_000_000);
+        assert!(s.p999_us >= 1_000_000 || s.p999_us == 100);
+    }
+
+    #[test]
+    fn latency_histogram_is_deterministic_and_eq() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for us in [0u64, 1, 2, 3, 900, 7_777, u64::MAX / 2] {
+            a.record(us);
+            b.record(us);
+        }
+        assert_eq!(a, b);
+        assert_eq!(a.snapshot(), b.snapshot());
+        // Zero-microsecond samples stay in bucket 0.
+        let mut z = LatencyHistogram::new();
+        z.record(0);
+        assert_eq!(z.snapshot().p50_us, 0);
+        assert_eq!(z.snapshot().max_us, 0);
     }
 
     #[test]

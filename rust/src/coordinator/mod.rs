@@ -46,7 +46,12 @@
 //! partial responses (bit-identical outputs to the unsharded path —
 //! `tests/shard_equivalence.rs`), and admits multi-tenant traffic
 //! through a deterministic weighted-round-robin scheduler with
-//! per-tenant in-flight quotas ([`scheduler`]).
+//! per-tenant in-flight quotas ([`scheduler`]). The sharded tier is
+//! chaos-tested: seed-reproducible fault injection ([`fault`]) drives
+//! shard supervision (kill -> respawn from the shared plan cache ->
+//! re-scatter), while deadline-aware dispatch, per-tenant latency
+//! histograms and typed load shedding ([`Response::Overloaded`]) give
+//! it production semantics (locked by `tests/chaos_equivalence.rs`).
 //!
 //! The hand-tuned selection knobs (kernel heuristics, vector-block
 //! cutoffs, shard count) can be replaced wholesale by measurement: the
@@ -69,6 +74,7 @@ pub mod adaptive;
 pub mod cache;
 pub mod calibration;
 pub mod engine;
+pub mod fault;
 pub mod metrics;
 pub mod plan;
 pub mod queue;
@@ -81,9 +87,10 @@ pub mod tuner;
 pub use cache::PlanCache;
 pub use calibration::{CalibrationEntry, CalibrationTable};
 pub use engine::{Engine, ExecutionEngine, PooledEngine, SerialEngine, ThreadedEngine};
+pub use fault::{Fault, FaultInjector, FaultPlan, Scenario};
 pub use metrics::{
-    BatchIterationsResult, BatchResult, Breakdown, IterationsResult, RunResult, RunStats,
-    ServiceStats, ShardedStats, TenantStats,
+    BatchIterationsResult, BatchResult, Breakdown, IterationsResult, LatencyHistogram,
+    LatencySnapshot, RunResult, RunStats, ServiceStats, ShardedStats, TenantStats,
 };
 pub use plan::{DpuSlice, ExecutionPlan, WorkItem};
 pub use scheduler::{FairScheduler, TenantId, TenantSpec};

@@ -254,6 +254,43 @@ impl<T: SpElem> Completions<T> {
         }
     }
 
+    /// Bounded [`Completions::wait`]: blocks at most `timeout`, then
+    /// returns a typed [`crate::util::ErrorKind::ShardTimeout`] error
+    /// instead of hanging on a wedged publisher. The ticket stays
+    /// registered — a later `wait`/`try_wait` can still claim the
+    /// response if it eventually arrives.
+    pub(crate) fn wait_timeout(
+        &self,
+        ticket: u64,
+        timeout: std::time::Duration,
+    ) -> Result<Response<T>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut state = self.state.lock().expect("completion store poisoned");
+        loop {
+            if let Some(resp) = state.done.remove(&ticket) {
+                state.pending.remove(&ticket);
+                return resp;
+            }
+            if !state.pending.contains(&ticket) {
+                return Err(format_err!(
+                    "unknown ticket {ticket} (never submitted here, or already waited on)"
+                ));
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(crate::util::Error::shard_timeout(
+                    None,
+                    format!("ticket {ticket} not completed within {timeout:?}"),
+                ));
+            }
+            let (st, _) = self
+                .ready
+                .wait_timeout(state, deadline - now)
+                .expect("completion store poisoned");
+            state = st;
+        }
+    }
+
     /// Tickets registered since construction.
     pub(crate) fn submitted(&self) -> u64 {
         self.submitted.load(Ordering::Relaxed)
@@ -401,6 +438,15 @@ impl<T: SpElem> RequestQueue<T> {
     /// Block until `ticket`'s response is published, then claim it.
     pub(crate) fn wait(&self, ticket: u64) -> Result<Response<T>> {
         self.completions.wait(ticket)
+    }
+
+    /// Bounded wait (see [`Completions::wait_timeout`]).
+    pub(crate) fn wait_timeout(
+        &self,
+        ticket: u64,
+        timeout: std::time::Duration,
+    ) -> Result<Response<T>> {
+        self.completions.wait_timeout(ticket, timeout)
     }
 
     /// Non-blocking poll for `ticket`'s response (see
@@ -684,6 +730,54 @@ fn stage_merge<T: SpElem>(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn wait_timeout_returns_typed_error_instead_of_hanging() {
+        // The infinite-block hazard fix: a registered ticket whose
+        // publisher is wedged must come back as a typed ShardTimeout
+        // within the bound, not hang the waiter forever.
+        let comp: Completions<f64> = Completions::new();
+        comp.register(7);
+        let t0 = std::time::Instant::now();
+        let e = comp.wait_timeout(7, std::time::Duration::from_millis(30)).unwrap_err();
+        let waited = t0.elapsed();
+        assert!(e.is_shard_timeout(), "kind must be ShardTimeout: {e}");
+        assert_eq!(e.timed_out_shard(), None, "a bare store waiter knows no shard");
+        assert!(e.to_string().contains("ticket 7"), "{e}");
+        assert!(waited >= std::time::Duration::from_millis(30), "returned early: {waited:?}");
+        assert!(
+            waited < std::time::Duration::from_secs(10),
+            "wildly overshot the bound: {waited:?}"
+        );
+        // The ticket survives the timeout: a late publish is claimable.
+        comp.publish(7, Ok(Response::Spmv(RunResult {
+            y: vec![1.0],
+            breakdown: Breakdown::default(),
+            stats: Default::default(),
+            energy: Energy::default(),
+        })));
+        let r = comp.wait_timeout(7, std::time::Duration::from_millis(30)).unwrap();
+        match r {
+            Response::Spmv(run) => assert_eq!(run.y, vec![1.0]),
+            other => panic!("unexpected response kind {:?}", other.kind()),
+        }
+        // Claimed: a second wait is the unknown-ticket error (not a
+        // timeout), same contract as the unbounded wait.
+        let e = comp.wait_timeout(7, std::time::Duration::from_millis(5)).unwrap_err();
+        assert!(!e.is_shard_timeout());
+        assert!(e.to_string().contains("unknown ticket"), "{e}");
+    }
+
+    #[test]
+    fn wait_timeout_with_ready_response_returns_immediately() {
+        let comp: Completions<f64> = Completions::new();
+        comp.register(1);
+        comp.publish(1, Err(format_err!("already failed")));
+        let t0 = std::time::Instant::now();
+        let e = comp.wait_timeout(1, std::time::Duration::from_secs(60)).unwrap_err();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(10), "must not sleep");
+        assert_eq!(e.to_string(), "already failed");
+    }
 
     #[test]
     fn fed_wave_moves_the_buffer_without_copying() {

@@ -32,7 +32,7 @@
 //! reaches the waiting tenant again. A flooding tenant therefore cannot
 //! starve anyone — it only fills the slots its weight entitles it to.
 
-use super::metrics::TenantStats;
+use super::metrics::{LatencyHistogram, TenantStats};
 use crate::util::Result;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -83,9 +83,13 @@ impl TenantSpec {
 
     /// Parse a CLI-style tenant list: comma-separated
     /// `name:weight[:quota]` entries, e.g. `alice:3,bob:1` or
-    /// `batch:1:2,online:4:8`. Weight and quota must be >= 1.
+    /// `batch:1:2,online:4:8`. Weight and quota must be >= 1, names
+    /// must be non-empty and unique — everything
+    /// [`FairScheduler::new`] would reject is rejected here too, so a
+    /// bad `--tenants` flag fails at parse time with the entry named,
+    /// not later at scheduler construction.
     pub fn parse_list(spec: &str) -> Result<Vec<TenantSpec>> {
-        let mut out = Vec::new();
+        let mut out: Vec<TenantSpec> = Vec::new();
         for entry in spec.split(',') {
             let entry = entry.trim();
             if entry.is_empty() {
@@ -96,15 +100,23 @@ impl TenantSpec {
                 parts.len() == 2 || parts.len() == 3,
                 "tenant entry {entry:?} must be name:weight or name:weight:quota"
             );
+            let name = parts[0].trim();
+            crate::ensure!(!name.is_empty(), "tenant entry {entry:?} has an empty name");
+            crate::ensure!(
+                !out.iter().any(|t| &*t.name == name),
+                "duplicate tenant name {name:?} in spec {spec:?}"
+            );
             let weight: usize = parts[1]
                 .trim()
                 .parse()
                 .map_err(|_| crate::format_err!("tenant {entry:?}: weight must be an integer"))?;
-            let mut t = TenantSpec::new(parts[0].trim(), weight);
+            crate::ensure!(weight >= 1, "tenant {entry:?}: weight must be >= 1");
+            let mut t = TenantSpec::new(name, weight);
             if parts.len() == 3 {
                 let quota: usize = parts[2].trim().parse().map_err(|_| {
                     crate::format_err!("tenant {entry:?}: quota must be an integer")
                 })?;
+                crate::ensure!(quota >= 1, "tenant {entry:?}: quota must be >= 1");
                 t = t.with_quota(quota);
             }
             out.push(t);
@@ -114,13 +126,29 @@ impl TenantSpec {
     }
 }
 
+/// One queued work item: the payload plus its EDF key. `deadline` is an
+/// absolute instant in the caller's clock (the facade uses microseconds
+/// since its epoch); `None` sorts after every dated item.
+struct Queued<W> {
+    deadline: Option<u64>,
+    work: W,
+}
+
+impl<W> Queued<W> {
+    fn key(&self) -> u64 {
+        self.deadline.unwrap_or(u64::MAX)
+    }
+}
+
 struct TenantState<W> {
     spec: TenantSpec,
-    queue: VecDeque<W>,
+    queue: VecDeque<Queued<W>>,
     in_flight: usize,
     enqueued: u64,
     dispatched: u64,
     completed: u64,
+    shed: u64,
+    hist: LatencyHistogram,
 }
 
 /// Deterministic weighted-round-robin scheduler with per-tenant
@@ -157,6 +185,8 @@ impl<W> FairScheduler<W> {
                     enqueued: 0,
                     dispatched: 0,
                     completed: 0,
+                    shed: 0,
+                    hist: LatencyHistogram::new(),
                 })
                 .collect(),
             cursor: 0,
@@ -179,11 +209,28 @@ impl<W> FairScheduler<W> {
         &self.tenants[t.0].spec
     }
 
-    /// Append `work` to the tenant's FIFO queue.
+    /// Append `work` to the tenant's FIFO queue (no deadline: dispatch
+    /// in arrival order after every dated request).
     pub fn enqueue(&mut self, t: TenantId, work: W) {
+        self.enqueue_with_deadline(t, work, None);
+    }
+
+    /// Enqueue `work` with an optional absolute deadline (EDF within
+    /// the tenant's queue). The cross-tenant weighted-round-robin share
+    /// is untouched — a deadline can only reorder a tenant's *own*
+    /// queue, so no deadline choice lets one tenant cut into another's
+    /// slots. Within one tenant the earliest deadline dispatches first;
+    /// ties and undated requests keep arrival (FIFO) order, undated
+    /// after dated.
+    pub fn enqueue_with_deadline(&mut self, t: TenantId, work: W, deadline: Option<u64>) {
         let st = &mut self.tenants[t.0];
         st.enqueued += 1;
-        st.queue.push_back(work);
+        let q = Queued { deadline, work };
+        // Stable EDF insert: after every item with key <= ours.
+        match st.queue.iter().position(|o| o.key() > q.key()) {
+            Some(i) => st.queue.insert(i, q),
+            None => st.queue.push_back(q),
+        }
     }
 
     /// Dispatch the next eligible request under weighted round-robin:
@@ -213,7 +260,7 @@ impl<W> FairScheduler<W> {
                 self.served_in_turn += 1;
                 st.in_flight += 1;
                 st.dispatched += 1;
-                let work = st.queue.pop_front().expect("non-empty queue");
+                let work = st.queue.pop_front().expect("non-empty queue").work;
                 return Some((TenantId(t), work));
             }
             self.cursor = (t + 1) % n;
@@ -234,9 +281,27 @@ impl<W> FairScheduler<W> {
         st.completed += 1;
     }
 
+    /// Record a completed request's submit-to-publish latency (in
+    /// microseconds) into the tenant's log-bucketed histogram.
+    pub fn record_latency(&mut self, t: TenantId, us: u64) {
+        self.tenants[t.0].hist.record(us);
+    }
+
+    /// Record an admission-control shed: the request was answered
+    /// `Overloaded` and never entered the queue.
+    pub fn record_shed(&mut self, t: TenantId) {
+        self.tenants[t.0].shed += 1;
+    }
+
     /// Total requests queued (not yet dispatched) across tenants.
     pub fn queued(&self) -> usize {
         self.tenants.iter().map(|t| t.queue.len()).sum()
+    }
+
+    /// Requests queued (not yet dispatched) for one tenant — the
+    /// admission-control depth check.
+    pub fn queued_for(&self, t: TenantId) -> usize {
+        self.tenants[t.0].queue.len()
     }
 
     /// Total dispatched-but-not-completed requests across tenants.
@@ -249,8 +314,8 @@ impl<W> FairScheduler<W> {
     pub fn drain_queued(&mut self) -> Vec<(TenantId, W)> {
         let mut out = Vec::new();
         for (i, st) in self.tenants.iter_mut().enumerate() {
-            while let Some(w) = st.queue.pop_front() {
-                out.push((TenantId(i), w));
+            while let Some(q) = st.queue.pop_front() {
+                out.push((TenantId(i), q.work));
             }
         }
         out
@@ -268,8 +333,10 @@ impl<W> FairScheduler<W> {
                 enqueued: t.enqueued,
                 dispatched: t.dispatched,
                 completed: t.completed,
+                shed: t.shed,
                 in_flight: t.in_flight,
                 queued: t.queue.len(),
+                latency: t.hist.snapshot(),
             })
             .collect()
     }
@@ -484,5 +551,106 @@ mod tests {
         assert!(TenantSpec::parse_list("a").is_err());
         assert!(TenantSpec::parse_list("a:x").is_err());
         assert!(TenantSpec::parse_list("a:1:y").is_err());
+    }
+
+    #[test]
+    fn parse_list_rejects_duplicates_and_zero_knobs() {
+        // Duplicate names fail at parse time with the name in the
+        // message, not later at scheduler construction.
+        let e = TenantSpec::parse_list("alice:3,bob:1,alice:2").unwrap_err();
+        assert!(e.to_string().contains("alice"), "error must name the duplicate: {e}");
+        // Whitespace does not hide a duplicate.
+        assert!(TenantSpec::parse_list("a:1,  a :2").is_err());
+        // Zero weight / zero quota are rejected where the entry is named.
+        let e = TenantSpec::parse_list("a:0").unwrap_err();
+        assert!(e.to_string().contains("weight"), "{e}");
+        let e = TenantSpec::parse_list("a:1:0").unwrap_err();
+        assert!(e.to_string().contains("quota"), "{e}");
+        // Empty names (":1" or " :1") are rejected.
+        assert!(TenantSpec::parse_list(":1").is_err());
+        assert!(TenantSpec::parse_list(" :1,b:2").is_err());
+    }
+
+    #[test]
+    fn parse_list_whitespace_and_empty_entries() {
+        // Entries trim; empty comma segments (trailing commas, doubled
+        // commas) are skipped rather than rejected.
+        let ts = TenantSpec::parse_list("  a : 2 , , b : 1 : 3 ,").unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!((&*ts[0].name, ts[0].weight), ("a", 2));
+        assert_eq!((&*ts[1].name, ts[1].weight, ts[1].max_in_flight), ("b", 1, 3));
+        // All-whitespace / all-commas specs declare no tenants.
+        assert!(TenantSpec::parse_list("   ").is_err());
+        assert!(TenantSpec::parse_list(",,,").is_err());
+    }
+
+    #[test]
+    fn edf_reorders_within_a_tenant_only() {
+        // Within one tenant: earliest deadline first; undated requests
+        // go last in arrival order; equal deadlines keep FIFO order.
+        let mut s = sched(&[("a", 10, usize::MAX)]);
+        let a = s.tenant("a").unwrap();
+        s.enqueue(a, 0); // undated, arrived first
+        s.enqueue_with_deadline(a, 1, Some(500));
+        s.enqueue_with_deadline(a, 2, Some(100));
+        s.enqueue_with_deadline(a, 3, Some(500));
+        s.enqueue(a, 4); // undated, arrived last
+        let got: Vec<usize> = std::iter::from_fn(|| {
+            s.pop().map(|(t, w)| {
+                s.complete(t);
+                w
+            })
+        })
+        .collect();
+        assert_eq!(got, vec![2, 1, 3, 0, 4]);
+    }
+
+    #[test]
+    fn edf_cannot_cut_into_another_tenants_share() {
+        // b's urgent deadlines reorder b's own queue but the 1:1 WRR
+        // interleave with a is unchanged — deadlines are not a priority
+        // escalation mechanism across tenants.
+        let mut s = sched(&[("a", 1, usize::MAX), ("b", 1, usize::MAX)]);
+        let (a, b) = (s.tenant("a").unwrap(), s.tenant("b").unwrap());
+        for i in 0..3 {
+            s.enqueue(a, i);
+            s.enqueue_with_deadline(b, 10 + i, Some(1000 - i as u64));
+        }
+        let order = drain_serialized(&mut s);
+        assert_eq!(order, vec!["a", "b", "a", "b", "a", "b"]);
+        // And b's internal order followed its (descending-enqueued)
+        // deadlines: 12, 11, 10.
+        let mut s = sched(&[("b", 1, usize::MAX)]);
+        let b = s.tenant("b").unwrap();
+        for i in 0..3 {
+            s.enqueue_with_deadline(b, 10 + i, Some(1000 - i as u64));
+        }
+        let got: Vec<usize> = std::iter::from_fn(|| {
+            s.pop().map(|(t, w)| {
+                s.complete(t);
+                w
+            })
+        })
+        .collect();
+        assert_eq!(got, vec![12, 11, 10]);
+    }
+
+    #[test]
+    fn shed_and_latency_land_in_stats() {
+        let mut s = sched(&[("a", 1, usize::MAX)]);
+        let a = s.tenant("a").unwrap();
+        s.record_shed(a);
+        s.record_shed(a);
+        s.record_latency(a, 100);
+        s.record_latency(a, 200);
+        s.record_latency(a, 400);
+        let st = &s.stats()[0];
+        assert_eq!(st.shed, 2);
+        assert_eq!(st.latency.count, 3);
+        assert_eq!(st.latency.max_us, 400);
+        assert!(st.latency.p50_us >= 100 && st.latency.p50_us <= 255);
+        assert_eq!(s.queued_for(a), 0);
+        s.enqueue(a, 1);
+        assert_eq!(s.queued_for(a), 1);
     }
 }

@@ -193,6 +193,12 @@ pub enum Response<T> {
     Batch(BatchResult<T>),
     /// Result of [`Request::Iterate`].
     Iterate(IterationsResult<T>),
+    /// The request was shed by admission control: the tenant's queue
+    /// was at its configured depth cap, so the request was answered
+    /// immediately instead of queueing unboundedly. Typed — a shed is a
+    /// normal response the caller must handle (back off and retry), not
+    /// an `Err` and never a silent drop.
+    Overloaded,
 }
 
 impl<T> Response<T> {
@@ -202,7 +208,13 @@ impl<T> Response<T> {
             Response::Spmv(_) => "spmv",
             Response::Batch(_) => "batch",
             Response::Iterate(_) => "iterate",
+            Response::Overloaded => "overloaded",
         }
+    }
+
+    /// True when the request was shed by admission control.
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, Response::Overloaded)
     }
 
     /// Unwrap a [`Response::Spmv`].
@@ -490,6 +502,19 @@ impl<T: SpElem> SpmvService<T> {
     pub fn wait(&self, ticket: Ticket) -> Result<Response<T>> {
         crate::ensure!(ticket.svc == self.id, "ticket belongs to a different service");
         self.queue.wait(ticket.id)
+    }
+
+    /// Bounded [`Self::wait`]: blocks at most `timeout`, then returns a
+    /// typed [`crate::util::ErrorKind::ShardTimeout`] error instead of
+    /// hanging on a wedged pipeline. The ticket survives a timeout — a
+    /// later `wait`/`try_wait` can still claim a late response.
+    pub fn wait_timeout(
+        &self,
+        ticket: Ticket,
+        timeout: std::time::Duration,
+    ) -> Result<Response<T>> {
+        crate::ensure!(ticket.svc == self.id, "ticket belongs to a different service");
+        self.queue.wait_timeout(ticket.id, timeout)
     }
 
     /// Non-blocking poll: claim `ticket`'s response if it is ready

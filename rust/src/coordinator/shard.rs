@@ -38,6 +38,47 @@
 //! (via [`super::ServiceBuilder::build_with_cache`]): equal shard
 //! slices (e.g. two tenants loading the same matrix) plan once.
 //!
+//! ## Resilience & SLOs
+//!
+//! The sharded tier is *supervised*: each backend lives in a swappable
+//! slot ([`Backends`]) next to a dead flag, and the facade retains
+//! everything needed to rebuild it — the builder configuration (a
+//! `BackendRecipe`) plus every registered matrix's per-shard slices.
+//! When a backend dies, the next sub-request to touch it respawns a
+//! fresh [`SpmvService`] from the recipe, re-loads the affected slices
+//! **through the shared [`PlanCache`]** (cache hits — `plan_builds`
+//! stays flat, locked by `tests/proptest_shard.rs`), and the in-flight
+//! facade request re-scatters its lost sub-requests so the gathered
+//! output stays bit-identical to the fault-free run.
+//!
+//! Failures are injected, never spontaneous: a seed-reproducible
+//! [`super::fault::FaultPlan`] (behind the [`FaultInjector`] trait —
+//! production configures none and pays nothing) can kill a shard at
+//! dispatch or gather time, delay a stage, drop a completion, or stall
+//! a shard. `tests/chaos_equivalence.rs` drives every scenario and
+//! asserts the chaos run's outputs equal the fault-free oracle's.
+//!
+//! Three production semantics ride on the same machinery:
+//!
+//! * **Deadlines**: [`ShardedService::submit_with_deadline`] tags a
+//!   request with an absolute deadline; within a tenant the scheduler
+//!   dispatches earliest-deadline-first (EDF), while cross-tenant
+//!   weighted round-robin is untouched.
+//! * **Load shedding**: with [`ShardedServiceBuilder::max_queue`], a
+//!   tenant whose scheduler queue is full gets a typed
+//!   [`Response::Overloaded`] immediately — shed, counted in
+//!   [`super::TenantStats::shed`], never silently dropped.
+//! * **Timeouts**: [`ShardedServiceBuilder::wait_timeout`] bounds every
+//!   wait; expiry is a typed `ShardTimeout` error naming the wedged
+//!   shard when one is known (the ticket survives — a later wait can
+//!   still claim the response). Per-tenant latency histograms
+//!   (p50/p99/p999, [`super::TenantStats::latency`]) make the SLOs
+//!   observable.
+//!
+//! The synchronous fast paths ([`ShardedService::spmv`] and friends)
+//! bypass the scheduler and therefore the fault injector: chaos is a
+//! property of the queued pipeline.
+//!
 //! ## Determinism and the differential harness
 //!
 //! The sharded path must *buy scale, not drift*. Two contracts, locked
@@ -65,6 +106,7 @@
 
 use super::cache::PlanCache;
 use super::calibration::CalibrationTable;
+use super::fault::{Fault, FaultInjector};
 use super::queue::{Completions, StageGuard, DEFAULT_QUEUE_DEPTH};
 use super::scheduler::{FairScheduler, TenantId, TenantSpec};
 use super::service::{BlockPolicy, MatrixHandle, Request, Response, ServiceBuilder, SpmvService, Ticket};
@@ -76,13 +118,15 @@ use crate::format_err;
 use crate::matrix::{CooMatrix, MatrixStats, SpElem};
 use crate::partition::balance::split_weighted;
 use crate::pim::{Energy, PimSystem};
-use crate::util::Result;
-use std::collections::HashMap;
+use crate::util::{Error, Result};
+use std::collections::{HashMap, HashSet};
+use std::fmt;
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Distinguishes sharded services within a process (handles and tickets
 /// from one facade are rejected by another).
@@ -165,21 +209,141 @@ impl ShardedTicket {
 }
 
 /// What one registered matrix looks like to the facade: the per-shard
-/// handles (index i belongs to backend i), the row ranges they cover,
+/// handles (index i belongs to backend i), the slices and spec needed
+/// to re-load them on a respawned backend, the row ranges they cover,
 /// and the owning tenant.
-struct ShardEntry {
-    handles: Vec<MatrixHandle>,
+///
+/// Retaining the slices is the price of supervision: without them a
+/// dead backend's rows would be unrecoverable. The handles sit behind
+/// a mutex because a respawn rewrites the dead shard's handle in place
+/// while requests for other shards keep flowing.
+struct ShardEntry<T: SpElem> {
+    handles: Mutex<Vec<MatrixHandle>>,
+    slices: Vec<CooMatrix<T>>,
+    spec: KernelSpec,
     ranges: Vec<Range<usize>>,
     nrows: usize,
     ncols: usize,
     owner: TenantId,
 }
 
+/// Everything needed to rebuild a shard backend from scratch — the
+/// builder knobs a [`ShardedServiceBuilder`] applies per backend.
+#[derive(Clone)]
+struct BackendRecipe {
+    engine: Engine,
+    queue_depth: usize,
+    block_policy: BlockPolicy,
+    calibration: Option<Arc<CalibrationTable>>,
+}
+
+impl BackendRecipe {
+    fn build<T: SpElem>(
+        &self,
+        sys: PimSystem,
+        cache: Arc<PlanCache<T>>,
+    ) -> Result<SpmvService<T>> {
+        let mut builder = ServiceBuilder::new()
+            .engine(self.engine)
+            .queue_depth(self.queue_depth)
+            .vector_block(self.block_policy);
+        if let Some(table) = &self.calibration {
+            builder = builder.calibration(Arc::clone(table));
+        }
+        builder.build_with_cache(sys, cache)
+    }
+}
+
+/// The supervised shard backends: one swappable service slot plus a
+/// dead flag per shard, the recipe and system to rebuild one, and the
+/// matrix registry whose slices a respawn re-loads.
+///
+/// Lock order (deadlock-free by construction): slot (`slots[i]`) →
+/// registry → a `ShardEntry`'s handles. Respawn takes all three in
+/// that order; every other path takes a suffix of it.
+struct Backends<T: SpElem> {
+    slots: Vec<RwLock<Arc<SpmvService<T>>>>,
+    dead: Vec<AtomicBool>,
+    sys: PimSystem,
+    recipe: BackendRecipe,
+    cache: Arc<PlanCache<T>>,
+    registry: Mutex<HashMap<u64, Arc<ShardEntry<T>>>>,
+    /// Backends respawned over the facade's lifetime.
+    respawns: AtomicU64,
+}
+
+impl<T: SpElem> Backends<T> {
+    fn shard_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The current service in slot `i` (respawns swap the slot, so
+    /// callers clone the `Arc` out instead of holding the guard).
+    fn service(&self, i: usize) -> Arc<SpmvService<T>> {
+        Arc::clone(&*self.slots[i].read().expect("shard slot poisoned"))
+    }
+
+    /// Mark backend `i` dead (fault injection). The next sub-request
+    /// that touches the slot respawns it.
+    fn kill(&self, i: usize) {
+        if i < self.dead.len() {
+            self.dead[i].store(true, Ordering::SeqCst);
+        }
+    }
+
+    /// Respawn backend `i` if (and only if) it is marked dead.
+    fn ensure_alive(&self, i: usize) -> Result<()> {
+        if self.dead[i].load(Ordering::SeqCst) {
+            self.respawn(i)?;
+        }
+        Ok(())
+    }
+
+    /// Rebuild slot `i` from the recipe and re-load every registered
+    /// matrix's slice for that shard through the shared plan cache.
+    /// The slices were planned when first loaded, so the re-loads are
+    /// cache *hits*: `plan_builds` stays flat across a respawn.
+    fn respawn(&self, i: usize) -> Result<()> {
+        let mut slot = self.slots[i].write().expect("shard slot poisoned");
+        if !self.dead[i].load(Ordering::SeqCst) {
+            // Another thread respawned it while we waited for the lock.
+            return Ok(());
+        }
+        let fresh = self.recipe.build(self.sys.clone(), Arc::clone(&self.cache))?;
+        let entries: Vec<Arc<ShardEntry<T>>> = {
+            let reg = self.registry.lock().expect("shard registry poisoned");
+            reg.values().cloned().collect()
+        };
+        for e in entries {
+            // Matrices with fewer rows than shards use fewer shards.
+            if i < e.slices.len() {
+                let h = fresh.load(&e.slices[i], &e.spec)?;
+                e.handles.lock().expect("shard entry handles poisoned")[i] = h;
+            }
+        }
+        *slot = Arc::new(fresh);
+        self.dead[i].store(false, Ordering::SeqCst);
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// One sub-request in flight against a specific backend incarnation.
+/// The `Arc` pins the exact service the ticket was issued by, so a
+/// respawn can never orphan a wait.
+struct SubTicket<T: SpElem> {
+    svc: Arc<SpmvService<T>>,
+    ticket: Ticket,
+    shard: usize,
+}
+
 /// One scheduled-but-not-dispatched request.
 struct DispatchJob<T: SpElem> {
     ticket: u64,
-    entry: Arc<ShardEntry>,
+    entry: Arc<ShardEntry<T>>,
     req: Request<T>,
+    /// When the facade accepted the request (latency histograms).
+    submitted: Instant,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -189,15 +353,25 @@ enum GatherKind {
     Iterate,
 }
 
+/// The scattered request's input payload, kept alive through gather so
+/// fault recovery can re-scatter lost sub-requests from the original
+/// vectors (shared `Arc`s — no copies).
+enum ScatterPayload<T: SpElem> {
+    Spmv(Arc<[T]>),
+    Batch(Vec<Arc<[T]>>),
+}
+
 /// Dispatcher -> gather hand-off: the sub-tickets of one facade
 /// request, to be waited, merged and published in dispatch order.
-struct GatherItem {
+struct GatherItem<T: SpElem> {
     ticket: u64,
     tenant: TenantId,
-    entry: Arc<ShardEntry>,
+    entry: Arc<ShardEntry<T>>,
     kind: GatherKind,
-    subtickets: Vec<Ticket>,
+    subs: Vec<SubTicket<T>>,
     iters: usize,
+    payload: ScatterPayload<T>,
+    submitted: Instant,
 }
 
 /// Recorded dispatch/completion order (enable with
@@ -207,6 +381,9 @@ struct GatherItem {
 pub struct ScheduleLog {
     /// Tenant of each dispatched request, in dispatch order.
     pub dispatched: Vec<TenantId>,
+    /// Ticket id of each dispatched request, in dispatch order (the
+    /// EDF deadline tests observe reordering through this).
+    pub dispatched_tickets: Vec<u64>,
     /// Tenant of each completed request, in completion (publish) order.
     pub completed: Vec<TenantId>,
 }
@@ -230,21 +407,27 @@ impl<T: SpElem> Sched<T> {
     }
 
     /// Record a facade request's completion: free its tenant's quota
-    /// slot, log it, and wake the dispatcher.
-    fn complete(&self, tenant: TenantId) {
+    /// slot, record its end-to-end latency, log it, and wake the
+    /// dispatcher.
+    fn complete(&self, tenant: TenantId, us: u64) {
         let mut st = self.lock();
         if let Some(log) = st.log.as_mut() {
             log.completed.push(tenant);
         }
+        st.fair.record_latency(tenant, us);
         st.fair.complete(tenant);
         drop(st);
         self.ready.notify_all();
     }
 }
 
+fn elapsed_us(since: Instant) -> u64 {
+    since.elapsed().as_micros() as u64
+}
+
 /// Configuration for [`ShardedService`] (see
 /// [`ShardedService::builder`]).
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct ShardedServiceBuilder {
     shards: usize,
     engine: Engine,
@@ -255,12 +438,35 @@ pub struct ShardedServiceBuilder {
     tenants: Vec<TenantSpec>,
     record_schedule: bool,
     start_paused: bool,
+    wait_timeout: Option<Duration>,
+    max_queue: Option<usize>,
+    fault: Option<Arc<dyn FaultInjector>>,
+}
+
+impl fmt::Debug for ShardedServiceBuilder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ShardedServiceBuilder")
+            .field("shards", &self.shards)
+            .field("engine", &self.engine)
+            .field("cache_capacity", &self.cache_capacity)
+            .field("queue_depth", &self.queue_depth)
+            .field("block_policy", &self.block_policy)
+            .field("calibration", &self.calibration)
+            .field("tenants", &self.tenants)
+            .field("record_schedule", &self.record_schedule)
+            .field("start_paused", &self.start_paused)
+            .field("wait_timeout", &self.wait_timeout)
+            .field("max_queue", &self.max_queue)
+            .field("fault", &self.fault.is_some())
+            .finish()
+    }
 }
 
 impl ShardedServiceBuilder {
     /// Defaults: 2 shards, serial engine, default cache/queue/block
     /// settings, no calibration table, one `"default"` tenant (weight 1,
-    /// unlimited quota).
+    /// unlimited quota), no wait timeout, no admission cap, no fault
+    /// injection.
     pub fn new() -> ShardedServiceBuilder {
         ShardedServiceBuilder {
             shards: 2,
@@ -272,6 +478,9 @@ impl ShardedServiceBuilder {
             tenants: Vec::new(),
             record_schedule: false,
             start_paused: false,
+            wait_timeout: None,
+            max_queue: None,
+            fault: None,
         }
     }
 
@@ -367,6 +576,36 @@ impl ShardedServiceBuilder {
         self
     }
 
+    /// Bound every wait on this facade: [`ShardedService::wait`], the
+    /// synchronous fast paths and the gather stage's sub-request waits
+    /// all time out after `timeout` with a typed `ShardTimeout` error
+    /// (naming the wedged shard where one is known) instead of blocking
+    /// forever. The ticket survives a timeout — a later wait can still
+    /// claim the response. Default: wait indefinitely.
+    pub fn wait_timeout(mut self, timeout: Duration) -> ShardedServiceBuilder {
+        self.wait_timeout = Some(timeout);
+        self
+    }
+
+    /// Admission control: cap each tenant's scheduler queue at `cap`
+    /// requests. A submit beyond the cap is *shed* — its ticket
+    /// resolves immediately to [`Response::Overloaded`] (typed, never a
+    /// silent drop) and [`super::TenantStats::shed`] counts it. `0`
+    /// sheds everything. Default: unbounded.
+    pub fn max_queue(mut self, cap: usize) -> ShardedServiceBuilder {
+        self.max_queue = Some(cap);
+        self
+    }
+
+    /// Inject faults into the queued pipeline (chaos testing): the
+    /// dispatcher and gather stages consult `fault` per facade ticket.
+    /// See [`super::fault::FaultPlan`] for the seed-reproducible
+    /// implementation. Default: none (production pays nothing).
+    pub fn fault_injector(mut self, fault: Arc<dyn FaultInjector>) -> ShardedServiceBuilder {
+        self.fault = Some(fault);
+        self
+    }
+
     /// Build the facade: `shards` backends over clones of
     /// `per_shard_sys` (one simulated rank group each), sharing a fresh
     /// plan cache.
@@ -383,17 +622,28 @@ impl ShardedServiceBuilder {
         per_shard_sys: PimSystem,
         cache: Arc<PlanCache<T>>,
     ) -> Result<ShardedService<T>> {
-        let mut backends = Vec::with_capacity(self.shards);
+        let recipe = BackendRecipe {
+            engine: self.engine,
+            queue_depth: self.queue_depth,
+            block_policy: self.block_policy,
+            calibration: self.calibration.clone(),
+        };
+        let mut slots = Vec::with_capacity(self.shards);
+        let mut dead = Vec::with_capacity(self.shards);
         for _ in 0..self.shards {
-            let mut builder = ServiceBuilder::new()
-                .engine(self.engine)
-                .queue_depth(self.queue_depth)
-                .vector_block(self.block_policy);
-            if let Some(table) = &self.calibration {
-                builder = builder.calibration(Arc::clone(table));
-            }
-            backends.push(builder.build_with_cache(per_shard_sys.clone(), Arc::clone(&cache))?);
+            let svc = recipe.build(per_shard_sys.clone(), Arc::clone(&cache))?;
+            slots.push(RwLock::new(Arc::new(svc)));
+            dead.push(AtomicBool::new(false));
         }
+        let backends = Arc::new(Backends {
+            slots,
+            dead,
+            sys: per_shard_sys,
+            recipe,
+            cache,
+            registry: Mutex::new(HashMap::new()),
+            respawns: AtomicU64::new(0),
+        });
         let tenants = if self.tenants.is_empty() {
             vec![TenantSpec::new("default", 1)]
         } else {
@@ -402,7 +652,6 @@ impl ShardedServiceBuilder {
         let tenant_names: Vec<Arc<str>> = tenants.iter().map(|t| Arc::clone(&t.name)).collect();
         let fair = FairScheduler::new(tenants)?;
 
-        let shards = Arc::new(backends);
         let completions = Arc::new(Completions::new());
         let sched = Arc::new(Sched {
             state: Mutex::new(SchedState {
@@ -413,40 +662,50 @@ impl ShardedServiceBuilder {
             }),
             ready: Condvar::new(),
         });
-        let (tx, rx) = channel::<GatherItem>();
+        let (tx, rx) = channel::<GatherItem<T>>();
 
-        let (d_shards, d_sched, d_comp) =
-            (Arc::clone(&shards), Arc::clone(&sched), Arc::clone(&completions));
+        let (d_backends, d_sched, d_comp, d_fault) = (
+            Arc::clone(&backends),
+            Arc::clone(&sched),
+            Arc::clone(&completions),
+            self.fault.clone(),
+        );
         let h_dispatch = std::thread::Builder::new()
             .name("spmv-shard-dispatch".into())
             .spawn(move || {
                 let _failsafe =
                     StageGuard { comp: Arc::clone(&d_comp), stage: "shard dispatch" };
-                run_dispatcher(d_shards, d_sched, d_comp, tx)
+                run_dispatcher(d_backends, d_sched, d_comp, tx, d_fault)
             })
             .expect("spawn sharded dispatch thread");
-        let (g_shards, g_sched, g_comp) =
-            (Arc::clone(&shards), Arc::clone(&sched), Arc::clone(&completions));
+        let (g_backends, g_sched, g_comp, g_fault) = (
+            Arc::clone(&backends),
+            Arc::clone(&sched),
+            Arc::clone(&completions),
+            self.fault.clone(),
+        );
+        let g_timeout = self.wait_timeout;
         let h_gather = std::thread::Builder::new()
             .name("spmv-shard-gather".into())
             .spawn(move || {
                 let _failsafe =
                     StageGuard { comp: Arc::clone(&g_comp), stage: "shard gather" };
-                run_gather(g_shards, g_sched, g_comp, rx)
+                run_gather(g_backends, g_sched, g_comp, rx, g_fault, g_timeout)
             })
             .expect("spawn sharded gather thread");
 
         Ok(ShardedService {
             id: NEXT_SHARDED_ID.fetch_add(1, Ordering::Relaxed),
-            shards,
-            cache,
-            registry: Mutex::new(HashMap::new()),
+            backends,
             next_handle: AtomicU64::new(1),
             next_ticket: AtomicU64::new(1),
             sync_served: AtomicU64::new(0),
             tenant_names,
             completions,
             sched,
+            epoch: Instant::now(),
+            wait_timeout: self.wait_timeout,
+            max_queue: self.max_queue,
             threads: vec![h_dispatch, h_gather],
         })
     }
@@ -458,11 +717,13 @@ impl Default for ShardedServiceBuilder {
     }
 }
 
-/// A multi-tenant serving facade over `S` shard backends (one
-/// [`SpmvService`] per simulated rank group). `Sync`: many host threads
-/// may `load` / `submit` / `wait` concurrently; a dispatcher thread
-/// orders admissions through the fair scheduler and a gather thread
-/// merges per-shard partial responses in dispatch order.
+/// A multi-tenant serving facade over `S` supervised shard backends
+/// (one [`SpmvService`] per simulated rank group). `Sync`: many host
+/// threads may `load` / `submit` / `wait` concurrently; a dispatcher
+/// thread orders admissions through the fair scheduler and a gather
+/// thread merges per-shard partial responses in dispatch order. A
+/// backend that dies is respawned from the shared plan cache and the
+/// affected sub-requests re-scattered (see the module docs).
 ///
 /// ```
 /// use sparsep::coordinator::{KernelSpec, Request, ShardedServiceBuilder};
@@ -487,9 +748,7 @@ impl Default for ShardedServiceBuilder {
 /// ```
 pub struct ShardedService<T: SpElem> {
     id: u64,
-    shards: Arc<Vec<SpmvService<T>>>,
-    cache: Arc<PlanCache<T>>,
-    registry: Mutex<HashMap<u64, Arc<ShardEntry>>>,
+    backends: Arc<Backends<T>>,
     next_handle: AtomicU64,
     next_ticket: AtomicU64,
     /// Requests served on the synchronous fast path.
@@ -497,6 +756,11 @@ pub struct ShardedService<T: SpElem> {
     tenant_names: Vec<Arc<str>>,
     completions: Arc<Completions<T>>,
     sched: Arc<Sched<T>>,
+    /// Deadlines are measured as durations since this facade's birth
+    /// (monotonic, per-facade — never wall-clock).
+    epoch: Instant,
+    wait_timeout: Option<Duration>,
+    max_queue: Option<usize>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -508,7 +772,7 @@ impl<T: SpElem> ShardedService<T> {
 
     /// Number of shard backends.
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.backends.shard_count()
     }
 
     /// The default tenant (always registered first).
@@ -543,7 +807,8 @@ impl<T: SpElem> ShardedService<T> {
     /// Register `m` under `spec` for `tenant`: plan the row shards
     /// ([`plan_shards`]), load one slice per shard backend (through the
     /// shared plan cache — equal slices plan once), and pin them behind
-    /// one facade handle owned by the tenant.
+    /// one facade handle owned by the tenant. The slices are retained
+    /// so a dead backend can be respawned with its rows intact.
     pub fn load_for(
         &self,
         tenant: TenantId,
@@ -551,16 +816,21 @@ impl<T: SpElem> ShardedService<T> {
         spec: &KernelSpec,
     ) -> Result<ShardedHandle> {
         self.check_tenant(tenant)?;
-        let ranges = plan_shards(m, self.shards.len());
+        let ranges = plan_shards(m, self.backends.shard_count());
         let mut handles = Vec::with_capacity(ranges.len());
-        for (svc, r) in self.shards.iter().zip(&ranges) {
+        let mut slices = Vec::with_capacity(ranges.len());
+        for (i, r) in ranges.iter().enumerate() {
             let slice = m.row_range_slice(r.start, r.end);
-            match svc.load(&slice, spec) {
-                Ok(h) => handles.push(h),
+            self.backends.ensure_alive(i)?;
+            match self.backends.service(i).load(&slice, spec) {
+                Ok(h) => {
+                    handles.push(h);
+                    slices.push(slice);
+                }
                 Err(e) => {
                     // Roll back the shards already pinned.
-                    for (svc2, h) in self.shards.iter().zip(handles) {
-                        svc2.unload(h);
+                    for (j, h) in handles.into_iter().enumerate() {
+                        self.backends.service(j).unload(h);
                     }
                     return Err(e);
                 }
@@ -573,13 +843,19 @@ impl<T: SpElem> ShardedService<T> {
             ncols: m.ncols(),
         };
         let entry = Arc::new(ShardEntry {
-            handles,
+            handles: Mutex::new(handles),
+            slices,
+            spec: spec.clone(),
             ranges,
             nrows: m.nrows(),
             ncols: m.ncols(),
             owner: tenant,
         });
-        self.registry.lock().expect("shard registry poisoned").insert(handle.id, entry);
+        self.backends
+            .registry
+            .lock()
+            .expect("shard registry poisoned")
+            .insert(handle.id, entry);
         Ok(handle)
     }
 
@@ -604,13 +880,16 @@ impl<T: SpElem> ShardedService<T> {
         if handle.svc != self.id {
             return false;
         }
-        let entry = self.registry.lock().expect("shard registry poisoned").remove(&handle.id);
+        let entry = self
+            .backends
+            .registry
+            .lock()
+            .expect("shard registry poisoned")
+            .remove(&handle.id);
         match entry {
             None => false,
             Some(e) => {
-                for (svc, h) in self.shards.iter().zip(&e.handles) {
-                    svc.unload(*h);
-                }
+                unpin_entry(&self.backends, &e);
                 true
             }
         }
@@ -625,8 +904,8 @@ impl<T: SpElem> ShardedService<T> {
     /// silently; see [`Self::unload`]).
     pub fn unload_tenant(&self, tenant: TenantId) -> Result<(usize, usize)> {
         self.check_tenant(tenant)?;
-        let victims: Vec<Arc<ShardEntry>> = {
-            let mut reg = self.registry.lock().expect("shard registry poisoned");
+        let victims: Vec<Arc<ShardEntry<T>>> = {
+            let mut reg = self.backends.registry.lock().expect("shard registry poisoned");
             let ids: Vec<u64> = reg
                 .iter()
                 .filter(|(_, e)| e.owner == tenant)
@@ -635,11 +914,9 @@ impl<T: SpElem> ShardedService<T> {
             ids.into_iter().map(|id| reg.remove(&id).expect("registry id")).collect()
         };
         for e in &victims {
-            for (svc, h) in self.shards.iter().zip(&e.handles) {
-                svc.unload(*h);
-            }
+            unpin_entry(&self.backends, e);
         }
-        let evicted = self.cache.evict_unreferenced();
+        let evicted = self.backends.cache.evict_unreferenced();
         Ok((victims.len(), evicted))
     }
 
@@ -658,6 +935,33 @@ impl<T: SpElem> ShardedService<T> {
         tenant: TenantId,
         handle: ShardedHandle,
         req: Request<T>,
+    ) -> Result<ShardedTicket> {
+        self.submit_inner(tenant, handle, req, None)
+    }
+
+    /// Like [`Self::submit_for`], but tag the request with a deadline
+    /// `deadline` from now. Within a tenant the dispatcher serves the
+    /// earliest deadline first (EDF; deadline-less requests sort last),
+    /// while cross-tenant weighted round-robin is unaffected. Deadlines
+    /// order dispatch — they never cancel work; pair with
+    /// [`ShardedServiceBuilder::wait_timeout`] to bound waits.
+    pub fn submit_with_deadline(
+        &self,
+        tenant: TenantId,
+        handle: ShardedHandle,
+        req: Request<T>,
+        deadline: Duration,
+    ) -> Result<ShardedTicket> {
+        let abs = self.epoch.elapsed().saturating_add(deadline).as_micros() as u64;
+        self.submit_inner(tenant, handle, req, Some(abs))
+    }
+
+    fn submit_inner(
+        &self,
+        tenant: TenantId,
+        handle: ShardedHandle,
+        req: Request<T>,
+        deadline: Option<u64>,
     ) -> Result<ShardedTicket> {
         self.check_tenant(tenant)?;
         let entry = self.entry_for(&handle)?;
@@ -708,7 +1012,20 @@ impl<T: SpElem> ShardedService<T> {
                     .publish(ticket.id, Err(format_err!("sharded service is shut down")));
                 return Ok(ticket);
             }
-            st.fair.enqueue(tenant, DispatchJob { ticket: ticket.id, entry, req });
+            if let Some(cap) = self.max_queue {
+                if st.fair.queued_for(tenant) >= cap {
+                    // Admission control: shed typed, never silently.
+                    st.fair.record_shed(tenant);
+                    drop(st);
+                    self.completions.publish(ticket.id, Ok(Response::Overloaded));
+                    return Ok(ticket);
+                }
+            }
+            st.fair.enqueue_with_deadline(
+                tenant,
+                DispatchJob { ticket: ticket.id, entry, req, submitted: Instant::now() },
+                deadline,
+            );
         }
         self.sched.ready.notify_all();
         Ok(ticket)
@@ -716,10 +1033,24 @@ impl<T: SpElem> ShardedService<T> {
 
     /// Block until `ticket`'s merged response is ready and claim it.
     /// Tickets complete out of order; waiting twice (or on a foreign
-    /// ticket) is an error, not a hang.
+    /// ticket) is an error, not a hang. With a configured
+    /// [`ShardedServiceBuilder::wait_timeout`] the block is bounded: on
+    /// expiry this returns a typed `ShardTimeout` error and the ticket
+    /// survives for a later claim.
     pub fn wait(&self, ticket: ShardedTicket) -> Result<Response<T>> {
         crate::ensure!(ticket.svc == self.id, "ticket belongs to a different service");
-        self.completions.wait(ticket.id)
+        match self.wait_timeout {
+            None => self.completions.wait(ticket.id),
+            Some(d) => self.completions.wait_timeout(ticket.id, d),
+        }
+    }
+
+    /// Like [`Self::wait`], with an explicit bound overriding the
+    /// configured default. On expiry the error is a typed
+    /// `ShardTimeout` and the ticket survives — retrying is safe.
+    pub fn wait_timeout(&self, ticket: ShardedTicket, timeout: Duration) -> Result<Response<T>> {
+        crate::ensure!(ticket.svc == self.id, "ticket belongs to a different service");
+        self.completions.wait_timeout(ticket.id, timeout)
     }
 
     /// Non-blocking poll: like [`SpmvService::try_wait`], for sharded
@@ -730,7 +1061,8 @@ impl<T: SpElem> ShardedService<T> {
     }
 
     /// One SpMV on the caller's thread — the synchronous fast path
-    /// (bypasses the scheduler, like [`SpmvService::spmv`] bypasses the
+    /// (bypasses the scheduler — and hence deadlines, admission control
+    /// and the fault injector — like [`SpmvService::spmv`] bypasses the
     /// request queue). Sub-requests still pipeline across all shards
     /// concurrently. Bit-identical to `wait(submit(Request::Spmv))`.
     pub fn spmv(&self, handle: &ShardedHandle, x: &[T]) -> Result<RunResult<T>> {
@@ -739,8 +1071,8 @@ impl<T: SpElem> ShardedService<T> {
         self.sync_served.fetch_add(1, Ordering::Relaxed);
         // One wrap; the scatter below shares it across all shards.
         let x: Arc<[T]> = Arc::from(x);
-        let ts = submit_spmv_all(&self.shards, &entry, &x)?;
-        Ok(merge_shard_runs(wait_all_spmv(&self.shards, &ts)?))
+        let subs = submit_spmv_all(&self.backends, &entry, &x)?;
+        Ok(merge_shard_runs(wait_all_spmv(subs, self.wait_timeout)?))
     }
 
     /// One batched request on the caller's thread (synchronous fast
@@ -761,8 +1093,8 @@ impl<T: SpElem> ShardedService<T> {
         }
         // One wrap per vector; the scatter shares them across shards.
         let xs: Vec<Arc<[T]>> = xs.iter().map(|v| Arc::from(&v[..])).collect();
-        let ts = submit_batch_all(&self.shards, &entry, &xs)?;
-        Ok(merge_shard_batches(wait_all_batch(&self.shards, &ts)?))
+        let subs = submit_batch_all(&self.backends, &entry, &xs)?;
+        Ok(merge_shard_batches(wait_all_batch(subs, self.wait_timeout)?))
     }
 
     /// One iterated request on the caller's thread (synchronous fast
@@ -786,8 +1118,8 @@ impl<T: SpElem> ShardedService<T> {
         );
         self.sync_served.fetch_add(1, Ordering::Relaxed);
         let x: Arc<[T]> = Arc::from(x);
-        let ts = submit_spmv_all(&self.shards, &entry, &x)?;
-        match gather_iterate(&self.shards, &entry, ts, iters)? {
+        let subs = submit_spmv_all(&self.backends, &entry, &x)?;
+        match gather_iterate(&self.backends, &entry, subs, iters, None, self.wait_timeout)? {
             Response::Iterate(it) => Ok(it),
             other => Err(format_err!("internal: iterate gathered a {} response", other.kind())),
         }
@@ -813,29 +1145,37 @@ impl<T: SpElem> ShardedService<T> {
     }
 
     /// Facade-level counters: scheduled + fast-path requests, the
-    /// shared plan-cache traffic, and per-tenant scheduling counters.
+    /// shared plan-cache traffic, backend respawns, and per-tenant
+    /// scheduling counters (with latency quantiles and shed counts).
     pub fn stats(&self) -> ShardedStats {
         let sync = self.sync_served.load(Ordering::Relaxed);
         let tenants = self.sched.lock().fair.stats();
         ShardedStats {
-            shards: self.shards.len(),
+            shards: self.backends.shard_count(),
             submitted: self.completions.submitted() + sync,
             completed: self.completions.completed() + sync,
-            loaded_handles: self.registry.lock().expect("shard registry poisoned").len(),
-            cache_hits: self.cache.hits(),
-            cache_misses: self.cache.misses(),
-            plan_builds: self.cache.builds(),
-            resident_plans: self.cache.len(),
+            loaded_handles: self
+                .backends
+                .registry
+                .lock()
+                .expect("shard registry poisoned")
+                .len(),
+            cache_hits: self.backends.cache.hits(),
+            cache_misses: self.backends.cache.misses(),
+            plan_builds: self.backends.cache.builds(),
+            resident_plans: self.backends.cache.len(),
+            respawns: self.backends.respawns.load(Ordering::Relaxed),
             tenants,
         }
     }
 
-    fn entry_for(&self, handle: &ShardedHandle) -> Result<Arc<ShardEntry>> {
+    fn entry_for(&self, handle: &ShardedHandle) -> Result<Arc<ShardEntry<T>>> {
         crate::ensure!(
             handle.svc == self.id,
             "matrix handle belongs to a different service"
         );
-        self.registry
+        self.backends
+            .registry
             .lock()
             .expect("shard registry poisoned")
             .get(&handle.id)
@@ -866,15 +1206,29 @@ impl<T: SpElem> Drop for ShardedService<T> {
     }
 }
 
-/// Dispatcher: pull admissions from the fair scheduler in WRR order and
-/// scatter each request's sub-requests across the shard backends. A
-/// single thread, so every shard's intake sees facade requests in the
-/// same (dispatch) order.
+/// Drop an entry's per-shard plan pins. Clones the handle list out so
+/// the entry's handles lock is released before the slot reads (lock
+/// order: slot → registry → handles, never backwards).
+fn unpin_entry<T: SpElem>(b: &Backends<T>, e: &ShardEntry<T>) {
+    let handles: Vec<MatrixHandle> =
+        e.handles.lock().expect("shard entry handles poisoned").clone();
+    for (i, h) in handles.into_iter().enumerate() {
+        b.service(i).unload(h);
+    }
+}
+
+/// Dispatcher: pull admissions from the fair scheduler in WRR order
+/// (EDF within a tenant) and scatter each request's sub-requests across
+/// the shard backends. A single thread, so every shard's intake sees
+/// facade requests in the same (dispatch) order. Dispatch-time faults
+/// fire here, *before* the scatter — a killed shard is respawned by the
+/// scatter itself.
 fn run_dispatcher<T: SpElem>(
-    shards: Arc<Vec<SpmvService<T>>>,
+    backends: Arc<Backends<T>>,
     sched: Arc<Sched<T>>,
     comp: Arc<Completions<T>>,
-    tx: Sender<GatherItem>,
+    tx: Sender<GatherItem<T>>,
+    fault: Option<Arc<dyn FaultInjector>>,
 ) {
     loop {
         let (tenant, job) = {
@@ -887,72 +1241,151 @@ fn run_dispatcher<T: SpElem>(
                 if let Some((tenant, job)) = popped {
                     if let Some(log) = st.log.as_mut() {
                         log.dispatched.push(tenant);
+                        log.dispatched_tickets.push(job.ticket);
                     }
                     break (tenant, job);
                 }
                 st = sched.ready.wait(st).expect("sharded scheduler poisoned");
             }
         };
-        let DispatchJob { ticket, entry, req } = job;
-        let submitted = match req {
-            Request::Spmv { x } => {
-                submit_spmv_all(&shards, &entry, &x).map(|ts| (GatherKind::Spmv, ts, 1))
+        let DispatchJob { ticket, entry, req, submitted } = job;
+        if let Some(f) = &fault {
+            for flt in f.at_dispatch(ticket) {
+                match flt {
+                    Fault::KillShard { shard } => backends.kill(shard),
+                    Fault::Delay { millis } => {
+                        std::thread::sleep(Duration::from_millis(millis))
+                    }
+                    // Completion faults act at gather time; at dispatch
+                    // they are no-ops.
+                    Fault::DropCompletion { .. } | Fault::StallShard { .. } => {}
+                }
             }
-            Request::Batch { xs } => {
-                submit_batch_all(&shards, &entry, &xs).map(|ts| (GatherKind::Batch, ts, 1))
-            }
-            Request::Iterate { x, iters } => {
-                submit_spmv_all(&shards, &entry, &x).map(|ts| (GatherKind::Iterate, ts, iters))
-            }
+        }
+        let scattered = match req {
+            Request::Spmv { x } => submit_spmv_all(&backends, &entry, &x)
+                .map(|subs| (GatherKind::Spmv, subs, 1, ScatterPayload::Spmv(x))),
+            Request::Batch { xs } => submit_batch_all(&backends, &entry, &xs)
+                .map(|subs| (GatherKind::Batch, subs, 1, ScatterPayload::Batch(xs))),
+            Request::Iterate { x, iters } => submit_spmv_all(&backends, &entry, &x)
+                .map(|subs| (GatherKind::Iterate, subs, iters, ScatterPayload::Spmv(x))),
         };
-        match submitted {
-            Ok((kind, subtickets, iters)) => {
-                let item = GatherItem { ticket, tenant, entry, kind, subtickets, iters };
+        match scattered {
+            Ok((kind, subs, iters, payload)) => {
+                let item =
+                    GatherItem { ticket, tenant, entry, kind, subs, iters, payload, submitted };
                 if let Err(e) = tx.send(item) {
                     // Gather thread is gone (shutdown / panic): claim
                     // the orphaned sub-responses and fail the ticket.
                     let item = e.0;
-                    for (svc, t) in shards.iter().zip(item.subtickets) {
-                        let _ = svc.wait(t);
-                    }
+                    abort_subs(item.subs);
                     comp.publish(
                         item.ticket,
                         Err(format_err!("sharded gather stage is down")),
                     );
-                    sched.complete(tenant);
+                    sched.complete(tenant, elapsed_us(item.submitted));
                 }
             }
             Err(e) => {
                 // Scatter failed (e.g. the handle was evicted while the
                 // request sat in the scheduler queue).
                 comp.publish(ticket, Err(e));
-                sched.complete(tenant);
+                sched.complete(tenant, elapsed_us(submitted));
             }
         }
     }
 }
 
+/// Gather-time faults of one facade request, regrouped per shard for
+/// the recovery walk.
+#[derive(Debug, Default)]
+struct Recovery {
+    kill: HashSet<usize>,
+    dropped: HashSet<usize>,
+    stall: HashSet<usize>,
+    delay_ms: u64,
+}
+
+impl Recovery {
+    fn from_faults(faults: &[Fault]) -> Recovery {
+        let mut r = Recovery::default();
+        for f in faults {
+            match *f {
+                Fault::KillShard { shard } => {
+                    r.kill.insert(shard);
+                }
+                Fault::DropCompletion { shard } => {
+                    r.dropped.insert(shard);
+                }
+                Fault::StallShard { shard } => {
+                    r.stall.insert(shard);
+                }
+                Fault::Delay { millis } => r.delay_ms += millis,
+            }
+        }
+        r
+    }
+}
+
 /// Gather: wait each dispatched request's sub-tickets (FIFO in dispatch
 /// order), merge the per-shard partials, drive iterate feedback, and
-/// publish the response.
+/// publish the response. Gather-time faults fire per item: kills are
+/// recovered by re-scattering the lost sub-requests from the retained
+/// payload, drops by re-executing, stalls by a typed timeout.
 fn run_gather<T: SpElem>(
-    shards: Arc<Vec<SpmvService<T>>>,
+    backends: Arc<Backends<T>>,
     sched: Arc<Sched<T>>,
     comp: Arc<Completions<T>>,
-    rx: Receiver<GatherItem>,
+    rx: Receiver<GatherItem<T>>,
+    fault: Option<Arc<dyn FaultInjector>>,
+    timeout: Option<Duration>,
 ) {
-    while let Ok(GatherItem { ticket, tenant, entry, kind, subtickets, iters }) = rx.recv() {
-        let resp = match kind {
-            GatherKind::Spmv => {
-                wait_all_spmv(&shards, &subtickets).map(|p| Response::Spmv(merge_shard_runs(p)))
-            }
-            GatherKind::Batch => wait_all_batch(&shards, &subtickets)
-                .map(|p| Response::Batch(merge_shard_batches(p))),
-            GatherKind::Iterate => gather_iterate(&shards, &entry, subtickets, iters),
+    while let Ok(item) = rx.recv() {
+        let GatherItem { ticket, tenant, entry, kind, subs, iters, payload, submitted } = item;
+        let rec = match &fault {
+            Some(f) => Recovery::from_faults(&f.at_gather(ticket)),
+            None => Recovery::default(),
         };
-        sched.complete(tenant);
+        if rec.delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(rec.delay_ms));
+        }
+        for &s in &rec.kill {
+            backends.kill(s);
+        }
+        let resp = match (kind, &payload) {
+            (GatherKind::Spmv, ScatterPayload::Spmv(x)) => {
+                recover_wait_spmv(&backends, &entry, subs, &rec, timeout, x)
+                    .map(|p| Response::Spmv(merge_shard_runs(p)))
+            }
+            (GatherKind::Batch, ScatterPayload::Batch(xs)) => {
+                recover_wait_batch(&backends, &entry, subs, &rec, timeout, xs)
+                    .map(|p| Response::Batch(merge_shard_batches(p)))
+            }
+            (GatherKind::Iterate, ScatterPayload::Spmv(x)) => {
+                gather_iterate(&backends, &entry, subs, iters, Some((x, &rec)), timeout)
+            }
+            _ => Err(format_err!("internal: sharded gather payload/kind mismatch")),
+        };
+        drop(payload);
+        sched.complete(tenant, elapsed_us(submitted));
         comp.publish(ticket, resp);
     }
+}
+
+/// Submit one sub-request to backend `i`, respawning it first if it is
+/// marked dead. The returned [`SubTicket`] pins the exact service the
+/// ticket came from.
+fn submit_one<T: SpElem>(
+    b: &Backends<T>,
+    entry: &Arc<ShardEntry<T>>,
+    i: usize,
+    req: Request<T>,
+) -> Result<SubTicket<T>> {
+    b.ensure_alive(i)?;
+    let slot = b.slots[i].read().expect("shard slot poisoned");
+    let h = entry.handles.lock().expect("shard entry handles poisoned")[i];
+    let t = slot.submit(h, req)?;
+    Ok(SubTicket { svc: Arc::clone(&*slot), ticket: t, shard: i })
 }
 
 /// Scatter one SpMV: every shard reads the full input vector (row
@@ -963,62 +1396,176 @@ fn run_gather<T: SpElem>(
 /// memcpy the vector once per shard — the O(S x payload) copy the
 /// ROADMAP called out. `tests/zero_copy.rs` locks the sharing in.
 fn submit_spmv_all<T: SpElem>(
-    shards: &[SpmvService<T>],
-    entry: &ShardEntry,
+    b: &Backends<T>,
+    entry: &Arc<ShardEntry<T>>,
     x: &Arc<[T]>,
-) -> Result<Vec<Ticket>> {
-    let mut ts = Vec::with_capacity(entry.handles.len());
-    for (svc, h) in shards.iter().zip(&entry.handles) {
-        match svc.submit(*h, Request::Spmv { x: Arc::clone(x) }) {
-            Ok(t) => ts.push(t),
+) -> Result<Vec<SubTicket<T>>> {
+    let n = entry.ranges.len();
+    let mut subs = Vec::with_capacity(n);
+    for i in 0..n {
+        match submit_one(b, entry, i, Request::Spmv { x: Arc::clone(x) }) {
+            Ok(s) => subs.push(s),
             Err(e) => {
-                abort_subs(shards, ts);
+                abort_subs(subs);
                 return Err(e);
             }
         }
     }
-    Ok(ts)
+    Ok(subs)
 }
 
 /// Scatter one batch: every shard serves the whole vector set against
 /// its row range. Like [`submit_spmv_all`], the per-vector `Arc`s are
 /// shared across shards, never copied.
 fn submit_batch_all<T: SpElem>(
-    shards: &[SpmvService<T>],
-    entry: &ShardEntry,
+    b: &Backends<T>,
+    entry: &Arc<ShardEntry<T>>,
     xs: &[Arc<[T]>],
-) -> Result<Vec<Ticket>> {
-    let mut ts = Vec::with_capacity(entry.handles.len());
-    for (svc, h) in shards.iter().zip(&entry.handles) {
-        match svc.submit(*h, Request::Batch { xs: xs.to_vec() }) {
-            Ok(t) => ts.push(t),
+) -> Result<Vec<SubTicket<T>>> {
+    let n = entry.ranges.len();
+    let mut subs = Vec::with_capacity(n);
+    for i in 0..n {
+        match submit_one(b, entry, i, Request::Batch { xs: xs.to_vec() }) {
+            Ok(s) => subs.push(s),
             Err(e) => {
-                abort_subs(shards, ts);
+                abort_subs(subs);
                 return Err(e);
             }
         }
     }
-    Ok(ts)
+    Ok(subs)
 }
 
 /// A scatter failed part-way: claim the sub-responses already in flight
 /// so nothing parks forever in a shard's completion store.
-fn abort_subs<T: SpElem>(shards: &[SpmvService<T>], ts: Vec<Ticket>) {
-    for (svc, t) in shards.iter().zip(ts) {
-        let _ = svc.wait(t);
+fn abort_subs<T: SpElem>(subs: Vec<SubTicket<T>>) {
+    for s in subs {
+        let _ = s.svc.wait(s.ticket);
     }
 }
 
-/// Wait all sub-SpMVs, in shard order. Every sub-ticket is claimed even
-/// when one fails (no parked responses leak); the first error wins.
-fn wait_all_spmv<T: SpElem>(
-    shards: &[SpmvService<T>],
-    ts: &[Ticket],
+/// Wait one sub-ticket, bounded by `timeout` when configured. A
+/// sub-level timeout is re-wrapped to name the shard that wedged.
+fn wait_sub<T: SpElem>(sub: &SubTicket<T>, timeout: Option<Duration>) -> Result<Response<T>> {
+    match timeout {
+        None => sub.svc.wait(sub.ticket),
+        Some(d) => sub.svc.wait_timeout(sub.ticket, d).map_err(|e| {
+            if e.is_shard_timeout() {
+                Error::shard_timeout(Some(sub.shard), format!("shard {}: {e}", sub.shard))
+            } else {
+                e
+            }
+        }),
+    }
+}
+
+/// Wait one sub-ticket through the fault-recovery state machine:
+///
+/// * **stalled** (with a configured timeout): sleep out the bound,
+///   claim-discard the sub-response so nothing leaks, and return the
+///   typed `ShardTimeout` naming the shard. Without a timeout a stall
+///   is indistinguishable from a slow shard and is ignored.
+/// * **killed**: the sub-response died with the backend — claim-discard
+///   it, re-submit via `mk_req` (the submit respawns the dead backend),
+///   and wait the fresh sub-ticket.
+/// * **dropped**: the completion was lost in transit — claim-discard
+///   and re-execute on the (live) backend.
+///
+/// Recovery re-executes deterministic simulated work, so the recovered
+/// response is bit-identical to the fault-free one.
+fn recover_sub<T: SpElem>(
+    b: &Backends<T>,
+    entry: &Arc<ShardEntry<T>>,
+    sub: SubTicket<T>,
+    rec: &Recovery,
+    timeout: Option<Duration>,
+    mk_req: impl Fn() -> Request<T>,
+) -> Result<Response<T>> {
+    let i = sub.shard;
+    if rec.stall.contains(&i) {
+        if let Some(d) = timeout {
+            std::thread::sleep(d);
+            let _ = sub.svc.wait(sub.ticket);
+            return Err(Error::shard_timeout(
+                Some(i),
+                format!("shard {i} stalled: no sub-response within {d:?}"),
+            ));
+        }
+    }
+    if rec.kill.contains(&i) || rec.dropped.contains(&i) {
+        let _ = sub.svc.wait(sub.ticket);
+        let fresh = submit_one(b, entry, i, mk_req())?;
+        return wait_sub(&fresh, timeout);
+    }
+    wait_sub(&sub, timeout)
+}
+
+/// Wait all sub-SpMVs through fault recovery, in shard order. Every
+/// sub-ticket is claimed even when one fails (no parked responses
+/// leak); the first error wins.
+fn recover_wait_spmv<T: SpElem>(
+    b: &Backends<T>,
+    entry: &Arc<ShardEntry<T>>,
+    subs: Vec<SubTicket<T>>,
+    rec: &Recovery,
+    timeout: Option<Duration>,
+    x: &Arc<[T]>,
 ) -> Result<Vec<RunResult<T>>> {
-    let mut out = Vec::with_capacity(ts.len());
+    let mut out = Vec::with_capacity(subs.len());
     let mut err = None;
-    for (svc, t) in shards.iter().zip(ts) {
-        match svc.wait(*t).and_then(Response::into_spmv) {
+    for sub in subs {
+        let waited = recover_sub(b, entry, sub, rec, timeout, || Request::Spmv {
+            x: Arc::clone(x),
+        });
+        match waited.and_then(Response::into_spmv) {
+            Ok(r) => out.push(r),
+            Err(e) => err = err.or(Some(e)),
+        }
+    }
+    match err {
+        None => Ok(out),
+        Some(e) => Err(e),
+    }
+}
+
+/// Wait all sub-batches through fault recovery, in shard order (see
+/// [`recover_wait_spmv`]).
+fn recover_wait_batch<T: SpElem>(
+    b: &Backends<T>,
+    entry: &Arc<ShardEntry<T>>,
+    subs: Vec<SubTicket<T>>,
+    rec: &Recovery,
+    timeout: Option<Duration>,
+    xs: &[Arc<[T]>],
+) -> Result<Vec<BatchResult<T>>> {
+    let mut out = Vec::with_capacity(subs.len());
+    let mut err = None;
+    for sub in subs {
+        let waited = recover_sub(b, entry, sub, rec, timeout, || Request::Batch {
+            xs: xs.to_vec(),
+        });
+        match waited.and_then(Response::into_batch) {
+            Ok(r) => out.push(r),
+            Err(e) => err = err.or(Some(e)),
+        }
+    }
+    match err {
+        None => Ok(out),
+        Some(e) => Err(e),
+    }
+}
+
+/// Wait all sub-SpMVs, in shard order, without fault recovery (the
+/// fast paths and iterate's later waves). Every sub-ticket is claimed
+/// even when one fails; the first error wins.
+fn wait_all_spmv<T: SpElem>(
+    subs: Vec<SubTicket<T>>,
+    timeout: Option<Duration>,
+) -> Result<Vec<RunResult<T>>> {
+    let mut out = Vec::with_capacity(subs.len());
+    let mut err = None;
+    for sub in subs {
+        match wait_sub(&sub, timeout).and_then(Response::into_spmv) {
             Ok(r) => out.push(r),
             Err(e) => err = err.or(Some(e)),
         }
@@ -1031,13 +1578,13 @@ fn wait_all_spmv<T: SpElem>(
 
 /// Wait all sub-batches, in shard order (see [`wait_all_spmv`]).
 fn wait_all_batch<T: SpElem>(
-    shards: &[SpmvService<T>],
-    ts: &[Ticket],
+    subs: Vec<SubTicket<T>>,
+    timeout: Option<Duration>,
 ) -> Result<Vec<BatchResult<T>>> {
-    let mut out = Vec::with_capacity(ts.len());
+    let mut out = Vec::with_capacity(subs.len());
     let mut err = None;
-    for (svc, t) in shards.iter().zip(ts) {
-        match svc.wait(*t).and_then(Response::into_batch) {
+    for sub in subs {
+        match wait_sub(&sub, timeout).and_then(Response::into_batch) {
             Ok(b) => out.push(b),
             Err(e) => err = err.or(Some(e)),
         }
@@ -1051,25 +1598,34 @@ fn wait_all_batch<T: SpElem>(
 /// The iterate feedback loop across shards: wait the current wave,
 /// merge, accumulate totals like the single-service accumulator
 /// (breakdown then energy, in iteration order), and scatter the merged
-/// output as the next iteration's input.
+/// output as the next iteration's input. `first_wave` carries the
+/// original input and the gather-time faults: recovery applies to the
+/// first wave only (later waves were scattered after the faults fired).
 fn gather_iterate<T: SpElem>(
-    shards: &[SpmvService<T>],
-    entry: &ShardEntry,
-    mut subtickets: Vec<Ticket>,
+    b: &Backends<T>,
+    entry: &Arc<ShardEntry<T>>,
+    mut subs: Vec<SubTicket<T>>,
     iters: usize,
+    first_wave: Option<(&Arc<[T]>, &Recovery)>,
+    timeout: Option<Duration>,
 ) -> Result<Response<T>> {
     let mut total = Breakdown::default();
     let mut energy = Energy::default();
     let mut last: Option<RunResult<T>> = None;
     for iter in 0..iters {
-        let merged = merge_shard_runs(wait_all_spmv(shards, &subtickets)?);
+        let wave = std::mem::take(&mut subs);
+        let parts = match (iter, first_wave) {
+            (0, Some((x, rec))) => recover_wait_spmv(b, entry, wave, rec, timeout, x)?,
+            _ => wait_all_spmv(wave, timeout)?,
+        };
+        let merged = merge_shard_runs(parts);
         total.accumulate(&merged.breakdown);
         energy = energy.add(merged.energy);
         if iter + 1 < iters {
             // Re-wrap the gathered output once per iteration; every
             // shard's sub-request then shares that one allocation.
             let next: Arc<[T]> = Arc::from(&merged.y[..]);
-            subtickets = submit_spmv_all(shards, entry, &next)?;
+            subs = submit_spmv_all(b, entry, &next)?;
         }
         last = Some(merged);
     }
@@ -1130,6 +1686,7 @@ fn merge_shard_batches<T: SpElem>(parts: Vec<BatchResult<T>>) -> BatchResult<T> 
 
 #[cfg(test)]
 mod tests {
+    use super::super::fault::FaultPlan;
     use super::*;
     use crate::matrix::generate;
 
@@ -1380,5 +1937,123 @@ mod tests {
         assert_eq!(st.tenants[ta.index()].completed, 3);
         assert_eq!(st.tenants[tb.index()].completed, 9);
         assert_eq!(st.in_flight(), 0);
+    }
+
+    #[test]
+    fn wait_timeout_turns_a_wedged_wait_into_a_typed_error() {
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(2)
+            .start_paused(true)
+            .wait_timeout(Duration::from_millis(40))
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        let m = generate::uniform::<f64>(40, 40, 3, 8);
+        let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+        let x: Vec<f64> = (0..40).map(|i| (i % 5) as f64 - 2.0).collect();
+        let t = svc.submit(h, Request::spmv(x.clone())).unwrap();
+        // The scheduler is paused, so the request cannot complete: the
+        // configured wait timeout turns the would-be hang into a typed
+        // error instead.
+        let err = svc.wait(t).unwrap_err();
+        assert!(err.is_shard_timeout(), "want ShardTimeout, got: {err}");
+        assert_eq!(err.timed_out_shard(), None, "a facade-level timeout names no shard");
+        // The ticket survives the timeout: resume and claim it late.
+        svc.resume();
+        let run = loop {
+            match svc.wait_timeout(t, Duration::from_millis(200)) {
+                Ok(r) => break r.into_spmv().unwrap(),
+                Err(e) if e.is_shard_timeout() => continue,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        };
+        assert_eq!(run.y, m.spmv(&x));
+    }
+
+    #[test]
+    fn killed_backend_respawns_from_the_shared_cache() {
+        // Ticket 1's dispatch kills shard 1; the scatter respawns it
+        // from the shared plan cache and serves bit-identically.
+        let plan = FaultPlan::new(11).on_dispatch(1, Fault::KillShard { shard: 1 });
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(3)
+            .fault_injector(Arc::new(plan))
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        let m = generate::scale_free::<f64>(90, 90, 5, 0.6, 17);
+        let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+        let builds_before = svc.stats().plan_builds;
+        let x: Vec<f64> = (0..90).map(|i| (i % 7) as f64 - 3.0).collect();
+        let t = svc.submit(h, Request::spmv(x.clone())).unwrap();
+        let run = svc.wait(t).unwrap().into_spmv().unwrap();
+        assert_eq!(run.y, m.spmv(&x), "post-respawn gather must match the oracle");
+        let st = svc.stats();
+        assert_eq!(st.respawns, 1, "the killed backend respawned exactly once");
+        assert_eq!(
+            st.plan_builds, builds_before,
+            "respawn must re-plan through cache hits, not fresh builds"
+        );
+        // The facade stays fully serviceable after the recovery.
+        assert_eq!(svc.spmv(&h, &x).unwrap().y, m.spmv(&x));
+    }
+
+    #[test]
+    fn admission_control_sheds_typed_overloads() {
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(2)
+            .start_paused(true)
+            .max_queue(2)
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        let m = generate::uniform::<f64>(32, 32, 3, 5);
+        let h = svc.load(&m, &KernelSpec::coo_row()).unwrap();
+        let x: Vec<f64> = (0..32).map(|i| (i % 3) as f64).collect();
+        let tickets: Vec<ShardedTicket> =
+            (0..5).map(|_| svc.submit(h, Request::spmv(x.clone())).unwrap()).collect();
+        // The first two fit the queue cap; the other three shed
+        // instantly with a typed Overloaded response — no silent drops,
+        // no submit errors.
+        for t in &tickets[2..] {
+            let r = svc.wait_timeout(*t, Duration::from_secs(5)).unwrap();
+            assert!(r.is_overloaded(), "over-cap submits must shed typed");
+        }
+        svc.resume();
+        for t in &tickets[..2] {
+            let r = svc.wait_timeout(*t, Duration::from_secs(5)).unwrap().into_spmv().unwrap();
+            assert_eq!(r.y, m.spmv(&x));
+        }
+        let st = svc.stats();
+        assert_eq!(st.tenants[0].shed, 3);
+        assert_eq!(st.tenants[0].completed, 2);
+    }
+
+    #[test]
+    fn deadline_dispatch_is_edf_within_a_tenant() {
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(2)
+            .start_paused(true)
+            .record_schedule(true)
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        let m = generate::uniform::<f64>(24, 24, 3, 6);
+        let h = svc.load(&m, &KernelSpec::coo_row()).unwrap();
+        let x = vec![1.0; 24];
+        let dt = svc.default_tenant();
+        let loose = svc
+            .submit_with_deadline(dt, h, Request::spmv(x.clone()), Duration::from_secs(60))
+            .unwrap();
+        let tight = svc
+            .submit_with_deadline(dt, h, Request::spmv(x.clone()), Duration::from_millis(1))
+            .unwrap();
+        let none = svc.submit(h, Request::spmv(x.clone())).unwrap();
+        svc.resume();
+        for t in [loose, tight, none] {
+            assert_eq!(svc.wait(t).unwrap().into_spmv().unwrap().y, m.spmv(&x));
+        }
+        let log = svc.schedule_log().unwrap();
+        assert_eq!(
+            log.dispatched_tickets,
+            vec![tight.id(), loose.id(), none.id()],
+            "EDF: tightest deadline first, deadline-less last"
+        );
     }
 }

@@ -9,20 +9,61 @@
 
 use std::fmt;
 
-/// A string-backed error with an optional chain of context messages.
+/// Machine-checkable classification of an [`Error`]. Most errors are
+/// [`ErrorKind::Other`]; kinds exist only where a caller needs to make
+/// a control-flow decision (retry, re-scatter, report a wedged shard)
+/// that matching on a message string could not support.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Anything without a dedicated kind.
+    Other,
+    /// A bounded wait expired before the response arrived. `shard`
+    /// names the wedged backend shard when the waiter knows it (the
+    /// sharded gather thread does; a plain service waiter does not).
+    ShardTimeout { shard: Option<usize> },
+}
+
+/// A string-backed error with an optional chain of context messages
+/// and an optional machine-checkable [`ErrorKind`].
 pub struct Error {
     msg: String,
+    kind: ErrorKind,
 }
 
 impl Error {
     /// Build an error from anything printable.
     pub fn msg(m: impl fmt::Display) -> Error {
-        Error { msg: m.to_string() }
+        Error { msg: m.to_string(), kind: ErrorKind::Other }
     }
 
-    /// Prepend a context message (outermost first, like anyhow's chain).
+    /// Build a typed [`ErrorKind::ShardTimeout`]: a wait deadline
+    /// expired. Pass `Some(shard)` when the wedged backend is known.
+    pub fn shard_timeout(shard: Option<usize>, m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string(), kind: ErrorKind::ShardTimeout { shard } }
+    }
+
+    /// The machine-checkable classification of this error.
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    /// True when this error is a timed-out wait (any shard).
+    pub fn is_shard_timeout(&self) -> bool {
+        matches!(self.kind, ErrorKind::ShardTimeout { .. })
+    }
+
+    /// The wedged shard named by a [`ErrorKind::ShardTimeout`], if any.
+    pub fn timed_out_shard(&self) -> Option<usize> {
+        match self.kind {
+            ErrorKind::ShardTimeout { shard } => shard,
+            ErrorKind::Other => None,
+        }
+    }
+
+    /// Prepend a context message (outermost first, like anyhow's
+    /// chain). The kind survives wrapping.
     pub fn context(self, c: impl fmt::Display) -> Error {
-        Error { msg: format!("{c}: {}", self.msg) }
+        Error { msg: format!("{c}: {}", self.msg), kind: self.kind }
     }
 }
 
@@ -42,13 +83,13 @@ impl std::error::Error for Error {}
 
 impl From<String> for Error {
     fn from(s: String) -> Error {
-        Error { msg: s }
+        Error::msg(s)
     }
 }
 
 impl From<&str> for Error {
     fn from(s: &str) -> Error {
-        Error { msg: s.to_string() }
+        Error::msg(s)
     }
 }
 
@@ -152,6 +193,22 @@ mod tests {
         let o: Option<u32> = None;
         assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
         assert_eq!(Some(3u32).with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn shard_timeout_kind_survives_context() {
+        let e = Error::shard_timeout(Some(3), "shard 3 did not answer");
+        assert!(e.is_shard_timeout());
+        assert_eq!(e.timed_out_shard(), Some(3));
+        assert_eq!(e.kind(), ErrorKind::ShardTimeout { shard: Some(3) });
+        let wrapped = e.context("gather");
+        assert!(wrapped.is_shard_timeout(), "context must preserve the kind");
+        assert_eq!(wrapped.to_string(), "gather: shard 3 did not answer");
+        // Plain errors stay Other and name no shard.
+        let plain = Error::msg("boom");
+        assert!(!plain.is_shard_timeout());
+        assert_eq!(plain.timed_out_shard(), None);
+        assert_eq!(Error::shard_timeout(None, "x").timed_out_shard(), None);
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod error;
 pub mod rng;
 pub mod json;
 
-pub use error::{Context, Error, Result};
+pub use error::{Context, Error, ErrorKind, Result};
 
 /// Integer ceiling division.
 #[inline]

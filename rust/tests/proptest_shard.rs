@@ -11,10 +11,17 @@
 //! * gathering a `ShardedService`'s per-shard outputs reconstructs the
 //!   host-oracle SpMV bit-exactly.
 
-use sparsep::coordinator::{plan_shards, KernelSpec, ShardedService, ShardedServiceBuilder};
+//! * killing a random shard backend respawns it from the shared plan
+//!   cache (no plan-build leak) and the post-recovery gather still
+//!   equals the oracle.
+
+use sparsep::coordinator::{
+    plan_shards, Fault, FaultPlan, KernelSpec, Request, ShardedService, ShardedServiceBuilder,
+};
 use sparsep::matrix::CooMatrix;
 use sparsep::pim::PimSystem;
 use sparsep::util::rng::Rng;
+use std::sync::Arc;
 
 /// Random sparse matrix with rng-chosen shape and density (integer
 /// values: sums are exact in f64, so bit-equality with the host oracle
@@ -156,5 +163,52 @@ fn prop_sharded_gather_reconstructs_oracle() {
             }
             assert_eq!(it.last.y, want, "{tag}: iterate");
         }
+    }
+}
+
+/// PROPERTY: kill-one-shard-and-recover — for random matrices and a
+/// random target shard killed at the first ticket's dispatch, the
+/// backend respawns from the shared plan cache (exactly one respawn,
+/// zero new plan builds — the cache already holds every slice's plan),
+/// the post-recovery gather is bit-identical to the host oracle, and
+/// the facade stays fully serviceable.
+#[test]
+fn prop_killed_shard_recovers_bit_exactly() {
+    let mut rng = Rng::new(0xDEAD_BEA7);
+    for trial in 0..20usize {
+        let m = random_matrix(&mut rng);
+        let shards = 1 + rng.gen_range(5);
+        // Matrices with fewer rows than shards use fewer shards: aim
+        // the kill at a shard that actually exists.
+        let effective = plan_shards(&m, shards).len();
+        let target = rng.gen_range(effective);
+        let seed = 0x5EED ^ trial as u64;
+        let tag = format!(
+            "trial {trial}: {}x{} nnz={} shards={shards} effective={effective} target={target} seed={seed:#x}",
+            m.nrows(),
+            m.ncols(),
+            m.nnz()
+        );
+        let plan = FaultPlan::new(seed).on_dispatch(1, Fault::KillShard { shard: target });
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(shards)
+            .fault_injector(Arc::new(plan))
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+        assert_eq!(svc.shard_ranges(&h).unwrap().len(), effective, "{tag}: effective shards");
+        let builds_before = svc.stats().plan_builds;
+        let x: Vec<f64> =
+            (0..m.ncols()).map(|i| ((i * 5 + trial) % 13) as f64 - 6.0).collect();
+        let t = svc.submit(h, Request::spmv(x.clone())).unwrap();
+        let run = svc.wait(t).unwrap().into_spmv().unwrap();
+        assert_eq!(run.y, m.spmv(&x), "{tag}: post-recovery gather vs oracle");
+        let st = svc.stats();
+        assert_eq!(st.respawns, 1, "{tag}: exactly one respawn");
+        assert_eq!(
+            st.plan_builds, builds_before,
+            "{tag}: respawn must re-load through cache hits, never leak plan builds"
+        );
+        assert_eq!(svc.spmv(&h, &x).unwrap().y, m.spmv(&x), "{tag}: facade after recovery");
     }
 }

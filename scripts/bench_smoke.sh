@@ -15,6 +15,12 @@
 #   BENCH_hotpath.json      hot-path overhaul: persistent pooled engine
 #                           vs legacy spawn-per-wave threading vs serial
 #                           for spmv/batch/iterate at 1 and 4 shards
+#   BENCH_resilience.json   resilience tier: kill-per-request chaos
+#                           stream vs fault-free (recovery overhead,
+#                           verified bit-identical; the chaos seed is
+#                           printed for exact replay) + typed shed rate
+#                           and served-latency percentiles under a
+#                           per-tenant admission cap
 #   BENCH_tune.json         autotuner search: calibrated-vs-heuristic
 #                           wall-clock per (matrix, batch) cell; also
 #                           writes calibration.json, the table
@@ -36,6 +42,10 @@
 #   BENCH_HOTPATH_ROWS (default 20000)  hotpath-bench matrix dimension
 #   BENCH_HOTPATH_ITERS (default 80)    hotpath iterate depth (waves)
 #   BENCH_HOTPATH_BATCH (default 16)    hotpath batch width
+#   BENCH_RESILIENCE_ROWS (default 20000)  resilience matrix dimension
+#   BENCH_RESILIENCE_SHARDS (default 4)    resilience shard count
+#   BENCH_RESILIENCE_CAP (default 4)       per-tenant admission cap
+#   BENCH_RESILIENCE_OFFERED (default 16)  offered load (> cap sheds)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -93,6 +103,19 @@ cargo run --release -- bench-hotpath \
   --out BENCH_hotpath.json
 
 cat BENCH_hotpath.json
+
+cargo run --release -- bench-resilience \
+  --rows "${BENCH_RESILIENCE_ROWS:-20000}" \
+  --deg 8 \
+  --requests "${BENCH_REQUESTS:-8}" \
+  --shards "${BENCH_RESILIENCE_SHARDS:-4}" \
+  --dpus "${BENCH_SHARD_DPUS:-64}" \
+  --threads "$THREADS" \
+  --max-queue "${BENCH_RESILIENCE_CAP:-4}" \
+  --offered "${BENCH_RESILIENCE_OFFERED:-16}" \
+  --out BENCH_resilience.json
+
+cat BENCH_resilience.json
 
 # --quick = mini-suite smoke search (seconds). BENCH_TUNE_FULL=1 runs
 # the paper-scale search instead (minutes).

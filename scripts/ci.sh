@@ -42,6 +42,18 @@ echo "== autotuner: calibration suite + quick search gate =="
 cargo test -q --test calibration
 cargo run --release -- tune --quick --out calibration.json --report BENCH_tune.json
 
+# Resilience gates (PR 7): the chaos suite drives every fault scenario
+# (kill-at-dispatch / kill-at-gather / dropped completion / delayed
+# stage) across all request shapes, both engines and shard counts
+# {1,2,3,5}, asserting the gathered outputs stay bit-identical to the
+# fault-free oracle, that seeded fault plans replay exactly, that
+# floods shed as typed Overloaded without starving other tenants, and
+# that a stalled shard times out naming itself. Same deliberate
+# redundancy: it already ran in the unfiltered tier-1 above, but the
+# named re-run keeps the gate visible.
+echo "== resilience: chaos equivalence suite =="
+cargo test -q --test chaos_equivalence
+
 echo "== lint: cargo clippy --all-targets (warnings are errors) =="
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings

@@ -1,0 +1,6 @@
+fn main() {
+    // Declare `--cfg loom` (set by scripts/analyze.sh for the model
+    // suite) so `unexpected_cfgs` stays quiet under `-D warnings` on
+    // rustc >= 1.80; older cargos ignore unknown build-script output.
+    println!("cargo:rustc-check-cfg=cfg(loom)");
+}

@@ -30,7 +30,7 @@ use crate::matrix::generate;
 use crate::pim::{PimConfig, PimSystem};
 use crate::util::json::{num, obj, s};
 use crate::util::{Context, Result};
-use std::sync::Arc;
+use crate::util::sync::Arc;
 use std::time::Instant;
 
 /// Knobs for [`run`] (CLI flags of `sparsep bench-resilience`).

@@ -25,7 +25,7 @@ use crate::matrix::generate;
 use crate::pim::{PimConfig, PimSystem};
 use crate::util::json::{num, obj, s};
 use crate::util::{Context, Result};
-use std::sync::Arc;
+use crate::util::sync::Arc;
 use std::time::Instant;
 
 /// Knobs for [`run`] (CLI flags of `sparsep bench-service`).
@@ -138,9 +138,9 @@ pub fn run(opts: &ServiceBenchOpts) -> Result<()> {
             // across requests and blocks. Payload Arcs are built before
             // the clock starts (request payloads are shared slices —
             // submitting clones references, not vector data).
-            let owned: Vec<Vec<std::sync::Arc<[f64]>>> = payloads
+            let owned: Vec<Vec<Arc<[f64]>>> = payloads
                 .iter()
-                .map(|xs| xs.iter().map(|v| std::sync::Arc::from(&v[..])).collect())
+                .map(|xs| xs.iter().map(|v| Arc::from(&v[..])).collect())
                 .collect();
             let t1 = Instant::now();
             let tickets: Vec<_> = owned

@@ -107,9 +107,9 @@ pub fn run(opts: &ShardBenchOpts) -> Result<()> {
         for _ in 0..opts.samples {
             // Payload Arcs built outside the clock; the facade's scatter
             // shares them across shards instead of copying per shard.
-            let owned: Vec<Vec<std::sync::Arc<[f64]>>> = payloads
+            let owned: Vec<Vec<crate::util::sync::Arc<[f64]>>> = payloads
                 .iter()
-                .map(|xs| xs.iter().map(|v| std::sync::Arc::from(&v[..])).collect())
+                .map(|xs| xs.iter().map(|v| crate::util::sync::Arc::from(&v[..])).collect())
                 .collect();
             let t0 = Instant::now();
             let tickets: Vec<_> = owned

@@ -212,13 +212,13 @@ fn block_policy_from_args(args: &Args) -> Result<BlockPolicy> {
 /// Load the table behind `--calibration file.json`, if given. A path
 /// that does not load (missing file, corrupt checksum) is a hard error
 /// rather than a silent fallback to the heuristics.
-fn calibration_from_args(args: &Args) -> Result<Option<std::sync::Arc<CalibrationTable>>> {
+fn calibration_from_args(args: &Args) -> Result<Option<crate::util::sync::Arc<CalibrationTable>>> {
     match args.get("calibration") {
         None => Ok(None),
         Some(path) => {
             let t = CalibrationTable::load(std::path::Path::new(path))
                 .with_context(|| format!("load --calibration {path}"))?;
-            Ok(Some(std::sync::Arc::new(t)))
+            Ok(Some(crate::util::sync::Arc::new(t)))
         }
     }
 }
@@ -471,7 +471,7 @@ fn serve_sharded(args: &Args) -> Result<()> {
         .queue_depth(args.get_usize("queue-depth", DEFAULT_QUEUE_DEPTH)?)
         .tenants(tenants.clone());
     if let Some(table) = &calibration {
-        builder = builder.calibration(std::sync::Arc::clone(table));
+        builder = builder.calibration(crate::util::sync::Arc::clone(table));
     }
     // `--shards auto` asks the calibration table for the shard count
     // (no table / no entry: the builder's default stands).
@@ -507,7 +507,7 @@ fn serve_sharded(args: &Args) -> Result<()> {
             plan.len(),
             requests
         );
-        builder = builder.fault_injector(std::sync::Arc::new(plan));
+        builder = builder.fault_injector(crate::util::sync::Arc::new(plan));
     }
     let svc: ShardedService<f64> = builder.build(PimSystem::new(cfg.clone())?)?;
     let stripes = args.get_usize("stripes", 8)?;
@@ -1116,12 +1116,12 @@ fn bench_coordinator(args: &Args) -> Result<()> {
     // system `a`): the O(nnz) fingerprint + plan build stay outside both
     // timed regions, so neither engine's wall clock includes planning
     // and the serial/threaded comparison is symmetric.
-    let cache = std::sync::Arc::new(crate::coordinator::PlanCache::<f64>::new());
+    let cache = crate::util::sync::Arc::new(crate::coordinator::PlanCache::<f64>::new());
     cache.plan(&SpmvExecutor::new(sys.clone()), &spec, &a)?;
     let wall = |engine: Engine| -> Result<(f64, usize)> {
         let svc: SpmvService<f64> = ServiceBuilder::new()
             .engine(engine)
-            .build_with_cache(sys.clone(), std::sync::Arc::clone(&cache))?;
+            .build_with_cache(sys.clone(), crate::util::sync::Arc::clone(&cache))?;
         let t0 = std::time::Instant::now();
         let r = crate::apps::cg::solve(&svc, &spec, &a, &b, 0.0, iters)?;
         let dt = t0.elapsed().as_secs_f64();

@@ -26,8 +26,8 @@ use super::spec::KernelSpec;
 use super::SpmvExecutor;
 use crate::matrix::{CooMatrix, SpElem};
 use crate::util::Result;
+use crate::util::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
 
 /// Default capacity of [`PlanCache::new`], in plans.
 pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 32;
@@ -219,7 +219,7 @@ impl<T: SpElem> PlanCache<T> {
         inner.builds = 0;
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, Inner<T>> {
+    fn lock(&self) -> MutexGuard<'_, Inner<T>> {
         self.inner.lock().expect("plan cache poisoned")
     }
 

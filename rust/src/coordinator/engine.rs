@@ -244,14 +244,20 @@ impl ExecutionEngine for PooledEngine {
     }
 }
 
-use std::sync::Mutex;
+use crate::util::sync::Mutex;
 
 /// The process-wide worker pools behind [`PooledEngine`].
-mod pool {
+///
+/// `pub(crate)` (not private) so the `cfg(loom)` verification module
+/// (`coordinator::verify`) can drive a *local* pool — spawned, drained,
+/// shut down and joined inside one loom model iteration — through the
+/// exact production wave protocol.
+pub(crate) mod pool {
+    use crate::util::sync::atomic::{AtomicUsize, Ordering};
+    use crate::util::sync::{thread, Arc, Condvar, Mutex};
     use std::collections::{HashMap, VecDeque};
     use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::{Arc, Condvar, Mutex, OnceLock};
+    use std::sync::OnceLock;
 
     /// Lifetime-erased pointer to a wave's per-index task. The submitter
     /// blocks inside [`WorkerPool::run_wave`] until every index of its
@@ -270,8 +276,21 @@ mod pool {
     unsafe impl Send for TaskPtr {}
     unsafe impl Sync for TaskPtr {}
 
+    /// # Safety
+    ///
+    /// `data` must be the erasure of a live `&F` (produced by
+    /// [`WorkerPool::run_wave`]) and must stay live for the whole call.
+    /// The wave protocol guarantees it: the submitter that owns the
+    /// closure blocks in `run_wave` until every claimed index has
+    /// completed, and no thread calls through a [`TaskPtr`] without
+    /// first claiming a not-yet-completed index.
     unsafe fn call_task<F: Fn(usize) + Sync>(data: *const (), i: usize) {
-        (*(data as *const F))(i)
+        // SAFETY: `data` was erased from `&F` in `run_wave` (same `F`:
+        // the function pointer is monomorphized alongside the erasure),
+        // and the caller guarantees the pointee is still live, so the
+        // cast restores the original shared reference.
+        let f = unsafe { &*(data as *const F) };
+        f(i)
     }
 
     /// One wave of `n` indexed work items shared between the submitting
@@ -314,6 +333,11 @@ mod pool {
                 // panicked index leaves its result slot unwritten, but
                 // the submitter re-raises before reading any slot, so a
                 // broken invariant is never observed.)
+                // SAFETY: this thread just claimed index `i` and has
+                // not yet counted it completed, so the submitter is
+                // still blocked in `run_wave` and the erased closure
+                // behind `task.data` is live; `task.call` was
+                // monomorphized for the same closure type at erasure.
                 let outcome = catch_unwind(AssertUnwindSafe(|| unsafe {
                     (self.task.call)(self.task.data, i)
                 }));
@@ -335,29 +359,56 @@ mod pool {
         }
     }
 
+    /// The wave queue plus the shutdown flag, under one lock.
+    struct PoolQueue {
+        waves: VecDeque<Arc<Wave>>,
+        /// Set by [`WorkerPool::shutdown`]: workers keep serving waves
+        /// with unclaimed indices, and exit (instead of parking) once
+        /// none remain. The process-wide pools never set this; local
+        /// pools (unit tests, Miri, the loom models) must, so every
+        /// worker thread terminates and can be joined.
+        shutdown: bool,
+    }
+
     /// A set of persistent workers plus the queue of in-flight waves.
     /// Multiple waves may be in flight at once (concurrent services);
     /// workers always serve the oldest wave that still has unclaimed
     /// indices.
-    pub(super) struct WorkerPool {
-        queue: Mutex<VecDeque<Arc<Wave>>>,
+    pub(crate) struct WorkerPool {
+        queue: Mutex<PoolQueue>,
         work_ready: Condvar,
     }
 
     impl WorkerPool {
-        fn with_workers(workers: usize) -> Arc<WorkerPool> {
+        /// Build a pool and spawn its `workers` threads, returning the
+        /// pool plus the workers' join handles. [`global`] drops the
+        /// handles (process-lifetime pools are never torn down); local
+        /// pools keep them and join after [`WorkerPool::shutdown`].
+        pub(crate) fn with_workers(
+            workers: usize,
+        ) -> (Arc<WorkerPool>, Vec<thread::JoinHandle<()>>) {
             let pool = Arc::new(WorkerPool {
-                queue: Mutex::new(VecDeque::new()),
+                queue: Mutex::new(PoolQueue { waves: VecDeque::new(), shutdown: false }),
                 work_ready: Condvar::new(),
             });
-            for k in 0..workers {
-                let p = Arc::clone(&pool);
-                std::thread::Builder::new()
-                    .name(format!("sparsep-pool{workers}-w{k}"))
-                    .spawn(move || p.worker_loop())
-                    .expect("spawn pool worker");
-            }
-            pool
+            let handles = (0..workers)
+                .map(|k| {
+                    let p = Arc::clone(&pool);
+                    thread::spawn_named(&format!("sparsep-pool{workers}-w{k}"), move || {
+                        p.worker_loop()
+                    })
+                })
+                .collect();
+            (pool, handles)
+        }
+
+        /// Ask every worker to exit once no queued wave has unclaimed
+        /// indices. In-flight waves still complete: `run_wave` helps
+        /// drain and never depends on any worker existing.
+        #[cfg_attr(not(test), allow(dead_code))] // unit tests, Miri and the cfg(loom) models
+        pub(crate) fn shutdown(&self) {
+            self.queue.lock().expect("pool queue poisoned").shutdown = true;
+            self.work_ready.notify_all();
         }
 
         fn worker_loop(&self) {
@@ -366,20 +417,26 @@ mod pool {
                     let mut q = self.queue.lock().expect("pool queue poisoned");
                     loop {
                         if let Some(w) =
-                            q.iter().find(|w| w.next.load(Ordering::Relaxed) < w.n)
+                            q.waves.iter().find(|w| w.next.load(Ordering::Relaxed) < w.n)
                         {
-                            break Arc::clone(w);
+                            break Some(Arc::clone(w));
+                        }
+                        if q.shutdown {
+                            break None;
                         }
                         q = self.work_ready.wait(q).expect("pool queue poisoned");
                     }
                 };
-                wave.drain();
+                match wave {
+                    Some(wave) => wave.drain(),
+                    None => return,
+                }
             }
         }
 
         /// Publish one wave, help drain it, and block until every index
         /// has been computed. On return no thread holds the task pointer.
-        pub(super) fn run_wave<F: Fn(usize) + Sync>(&self, n: usize, task: &F) {
+        pub(crate) fn run_wave<F: Fn(usize) + Sync>(&self, n: usize, task: &F) {
             debug_assert!(n > 0);
             let wave = Arc::new(Wave {
                 task: TaskPtr { data: task as *const F as *const (), call: call_task::<F> },
@@ -390,7 +447,7 @@ mod pool {
                 done_cv: Condvar::new(),
                 panic: Mutex::new(None),
             });
-            self.queue.lock().expect("pool queue poisoned").push_back(Arc::clone(&wave));
+            self.queue.lock().expect("pool queue poisoned").waves.push_back(Arc::clone(&wave));
             self.work_ready.notify_all();
             // Help drain our own wave: a small wave finishes on this
             // thread without a context switch, and even a fully busy
@@ -410,8 +467,8 @@ mod pool {
             // pointer again.)
             {
                 let mut q = self.queue.lock().expect("pool queue poisoned");
-                if let Some(pos) = q.iter().position(|w| Arc::ptr_eq(w, &wave)) {
-                    q.remove(pos);
+                if let Some(pos) = q.waves.iter().position(|w| Arc::ptr_eq(w, &wave)) {
+                    q.waves.remove(pos);
                 }
             }
             // A task panicked (on whichever thread ran it): re-raise on
@@ -444,7 +501,11 @@ mod pool {
             let mut map = registry.lock().expect("pool registry poisoned");
             Arc::clone(map.entry(workers).or_default())
         };
-        Arc::clone(cell.get_or_init(|| WorkerPool::with_workers(workers)))
+        Arc::clone(cell.get_or_init(|| {
+            // Process-lifetime pool: the worker handles are dropped
+            // (detached) — these workers are deliberately never joined.
+            WorkerPool::with_workers(workers).0
+        }))
     }
 }
 
@@ -594,8 +655,8 @@ mod tests {
 
     #[test]
     fn threaded_actually_uses_multiple_threads() {
+        use crate::util::sync::Mutex;
         use std::collections::HashSet;
-        use std::sync::Mutex;
         let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
         // Per-item work must be slow enough that one worker cannot
         // drain the whole range before the others are even scheduled
@@ -649,8 +710,8 @@ mod tests {
 
     #[test]
     fn pooled_reuses_workers_across_waves() {
+        use crate::util::sync::Mutex;
         use std::collections::HashSet;
-        use std::sync::Mutex;
         // Several waves on one engine: the union of worker threads ever
         // seen is capped at the pool size, where spawn-per-wave
         // threading would mint fresh threads every wave. (A union bound
@@ -708,6 +769,54 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn taskptr_send_call_collect_across_threads() {
+        // The Miri slice (scripts/analyze.sh runs `cargo miri test ..
+        // taskptr`): a *local* pool — its workers shut down and joined
+        // at the end, since Miri rejects leaked threads — exercises the
+        // full TaskPtr protocol: lifetime-erase the closure, send it to
+        // workers, call through the erased fn pointer from several
+        // threads, collect results by index, retire the wave.
+        let (pool, handles) = pool::WorkerPool::with_workers(2);
+        for n in [1usize, 2, 7] {
+            let slots: Vec<Mutex<Option<usize>>> = (0..n).map(|_| Mutex::new(None)).collect();
+            let task = |i: usize| {
+                *slots[i].lock().expect("pool result slot poisoned") = Some(i * 3 + 1);
+            };
+            pool.run_wave(n, &task);
+            let got: Vec<usize> = slots
+                .into_iter()
+                .map(|s| s.into_inner().unwrap().expect("missed index"))
+                .collect();
+            assert_eq!(got, (0..n).map(|i| i * 3 + 1).collect::<Vec<_>>(), "n={n}");
+        }
+        pool.shutdown();
+        for h in handles {
+            h.join().expect("pool worker panicked");
+        }
+    }
+
+    #[test]
+    fn taskptr_panic_payload_reraises_on_submitter() {
+        // Same Miri slice, unhappy path: a panicking task is caught in
+        // the wave, the wave still completes and retires (no dangling
+        // TaskPtr stays queued), and the payload re-raises on the
+        // submitter — after which the pool shuts down cleanly.
+        let (pool, handles) = pool::WorkerPool::with_workers(1);
+        let slots: Vec<Mutex<Option<usize>>> = (0..4).map(|_| Mutex::new(None)).collect();
+        let task = |i: usize| {
+            assert!(i != 2, "injected taskptr failure");
+            *slots[i].lock().expect("pool result slot poisoned") = Some(i);
+        };
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run_wave(4, &task)));
+        assert!(outcome.is_err(), "the task panic must re-raise on the submitter");
+        pool.shutdown();
+        for h in handles {
+            h.join().expect("a pool worker died: task panics must never unwind a worker");
+        }
     }
 
     #[test]

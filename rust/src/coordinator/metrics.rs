@@ -344,7 +344,7 @@ pub struct LatencySnapshot {
 pub struct TenantStats {
     /// Tenant name (interned: shares the scheduler's `Arc<str>`, so
     /// snapshotting stats allocates no strings).
-    pub name: std::sync::Arc<str>,
+    pub name: crate::util::sync::Arc<str>,
     /// Weighted-round-robin share (dispatches per scheduling cycle).
     pub weight: usize,
     /// In-flight quota (`usize::MAX` = unlimited).

@@ -83,6 +83,8 @@ pub mod service;
 pub mod shard;
 pub mod spec;
 pub mod tuner;
+#[cfg(loom)]
+pub mod verify;
 
 pub use cache::PlanCache;
 pub use calibration::{CalibrationEntry, CalibrationTable};

@@ -69,12 +69,12 @@ use crate::kernels::DpuKernelOutput;
 use crate::matrix::SpElem;
 use crate::pim::Energy;
 use crate::util::Result;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use crate::util::sync::thread::{spawn_named, JoinHandle};
+use crate::util::sync::{Arc, Condvar, Mutex};
 use std::collections::{HashMap, HashSet};
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 
 /// Inter-stage hand-off depth: each channel between pipeline stages
 /// holds this many in-flight block messages (double buffering: one
@@ -259,6 +259,7 @@ impl<T: SpElem> Completions<T> {
     /// instead of hanging on a wedged publisher. The ticket stays
     /// registered — a later `wait`/`try_wait` can still claim the
     /// response if it eventually arrives.
+    #[cfg(not(loom))]
     pub(crate) fn wait_timeout(
         &self,
         ticket: u64,
@@ -288,6 +289,50 @@ impl<T: SpElem> Completions<T> {
                 .wait_timeout(state, deadline - now)
                 .expect("completion store poisoned");
             state = st;
+        }
+    }
+
+    /// Loom twin of `wait_timeout`: loom's condvar has no virtual clock —
+    /// its `wait_timeout` nondeterministically explores the timed-out
+    /// branch instead of measuring time. Treat any timed-out wake as
+    /// deadline expiry, but only after one final claim re-check so a
+    /// publish that raced the "timeout" is never lost (the property the
+    /// model in rust/tests/loom_models.rs asserts).
+    #[cfg(loom)]
+    pub(crate) fn wait_timeout(
+        &self,
+        ticket: u64,
+        timeout: std::time::Duration,
+    ) -> Result<Response<T>> {
+        let mut state = self.state.lock().expect("completion store poisoned");
+        loop {
+            if let Some(resp) = state.done.remove(&ticket) {
+                state.pending.remove(&ticket);
+                return resp;
+            }
+            if !state.pending.contains(&ticket) {
+                return Err(format_err!(
+                    "unknown ticket {ticket} (never submitted here, or already waited on)"
+                ));
+            }
+            let (st, res) = self
+                .ready
+                .wait_timeout(state, timeout)
+                .expect("completion store poisoned");
+            state = st;
+            if res.timed_out() {
+                // Final re-check under the lock: a publish that landed
+                // between the wake and this point must win over the
+                // timeout error.
+                if let Some(resp) = state.done.remove(&ticket) {
+                    state.pending.remove(&ticket);
+                    return resp;
+                }
+                return Err(crate::util::Error::shard_timeout(
+                    None,
+                    format!("ticket {ticket} not completed within {timeout:?}"),
+                ));
+            }
         }
     }
 
@@ -366,30 +411,21 @@ impl<T: SpElem> RequestQueue<T> {
         let completions = Arc::new(Completions::new());
 
         let comp1 = Arc::clone(&completions);
-        let h1 = std::thread::Builder::new()
-            .name("spmv-svc-prep".into())
-            .spawn(move || {
-                let _failsafe = StageGuard { comp: Arc::clone(&comp1), stage: "prep" };
-                stage_prep(rx_in, tx_blk, rx_fb, tx_rec, comp1)
-            })
-            .expect("spawn service prep stage");
+        let h1 = spawn_named("spmv-svc-prep", move || {
+            let _failsafe = StageGuard { comp: Arc::clone(&comp1), stage: "prep" };
+            stage_prep(rx_in, tx_blk, rx_fb, tx_rec, comp1)
+        });
         let exec2 = exec.clone();
         let comp2 = Arc::clone(&completions);
-        let h2 = std::thread::Builder::new()
-            .name("spmv-svc-kernel".into())
-            .spawn(move || {
-                let _failsafe = StageGuard { comp: comp2, stage: "kernel" };
-                stage_kernel(exec2, rx_blk, tx_mrg)
-            })
-            .expect("spawn service kernel stage");
+        let h2 = spawn_named("spmv-svc-kernel", move || {
+            let _failsafe = StageGuard { comp: comp2, stage: "kernel" };
+            stage_kernel(exec2, rx_blk, tx_mrg)
+        });
         let comp3 = Arc::clone(&completions);
-        let h3 = std::thread::Builder::new()
-            .name("spmv-svc-merge".into())
-            .spawn(move || {
-                let _failsafe = StageGuard { comp: Arc::clone(&comp3), stage: "merge" };
-                stage_merge(exec, rx_mrg, tx_fb, rx_rec, comp3)
-            })
-            .expect("spawn service merge stage");
+        let h3 = spawn_named("spmv-svc-merge", move || {
+            let _failsafe = StageGuard { comp: Arc::clone(&comp3), stage: "merge" };
+            stage_merge(exec, rx_mrg, tx_fb, rx_rec, comp3)
+        });
 
         RequestQueue { intake: Some(tx_in), completions, handles: vec![h1, h2, h3] }
     }
@@ -580,13 +616,13 @@ fn stage_kernel<T: SpElem>(
 }
 
 /// How many spare buffers [`BufferPool`] keeps per output length.
-const BUFFER_POOL_PER_LEN: usize = 8;
+pub(crate) const BUFFER_POOL_PER_LEN: usize = 8;
 
 /// How many distinct output lengths [`BufferPool`] retains at once. A
 /// long-lived service sees a new length per distinct matrix row count
 /// (load/unload churn, multi-tenant); without this cap the pool would
 /// pin up to [`BUFFER_POOL_PER_LEN`] dead buffers per length forever.
-const BUFFER_POOL_LENS: usize = 8;
+pub(crate) const BUFFER_POOL_LENS: usize = 8;
 
 /// Free-list of merge-output buffers keyed by length, local to the
 /// merge stage (single-threaded: no locks). Iterate payloads are the
@@ -598,17 +634,19 @@ const BUFFER_POOL_LENS: usize = 8;
 /// with no allocation per iteration. Keying is by vector length: one
 /// request's batch width only decides how many same-length buffers are
 /// in flight at once, which the per-length cap bounds.
-struct BufferPool<T: SpElem> {
+/// (`pub(crate)` so the loom model in [`super::verify`] can drive the
+/// stage-1 ↔ stage-3 recycle protocol against the real pool.)
+pub(crate) struct BufferPool<T: SpElem> {
     free: HashMap<usize, Vec<Vec<T>>>,
 }
 
 impl<T: SpElem> BufferPool<T> {
-    fn new() -> BufferPool<T> {
+    pub(crate) fn new() -> BufferPool<T> {
         BufferPool { free: HashMap::new() }
     }
 
     /// A zeroed buffer of `len` elements, recycled when available.
-    fn take_zeroed(&mut self, len: usize) -> Vec<T> {
+    pub(crate) fn take_zeroed(&mut self, len: usize) -> Vec<T> {
         match self.free.get_mut(&len).and_then(Vec::pop) {
             Some(mut buf) => {
                 buf.fill(T::zero());
@@ -623,7 +661,7 @@ impl<T: SpElem> BufferPool<T> {
     /// [`BUFFER_POOL_LENS`] distinct lengths; anything beyond is simply
     /// dropped, so the pool's footprint cannot grow with the number of
     /// matrix shapes a long-lived service ever iterates).
-    fn put(&mut self, buf: Vec<T>) {
+    pub(crate) fn put(&mut self, buf: Vec<T>) {
         let len = buf.len();
         if let Some(list) = self.free.get_mut(&len) {
             if list.len() < BUFFER_POOL_PER_LEN {
@@ -777,6 +815,97 @@ mod tests {
         let e = comp.wait_timeout(1, std::time::Duration::from_secs(60)).unwrap_err();
         assert!(t0.elapsed() < std::time::Duration::from_secs(10), "must not sleep");
         assert_eq!(e.to_string(), "already failed");
+    }
+
+    #[test]
+    fn notify_before_wait_is_never_missed() {
+        // Missed-notify regression (paused-waiter shape): the publisher
+        // fires notify_all while nobody is waiting yet — e.g. a paused
+        // scheduler thread that only reaches wait_timeout after its
+        // ticket already completed. Because the condvar wait is
+        // predicate-guarded (the done-map is checked under the lock
+        // BEFORE the first wait and after every wake), the stale notify
+        // is irrelevant: the waiter must claim immediately rather than
+        // block for the full bound.
+        let comp: Completions<f64> = Completions::new();
+        comp.register(3);
+        comp.publish(3, Ok(Response::Spmv(RunResult {
+            y: vec![2.5],
+            breakdown: Breakdown::default(),
+            stats: Default::default(),
+            energy: Energy::default(),
+        })));
+        // The notify above is long gone by the time this waiter arrives.
+        let t0 = std::time::Instant::now();
+        let r = comp.wait_timeout(3, std::time::Duration::from_secs(60)).unwrap();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "predicate-guarded wait must claim a pre-published response without sleeping"
+        );
+        match r {
+            Response::Spmv(run) => assert_eq!(run.y, vec![2.5]),
+            other => panic!("unexpected response kind {:?}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn foreign_publish_wakes_but_does_not_satisfy_the_predicate() {
+        // The condvar is shared by every ticket, so a publish for ticket
+        // A wakes a waiter on ticket B. Predicate guarding means that
+        // wake must neither mis-claim A's response nor end B's wait
+        // early: B still times out with the typed error, and A's
+        // response stays claimable afterwards.
+        let comp: Arc<Completions<f64>> = Arc::new(Completions::new());
+        comp.register(1);
+        comp.register(2);
+        let c2 = Arc::clone(&comp);
+        let publisher = spawn_named("test-foreign-publish", move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            c2.publish(1, Ok(Response::Spmv(RunResult {
+                y: vec![9.0],
+                breakdown: Breakdown::default(),
+                stats: Default::default(),
+                energy: Energy::default(),
+            })));
+        });
+        let e = comp.wait_timeout(2, std::time::Duration::from_millis(120)).unwrap_err();
+        assert!(e.is_shard_timeout(), "foreign wake must not end the wait early: {e}");
+        publisher.join().expect("publisher thread panicked");
+        // Ticket 1's response survived the foreign waiter untouched.
+        match comp.try_claim(1).unwrap() {
+            Some(Response::Spmv(run)) => assert_eq!(run.y, vec![9.0]),
+            Some(other) => panic!("ticket 1 wrong response kind {:?}", other.kind()),
+            None => panic!("ticket 1 response lost"),
+        }
+    }
+
+    #[test]
+    fn publish_racing_an_active_waiter_is_claimed_not_dropped() {
+        // Live-race shape of the missed-notify regression: the waiter is
+        // already parked in wait_timeout when the publish lands. The
+        // publish inserts under the same mutex the waiter holds across
+        // its predicate check, so there is no window where the notify
+        // can fire between check and park — the waiter must claim the
+        // response well inside the (generous) bound.
+        for _ in 0..16 {
+            let comp: Arc<Completions<f64>> = Arc::new(Completions::new());
+            comp.register(5);
+            let c2 = Arc::clone(&comp);
+            let publisher = spawn_named("test-racing-publish", move || {
+                c2.publish(5, Ok(Response::Spmv(RunResult {
+                    y: vec![4.0],
+                    breakdown: Breakdown::default(),
+                    stats: Default::default(),
+                    energy: Energy::default(),
+                })));
+            });
+            let r = comp.wait_timeout(5, std::time::Duration::from_secs(60)).unwrap();
+            match r {
+                Response::Spmv(run) => assert_eq!(run.y, vec![4.0]),
+                other => panic!("unexpected response kind {:?}", other.kind()),
+            }
+            publisher.join().expect("publisher thread panicked");
+        }
     }
 
     #[test]

@@ -35,7 +35,7 @@
 use super::metrics::{LatencyHistogram, TenantStats};
 use crate::util::Result;
 use std::collections::VecDeque;
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 /// A tenant's identity within one scheduler (and the
 /// [`super::ShardedService`] that owns it). Copyable tag carried by

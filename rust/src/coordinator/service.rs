@@ -38,13 +38,15 @@ use super::{
 use crate::matrix::{CooMatrix, MatrixStats, SpElem};
 use crate::pim::PimSystem;
 use crate::util::Result;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 
 /// Distinguishes services within a process so handles and tickets from
-/// one service are rejected by another instead of aliasing.
-static NEXT_SERVICE_ID: AtomicU64 = AtomicU64::new(1);
+/// one service are rejected by another instead of aliasing. Stays on
+/// `std`'s atomic by full path: `const`-initialized statics can't use
+/// the loom-switched facade atomics (loom's `new` is not `const`).
+static NEXT_SERVICE_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
 
 /// How a batch is cut into vector blocks (the fused-kernel unit: each
 /// (work-item, block) pair streams the matrix slice once for the whole
@@ -901,7 +903,7 @@ mod tests {
 
     #[test]
     fn concurrent_submitters_share_one_service() {
-        let svc = std::sync::Arc::new(service(8));
+        let svc = Arc::new(service(8));
         let m = generate::uniform::<f64>(120, 120, 5, 17);
         let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
         std::thread::scope(|s| {

@@ -122,15 +122,18 @@ use crate::util::{Error, Result};
 use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
-use std::thread::JoinHandle;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::mpsc::{channel, Receiver, Sender};
+use crate::util::sync::thread::{spawn_named, JoinHandle};
+use crate::util::sync::{Arc, Condvar, Mutex, MutexGuard, RespawnSlot};
 use std::time::{Duration, Instant};
 
 /// Distinguishes sharded services within a process (handles and tickets
-/// from one facade are rejected by another).
-static NEXT_SHARDED_ID: AtomicU64 = AtomicU64::new(1);
+/// from one facade are rejected by another). Stays on `std`'s atomic by
+/// full path: `const`-initialized statics can't use the loom-switched
+/// facade atomics (loom's `new` is not `const`), and a process-global
+/// id counter has no interleaving worth modeling.
+static NEXT_SHARDED_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
 
 /// Split `m`'s rows into (at most) `shards` contiguous ranges, balanced
 /// by non-zeros at row granularity — the across-rank-group analogue of
@@ -262,8 +265,12 @@ impl BackendRecipe {
 /// registry → a `ShardEntry`'s handles. Respawn takes all three in
 /// that order; every other path takes a suffix of it.
 struct Backends<T: SpElem> {
-    slots: Vec<RwLock<Arc<SpmvService<T>>>>,
-    dead: Vec<AtomicBool>,
+    /// One [`RespawnSlot`] per shard: the swappable service plus its
+    /// dead flag, with the double-checked kill → respawn protocol
+    /// (fast-path flag check, re-check under the write lock) owned by
+    /// the facade type so the loom suite exercises the exact code
+    /// production runs.
+    slots: Vec<RespawnSlot<Arc<SpmvService<T>>>>,
     sys: PimSystem,
     recipe: BackendRecipe,
     cache: Arc<PlanCache<T>>,
@@ -280,21 +287,24 @@ impl<T: SpElem> Backends<T> {
     /// The current service in slot `i` (respawns swap the slot, so
     /// callers clone the `Arc` out instead of holding the guard).
     fn service(&self, i: usize) -> Arc<SpmvService<T>> {
-        Arc::clone(&*self.slots[i].read().expect("shard slot poisoned"))
+        Arc::clone(&*self.slots[i].read())
     }
 
     /// Mark backend `i` dead (fault injection). The next sub-request
     /// that touches the slot respawns it.
     fn kill(&self, i: usize) {
-        if i < self.dead.len() {
-            self.dead[i].store(true, Ordering::SeqCst);
+        if i < self.slots.len() {
+            self.slots[i].kill();
         }
     }
 
-    /// Respawn backend `i` if (and only if) it is marked dead.
+    /// Respawn backend `i` if (and only if) it is marked dead. Racing
+    /// callers rebuild exactly once ([`RespawnSlot::ensure_alive`]'s
+    /// double-checked protocol); only the thread that actually rebuilt
+    /// counts a respawn.
     fn ensure_alive(&self, i: usize) -> Result<()> {
-        if self.dead[i].load(Ordering::SeqCst) {
-            self.respawn(i)?;
+        if self.slots[i].ensure_alive(|slot| self.rebuild_into(i, slot))? {
+            self.respawns.fetch_add(1, Ordering::Relaxed);
         }
         Ok(())
     }
@@ -302,13 +312,10 @@ impl<T: SpElem> Backends<T> {
     /// Rebuild slot `i` from the recipe and re-load every registered
     /// matrix's slice for that shard through the shared plan cache.
     /// The slices were planned when first loaded, so the re-loads are
-    /// cache *hits*: `plan_builds` stays flat across a respawn.
-    fn respawn(&self, i: usize) -> Result<()> {
-        let mut slot = self.slots[i].write().expect("shard slot poisoned");
-        if !self.dead[i].load(Ordering::SeqCst) {
-            // Another thread respawned it while we waited for the lock.
-            return Ok(());
-        }
+    /// cache *hits*: `plan_builds` stays flat across a respawn. Runs
+    /// under the slot's write lock (lock order: slot → registry → a
+    /// `ShardEntry`'s handles).
+    fn rebuild_into(&self, i: usize, slot: &mut Arc<SpmvService<T>>) -> Result<()> {
         let fresh = self.recipe.build(self.sys.clone(), Arc::clone(&self.cache))?;
         let entries: Vec<Arc<ShardEntry<T>>> = {
             let reg = self.registry.lock().expect("shard registry poisoned");
@@ -322,8 +329,6 @@ impl<T: SpElem> Backends<T> {
             }
         }
         *slot = Arc::new(fresh);
-        self.dead[i].store(false, Ordering::SeqCst);
-        self.respawns.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 }
@@ -402,7 +407,7 @@ struct Sched<T: SpElem> {
 }
 
 impl<T: SpElem> Sched<T> {
-    fn lock(&self) -> std::sync::MutexGuard<'_, SchedState<T>> {
+    fn lock(&self) -> MutexGuard<'_, SchedState<T>> {
         self.state.lock().expect("sharded scheduler poisoned")
     }
 
@@ -629,15 +634,12 @@ impl ShardedServiceBuilder {
             calibration: self.calibration.clone(),
         };
         let mut slots = Vec::with_capacity(self.shards);
-        let mut dead = Vec::with_capacity(self.shards);
         for _ in 0..self.shards {
             let svc = recipe.build(per_shard_sys.clone(), Arc::clone(&cache))?;
-            slots.push(RwLock::new(Arc::new(svc)));
-            dead.push(AtomicBool::new(false));
+            slots.push(RespawnSlot::new(Arc::new(svc)));
         }
         let backends = Arc::new(Backends {
             slots,
-            dead,
             sys: per_shard_sys,
             recipe,
             cache,
@@ -670,14 +672,11 @@ impl ShardedServiceBuilder {
             Arc::clone(&completions),
             self.fault.clone(),
         );
-        let h_dispatch = std::thread::Builder::new()
-            .name("spmv-shard-dispatch".into())
-            .spawn(move || {
-                let _failsafe =
-                    StageGuard { comp: Arc::clone(&d_comp), stage: "shard dispatch" };
-                run_dispatcher(d_backends, d_sched, d_comp, tx, d_fault)
-            })
-            .expect("spawn sharded dispatch thread");
+        let h_dispatch = spawn_named("spmv-shard-dispatch", move || {
+            let _failsafe =
+                StageGuard { comp: Arc::clone(&d_comp), stage: "shard dispatch" };
+            run_dispatcher(d_backends, d_sched, d_comp, tx, d_fault)
+        });
         let (g_backends, g_sched, g_comp, g_fault) = (
             Arc::clone(&backends),
             Arc::clone(&sched),
@@ -685,14 +684,11 @@ impl ShardedServiceBuilder {
             self.fault.clone(),
         );
         let g_timeout = self.wait_timeout;
-        let h_gather = std::thread::Builder::new()
-            .name("spmv-shard-gather".into())
-            .spawn(move || {
-                let _failsafe =
-                    StageGuard { comp: Arc::clone(&g_comp), stage: "shard gather" };
-                run_gather(g_backends, g_sched, g_comp, rx, g_fault, g_timeout)
-            })
-            .expect("spawn sharded gather thread");
+        let h_gather = spawn_named("spmv-shard-gather", move || {
+            let _failsafe =
+                StageGuard { comp: Arc::clone(&g_comp), stage: "shard gather" };
+            run_gather(g_backends, g_sched, g_comp, rx, g_fault, g_timeout)
+        });
 
         Ok(ShardedService {
             id: NEXT_SHARDED_ID.fetch_add(1, Ordering::Relaxed),
@@ -1382,7 +1378,7 @@ fn submit_one<T: SpElem>(
     req: Request<T>,
 ) -> Result<SubTicket<T>> {
     b.ensure_alive(i)?;
-    let slot = b.slots[i].read().expect("shard slot poisoned");
+    let slot = b.slots[i].read();
     let h = entry.handles.lock().expect("shard entry handles poisoned")[i];
     let t = slot.submit(h, req)?;
     Ok(SubTicket { svc: Arc::clone(&*slot), ticket: t, shard: i })

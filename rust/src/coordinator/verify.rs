@@ -1,0 +1,200 @@
+//! `cfg(loom)`-only model drivers for the concurrency verification
+//! suite (`rust/tests/loom_models.rs`, run by `scripts/analyze.sh`).
+//!
+//! Each function here is the *body* of one loom model iteration: it
+//! builds fresh state, runs a scaled-down instance of a production
+//! protocol across loom-instrumented threads, asserts the protocol's
+//! invariant, and joins every thread it spawned (loom requires
+//! terminating threads). The drivers live inside the crate so they can
+//! exercise the real `pub(crate)` machinery — [`pool::WorkerPool`],
+//! [`Completions`], [`BufferPool`] — rather than re-implementations;
+//! the test binary only picks the schedule explorer's knobs.
+//!
+//! Everything here goes through [`crate::util::sync`], so under
+//! `--cfg loom` the exact locks, condvars and atomics production runs
+//! on are the ones being exhaustively interleaved.
+//!
+//! [`pool::WorkerPool`]: super::engine::pool::WorkerPool
+//! [`Completions`]: super::queue::Completions
+//! [`BufferPool`]: super::queue::BufferPool
+
+use super::engine::pool::WorkerPool;
+use super::metrics::{Breakdown, RunResult};
+use super::queue::{BufferPool, Completions};
+use super::scheduler::{FairScheduler, TenantSpec};
+use super::service::Response;
+use crate::pim::Energy;
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{thread, Arc, Condvar, Mutex};
+
+fn spmv_response(v: f64) -> crate::util::Result<Response<f64>> {
+    Ok(Response::Spmv(RunResult {
+        y: vec![v],
+        breakdown: Breakdown::default(),
+        stats: Default::default(),
+        energy: Energy::default(),
+    }))
+}
+
+/// One round of the pooled-engine wave protocol: a local pool of
+/// `workers` threads, one wave of `n` indices submitted through
+/// [`WorkerPool::run_wave`] (the submitter helps drain), then shutdown
+/// and join. Invariant: every index runs exactly once, and by the time
+/// `run_wave` returns every result write is visible to the submitter —
+/// the soundness argument for the lifetime-erased `TaskPtr`.
+pub fn pool_wave_round(workers: usize, n: usize) {
+    let (pool, handles) = WorkerPool::with_workers(workers);
+    let slots: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+    pool.run_wave(n, &|i| {
+        slots[i].fetch_add(1, Ordering::SeqCst);
+    });
+    for (i, s) in slots.iter().enumerate() {
+        assert_eq!(s.load(Ordering::SeqCst), 1, "wave index {i} must run exactly once");
+    }
+    pool.shutdown();
+    for h in handles {
+        h.join().expect("pool worker panicked");
+    }
+}
+
+/// The wave protocol's panic path: a task panics on whichever thread
+/// claimed it; the payload must re-raise on the *submitter* after the
+/// wave retires, and no pool worker may die (a dead worker would
+/// strand every later wave).
+pub fn pool_panic_round() {
+    let (pool, handles) = WorkerPool::with_workers(1);
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run_wave(2, &|i| {
+            if i == 1 {
+                panic!("injected task panic");
+            }
+        });
+    }));
+    assert!(outcome.is_err(), "a task panic must re-raise on the submitting thread");
+    pool.shutdown();
+    for h in handles {
+        h.join().expect("a pool worker died on a task panic instead of containing it");
+    }
+}
+
+/// The ticket store's bounded wait racing its publisher. Whatever the
+/// interleaving — publish before the wait, mid-wait, or after a
+/// "timed-out" wake (loom explores the timeout branch
+/// nondeterministically) — the published response must end up claimed
+/// exactly once and never lost; a lost wakeup would surface as a loom
+/// deadlock.
+pub fn completions_claim_round() {
+    let comp: Arc<Completions<f64>> = Arc::new(Completions::new());
+    comp.register(1);
+    let publisher_comp = Arc::clone(&comp);
+    let publisher = thread::spawn_named("verify-publish", move || {
+        publisher_comp.publish(1, spmv_response(42.0));
+    });
+    let mut claimed = false;
+    match comp.wait_timeout(1, std::time::Duration::from_secs(1)) {
+        Ok(Response::Spmv(run)) => {
+            assert_eq!(run.y, vec![42.0]);
+            claimed = true;
+        }
+        Ok(other) => panic!("wrong response kind {:?}", other.kind()),
+        Err(e) => assert!(e.is_shard_timeout(), "only a timeout may end the wait: {e}"),
+    }
+    publisher.join().expect("publisher panicked");
+    // The publish has happened (join above); the timed-out branch must
+    // find the response parked, and the claimed branch must find the
+    // ticket retired — in no branch is the response lost.
+    match comp.try_claim(1) {
+        Ok(Some(Response::Spmv(run))) => {
+            assert!(!claimed, "a response must not be claimable twice");
+            assert_eq!(run.y, vec![42.0]);
+        }
+        Ok(Some(other)) => panic!("wrong response kind {:?}", other.kind()),
+        Ok(None) => panic!("ticket still in flight after its publish"),
+        Err(_) => assert!(claimed, "unclaimed ticket vanished from the store"),
+    }
+}
+
+/// The stage-1 ↔ stage-3 buffer-recycle handoff, against the real
+/// [`BufferPool`]. `std::sync::mpsc` (the production recycle channel)
+/// is not loom-instrumented, so the model routes the retired buffer
+/// through a facade mutex + condvar pair — the same
+/// synchronizes-with edge `Sender::send` / `Receiver::recv` provide.
+/// Invariant: the retired buffer reaches the pool and comes back
+/// zeroed, never dropped and never observed with stale contents.
+pub fn buffer_pool_recycle_round() {
+    type RecycleChan = (Mutex<Vec<Vec<f64>>>, Condvar);
+    let chan: Arc<RecycleChan> = Arc::new((Mutex::new(Vec::new()), Condvar::new()));
+    let tx = Arc::clone(&chan);
+    let stage1 = thread::spawn_named("verify-stage1", move || {
+        // Stage 1 retires an iterate payload whose wave just finished.
+        let (lock, cv) = &*tx;
+        lock.lock().expect("recycle channel poisoned").push(vec![3.0f64; 4]);
+        cv.notify_all();
+    });
+    // Stage 3: drain the recycle channel into the pool, then take the
+    // next merge buffer.
+    let mut pool: BufferPool<f64> = BufferPool::new();
+    {
+        let (lock, cv) = &*chan;
+        let mut q = lock.lock().expect("recycle channel poisoned");
+        while q.is_empty() {
+            q = cv.wait(q).expect("recycle channel poisoned");
+        }
+        for buf in q.drain(..) {
+            pool.put(buf);
+        }
+    }
+    let y = pool.take_zeroed(4);
+    assert_eq!(y.len(), 4);
+    assert!(y.iter().all(|&v| v == 0.0), "recycled buffer must come back zeroed");
+    stage1.join().expect("stage 1 panicked");
+}
+
+/// Satellite model: weighted-round-robin dispatch against a paused
+/// scheduler and a quota-full tenant queue. The dispatcher parks on
+/// the condvar while paused (predicate-guarded); a racing resume must
+/// always wake it, and the per-tenant in-flight quota (1, with 2 jobs
+/// queued) must never wedge the drain — a missed resume or a
+/// quota-deadlock surfaces as a loom deadlock.
+pub fn scheduler_pause_resume_round() {
+    struct Sched {
+        fair: FairScheduler<u32>,
+        paused: bool,
+    }
+    let mut fair: FairScheduler<u32> =
+        FairScheduler::new(vec![TenantSpec::new("a", 1).with_quota(1)])
+            .expect("tenant spec rejected");
+    let t = fair.tenant("a").expect("tenant a exists");
+    fair.enqueue(t, 10);
+    fair.enqueue(t, 11); // quota 1: full tenant queue behind one slot
+    let state = Arc::new((Mutex::new(Sched { fair, paused: true }), Condvar::new()));
+
+    let resume_state = Arc::clone(&state);
+    let resumer = thread::spawn_named("verify-resume", move || {
+        let (lock, cv) = &*resume_state;
+        lock.lock().expect("scheduler state poisoned").paused = false;
+        cv.notify_all();
+    });
+
+    // Dispatcher: drain both jobs, waiting while paused.
+    let (lock, cv) = &*state;
+    let mut st = lock.lock().expect("scheduler state poisoned");
+    let mut served = Vec::new();
+    while served.len() < 2 {
+        if st.paused {
+            st = cv.wait(st).expect("scheduler state poisoned");
+            continue;
+        }
+        let (tenant, job) = st
+            .fair
+            .pop()
+            .expect("a resumed scheduler with queued work must dispatch");
+        served.push(job);
+        st.fair.complete(tenant); // frees the quota slot for the next pop
+    }
+    assert_eq!(served, vec![10, 11], "WRR must drain the tenant queue in order");
+    assert_eq!(st.fair.queued(), 0);
+    assert_eq!(st.fair.in_flight(), 0);
+    drop(st);
+    resumer.join().expect("resumer panicked");
+}

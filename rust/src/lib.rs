@@ -108,6 +108,13 @@
 //! the plan cache — is documented with data-flow diagrams in
 //! `docs/ARCHITECTURE.md` at the repository root.
 
+// Unsafe-code audit (docs/ARCHITECTURE.md "Concurrency model &
+// verification"): every unsafe operation must sit in its own `unsafe`
+// block with a written `// SAFETY:` contract, even inside an `unsafe
+// fn` — the only unsafe code in the crate is the lifetime-erased
+// `TaskPtr` protocol in `coordinator::engine`.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod util;
 pub mod matrix;
 pub mod pim;

@@ -8,6 +8,7 @@
 pub mod error;
 pub mod rng;
 pub mod json;
+pub mod sync;
 
 pub use error::{Context, Error, ErrorKind, Result};
 

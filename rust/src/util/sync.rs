@@ -1,0 +1,336 @@
+//! Loom-checkable synchronization facade.
+//!
+//! Every host-side synchronization primitive in this crate goes through
+//! this module instead of `std::sync` directly. Normally the types here
+//! are thin zero-cost wrappers over `std`; under `--cfg loom` they
+//! switch to [loom](https://docs.rs/loom)'s model-checked versions, so
+//! the concurrency protocols in `coordinator::{engine, queue, cache,
+//! shard}` can be explored exhaustively over all legal interleavings
+//! (`rust/tests/loom_models.rs`, run by `scripts/analyze.sh`).
+//!
+//! The wrappers are deliberately *new types*, not re-exports: the
+//! repo-wide `clippy.toml` `disallowed-types` gate forbids raw
+//! `std::sync::{Mutex, RwLock, Condvar}` (and raw thread spawns) by
+//! definition-id, and a plain re-export would share the forbidden id.
+//! Only this module carries the `allow`.
+//!
+//! Documented deviations from a "pure" loom facade:
+//!
+//! * [`Arc`] is always `std::sync::Arc`, even under loom. Loom's `Arc`
+//!   cannot coerce to unsized `Arc<[T]>` / `Arc<str>`, which the
+//!   zero-copy payload path depends on. This is sound for the models we
+//!   check: every protocol's synchronization flows through the facade's
+//!   `Mutex`/`Condvar`/atomics, never through `Arc`'s reference count.
+//! * [`mpsc`] is always `std`'s. The staged request queue's hand-off
+//!   channels are not loom-modeled (loom has no mpsc); the modeled
+//!   protocols (`Completions`, the worker pool, the recycle pool, the
+//!   respawn slot) drive their sharing through facade primitives.
+//! * Statics that need a `const` constructor (the process-wide service
+//!   and facade id counters) stay on `std::sync::atomic` by full path —
+//!   loom atomics have non-`const` `new`. Atomics are not on the
+//!   disallow list for exactly this reason.
+
+#![allow(clippy::disallowed_types, clippy::disallowed_methods)]
+
+use std::fmt;
+use std::time::Duration;
+
+pub use std::sync::Arc;
+pub use std::sync::mpsc;
+pub use std::sync::{LockResult, PoisonError};
+
+#[cfg(not(loom))]
+use std::sync as imp;
+
+#[cfg(loom)]
+use loom::sync as imp;
+
+/// The guard type returned by [`Mutex::lock`] (std's or loom's).
+pub type MutexGuard<'a, T> = imp::MutexGuard<'a, T>;
+/// The guard type returned by [`RwLock::read`].
+pub type RwLockReadGuard<'a, T> = imp::RwLockReadGuard<'a, T>;
+/// The guard type returned by [`RwLock::write`].
+pub type RwLockWriteGuard<'a, T> = imp::RwLockWriteGuard<'a, T>;
+/// Returned by [`Condvar::wait_timeout`]; `timed_out()` distinguishes
+/// deadline expiry from a notification (under loom the expiry branch is
+/// explored nondeterministically — there is no virtual clock).
+pub type WaitTimeoutResult = imp::WaitTimeoutResult;
+
+/// Mutual exclusion — `std::sync::Mutex` normally, `loom::sync::Mutex`
+/// under `--cfg loom`.
+pub struct Mutex<T>(imp::Mutex<T>);
+
+impl<T> Mutex<T> {
+    /// Create an unlocked mutex. Not `const` (loom's isn't): statics
+    /// wanting a mutex lazily initialize through `OnceLock`.
+    pub fn new(value: T) -> Self {
+        Mutex(imp::Mutex::new(value))
+    }
+
+    /// Block until the lock is held.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        self.0.lock()
+    }
+
+    /// Consume the mutex, returning the inner value.
+    pub fn into_inner(self) -> LockResult<T> {
+        self.0.into_inner()
+    }
+}
+
+impl<T> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad("Mutex")
+    }
+}
+
+/// Reader-writer lock — `std::sync::RwLock` normally, loom's under
+/// `--cfg loom`.
+pub struct RwLock<T>(imp::RwLock<T>);
+
+impl<T> RwLock<T> {
+    /// Create an unlocked lock.
+    pub fn new(value: T) -> Self {
+        RwLock(imp::RwLock::new(value))
+    }
+
+    /// Block until a shared read guard is held.
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        self.0.read()
+    }
+
+    /// Block until the exclusive write guard is held.
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        self.0.write()
+    }
+}
+
+impl<T> fmt::Debug for RwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad("RwLock")
+    }
+}
+
+/// Condition variable — `std::sync::Condvar` normally, loom's under
+/// `--cfg loom`. All waits in this crate are predicate-guarded loops
+/// (spurious wakes are always legal), which is also what makes them
+/// loom-explorable.
+pub struct Condvar(imp::Condvar);
+
+impl Condvar {
+    /// Create a condition variable.
+    pub fn new() -> Self {
+        Condvar(imp::Condvar::new())
+    }
+
+    /// Atomically release the guard and block until notified.
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        self.0.wait(guard)
+    }
+
+    /// [`Condvar::wait`] bounded by `timeout`. Under loom the duration
+    /// is ignored and the timed-out branch is explored as one more
+    /// nondeterministic outcome.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        timeout: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        self.0.wait_timeout(guard, timeout)
+    }
+
+    /// Wake one waiter.
+    pub fn notify_one(&self) {
+        self.0.notify_one();
+    }
+
+    /// Wake every waiter.
+    pub fn notify_all(&self) {
+        self.0.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+impl fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad("Condvar")
+    }
+}
+
+/// Atomics — std's normally, loom's under `--cfg loom`. `Ordering` is
+/// the same enum either way (loom re-exports core's).
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Thread handling: named spawns (every long-lived thread in this crate
+/// has a `sparsep-`/`spmv-` name for debuggers and sanitizer reports)
+/// plus the handful of scheduling hints the serving stack uses.
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::JoinHandle;
+
+    #[cfg(loom)]
+    pub use loom::thread::JoinHandle;
+
+    /// Spawn a named thread. Panics if the OS refuses the spawn (an
+    /// OOM-class failure every caller previously `expect`ed anyway).
+    /// Under loom the name is dropped (loom threads are anonymous) and
+    /// the thread participates in model exploration.
+    #[cfg(not(loom))]
+    pub fn spawn_named<F, T>(name: &str, f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .unwrap_or_else(|e| panic!("failed to spawn thread {name}: {e}"))
+    }
+
+    /// Loom twin of [`spawn_named`]: the name is dropped.
+    #[cfg(loom)]
+    pub fn spawn_named<F, T>(name: &str, f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let _ = name;
+        loom::thread::spawn(f)
+    }
+
+    /// Yield the scheduler (a loom exploration point under `--cfg loom`).
+    pub fn yield_now() {
+        #[cfg(not(loom))]
+        std::thread::yield_now();
+        #[cfg(loom)]
+        loom::thread::yield_now();
+    }
+}
+
+/// A supervised, respawnable slot: a value behind a reader-writer lock
+/// plus an atomic dead flag. This is the shard-supervision protocol
+/// (`coordinator::shard::Backends`) extracted so its exactly-one-respawn
+/// guarantee can be model-checked in isolation
+/// (`rust/tests/loom_models.rs::respawn_slot_respawns_exactly_once`).
+///
+/// Protocol: readers take the read lock ([`RespawnSlot::read`]) and
+/// never observe a half-rebuilt value. [`RespawnSlot::kill`] marks the
+/// slot dead without touching the value. [`RespawnSlot::ensure_alive`]
+/// is the double-checked respawn: a fast dead-flag load, then the write
+/// lock, then a *re-check* of the flag under the lock — so when many
+/// threads race `ensure_alive`, exactly one runs the rebuild closure
+/// and the rest see the flag already cleared. A failed rebuild leaves
+/// the flag set (the next caller retries) and propagates the error.
+pub struct RespawnSlot<S> {
+    slot: RwLock<S>,
+    dead: atomic::AtomicBool,
+}
+
+impl<S> RespawnSlot<S> {
+    /// A live slot holding `value`.
+    pub fn new(value: S) -> Self {
+        RespawnSlot {
+            slot: RwLock::new(value),
+            dead: atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// Shared access to the current value (alive or not — killing a
+    /// slot does not invalidate the value, it schedules a rebuild).
+    pub fn read(&self) -> RwLockReadGuard<'_, S> {
+        self.slot.read().expect("respawn slot poisoned")
+    }
+
+    /// Mark the slot dead; the next [`RespawnSlot::ensure_alive`]
+    /// rebuilds it.
+    pub fn kill(&self) {
+        self.dead.store(true, atomic::Ordering::SeqCst);
+    }
+
+    /// Is the slot currently marked dead?
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(atomic::Ordering::SeqCst)
+    }
+
+    /// Rebuild the value if (and only if) the slot is dead. Returns
+    /// `Ok(true)` iff *this* call ran `rebuild`; racing callers that
+    /// lose the write-lock race return `Ok(false)` once the winner has
+    /// cleared the flag. On `Err` the flag stays set and the error
+    /// propagates.
+    pub fn ensure_alive<E>(&self, rebuild: impl FnOnce(&mut S) -> Result<(), E>) -> Result<bool, E> {
+        if !self.is_dead() {
+            return Ok(false);
+        }
+        let mut slot = self.slot.write().expect("respawn slot poisoned");
+        // Re-check under the write lock: a racing respawner may have
+        // rebuilt (and cleared the flag) while we queued for the lock.
+        if !self.is_dead() {
+            return Ok(false);
+        }
+        rebuild(&mut slot)?;
+        self.dead.store(false, atomic::Ordering::SeqCst);
+        Ok(true)
+    }
+}
+
+impl<S> fmt::Debug for RespawnSlot<S> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RespawnSlot").field("dead", &self.is_dead()).finish()
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn facade_mutex_condvar_roundtrip() {
+        let m = Mutex::new(0usize);
+        let cv = Condvar::new();
+        {
+            let mut g = m.lock().unwrap();
+            *g = 7;
+            cv.notify_all(); // no waiters: must not block or panic
+        }
+        assert_eq!(m.into_inner().unwrap(), 7);
+    }
+
+    #[test]
+    fn respawn_slot_double_checked_protocol() {
+        let slot = RespawnSlot::new(1u32);
+        assert!(!slot.is_dead());
+        assert_eq!(*slot.read(), 1);
+        // ensure_alive on a live slot never runs the rebuild.
+        let ran = slot.ensure_alive(|_| -> Result<(), ()> { panic!("must not rebuild") });
+        assert_eq!(ran, Ok(false));
+        // Killed: the next ensure_alive rebuilds exactly once.
+        slot.kill();
+        assert!(slot.is_dead());
+        assert_eq!(slot.ensure_alive(|v| -> Result<(), ()> {
+            *v = 2;
+            Ok(())
+        }), Ok(true));
+        assert!(!slot.is_dead());
+        assert_eq!(*slot.read(), 2);
+        // A failed rebuild leaves the slot dead for the next caller.
+        slot.kill();
+        assert_eq!(slot.ensure_alive(|_| Err("boom")), Err("boom"));
+        assert!(slot.is_dead());
+        assert_eq!(slot.ensure_alive(|v| -> Result<(), &str> {
+            *v = 3;
+            Ok(())
+        }), Ok(true));
+        assert_eq!(*slot.read(), 3);
+    }
+}

@@ -1,0 +1,119 @@
+//! Exhaustive concurrency models (loom) for the four hottest protocols
+//! in the serving tier, plus the shard respawn race and the scheduler
+//! pause/resume protocol.
+//!
+//! Compiled only under `--cfg loom` (a plain `cargo test` sees an empty
+//! binary and needs no `loom` dependency). Run via `scripts/analyze.sh`,
+//! which temporarily injects the loom dependency and sets
+//! `RUSTFLAGS="--cfg loom"`; or by hand:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_models
+//! ```
+//!
+//! Every model body lives in `sparsep::coordinator::verify` (so it can
+//! drive the real `pub(crate)` machinery) or uses public facade types
+//! directly. Models are scaled down — ≤ 3 threads, 2-element waves —
+//! because loom explores every interleaving; the protocols themselves
+//! are the production code paths, reached through the
+//! `sparsep::util::sync` facade the whole crate is built on.
+
+#![cfg(loom)]
+
+use sparsep::coordinator::verify;
+use sparsep::util::sync::atomic::{AtomicUsize, Ordering};
+use sparsep::util::sync::{thread, Arc, RespawnSlot};
+
+/// Bounded-exhaustive exploration: preemption bounding (3) keeps the
+/// deeper models tractable while still covering every interleaving
+/// that at most 3 forced preemptions can reach — the standard loom
+/// configuration for condvar-heavy protocols.
+fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    let mut b = loom::model::Builder::new();
+    b.preemption_bound = Some(3);
+    b.check(f);
+}
+
+#[test]
+fn pool_wave_protocol_runs_every_index_exactly_once() {
+    model(|| verify::pool_wave_round(2, 2));
+}
+
+#[test]
+fn pool_wave_single_worker_with_wide_wave() {
+    model(|| verify::pool_wave_round(1, 3));
+}
+
+#[test]
+fn pool_task_panic_reraises_on_submitter_and_spares_workers() {
+    model(verify::pool_panic_round);
+}
+
+#[test]
+fn completions_wait_timeout_never_loses_a_racing_publish() {
+    model(verify::completions_claim_round);
+}
+
+#[test]
+fn buffer_pool_recycle_handoff_is_race_free() {
+    model(verify::buffer_pool_recycle_round);
+}
+
+#[test]
+fn respawn_slot_rebuilds_exactly_once_under_racing_respawners() {
+    model(|| {
+        // The shard dead-flag protocol (`Backends::ensure_alive`): two
+        // threads race to respawn one killed backend. Exactly one may
+        // rebuild (the double-checked write-lock protocol), exactly one
+        // may report having respawned, and the slot must end alive.
+        let slot: Arc<RespawnSlot<u32>> = Arc::new(RespawnSlot::new(0));
+        slot.kill();
+        let rebuilds = Arc::new(AtomicUsize::new(0));
+        let respawn_credits = Arc::new(AtomicUsize::new(0));
+
+        let racer = {
+            let (slot, rebuilds, credits) =
+                (Arc::clone(&slot), Arc::clone(&rebuilds), Arc::clone(&respawn_credits));
+            thread::spawn_named("respawn-racer", move || {
+                let did = slot
+                    .ensure_alive(|s: &mut u32| {
+                        rebuilds.fetch_add(1, Ordering::SeqCst);
+                        *s += 1;
+                        Ok::<(), ()>(())
+                    })
+                    .expect("rebuild cannot fail here");
+                if did {
+                    credits.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+        };
+        let did = slot
+            .ensure_alive(|s: &mut u32| {
+                rebuilds.fetch_add(1, Ordering::SeqCst);
+                *s += 1;
+                Ok::<(), ()>(())
+            })
+            .expect("rebuild cannot fail here");
+        if did {
+            respawn_credits.fetch_add(1, Ordering::SeqCst);
+        }
+        racer.join().expect("racing respawner panicked");
+
+        assert_eq!(rebuilds.load(Ordering::SeqCst), 1, "exactly one rebuild may run");
+        assert_eq!(
+            respawn_credits.load(Ordering::SeqCst),
+            1,
+            "exactly one caller may count the respawn"
+        );
+        assert!(!slot.is_dead(), "slot must end alive");
+        assert_eq!(*slot.read(), 1, "the single rebuild's effect must be visible");
+    });
+}
+
+#[test]
+fn scheduler_pause_resume_with_full_tenant_queue_never_deadlocks() {
+    model(verify::scheduler_pause_resume_round);
+}

@@ -61,6 +61,16 @@ else
   echo "clippy component unavailable; skipping lint gate"
 fi
 
+# Concurrency verification gates (PR 8): the clippy facade wall (raw
+# std::sync primitives / raw spawns outside util::sync are
+# disallowed-types, proven live by a canary that must FAIL the lint),
+# the loom model suite over the wave / completion / recycle / respawn
+# protocols, the Miri slice over the TaskPtr unsafe code, and a TSan
+# pass. Each sub-gate is toolchain-guarded exactly like the clippy gate
+# above, so this stays runnable in the offline build container.
+echo "== analyze: concurrency verification gates (scripts/analyze.sh) =="
+scripts/analyze.sh
+
 echo "== docs: cargo doc --no-deps (warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

@@ -106,6 +106,13 @@ COMMANDS:
                                   as typed Overloaded, never silently
       [--timeout-ms T]            bound waits: a wedged shard surfaces as
                                   a typed ShardTimeout naming the shard
+      [--listen ADDR]             serve over TCP instead of the demo loop:
+                                  bind ADDR (e.g. 127.0.0.1:7878) and speak
+                                  the SPRP wire protocol until killed; all
+                                  sharding/tenant/chaos flags above apply
+      [--max-in-flight N]         per-connection in-flight cap (--listen
+                                  only); overflow answers as a typed
+                                  Overloaded frame before submission
   tune [--quick]                  search-based autotuner: sweep kernel x
       [--dpus N] [--tasklets T]   block x shard per (matrix, batch) cell,
       [--threads T] [--samples S] write the winners as a calibration
@@ -148,6 +155,15 @@ COMMANDS:
                                   rate and served-latency percentiles
                                   under overload; writes
                                   BENCH_resilience.json
+  bench-net                       TCP front-end load test: open-loop
+      [--rows N] [--deg K] [--shards S] [--dpus N] [--conns C]
+      [--requests R] [--rates A,B,...] [--max-queue Q] [--seed X]
+      [--addr HOST:PORT] [--out F]
+                                  Poisson arrivals at each offered rate
+                                  (req/s) against an in-process server
+                                  (or --addr for a live one); reports
+                                  p50/p99/p999 latency + typed shed rate
+                                  per level; writes BENCH_net.json
   bench-hotpath                   host hot-path overhaul bench: pooled
       [--rows N] [--deg K] [--iters I] [--batch B] [--dpus N]
       [--kernel K] [--threads T] [--samples S] [--out F]
@@ -644,11 +660,81 @@ fn serve_sharded(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `sparsep serve --listen ADDR`: the TCP front end. Builds the same
+/// sharded multi-tenant facade `serve_sharded` demos (all its flags
+/// apply), binds the SPRP wire protocol on ADDR, and runs until the
+/// process is killed — clients load their own matrices over the wire,
+/// so `--matrix` is not needed here.
+fn serve_listen(args: &Args) -> Result<()> {
+    let listen = args.get("listen").expect("checked by serve()");
+    let tenants = match args.get("tenants") {
+        Some(spec) => TenantSpec::parse_list(spec)?,
+        None => vec![TenantSpec::new("default", 1)],
+    };
+    let cfg = PimConfig {
+        n_dpus: args.get_usize("dpus", 64)?,
+        tasklets: args.get_usize("tasklets", 16)?,
+        ..Default::default()
+    };
+    let mut builder = ShardedServiceBuilder::new()
+        .engine(engine_from_args(args)?)
+        .vector_block(block_policy_from_args(args)?)
+        .queue_depth(args.get_usize("queue-depth", DEFAULT_QUEUE_DEPTH)?)
+        .shards(args.get_usize("shards", 2)?)
+        .tenants(tenants);
+    if let Some(table) = calibration_from_args(args)? {
+        builder = builder.calibration(table);
+    }
+    if args.get("max-queue").is_some() {
+        let cap = args.get_usize("max-queue", 0)?;
+        crate::ensure!(cap >= 1, "--max-queue must be >= 1");
+        builder = builder.max_queue(cap);
+    }
+    if args.get("timeout-ms").is_some() {
+        let ms = args.get_usize("timeout-ms", 0)?;
+        crate::ensure!(ms >= 1, "--timeout-ms must be >= 1");
+        builder = builder.wait_timeout(std::time::Duration::from_millis(ms as u64));
+    }
+    if args.get_bool("chaos") || args.get("chaos-seed").is_some() {
+        let seed = args.get_usize("chaos-seed", 0xC4A05)? as u64;
+        let chaos_shards = args.get_usize("shards", 2)?.max(1);
+        let horizon = args.get_usize("requests", 64)? as u64;
+        let plan = FaultPlan::random(seed, horizon, chaos_shards, 0.4);
+        println!(
+            "chaos      : {} fault(s) over the first {horizon} ticket(s) from seed {seed:#x}",
+            plan.len()
+        );
+        builder = builder.fault_injector(crate::util::sync::Arc::new(plan));
+    }
+    let svc: ShardedService<f64> = builder.build(PimSystem::new(cfg.clone())?)?;
+    let opts = crate::net::ServerOpts {
+        max_in_flight_per_conn: args.get_usize("max-in-flight", 64)?,
+    };
+    let shards = svc.shard_count();
+    let tenant_names = svc.tenant_names().to_vec();
+    let server = crate::net::Server::spawn(svc, listen, opts)?;
+    println!(
+        "listening  : {} ({} shard(s) x {} DPUs, tenants {:?}, {} in flight per conn)",
+        server.local_addr(),
+        shards,
+        cfg.n_dpus,
+        tenant_names,
+        opts.max_in_flight_per_conn
+    );
+    println!("serving    : SPRP wire protocol; stop with ctrl-c");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 /// `sparsep serve`: a deterministic demo of the serving API — load one
 /// matrix, put a mixed request stream in flight at once, wait for the
 /// tickets out of submission order, verify every answer against host
 /// oracles, and report throughput + service counters.
 fn serve(args: &Args) -> Result<()> {
+    if args.get("listen").is_some() {
+        return serve_listen(args);
+    }
     if args.get("shards").is_some() || args.get("tenants").is_some() {
         return serve_sharded(args);
     }
@@ -1024,6 +1110,34 @@ pub fn run(args: Args) -> Result<()> {
                 out: args.get("out").unwrap_or(d.out.as_str()).to_string(),
             };
             crate::bench_harness::resilience::run(&opts)?;
+        }
+        "bench-net" => {
+            let d = crate::net::LoadgenOpts::default();
+            let rates = match args.get("rates") {
+                None => d.rates,
+                Some(spec) => spec
+                    .split(',')
+                    .map(|r| {
+                        r.trim()
+                            .parse::<f64>()
+                            .with_context(|| format!("bad --rates entry {r:?}"))
+                    })
+                    .collect::<Result<Vec<f64>>>()?,
+            };
+            let opts = crate::net::LoadgenOpts {
+                rows: args.get_usize("rows", d.rows)?,
+                deg: args.get_usize("deg", d.deg)?,
+                shards: args.get_usize("shards", d.shards)?,
+                n_dpus: args.get_usize("dpus", d.n_dpus)?,
+                conns: args.get_usize("conns", d.conns)?,
+                requests: args.get_usize("requests", d.requests)?,
+                rates,
+                max_queue: args.get_usize("max-queue", d.max_queue)?,
+                seed: args.get_usize("seed", d.seed as usize)? as u64,
+                addr: args.get("addr").map(str::to_string),
+                out: args.get("out").unwrap_or(d.out.as_str()).to_string(),
+            };
+            crate::net::loadgen::run(&opts)?;
         }
         "artifacts" => {
             let r = crate::runtime::ArtifactRunner::load_default()?;

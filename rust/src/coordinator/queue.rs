@@ -336,6 +336,71 @@ impl<T: SpElem> Completions<T> {
         }
     }
 
+    /// Claim *any* published response, blocking at most `timeout`:
+    /// `Some((ticket, response))` as soon as one is available, `None`
+    /// on expiry. This is the backbone of completion-dispatch front
+    /// ends (one thread drains every ticket's completion the moment
+    /// `publish` lands — no per-ticket poll loops): `publish`'s
+    /// `notify_all` wakes this wait directly. Only meaningful when the
+    /// caller is the store's sole waiter — a concurrent per-ticket
+    /// `wait` could otherwise lose its response to this claim.
+    #[cfg(not(loom))]
+    pub(crate) fn claim_next_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> Option<(u64, Result<Response<T>>)> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut state = self.state.lock().expect("completion store poisoned");
+        loop {
+            if let Some(&ticket) = state.done.keys().next() {
+                let resp = state.done.remove(&ticket).expect("key observed under the lock");
+                state.pending.remove(&ticket);
+                return Some((ticket, resp));
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (st, _) = self
+                .ready
+                .wait_timeout(state, deadline - now)
+                .expect("completion store poisoned");
+            state = st;
+        }
+    }
+
+    /// Loom twin of `claim_next_timeout` (see [`Completions::wait_timeout`]):
+    /// loom's condvar explores the timed-out branch nondeterministically,
+    /// so any timed-out wake counts as expiry after one final re-check
+    /// under the lock (a racing publish is never lost).
+    #[cfg(loom)]
+    pub(crate) fn claim_next_timeout(
+        &self,
+        timeout: std::time::Duration,
+    ) -> Option<(u64, Result<Response<T>>)> {
+        let mut state = self.state.lock().expect("completion store poisoned");
+        loop {
+            if let Some(&ticket) = state.done.keys().next() {
+                let resp = state.done.remove(&ticket).expect("key observed under the lock");
+                state.pending.remove(&ticket);
+                return Some((ticket, resp));
+            }
+            let (st, res) = self
+                .ready
+                .wait_timeout(state, timeout)
+                .expect("completion store poisoned");
+            state = st;
+            if res.timed_out() {
+                if let Some(&ticket) = state.done.keys().next() {
+                    let resp = state.done.remove(&ticket).expect("key observed under the lock");
+                    state.pending.remove(&ticket);
+                    return Some((ticket, resp));
+                }
+                return None;
+            }
+        }
+    }
+
     /// Tickets registered since construction.
     pub(crate) fn submitted(&self) -> u64 {
         self.submitted.load(Ordering::Relaxed)
@@ -635,24 +700,29 @@ pub(crate) const BUFFER_POOL_LENS: usize = 8;
 /// request's batch width only decides how many same-length buffers are
 /// in flight at once, which the per-length cap bounds.
 /// (`pub(crate)` so the loom model in [`super::verify`] can drive the
-/// stage-1 ↔ stage-3 recycle protocol against the real pool.)
-pub(crate) struct BufferPool<T: SpElem> {
+/// stage-1 ↔ stage-3 recycle protocol against the real pool, and so the
+/// network front end ([`crate::net`]) can recycle its byte buffers
+/// through the same free-list. The element bound is `Copy`, not
+/// [`SpElem`], for exactly that reason — the "zero" fill value is
+/// stored at construction instead of coming from the element trait.)
+pub(crate) struct BufferPool<T: Copy> {
     free: HashMap<usize, Vec<Vec<T>>>,
+    zero: T,
 }
 
-impl<T: SpElem> BufferPool<T> {
-    pub(crate) fn new() -> BufferPool<T> {
-        BufferPool { free: HashMap::new() }
+impl<T: Copy> BufferPool<T> {
+    pub(crate) fn new(zero: T) -> BufferPool<T> {
+        BufferPool { free: HashMap::new(), zero }
     }
 
     /// A zeroed buffer of `len` elements, recycled when available.
     pub(crate) fn take_zeroed(&mut self, len: usize) -> Vec<T> {
         match self.free.get_mut(&len).and_then(Vec::pop) {
             Some(mut buf) => {
-                buf.fill(T::zero());
+                buf.fill(self.zero);
                 buf
             }
-            None => vec![T::zero(); len],
+            None => vec![self.zero; len],
         }
     }
 
@@ -692,7 +762,7 @@ fn stage_merge<T: SpElem>(
     let mut runs: Vec<RunResult<T>> = Vec::new();
     let mut total = Breakdown::default();
     let mut energy = Energy::default();
-    let mut pool: BufferPool<T> = BufferPool::new();
+    let mut pool: BufferPool<T> = BufferPool::new(T::zero());
     while let Ok(MergeMsg { ticket, plan, wave, outputs }) = rx_mrg.recv() {
         // Collect buffers stage 1 retired since the last merge (iterate
         // payloads whose wave finished): the pool hands them back below.
@@ -935,7 +1005,7 @@ mod tests {
 
     #[test]
     fn buffer_pool_recycles_zeroed_and_stays_bounded() {
-        let mut pool: BufferPool<f64> = BufferPool::new();
+        let mut pool: BufferPool<f64> = BufferPool::new(0.0);
         let buf = vec![7.0f64; 32];
         let ptr = buf.as_ptr();
         pool.put(buf);

@@ -123,7 +123,7 @@ use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::ops::Range;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
-use crate::util::sync::mpsc::{channel, Receiver, Sender};
+use crate::util::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use crate::util::sync::thread::{spawn_named, JoinHandle};
 use crate::util::sync::{Arc, Condvar, Mutex, MutexGuard, RespawnSlot};
 use std::time::{Duration, Instant};
@@ -1056,6 +1056,21 @@ impl<T: SpElem> ShardedService<T> {
         self.completions.try_claim(ticket.id)
     }
 
+    /// Completion-dispatch wait: claim *whichever* submitted request
+    /// completes next, blocking at most `timeout` (`None` on expiry).
+    /// `publish` wakes this directly, so one thread can drain every
+    /// ticket's completion the moment it lands — no per-ticket poll
+    /// loops. Intended for front ends (e.g. [`crate::net::Server`])
+    /// that own the facade exclusively: mixing `wait_next` with
+    /// concurrent per-ticket [`Self::wait`] calls on the same facade
+    /// is a logic error (either side could claim the other's
+    /// response).
+    pub fn wait_next(&self, timeout: Duration) -> Option<(ShardedTicket, Result<Response<T>>)> {
+        self.completions
+            .claim_next_timeout(timeout)
+            .map(|(id, resp)| (ShardedTicket { svc: self.id, id }, resp))
+    }
+
     /// One SpMV on the caller's thread — the synchronous fast path
     /// (bypasses the scheduler — and hence deadlines, admission control
     /// and the fault injector — like [`SpmvService::spmv`] bypasses the
@@ -1323,11 +1338,32 @@ impl Recovery {
     }
 }
 
+/// A gather item parked behind a stalled shard: instead of sleeping out
+/// the stall bound inline (which would head-of-line-block every other
+/// ticket's completion on the single gather thread), the item waits
+/// here with an absolute deadline while the gather loop keeps draining
+/// the channel. [`fail_parked`] expires it with the typed
+/// `ShardTimeout` once the bound elapses.
+struct Parked<T: SpElem> {
+    deadline: Instant,
+    /// The configured bound (for the error message).
+    bound: Duration,
+    /// The stalled shard the timeout names (lowest stalled shard index,
+    /// matching the former in-shard-order walk).
+    shard: usize,
+    ticket: u64,
+    tenant: TenantId,
+    subs: Vec<SubTicket<T>>,
+    submitted: Instant,
+}
+
 /// Gather: wait each dispatched request's sub-tickets (FIFO in dispatch
 /// order), merge the per-shard partials, drive iterate feedback, and
 /// publish the response. Gather-time faults fire per item: kills are
 /// recovered by re-scattering the lost sub-requests from the retained
-/// payload, drops by re-executing, stalls by a typed timeout.
+/// payload, drops by re-executing, stalls by parking the item behind a
+/// deadline ([`Parked`]) so a single wedged shard cannot
+/// head-of-line-block completions for healthy tickets.
 fn run_gather<T: SpElem>(
     backends: Arc<Backends<T>>,
     sched: Arc<Sched<T>>,
@@ -1336,36 +1372,124 @@ fn run_gather<T: SpElem>(
     fault: Option<Arc<dyn FaultInjector>>,
     timeout: Option<Duration>,
 ) {
-    while let Ok(item) = rx.recv() {
-        let GatherItem { ticket, tenant, entry, kind, subs, iters, payload, submitted } = item;
-        let rec = match &fault {
-            Some(f) => Recovery::from_faults(&f.at_gather(ticket)),
-            None => Recovery::default(),
+    let mut parked: Vec<Parked<T>> = Vec::new();
+    loop {
+        // Block for the next item — bounded by the earliest parked
+        // deadline so stalled tickets expire even while the channel
+        // idles.
+        let next = if let Some(wake) = parked.iter().map(|p| p.deadline).min() {
+            match wake.checked_duration_since(Instant::now()) {
+                // A deadline already passed: sweep before waiting.
+                None => None,
+                Some(wait) => match rx.recv_timeout(wait) {
+                    Ok(item) => Some(item),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                },
+            }
+        } else {
+            match rx.recv() {
+                Ok(item) => Some(item),
+                Err(_) => break,
+            }
         };
-        if rec.delay_ms > 0 {
-            std::thread::sleep(Duration::from_millis(rec.delay_ms));
+        if let Some(item) = next {
+            if let Some(p) = gather_one(&backends, &sched, &comp, &fault, timeout, item) {
+                parked.push(p);
+            }
         }
-        for &s in &rec.kill {
-            backends.kill(s);
+        let now = Instant::now();
+        let mut i = 0;
+        while i < parked.len() {
+            if parked[i].deadline <= now {
+                let p = parked.swap_remove(i);
+                fail_parked(&sched, &comp, p);
+            } else {
+                i += 1;
+            }
         }
-        let resp = match (kind, &payload) {
-            (GatherKind::Spmv, ScatterPayload::Spmv(x)) => {
-                recover_wait_spmv(&backends, &entry, subs, &rec, timeout, x)
-                    .map(|p| Response::Spmv(merge_shard_runs(p)))
-            }
-            (GatherKind::Batch, ScatterPayload::Batch(xs)) => {
-                recover_wait_batch(&backends, &entry, subs, &rec, timeout, xs)
-                    .map(|p| Response::Batch(merge_shard_batches(p)))
-            }
-            (GatherKind::Iterate, ScatterPayload::Spmv(x)) => {
-                gather_iterate(&backends, &entry, subs, iters, Some((x, &rec)), timeout)
-            }
-            _ => Err(format_err!("internal: sharded gather payload/kind mismatch")),
-        };
-        drop(payload);
-        sched.complete(tenant, elapsed_us(submitted));
-        comp.publish(ticket, resp);
     }
+    // The dispatcher hung up (shutdown): no further completions are
+    // coming, so expire the remaining parked items now rather than
+    // leaking unanswered tickets.
+    for p in parked.drain(..) {
+        fail_parked(&sched, &comp, p);
+    }
+}
+
+/// Process one gather item to completion, or return it parked when a
+/// stalled shard must be timed out without blocking the gather thread.
+fn gather_one<T: SpElem>(
+    backends: &Arc<Backends<T>>,
+    sched: &Sched<T>,
+    comp: &Completions<T>,
+    fault: &Option<Arc<dyn FaultInjector>>,
+    timeout: Option<Duration>,
+    item: GatherItem<T>,
+) -> Option<Parked<T>> {
+    let GatherItem { ticket, tenant, entry, kind, subs, iters, payload, submitted } = item;
+    let rec = match fault {
+        Some(f) => Recovery::from_faults(&f.at_gather(ticket)),
+        None => Recovery::default(),
+    };
+    if rec.delay_ms > 0 {
+        std::thread::sleep(Duration::from_millis(rec.delay_ms));
+    }
+    for &s in &rec.kill {
+        backends.kill(s);
+    }
+    if let Some(d) = timeout {
+        // Park instead of sleeping inline. Without a configured timeout
+        // a stall is indistinguishable from a slow shard and is
+        // ignored, as before.
+        if let Some(shard) = subs.iter().map(|s| s.shard).filter(|s| rec.stall.contains(s)).min() {
+            drop(payload);
+            return Some(Parked {
+                deadline: Instant::now() + d,
+                bound: d,
+                shard,
+                ticket,
+                tenant,
+                subs,
+                submitted,
+            });
+        }
+    }
+    let resp = match (kind, &payload) {
+        (GatherKind::Spmv, ScatterPayload::Spmv(x)) => {
+            recover_wait_spmv(backends, &entry, subs, &rec, timeout, x)
+                .map(|p| Response::Spmv(merge_shard_runs(p)))
+        }
+        (GatherKind::Batch, ScatterPayload::Batch(xs)) => {
+            recover_wait_batch(backends, &entry, subs, &rec, timeout, xs)
+                .map(|p| Response::Batch(merge_shard_batches(p)))
+        }
+        (GatherKind::Iterate, ScatterPayload::Spmv(x)) => {
+            gather_iterate(backends, &entry, subs, iters, Some((x, &rec)), timeout)
+        }
+        _ => Err(format_err!("internal: sharded gather payload/kind mismatch")),
+    };
+    drop(payload);
+    sched.complete(tenant, elapsed_us(submitted));
+    comp.publish(ticket, resp);
+    None
+}
+
+/// Expire one parked item: claim-discard its sub-responses (the stall
+/// is simulated at gather time only — the backends did the work, so
+/// nothing parks forever in a shard's completion store), release the
+/// tenant's quota slot, and publish the typed `ShardTimeout`.
+fn fail_parked<T: SpElem>(sched: &Sched<T>, comp: &Completions<T>, p: Parked<T>) {
+    let Parked { bound, shard, ticket, tenant, subs, submitted, .. } = p;
+    abort_subs(subs);
+    sched.complete(tenant, elapsed_us(submitted));
+    comp.publish(
+        ticket,
+        Err(Error::shard_timeout(
+            Some(shard),
+            format!("shard {shard} stalled: no sub-response within {bound:?}"),
+        )),
+    );
 }
 
 /// Submit one sub-request to backend `i`, respawning it first if it is
@@ -1457,15 +1581,15 @@ fn wait_sub<T: SpElem>(sub: &SubTicket<T>, timeout: Option<Duration>) -> Result<
 
 /// Wait one sub-ticket through the fault-recovery state machine:
 ///
-/// * **stalled** (with a configured timeout): sleep out the bound,
-///   claim-discard the sub-response so nothing leaks, and return the
-///   typed `ShardTimeout` naming the shard. Without a timeout a stall
-///   is indistinguishable from a slow shard and is ignored.
 /// * **killed**: the sub-response died with the backend — claim-discard
 ///   it, re-submit via `mk_req` (the submit respawns the dead backend),
 ///   and wait the fresh sub-ticket.
 /// * **dropped**: the completion was lost in transit — claim-discard
 ///   and re-execute on the (live) backend.
+///
+/// Stalls never reach here: [`gather_one`] parks the whole item behind
+/// a deadline instead (see [`Parked`]), so the gather thread keeps
+/// draining other tickets' completions while the stall bound runs.
 ///
 /// Recovery re-executes deterministic simulated work, so the recovered
 /// response is bit-identical to the fault-free one.
@@ -1478,16 +1602,6 @@ fn recover_sub<T: SpElem>(
     mk_req: impl Fn() -> Request<T>,
 ) -> Result<Response<T>> {
     let i = sub.shard;
-    if rec.stall.contains(&i) {
-        if let Some(d) = timeout {
-            std::thread::sleep(d);
-            let _ = sub.svc.wait(sub.ticket);
-            return Err(Error::shard_timeout(
-                Some(i),
-                format!("shard {i} stalled: no sub-response within {d:?}"),
-            ));
-        }
-    }
     if rec.kill.contains(&i) || rec.dropped.contains(&i) {
         let _ = sub.svc.wait(sub.ticket);
         let fresh = submit_one(b, entry, i, mk_req())?;

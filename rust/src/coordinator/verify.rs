@@ -133,7 +133,7 @@ pub fn buffer_pool_recycle_round() {
     });
     // Stage 3: drain the recycle channel into the pool, then take the
     // next merge buffer.
-    let mut pool: BufferPool<f64> = BufferPool::new();
+    let mut pool: BufferPool<f64> = BufferPool::new(0.0);
     {
         let (lock, cv) = &*chan;
         let mut q = lock.lock().expect("recycle channel poisoned");

@@ -121,6 +121,7 @@ pub mod pim;
 pub mod kernels;
 pub mod partition;
 pub mod coordinator;
+pub mod net;
 pub mod apps;
 pub mod baselines;
 pub mod runtime;

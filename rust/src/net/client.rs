@@ -1,0 +1,342 @@
+//! Small blocking client for the SparseP wire protocol.
+//!
+//! The client speaks the exact frame catalogue in
+//! [`crate::net::protocol`] and hands back the coordinator's own types
+//! — [`Response<f64>`] out of completions, typed
+//! [`crate::util::Error`]s out of `Error` frames (a wire
+//! `ShardTimeout` becomes [`Error::shard_timeout`] again) — so callers
+//! and the differential suite (`tests/net_equivalence.rs`) compare
+//! served results against the in-process facade directly.
+//!
+//! One call is outstanding at a time (the client is synchronous), but
+//! many tickets can be in flight: completions stream back in whatever
+//! order the scheduler finishes them, and frames for tickets other
+//! than the one being waited on are parked and handed out when their
+//! ticket is claimed — mirroring the facade's own
+//! submit-everything/wait-any-order contract.
+//!
+//! Two sheds, one surface: a connection-cap shed (the server's
+//! `Overloaded { ticket: 0 }` answered before submission) is
+//! synthesized into a local ticket whose response is
+//! [`Response::Overloaded`], so callers handle both shed layers with
+//! the same match arm they use for the facade's admission shed.
+
+use crate::coordinator::Response;
+use crate::matrix::CooMatrix;
+use crate::net::protocol::{decode_stream, Completion, Frame, WireErrorCode};
+use crate::util::{Context, Error, Result};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Synthetic tickets (connection-cap sheds, answered locally) live in
+/// the top half of the ticket space; the facade's real tickets start
+/// at 1 and count up, so the ranges can never collide.
+const LOCAL_TICKET_BIT: u64 = 1 << 63;
+
+/// A blocking connection to a `sparsep serve --listen` server.
+pub struct Client {
+    stream: TcpStream,
+    /// Bytes read but not yet framed.
+    rbuf: Vec<u8>,
+    /// Responses that streamed in while another ticket was being
+    /// waited on, keyed by ticket.
+    parked: HashMap<u64, Result<Response<f64>>>,
+    next_local: u64,
+}
+
+impl Client {
+    /// Connect to a serving front end.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connect to sparsep server")?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream, rbuf: Vec::new(), parked: HashMap::new(), next_local: 0 })
+    }
+
+    /// Register `m` under `tenant` with the named kernel (see
+    /// `sparsep kernels`). Returns the server's wire handle.
+    pub fn load(
+        &mut self,
+        tenant: &str,
+        m: &CooMatrix<f64>,
+        kernel: &str,
+        stripes: u32,
+    ) -> Result<u64> {
+        let frame = Frame::LoadMatrix {
+            tenant: tenant.to_string(),
+            kernel: kernel.to_string(),
+            stripes,
+            nrows: m.nrows() as u64,
+            ncols: m.ncols() as u64,
+            triples: m.iter().collect(),
+        };
+        self.send(&frame)?;
+        loop {
+            match self.read_frame()? {
+                Frame::Loaded { handle, .. } => return Ok(handle),
+                Frame::Error { ticket: 0, code, shard, message } => {
+                    return Err(wire_error(code, shard, message));
+                }
+                other => self.park(other)?,
+            }
+        }
+    }
+
+    /// Submit one SpMV; returns a claimable ticket (possibly already
+    /// answered locally when the server shed at the connection cap).
+    pub fn submit_spmv(
+        &mut self,
+        tenant: &str,
+        handle: u64,
+        x: Vec<f64>,
+        deadline: Option<Duration>,
+    ) -> Result<u64> {
+        let frame = Frame::SubmitSpmv {
+            tenant: tenant.to_string(),
+            handle,
+            deadline_ms: deadline_ms(deadline),
+            x,
+        };
+        self.submit(&frame)
+    }
+
+    /// Submit one batched (multi-vector) request.
+    pub fn submit_batch(
+        &mut self,
+        tenant: &str,
+        handle: u64,
+        xs: Vec<Vec<f64>>,
+        deadline: Option<Duration>,
+    ) -> Result<u64> {
+        let frame = Frame::SubmitBatch {
+            tenant: tenant.to_string(),
+            handle,
+            deadline_ms: deadline_ms(deadline),
+            xs,
+        };
+        self.submit(&frame)
+    }
+
+    /// Submit one iterated request (`iters` self-applications).
+    pub fn submit_iterate(
+        &mut self,
+        tenant: &str,
+        handle: u64,
+        x: Vec<f64>,
+        iters: usize,
+        deadline: Option<Duration>,
+    ) -> Result<u64> {
+        let frame = Frame::SubmitIterate {
+            tenant: tenant.to_string(),
+            handle,
+            deadline_ms: deadline_ms(deadline),
+            iters: iters as u32,
+            x,
+        };
+        self.submit(&frame)
+    }
+
+    /// Block until `ticket`'s response arrives (or is already parked).
+    pub fn wait(&mut self, ticket: u64) -> Result<Response<f64>> {
+        if let Some(resp) = self.parked.remove(&ticket) {
+            return resp;
+        }
+        if ticket & LOCAL_TICKET_BIT != 0 {
+            // Synthetic tickets are answered at submit; an unknown one
+            // was either claimed already or never issued.
+            return Err(Error::msg(format!("unknown local ticket {ticket}")));
+        }
+        loop {
+            match self.read_frame()? {
+                Frame::Completion { ticket: t, body } => {
+                    let resp = Ok(completion_response(*body));
+                    if t == ticket {
+                        return resp;
+                    }
+                    self.parked.insert(t, resp);
+                }
+                Frame::Overloaded { ticket: t } if t != 0 => {
+                    if t == ticket {
+                        return Ok(Response::Overloaded);
+                    }
+                    self.parked.insert(t, Ok(Response::Overloaded));
+                }
+                Frame::Error { ticket: 0, code, shard, message } => {
+                    return Err(wire_error(code, shard, message));
+                }
+                Frame::Error { ticket: t, code, shard, message } => {
+                    let err = Err(wire_error(code, shard, message));
+                    if t == ticket {
+                        return err;
+                    }
+                    self.parked.insert(t, err);
+                }
+                other => {
+                    return Err(Error::msg(format!("unexpected frame while waiting: {other:?}")));
+                }
+            }
+        }
+    }
+
+    /// Non-blocking-ish check: `Some(response)` when `ticket` has
+    /// finished, `None` while it is still in flight. Exchanges one
+    /// `Poll` round trip with the server unless the response is
+    /// already parked.
+    pub fn poll(&mut self, ticket: u64) -> Result<Option<Response<f64>>> {
+        if let Some(resp) = self.parked.remove(&ticket) {
+            return resp.map(Some);
+        }
+        if ticket & LOCAL_TICKET_BIT != 0 {
+            return Err(Error::msg(format!("unknown local ticket {ticket}")));
+        }
+        self.send(&Frame::Poll { ticket })?;
+        loop {
+            match self.read_frame()? {
+                Frame::NotReady { ticket: t } if t == ticket => return Ok(None),
+                Frame::Completion { ticket: t, body } => {
+                    let resp = completion_response(*body);
+                    if t == ticket {
+                        // The completion raced the poll; the NotReady
+                        // cannot come anymore (the server answers from
+                        // its map, which no longer holds the ticket) —
+                        // but an unknown-ticket error for our poll can.
+                        self.absorb_stale_poll_error(ticket)?;
+                        return Ok(Some(resp));
+                    }
+                    self.parked.insert(t, Ok(resp));
+                }
+                Frame::Overloaded { ticket: t } if t != 0 => {
+                    if t == ticket {
+                        self.absorb_stale_poll_error(ticket)?;
+                        return Ok(Some(Response::Overloaded));
+                    }
+                    self.parked.insert(t, Ok(Response::Overloaded));
+                }
+                Frame::Error { ticket: t, code, shard, message } if t == ticket => {
+                    return Err(wire_error(code, shard, message));
+                }
+                Frame::Error { ticket: 0, code, shard, message } => {
+                    return Err(wire_error(code, shard, message));
+                }
+                Frame::Error { ticket: t, code, shard, message } => {
+                    self.parked.insert(t, Err(wire_error(code, shard, message)));
+                }
+                other => {
+                    return Err(Error::msg(format!("unexpected frame while polling: {other:?}")));
+                }
+            }
+        }
+    }
+
+    /// Hand the underlying socket (and any unframed bytes must have
+    /// been consumed) to callers that drive the wire directly — the
+    /// load generator uses this after its synchronous load phase.
+    pub(crate) fn into_stream(self) -> Result<TcpStream> {
+        crate::ensure!(
+            self.rbuf.is_empty() && self.parked.is_empty(),
+            "cannot unwrap a client with buffered frames"
+        );
+        Ok(self.stream)
+    }
+
+    /// Send a `Submit*` frame and consume its ack (acks arrive in
+    /// request order): `Submitted` yields the server ticket,
+    /// `Overloaded {0}` synthesizes a locally-answered shed ticket,
+    /// `Error {0}` propagates typed.
+    fn submit(&mut self, frame: &Frame) -> Result<u64> {
+        self.send(frame)?;
+        loop {
+            match self.read_frame()? {
+                Frame::Submitted { ticket } => return Ok(ticket),
+                Frame::Overloaded { ticket: 0 } => {
+                    self.next_local += 1;
+                    let t = LOCAL_TICKET_BIT | self.next_local;
+                    self.parked.insert(t, Ok(Response::Overloaded));
+                    return Ok(t);
+                }
+                Frame::Error { ticket: 0, code, shard, message } => {
+                    return Err(wire_error(code, shard, message));
+                }
+                other => self.park(other)?,
+            }
+        }
+    }
+
+    /// Park a streamed frame that belongs to an earlier ticket.
+    fn park(&mut self, frame: Frame) -> Result<()> {
+        match frame {
+            Frame::Completion { ticket, body } => {
+                self.parked.insert(ticket, Ok(completion_response(*body)));
+                Ok(())
+            }
+            Frame::Overloaded { ticket } if ticket != 0 => {
+                self.parked.insert(ticket, Ok(Response::Overloaded));
+                Ok(())
+            }
+            Frame::Error { ticket, code, shard, message } if ticket != 0 => {
+                self.parked.insert(ticket, Err(wire_error(code, shard, message)));
+                Ok(())
+            }
+            other => Err(Error::msg(format!("unexpected frame from server: {other:?}"))),
+        }
+    }
+
+    /// After a completion raced an outstanding `Poll`, the server may
+    /// still answer the poll with an unknown-ticket error — absorb
+    /// exactly that reply so it cannot confuse a later wait.
+    fn absorb_stale_poll_error(&mut self, ticket: u64) -> Result<()> {
+        match self.read_frame()? {
+            Frame::Error { ticket: t, .. } if t == ticket => Ok(()),
+            other => self.park(other),
+        }
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.stream.write_all(&frame.encode()).context("write frame to server")
+    }
+
+    /// Read one complete frame, blocking. EOF mid-stream is a typed
+    /// transport error, never a panic or a hang.
+    fn read_frame(&mut self) -> Result<Frame> {
+        loop {
+            if let Some((frame, n)) = decode_stream(&self.rbuf)? {
+                self.rbuf.drain(..n);
+                return Ok(frame);
+            }
+            let mut chunk = [0u8; 16 * 1024];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err(Error::msg("server closed the connection mid-stream")),
+                Ok(n) => self.rbuf.extend_from_slice(&chunk[..n]),
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(Error::msg(format!("read from server: {e}"))),
+            }
+        }
+    }
+}
+
+fn deadline_ms(d: Option<Duration>) -> u32 {
+    match d {
+        None => 0,
+        // 0 means "no deadline" on the wire; clamp a sub-millisecond
+        // deadline up rather than silently dropping it.
+        Some(d) => (d.as_millis() as u32).max(1),
+    }
+}
+
+fn completion_response(body: Completion) -> Response<f64> {
+    match body {
+        Completion::Spmv(r) => Response::Spmv(r),
+        Completion::Batch(b) => Response::Batch(b),
+        Completion::Iterate(it) => Response::Iterate(it),
+    }
+}
+
+fn wire_error(code: WireErrorCode, shard: Option<u32>, message: String) -> Error {
+    match code {
+        WireErrorCode::ShardTimeout => {
+            Error::shard_timeout(shard.map(|s| s as usize), message)
+        }
+        WireErrorCode::Other => Error::msg(message),
+    }
+}

@@ -1,0 +1,460 @@
+//! Open-loop Poisson load generator for the TCP serving front end
+//! (`sparsep bench-net`), emitting `BENCH_net.json`.
+//!
+//! *Open loop* means arrivals are scheduled by a Poisson process (one
+//! independent sender per connection, exponential inter-arrival
+//! times), not by response completion — so when the server slows
+//! down, requests keep arriving and queueing delay shows up in the
+//! measured latency instead of silently throttling the offered load
+//! (the classic closed-loop coordinated-omission trap). Each level
+//! also ramps its instantaneous rate from 50% to 150% of the nominal
+//! figure across the run, so a level sweeps through its own
+//! neighborhood instead of sampling one operating point.
+//!
+//! Per connection, one submit thread writes `SubmitSpmv` frames on the
+//! Poisson schedule (tenants drawn 2:1 alice:bob, matching the served
+//! facade's weights) and one reader thread consumes the streamed
+//! responses: `Submitted` acks pair with submissions in request order,
+//! `Completion`s record end-to-end latency into a
+//! [`LatencyHistogram`], and both shed layers (`Overloaded {0}` at the
+//! connection cap, `Overloaded {ticket}` from admission control) are
+//! counted as typed sheds, never as losses. The report carries
+//! p50/p99/p999/max per offered-load level — at least two levels, so
+//! the latency/throughput curve has a slope, not a point.
+
+use crate::coordinator::queue::DEFAULT_QUEUE_DEPTH;
+use crate::coordinator::{
+    Engine, LatencyHistogram, LatencySnapshot, ShardedService, ShardedServiceBuilder, TenantSpec,
+};
+use crate::matrix::{generate, CooMatrix};
+use crate::net::client::Client;
+use crate::net::protocol::{decode_stream, Frame};
+use crate::net::server::{Server, ServerOpts};
+use crate::pim::PimSystem;
+use crate::util::json::{arr, num, obj, s};
+use crate::util::rng::Rng;
+use crate::util::sync::{thread, Arc, Mutex};
+use crate::util::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Kernel every load-generated matrix is served with.
+const KERNEL: &str = "COO.nnz";
+/// Tenant mix: weight-proportional draw, matching the facade's WRR
+/// weights (2:1).
+const TENANTS: [(&str, usize); 2] = [("alice", 2), ("bob", 1)];
+/// How long a level waits for in-flight requests to drain after the
+/// last submission before counting the stragglers as lost.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Options for `sparsep bench-net`.
+#[derive(Clone, Debug)]
+pub struct LoadgenOpts {
+    /// Square matrix dimension served during the run.
+    pub rows: usize,
+    /// Mean non-zeros per row of the generated matrix.
+    pub deg: usize,
+    /// Shards of the in-process server (ignored with `addr`).
+    pub shards: usize,
+    /// DPUs per shard of the in-process server (ignored with `addr`).
+    pub n_dpus: usize,
+    /// Concurrent client connections per level.
+    pub conns: usize,
+    /// Requests per offered-load level (split across connections).
+    pub requests: usize,
+    /// Offered load levels, requests/second. At least two, so the
+    /// report is a curve; each level also ramps 50% -> 150% internally.
+    pub rates: Vec<f64>,
+    /// Per-tenant admission cap of the in-process server — small
+    /// enough caps make the top level shed visibly (typed, counted).
+    pub max_queue: usize,
+    /// Deterministic seed (matrix + arrival schedule + tenant draw).
+    pub seed: u64,
+    /// Aim at an already-running server instead of spawning one.
+    pub addr: Option<String>,
+    /// Report path.
+    pub out: String,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> LoadgenOpts {
+        LoadgenOpts {
+            rows: 1500,
+            deg: 6,
+            shards: 2,
+            n_dpus: 16,
+            conns: 2,
+            requests: 240,
+            rates: vec![300.0, 1200.0],
+            max_queue: 128,
+            seed: 0x10AD,
+            addr: None,
+            out: "BENCH_net.json".to_string(),
+        }
+    }
+}
+
+/// One level's aggregated outcome.
+struct LevelStats {
+    offered: f64,
+    achieved: f64,
+    submitted: u64,
+    completed: u64,
+    shed: u64,
+    errors: u64,
+    lost: u64,
+    snap: LatencySnapshot,
+}
+
+/// Level-wide counters shared by every connection's reader.
+#[derive(Default)]
+struct LevelAgg {
+    hist: LatencyHistogram,
+    completed: u64,
+    shed: u64,
+    errors: u64,
+}
+
+/// Per-connection pairing state: submit instants waiting for their
+/// ack (acks arrive in request order), then in-flight by ticket.
+#[derive(Default)]
+struct ConnState {
+    pending: VecDeque<Instant>,
+    in_flight: HashMap<u64, Instant>,
+}
+
+/// Run the generator: spawn (or dial) a server, drive every offered
+/// load level, print a summary table, write the JSON report.
+pub fn run(opts: &LoadgenOpts) -> Result<()> {
+    crate::ensure!(!opts.rates.is_empty(), "bench-net needs at least one --rates level");
+    crate::ensure!(opts.conns >= 1, "bench-net needs at least one connection");
+    let server = match &opts.addr {
+        Some(_) => None,
+        None => Some(spawn_local(opts)?),
+    };
+    let addr = match &opts.addr {
+        Some(a) => a.clone(),
+        None => server.as_ref().expect("spawned above").local_addr().to_string(),
+    };
+    let m = generate::scale_free::<f64>(opts.rows, opts.rows, opts.deg, 0.7, opts.seed);
+    println!(
+        "bench-net: {}x{} ({} nnz) via {KERNEL} at {addr}, {} conn(s), {} req/level",
+        m.nrows(),
+        m.ncols(),
+        m.nnz(),
+        opts.conns,
+        opts.requests
+    );
+
+    let mut levels = Vec::with_capacity(opts.rates.len());
+    for (li, &rate) in opts.rates.iter().enumerate() {
+        let lv = run_level(&addr, opts, &m, rate, li as u64)?;
+        println!(
+            "  level {:>8.1} rps offered: {:>8.1} achieved, {}/{} completed, {} shed, {} errors{}  \
+             p50/p99/p999 {}/{}/{} us (max {})",
+            lv.offered,
+            lv.achieved,
+            lv.completed,
+            lv.submitted,
+            lv.shed,
+            lv.errors,
+            if lv.lost > 0 { format!(", {} LOST", lv.lost) } else { String::new() },
+            lv.snap.p50_us,
+            lv.snap.p99_us,
+            lv.snap.p999_us,
+            lv.snap.max_us
+        );
+        levels.push(lv);
+    }
+
+    let j = obj(vec![
+        ("bench", s("net")),
+        ("rows", num(opts.rows as f64)),
+        ("deg", num(opts.deg as f64)),
+        ("shards", num(opts.shards as f64)),
+        ("conns", num(opts.conns as f64)),
+        (
+            "levels",
+            arr(levels
+                .iter()
+                .map(|lv| {
+                    obj(vec![
+                        ("offered_rps", num(lv.offered)),
+                        ("achieved_rps", num(lv.achieved)),
+                        ("requests", num(lv.submitted as f64)),
+                        ("completed", num(lv.completed as f64)),
+                        ("shed", num(lv.shed as f64)),
+                        ("errors", num(lv.errors as f64)),
+                        ("lost", num(lv.lost as f64)),
+                        ("p50_us", num(lv.snap.p50_us as f64)),
+                        ("p99_us", num(lv.snap.p99_us as f64)),
+                        ("p999_us", num(lv.snap.p999_us as f64)),
+                        ("max_us", num(lv.snap.max_us as f64)),
+                    ])
+                })
+                .collect()),
+        ),
+    ]);
+    std::fs::write(&opts.out, j.to_string() + "\n")
+        .with_context(|| format!("write {}", opts.out))?;
+    println!("wrote {}", opts.out);
+    Ok(())
+}
+
+/// The in-process server the generator aims at when no `addr` is
+/// given: tenants matching [`TENANTS`], typed admission shedding at
+/// `max_queue`.
+fn spawn_local(opts: &LoadgenOpts) -> Result<Server> {
+    let mut b = ShardedServiceBuilder::new()
+        .shards(opts.shards.max(1))
+        .engine(Engine::Serial)
+        .queue_depth(DEFAULT_QUEUE_DEPTH)
+        .tenants(TENANTS.iter().map(|&(n, w)| TenantSpec::new(n, w)).collect());
+    if opts.max_queue > 0 {
+        b = b.max_queue(opts.max_queue);
+    }
+    let svc: ShardedService<f64> = b.build(PimSystem::with_dpus(opts.n_dpus.max(1)))?;
+    Server::spawn(svc, "127.0.0.1:0", ServerOpts::default())
+}
+
+fn run_level(
+    addr: &str,
+    opts: &LoadgenOpts,
+    m: &CooMatrix<f64>,
+    rate: f64,
+    level_idx: u64,
+) -> Result<LevelStats> {
+    let level = Arc::new(Mutex::new(LevelAgg::default()));
+    let mut conn_states: Vec<Arc<Mutex<ConnState>>> = Vec::with_capacity(opts.conns);
+    let mut submitters = Vec::with_capacity(opts.conns);
+    let mut readers = Vec::with_capacity(opts.conns);
+    let mut shut: Vec<TcpStream> = Vec::with_capacity(opts.conns);
+    let rate_per_conn = rate / opts.conns as f64;
+    let t0 = Instant::now();
+    let mut submitted_total = 0u64;
+
+    for c in 0..opts.conns {
+        // Synchronous load phase: one handle per tenant, then unwrap
+        // the raw socket for the open-loop threads.
+        let mut cl = Client::connect(addr)?;
+        let h_alice = cl.load(TENANTS[0].0, m, KERNEL, 8)?;
+        let h_bob = cl.load(TENANTS[1].0, m, KERNEL, 8)?;
+        let stream = cl.into_stream()?;
+        let rstream = stream.try_clone().context("clone socket for the reader thread")?;
+        shut.push(stream.try_clone().context("clone socket for level teardown")?);
+
+        let n = opts.requests / opts.conns + usize::from(c < opts.requests % opts.conns);
+        submitted_total += n as u64;
+        let state = Arc::new(Mutex::new(ConnState::default()));
+        conn_states.push(Arc::clone(&state));
+
+        let rd_state = Arc::clone(&state);
+        let rd_level = Arc::clone(&level);
+        readers.push(thread::spawn_named(&format!("spmv-loadgen-read-{c}"), move || {
+            reader_loop(rstream, &rd_state, &rd_level);
+        }));
+
+        let ncols = m.ncols();
+        let seed = opts.seed ^ (level_idx << 32) ^ (c as u64).wrapping_mul(0x9E37_79B9);
+        submitters.push(thread::spawn_named(&format!("spmv-loadgen-send-{c}"), move || {
+            submit_loop(stream, &state, ncols, h_alice, h_bob, n, rate_per_conn, seed);
+        }));
+    }
+
+    for h in submitters {
+        let _ = h.join();
+    }
+    // Drain: the responses of everything submitted are still streaming.
+    let deadline = Instant::now() + DRAIN_DEADLINE;
+    loop {
+        let busy = conn_states.iter().any(|st| {
+            let st = st.lock().expect("conn state poisoned");
+            !st.pending.is_empty() || !st.in_flight.is_empty()
+        });
+        if !busy || Instant::now() > deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    for sock in shut {
+        let _ = sock.shutdown(Shutdown::Both);
+    }
+    for h in readers {
+        let _ = h.join();
+    }
+
+    let lost: u64 = conn_states
+        .iter()
+        .map(|st| {
+            let st = st.lock().expect("conn state poisoned");
+            (st.pending.len() + st.in_flight.len()) as u64
+        })
+        .sum();
+    let agg = level.lock().expect("level aggregate poisoned");
+    Ok(LevelStats {
+        offered: rate,
+        achieved: agg.completed as f64 / elapsed.max(1e-9),
+        submitted: submitted_total,
+        completed: agg.completed,
+        shed: agg.shed,
+        errors: agg.errors,
+        lost,
+        snap: agg.hist.snapshot(),
+    })
+}
+
+/// One connection's open-loop sender: Poisson arrivals at a ramping
+/// rate, tenants drawn weight-proportionally, every submission's
+/// instant queued for the reader to pair with its in-order ack.
+#[allow(clippy::too_many_arguments)]
+fn submit_loop(
+    mut stream: TcpStream,
+    state: &Arc<Mutex<ConnState>>,
+    ncols: usize,
+    h_alice: u64,
+    h_bob: u64,
+    n: usize,
+    rate: f64,
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    let weight_total: usize = TENANTS.iter().map(|&(_, w)| w).sum();
+    for i in 0..n {
+        // Ramp profile: instantaneous rate sweeps 0.5x -> 1.5x of the
+        // level's nominal rate across the run.
+        let progress = i as f64 / n.max(1) as f64;
+        let r = (rate * (0.5 + progress)).max(1e-9);
+        // Exponential inter-arrival (inverse CDF); capped so a tiny
+        // configured rate cannot wedge the level.
+        let dt = (-(1.0 - rng.gen_f64()).ln() / r).min(0.25);
+        std::thread::sleep(Duration::from_secs_f64(dt));
+        let (tenant, handle) = if rng.gen_range(weight_total) < TENANTS[0].1 {
+            (TENANTS[0].0, h_alice)
+        } else {
+            (TENANTS[1].0, h_bob)
+        };
+        let x: Vec<f64> = (0..ncols).map(|j| (((j + i) % 7) as f64) - 3.0).collect();
+        let frame =
+            Frame::SubmitSpmv { tenant: tenant.to_string(), handle, deadline_ms: 0, x };
+        state.lock().expect("conn state poisoned").pending.push_back(Instant::now());
+        if stream.write_all(&frame.encode()).is_err() {
+            // Server gone: retract the unpaired submission and stop.
+            state.lock().expect("conn state poisoned").pending.pop_back();
+            break;
+        }
+    }
+}
+
+/// One connection's reader: pair acks with submissions (request
+/// order), record completion latencies, count both shed layers and
+/// typed errors. Exits on EOF / socket shutdown.
+fn reader_loop(mut stream: TcpStream, state: &Arc<Mutex<ConnState>>, level: &Arc<Mutex<LevelAgg>>) {
+    let mut rbuf: Vec<u8> = Vec::new();
+    loop {
+        loop {
+            match decode_stream(&rbuf) {
+                Ok(Some((frame, n))) => {
+                    rbuf.drain(..n);
+                    on_frame(frame, state, level);
+                }
+                Ok(None) => break,
+                Err(_) => return, // corrupt stream; the level's drain accounts the loss
+            }
+        }
+        let mut chunk = [0u8; 16 * 1024];
+        match stream.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => rbuf.extend_from_slice(&chunk[..n]),
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+fn on_frame(frame: Frame, state: &Arc<Mutex<ConnState>>, level: &Arc<Mutex<LevelAgg>>) {
+    match frame {
+        Frame::Submitted { ticket } => {
+            let mut st = state.lock().expect("conn state poisoned");
+            if let Some(t0) = st.pending.pop_front() {
+                st.in_flight.insert(ticket, t0);
+            }
+        }
+        Frame::Overloaded { ticket: 0 } => {
+            state.lock().expect("conn state poisoned").pending.pop_front();
+            level.lock().expect("level aggregate poisoned").shed += 1;
+        }
+        Frame::Overloaded { ticket } => {
+            if state.lock().expect("conn state poisoned").in_flight.remove(&ticket).is_some() {
+                level.lock().expect("level aggregate poisoned").shed += 1;
+            }
+        }
+        Frame::Completion { ticket, .. } => {
+            let t0 = state.lock().expect("conn state poisoned").in_flight.remove(&ticket);
+            if let Some(t0) = t0 {
+                let mut agg = level.lock().expect("level aggregate poisoned");
+                agg.hist.record(t0.elapsed().as_micros() as u64);
+                agg.completed += 1;
+            }
+        }
+        Frame::Error { ticket: 0, .. } => {
+            state.lock().expect("conn state poisoned").pending.pop_front();
+            level.lock().expect("level aggregate poisoned").errors += 1;
+        }
+        Frame::Error { ticket, .. } => {
+            state.lock().expect("conn state poisoned").in_flight.remove(&ticket);
+            level.lock().expect("level aggregate poisoned").errors += 1;
+        }
+        _ => {} // Loaded/NotReady/etc: nothing to account
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    /// End-to-end smoke: a tiny run against an in-process server must
+    /// produce a parseable BENCH_net.json with one entry per offered
+    /// level, full accounting, and integer percentiles.
+    #[test]
+    fn loadgen_smoke_emits_report() {
+        let out = std::env::temp_dir()
+            .join(format!("sparsep_bench_net_{}.json", std::process::id()));
+        let opts = LoadgenOpts {
+            rows: 48,
+            deg: 3,
+            shards: 1,
+            n_dpus: 4,
+            conns: 1,
+            requests: 12,
+            rates: vec![500.0, 1500.0],
+            max_queue: 64,
+            seed: 0xBEEF,
+            addr: None,
+            out: out.to_string_lossy().into_owned(),
+        };
+        run(&opts).expect("loadgen must run clean");
+        let text = std::fs::read_to_string(&out).expect("report written");
+        let j = Json::parse(&text).expect("report is valid json");
+        assert_eq!(j.get("bench").as_str(), Some("net"));
+        let levels = j.get("levels").as_arr().expect("levels array");
+        assert_eq!(levels.len(), 2, "one report entry per offered level");
+        for lv in levels {
+            let total = lv.get("completed").as_f64().unwrap()
+                + lv.get("shed").as_f64().unwrap()
+                + lv.get("errors").as_f64().unwrap()
+                + lv.get("lost").as_f64().unwrap();
+            assert_eq!(total, lv.get("requests").as_f64().unwrap(), "full accounting");
+            assert_eq!(lv.get("lost").as_f64(), Some(0.0), "a healthy local run loses nothing");
+            assert!(lv.get("p50_us").as_f64().is_some(), "percentiles present");
+            assert!(
+                lv.get("p99_us").as_f64().unwrap() >= lv.get("p50_us").as_f64().unwrap(),
+                "quantiles are ordered"
+            );
+        }
+        let _ = std::fs::remove_file(&out);
+    }
+}

@@ -1,0 +1,34 @@
+//! Network serving front end: a TCP wire protocol over the sharded
+//! coordinator facade.
+//!
+//! Everything below the wire is the existing serving stack
+//! ([`crate::coordinator::ShardedService`]); this module only adds a
+//! transport:
+//!
+//! - [`protocol`] — the length-prefixed binary frame catalogue
+//!   (`SPRP` magic). Floats travel as raw IEEE-754 bits, so a served
+//!   result is bit-identical to an in-process one.
+//! - [`server`] — `sparsep serve --listen ADDR`: one event-loop
+//!   thread drives every connection over non-blocking sockets, one
+//!   dispatch thread forwards facade completions; no thread per
+//!   connection, no poll loop per ticket.
+//! - [`client`] — a small blocking client returning the
+//!   coordinator's own [`crate::coordinator::Response`] / typed
+//!   [`crate::util::Error`] values.
+//! - [`loadgen`] — the open-loop Poisson generator behind
+//!   `sparsep bench-net` (`BENCH_net.json`).
+//!
+//! Backpressure is typed at both layers: the server's per-connection
+//! in-flight cap and the facade's per-tenant admission cap each
+//! surface as `Overloaded` frames, never as dropped connections or
+//! silent queuing.
+
+pub mod client;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+
+pub use client::Client;
+pub use loadgen::LoadgenOpts;
+pub use protocol::{decode_stream, Completion, Frame, WireErrorCode};
+pub use server::{Server, ServerOpts};

@@ -1,0 +1,782 @@
+//! The SparseP wire protocol: length-prefixed binary frames.
+//!
+//! Every frame is `header ++ payload`:
+//!
+//! ```text
+//! +------+------+------+------+---------+--------+----------------+
+//! | 'S'  | 'P'  | 'R'  | 'P'  | version | type   | payload length |
+//! +------+------+------+------+---------+--------+----------------+
+//!   magic (4 bytes)              u8        u8       u32 LE
+//! ```
+//!
+//! followed by `payload length` bytes of type-specific payload. All
+//! integers are little-endian; all floats travel as `f64::to_bits`
+//! (bit-exact — NaN payloads and signed zeros survive, which is what
+//! lets `tests/net_equivalence.rs` demand *bit-identical* responses
+//! against the in-process oracle).
+//!
+//! Client → server frames: [`Frame::LoadMatrix`], the three
+//! `Submit*` shapes (each tagged with a tenant name and an optional
+//! deadline), and [`Frame::Poll`]. Server → client frames:
+//! [`Frame::Loaded`], [`Frame::Submitted`], streamed
+//! [`Frame::Completion`]s, the [`Frame::Overloaded`] backpressure
+//! frame, [`Frame::NotReady`], and typed [`Frame::Error`]s.
+//!
+//! Decoding is fully bounds-checked and never panics: any truncated,
+//! oversized, or corrupt input yields a typed [`crate::util::Error`]
+//! (or `Ok(None)` from [`decode_stream`] when the frame is merely
+//! incomplete). The fuzz tests at the bottom of this file drive random
+//! and truncated byte streams through the decoder to lock that in.
+
+use crate::coordinator::{BatchResult, Breakdown, IterationsResult, RunResult, RunStats};
+use crate::pim::Energy;
+use crate::util::{Error, Result};
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"SPRP";
+/// Protocol version carried in every header.
+pub const VERSION: u8 = 1;
+/// Fixed header size: magic + version + frame type + payload length.
+pub const HEADER_LEN: usize = 10;
+/// Hard cap on a frame's payload (64 MiB): anything larger is corrupt
+/// (or hostile) and is rejected before any allocation happens.
+pub const MAX_PAYLOAD: usize = 64 << 20;
+/// Cap on an encoded string (tenant / kernel names, error messages).
+pub const MAX_STR: usize = 1 << 20;
+
+// Frame type tags. Client -> server:
+const T_LOAD_MATRIX: u8 = 1;
+const T_SUBMIT_SPMV: u8 = 2;
+const T_SUBMIT_BATCH: u8 = 3;
+const T_SUBMIT_ITERATE: u8 = 4;
+const T_POLL: u8 = 5;
+// Server -> client:
+const T_LOADED: u8 = 16;
+const T_SUBMITTED: u8 = 17;
+const T_COMPLETION: u8 = 18;
+const T_OVERLOADED: u8 = 19;
+const T_NOT_READY: u8 = 20;
+const T_ERROR: u8 = 21;
+
+/// Machine-checkable error classification carried by [`Frame::Error`]
+/// (the wire twin of [`crate::util::ErrorKind`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireErrorCode {
+    /// Anything without a dedicated code.
+    Other,
+    /// A bounded wait expired (`ErrorKind::ShardTimeout`); the frame's
+    /// `shard` field names the wedged shard when known.
+    ShardTimeout,
+}
+
+/// A completed request's payload, mirroring the request shape.
+#[derive(Clone, Debug)]
+pub enum Completion {
+    Spmv(RunResult<f64>),
+    Batch(BatchResult<f64>),
+    Iterate(IterationsResult<f64>),
+}
+
+/// One protocol frame. See the module docs for the frame catalogue and
+/// the byte-level layout of each payload.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    /// Register a matrix (COO triples) under `tenant` with the named
+    /// kernel; answered by [`Frame::Loaded`] or [`Frame::Error`].
+    LoadMatrix {
+        tenant: String,
+        kernel: String,
+        stripes: u32,
+        nrows: u64,
+        ncols: u64,
+        triples: Vec<(u32, u32, f64)>,
+    },
+    /// Submit one SpMV. `deadline_ms == 0` means no deadline.
+    SubmitSpmv { tenant: String, handle: u64, deadline_ms: u32, x: Vec<f64> },
+    /// Submit one batched (multi-vector) request.
+    SubmitBatch { tenant: String, handle: u64, deadline_ms: u32, xs: Vec<Vec<f64>> },
+    /// Submit one iterated request (`iters` self-applications).
+    SubmitIterate { tenant: String, handle: u64, deadline_ms: u32, iters: u32, x: Vec<f64> },
+    /// Ask whether `ticket` is still in flight; answered by
+    /// [`Frame::NotReady`] (still queued/executing — its completion
+    /// will stream when ready) or [`Frame::Error`] (unknown ticket).
+    Poll { ticket: u64 },
+    /// A [`Frame::LoadMatrix`] succeeded.
+    Loaded { handle: u64, nrows: u64, ncols: u64 },
+    /// A `Submit*` was accepted; its completion streams later under
+    /// the same ticket.
+    Submitted { ticket: u64 },
+    /// A submitted request finished.
+    Completion { ticket: u64, body: Box<Completion> },
+    /// Backpressure: the request was shed. `ticket == 0` when the
+    /// connection's in-flight cap rejected it before submission (the
+    /// frame answers the `Submit*` in request order); a non-zero
+    /// ticket is the facade's own typed admission shed
+    /// ([`crate::coordinator::Response::Overloaded`]).
+    Overloaded { ticket: u64 },
+    /// Answer to [`Frame::Poll`]: the ticket is still in flight.
+    NotReady { ticket: u64 },
+    /// A request failed. `ticket == 0` marks a request rejected before
+    /// submission (answers the `Submit*`/`LoadMatrix` in request
+    /// order); non-zero names the submitted ticket that failed.
+    Error { ticket: u64, code: WireErrorCode, shard: Option<u32>, message: String },
+}
+
+impl Frame {
+    /// Encode this frame (header + payload) to fresh bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + 64);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append this frame (header + payload) to `out` — the server's
+    /// write path reuses pooled buffers through this entry point.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(self.type_tag());
+        out.extend_from_slice(&[0u8; 4]); // payload length, patched below
+        self.encode_payload(out);
+        let plen = (out.len() - start - HEADER_LEN) as u32;
+        out[start + 6..start + HEADER_LEN].copy_from_slice(&plen.to_le_bytes());
+    }
+
+    fn type_tag(&self) -> u8 {
+        match self {
+            Frame::LoadMatrix { .. } => T_LOAD_MATRIX,
+            Frame::SubmitSpmv { .. } => T_SUBMIT_SPMV,
+            Frame::SubmitBatch { .. } => T_SUBMIT_BATCH,
+            Frame::SubmitIterate { .. } => T_SUBMIT_ITERATE,
+            Frame::Poll { .. } => T_POLL,
+            Frame::Loaded { .. } => T_LOADED,
+            Frame::Submitted { .. } => T_SUBMITTED,
+            Frame::Completion { .. } => T_COMPLETION,
+            Frame::Overloaded { .. } => T_OVERLOADED,
+            Frame::NotReady { .. } => T_NOT_READY,
+            Frame::Error { .. } => T_ERROR,
+        }
+    }
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        match self {
+            Frame::LoadMatrix { tenant, kernel, stripes, nrows, ncols, triples } => {
+                put_str(out, tenant);
+                put_str(out, kernel);
+                out.extend_from_slice(&stripes.to_le_bytes());
+                out.extend_from_slice(&nrows.to_le_bytes());
+                out.extend_from_slice(&ncols.to_le_bytes());
+                out.extend_from_slice(&(triples.len() as u64).to_le_bytes());
+                for &(r, c, v) in triples {
+                    out.extend_from_slice(&r.to_le_bytes());
+                    out.extend_from_slice(&c.to_le_bytes());
+                    out.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+            Frame::SubmitSpmv { tenant, handle, deadline_ms, x } => {
+                put_str(out, tenant);
+                out.extend_from_slice(&handle.to_le_bytes());
+                out.extend_from_slice(&deadline_ms.to_le_bytes());
+                put_f64s(out, x);
+            }
+            Frame::SubmitBatch { tenant, handle, deadline_ms, xs } => {
+                put_str(out, tenant);
+                out.extend_from_slice(&handle.to_le_bytes());
+                out.extend_from_slice(&deadline_ms.to_le_bytes());
+                out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+                for x in xs {
+                    put_f64s(out, x);
+                }
+            }
+            Frame::SubmitIterate { tenant, handle, deadline_ms, iters, x } => {
+                put_str(out, tenant);
+                out.extend_from_slice(&handle.to_le_bytes());
+                out.extend_from_slice(&deadline_ms.to_le_bytes());
+                out.extend_from_slice(&iters.to_le_bytes());
+                put_f64s(out, x);
+            }
+            Frame::Poll { ticket }
+            | Frame::Submitted { ticket }
+            | Frame::Overloaded { ticket }
+            | Frame::NotReady { ticket } => {
+                out.extend_from_slice(&ticket.to_le_bytes());
+            }
+            Frame::Loaded { handle, nrows, ncols } => {
+                out.extend_from_slice(&handle.to_le_bytes());
+                out.extend_from_slice(&nrows.to_le_bytes());
+                out.extend_from_slice(&ncols.to_le_bytes());
+            }
+            Frame::Completion { ticket, body } => {
+                out.extend_from_slice(&ticket.to_le_bytes());
+                match &**body {
+                    Completion::Spmv(r) => {
+                        out.push(0);
+                        put_run(out, r);
+                    }
+                    Completion::Batch(b) => {
+                        out.push(1);
+                        out.extend_from_slice(&(b.runs.len() as u32).to_le_bytes());
+                        for r in &b.runs {
+                            put_run(out, r);
+                        }
+                    }
+                    Completion::Iterate(it) => {
+                        out.push(2);
+                        put_run(out, &it.last);
+                        put_breakdown(out, &it.total);
+                        put_energy(out, &it.energy);
+                        out.extend_from_slice(&(it.iters as u64).to_le_bytes());
+                    }
+                }
+            }
+            Frame::Error { ticket, code, shard, message } => {
+                out.extend_from_slice(&ticket.to_le_bytes());
+                out.push(match code {
+                    WireErrorCode::Other => 0,
+                    WireErrorCode::ShardTimeout => 1,
+                });
+                match shard {
+                    Some(s) => {
+                        out.push(1);
+                        out.extend_from_slice(&s.to_le_bytes());
+                    }
+                    None => {
+                        out.push(0);
+                        out.extend_from_slice(&0u32.to_le_bytes());
+                    }
+                }
+                put_str(out, message);
+            }
+        }
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    // Length caps are enforced at decode; encoding truncates nothing —
+    // callers never build names/messages anywhere near MAX_STR.
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for v in xs {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+fn put_breakdown(out: &mut Vec<u8>, b: &Breakdown) {
+    for v in [b.load_s, b.kernel_s, b.retrieve_s, b.merge_s] {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+fn put_energy(out: &mut Vec<u8>, e: &Energy) {
+    for v in [e.dpu_j, e.dpu_idle_j, e.bus_j, e.host_j] {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+fn put_run(out: &mut Vec<u8>, r: &RunResult<f64>) {
+    put_f64s(out, &r.y);
+    put_breakdown(out, &r.breakdown);
+    let s = &r.stats;
+    out.extend_from_slice(&s.dpu_imbalance.to_bits().to_le_bytes());
+    out.extend_from_slice(&s.kernel_cycles.to_le_bytes());
+    out.extend_from_slice(&s.bus_bytes_moved.to_le_bytes());
+    out.extend_from_slice(&s.bus_bytes_payload.to_le_bytes());
+    out.extend_from_slice(&s.matrix_load_s.to_bits().to_le_bytes());
+    out.extend_from_slice(&(s.n_dpus as u64).to_le_bytes());
+    out.extend_from_slice(&(s.nnz as u64).to_le_bytes());
+    put_energy(out, &r.energy);
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// * `Ok(Some((frame, consumed)))` — a complete frame parsed; the
+///   caller drains `consumed` bytes and goes again.
+/// * `Ok(None)` — the buffer holds a valid prefix of a frame; read
+///   more bytes and retry.
+/// * `Err(_)` — the stream is corrupt (bad magic/version, oversized
+///   length, truncated or trailing payload bytes, invalid counts);
+///   the connection should be dropped.
+///
+/// Never panics on any input — locked by the fuzz tests below.
+pub fn decode_stream(buf: &[u8]) -> Result<Option<(Frame, usize)>> {
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    if buf[..4] != MAGIC {
+        return Err(Error::msg("bad frame magic"));
+    }
+    if buf[4] != VERSION {
+        return Err(Error::msg(format!(
+            "unsupported protocol version {} (this build speaks {VERSION})",
+            buf[4]
+        )));
+    }
+    let ftype = buf[5];
+    let plen = u32::from_le_bytes([buf[6], buf[7], buf[8], buf[9]]) as usize;
+    if plen > MAX_PAYLOAD {
+        return Err(Error::msg(format!("frame payload {plen} exceeds cap {MAX_PAYLOAD}")));
+    }
+    if buf.len() < HEADER_LEN + plen {
+        return Ok(None);
+    }
+    let frame = decode_payload(ftype, &buf[HEADER_LEN..HEADER_LEN + plen])?;
+    Ok(Some((frame, HEADER_LEN + plen)))
+}
+
+fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame> {
+    let mut c = Cur { b: payload, i: 0 };
+    let frame = match ftype {
+        T_LOAD_MATRIX => {
+            let tenant = c.str()?;
+            let kernel = c.str()?;
+            let stripes = c.u32()?;
+            let nrows = c.u64()?;
+            let ncols = c.u64()?;
+            let nnz = c.u64()? as usize;
+            // 16 bytes per triple: reject a count the payload cannot
+            // possibly hold before allocating anything.
+            if nnz > c.remaining() / 16 {
+                return Err(Error::msg(format!(
+                    "triple count {nnz} exceeds payload ({} bytes left)",
+                    c.remaining()
+                )));
+            }
+            let mut triples = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                let r = c.u32()?;
+                let col = c.u32()?;
+                let v = c.f64()?;
+                triples.push((r, col, v));
+            }
+            Frame::LoadMatrix { tenant, kernel, stripes, nrows, ncols, triples }
+        }
+        T_SUBMIT_SPMV => Frame::SubmitSpmv {
+            tenant: c.str()?,
+            handle: c.u64()?,
+            deadline_ms: c.u32()?,
+            x: c.f64s()?,
+        },
+        T_SUBMIT_BATCH => {
+            let tenant = c.str()?;
+            let handle = c.u64()?;
+            let deadline_ms = c.u32()?;
+            let nvec = c.u32()? as usize;
+            // Each vector costs at least its 4-byte count.
+            if nvec > c.remaining() / 4 {
+                return Err(Error::msg(format!("batch vector count {nvec} exceeds payload")));
+            }
+            let mut xs = Vec::with_capacity(nvec);
+            for _ in 0..nvec {
+                xs.push(c.f64s()?);
+            }
+            Frame::SubmitBatch { tenant, handle, deadline_ms, xs }
+        }
+        T_SUBMIT_ITERATE => Frame::SubmitIterate {
+            tenant: c.str()?,
+            handle: c.u64()?,
+            deadline_ms: c.u32()?,
+            iters: c.u32()?,
+            x: c.f64s()?,
+        },
+        T_POLL => Frame::Poll { ticket: c.u64()? },
+        T_LOADED => Frame::Loaded { handle: c.u64()?, nrows: c.u64()?, ncols: c.u64()? },
+        T_SUBMITTED => Frame::Submitted { ticket: c.u64()? },
+        T_COMPLETION => {
+            let ticket = c.u64()?;
+            let body = match c.u8()? {
+                0 => Completion::Spmv(get_run(&mut c)?),
+                1 => {
+                    let nruns = c.u32()? as usize;
+                    if nruns > c.remaining() / 4 {
+                        return Err(Error::msg(format!("batch run count {nruns} exceeds payload")));
+                    }
+                    let mut runs = Vec::with_capacity(nruns);
+                    for _ in 0..nruns {
+                        runs.push(get_run(&mut c)?);
+                    }
+                    Completion::Batch(BatchResult { runs })
+                }
+                2 => {
+                    let last = get_run(&mut c)?;
+                    let total = get_breakdown(&mut c)?;
+                    let energy = get_energy(&mut c)?;
+                    let iters = c.u64()? as usize;
+                    Completion::Iterate(IterationsResult { last, total, energy, iters })
+                }
+                k => return Err(Error::msg(format!("unknown completion kind {k}"))),
+            };
+            Frame::Completion { ticket, body: Box::new(body) }
+        }
+        T_OVERLOADED => Frame::Overloaded { ticket: c.u64()? },
+        T_NOT_READY => Frame::NotReady { ticket: c.u64()? },
+        T_ERROR => {
+            let ticket = c.u64()?;
+            let code = match c.u8()? {
+                0 => WireErrorCode::Other,
+                1 => WireErrorCode::ShardTimeout,
+                k => return Err(Error::msg(format!("unknown error code {k}"))),
+            };
+            let has_shard = c.u8()?;
+            let shard_raw = c.u32()?;
+            let shard = match has_shard {
+                0 => None,
+                1 => Some(shard_raw),
+                k => return Err(Error::msg(format!("bad shard presence flag {k}"))),
+            };
+            Frame::Error { ticket, code, shard, message: c.str()? }
+        }
+        t => return Err(Error::msg(format!("unknown frame type {t}"))),
+    };
+    c.done()?;
+    Ok(frame)
+}
+
+/// Bounds-checked little-endian reader over one frame's payload.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::msg(format!(
+                "truncated frame payload: wanted {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        if len > MAX_STR {
+            return Err(Error::msg(format!("string length {len} exceeds cap {MAX_STR}")));
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| Error::msg("invalid utf-8 in string"))
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        if n > self.remaining() / 8 {
+            return Err(Error::msg(format!(
+                "vector count {n} exceeds payload ({} bytes left)",
+                self.remaining()
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    /// The payload must be fully consumed — trailing bytes mean the
+    /// sender and receiver disagree about the layout.
+    fn done(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::msg(format!("{} trailing bytes after frame payload", self.remaining())));
+        }
+        Ok(())
+    }
+}
+
+fn get_breakdown(c: &mut Cur<'_>) -> Result<Breakdown> {
+    Ok(Breakdown {
+        load_s: c.f64()?,
+        kernel_s: c.f64()?,
+        retrieve_s: c.f64()?,
+        merge_s: c.f64()?,
+    })
+}
+
+fn get_energy(c: &mut Cur<'_>) -> Result<Energy> {
+    Ok(Energy { dpu_j: c.f64()?, dpu_idle_j: c.f64()?, bus_j: c.f64()?, host_j: c.f64()? })
+}
+
+fn get_run(c: &mut Cur<'_>) -> Result<RunResult<f64>> {
+    let y = c.f64s()?;
+    let breakdown = get_breakdown(c)?;
+    let stats = RunStats {
+        dpu_imbalance: c.f64()?,
+        kernel_cycles: c.u64()?,
+        bus_bytes_moved: c.u64()?,
+        bus_bytes_payload: c.u64()?,
+        matrix_load_s: c.f64()?,
+        n_dpus: c.u64()? as usize,
+        nnz: c.u64()? as usize,
+    };
+    let energy = get_energy(c)?;
+    Ok(RunResult { y, breakdown, stats, energy })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_run(seed: f64) -> RunResult<f64> {
+        RunResult {
+            y: vec![seed, -seed, 0.5 * seed, f64::NAN, -0.0],
+            breakdown: Breakdown {
+                load_s: 1e-3 + seed,
+                kernel_s: 2e-3,
+                retrieve_s: 3e-3,
+                merge_s: 0.0,
+            },
+            stats: RunStats {
+                dpu_imbalance: 1.25,
+                kernel_cycles: 123_456,
+                bus_bytes_moved: 789,
+                bus_bytes_payload: 700,
+                matrix_load_s: 0.25,
+                n_dpus: 64,
+                nnz: 4096,
+            },
+            energy: Energy { dpu_j: 0.5, dpu_idle_j: 0.125, bus_j: 0.25, host_j: 1.5 },
+        }
+    }
+
+    /// Every frame variant survives encode -> decode -> re-encode
+    /// bit-exactly (including NaN / -0.0 float payloads).
+    #[test]
+    fn all_frames_roundtrip_bit_exact() {
+        let frames = vec![
+            Frame::LoadMatrix {
+                tenant: "alice".into(),
+                kernel: "coo.nnz".into(),
+                stripes: 8,
+                nrows: 100,
+                ncols: 90,
+                triples: vec![(0, 1, 2.5), (99, 89, -1.0), (5, 5, f64::INFINITY)],
+            },
+            Frame::SubmitSpmv {
+                tenant: "bob".into(),
+                handle: 7,
+                deadline_ms: 0,
+                x: vec![1.0, -2.0, f64::NAN],
+            },
+            Frame::SubmitBatch {
+                tenant: "alice".into(),
+                handle: 1,
+                deadline_ms: 250,
+                xs: vec![vec![1.0, 2.0], vec![], vec![-0.0]],
+            },
+            Frame::SubmitIterate {
+                tenant: "t".into(),
+                handle: u64::MAX,
+                deadline_ms: 1,
+                iters: 12,
+                x: vec![0.25; 17],
+            },
+            Frame::Poll { ticket: 42 },
+            Frame::Loaded { handle: 3, nrows: 10, ncols: 11 },
+            Frame::Submitted { ticket: 9 },
+            Frame::Completion { ticket: 5, body: Box::new(Completion::Spmv(sample_run(1.0))) },
+            Frame::Completion {
+                ticket: 6,
+                body: Box::new(Completion::Batch(BatchResult {
+                    runs: vec![sample_run(2.0), sample_run(3.0)],
+                })),
+            },
+            Frame::Completion {
+                ticket: 7,
+                body: Box::new(Completion::Iterate(IterationsResult {
+                    last: sample_run(4.0),
+                    total: Breakdown { load_s: 9.0, kernel_s: 8.0, retrieve_s: 7.0, merge_s: 6.0 },
+                    energy: Energy { dpu_j: 1.0, dpu_idle_j: 2.0, bus_j: 3.0, host_j: 4.0 },
+                    iters: 5,
+                })),
+            },
+            Frame::Overloaded { ticket: 0 },
+            Frame::NotReady { ticket: 77 },
+            Frame::Error {
+                ticket: 12,
+                code: WireErrorCode::ShardTimeout,
+                shard: Some(3),
+                message: "shard 3 stalled".into(),
+            },
+            Frame::Error {
+                ticket: 0,
+                code: WireErrorCode::Other,
+                shard: None,
+                message: "tenant \"zed\" not registered".into(),
+            },
+        ];
+        for f in frames {
+            let bytes = f.encode();
+            let (back, consumed) = decode_stream(&bytes)
+                .expect("valid frame must decode")
+                .expect("complete frame must not report incomplete");
+            assert_eq!(consumed, bytes.len(), "whole frame consumed");
+            assert_eq!(back.encode(), bytes, "re-encode must be bit-identical: {f:?}");
+        }
+    }
+
+    /// Frames arriving back to back in one buffer parse one at a time.
+    #[test]
+    fn streams_decode_frame_by_frame() {
+        let a = Frame::Poll { ticket: 1 };
+        let b = Frame::Submitted { ticket: 2 };
+        let mut buf = a.encode();
+        buf.extend_from_slice(&b.encode());
+        let (fa, na) = decode_stream(&buf).unwrap().unwrap();
+        assert!(matches!(fa, Frame::Poll { ticket: 1 }));
+        let (fb, nb) = decode_stream(&buf[na..]).unwrap().unwrap();
+        assert!(matches!(fb, Frame::Submitted { ticket: 2 }));
+        assert_eq!(na + nb, buf.len());
+    }
+
+    /// Every proper prefix of a valid frame is "incomplete", never an
+    /// error and never a bogus success.
+    #[test]
+    fn truncated_frames_report_incomplete() {
+        let frames = vec![
+            Frame::SubmitSpmv { tenant: "a".into(), handle: 1, deadline_ms: 0, x: vec![1.0; 9] },
+            Frame::Completion { ticket: 3, body: Box::new(Completion::Spmv(sample_run(1.0))) },
+            Frame::Error { ticket: 1, code: WireErrorCode::Other, shard: None, message: "m".into() },
+        ];
+        for f in frames {
+            let bytes = f.encode();
+            for cut in 0..bytes.len() {
+                match decode_stream(&bytes[..cut]) {
+                    Ok(None) => {}
+                    Ok(Some(_)) => panic!("prefix of length {cut} decoded as a whole frame"),
+                    Err(e) => panic!("prefix of length {cut} errored: {e}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_headers_are_typed_errors() {
+        // Bad magic.
+        let mut bytes = Frame::Poll { ticket: 1 }.encode();
+        bytes[0] = b'X';
+        assert!(decode_stream(&bytes).is_err());
+        // Bad version.
+        let mut bytes = Frame::Poll { ticket: 1 }.encode();
+        bytes[4] = 99;
+        assert!(decode_stream(&bytes).is_err());
+        // Unknown frame type.
+        let mut bytes = Frame::Poll { ticket: 1 }.encode();
+        bytes[5] = 200;
+        assert!(decode_stream(&bytes).is_err());
+        // Oversized declared payload is rejected up front.
+        let mut bytes = Frame::Poll { ticket: 1 }.encode();
+        bytes[6..10].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        assert!(decode_stream(&bytes).is_err());
+        // Trailing payload bytes (sender/receiver layout mismatch).
+        let mut bytes = Frame::Poll { ticket: 1 }.encode();
+        bytes.push(0);
+        let plen = (bytes.len() - HEADER_LEN) as u32;
+        bytes[6..10].copy_from_slice(&plen.to_le_bytes());
+        assert!(decode_stream(&bytes).is_err());
+    }
+
+    /// A hostile length prefix (huge element count in a tiny payload)
+    /// must be rejected before any allocation, not trusted.
+    #[test]
+    fn hostile_counts_are_rejected() {
+        // SubmitSpmv with a claimed 1M-element vector but no bytes.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(VERSION);
+        bytes.push(super::T_SUBMIT_SPMV);
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes()); // tenant len 1
+        payload.push(b'a');
+        payload.extend_from_slice(&1u64.to_le_bytes()); // handle
+        payload.extend_from_slice(&0u32.to_le_bytes()); // deadline
+        payload.extend_from_slice(&1_000_000u32.to_le_bytes()); // claimed count
+        bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        assert!(decode_stream(&bytes).is_err());
+    }
+
+    /// Fuzz: random byte soup never panics the decoder — every outcome
+    /// is `Ok(None)`, a parsed frame, or a typed error.
+    #[test]
+    fn fuzz_random_bytes_never_panic() {
+        let mut rng = Rng::new(0x5EED_F00D);
+        for _ in 0..2000 {
+            let len = rng.gen_range(200);
+            let mut buf = Vec::with_capacity(len);
+            for _ in 0..len {
+                buf.push(rng.next_u64() as u8);
+            }
+            let _ = decode_stream(&buf);
+        }
+        // Valid header, random payload bytes: exercises every payload
+        // decoder against garbage without tripping the magic check.
+        for ftype in [1u8, 2, 3, 4, 5, 16, 17, 18, 19, 20, 21] {
+            for _ in 0..500 {
+                let plen = rng.gen_range(120);
+                let mut buf = Vec::with_capacity(HEADER_LEN + plen);
+                buf.extend_from_slice(&MAGIC);
+                buf.push(VERSION);
+                buf.push(ftype);
+                buf.extend_from_slice(&(plen as u32).to_le_bytes());
+                for _ in 0..plen {
+                    buf.push(rng.next_u64() as u8);
+                }
+                let _ = decode_stream(&buf);
+            }
+        }
+    }
+
+    /// Fuzz: flip bytes inside valid frames; decode must never panic
+    /// and a surviving parse must re-encode without panicking.
+    #[test]
+    fn fuzz_bit_flips_never_panic() {
+        let mut rng = Rng::new(0xBADC_0DE);
+        let base = Frame::SubmitBatch {
+            tenant: "fuzz".into(),
+            handle: 3,
+            deadline_ms: 9,
+            xs: vec![vec![1.0, 2.0, 3.0], vec![4.0]],
+        }
+        .encode();
+        for _ in 0..2000 {
+            let mut bytes = base.clone();
+            let flips = 1 + rng.gen_range(4);
+            for _ in 0..flips {
+                let i = rng.gen_range(bytes.len());
+                bytes[i] ^= rng.next_u64() as u8;
+            }
+            if let Ok(Some((frame, _))) = decode_stream(&bytes) {
+                let _ = frame.encode();
+            }
+        }
+    }
+}

@@ -1,0 +1,617 @@
+//! The TCP serving front end: one event-loop thread drives every
+//! connection over non-blocking `std::net` sockets, and one
+//! completion-dispatch thread drains the sharded facade.
+//!
+//! ```text
+//!                 spmv-net-event (one thread, all connections)
+//!   TCP clients ──► accept / read / decode ──► ShardedService::submit_for
+//!        ▲              │                            │ ticket
+//!        │              └── ticket → connection map ◄┘
+//!        │ frames                                    │
+//!   write└───────────── encode ◄── mpsc ◄── spmv-net-dispatch
+//!                                           (ShardedService::wait_next)
+//! ```
+//!
+//! There is deliberately no thread-per-connection and no poll loop per
+//! ticket: the dispatch thread parks inside the facade's completion
+//! condvar ([`ShardedService::wait_next`]) and claims whichever ticket
+//! finishes next, so a completion wakes exactly one thread exactly
+//! once, no matter how many connections or tickets are in flight.
+//!
+//! Backpressure is typed, never silent, at two layers:
+//!
+//! * **per-connection in-flight cap** ([`ServerOpts::max_in_flight_per_conn`]):
+//!   a `Submit*` arriving with the cap already reached is answered
+//!   immediately with `Overloaded { ticket: 0 }` — acks are written in
+//!   request order, so ticket 0 unambiguously answers that submit —
+//!   and never reaches the scheduler.
+//! * **per-tenant admission cap** (the facade's `max_queue`): the
+//!   scheduler's own typed [`Response::Overloaded`] comes back through
+//!   the dispatch thread as `Overloaded { ticket }` for the submitted
+//!   ticket.
+//!
+//! Failures keep their types across the wire: a facade
+//! `ShardTimeout { shard }` becomes an `Error` frame with
+//! [`WireErrorCode::ShardTimeout`] and the shard number, which
+//! [`crate::net::Client`] turns back into
+//! [`crate::util::Error::shard_timeout`] — locked end to end by
+//! `tests/net_equivalence.rs`.
+
+use crate::coordinator::queue::BufferPool;
+use crate::coordinator::{KernelSpec, Request, Response, ShardedHandle, ShardedService};
+use crate::matrix::CooMatrix;
+use crate::net::protocol::{decode_stream, Completion, Frame, WireErrorCode};
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::mpsc::{channel, Receiver};
+use crate::util::sync::{thread, Arc};
+use crate::util::{Context, Error, Result};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Read staging size; also the pooled-buffer length, so every read
+/// recycles through one [`BufferPool`] slot.
+const READ_CHUNK: usize = 64 * 1024;
+/// How long the dispatch thread parks in [`ShardedService::wait_next`]
+/// per shutdown-flag check.
+const DISPATCH_TICK: Duration = Duration::from_millis(25);
+/// Event-loop sleep when a tick saw no I/O and no completions.
+const IDLE_SLEEP: Duration = Duration::from_micros(500);
+
+/// Tuning knobs for [`Server::spawn`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOpts {
+    /// Submitted-but-unanswered requests allowed per connection before
+    /// the server sheds with `Overloaded { ticket: 0 }` instead of
+    /// submitting. A cap of 0 sheds every submit (useful in tests).
+    pub max_in_flight_per_conn: usize,
+}
+
+impl Default for ServerOpts {
+    fn default() -> ServerOpts {
+        ServerOpts { max_in_flight_per_conn: 64 }
+    }
+}
+
+/// A running `sparsep serve --listen` instance: the listener plus the
+/// two threads described in the module docs. Dropping the server shuts
+/// both down and joins them; open connections see EOF.
+pub struct Server {
+    addr: SocketAddr,
+    svc: Arc<ShardedService<f64>>,
+    shutdown: Arc<AtomicBool>,
+    event: Option<thread::JoinHandle<()>>,
+    dispatch: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `svc` on background threads. The server becomes
+    /// the facade's only completion consumer — callers must not also
+    /// `wait` on tickets they submit in-process.
+    pub fn spawn(svc: ShardedService<f64>, addr: &str, opts: ServerOpts) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind listener on {addr}"))?;
+        listener.set_nonblocking(true).context("set listener non-blocking")?;
+        let local = listener.local_addr().context("query bound listener address")?;
+        let svc = Arc::new(svc);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel::<(u64, Result<Response<f64>>)>();
+
+        let dsvc = Arc::clone(&svc);
+        let dstop = Arc::clone(&shutdown);
+        let dispatch = thread::spawn_named("spmv-net-dispatch", move || {
+            while !dstop.load(Ordering::SeqCst) {
+                if let Some((ticket, resp)) = dsvc.wait_next(DISPATCH_TICK) {
+                    if tx.send((ticket.id(), resp)).is_err() {
+                        break; // event loop is gone; nothing to serve
+                    }
+                }
+            }
+        });
+
+        let estop = Arc::clone(&shutdown);
+        let esvc = Arc::clone(&svc);
+        let event = thread::spawn_named("spmv-net-event", move || {
+            EventLoop {
+                listener,
+                rx,
+                svc: esvc,
+                opts,
+                shutdown: estop,
+                pool: BufferPool::new(0u8),
+                conns: HashMap::new(),
+                tickets: HashMap::new(),
+                next_conn: 1,
+            }
+            .run();
+        });
+
+        Ok(Server { addr: local, svc, shutdown, event: Some(event), dispatch: Some(dispatch) })
+    }
+
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The facade being served (tests use this to `pause`/`resume` and
+    /// to read stats; do not `wait` on it — see [`Server::spawn`]).
+    pub fn service(&self) -> &ShardedService<f64> {
+        &self.svc
+    }
+
+    /// Stop both threads and join them. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.event.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.dispatch.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Per-connection state owned by the event loop.
+struct Conn {
+    id: usize,
+    stream: TcpStream,
+    /// Bytes read but not yet framed.
+    rbuf: Vec<u8>,
+    /// Encoded frames not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// Wire handle -> facade handle, private to this connection.
+    handles: HashMap<u64, ShardedHandle>,
+    next_handle: u64,
+    /// Submitted-but-unanswered requests (the shed cap's counter).
+    in_flight: usize,
+    /// Close once `wbuf` drains (set on protocol violations, after the
+    /// error frame is queued).
+    closing: bool,
+}
+
+struct EventLoop {
+    listener: TcpListener,
+    rx: Receiver<(u64, Result<Response<f64>>)>,
+    svc: Arc<ShardedService<f64>>,
+    opts: ServerOpts,
+    shutdown: Arc<AtomicBool>,
+    pool: BufferPool<u8>,
+    conns: HashMap<usize, Conn>,
+    /// Facade ticket id -> connection id. Inserted by the same loop
+    /// iteration that submits (before the completion channel is next
+    /// drained), so a completion can never arrive unmapped.
+    tickets: HashMap<u64, usize>,
+    next_conn: usize,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        while !self.shutdown.load(Ordering::SeqCst) {
+            let mut activity = false;
+
+            // Accept everything pending.
+            loop {
+                match self.listener.accept() {
+                    Ok((stream, _)) => {
+                        if stream.set_nonblocking(true).is_err() {
+                            continue; // the socket is unusable; drop it
+                        }
+                        let _ = stream.set_nodelay(true);
+                        let id = self.next_conn;
+                        self.next_conn += 1;
+                        self.conns.insert(
+                            id,
+                            Conn {
+                                id,
+                                stream,
+                                rbuf: Vec::new(),
+                                wbuf: Vec::new(),
+                                handles: HashMap::new(),
+                                next_handle: 1,
+                                in_flight: 0,
+                                closing: false,
+                            },
+                        );
+                        activity = true;
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(_) => break,
+                }
+            }
+
+            // Read and process each connection's pending bytes.
+            let ids: Vec<usize> = self.conns.keys().copied().collect();
+            for id in ids {
+                let mut conn = self.conns.remove(&id).expect("connection ids are stable");
+                let alive = self.service_conn(&mut conn, &mut activity);
+                if alive {
+                    self.conns.insert(id, conn);
+                }
+            }
+
+            // Route completions claimed by the dispatch thread.
+            while let Ok((ticket, resp)) = self.rx.try_recv() {
+                self.route_completion(ticket, resp);
+                activity = true;
+            }
+
+            // Flush pending writes; drop connections that are done.
+            let mut wrote = false;
+            self.conns.retain(|_, conn| {
+                if !conn.wbuf.is_empty() {
+                    wrote = true;
+                    if !flush_conn(conn) {
+                        return false;
+                    }
+                }
+                !(conn.closing && conn.wbuf.is_empty())
+            });
+            activity |= wrote;
+
+            if !activity {
+                std::thread::sleep(IDLE_SLEEP);
+            }
+        }
+    }
+
+    /// Read whatever the socket has, decode complete frames, handle
+    /// them. Returns false when the connection is gone.
+    fn service_conn(&mut self, conn: &mut Conn, activity: &mut bool) -> bool {
+        let mut chunk = self.pool.take_zeroed(READ_CHUNK);
+        let mut alive = true;
+        loop {
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    alive = false; // orderly EOF
+                    break;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&chunk[..n]);
+                    *activity = true;
+                    if n < chunk.len() {
+                        break;
+                    }
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    alive = false;
+                    break;
+                }
+            }
+        }
+        self.pool.put(chunk);
+
+        let mut consumed = 0;
+        while !conn.closing {
+            match decode_stream(&conn.rbuf[consumed..]) {
+                Ok(Some((frame, n))) => {
+                    consumed += n;
+                    self.handle_frame(conn, frame);
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    // Corrupt stream: answer with a typed conn-level
+                    // error, then close once it flushes.
+                    error_frame(0, &e).encode_into(&mut conn.wbuf);
+                    conn.closing = true;
+                }
+            }
+        }
+        conn.rbuf.drain(..consumed);
+        // A dead connection with queued writes can't be saved; a dead
+        // one with none is dropped here. Closing conns stay until the
+        // write phase drains them.
+        alive || !conn.wbuf.is_empty()
+    }
+
+    fn handle_frame(&mut self, conn: &mut Conn, frame: Frame) {
+        match frame {
+            Frame::LoadMatrix { tenant, kernel, stripes, nrows, ncols, triples } => {
+                self.load_matrix(conn, &tenant, &kernel, stripes, nrows, ncols, triples);
+            }
+            Frame::SubmitSpmv { tenant, handle, deadline_ms, x } => {
+                self.submit(conn, &tenant, handle, deadline_ms, Request::spmv(x));
+            }
+            Frame::SubmitBatch { tenant, handle, deadline_ms, xs } => {
+                self.submit(conn, &tenant, handle, deadline_ms, Request::batch(xs));
+            }
+            Frame::SubmitIterate { tenant, handle, deadline_ms, iters, x } => {
+                self.submit(conn, &tenant, handle, deadline_ms, Request::iterate(x, iters as usize));
+            }
+            Frame::Poll { ticket } => {
+                // Answered from the server's own ticket map, never from
+                // the completions store — the dispatch thread is its
+                // only consumer, so polling can't race a claim.
+                let frame = if self.tickets.get(&ticket) == Some(&conn.id) {
+                    Frame::NotReady { ticket }
+                } else {
+                    Frame::Error {
+                        ticket,
+                        code: WireErrorCode::Other,
+                        shard: None,
+                        message: format!("unknown ticket {ticket}"),
+                    }
+                };
+                frame.encode_into(&mut conn.wbuf);
+            }
+            // Server->client frames arriving at the server: protocol
+            // violation; answer typed, then close.
+            other => {
+                error_frame(0, &Error::msg(format!("unexpected client frame {other:?}")))
+                    .encode_into(&mut conn.wbuf);
+                conn.closing = true;
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn load_matrix(
+        &mut self,
+        conn: &mut Conn,
+        tenant: &str,
+        kernel: &str,
+        stripes: u32,
+        nrows: u64,
+        ncols: u64,
+        triples: Vec<(u32, u32, f64)>,
+    ) {
+        let r = (|| -> Result<Frame> {
+            let t = self
+                .svc
+                .tenant(tenant)
+                .ok_or_else(|| Error::msg(format!("unknown tenant {tenant:?}")))?;
+            let spec = KernelSpec::by_name(kernel, (stripes.max(1)) as usize)
+                .ok_or_else(|| Error::msg(format!("unknown kernel {kernel:?}")))?;
+            let m = CooMatrix::<f64>::from_triples(nrows as usize, ncols as usize, triples);
+            let h = self.svc.load_for(t, &m, &spec)?;
+            let wire = conn.next_handle;
+            conn.next_handle += 1;
+            conn.handles.insert(wire, h);
+            Ok(Frame::Loaded { handle: wire, nrows: h.nrows() as u64, ncols: h.ncols() as u64 })
+        })();
+        match r {
+            Ok(frame) => frame.encode_into(&mut conn.wbuf),
+            Err(e) => error_frame(0, &e).encode_into(&mut conn.wbuf),
+        }
+    }
+
+    fn submit(
+        &mut self,
+        conn: &mut Conn,
+        tenant: &str,
+        wire_handle: u64,
+        deadline_ms: u32,
+        req: Request<f64>,
+    ) {
+        if conn.in_flight >= self.opts.max_in_flight_per_conn {
+            // Connection-level shed: answered before submission, in
+            // request order, so ticket 0 is unambiguous.
+            Frame::Overloaded { ticket: 0 }.encode_into(&mut conn.wbuf);
+            return;
+        }
+        let r = (|| -> Result<u64> {
+            let t = self
+                .svc
+                .tenant(tenant)
+                .ok_or_else(|| Error::msg(format!("unknown tenant {tenant:?}")))?;
+            let h = *conn
+                .handles
+                .get(&wire_handle)
+                .ok_or_else(|| Error::msg(format!("unknown matrix handle {wire_handle}")))?;
+            let ticket = if deadline_ms > 0 {
+                self.svc.submit_with_deadline(t, h, req, Duration::from_millis(deadline_ms as u64))?
+            } else {
+                self.svc.submit_for(t, h, req)?
+            };
+            Ok(ticket.id())
+        })();
+        match r {
+            Ok(ticket) => {
+                self.tickets.insert(ticket, conn.id);
+                conn.in_flight += 1;
+                Frame::Submitted { ticket }.encode_into(&mut conn.wbuf);
+            }
+            Err(e) => error_frame(0, &e).encode_into(&mut conn.wbuf),
+        }
+    }
+
+    fn route_completion(&mut self, ticket: u64, resp: Result<Response<f64>>) {
+        let Some(conn_id) = self.tickets.remove(&ticket) else {
+            return; // server bug shield; tickets are always mapped
+        };
+        let Some(conn) = self.conns.get_mut(&conn_id) else {
+            return; // connection closed while the request ran
+        };
+        conn.in_flight = conn.in_flight.saturating_sub(1);
+        let frame = match resp {
+            Ok(Response::Overloaded) => Frame::Overloaded { ticket },
+            Ok(Response::Spmv(r)) => {
+                Frame::Completion { ticket, body: Box::new(Completion::Spmv(r)) }
+            }
+            Ok(Response::Batch(b)) => {
+                Frame::Completion { ticket, body: Box::new(Completion::Batch(b)) }
+            }
+            Ok(Response::Iterate(it)) => {
+                Frame::Completion { ticket, body: Box::new(Completion::Iterate(it)) }
+            }
+            Err(e) => error_frame(ticket, &e),
+        };
+        frame.encode_into(&mut conn.wbuf);
+    }
+}
+
+/// Translate a facade error into its typed wire twin.
+fn error_frame(ticket: u64, e: &Error) -> Frame {
+    if e.is_shard_timeout() {
+        Frame::Error {
+            ticket,
+            code: WireErrorCode::ShardTimeout,
+            shard: e.timed_out_shard().map(|s| s as u32),
+            message: e.to_string(),
+        }
+    } else {
+        Frame::Error { ticket, code: WireErrorCode::Other, shard: None, message: e.to_string() }
+    }
+}
+
+/// Push queued bytes into the socket. Returns false when the
+/// connection died under the write.
+fn flush_conn(conn: &mut Conn) -> bool {
+    while !conn.wbuf.is_empty() {
+        match conn.stream.write(&conn.wbuf) {
+            Ok(0) => return false,
+            Ok(n) => {
+                conn.wbuf.drain(..n);
+            }
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Engine, ShardedServiceBuilder, TenantSpec};
+    use crate::matrix::generate;
+    use crate::net::client::Client;
+    use crate::pim::PimSystem;
+
+    fn matrix() -> CooMatrix<f64> {
+        generate::scale_free::<f64>(48, 48, 4, 0.7, 9)
+    }
+
+    fn server(opts: ServerOpts) -> (Server, CooMatrix<f64>) {
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(2)
+            .engine(Engine::Serial)
+            .tenants(vec![TenantSpec::new("alice", 2), TenantSpec::new("bob", 1)])
+            .build(PimSystem::with_dpus(4))
+            .expect("sharded service builds");
+        let srv = Server::spawn(svc, "127.0.0.1:0", opts).expect("server binds");
+        (srv, matrix())
+    }
+
+    fn x_for(m: &CooMatrix<f64>) -> Vec<f64> {
+        (0..m.ncols()).map(|i| ((i % 5) as f64) - 2.0).collect()
+    }
+
+    #[test]
+    fn end_to_end_spmv_over_tcp() {
+        let (srv, m) = server(ServerOpts::default());
+        let mut cl = Client::connect(srv.local_addr()).expect("client connects");
+        let h = cl.load("alice", &m, "COO.nnz", 8).expect("load over the wire");
+        let x = x_for(&m);
+        let t = cl.submit_spmv("alice", h, x.clone(), None).expect("submit");
+        let run = cl.wait(t).expect("wait").into_spmv().expect("spmv response");
+        assert_eq!(run.y, m.spmv(&x), "served result must match the host oracle");
+    }
+
+    /// With the per-connection cap at 0 every submit sheds as a typed
+    /// `Overloaded` before reaching the scheduler — and the connection
+    /// stays fully usable afterwards.
+    #[test]
+    fn conn_cap_sheds_and_client_survives() {
+        let (srv, m) = server(ServerOpts { max_in_flight_per_conn: 0 });
+        let mut cl = Client::connect(srv.local_addr()).expect("client connects");
+        let h = cl.load("bob", &m, "COO.nnz", 8).expect("load is not capped");
+        let x = x_for(&m);
+        for _ in 0..3 {
+            let t = cl.submit_spmv("bob", h, x.clone(), None).expect("shed is not an error");
+            let resp = cl.wait(t).expect("shed ticket is claimable");
+            assert!(resp.is_overloaded(), "cap 0 must shed every request");
+        }
+    }
+
+    #[test]
+    fn poll_reports_not_ready_then_completion() {
+        let (srv, m) = server(ServerOpts::default());
+        srv.service().pause();
+        let mut cl = Client::connect(srv.local_addr()).expect("client connects");
+        let h = cl.load("alice", &m, "COO.nnz", 8).expect("load");
+        let x = x_for(&m);
+        let t = cl.submit_spmv("alice", h, x.clone(), None).expect("submit while paused");
+        assert!(
+            cl.poll(t).expect("poll answers").is_none(),
+            "a paused service must report the ticket in flight"
+        );
+        srv.service().resume();
+        let run = cl.wait(t).expect("wait after resume").into_spmv().expect("spmv");
+        assert_eq!(run.y, m.spmv(&x));
+    }
+
+    #[test]
+    fn unknown_tenant_and_kernel_are_typed_errors() {
+        let (srv, m) = server(ServerOpts::default());
+        let mut cl = Client::connect(srv.local_addr()).expect("client connects");
+        let e = cl.load("zed", &m, "COO.nnz", 8).expect_err("unknown tenant must fail");
+        assert!(e.to_string().contains("zed"), "error names the tenant: {e}");
+        let e = cl.load("alice", &m, "NOPE.kernel", 8).expect_err("unknown kernel must fail");
+        assert!(e.to_string().contains("NOPE"), "error names the kernel: {e}");
+        // The connection survives both rejections.
+        let h = cl.load("alice", &m, "COO.nnz", 8).expect("load still works");
+        let x = x_for(&m);
+        let t = cl.submit_spmv("alice", h, x.clone(), None).expect("submit still works");
+        assert_eq!(cl.wait(t).unwrap().into_spmv().unwrap().y, m.spmv(&x));
+    }
+
+    /// A server going away mid-stream surfaces as a typed error on the
+    /// client, not a panic or a hang.
+    #[test]
+    fn client_survives_mid_stream_disconnect() {
+        let (mut srv, m) = server(ServerOpts::default());
+        srv.service().pause(); // park the request so the shutdown races nothing
+        let mut cl = Client::connect(srv.local_addr()).expect("client connects");
+        let h = cl.load("alice", &m, "COO.nnz", 8).expect("load");
+        let t = cl.submit_spmv("alice", h, x_for(&m), None).expect("submit");
+        srv.service().resume();
+        srv.shutdown();
+        // The parked ticket either completed before the shutdown (fine)
+        // or the socket died under the wait (typed error, not a panic).
+        match cl.wait(t) {
+            Ok(resp) => assert_eq!(resp.kind(), "spmv"),
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("closed") || msg.contains("read from server"),
+                    "disconnect must be a typed transport error: {msg}"
+                );
+            }
+        }
+        // Every call after the disconnect keeps failing cleanly.
+        let e = cl.submit_spmv("alice", h, x_for(&m), None);
+        if let Ok(t2) = e {
+            assert!(cl.wait(t2).is_err(), "a dead connection cannot complete tickets");
+        }
+    }
+
+    /// Garbage bytes on the socket get a typed conn-level error frame
+    /// back before the server closes the connection.
+    #[test]
+    fn garbage_stream_is_rejected_with_typed_error() {
+        let (srv, _m) = server(ServerOpts::default());
+        let mut raw = TcpStream::connect(srv.local_addr()).expect("connect");
+        raw.write_all(b"definitely not a SPRP frame").expect("write garbage");
+        let mut buf = Vec::new();
+        raw.read_to_end(&mut buf).expect("server answers then closes");
+        let (frame, _) = decode_stream(&buf)
+            .expect("the reply is a well-formed frame")
+            .expect("the reply is complete");
+        match frame {
+            Frame::Error { ticket: 0, code: WireErrorCode::Other, .. } => {}
+            other => panic!("expected a conn-level error frame, got {other:?}"),
+        }
+    }
+}

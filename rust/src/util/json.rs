@@ -65,7 +65,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literals; `write!("{n}")`
+                    // would emit `NaN`/`inf`, which `Json::parse` (and any
+                    // other JSON reader) rejects. Degrade to null so one
+                    // bad ratio can't corrupt a whole BENCH_*.json file.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -232,16 +238,35 @@ impl<'a> Parser<'a> {
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
                         b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                return Err("bad \\u escape".into());
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|_| "bad \\u escape")?;
-                            let cp = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
-                            self.i += 4;
-                            // Note: surrogate pairs unsupported (not needed
-                            // for the ASCII manifests we parse).
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            let cp = self.hex4()?;
+                            let c = match cp {
+                                // High surrogate: must be followed by an
+                                // escaped low surrogate; combine the pair
+                                // into one astral-plane scalar.
+                                0xD800..=0xDBFF => {
+                                    if self.peek() != Some(b'\\') {
+                                        return Err("lone high surrogate in \\u escape".into());
+                                    }
+                                    self.i += 1;
+                                    if self.peek() != Some(b'u') {
+                                        return Err("lone high surrogate in \\u escape".into());
+                                    }
+                                    self.i += 1;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..=0xDFFF).contains(&lo) {
+                                        return Err("lone high surrogate in \\u escape".into());
+                                    }
+                                    let scalar =
+                                        0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(scalar).ok_or("bad \\u escape")?
+                                }
+                                // Low surrogate with no preceding high half.
+                                0xDC00..=0xDFFF => {
+                                    return Err("lone low surrogate in \\u escape".into())
+                                }
+                                _ => char::from_u32(cp).ok_or("bad \\u escape")?,
+                            };
+                            out.push(c);
                         }
                         _ => return Err(format!("bad escape at byte {}", self.i)),
                     }
@@ -255,6 +280,17 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Read exactly four hex digits (the payload of a `\u` escape).
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("bad \\u escape".into());
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4]).map_err(|_| "bad \\u escape")?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
+        self.i += 4;
+        Ok(cp)
     }
 
     fn array(&mut self) -> Result<Json, String> {
@@ -356,5 +392,51 @@ mod tests {
     fn numbers() {
         assert_eq!(Json::parse("-3.5e2").unwrap().as_f64(), Some(-350.0));
         assert_eq!(Json::parse("42").unwrap().as_usize(), Some(42));
+    }
+
+    /// Regression: NaN / ±inf used to serialize as `NaN` / `inf`, which is
+    /// not JSON — a single 0/0 speedup corrupted the whole BENCH file and
+    /// `Json::parse` rejected the round-trip. They must degrade to null.
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(bad).to_string(), "null");
+        }
+        let j = obj(vec![("speedup", num(f64::NAN)), ("ok", num(2.0))]);
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("non-finite must still round-trip as a document");
+        assert_eq!(back.get("speedup"), &Json::Null);
+        assert_eq!(back.get("ok").as_f64(), Some(2.0));
+    }
+
+    /// Regression: the `\uXXXX` parser treated each escape in isolation, so
+    /// a surrogate pair like `😀` (U+1F600) decoded to two
+    /// replacement characters instead of the astral-plane scalar.
+    #[test]
+    fn surrogate_pairs_combine() {
+        // U+1F600 as an escaped surrogate pair.
+        let j = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(j.as_str(), Some("\u{1F600}"));
+        // Mixed with surrounding text and a BMP escape (U+1D11E musical clef).
+        let j = Json::parse("\"a\\u00e9 \\ud834\\udd1e z\"").unwrap();
+        assert_eq!(j.as_str(), Some("a\u{e9} \u{1D11E} z"));
+        // A serialized astral char survives a parse round-trip (writer emits
+        // raw UTF-8, parser must accept it unchanged).
+        let j = Json::Str("\u{1F600}".into());
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn lone_surrogates_are_rejected() {
+        // Lone high surrogate (end of string, non-escape follower, bad low half).
+        assert!(Json::parse("\"\\ud83d\"").is_err());
+        assert!(Json::parse("\"\\ud83dx\"").is_err());
+        assert!(Json::parse("\"\\ud83d\\n\"").is_err());
+        assert!(Json::parse("\"\\ud83d\\u0041\"").is_err());
+        // Lone low surrogate.
+        assert!(Json::parse("\"\\ude00\"").is_err());
+        // Truncated escapes still fail cleanly.
+        assert!(Json::parse("\"\\u12").is_err());
+        assert!(Json::parse("\"\\ud83d\\u").is_err());
     }
 }

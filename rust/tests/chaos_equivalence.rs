@@ -231,6 +231,54 @@ fn stalled_shard_times_out_with_its_name() {
     assert_eq!(svc.spmv(&h, &x).unwrap().y, m.spmv(&x));
 }
 
+/// Regression: the gather thread used to serve a stalled shard by
+/// `thread::sleep`ing out the whole stall bound inline, head-of-line
+/// blocking completions for every other ticket. The stalled item is
+/// now parked behind its deadline while healthy tickets keep flowing,
+/// so a fault-free ticket submitted after the stalled one must
+/// complete in a small fraction of the stall bound.
+#[test]
+fn stalled_shard_does_not_block_healthy_tickets() {
+    let m = matrix();
+    // Stall shard 0 on ticket 1 only; ticket 2 is fault-free.
+    let stall_bound = Duration::from_secs(2);
+    let plan = FaultPlan::new(11).on_gather(1, Fault::StallShard { shard: 0 });
+    let svc: ShardedService<f64> = builder(2, Engine::Serial)
+        .wait_timeout(stall_bound)
+        .fault_injector(Arc::new(plan))
+        .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+        .unwrap();
+    let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+    let x = x1();
+    let started = std::time::Instant::now();
+    let t1 = svc.submit(h, Request::spmv(x.clone())).unwrap();
+    let t2 = svc.submit(h, Request::spmv(x.clone())).unwrap();
+    let r2 = svc.wait(t2).unwrap().into_spmv().unwrap();
+    let healthy_latency = started.elapsed();
+    assert_eq!(r2.y, m.spmv(&x), "healthy ticket must compute the oracle answer");
+    // Generous margin (the work itself is milliseconds-scale): pre-fix
+    // the gather thread slept the full 2 s bound on ticket 1 before
+    // even looking at ticket 2.
+    assert!(
+        healthy_latency < stall_bound / 2,
+        "healthy ticket took {healthy_latency:?}; a stalled sibling must not head-of-line-block it"
+    );
+    // The stalled ticket still expires into the typed ShardTimeout
+    // naming the wedged shard (same claim loop as above: a facade-level
+    // wait may time out, shard unknown, before the gather's verdict).
+    let err = loop {
+        match svc.wait_timeout(t1, Duration::from_secs(20)) {
+            Err(e) if e.timed_out_shard() == Some(0) => break e,
+            Err(e) if e.is_shard_timeout() => continue,
+            Ok(r) => panic!("stalled request must not succeed, got {}", r.kind()),
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    };
+    assert!(err.is_shard_timeout());
+    // And the facade stays healthy afterwards.
+    assert_eq!(svc.spmv(&h, &x).unwrap().y, m.spmv(&x));
+}
+
 #[test]
 fn flooding_tenant_is_shed_typed_and_cannot_starve_the_victim() {
     let m = matrix();

@@ -1,0 +1,319 @@
+//! Differential suite for the TCP serving front end: everything a
+//! client receives over a real socket must be **bit-identical** to
+//! what the in-process sharded facade answers — values, breakdowns,
+//! stats, energy — and every failure must keep its type across the
+//! wire.
+//!
+//! Method: build two identically-configured [`ShardedService`]s, put
+//! one behind [`sparsep::net::Server`] and keep the other as the
+//! in-process oracle, then drive both with the same request sequence
+//! (same submission order, so the deterministic ticket ids line up and
+//! seeded fault plans replay identically on both sides). Swept across
+//! all three request shapes, both engines, shard counts {1, 2, 4} and
+//! two tenants; chaos, admission shedding (typed `Overloaded`) and
+//! stalled-shard timeouts (typed `ShardTimeout` naming the shard) get
+//! their own scenarios.
+
+use sparsep::coordinator::{
+    Engine, Fault, FaultPlan, KernelSpec, Request, Response, RunResult, ShardedService,
+    ShardedServiceBuilder, TenantSpec,
+};
+use sparsep::matrix::{generate, CooMatrix};
+use sparsep::net::{Client, Server, ServerOpts};
+use sparsep::pim::PimSystem;
+use std::sync::Arc;
+use std::time::Duration;
+
+const N: usize = 64;
+const ITERS: usize = 3;
+const DPUS_PER_SHARD: usize = 4;
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+const KERNEL: &str = "COO.nnz";
+const STRIPES: usize = 8;
+
+fn matrix() -> CooMatrix<f64> {
+    generate::scale_free::<f64>(N, N, 4, 0.7, 31)
+}
+
+fn x1() -> Vec<f64> {
+    (0..N).map(|i| ((i % 9) as f64) - 4.0).collect()
+}
+
+fn batch_xs() -> Vec<Vec<f64>> {
+    (0..3)
+        .map(|b| (0..N).map(|i| ((i + 5 * b) % 11) as f64 - 5.0).collect())
+        .collect()
+}
+
+fn engines() -> Vec<Engine> {
+    vec![Engine::Serial, Engine::threaded(2)]
+}
+
+fn builder(shards: usize, engine: Engine) -> ShardedServiceBuilder {
+    ShardedServiceBuilder::new()
+        .shards(shards)
+        .engine(engine)
+        .tenants(vec![TenantSpec::new("alice", 2), TenantSpec::new("bob", 1)])
+}
+
+fn build(b: ShardedServiceBuilder) -> ShardedService<f64> {
+    b.build(PimSystem::with_dpus(DPUS_PER_SHARD)).expect("sharded service builds")
+}
+
+fn assert_runs_identical(a: &RunResult<f64>, b: &RunResult<f64>, tag: &str) {
+    assert_eq!(a.y, b.y, "{tag}: output vector differs");
+    assert_eq!(a.breakdown, b.breakdown, "{tag}: breakdown differs");
+    assert_eq!(a.stats, b.stats, "{tag}: stats differ");
+    assert_eq!(a.energy, b.energy, "{tag}: energy differs");
+}
+
+/// Full structural equality of two responses, field by field — the
+/// wire carries raw IEEE-754 bits, so nothing may drift.
+fn assert_responses_identical(served: &Response<f64>, oracle: &Response<f64>, tag: &str) {
+    match (served, oracle) {
+        (Response::Spmv(a), Response::Spmv(b)) => assert_runs_identical(a, b, tag),
+        (Response::Batch(a), Response::Batch(b)) => {
+            assert_eq!(a.len(), b.len(), "{tag}: batch size differs");
+            for (i, (ra, rb)) in a.runs.iter().zip(&b.runs).enumerate() {
+                assert_runs_identical(ra, rb, &format!("{tag} vec={i}"));
+            }
+        }
+        (Response::Iterate(a), Response::Iterate(b)) => {
+            assert_runs_identical(&a.last, &b.last, &format!("{tag} last"));
+            assert_eq!(a.total, b.total, "{tag}: iterate totals differ");
+            assert_eq!(a.energy, b.energy, "{tag}: iterate energy differs");
+            assert_eq!(a.iters, b.iters, "{tag}: iterate count differs");
+        }
+        (Response::Overloaded, Response::Overloaded) => {}
+        _ => panic!(
+            "{tag}: response kinds differ (served {:?}, oracle {:?})",
+            served.kind(),
+            oracle.kind()
+        ),
+    }
+}
+
+/// The canonical mix: all three request shapes from each of the two
+/// tenants (6 tickets), one with an explicit deadline, submitted in
+/// the same order on the served and in-process sides, waited out of
+/// submission order. Returns (served, oracle) response pairs.
+fn drive_mix(
+    srv: &Server,
+    oracle: &ShardedService<f64>,
+    m: &CooMatrix<f64>,
+) -> Vec<(Response<f64>, Response<f64>)> {
+    let spec = KernelSpec::by_name(KERNEL, STRIPES).expect("test kernel exists");
+    let deadline = Duration::from_millis(60_000);
+
+    let mut cl = Client::connect(srv.local_addr()).expect("client connects");
+    let wh_alice = cl.load("alice", m, KERNEL, STRIPES as u32).expect("wire load alice");
+    let wh_bob = cl.load("bob", m, KERNEL, STRIPES as u32).expect("wire load bob");
+
+    let oa = oracle.tenant("alice").expect("oracle tenant alice");
+    let ob = oracle.tenant("bob").expect("oracle tenant bob");
+    let oh_alice = oracle.load_for(oa, m, &spec).expect("oracle load alice");
+    let oh_bob = oracle.load_for(ob, m, &spec).expect("oracle load bob");
+
+    // Identical submission order on both sides: deterministic ticket
+    // ids line up 1:1, which is what lets seeded fault plans replay.
+    let wire = [
+        cl.submit_spmv("alice", wh_alice, x1(), None).expect("wire submit 1"),
+        cl.submit_batch("alice", wh_alice, batch_xs(), None).expect("wire submit 2"),
+        cl.submit_iterate("alice", wh_alice, x1(), ITERS, None).expect("wire submit 3"),
+        cl.submit_spmv("bob", wh_bob, x1(), Some(deadline)).expect("wire submit 4"),
+        cl.submit_batch("bob", wh_bob, batch_xs(), None).expect("wire submit 5"),
+        cl.submit_iterate("bob", wh_bob, x1(), ITERS, None).expect("wire submit 6"),
+    ];
+    let inproc = [
+        oracle.submit_for(oa, oh_alice, Request::spmv(x1())).expect("oracle submit 1"),
+        oracle.submit_for(oa, oh_alice, Request::batch(batch_xs())).expect("oracle submit 2"),
+        oracle.submit_for(oa, oh_alice, Request::iterate(x1(), ITERS)).expect("oracle submit 3"),
+        oracle
+            .submit_with_deadline(ob, oh_bob, Request::spmv(x1()), deadline)
+            .expect("oracle submit 4"),
+        oracle.submit_for(ob, oh_bob, Request::batch(batch_xs())).expect("oracle submit 5"),
+        oracle.submit_for(ob, oh_bob, Request::iterate(x1(), ITERS)).expect("oracle submit 6"),
+    ];
+
+    // Claim out of submission order so responses park on the client.
+    [4usize, 1, 5, 0, 3, 2]
+        .iter()
+        .map(|&i| {
+            let served = cl.wait(wire[i]).expect("served response");
+            let oracled = oracle.wait(inproc[i]).expect("oracle response");
+            (served, oracled)
+        })
+        .collect()
+}
+
+/// Host-oracle spot check: the served spmv answer is not just
+/// self-consistent with the facade, it is the right answer.
+fn assert_spmv_correct(pairs: &[(Response<f64>, Response<f64>)], m: &CooMatrix<f64>, tag: &str) {
+    let want = m.spmv(&x1());
+    for (served, _) in pairs {
+        if let Response::Spmv(r) = served {
+            assert_eq!(r.y, want, "{tag}: served spmv vs host oracle");
+        }
+    }
+}
+
+#[test]
+fn served_responses_are_bit_identical_to_in_process_oracle() {
+    let m = matrix();
+    for shards in SHARD_COUNTS {
+        for engine in engines() {
+            let tag = format!("shards={shards} engine={engine:?}");
+            let srv = Server::spawn(build(builder(shards, engine)), "127.0.0.1:0", ServerOpts::default())
+                .expect("server binds");
+            let oracle = build(builder(shards, engine));
+            let pairs = drive_mix(&srv, &oracle, &m);
+            assert_eq!(pairs.len(), 6, "{tag}: all six tickets answered");
+            for (i, (served, oracled)) in pairs.iter().enumerate() {
+                assert_responses_identical(served, oracled, &format!("{tag} req={i}"));
+            }
+            assert_spmv_correct(&pairs, &m, &tag);
+        }
+    }
+}
+
+/// Seeded chaos (kill / dropped completion / delay) replays identically
+/// on both sides of the wire: recovery may change *how* the answer is
+/// computed, never *what* arrives at the client.
+#[test]
+fn served_chaos_replay_matches_in_process_oracle() {
+    let m = matrix();
+    let shards = 2;
+    for engine in engines() {
+        for seed in [0xD1FF_u64, 0xFEED_u64] {
+            let tag = format!("chaos engine={engine:?} seed={seed:#x}");
+            // Same seed -> FaultPlan::random rebuilds the identical
+            // plan; ticket ids line up because submission order does.
+            let srv = Server::spawn(
+                build(
+                    builder(shards, engine)
+                        .fault_injector(Arc::new(FaultPlan::random(seed, 6, shards, 0.4))),
+                ),
+                "127.0.0.1:0",
+                ServerOpts::default(),
+            )
+            .expect("server binds");
+            let oracle = build(
+                builder(shards, engine)
+                    .fault_injector(Arc::new(FaultPlan::random(seed, 6, shards, 0.4))),
+            );
+            let pairs = drive_mix(&srv, &oracle, &m);
+            for (i, (served, oracled)) in pairs.iter().enumerate() {
+                assert_responses_identical(served, oracled, &format!("{tag} req={i}"));
+            }
+            assert_spmv_correct(&pairs, &m, &tag);
+        }
+    }
+}
+
+/// Admission shedding is typed end to end: with the per-tenant cap at
+/// 1 and dispatch paused, the same submissions shed on both sides, the
+/// wire carries them as `Overloaded` frames, and the requests that
+/// were admitted still answer bit-identically after resume.
+#[test]
+fn served_overload_shedding_matches_in_process_oracle() {
+    let m = matrix();
+    let spec = KernelSpec::by_name(KERNEL, STRIPES).expect("test kernel exists");
+    let srv = Server::spawn(
+        build(builder(2, Engine::Serial).max_queue(1)),
+        "127.0.0.1:0",
+        ServerOpts::default(),
+    )
+    .expect("server binds");
+    let oracle = build(builder(2, Engine::Serial).max_queue(1));
+
+    let mut cl = Client::connect(srv.local_addr()).expect("client connects");
+    let wh = cl.load("alice", &m, KERNEL, STRIPES as u32).expect("wire load");
+    let oa = oracle.tenant("alice").expect("oracle tenant");
+    let oh = oracle.load_for(oa, &m, &spec).expect("oracle load");
+
+    // Paused dispatch makes the shed pattern purely a function of the
+    // submission sequence — identical on both sides by construction.
+    srv.service().pause();
+    oracle.pause();
+    let wire: Vec<u64> = (0..6)
+        .map(|i| cl.submit_spmv("alice", wh, x1(), None).unwrap_or_else(|e| panic!("wire submit {i}: {e}")))
+        .collect();
+    let inproc: Vec<_> = (0..6)
+        .map(|i| {
+            oracle
+                .submit_for(oa, oh, Request::spmv(x1()))
+                .unwrap_or_else(|e| panic!("oracle submit {i}: {e}"))
+        })
+        .collect();
+    srv.service().resume();
+    oracle.resume();
+
+    let mut sheds = 0;
+    for (i, (&wt, &ot)) in wire.iter().zip(&inproc).enumerate() {
+        let served = cl.wait(wt).expect("served response");
+        let oracled = oracle.wait(ot).expect("oracle response");
+        assert_eq!(
+            served.is_overloaded(),
+            oracled.is_overloaded(),
+            "req={i}: shed decisions must match across the wire"
+        );
+        assert_responses_identical(&served, &oracled, &format!("overload req={i}"));
+        sheds += usize::from(served.is_overloaded());
+    }
+    assert!(sheds >= 1, "cap 1 with 6 paused submissions must shed");
+    assert!(sheds < 6, "the admitted request must still complete");
+}
+
+/// A stalled shard surfaces as the same typed `ShardTimeout` — naming
+/// the same shard — whether the caller sits on the facade or on the
+/// far side of a TCP connection.
+#[test]
+fn served_shard_timeout_is_typed_end_to_end() {
+    let m = matrix();
+    let spec = KernelSpec::by_name(KERNEL, STRIPES).expect("test kernel exists");
+    let stall = Duration::from_millis(100);
+    let plan = || FaultPlan::new(7).on_gather(1, Fault::StallShard { shard: 0 });
+    let srv = Server::spawn(
+        build(builder(2, Engine::Serial).wait_timeout(stall).fault_injector(Arc::new(plan()))),
+        "127.0.0.1:0",
+        ServerOpts::default(),
+    )
+    .expect("server binds");
+    let oracle = build(builder(2, Engine::Serial).wait_timeout(stall).fault_injector(Arc::new(plan())));
+
+    let mut cl = Client::connect(srv.local_addr()).expect("client connects");
+    let wh = cl.load("alice", &m, KERNEL, STRIPES as u32).expect("wire load");
+    let oa = oracle.tenant("alice").expect("oracle tenant");
+    let oh = oracle.load_for(oa, &m, &spec).expect("oracle load");
+
+    let wt = cl.submit_spmv("alice", wh, x1(), None).expect("wire submit");
+    let ot = oracle.submit_for(oa, oh, Request::spmv(x1())).expect("oracle submit");
+
+    // The wire side only ever sees the gather's published verdict (the
+    // dispatch thread claims completions, it never times out a wait),
+    // so one blocking wait suffices.
+    let served_err = cl.wait(wt).expect_err("stalled request must fail over the wire");
+    // The in-process wait can time out facade-level (shard unknown)
+    // before the gather's verdict is published; claim until it lands.
+    let oracle_err = loop {
+        match oracle.wait_timeout(ot, Duration::from_secs(10)) {
+            Err(e) if e.timed_out_shard().is_some() => break e,
+            Err(e) if e.is_shard_timeout() => continue,
+            Ok(r) => panic!("stalled request must not succeed, got {}", r.kind()),
+            Err(e) => panic!("unexpected oracle error: {e}"),
+        }
+    };
+    assert!(served_err.is_shard_timeout(), "wire error must keep its type: {served_err}");
+    assert_eq!(
+        served_err.timed_out_shard(),
+        oracle_err.timed_out_shard(),
+        "both sides must name the same wedged shard"
+    );
+    assert_eq!(served_err.timed_out_shard(), Some(0), "the stalled shard is shard 0");
+
+    // The stall poisoned one ticket, not the server: the connection
+    // keeps serving and the next request answers correctly.
+    let t2 = cl.submit_spmv("alice", wh, x1(), None).expect("submit after stall");
+    let run = cl.wait(t2).expect("healthy request completes").into_spmv().expect("spmv");
+    assert_eq!(run.y, m.spmv(&x1()), "post-stall result vs host oracle");
+}

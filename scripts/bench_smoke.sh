@@ -21,6 +21,11 @@
 #                           printed for exact replay) + typed shed rate
 #                           and served-latency percentiles under a
 #                           per-tenant admission cap
+#   BENCH_net.json          TCP front end under open-loop Poisson load
+#                           at two offered rates: p50/p99/p999 latency,
+#                           achieved throughput, typed shed/error
+#                           counts per level (in-process server; point
+#                           bench-net --addr at a live one instead)
 #   BENCH_tune.json         autotuner search: calibrated-vs-heuristic
 #                           wall-clock per (matrix, batch) cell; also
 #                           writes calibration.json, the table
@@ -46,6 +51,10 @@
 #   BENCH_RESILIENCE_SHARDS (default 4)    resilience shard count
 #   BENCH_RESILIENCE_CAP (default 4)       per-tenant admission cap
 #   BENCH_RESILIENCE_OFFERED (default 16)  offered load (> cap sheds)
+#   BENCH_NET_ROWS (default 1500)      net-bench matrix dimension
+#   BENCH_NET_CONNS (default 2)        concurrent client connections
+#   BENCH_NET_REQUESTS (default 240)   requests per offered-load level
+#   BENCH_NET_RATES (default 300,1200) offered rates, req/s per level
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -116,6 +125,18 @@ cargo run --release -- bench-resilience \
   --out BENCH_resilience.json
 
 cat BENCH_resilience.json
+
+cargo run --release -- bench-net \
+  --rows "${BENCH_NET_ROWS:-1500}" \
+  --deg 6 \
+  --shards 2 \
+  --dpus 16 \
+  --conns "${BENCH_NET_CONNS:-2}" \
+  --requests "${BENCH_NET_REQUESTS:-240}" \
+  --rates "${BENCH_NET_RATES:-300,1200}" \
+  --out BENCH_net.json
+
+cat BENCH_net.json
 
 # --quick = mini-suite smoke search (seconds). BENCH_TUNE_FULL=1 runs
 # the paper-scale search instead (minutes).

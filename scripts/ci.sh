@@ -54,6 +54,21 @@ cargo run --release -- tune --quick --out calibration.json --report BENCH_tune.j
 echo "== resilience: chaos equivalence suite =="
 cargo test -q --test chaos_equivalence
 
+# Network front-end gates (PR 9): the net differential suite proves
+# that responses received over a real TCP connection are bit-identical
+# — values, breakdowns, stats, energy — to an identically-configured
+# in-process facade (all request shapes, both engines, shard counts
+# {1,2,4}, two tenants), that seeded chaos replays identically on both
+# sides of the wire, and that typed Overloaded / ShardTimeout outcomes
+# survive the transport. The in-crate net unit tests (protocol
+# round-trip + decoder fuzz + server/client behavior + the loadgen
+# smoke) already ran in the unfiltered tier-1 above; the named re-runs
+# keep the gates visible.
+echo "== net: wire-protocol + server unit suites =="
+cargo test -q --lib net::
+echo "== net: TCP differential equivalence suite =="
+cargo test -q --test net_equivalence
+
 echo "== lint: cargo clippy --all-targets (warnings are errors) =="
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings

@@ -1,0 +1,243 @@
+//! Bench regression gate (`sparsep bench-check`).
+//!
+//! The `BENCH_*.json` trajectories carry relative quality statistics
+//! that hold *by construction* — tuned-vs-heuristic speedups, the
+//! grid sweep's row-only floor — so they make honest regression
+//! guards: if one dips, the harness or the serving stack broke, not
+//! the machine. This command compares the current bench outputs
+//! against a committed baseline manifest and hard-fails on any
+//! shortfall beyond a configurable tolerance, giving `scripts/ci.sh`
+//! and `scripts/bench_smoke.sh` a single exit-status gate.
+//!
+//! The baseline manifest (`scripts/bench_baseline.json`) is a list of
+//! checks:
+//!
+//! ```json
+//! {"checks": [
+//!   {"file": "BENCH_tune.json", "field": "min_speedup", "min": 1.0}
+//! ]}
+//! ```
+//!
+//! Each check asserts `report[field] >= min * (1 - tolerance)`. Only
+//! machine-independent ratio statistics belong here — absolute
+//! wall-clocks vary across hosts and would make the gate flaky.
+//!
+//! A bench file may legitimately be absent (CI runs a subset of the
+//! benches); `--missing skip` reports and skips those checks, while
+//! `--missing fail` (the full `bench_smoke.sh` pass, which runs every
+//! bench) treats absence itself as a regression.
+
+use crate::util::json::Json;
+use crate::util::{Context, Result};
+use std::path::Path;
+
+/// Knobs for [`run`] (CLI flags of `sparsep bench-check`).
+#[derive(Clone, Debug)]
+pub struct CheckOpts {
+    /// Path to the baseline manifest.
+    pub baseline: String,
+    /// Directory the manifest's `file` entries resolve against.
+    pub dir: String,
+    /// Tolerated relative shortfall below each `min` (0.25 = pass at
+    /// 75% of the baseline value). Absorbs measurement noise without
+    /// letting a by-construction invariant collapse silently.
+    pub tolerance: f64,
+    /// What a missing bench file means: `skip` (report, don't fail) or
+    /// `fail` (the file was expected — hard error).
+    pub missing: String,
+}
+
+impl Default for CheckOpts {
+    fn default() -> CheckOpts {
+        CheckOpts {
+            baseline: "scripts/bench_baseline.json".to_string(),
+            dir: ".".to_string(),
+            tolerance: 0.25,
+            missing: "skip".to_string(),
+        }
+    }
+}
+
+/// One parsed baseline check.
+#[derive(Clone, Debug, PartialEq)]
+struct Check {
+    file: String,
+    field: String,
+    min: f64,
+}
+
+fn parse_checks(doc: &Json) -> Result<Vec<Check>> {
+    let arr = doc
+        .get("checks")
+        .as_arr()
+        .context("bench baseline: missing top-level \"checks\" array")?;
+    let mut checks = Vec::with_capacity(arr.len());
+    for (i, c) in arr.iter().enumerate() {
+        checks.push(Check {
+            file: c
+                .get("file")
+                .as_str()
+                .with_context(|| format!("bench baseline: checks[{i}] missing \"file\""))?
+                .to_string(),
+            field: c
+                .get("field")
+                .as_str()
+                .with_context(|| format!("bench baseline: checks[{i}] missing \"field\""))?
+                .to_string(),
+            min: c
+                .get("min")
+                .as_f64()
+                .with_context(|| format!("bench baseline: checks[{i}] missing \"min\""))?,
+        });
+    }
+    Ok(checks)
+}
+
+/// Run every baseline check; `Err` if any fails (or is missing under
+/// `--missing fail`).
+pub fn run(opts: &CheckOpts) -> Result<()> {
+    crate::ensure!(
+        (0.0..1.0).contains(&opts.tolerance),
+        "bench-check needs --tolerance in [0, 1), got {}",
+        opts.tolerance
+    );
+    crate::ensure!(
+        opts.missing == "skip" || opts.missing == "fail",
+        "bench-check needs --missing skip|fail, got {}",
+        opts.missing
+    );
+    let text = std::fs::read_to_string(&opts.baseline)
+        .with_context(|| format!("read bench baseline {}", opts.baseline))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| crate::format_err!("parse bench baseline {}: {e}", opts.baseline))?;
+    let checks = parse_checks(&doc)?;
+    crate::ensure!(!checks.is_empty(), "bench baseline {} has no checks", opts.baseline);
+
+    let mut failures = Vec::new();
+    let mut skipped = 0usize;
+    for c in &checks {
+        let path = Path::new(&opts.dir).join(&c.file);
+        let floor = c.min * (1.0 - opts.tolerance);
+        let Ok(body) = std::fs::read_to_string(&path) else {
+            if opts.missing == "fail" {
+                failures.push(format!("{}: bench file missing ({})", c.file, path.display()));
+            } else {
+                println!("bench-check: SKIP {} ({} not present)", c.field, c.file);
+                skipped += 1;
+            }
+            continue;
+        };
+        // A present-but-unreadable report is always a failure: the bench
+        // ran and produced rot.
+        let report = match Json::parse(&body) {
+            Ok(j) => j,
+            Err(e) => {
+                failures.push(format!("{}: unparseable report: {e}", c.file));
+                continue;
+            }
+        };
+        match report.get(&c.field).as_f64() {
+            Some(v) if v >= floor => {
+                println!(
+                    "bench-check: OK   {}::{} = {v:.4} >= {floor:.4} (baseline {:.4})",
+                    c.file, c.field, c.min
+                );
+            }
+            Some(v) => {
+                failures.push(format!(
+                    "{}::{} = {v:.4} < {floor:.4} (baseline {:.4}, tolerance {})",
+                    c.file, c.field, c.min, opts.tolerance
+                ));
+            }
+            None => {
+                failures.push(format!("{}: field {} missing or non-numeric", c.file, c.field));
+            }
+        }
+    }
+    let ran = checks.len() - skipped;
+    println!(
+        "bench-check: {} checks, {ran} ran, {skipped} skipped, {} failed",
+        checks.len(),
+        failures.len()
+    );
+    crate::ensure!(
+        failures.is_empty(),
+        "bench regression gate failed:\n  {}",
+        failures.join("\n  ")
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write(dir: &Path, name: &str, body: &str) -> String {
+        let p = dir.join(name);
+        std::fs::write(&p, body).unwrap();
+        p.to_str().unwrap().to_string()
+    }
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("sparsep_bench_check_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn opts_for(dir: &Path, baseline: String, missing: &str) -> CheckOpts {
+        CheckOpts {
+            baseline,
+            dir: dir.to_str().unwrap().to_string(),
+            tolerance: 0.25,
+            missing: missing.to_string(),
+        }
+    }
+
+    #[test]
+    fn passes_within_tolerance_and_fails_below() {
+        let dir = temp_dir("pass_fail");
+        write(&dir, "BENCH_x.json", r#"{"min_speedup": 0.80}"#);
+        let baseline = write(
+            &dir,
+            "baseline.json",
+            r#"{"checks": [{"file": "BENCH_x.json", "field": "min_speedup", "min": 1.0}]}"#,
+        );
+        // 0.80 >= 1.0 * (1 - 0.25): inside tolerance.
+        run(&opts_for(&dir, baseline.clone(), "skip")).unwrap();
+        // Below the floor: gate trips and names the statistic.
+        write(&dir, "BENCH_x.json", r#"{"min_speedup": 0.50}"#);
+        let err = run(&opts_for(&dir, baseline, "skip")).unwrap_err();
+        assert!(err.to_string().contains("min_speedup"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_policy_is_respected() {
+        let dir = temp_dir("missing");
+        let baseline = write(
+            &dir,
+            "baseline.json",
+            r#"{"checks": [{"file": "BENCH_absent.json", "field": "f", "min": 1.0}]}"#,
+        );
+        run(&opts_for(&dir, baseline.clone(), "skip")).unwrap();
+        let err = run(&opts_for(&dir, baseline, "fail")).unwrap_err();
+        assert!(err.to_string().contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn missing_field_and_bad_manifest_always_fail() {
+        let dir = temp_dir("field");
+        write(&dir, "BENCH_y.json", r#"{"other": 2.0}"#);
+        let baseline = write(
+            &dir,
+            "baseline.json",
+            r#"{"checks": [{"file": "BENCH_y.json", "field": "gone", "min": 1.0}]}"#,
+        );
+        let err = run(&opts_for(&dir, baseline, "skip")).unwrap_err();
+        assert!(err.to_string().contains("gone"), "{err}");
+
+        let empty = write(&dir, "empty.json", r#"{"checks": []}"#);
+        assert!(run(&opts_for(&dir, empty, "skip")).is_err());
+        let bad = write(&dir, "bad.json", r#"{"nope": 1}"#);
+        assert!(run(&opts_for(&dir, bad, "skip")).is_err());
+    }
+}

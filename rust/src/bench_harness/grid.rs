@@ -1,0 +1,269 @@
+//! 2D-grid sharding benchmark (`sparsep bench-grid`).
+//!
+//! Quantifies what the grid dimensions buy over plain row sharding on a
+//! skewed (scale-free) matrix: the same batched request stream is
+//! served by
+//!
+//! 1. an **unsharded baseline** (a 1×1 grid — one backend);
+//! 2. the **row-only heuristic** (an S×1 grid, exactly what
+//!    `--shards S` built before grids existed);
+//! 3. a **tuned grid**: a mini-sweep over R×C shapes with the same
+//!    total backend count S, row-only included as candidate zero —
+//!    so `tuned_over_row ≥ 1.0` holds *by construction* (the winner is
+//!    the minimum over a set containing the row-only shape), mirroring
+//!    the heuristic-as-candidate-zero contract of `sparsep tune`;
+//! 4. the tuned shape **replicated ×2**, serving the identical
+//!    read-only stream through least-outstanding replica dispatch.
+//!
+//! Every configuration runs on both the serial and threaded engines.
+//! Gathered outputs are verified against the host oracle once; grid
+//! shape and replication never change answers (locked by
+//! `tests/grid_equivalence.rs`), only wall clock. The JSON summary
+//! lands in `BENCH_grid.json` next to the other `BENCH_*.json` files.
+
+use crate::coordinator::{Engine, KernelSpec, Request, ShardedService, ShardedServiceBuilder};
+use crate::matrix::generate;
+use crate::pim::{PimConfig, PimSystem};
+use crate::util::json::{arr, num, obj, s};
+use crate::util::{Context, Result};
+use std::time::Instant;
+
+/// Knobs for [`run`] (CLI flags of `sparsep bench-grid`).
+#[derive(Clone, Debug)]
+pub struct GridBenchOpts {
+    /// Matrix dimension (square, scale-free class — the skewed shape
+    /// 2D grids exist for).
+    pub rows: usize,
+    /// Average degree (non-zeros per row).
+    pub deg: usize,
+    /// Total backends per gridded configuration (the sweep holds
+    /// R×C = shards fixed and varies the shape).
+    pub shards: usize,
+    /// Batched requests per measurement.
+    pub requests: usize,
+    /// Right-hand-side vectors per request.
+    pub batch: usize,
+    /// Simulated DPUs per backend tile.
+    pub dpus_per_shard: usize,
+    /// Threaded-engine worker count (0 = all cores).
+    pub threads: usize,
+    /// Kernel name (see `sparsep kernels`).
+    pub kernel: String,
+    /// Timed samples per configuration (min is reported).
+    pub samples: usize,
+    /// Output JSON path.
+    pub out: String,
+}
+
+impl Default for GridBenchOpts {
+    fn default() -> GridBenchOpts {
+        GridBenchOpts {
+            rows: 50_000,
+            deg: 8,
+            shards: 4,
+            requests: 8,
+            batch: 8,
+            dpus_per_shard: 64,
+            threads: 0,
+            kernel: "CSR.nnz".to_string(),
+            samples: 2,
+            out: "BENCH_grid.json".to_string(),
+        }
+    }
+}
+
+/// The swept R×C shapes for a total backend budget of `shards`:
+/// row-only first (candidate zero), then progressively column-heavier
+/// shapes at the same R×C product, deduplicated in order.
+fn shapes_for(shards: usize) -> Vec<(usize, usize)> {
+    let s = shards.max(1);
+    let mut shapes = vec![(s, 1)];
+    for cand in [(s.div_euclid(2).max(1), 2), (2, s.div_euclid(2).max(1)), (1, s)] {
+        if cand.0 * cand.1 == s && !shapes.contains(&cand) {
+            shapes.push(cand);
+        }
+    }
+    shapes
+}
+
+/// Run the benchmark and write the JSON summary to `opts.out`.
+pub fn run(opts: &GridBenchOpts) -> Result<()> {
+    crate::ensure!(opts.shards >= 1, "bench-grid needs --shards >= 1");
+    crate::ensure!(opts.requests >= 1, "bench-grid needs --requests >= 1");
+    crate::ensure!(opts.batch >= 1, "bench-grid needs --batch >= 1");
+    crate::ensure!(opts.samples >= 1, "bench-grid needs --samples >= 1");
+    let spec = KernelSpec::by_name(&opts.kernel, 8)
+        .with_context(|| format!("unknown kernel {} (see `sparsep kernels`)", opts.kernel))?;
+    let m = generate::scale_free::<f64>(opts.rows, opts.rows, opts.deg, 0.6, 7);
+    let payloads: Vec<Vec<Vec<f64>>> = (0..opts.requests)
+        .map(|r| {
+            (0..opts.batch)
+                .map(|b| {
+                    (0..m.ncols()).map(|i| ((i + 3 * b + 7 * r) % 9) as f64 - 4.0).collect()
+                })
+                .collect()
+        })
+        .collect();
+    let sys = PimSystem::new(PimConfig { n_dpus: opts.dpus_per_shard, ..Default::default() })?;
+    let shapes = shapes_for(opts.shards);
+    println!(
+        "bench-grid: {} x{} requests x{} vectors on {}x{} ({} nnz), {} DPUs/tile, shapes {:?}",
+        spec.name,
+        opts.requests,
+        opts.batch,
+        m.nrows(),
+        m.ncols(),
+        m.nnz(),
+        opts.dpus_per_shard,
+        shapes
+    );
+
+    let one = |engine: Engine, grid: (usize, usize), replicas: usize, verify: bool| -> Result<f64> {
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .grid(grid.0, grid.1)
+            .replicas(replicas)
+            .engine(engine)
+            .build(sys.clone())?;
+        let handle = svc.load(&m, &spec)?; // tile planning + plans, out of timing
+        if verify {
+            let b = svc.spmv_batch(&handle, &payloads[0])?;
+            for (x, run) in payloads[0].iter().zip(&b.runs) {
+                crate::ensure!(run.y == m.spmv(x), "gridded output diverged from host oracle");
+            }
+        }
+        let mut best = f64::INFINITY;
+        for _ in 0..opts.samples {
+            // Payload Arcs built outside the clock; the facade's scatter
+            // shares them across tiles instead of copying per tile.
+            let owned: Vec<Vec<crate::util::sync::Arc<[f64]>>> = payloads
+                .iter()
+                .map(|xs| xs.iter().map(|v| crate::util::sync::Arc::from(&v[..])).collect())
+                .collect();
+            let t0 = Instant::now();
+            let tickets: Vec<_> = owned
+                .into_iter()
+                .map(|xs| svc.submit(handle, Request::Batch { xs }))
+                .collect::<Result<_>>()?;
+            for t in tickets {
+                let resp = svc.wait(t)?.into_batch()?;
+                std::hint::black_box(&resp.runs.last().unwrap().y);
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        Ok(best)
+    };
+
+    let base_serial = one(Engine::Serial, (1, 1), 1, true)?;
+    let base_threaded = one(Engine::threaded(opts.threads), (1, 1), 1, false)?;
+    println!("  1x1 baseline: serial {base_serial:>8.3}s | threaded {base_threaded:>8.3}s");
+
+    let mut serial_walls = Vec::with_capacity(shapes.len());
+    let mut threaded_walls = Vec::with_capacity(shapes.len());
+    for &(r, c) in &shapes {
+        let serial = one(Engine::Serial, (r, c), 1, false)?;
+        let threaded = one(Engine::threaded(opts.threads), (r, c), 1, false)?;
+        println!("  {r}x{c}: serial {serial:>8.3}s | threaded {threaded:>8.3}s");
+        serial_walls.push(serial);
+        threaded_walls.push(threaded);
+    }
+
+    // The tuned shape is the serial-wall argmin over the sweep; shapes[0]
+    // is row-only, so tuned_over_row is >= 1.0 by construction.
+    let tuned_idx = serial_walls
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let tuned = shapes[tuned_idx];
+    let tuned_over_row_serial = serial_walls[0] / serial_walls[tuned_idx].max(1e-12);
+    let tuned_over_row_threaded = threaded_walls[0] / threaded_walls[tuned_idx].max(1e-12);
+
+    let rep_serial = one(Engine::Serial, tuned, 2, false)?;
+    let rep_threaded = one(Engine::threaded(opts.threads), tuned, 2, false)?;
+    println!(
+        "  tuned {}x{} (x1.0 row-only floor: serial {:.2}x) | replicated x2: serial {rep_serial:>8.3}s | threaded {rep_threaded:>8.3}s",
+        tuned.0, tuned.1, tuned_over_row_serial
+    );
+
+    let j = obj(vec![
+        ("bench", s("grid_sharding")),
+        ("kernel", s(&spec.name)),
+        ("rows", num(m.nrows() as f64)),
+        ("nnz", num(m.nnz() as f64)),
+        ("requests", num(opts.requests as f64)),
+        ("batch", num(opts.batch as f64)),
+        ("dpus_per_shard", num(opts.dpus_per_shard as f64)),
+        ("host_threads", num(opts.threads as f64)),
+        ("samples", num(opts.samples as f64)),
+        ("shards", num(opts.shards as f64)),
+        ("shapes", arr(shapes.iter().map(|&(r, c)| s(&format!("{r}x{c}"))).collect())),
+        ("serial_wall_s", arr(serial_walls.iter().map(|&w| num(w)).collect())),
+        ("threaded_wall_s", arr(threaded_walls.iter().map(|&w| num(w)).collect())),
+        ("baseline_serial_wall_s", num(base_serial)),
+        ("baseline_threaded_wall_s", num(base_threaded)),
+        ("tuned_shape", s(&format!("{}x{}", tuned.0, tuned.1))),
+        ("tuned_serial_wall_s", num(serial_walls[tuned_idx])),
+        ("tuned_threaded_wall_s", num(threaded_walls[tuned_idx])),
+        ("tuned_over_row_serial", num(tuned_over_row_serial)),
+        ("tuned_over_row_threaded", num(tuned_over_row_threaded)),
+        ("replicated_serial_wall_s", num(rep_serial)),
+        ("replicated_threaded_wall_s", num(rep_threaded)),
+    ]);
+    std::fs::write(&opts.out, j.to_string() + "\n")
+        .with_context(|| format!("write {}", opts.out))?;
+    println!("wrote {}", opts.out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_keep_the_backend_budget_and_lead_with_row_only() {
+        assert_eq!(shapes_for(4), vec![(4, 1), (2, 2), (1, 4)]);
+        assert_eq!(shapes_for(1), vec![(1, 1)]);
+        assert_eq!(shapes_for(2), vec![(2, 1), (1, 2)]);
+        for s in 1..=8usize {
+            let shapes = shapes_for(s);
+            assert_eq!(shapes[0], (s, 1), "row-only must be candidate zero");
+            for (r, c) in shapes {
+                assert_eq!(r * c, s, "every shape spends the same backend budget");
+            }
+        }
+    }
+
+    #[test]
+    fn bench_grid_smoke_writes_json_with_row_floor() {
+        let dir = std::env::temp_dir().join("sparsep_bench_grid_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_grid_test.json");
+        let opts = GridBenchOpts {
+            rows: 240,
+            deg: 4,
+            shards: 2,
+            requests: 2,
+            batch: 2,
+            dpus_per_shard: 4,
+            threads: 2,
+            samples: 1,
+            out: out.to_str().unwrap().to_string(),
+            ..Default::default()
+        };
+        run(&opts).unwrap();
+        let txt = std::fs::read_to_string(&out).unwrap();
+        let j = crate::util::json::Json::parse(&txt).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("grid_sharding"));
+        assert_eq!(j.get("shapes").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("serial_wall_s").as_arr().unwrap().len(), 2);
+        assert!(j.get("baseline_serial_wall_s").as_f64().unwrap() > 0.0);
+        assert!(j.get("replicated_threaded_wall_s").as_f64().unwrap() > 0.0);
+        // The row-only floor: the tuned winner ranges over a set that
+        // includes row-only, so the ratio cannot dip below 1.
+        assert!(j.get("tuned_over_row_serial").as_f64().unwrap() >= 1.0);
+        let shape = j.get("tuned_shape").as_str().unwrap();
+        assert!(shape == "2x1" || shape == "1x2", "tuned shape {shape} not in the sweep");
+        std::fs::remove_file(&out).ok();
+    }
+}

@@ -8,7 +8,9 @@
 //! DESIGN.md §3 for the experiment index).
 
 pub mod batch;
+pub mod check;
 pub mod figures;
+pub mod grid;
 pub mod hotpath;
 pub mod resilience;
 pub mod service;

@@ -83,13 +83,15 @@ pub fn run(opts: &TuneBenchOpts) -> Result<()> {
         topts.engine = Engine::threaded(opts.threads);
     }
     println!(
-        "tune: {} search, {} DPUs x {} tasklets, batches {:?}, blocks {:?}, shards {:?}, top-{} kernels, {} samples",
+        "tune: {} search, {} DPUs x {} tasklets, batches {:?}, blocks {:?}, shards {:?} x cols {:?} x replicas {:?}, top-{} kernels, {} samples",
         if topts.quick { "quick" } else { "full" },
         topts.n_dpus,
         topts.tasklets,
         topts.batches,
         topts.block_grid,
         topts.shard_grid,
+        topts.col_grid,
+        topts.replica_grid,
         topts.top_kernels,
         topts.samples
     );
@@ -99,7 +101,7 @@ pub fn run(opts: &TuneBenchOpts) -> Result<()> {
 
     let mut table = super::Table::new(&[
         "matrix", "class", "batch", "heuristic", "h_wall_ms", "winner", "block", "shards",
-        "wall_ms", "speedup",
+        "cols", "reps", "wall_ms", "speedup",
     ]);
     let mut rows_json = Vec::with_capacity(report.rows.len());
     // Per-class fold: min and geometric mean of the speedups.
@@ -114,6 +116,8 @@ pub fn run(opts: &TuneBenchOpts) -> Result<()> {
             r.kernel.clone(),
             r.block.to_string(),
             r.shards.to_string(),
+            r.grid_cols.to_string(),
+            r.replicas.to_string(),
             format!("{:.3}", r.wall_s * 1e3),
             format!("{:.2}x", r.speedup),
         ]);
@@ -127,6 +131,8 @@ pub fn run(opts: &TuneBenchOpts) -> Result<()> {
             ("kernel", s(&r.kernel)),
             ("block", num(r.block as f64)),
             ("shards", num(r.shards as f64)),
+            ("grid_cols", num(r.grid_cols as f64)),
+            ("replicas", num(r.replicas as f64)),
             ("wall_s", num(r.wall_s)),
             ("speedup", num(r.speedup)),
         ]));

@@ -95,7 +95,15 @@ COMMANDS:
       [--tenants name:w[:q],...]  (S rank groups, --dpus per shard) with
                                   weighted-round-robin multi-tenant
                                   scheduling (weight w, in-flight quota q);
-                                  auto: shard count from the calibration
+                                  auto: full grid shape (R x C x replicas)
+                                  from the calibration
+      [--grid RxC]                shard as an R x C grid: R row bands x C
+                                  nnz-balanced column tiles per band, with
+                                  partials reduced in fixed column order
+                                  (overrides --shards; answers unchanged)
+      [--replicas K]              K replicas per tile; Spmv/Batch reads go
+                                  to the least-loaded replica, loads and
+                                  iterate writes to all K
       [--chaos] [--chaos-seed X]  seeded fault injection (kill/delay/drop/
                                   stall); killed shard backends respawn
                                   from the shared plan cache, answers stay
@@ -114,8 +122,9 @@ COMMANDS:
                                   only); overflow answers as a typed
                                   Overloaded frame before submission
   tune [--quick]                  search-based autotuner: sweep kernel x
-      [--dpus N] [--tasklets T]   block x shard per (matrix, batch) cell,
-      [--threads T] [--samples S] write the winners as a calibration
+      [--dpus N] [--tasklets T]   block x shard-grid x replicas per
+      [--threads T] [--samples S] (matrix, batch) cell, write the winners
+                                  as a calibration
       [--seed X] [--tolerance E]  table for --calibration, and report
       [--out calibration.json]    calibrated-vs-heuristic speedup per
       [--report BENCH_tune.json]  class (fails if any cell regresses
@@ -146,6 +155,19 @@ COMMANDS:
       [--kernel K] [--threads T] [--samples S] [--out F]
                                   serial + threaded wall-clock;
                                   writes BENCH_shard.json (--dpus = per shard)
+  bench-grid                      2D grid sharding vs row-only sharding:
+      [--rows N] [--deg K] [--shards S] [--requests R] [--batch B]
+      [--dpus N] [--kernel K] [--threads T] [--samples S] [--out F]
+                                  1x1 baseline, Sx1 row-only, tuned R x C
+                                  sweep (row-only = candidate zero, so
+                                  tuned >= row-only by construction), and
+                                  the tuned shape replicated x2; serial +
+                                  threaded; writes BENCH_grid.json
+  bench-check                     gate BENCH_*.json against a committed
+      [--baseline F] [--dir D]    baseline manifest of by-construction
+      [--tolerance E]             ratio statistics; fails on any value
+      [--missing skip|fail]       below min*(1-E); missing bench files
+                                  skip or fail per --missing
   bench-resilience                resilience tier: recovery overhead
       [--rows N] [--deg K] [--requests R] [--shards S] [--dpus N]
       [--kernel K] [--threads T] [--samples S] [--max-queue Q]
@@ -223,6 +245,30 @@ fn block_policy_from_args(args: &Args) -> Result<BlockPolicy> {
             Ok(BlockPolicy::Fixed(width))
         }
     }
+}
+
+/// Parse `--grid RxC` (e.g. `4x2`) into `(rows, cols)`, if given.
+fn grid_from_args(args: &Args) -> Result<Option<(usize, usize)>> {
+    let Some(spec) = args.get("grid") else { return Ok(None) };
+    let (r, c) = spec
+        .split_once('x')
+        .with_context(|| format!("--grid must look like RxC (e.g. 4x2), got {spec}"))?;
+    let rows: usize =
+        r.trim().parse().with_context(|| format!("--grid rows must be an integer in {spec:?}"))?;
+    let cols: usize =
+        c.trim().parse().with_context(|| format!("--grid cols must be an integer in {spec:?}"))?;
+    crate::ensure!(rows >= 1 && cols >= 1, "--grid dimensions must be >= 1, got {spec}");
+    Ok(Some((rows, cols)))
+}
+
+/// Parse `--replicas K`, if given.
+fn replicas_from_args(args: &Args) -> Result<Option<usize>> {
+    if args.get("replicas").is_none() {
+        return Ok(None);
+    }
+    let k = args.get_usize("replicas", 1)?;
+    crate::ensure!(k >= 1, "--replicas must be >= 1");
+    Ok(Some(k))
 }
 
 /// Load the table behind `--calibration file.json`, if given. A path
@@ -489,12 +535,22 @@ fn serve_sharded(args: &Args) -> Result<()> {
     if let Some(table) = &calibration {
         builder = builder.calibration(crate::util::sync::Arc::clone(table));
     }
-    // `--shards auto` asks the calibration table for the shard count
-    // (no table / no entry: the builder's default stands).
+    // `--shards auto` asks the calibration table for the full grid
+    // shape — R x C x replicas (no table / no entry: the builder's
+    // default stands). Explicit `--grid`/`--replicas` flags override
+    // whatever was resolved; absent flags never clobber it.
+    let grid = grid_from_args(args)?;
+    let replicas = replicas_from_args(args)?;
     builder = match args.get("shards") {
         Some("auto") => builder.shards_for_matrix(&m, batch),
         _ => builder.shards(args.get_usize("shards", 2)?),
     };
+    if let Some((r, c)) = grid {
+        builder = builder.grid(r, c);
+    }
+    if let Some(k) = replicas {
+        builder = builder.replicas(k);
+    }
     // Resilience knobs: per-tenant admission cap (sheds surface as
     // typed Overloaded responses), bounded waits (wedged shards surface
     // as typed ShardTimeout errors), and a seeded chaos plan.
@@ -511,12 +567,16 @@ fn serve_sharded(args: &Args) -> Result<()> {
     let chaos = args.get_bool("chaos") || args.get("chaos-seed").is_some();
     if chaos {
         let seed = args.get_usize("chaos-seed", 0xC4A05)? as u64;
-        // Aim kills within the requested shard count; out-of-range
-        // targets under `--shards auto` are harmless no-ops. Random
-        // plans draw from kill / dropped-completion / delay — every
-        // answer still verifies bit-identically below.
-        let chaos_shards = args.get_usize("shards", 2).unwrap_or(2).max(1);
-        let plan = FaultPlan::random(seed, requests as u64, chaos_shards, 0.4);
+        // Aim kills across every backend slot of the requested grid —
+        // R x C tiles x K replicas, keyed by the linear slot layout
+        // (band*C + col)*K + replica; out-of-range targets under
+        // `--shards auto` are harmless no-ops. Random plans draw from
+        // kill / dropped-completion / delay — every answer still
+        // verifies bit-identically below.
+        let bands = grid.map(|(r, _)| r).unwrap_or_else(|| args.get_usize("shards", 2).unwrap_or(2));
+        let chaos_slots =
+            (bands.max(1) * grid.map(|(_, c)| c).unwrap_or(1) * replicas.unwrap_or(1)).max(1);
+        let plan = FaultPlan::random(seed, requests as u64, chaos_slots, 0.4);
         println!(
             "chaos      : {} fault(s) over {} ticket(s) from seed {seed:#x} \
              (reproduce with --chaos-seed {seed})",
@@ -544,14 +604,17 @@ fn serve_sharded(args: &Args) -> Result<()> {
             c.spec
         }
     };
+    let g = svc.grid();
     println!(
-        "serve (sharded): {} ({}x{}, {} nnz) via {} on {} shard(s) x {} DPUs, tenants {:?}",
+        "serve (sharded): {} ({}x{}, {} nnz) via {} on a {}x{} grid x{} replica(s) x {} DPUs, tenants {:?}",
         mname,
         m.nrows(),
         m.ncols(),
         m.nnz(),
         spec.name,
-        svc.shard_count(),
+        g.rows,
+        g.cols,
+        g.replicas,
         cfg.n_dpus,
         svc.tenant_names()
     );
@@ -569,7 +632,7 @@ fn serve_sharded(args: &Args) -> Result<()> {
         })
         .collect::<Result<_>>()?;
     println!(
-        "load       : {} handle(s) after {:.3} ms ({} plan build(s) for {} shard slices)",
+        "load       : {} handle(s) after {:.3} ms ({} plan build(s) for {} tile slice(s))",
         handles.len(),
         t_load.elapsed().as_secs_f64() * 1e3,
         svc.stats().plan_builds,
@@ -676,12 +739,20 @@ fn serve_listen(args: &Args) -> Result<()> {
         tasklets: args.get_usize("tasklets", 16)?,
         ..Default::default()
     };
+    let grid = grid_from_args(args)?;
+    let replicas = replicas_from_args(args)?;
     let mut builder = ShardedServiceBuilder::new()
         .engine(engine_from_args(args)?)
         .vector_block(block_policy_from_args(args)?)
         .queue_depth(args.get_usize("queue-depth", DEFAULT_QUEUE_DEPTH)?)
         .shards(args.get_usize("shards", 2)?)
         .tenants(tenants);
+    if let Some((r, c)) = grid {
+        builder = builder.grid(r, c);
+    }
+    if let Some(k) = replicas {
+        builder = builder.replicas(k);
+    }
     if let Some(table) = calibration_from_args(args)? {
         builder = builder.calibration(table);
     }
@@ -697,9 +768,11 @@ fn serve_listen(args: &Args) -> Result<()> {
     }
     if args.get_bool("chaos") || args.get("chaos-seed").is_some() {
         let seed = args.get_usize("chaos-seed", 0xC4A05)? as u64;
-        let chaos_shards = args.get_usize("shards", 2)?.max(1);
+        let bands = grid.map(|(r, _)| r).unwrap_or(args.get_usize("shards", 2)?);
+        let chaos_slots =
+            (bands.max(1) * grid.map(|(_, c)| c).unwrap_or(1) * replicas.unwrap_or(1)).max(1);
         let horizon = args.get_usize("requests", 64)? as u64;
-        let plan = FaultPlan::random(seed, horizon, chaos_shards, 0.4);
+        let plan = FaultPlan::random(seed, horizon, chaos_slots, 0.4);
         println!(
             "chaos      : {} fault(s) over the first {horizon} ticket(s) from seed {seed:#x}",
             plan.len()
@@ -735,7 +808,11 @@ fn serve(args: &Args) -> Result<()> {
     if args.get("listen").is_some() {
         return serve_listen(args);
     }
-    if args.get("shards").is_some() || args.get("tenants").is_some() {
+    if args.get("shards").is_some()
+        || args.get("tenants").is_some()
+        || args.get("grid").is_some()
+        || args.get("replicas").is_some()
+    {
         return serve_sharded(args);
     }
     let mname = args.get("matrix").unwrap_or("mini-sf");
@@ -1093,6 +1170,32 @@ pub fn run(args: Args) -> Result<()> {
             };
             crate::bench_harness::shard::run(&opts)?;
         }
+        "bench-grid" => {
+            let d = crate::bench_harness::grid::GridBenchOpts::default();
+            let opts = crate::bench_harness::grid::GridBenchOpts {
+                rows: args.get_usize("rows", d.rows)?,
+                deg: args.get_usize("deg", d.deg)?,
+                shards: args.get_usize("shards", d.shards)?,
+                requests: args.get_usize("requests", d.requests)?,
+                batch: args.get_usize("batch", d.batch)?,
+                dpus_per_shard: args.get_usize("dpus", d.dpus_per_shard)?,
+                threads: args.get_usize("threads", cpu::hw_threads())?,
+                kernel: args.get("kernel").unwrap_or(d.kernel.as_str()).to_string(),
+                samples: args.get_usize("samples", d.samples)?,
+                out: args.get("out").unwrap_or(d.out.as_str()).to_string(),
+            };
+            crate::bench_harness::grid::run(&opts)?;
+        }
+        "bench-check" => {
+            let d = crate::bench_harness::check::CheckOpts::default();
+            let opts = crate::bench_harness::check::CheckOpts {
+                baseline: args.get("baseline").unwrap_or(d.baseline.as_str()).to_string(),
+                dir: args.get("dir").unwrap_or(d.dir.as_str()).to_string(),
+                tolerance: args.get_f64("tolerance", d.tolerance)?,
+                missing: args.get("missing").unwrap_or(d.missing.as_str()).to_string(),
+            };
+            crate::bench_harness::check::run(&opts)?;
+        }
         "bench-resilience" => {
             let d = crate::bench_harness::resilience::ResilienceBenchOpts::default();
             let opts = crate::bench_harness::resilience::ResilienceBenchOpts {
@@ -1389,6 +1492,33 @@ mod tests {
         )
         .unwrap();
         assert!(run(bad).is_err());
+    }
+
+    #[test]
+    fn serve_grid_command_smoke() {
+        // 2x2 grid with 2 replicas per tile, chaos on — every answer
+        // still verifies against the host oracle inside serve().
+        let a = Args::parse(
+            ["serve", "--matrix", "mini-band", "--dpus", "8", "--grid", "2x2", "--replicas", "2",
+             "--requests", "6", "--batch", "2", "--iters", "2", "--chaos-seed", "11"]
+                .map(String::from),
+        )
+        .unwrap();
+        run(a).unwrap();
+        // Malformed grid specs are rejected at parse time.
+        for bad in ["4", "x2", "2x", "2xtwo", "0x2"] {
+            let a = Args::parse(
+                ["serve", "--matrix", "mini-band", "--grid", bad].map(String::from),
+            )
+            .unwrap();
+            assert!(run(a).is_err(), "--grid {bad} must be rejected");
+        }
+        let a = Args::parse(
+            ["serve", "--matrix", "mini-band", "--shards", "2", "--replicas", "0"]
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(a).is_err(), "--replicas 0 must be rejected");
     }
 
     #[test]

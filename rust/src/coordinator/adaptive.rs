@@ -307,6 +307,8 @@ mod tests {
             stripes: 0,
             block: 4,
             shards: 2,
+            grid_cols: 1,
+            replicas: 1,
             wall_s: 1e-3,
             heuristic_wall_s: 2e-3,
         }]);

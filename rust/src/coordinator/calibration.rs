@@ -80,8 +80,16 @@ pub struct CalibrationEntry {
     pub stripes: usize,
     /// Winning vector-block width.
     pub block: usize,
-    /// Winning shard count for the sharded facade.
+    /// Winning shard count for the sharded facade — the row dimension
+    /// of the winning grid.
     pub shards: usize,
+    /// Winning column-stripe count of the grid (1 = row-only sharding).
+    /// Tables written before the grid sweep omit the field; parsing
+    /// defaults it to 1, so PR-6 era tables keep loading.
+    pub grid_cols: usize,
+    /// Winning replica count per tile (1 = unreplicated; defaults to 1
+    /// when absent, like `grid_cols`).
+    pub replicas: usize,
     /// The winner's measured wall-clock (seconds, min over samples).
     pub wall_s: f64,
     /// The heuristic baseline's wall-clock measured in the same sweep.
@@ -99,6 +107,8 @@ impl CalibrationEntry {
             ("stripes", num(self.stripes as f64)),
             ("block", num(self.block as f64)),
             ("shards", num(self.shards as f64)),
+            ("grid_cols", num(self.grid_cols as f64)),
+            ("replicas", num(self.replicas as f64)),
             ("wall_s", num(self.wall_s)),
             ("heuristic_wall_s", num(self.heuristic_wall_s)),
         ])
@@ -118,6 +128,12 @@ impl CalibrationEntry {
         for (d, f) in features.iter_mut().zip(fs) {
             *d = f.as_f64().context("non-numeric feature")?;
         }
+        // Grid fields are optional (default 1): tables written before
+        // the grid sweep stay loadable — their checksums still verify,
+        // since the hash covers the entries text as written.
+        let optional = |k: &str| -> usize {
+            j.get(k).as_f64().map(|v| v as usize).unwrap_or(1).max(1)
+        };
         Ok(CalibrationEntry {
             matrix: j.get("matrix").as_str().context("entry missing matrix")?.to_string(),
             class: j.get("class").as_str().context("entry missing class")?.to_string(),
@@ -127,6 +143,8 @@ impl CalibrationEntry {
             stripes: field("stripes")? as usize,
             block: field("block")? as usize,
             shards: field("shards")? as usize,
+            grid_cols: optional("grid_cols"),
+            replicas: optional("replicas"),
             wall_s: field("wall_s")?,
             heuristic_wall_s: field("heuristic_wall_s")?,
         })
@@ -300,6 +318,8 @@ mod tests {
             stripes: 4,
             block: 8,
             shards: 2,
+            grid_cols: 2,
+            replicas: 2,
             wall_s: 1e-3,
             heuristic_wall_s: 2e-3,
         }
@@ -322,6 +342,41 @@ mod tests {
         );
         // Serialization is a fixed point: parse -> serialize is stable.
         assert_eq!(back.to_json_string(), text);
+    }
+
+    #[test]
+    fn pre_grid_tables_parse_with_default_grid() {
+        // A PR-6 era document has no grid_cols/replicas keys. Its
+        // checksum covers the entries payload, so it still verifies —
+        // and the missing fields default to 1 (row-only, unreplicated),
+        // never an error.
+        let old_entry = obj(vec![
+            ("matrix", s("a")),
+            ("class", s("regular")),
+            ("features", arr((0..FEATURE_DIM).map(|_| num(0.5)).collect())),
+            ("batch", num(1.0)),
+            ("kernel", s("CSR.nnz")),
+            ("stripes", num(0.0)),
+            ("block", num(8.0)),
+            ("shards", num(3.0)),
+            ("wall_s", num(1e-3)),
+            ("heuristic_wall_s", num(2e-3)),
+        ]);
+        let entries = Json::Arr(vec![old_entry]);
+        let checksum = format!("{:016x}", fnv1a(entries.to_string().as_bytes()));
+        let doc = obj(vec![
+            ("version", num(TABLE_VERSION as f64)),
+            ("checksum", s(&checksum)),
+            ("entries", entries),
+        ])
+        .to_string();
+        let t = CalibrationTable::from_json_str(&doc).unwrap();
+        assert_eq!(t.len(), 1);
+        let e = &t.entries()[0];
+        assert_eq!((e.shards, e.grid_cols, e.replicas), (3, 1, 1));
+        // Re-serializing writes the grid fields explicitly.
+        let back = CalibrationTable::from_json_str(&t.to_json_string()).unwrap();
+        assert_eq!(t, back);
     }
 
     #[test]

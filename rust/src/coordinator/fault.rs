@@ -16,6 +16,13 @@
 //!   backends from the shared plan cache and re-scatters the affected
 //!   sub-requests, so gathered outputs stay bit-identical to the
 //!   fault-free oracle (locked by `tests/chaos_equivalence.rs`).
+//! * Fault keys are **backend slot indices**. Under a 2D grid with
+//!   replication ([`super::GridSpec`]) slot `i` names the replica at
+//!   grid coordinate `(band, col, replica)` via the fixed linear
+//!   layout `i = (band * C + col) * K + replica` — so a seeded
+//!   schedule replays on identical grid coordinates run after run,
+//!   and a plan written for an S-shard row-only facade (`C = K = 1`)
+//!   keeps its meaning unchanged (slot `i` = band `i`).
 //! * [`FaultPlan`] is the standard injector: an explicit per-ticket
 //!   fault schedule, buildable by hand ([`FaultPlan::on_dispatch`] /
 //!   [`FaultPlan::on_gather`]) or generated from a seed
@@ -33,9 +40,12 @@ use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::fmt;
 
-/// One injected fault. `shard` indexes the facade's backend services
-/// (`0..shard_count`); faults naming a shard the current request does
-/// not touch are ignored.
+/// One injected fault. `shard` indexes the facade's backend slots
+/// (`0..rows*cols*replicas` in [`super::GridSpec`]'s linear layout
+/// `(band * C + col) * K + replica`; plain row sharding is the
+/// `C = K = 1` case where slot `i` is row band `i`). Faults naming a
+/// slot the current request does not touch — or one past the end of
+/// the grid — are ignored.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Fault {
     /// Kill backend `shard`: the service object is torn down and its

@@ -372,8 +372,15 @@ pub struct TenantStats {
 /// per-tenant scheduling counters.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardedStats {
-    /// Shard (backend service) count.
+    /// Shard count: distinct tiles (`grid_rows * grid_cols`), not
+    /// replica slots — replicas multiply capacity, not ownership.
     pub shards: usize,
+    /// Configured row bands of the tile grid.
+    pub grid_rows: usize,
+    /// Configured column stripes per band (1 = row-only sharding).
+    pub grid_cols: usize,
+    /// Configured replicas per tile (1 = unreplicated).
+    pub replicas: usize,
     /// Requests accepted by the facade: tickets issued by `submit` /
     /// `submit_for` plus synchronous fast-path calls.
     pub submitted: u64,

@@ -40,11 +40,14 @@
 //! so concurrent requests for an equal matrix plan exactly once.
 //!
 //! Above the single service sits the multi-rank serving tier:
-//! [`ShardedService`] ([`shard`]) splits one logical matrix's rows
-//! across `S` backend services (one per simulated rank group, sharing
-//! one plan cache), scatters each request, gathers and merges the
-//! partial responses (bit-identical outputs to the unsharded path —
-//! `tests/shard_equivalence.rs`), and admits multi-tenant traffic
+//! [`ShardedService`] ([`shard`]) splits one logical matrix across an
+//! R×C [`GridSpec`] grid of backend services (row bands × nnz-balanced
+//! column tiles, optionally replicated per tile for read scaling; one
+//! backend per simulated rank group, sharing one plan cache), scatters
+//! each request, gathers and merges/reduces the partial responses
+//! (bit-identical outputs to the unsharded path —
+//! `tests/shard_equivalence.rs` and `tests/grid_equivalence.rs`), and
+//! admits multi-tenant traffic
 //! through a deterministic weighted-round-robin scheduler with
 //! per-tenant in-flight quotas ([`scheduler`]). The sharded tier is
 //! chaos-tested: seed-reproducible fault injection ([`fault`]) drives
@@ -55,8 +58,9 @@
 //!
 //! The hand-tuned selection knobs (kernel heuristics, vector-block
 //! cutoffs, shard count) can be replaced wholesale by measurement: the
-//! offline search loop in [`tuner`] sweeps kernel × block × shard
-//! configurations over the generated suite and persists the winners in
+//! offline search loop in [`tuner`] sweeps kernel × block × shard-grid
+//! × replica configurations over the generated suite and persists the
+//! winners in
 //! a checksummed [`calibration::CalibrationTable`]; at serve time
 //! [`adaptive::select_auto`], the service's block resolution, and
 //! [`ShardedServiceBuilder::shards_for_matrix`] consult it by
@@ -100,7 +104,8 @@ pub use service::{
     BlockPolicy, MatrixHandle, Request, Response, ServiceBuilder, SpmvService, Ticket,
 };
 pub use shard::{
-    plan_shards, ScheduleLog, ShardedHandle, ShardedService, ShardedServiceBuilder, ShardedTicket,
+    plan_shards, plan_shards_counted, GridSpec, ScheduleLog, ShardedHandle, ShardedService,
+    ShardedServiceBuilder, ShardedTicket,
 };
 pub use spec::{KernelSpec, Partitioning};
 pub use tuner::{tune, TuneOpts, TuneReport, TuneRow};

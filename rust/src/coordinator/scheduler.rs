@@ -342,6 +342,22 @@ impl<W> FairScheduler<W> {
     }
 }
 
+/// Least-outstanding replica dispatch: the index of the smallest load,
+/// **lowest index on ties**. The tie rule is what keeps replicated
+/// facades deterministic at rest — an idle tile always dispatches to
+/// replica 0, so single-threaded request streams replay identically.
+/// `loads` must be non-empty (a tile always has >= 1 replica).
+pub fn least_outstanding(loads: &[u64]) -> usize {
+    debug_assert!(!loads.is_empty(), "least_outstanding over zero replicas");
+    let mut best = 0;
+    for (i, &l) in loads.iter().enumerate().skip(1) {
+        if l < loads[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -362,6 +378,15 @@ mod tests {
             s.complete(t);
         }
         order
+    }
+
+    #[test]
+    fn least_outstanding_picks_minimum_lowest_index_first() {
+        assert_eq!(least_outstanding(&[0]), 0);
+        assert_eq!(least_outstanding(&[3, 1, 2]), 1);
+        assert_eq!(least_outstanding(&[5, 5, 5]), 0, "all tied: lowest index");
+        assert_eq!(least_outstanding(&[2, 0, 0, 1]), 1, "tied minimum: first wins");
+        assert_eq!(least_outstanding(&[9, 8, 7, 0]), 3);
     }
 
     #[test]

@@ -25,6 +25,49 @@
 //!   each iteration gathers the full output vector and scatters it back
 //!   as the next iteration's input, because every shard's slice reads
 //!   columns other shards produced.
+//!
+//! ## 2D grids and replication
+//!
+//! Row-only sharding stalls on skewed matrices — SparseP's 2D schemes
+//! (equally-sized / equally-wide / variable-sized tiles) split columns
+//! too, paying a partial-sum merge for the extra parallelism. The
+//! facade generalizes accordingly ([`ShardedServiceBuilder::grid`] and
+//! [`ShardedServiceBuilder::replicas`], reported by
+//! [`ShardedService::grid`] as a [`GridSpec`]):
+//!
+//! * **Tile planning**: rows split into `R` nnz-balanced bands as
+//!   before, then each band's columns split into `C` nnz-balanced,
+//!   never-empty stripes (weights counted per band, so a band's skew
+//!   determines *its* cuts). Tile `(band, col)` owns the intersection;
+//!   its backend reads only the `x` segment of its column stripe and
+//!   produces a **partial** output over its row band. The per-row nnz
+//!   counts are computed once per registration and shared across the
+//!   planner (the `row_counts` hoist).
+//! * **Reduction gather**: partials of one row band are **summed
+//!   element-wise in fixed ascending-column order** — the reduction
+//!   tree is a function of grid coordinates, never of completion
+//!   timing, so outputs stay bit-reproducible run to run. Reduced bands
+//!   then concatenate exactly like 1D row sharding, and iterate
+//!   feedback re-scatters the reduced vector's per-stripe segments.
+//!   Partial buffers recycle through the facade's shared
+//!   [`BufferPool`]; the assembly point is a
+//!   [`crate::util::sync::ReduceSlot`], whose exactly-once /
+//!   index-order contract the loom suite checks. `C = 1` bypasses the
+//!   reduction entirely: an `R x 1` grid is byte-identical to the
+//!   legacy row-sharded facade, metrics included.
+//! * **Replication** (`K` replicas per tile): loads and unloads go to
+//!   *all* replicas (the shared [`PlanCache`] plans each slice once —
+//!   `plan_builds` stays flat); Spmv/Batch/Iterate reads pick the
+//!   replica with the fewest outstanding sub-requests
+//!   ([`super::scheduler::least_outstanding`], lowest index on ties).
+//!   Every replica slot has its own respawn supervision, so a killed
+//!   replica recovers exactly like a killed shard. Replicas execute
+//!   deterministic simulated work — replica choice never changes
+//!   responses.
+//!
+//! Fault keys stay *linear slot indices* over the grid: slot
+//! `(band * C + col) * K + replica` (see [`super::fault`]), so seeded
+//! chaos plans replay identically on grid coordinates.
 //! * **Fair scheduling**: submissions carry a [`TenantId`]; a
 //!   deterministic weighted-round-robin scheduler with per-tenant
 //!   in-flight quotas ([`super::scheduler`]) sits between `submit` and
@@ -107,8 +150,8 @@
 use super::cache::PlanCache;
 use super::calibration::CalibrationTable;
 use super::fault::{Fault, FaultInjector};
-use super::queue::{Completions, StageGuard, DEFAULT_QUEUE_DEPTH};
-use super::scheduler::{FairScheduler, TenantId, TenantSpec};
+use super::queue::{BufferPool, Completions, StageGuard, DEFAULT_QUEUE_DEPTH};
+use super::scheduler::{least_outstanding, FairScheduler, TenantId, TenantSpec};
 use super::service::{BlockPolicy, MatrixHandle, Request, Response, ServiceBuilder, SpmvService, Ticket};
 use super::spec::KernelSpec;
 use super::{
@@ -116,7 +159,7 @@ use super::{
 };
 use crate::format_err;
 use crate::matrix::{CooMatrix, MatrixStats, SpElem};
-use crate::partition::balance::split_weighted;
+use crate::partition::balance::split_weighted_nonempty;
 use crate::pim::{Energy, PimSystem};
 use crate::util::{Error, Result};
 use std::collections::{HashMap, HashSet};
@@ -125,7 +168,7 @@ use std::ops::Range;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
 use crate::util::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use crate::util::sync::thread::{spawn_named, JoinHandle};
-use crate::util::sync::{Arc, Condvar, Mutex, MutexGuard, RespawnSlot};
+use crate::util::sync::{Arc, Condvar, Mutex, MutexGuard, ReduceSlot, RespawnSlot};
 use std::time::{Duration, Instant};
 
 /// Distinguishes sharded services within a process (handles and tickets
@@ -151,25 +194,128 @@ pub fn plan_shards<T: SpElem>(m: &CooMatrix<T>, shards: usize) -> Vec<Range<usiz
     }
     let s = shards.max(1).min(nrows);
     if s == 1 {
+        // No split needed — skip the O(nnz) row_counts pass entirely.
         return vec![0..nrows];
     }
-    let raw = split_weighted(&m.row_counts(), s);
-    // `split_weighted` balances weight but may emit empty ranges on
-    // degenerate distributions (e.g. all the weight in the last row).
-    // Re-derive boundaries with a forward pass that forces every shard
-    // to own >= 1 row while staying as close to the balanced cut as the
+    plan_shards_counted(nrows, &m.row_counts(), s)
+}
+
+/// [`plan_shards`] over precomputed per-row nnz counts. Registration
+/// computes `row_counts` (an O(nnz) pass) once per matrix and shares it
+/// with the grid planner instead of recounting per invocation.
+pub fn plan_shards_counted(
+    nrows: usize,
+    row_counts: &[usize],
+    shards: usize,
+) -> Vec<Range<usize>> {
+    debug_assert_eq!(row_counts.len(), nrows);
+    if nrows == 0 {
+        return vec![0..0];
+    }
+    let s = shards.max(1).min(nrows);
+    if s == 1 {
+        return vec![0..nrows];
+    }
+    // `split_weighted` alone may emit empty ranges on degenerate
+    // distributions (e.g. all the weight in the last row); the
+    // never-empty variant re-derives boundaries so every shard owns
+    // >= 1 row while staying as close to the balanced cut as the
     // remaining row budget allows.
-    let mut b: Vec<usize> = Vec::with_capacity(s + 1);
-    b.push(0);
-    for r in &raw {
-        b.push(r.end);
+    split_weighted_nonempty(row_counts, s)
+}
+
+/// The facade's backend topology: `rows x cols` tiles, each replicated
+/// `replicas` times (every field clamped to >= 1 by the builder). The
+/// flat backend-slot index of tile `(band, col)`'s replica `k` is
+/// `(band * cols + col) * replicas + k` — the linear layout fault keys
+/// and respawn counters use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GridSpec {
+    /// Row bands (the legacy shard count).
+    pub rows: usize,
+    /// Column stripes per band (1 = row-only sharding, no reduction).
+    pub cols: usize,
+    /// Replicas per tile (1 = unreplicated).
+    pub replicas: usize,
+}
+
+impl GridSpec {
+    /// Total backend slots (`rows * cols * replicas`).
+    pub fn slots(&self) -> usize {
+        self.rows * self.cols * self.replicas
     }
-    for i in 1..=s {
-        let lo = b[i - 1] + 1;
-        let hi = nrows - (s - i);
-        b[i] = b[i].clamp(lo, hi);
+
+    /// Distinct tiles (`rows * cols`).
+    pub fn tiles(&self) -> usize {
+        self.rows * self.cols
     }
-    (0..s).map(|i| b[i]..b[i + 1]).collect()
+
+    /// Flat slot index of tile `(band, col)`'s replica `k`.
+    fn slot(&self, band: usize, col: usize, replica: usize) -> usize {
+        (band * self.cols + col) * self.replicas + replica
+    }
+
+    /// Inverse of [`GridSpec::slot`]: `(band, col, replica)`.
+    fn decompose(&self, slot: usize) -> (usize, usize, usize) {
+        let replica = slot % self.replicas;
+        let tile = slot / self.replicas;
+        (tile / self.cols, tile % self.cols, replica)
+    }
+}
+
+/// One matrix's planned tile grid: per-tile row/column ranges and
+/// slices in band-major order (`tile = band * cols_eff + col`).
+struct TilePlan<T: SpElem> {
+    ranges: Vec<Range<usize>>,
+    col_ranges: Vec<Range<usize>>,
+    slices: Vec<CooMatrix<T>>,
+    bands: usize,
+    cols_eff: usize,
+}
+
+/// Plan `m`'s R x C tile grid: nnz-balanced never-empty row bands
+/// ([`plan_shards_counted`] over counts computed once here), then
+/// per-band nnz-balanced never-empty column stripes. The effective
+/// dimensions shrink with the matrix (`bands <= min(R, nrows)`,
+/// `cols_eff = min(C, ncols)`), mirroring the row-only clamp. With
+/// `cols_eff == 1` each band's slice is the tile itself — the exact
+/// slices (and plan-cache fingerprints) the legacy row-sharded path
+/// produced.
+fn plan_tiles<T: SpElem>(m: &CooMatrix<T>, grid: GridSpec) -> TilePlan<T> {
+    let band_ranges = if m.nrows() == 0 || grid.rows.min(m.nrows()) <= 1 {
+        plan_shards(m, grid.rows)
+    } else {
+        // One O(nnz) counting pass per registration, shared across the
+        // whole planner.
+        plan_shards_counted(m.nrows(), &m.row_counts(), grid.rows)
+    };
+    let bands = band_ranges.len();
+    let cols_eff = grid.cols.max(1).min(m.ncols().max(1));
+    let mut ranges = Vec::with_capacity(bands * cols_eff);
+    let mut col_ranges = Vec::with_capacity(bands * cols_eff);
+    let mut slices = Vec::with_capacity(bands * cols_eff);
+    for r in &band_ranges {
+        let band_slice = m.row_range_slice(r.start, r.end);
+        if cols_eff == 1 {
+            ranges.push(r.clone());
+            col_ranges.push(0..m.ncols());
+            slices.push(band_slice);
+            continue;
+        }
+        // Column weights are counted per band: a band's own skew
+        // determines its cuts (SparseP's variable-sized tiles).
+        let mut weights = vec![0usize; m.ncols()];
+        for &c in &band_slice.cols {
+            weights[c as usize] += 1;
+        }
+        let stripes = split_weighted_nonempty(&weights, cols_eff);
+        for (tile, cr) in band_slice.split_col_stripes(&stripes).into_iter().zip(&stripes) {
+            ranges.push(r.clone());
+            col_ranges.push(cr.clone());
+            slices.push(tile);
+        }
+    }
+    TilePlan { ranges, col_ranges, slices, bands, cols_eff }
 }
 
 /// A matrix registered with one [`ShardedService`]: cheap to copy,
@@ -211,20 +357,28 @@ impl ShardedTicket {
     }
 }
 
-/// What one registered matrix looks like to the facade: the per-shard
-/// handles (index i belongs to backend i), the slices and spec needed
-/// to re-load them on a respawned backend, the row ranges they cover,
-/// and the owning tenant.
+/// What one registered matrix looks like to the facade: the per-tile
+/// slices in band-major order (`tile = band * cols_eff + col`), the
+/// handles those slices are pinned under (index `tile * K + replica` —
+/// every replica of a tile holds its own handle on its own backend),
+/// the row/column ranges each tile covers, and the owning tenant.
 ///
 /// Retaining the slices is the price of supervision: without them a
 /// dead backend's rows would be unrecoverable. The handles sit behind
-/// a mutex because a respawn rewrites the dead shard's handle in place
-/// while requests for other shards keep flowing.
+/// a mutex because a respawn rewrites the dead slot's handle in place
+/// while requests for other slots keep flowing.
 struct ShardEntry<T: SpElem> {
     handles: Mutex<Vec<MatrixHandle>>,
     slices: Vec<CooMatrix<T>>,
     spec: KernelSpec,
+    /// Per-tile row range (band-major; bands repeat `cols_eff` times).
     ranges: Vec<Range<usize>>,
+    /// Per-tile column range (the `x` segment the tile reads).
+    col_ranges: Vec<Range<usize>>,
+    /// Effective row bands (`<= min(grid.rows, nrows)`).
+    bands: usize,
+    /// Effective column stripes per band (`<= min(grid.cols, ncols)`).
+    cols_eff: usize,
     nrows: usize,
     ncols: usize,
     owner: TenantId,
@@ -265,12 +419,19 @@ impl BackendRecipe {
 /// registry → a `ShardEntry`'s handles. Respawn takes all three in
 /// that order; every other path takes a suffix of it.
 struct Backends<T: SpElem> {
-    /// One [`RespawnSlot`] per shard: the swappable service plus its
-    /// dead flag, with the double-checked kill → respawn protocol
-    /// (fast-path flag check, re-check under the write lock) owned by
-    /// the facade type so the loom suite exercises the exact code
-    /// production runs.
+    /// One [`RespawnSlot`] per backend slot (`grid.slots()` of them,
+    /// linear layout `(band * C + col) * K + replica`): the swappable
+    /// service plus its dead flag, with the double-checked kill →
+    /// respawn protocol (fast-path flag check, re-check under the write
+    /// lock) owned by the facade type so the loom suite exercises the
+    /// exact code production runs.
     slots: Vec<RespawnSlot<Arc<SpmvService<T>>>>,
+    grid: GridSpec,
+    /// Per-slot outstanding sub-request counters (replica dispatch:
+    /// reads go to the replica with the fewest in flight).
+    outstanding: Vec<Arc<AtomicU64>>,
+    /// Recycled partial-output buffers for the reduction gather.
+    pool: Mutex<BufferPool<T>>,
     sys: PimSystem,
     recipe: BackendRecipe,
     cache: Arc<PlanCache<T>>,
@@ -280,8 +441,10 @@ struct Backends<T: SpElem> {
 }
 
 impl<T: SpElem> Backends<T> {
+    /// Distinct tiles (`grid.tiles()` — what "shards" has always meant
+    /// to callers: units of matrix ownership, not replica slots).
     fn shard_count(&self) -> usize {
-        self.slots.len()
+        self.grid.tiles()
     }
 
     /// The current service in slot `i` (respawns swap the slot, so
@@ -310,22 +473,25 @@ impl<T: SpElem> Backends<T> {
     }
 
     /// Rebuild slot `i` from the recipe and re-load every registered
-    /// matrix's slice for that shard through the shared plan cache.
-    /// The slices were planned when first loaded, so the re-loads are
-    /// cache *hits*: `plan_builds` stays flat across a respawn. Runs
-    /// under the slot's write lock (lock order: slot → registry → a
-    /// `ShardEntry`'s handles).
+    /// matrix's slice for that slot's tile through the shared plan
+    /// cache. The slices were planned when first loaded, so the
+    /// re-loads are cache *hits*: `plan_builds` stays flat across a
+    /// respawn. Runs under the slot's write lock (lock order: slot →
+    /// registry → a `ShardEntry`'s handles).
     fn rebuild_into(&self, i: usize, slot: &mut Arc<SpmvService<T>>) -> Result<()> {
         let fresh = self.recipe.build(self.sys.clone(), Arc::clone(&self.cache))?;
+        let (band, col, replica) = self.grid.decompose(i);
         let entries: Vec<Arc<ShardEntry<T>>> = {
             let reg = self.registry.lock().expect("shard registry poisoned");
             reg.values().cloned().collect()
         };
         for e in entries {
-            // Matrices with fewer rows than shards use fewer shards.
-            if i < e.slices.len() {
-                let h = fresh.load(&e.slices[i], &e.spec)?;
-                e.handles.lock().expect("shard entry handles poisoned")[i] = h;
+            // Matrices smaller than the grid use fewer bands/stripes.
+            if band < e.bands && col < e.cols_eff {
+                let t = band * e.cols_eff + col;
+                let h = fresh.load(&e.slices[t], &e.spec)?;
+                e.handles.lock().expect("shard entry handles poisoned")
+                    [t * self.grid.replicas + replica] = h;
             }
         }
         *slot = Arc::new(fresh);
@@ -333,13 +499,46 @@ impl<T: SpElem> Backends<T> {
     }
 }
 
+/// Flat backend-slot index of entry tile `tile`'s replica `replica`.
+/// Entry tiles are band-major over the *effective* stripe count
+/// (`cols_eff <= grid.cols`), while slots are laid out over the
+/// configured grid — a small matrix simply leaves trailing column
+/// slots unused.
+fn tile_slot(grid: GridSpec, cols_eff: usize, tile: usize, replica: usize) -> usize {
+    grid.slot(tile / cols_eff, tile % cols_eff, replica)
+}
+
+/// RAII bump of a backend slot's outstanding-sub-request counter: the
+/// replica dispatcher reads these to route new work to the least
+/// loaded replica. Relaxed ordering — the counter is advisory load
+/// feedback, never a synchronization edge.
+struct OutstandingGuard(Arc<AtomicU64>);
+
+impl OutstandingGuard {
+    fn acquire(counter: &Arc<AtomicU64>) -> OutstandingGuard {
+        counter.fetch_add(1, Ordering::Relaxed);
+        OutstandingGuard(Arc::clone(counter))
+    }
+}
+
+impl Drop for OutstandingGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// One sub-request in flight against a specific backend incarnation.
 /// The `Arc` pins the exact service the ticket was issued by, so a
-/// respawn can never orphan a wait.
+/// respawn can never orphan a wait. `shard` is the linear backend-slot
+/// index (the fault key); `tile` the entry tile it computes.
 struct SubTicket<T: SpElem> {
     svc: Arc<SpmvService<T>>,
     ticket: Ticket,
     shard: usize,
+    tile: usize,
+    /// Held for the sub-request's lifetime (dropped when the ticket is
+    /// claimed or aborted), keeping the slot's load counter honest.
+    _outstanding: OutstandingGuard,
 }
 
 /// One scheduled-but-not-dispatched request.
@@ -435,6 +634,8 @@ fn elapsed_us(since: Instant) -> u64 {
 #[derive(Clone)]
 pub struct ShardedServiceBuilder {
     shards: usize,
+    grid_cols: usize,
+    replicas: usize,
     engine: Engine,
     cache_capacity: usize,
     queue_depth: usize,
@@ -452,6 +653,8 @@ impl fmt::Debug for ShardedServiceBuilder {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.debug_struct("ShardedServiceBuilder")
             .field("shards", &self.shards)
+            .field("grid_cols", &self.grid_cols)
+            .field("replicas", &self.replicas)
             .field("engine", &self.engine)
             .field("cache_capacity", &self.cache_capacity)
             .field("queue_depth", &self.queue_depth)
@@ -468,13 +671,15 @@ impl fmt::Debug for ShardedServiceBuilder {
 }
 
 impl ShardedServiceBuilder {
-    /// Defaults: 2 shards, serial engine, default cache/queue/block
-    /// settings, no calibration table, one `"default"` tenant (weight 1,
-    /// unlimited quota), no wait timeout, no admission cap, no fault
-    /// injection.
+    /// Defaults: 2 row shards (a 2x1 grid, unreplicated), serial
+    /// engine, default cache/queue/block settings, no calibration
+    /// table, one `"default"` tenant (weight 1, unlimited quota), no
+    /// wait timeout, no admission cap, no fault injection.
     pub fn new() -> ShardedServiceBuilder {
         ShardedServiceBuilder {
             shards: 2,
+            grid_cols: 1,
+            replicas: 1,
             engine: Engine::Serial,
             cache_capacity: super::cache::DEFAULT_PLAN_CACHE_CAPACITY,
             queue_depth: DEFAULT_QUEUE_DEPTH,
@@ -489,10 +694,34 @@ impl ShardedServiceBuilder {
         }
     }
 
-    /// Number of shard backends (simulated rank groups), clamped to
-    /// >= 1. Matrices with fewer rows than shards use fewer shards.
+    /// Number of row shards (simulated rank groups), clamped to >= 1.
+    /// Matrices with fewer rows than shards use fewer shards. Leaves
+    /// the column dimension untouched — `shards(S)` on a fresh builder
+    /// is an `S x 1` grid, the legacy row-sharded facade.
     pub fn shards(mut self, shards: usize) -> ShardedServiceBuilder {
         self.shards = shards.max(1);
+        self
+    }
+
+    /// A 2D `rows x cols` tile grid (both clamped to >= 1): rows split
+    /// into `rows` nnz-balanced bands, each band's columns into `cols`
+    /// nnz-balanced stripes. With `cols > 1` each tile computes a
+    /// partial output and the gather sums partials per band in fixed
+    /// ascending-column order (bit-reproducible; see the module docs).
+    /// `grid(S, 1)` is exactly [`Self::shards`]`(S)`.
+    pub fn grid(mut self, rows: usize, cols: usize) -> ShardedServiceBuilder {
+        self.shards = rows.max(1);
+        self.grid_cols = cols.max(1);
+        self
+    }
+
+    /// Replicas per tile (clamped to >= 1). Loads and unloads go to all
+    /// replicas; Spmv/Batch/Iterate reads dispatch to the replica with
+    /// the fewest outstanding sub-requests (lowest index on ties). Each
+    /// replica slot is supervised independently. Replica choice never
+    /// changes responses — the backends compute deterministically.
+    pub fn replicas(mut self, replicas: usize) -> ShardedServiceBuilder {
+        self.replicas = replicas.max(1);
         self
     }
 
@@ -537,11 +766,13 @@ impl ShardedServiceBuilder {
         self
     }
 
-    /// Pick the shard count from the attached calibration table: the
+    /// Pick the grid shape from the attached calibration table: the
     /// nearest measured entry for `m` at `batch_hint` vectors per
-    /// request supplies its winning shard count. A no-op without a
-    /// table (or with an empty one) — the configured [`Self::shards`]
-    /// count stands, so callers can chain this unconditionally.
+    /// request supplies its winning row shards, column stripes and
+    /// replica count (the full [`GridSpec`] the tuner's grid sweep
+    /// persisted). A no-op without a table (or with an empty one) — the
+    /// configured [`Self::shards`] / [`Self::grid`] / [`Self::replicas`]
+    /// stand, so callers can chain this unconditionally.
     pub fn shards_for_matrix<T: SpElem>(
         mut self,
         m: &CooMatrix<T>,
@@ -553,6 +784,8 @@ impl ShardedServiceBuilder {
             .and_then(|t| t.lookup(&MatrixStats::of(m), batch_hint))
         {
             self.shards = e.shards.max(1);
+            self.grid_cols = e.grid_cols.max(1);
+            self.replicas = e.replicas.max(1);
         }
         self
     }
@@ -633,13 +866,19 @@ impl ShardedServiceBuilder {
             block_policy: self.block_policy,
             calibration: self.calibration.clone(),
         };
-        let mut slots = Vec::with_capacity(self.shards);
-        for _ in 0..self.shards {
+        let grid =
+            GridSpec { rows: self.shards, cols: self.grid_cols, replicas: self.replicas };
+        let mut slots = Vec::with_capacity(grid.slots());
+        for _ in 0..grid.slots() {
             let svc = recipe.build(per_shard_sys.clone(), Arc::clone(&cache))?;
             slots.push(RespawnSlot::new(Arc::new(svc)));
         }
+        let outstanding = (0..grid.slots()).map(|_| Arc::new(AtomicU64::new(0))).collect();
         let backends = Arc::new(Backends {
             slots,
+            grid,
+            outstanding,
+            pool: Mutex::new(BufferPool::new(T::zero())),
             sys: per_shard_sys,
             recipe,
             cache,
@@ -766,9 +1005,17 @@ impl<T: SpElem> ShardedService<T> {
         ShardedServiceBuilder::new()
     }
 
-    /// Number of shard backends.
+    /// Number of shards — distinct tiles (`rows x cols`), not replica
+    /// slots: replicas multiply capacity, never matrix ownership.
     pub fn shard_count(&self) -> usize {
         self.backends.shard_count()
+    }
+
+    /// The configured backend topology (see
+    /// [`ShardedServiceBuilder::grid`] and
+    /// [`ShardedServiceBuilder::replicas`]).
+    pub fn grid(&self) -> GridSpec {
+        self.backends.grid
     }
 
     /// The default tenant (always registered first).
@@ -800,11 +1047,14 @@ impl<T: SpElem> ShardedService<T> {
         self.load_for(self.default_tenant(), m, spec)
     }
 
-    /// Register `m` under `spec` for `tenant`: plan the row shards
-    /// ([`plan_shards`]), load one slice per shard backend (through the
-    /// shared plan cache — equal slices plan once), and pin them behind
-    /// one facade handle owned by the tenant. The slices are retained
-    /// so a dead backend can be respawned with its rows intact.
+    /// Register `m` under `spec` for `tenant`: plan the tile grid
+    /// ([`plan_shards`] row bands, then per-band column stripes — the
+    /// per-row nnz counts are computed once here), load each tile's
+    /// slice into every one of its replicas (through the shared plan
+    /// cache — replicas of a tile, like equal slices anywhere, plan
+    /// once), and pin them behind one facade handle owned by the
+    /// tenant. The slices are retained so a dead backend can be
+    /// respawned with its tile intact.
     pub fn load_for(
         &self,
         tenant: TenantId,
@@ -812,23 +1062,30 @@ impl<T: SpElem> ShardedService<T> {
         spec: &KernelSpec,
     ) -> Result<ShardedHandle> {
         self.check_tenant(tenant)?;
-        let ranges = plan_shards(m, self.backends.shard_count());
-        let mut handles = Vec::with_capacity(ranges.len());
-        let mut slices = Vec::with_capacity(ranges.len());
-        for (i, r) in ranges.iter().enumerate() {
-            let slice = m.row_range_slice(r.start, r.end);
-            self.backends.ensure_alive(i)?;
-            match self.backends.service(i).load(&slice, spec) {
-                Ok(h) => {
-                    handles.push(h);
-                    slices.push(slice);
-                }
-                Err(e) => {
-                    // Roll back the shards already pinned.
-                    for (j, h) in handles.into_iter().enumerate() {
-                        self.backends.service(j).unload(h);
-                    }
+        let grid = self.backends.grid;
+        let plan = plan_tiles(m, grid);
+        let k = grid.replicas;
+        let rollback = |backends: &Backends<T>, handles: Vec<MatrixHandle>| {
+            for (idx, h) in handles.into_iter().enumerate() {
+                let slot = tile_slot(grid, plan.cols_eff, idx / k, idx % k);
+                backends.service(slot).unload(h);
+            }
+        };
+        let mut handles = Vec::with_capacity(plan.slices.len() * k);
+        for (t, slice) in plan.slices.iter().enumerate() {
+            for r in 0..k {
+                let slot = tile_slot(grid, plan.cols_eff, t, r);
+                if let Err(e) = self.backends.ensure_alive(slot) {
+                    rollback(&self.backends, handles);
                     return Err(e);
+                }
+                match self.backends.service(slot).load(slice, spec) {
+                    Ok(h) => handles.push(h),
+                    Err(e) => {
+                        // Roll back the tiles/replicas already pinned.
+                        rollback(&self.backends, handles);
+                        return Err(e);
+                    }
                 }
             }
         }
@@ -840,9 +1097,12 @@ impl<T: SpElem> ShardedService<T> {
         };
         let entry = Arc::new(ShardEntry {
             handles: Mutex::new(handles),
-            slices,
+            slices: plan.slices,
             spec: spec.clone(),
-            ranges,
+            ranges: plan.ranges,
+            col_ranges: plan.col_ranges,
+            bands: plan.bands,
+            cols_eff: plan.cols_eff,
             nrows: m.nrows(),
             ncols: m.ncols(),
             owner: tenant,
@@ -855,10 +1115,25 @@ impl<T: SpElem> ShardedService<T> {
         Ok(handle)
     }
 
-    /// The row ranges `handle`'s shards cover, in shard order
-    /// (diagnostics and the shard-planning property tests).
+    /// The row ranges `handle`'s tiles cover, in band-major tile order
+    /// (diagnostics and the shard-planning property tests). With one
+    /// column stripe this is one range per row band — the legacy
+    /// row-shard layout; with `C > 1` each band's range repeats once
+    /// per stripe.
     pub fn shard_ranges(&self, handle: &ShardedHandle) -> Result<Vec<Range<usize>>> {
         Ok(self.entry_for(handle)?.ranges.clone())
+    }
+
+    /// The `(row_range, col_range)` of each of `handle`'s tiles, in
+    /// band-major tile order (the grid property tests assert every
+    /// non-zero lands in exactly one tile and each band's column
+    /// stripes tile `[0, ncols)`).
+    pub fn tile_ranges(
+        &self,
+        handle: &ShardedHandle,
+    ) -> Result<Vec<(Range<usize>, Range<usize>)>> {
+        let e = self.entry_for(handle)?;
+        Ok(e.ranges.iter().cloned().zip(e.col_ranges.iter().cloned()).collect())
     }
 
     /// Drop a handle's per-shard plan pins. Returns whether the handle
@@ -1080,10 +1355,12 @@ impl<T: SpElem> ShardedService<T> {
         let entry = self.entry_for(handle)?;
         crate::ensure!(x.len() == entry.ncols, "x length {} != ncols {}", x.len(), entry.ncols);
         self.sync_served.fetch_add(1, Ordering::Relaxed);
-        // One wrap; the scatter below shares it across all shards.
+        // One wrap; the scatter below shares it across all shards
+        // (column stripes slice their own segment out).
         let x: Arc<[T]> = Arc::from(x);
         let subs = submit_spmv_all(&self.backends, &entry, &x)?;
-        Ok(merge_shard_runs(wait_all_spmv(subs, self.wait_timeout)?))
+        let parts = wait_all_spmv(subs, self.wait_timeout)?;
+        Ok(merge_grid_runs(&entry, parts, &self.backends.pool))
     }
 
     /// One batched request on the caller's thread (synchronous fast
@@ -1105,7 +1382,8 @@ impl<T: SpElem> ShardedService<T> {
         // One wrap per vector; the scatter shares them across shards.
         let xs: Vec<Arc<[T]>> = xs.iter().map(|v| Arc::from(&v[..])).collect();
         let subs = submit_batch_all(&self.backends, &entry, &xs)?;
-        Ok(merge_shard_batches(wait_all_batch(subs, self.wait_timeout)?))
+        let parts = wait_all_batch(subs, self.wait_timeout)?;
+        Ok(merge_grid_batches(&entry, parts, &self.backends.pool))
     }
 
     /// One iterated request on the caller's thread (synchronous fast
@@ -1163,6 +1441,9 @@ impl<T: SpElem> ShardedService<T> {
         let tenants = self.sched.lock().fair.stats();
         ShardedStats {
             shards: self.backends.shard_count(),
+            grid_rows: self.backends.grid.rows,
+            grid_cols: self.backends.grid.cols,
+            replicas: self.backends.grid.replicas,
             submitted: self.completions.submitted() + sync,
             completed: self.completions.completed() + sync,
             loaded_handles: self
@@ -1217,14 +1498,16 @@ impl<T: SpElem> Drop for ShardedService<T> {
     }
 }
 
-/// Drop an entry's per-shard plan pins. Clones the handle list out so
-/// the entry's handles lock is released before the slot reads (lock
-/// order: slot → registry → handles, never backwards).
+/// Drop an entry's per-tile-per-replica plan pins. Clones the handle
+/// list out so the entry's handles lock is released before the slot
+/// reads (lock order: slot → registry → handles, never backwards).
 fn unpin_entry<T: SpElem>(b: &Backends<T>, e: &ShardEntry<T>) {
     let handles: Vec<MatrixHandle> =
         e.handles.lock().expect("shard entry handles poisoned").clone();
-    for (i, h) in handles.into_iter().enumerate() {
-        b.service(i).unload(h);
+    let k = b.grid.replicas;
+    for (idx, h) in handles.into_iter().enumerate() {
+        let slot = tile_slot(b.grid, e.cols_eff, idx / k, idx % k);
+        b.service(slot).unload(h);
     }
 }
 
@@ -1458,11 +1741,11 @@ fn gather_one<T: SpElem>(
     let resp = match (kind, &payload) {
         (GatherKind::Spmv, ScatterPayload::Spmv(x)) => {
             recover_wait_spmv(backends, &entry, subs, &rec, timeout, x)
-                .map(|p| Response::Spmv(merge_shard_runs(p)))
+                .map(|p| Response::Spmv(merge_grid_runs(&entry, p, &backends.pool)))
         }
         (GatherKind::Batch, ScatterPayload::Batch(xs)) => {
             recover_wait_batch(backends, &entry, subs, &rec, timeout, xs)
-                .map(|p| Response::Batch(merge_shard_batches(p)))
+                .map(|p| Response::Batch(merge_grid_batches(&entry, p, &backends.pool)))
         }
         (GatherKind::Iterate, ScatterPayload::Spmv(x)) => {
             gather_iterate(backends, &entry, subs, iters, Some((x, &rec)), timeout)
@@ -1492,38 +1775,79 @@ fn fail_parked<T: SpElem>(sched: &Sched<T>, comp: &Completions<T>, p: Parked<T>)
     );
 }
 
-/// Submit one sub-request to backend `i`, respawning it first if it is
-/// marked dead. The returned [`SubTicket`] pins the exact service the
-/// ticket came from.
-fn submit_one<T: SpElem>(
+/// Submit one sub-request to tile `tile`'s replica `replica`,
+/// respawning that backend slot first if it is marked dead. The
+/// returned [`SubTicket`] pins the exact service the ticket came from.
+fn submit_tile<T: SpElem>(
     b: &Backends<T>,
     entry: &Arc<ShardEntry<T>>,
-    i: usize,
+    tile: usize,
+    replica: usize,
     req: Request<T>,
 ) -> Result<SubTicket<T>> {
+    let i = tile_slot(b.grid, entry.cols_eff, tile, replica);
     b.ensure_alive(i)?;
     let slot = b.slots[i].read();
-    let h = entry.handles.lock().expect("shard entry handles poisoned")[i];
+    let h = entry.handles.lock().expect("shard entry handles poisoned")
+        [tile * b.grid.replicas + replica];
+    let outstanding = OutstandingGuard::acquire(&b.outstanding[i]);
     let t = slot.submit(h, req)?;
-    Ok(SubTicket { svc: Arc::clone(&*slot), ticket: t, shard: i })
+    Ok(SubTicket {
+        svc: Arc::clone(&*slot),
+        ticket: t,
+        shard: i,
+        tile,
+        _outstanding: outstanding,
+    })
 }
 
-/// Scatter one SpMV: every shard reads the full input vector (row
-/// sharding keeps the column space) and computes its row range.
+/// The replica a read dispatches to: the one with the fewest
+/// outstanding sub-requests, lowest index on ties ([`least_outstanding`]).
+/// Unreplicated tiles skip the counter reads entirely.
+fn pick_replica<T: SpElem>(b: &Backends<T>, entry: &ShardEntry<T>, tile: usize) -> usize {
+    let k = b.grid.replicas;
+    if k <= 1 {
+        return 0;
+    }
+    let loads: Vec<u64> = (0..k)
+        .map(|r| {
+            b.outstanding[tile_slot(b.grid, entry.cols_eff, tile, r)].load(Ordering::Relaxed)
+        })
+        .collect();
+    least_outstanding(&loads)
+}
+
+/// The `x` segment tile `tile` reads. Row-only layouts (one column
+/// stripe) share the caller's `Arc` untouched — the zero-copy scatter
+/// `tests/zero_copy.rs` locks in; column stripes slice their own
+/// segment out (one copy of `x` total across a band, same bytes the
+/// row-only broadcast would have shipped).
+fn tile_input<T: SpElem>(entry: &ShardEntry<T>, tile: usize, x: &Arc<[T]>) -> Arc<[T]> {
+    if entry.cols_eff <= 1 {
+        Arc::clone(x)
+    } else {
+        Arc::from(&x[entry.col_ranges[tile].clone()])
+    }
+}
+
+/// Scatter one SpMV across the tile grid in band-major (reduction)
+/// order: each tile's chosen replica computes a partial output over its
+/// row band from its column stripe's `x` segment.
 ///
-/// The payload is an `Arc<[T]>`: all `S` sub-requests share one
-/// allocation (S reference-count bumps), where this scatter used to
-/// memcpy the vector once per shard — the O(S x payload) copy the
-/// ROADMAP called out. `tests/zero_copy.rs` locks the sharing in.
+/// With one column stripe the payload is the caller's `Arc<[T]>`: all
+/// `S` sub-requests share one allocation (S reference-count bumps),
+/// where this scatter used to memcpy the vector once per shard — the
+/// O(S x payload) copy the ROADMAP called out.
 fn submit_spmv_all<T: SpElem>(
     b: &Backends<T>,
     entry: &Arc<ShardEntry<T>>,
     x: &Arc<[T]>,
 ) -> Result<Vec<SubTicket<T>>> {
-    let n = entry.ranges.len();
+    let n = entry.slices.len();
     let mut subs = Vec::with_capacity(n);
-    for i in 0..n {
-        match submit_one(b, entry, i, Request::Spmv { x: Arc::clone(x) }) {
+    for t in 0..n {
+        let req = Request::Spmv { x: tile_input(entry, t, x) };
+        match submit_tile(b, entry, t, pick_replica(b, entry, t), req) {
             Ok(s) => subs.push(s),
             Err(e) => {
                 abort_subs(subs);
@@ -1534,18 +1858,19 @@ fn submit_spmv_all<T: SpElem>(
     Ok(subs)
 }
 
-/// Scatter one batch: every shard serves the whole vector set against
-/// its row range. Like [`submit_spmv_all`], the per-vector `Arc`s are
-/// shared across shards, never copied.
+/// Scatter one batch: every tile serves the whole vector set against
+/// its row band / column stripe. Like [`submit_spmv_all`], the
+/// per-vector `Arc`s are shared across row-only shards, never copied.
 fn submit_batch_all<T: SpElem>(
     b: &Backends<T>,
     entry: &Arc<ShardEntry<T>>,
     xs: &[Arc<[T]>],
 ) -> Result<Vec<SubTicket<T>>> {
-    let n = entry.ranges.len();
+    let n = entry.slices.len();
     let mut subs = Vec::with_capacity(n);
-    for i in 0..n {
-        match submit_one(b, entry, i, Request::Batch { xs: xs.to_vec() }) {
+    for t in 0..n {
+        let txs: Vec<Arc<[T]>> = xs.iter().map(|x| tile_input(entry, t, x)).collect();
+        match submit_tile(b, entry, t, pick_replica(b, entry, t), Request::Batch { xs: txs }) {
             Ok(s) => subs.push(s),
             Err(e) => {
                 abort_subs(subs);
@@ -1592,19 +1917,24 @@ fn wait_sub<T: SpElem>(sub: &SubTicket<T>, timeout: Option<Duration>) -> Result<
 /// draining other tickets' completions while the stall bound runs.
 ///
 /// Recovery re-executes deterministic simulated work, so the recovered
-/// response is bit-identical to the fault-free one.
+/// response is bit-identical to the fault-free one. The re-submit goes
+/// to the *same* tile and replica slot the fault named (never re-picks
+/// a replica), so seeded chaos replays identically.
 fn recover_sub<T: SpElem>(
     b: &Backends<T>,
     entry: &Arc<ShardEntry<T>>,
     sub: SubTicket<T>,
     rec: &Recovery,
     timeout: Option<Duration>,
-    mk_req: impl Fn() -> Request<T>,
+    mk_req: impl Fn(usize) -> Request<T>,
 ) -> Result<Response<T>> {
     let i = sub.shard;
     if rec.kill.contains(&i) || rec.dropped.contains(&i) {
+        let tile = sub.tile;
+        let replica = i % b.grid.replicas;
         let _ = sub.svc.wait(sub.ticket);
-        let fresh = submit_one(b, entry, i, mk_req())?;
+        drop(sub);
+        let fresh = submit_tile(b, entry, tile, replica, mk_req(tile))?;
         return wait_sub(&fresh, timeout);
     }
     wait_sub(&sub, timeout)
@@ -1624,8 +1954,8 @@ fn recover_wait_spmv<T: SpElem>(
     let mut out = Vec::with_capacity(subs.len());
     let mut err = None;
     for sub in subs {
-        let waited = recover_sub(b, entry, sub, rec, timeout, || Request::Spmv {
-            x: Arc::clone(x),
+        let waited = recover_sub(b, entry, sub, rec, timeout, |t| Request::Spmv {
+            x: tile_input(entry, t, x),
         });
         match waited.and_then(Response::into_spmv) {
             Ok(r) => out.push(r),
@@ -1651,8 +1981,8 @@ fn recover_wait_batch<T: SpElem>(
     let mut out = Vec::with_capacity(subs.len());
     let mut err = None;
     for sub in subs {
-        let waited = recover_sub(b, entry, sub, rec, timeout, || Request::Batch {
-            xs: xs.to_vec(),
+        let waited = recover_sub(b, entry, sub, rec, timeout, |t| Request::Batch {
+            xs: xs.iter().map(|x| tile_input(entry, t, x)).collect(),
         });
         match waited.and_then(Response::into_batch) {
             Ok(r) => out.push(r),
@@ -1728,12 +2058,13 @@ fn gather_iterate<T: SpElem>(
             (0, Some((x, rec))) => recover_wait_spmv(b, entry, wave, rec, timeout, x)?,
             _ => wait_all_spmv(wave, timeout)?,
         };
-        let merged = merge_shard_runs(parts);
+        let merged = merge_grid_runs(entry, parts, &b.pool);
         total.accumulate(&merged.breakdown);
         energy = energy.add(merged.energy);
         if iter + 1 < iters {
-            // Re-wrap the gathered output once per iteration; every
-            // shard's sub-request then shares that one allocation.
+            // Re-wrap the reduced output once per iteration; the
+            // scatter re-slices per column stripe (or shares the one
+            // allocation across row-only shards).
             let next: Arc<[T]> = Arc::from(&merged.y[..]);
             subs = submit_spmv_all(b, entry, &next)?;
         }
@@ -1747,49 +2078,129 @@ fn gather_iterate<T: SpElem>(
     }))
 }
 
-/// Merge per-shard [`RunResult`]s (in shard order) into the facade's
-/// response: outputs concatenate; per-phase times, matrix placement and
-/// DPU imbalance take the max across the concurrently-operating rank
-/// groups (critical path); bus bytes, DPU count, nnz and energy sum.
-/// Folding one part is the identity — `S = 1` degenerates bit-exactly
-/// to the plain service.
+/// Fold `p`'s metrics into `merged` (the one fold rule everywhere —
+/// across a band's column tiles exactly as across bands): per-phase
+/// times, matrix placement, DPU imbalance and kernel cycles take the
+/// max across the concurrently-operating rank groups (critical path);
+/// bus bytes, DPU count, nnz and energy sum. Returns `p`'s output
+/// vector for the caller to concatenate, reduce or recycle. Folding
+/// one part is the identity — `S = 1` degenerates bit-exactly to the
+/// plain service.
+fn fold_run_metrics<T: SpElem>(merged: &mut RunResult<T>, p: RunResult<T>) -> Vec<T> {
+    let b = &mut merged.breakdown;
+    b.load_s = b.load_s.max(p.breakdown.load_s);
+    b.kernel_s = b.kernel_s.max(p.breakdown.kernel_s);
+    b.retrieve_s = b.retrieve_s.max(p.breakdown.retrieve_s);
+    b.merge_s = b.merge_s.max(p.breakdown.merge_s);
+    let s = &mut merged.stats;
+    s.dpu_imbalance = s.dpu_imbalance.max(p.stats.dpu_imbalance);
+    s.kernel_cycles = s.kernel_cycles.max(p.stats.kernel_cycles);
+    s.bus_bytes_moved += p.stats.bus_bytes_moved;
+    s.bus_bytes_payload += p.stats.bus_bytes_payload;
+    s.matrix_load_s = s.matrix_load_s.max(p.stats.matrix_load_s);
+    s.n_dpus += p.stats.n_dpus;
+    s.nnz += p.stats.nnz;
+    merged.energy = merged.energy.add(p.energy);
+    p.y
+}
+
+/// Merge per-shard [`RunResult`]s (in shard/band order): outputs
+/// concatenate, metrics fold ([`fold_run_metrics`]).
 fn merge_shard_runs<T: SpElem>(parts: Vec<RunResult<T>>) -> RunResult<T> {
     let mut it = parts.into_iter();
     let mut merged = it.next().expect("at least one shard result");
     for p in it {
-        merged.y.extend(p.y);
-        let b = &mut merged.breakdown;
-        b.load_s = b.load_s.max(p.breakdown.load_s);
-        b.kernel_s = b.kernel_s.max(p.breakdown.kernel_s);
-        b.retrieve_s = b.retrieve_s.max(p.breakdown.retrieve_s);
-        b.merge_s = b.merge_s.max(p.breakdown.merge_s);
-        let s = &mut merged.stats;
-        s.dpu_imbalance = s.dpu_imbalance.max(p.stats.dpu_imbalance);
-        s.kernel_cycles = s.kernel_cycles.max(p.stats.kernel_cycles);
-        s.bus_bytes_moved += p.stats.bus_bytes_moved;
-        s.bus_bytes_payload += p.stats.bus_bytes_payload;
-        s.matrix_load_s = s.matrix_load_s.max(p.stats.matrix_load_s);
-        s.n_dpus += p.stats.n_dpus;
-        s.nnz += p.stats.nnz;
-        merged.energy = merged.energy.add(p.energy);
+        let y = fold_run_metrics(&mut merged, p);
+        merged.y.extend(y);
     }
     merged
 }
 
-/// Merge per-shard [`BatchResult`]s: vector `v`'s response merges the
-/// shards' `runs[v]` through [`merge_shard_runs`], in input order.
-fn merge_shard_batches<T: SpElem>(parts: Vec<BatchResult<T>>) -> BatchResult<T> {
+/// Reduce one row band's column partials: sum element-wise into a
+/// pooled zeroed accumulator, folding in **fixed ascending-column
+/// order** — the parts arrive pre-ordered (the scatter is band-major
+/// and the waits preserve it), pass through a [`ReduceSlot`] (the
+/// exactly-once / index-order rendezvous the loom suite checks), and
+/// fold left-to-right from `+0.0`. The reduction tree is a function of
+/// grid coordinates, never completion timing, so outputs are
+/// bit-reproducible run to run. Consumed partial buffers recycle
+/// through the facade's [`BufferPool`].
+fn reduce_band<T: SpElem>(parts: Vec<RunResult<T>>, pool: &Mutex<BufferPool<T>>) -> RunResult<T> {
+    debug_assert!(!parts.is_empty(), "a band reduces at least one partial");
+    let slot = ReduceSlot::new(parts.len());
+    for (c, p) in parts.into_iter().enumerate() {
+        let _fresh = slot.publish(c, p);
+        debug_assert!(_fresh, "duplicate partial for column stripe {c}");
+    }
+    let ordered = slot.wait_all();
+    let mut it = ordered.into_iter();
+    let mut merged = it.next().expect("at least one column partial");
+    let n = merged.y.len();
+    let mut pool = pool.lock().expect("partial buffer pool poisoned");
+    let mut acc = pool.take_zeroed(n);
+    let first = std::mem::take(&mut merged.y);
+    for (a, v) in acc.iter_mut().zip(&first) {
+        *a = (*a).add(*v);
+    }
+    pool.put(first);
+    for p in it {
+        let y = fold_run_metrics(&mut merged, p);
+        debug_assert_eq!(y.len(), n, "column partials of one band diverged in length");
+        for (a, v) in acc.iter_mut().zip(&y) {
+            *a = (*a).add(*v);
+        }
+        pool.put(y);
+    }
+    drop(pool);
+    merged.y = acc;
+    merged
+}
+
+/// Merge per-tile [`RunResult`]s (band-major order) into the facade's
+/// response: each band's column partials reduce ([`reduce_band`]),
+/// reduced bands concatenate exactly like 1D row shards. One column
+/// stripe bypasses the reduction entirely — byte-identical to the
+/// legacy row-sharded merge, metrics included.
+fn merge_grid_runs<T: SpElem>(
+    entry: &ShardEntry<T>,
+    parts: Vec<RunResult<T>>,
+    pool: &Mutex<BufferPool<T>>,
+) -> RunResult<T> {
+    if entry.cols_eff <= 1 {
+        return merge_shard_runs(parts);
+    }
+    let c = entry.cols_eff;
+    debug_assert_eq!(parts.len(), entry.bands * c, "tile parts diverged from the plan");
+    let mut it = parts.into_iter();
+    let mut bands = Vec::with_capacity(entry.bands);
+    loop {
+        let band: Vec<RunResult<T>> = it.by_ref().take(c).collect();
+        if band.is_empty() {
+            break;
+        }
+        bands.push(reduce_band(band, pool));
+    }
+    merge_shard_runs(bands)
+}
+
+/// Merge per-tile [`BatchResult`]s: vector `v`'s response merges the
+/// tiles' `runs[v]` through [`merge_grid_runs`], in input order.
+fn merge_grid_batches<T: SpElem>(
+    entry: &ShardEntry<T>,
+    parts: Vec<BatchResult<T>>,
+    pool: &Mutex<BufferPool<T>>,
+) -> BatchResult<T> {
     let nvec = parts.first().map_or(0, |b| b.len());
     debug_assert!(parts.iter().all(|b| b.len() == nvec), "shard batch sizes diverged");
-    let mut per_shard: Vec<std::vec::IntoIter<RunResult<T>>> =
+    let mut per_tile: Vec<std::vec::IntoIter<RunResult<T>>> =
         parts.into_iter().map(|b| b.runs.into_iter()).collect();
     let mut runs = Vec::with_capacity(nvec);
     for _ in 0..nvec {
-        let vparts: Vec<RunResult<T>> = per_shard
+        let vparts: Vec<RunResult<T>> = per_tile
             .iter_mut()
             .map(|it| it.next().expect("shard batch returned too few runs"))
             .collect();
-        runs.push(merge_shard_runs(vparts));
+        runs.push(merge_grid_runs(entry, vparts, pool));
     }
     BatchResult { runs }
 }
@@ -1852,16 +2263,19 @@ mod tests {
             stripes: 0,
             block: 2,
             shards: 3,
+            grid_cols: 2,
+            replicas: 2,
             wall_s: 1e-3,
             heuristic_wall_s: 2e-3,
         }]));
-        // Calibrated: the table's winner sets S.
+        // Calibrated: the table's winner sets the full grid shape.
         let svc: ShardedService<f64> = ShardedServiceBuilder::new()
             .calibration(Arc::clone(&table))
             .shards_for_matrix(&m, 4)
             .build(PimSystem::with_dpus(4))
             .unwrap();
-        assert_eq!(svc.shard_count(), 3);
+        assert_eq!(svc.grid(), GridSpec { rows: 3, cols: 2, replicas: 2 });
+        assert_eq!(svc.shard_count(), 6, "3x2 grid = 6 tiles");
         // And serves correctly at that count.
         let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
         let x: Vec<f64> = (0..96).map(|i| (i % 7) as f64 - 3.0).collect();
@@ -1906,6 +2320,60 @@ mod tests {
             assert_eq!(queued.stats.nnz, m.nnz());
             assert_eq!(queued.stats.n_dpus, 8 * svc.shard_count().min(150));
         }
+    }
+
+    #[test]
+    fn grid_tiles_partition_rows_and_columns() {
+        let m = generate::scale_free::<f64>(90, 70, 5, 0.7, 13);
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .grid(3, 2)
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        assert_eq!(svc.grid(), GridSpec { rows: 3, cols: 2, replicas: 1 });
+        assert_eq!(svc.shard_count(), 6);
+        let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+        let tiles = svc.tile_ranges(&h).unwrap();
+        assert_eq!(tiles.len(), 6);
+        // Band-major: a band's stripes share its row range and their
+        // column stripes tile [0, ncols) without empties.
+        for band in tiles.chunks(2) {
+            assert!(band.iter().all(|(r, _)| *r == band[0].0));
+            assert_eq!(band[0].1.start, 0);
+            assert_eq!(band[1].1.end, 70);
+            assert_eq!(band[0].1.end, band[1].1.start);
+            assert!(band.iter().all(|(_, c)| !c.is_empty()));
+        }
+        // And the reduced gather still equals the host oracle.
+        let x: Vec<f64> = (0..70).map(|i| (i % 9) as f64 - 4.0).collect();
+        assert_eq!(svc.spmv(&h, &x).unwrap().y, m.spmv(&x));
+    }
+
+    #[test]
+    fn replicated_reads_match_and_share_plans() {
+        let m = generate::uniform::<f64>(60, 60, 4, 21);
+        let x: Vec<f64> = (0..60).map(|i| (i % 5) as f64 - 2.0).collect();
+        let base = sharded(2, 4);
+        let hb = base.load(&m, &KernelSpec::coo_nnz()).unwrap();
+        let want = base.spmv(&hb, &x).unwrap();
+        let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+            .shards(2)
+            .replicas(3)
+            .build(PimSystem::with_dpus(4))
+            .unwrap();
+        assert_eq!(svc.shard_count(), 2, "replicas multiply capacity, not shards");
+        assert_eq!(svc.grid(), GridSpec { rows: 2, cols: 1, replicas: 3 });
+        let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+        for _ in 0..4 {
+            let got = svc.spmv(&h, &x).unwrap();
+            assert_eq!(got.y, want.y);
+            assert_eq!(got.stats, want.stats, "replica choice never changes metrics");
+        }
+        // Replicas of a tile load the same slice: the shared cache
+        // plans each of the 2 slices once across all 6 replica slots.
+        let st = svc.stats();
+        assert_eq!(st.resident_plans, 2);
+        assert_eq!(st.plan_builds, 2);
+        assert_eq!((st.grid_rows, st.grid_cols, st.replicas), (2, 1, 3));
     }
 
     #[test]

@@ -20,11 +20,12 @@
 //!    differ in) and immune to host noise. [`super::adaptive::autotune`]
 //!    is the measurement primitive: all 25 kernels planned and executed
 //!    on the actual engine against the actual vector batch.
-//! 2. **Block × shard sweep (wall-clock).** Vector-block width and
-//!    shard count never change modeled time — they change *host*
-//!    pipeline behavior (streaming amortization, schedulable units,
-//!    scatter/gather overlap). So stage 2 measures host wall-clock:
-//!    the top-K kernels from stage 1 crossed with the block and shard
+//! 2. **Block × grid sweep (wall-clock).** Vector-block width, shard
+//!    grid shape, and replica count never change modeled time — they
+//!    change *host* pipeline behavior (streaming amortization,
+//!    schedulable units, scatter/gather overlap, reduction fan-in).
+//!    So stage 2 measures host wall-clock: the top-K kernels from
+//!    stage 1 crossed with the block grid and the R×C×replicas shard
 //!    grids, each configuration served through a real
 //!    [`ShardedService`](super::ShardedService) (min over `samples`
 //!    timed repetitions, after an untimed warmup).
@@ -64,8 +65,13 @@ pub struct TuneOpts {
     pub batches: Vec<usize>,
     /// Vector-block widths to sweep (stage 2).
     pub block_grid: Vec<usize>,
-    /// Shard counts to sweep (stage 2).
+    /// Shard counts (grid rows / row bands) to sweep (stage 2).
     pub shard_grid: Vec<usize>,
+    /// Column-tile counts to sweep (stage 2) — crossed with
+    /// `shard_grid`, so the swept shapes are R×C grids.
+    pub col_grid: Vec<usize>,
+    /// Replica counts per tile to sweep (stage 2).
+    pub replica_grid: Vec<usize>,
     /// How many stage-1 kernels advance to the wall-clock sweep.
     pub top_kernels: usize,
     /// Timed repetitions per candidate; the minimum is kept.
@@ -87,6 +93,8 @@ impl TuneOpts {
             batches: vec![8],
             block_grid: vec![2, 8, 32],
             shard_grid: vec![1, 2],
+            col_grid: vec![1, 2],
+            replica_grid: vec![1],
             top_kernels: 2,
             samples: 2,
             seed: 3,
@@ -105,6 +113,8 @@ impl TuneOpts {
             batches: vec![1, 8, 32],
             block_grid: vec![1, 2, 4, 8, 16, 32],
             shard_grid: vec![1, 2, 4, 8],
+            col_grid: vec![1, 2],
+            replica_grid: vec![1, 2],
             top_kernels: 3,
             samples: 3,
             seed: 3,
@@ -128,6 +138,10 @@ pub struct TuneRow {
     pub kernel: String,
     pub block: usize,
     pub shards: usize,
+    /// Column tiles per row band in the winning grid (1 = row-only).
+    pub grid_cols: usize,
+    /// Replicas per tile in the winning grid (1 = unreplicated).
+    pub replicas: usize,
     pub wall_s: f64,
     /// `heuristic_wall_s / wall_s` — ≥ 1.0 by construction (the
     /// heuristic is one of the candidates the minimum ranges over).
@@ -168,10 +182,12 @@ fn make_vectors(ncols: usize, batch: usize, seed: u64) -> Vec<Vec<f64>> {
 
 /// Measure one candidate configuration: host wall-clock of a
 /// `batch`-vector request served through a [`ShardedServiceBuilder`]
-/// stack (`shards` backends, `engine`, fixed-or-adaptive block), min
-/// over `samples` repetitions after one untimed warmup. Returns
-/// `(wall_s, resolved_block)` — the block actually used, so adaptive
-/// baselines record a concrete width in the table.
+/// stack (a `shards`×`cols` grid with `reps` replicas per tile,
+/// `engine`, fixed-or-adaptive block), min over `samples` repetitions
+/// after one untimed warmup. Returns `(wall_s, resolved_block)` — the
+/// block actually used, so adaptive baselines record a concrete width
+/// in the table.
+#[allow(clippy::too_many_arguments)]
 fn measure_wall(
     sys: &PimSystem,
     engine: Engine,
@@ -179,11 +195,14 @@ fn measure_wall(
     spec: &KernelSpec,
     policy: BlockPolicy,
     shards: usize,
+    cols: usize,
+    reps: usize,
     xs: &[Vec<f64>],
     samples: usize,
 ) -> Result<(f64, usize)> {
     let svc = ShardedServiceBuilder::new()
-        .shards(shards)
+        .grid(shards, cols)
+        .replicas(reps)
         .engine(engine)
         .vector_block(policy)
         .build::<f64>(sys.clone())?;
@@ -213,8 +232,9 @@ fn measure_wall(
 ///
 /// Per (matrix, batch) cell: stage 1 ranks all 25 kernels by modeled
 /// time ([`adaptive::autotune`]); stage 2 sweeps the top-K kernels ×
-/// `block_grid` × `shard_grid` by host wall-clock, with the heuristic
-/// configuration measured first as candidate zero. Deterministic
+/// `block_grid` × `shard_grid` × `col_grid` × `replica_grid` by host
+/// wall-clock, with the heuristic configuration (one unreplicated
+/// row-only shard) measured first as candidate zero. Deterministic
 /// iteration order + strict-minimum keep-first makes the winner (and
 /// hence the table) reproducible for a given `TuneOpts` up to host
 /// timing noise.
@@ -222,6 +242,8 @@ pub fn tune(opts: &TuneOpts) -> Result<TuneReport> {
     crate::ensure!(!opts.batches.is_empty(), "tune needs at least one batch width");
     crate::ensure!(!opts.block_grid.is_empty(), "tune needs a non-empty block grid");
     crate::ensure!(!opts.shard_grid.is_empty(), "tune needs a non-empty shard grid");
+    crate::ensure!(!opts.col_grid.is_empty(), "tune needs a non-empty column grid");
+    crate::ensure!(!opts.replica_grid.is_empty(), "tune needs a non-empty replica grid");
     let sys = PimSystem::new(PimConfig {
         n_dpus: opts.n_dpus,
         tasklets: opts.tasklets,
@@ -257,10 +279,12 @@ pub fn tune(opts: &TuneOpts) -> Result<TuneReport> {
                 &heur.spec,
                 BlockPolicy::Adaptive,
                 1,
+                1,
+                1,
                 &xs,
                 opts.samples,
             )?;
-            let mut best = (heur.spec.clone(), heur_block, 1usize, heur_wall);
+            let mut best = (heur.spec.clone(), heur_block, 1usize, 1usize, 1usize, heur_wall);
 
             // Stage 2: wall-clock sweep, strict-minimum, keep-first.
             for spec in &finalists {
@@ -270,24 +294,30 @@ pub fn tune(opts: &TuneOpts) -> Result<TuneReport> {
                         continue;
                     }
                     for &shards in &opts.shard_grid {
-                        let (wall, used_block) = measure_wall(
-                            &sys,
-                            opts.engine,
-                            &m,
-                            spec,
-                            BlockPolicy::Fixed(block),
-                            shards,
-                            &xs,
-                            opts.samples,
-                        )?;
-                        if wall < best.3 {
-                            best = (spec.clone(), used_block, shards, wall);
+                        for &cols in &opts.col_grid {
+                            for &reps in &opts.replica_grid {
+                                let (wall, used_block) = measure_wall(
+                                    &sys,
+                                    opts.engine,
+                                    &m,
+                                    spec,
+                                    BlockPolicy::Fixed(block),
+                                    shards,
+                                    cols,
+                                    reps,
+                                    &xs,
+                                    opts.samples,
+                                )?;
+                                if wall < best.5 {
+                                    best = (spec.clone(), used_block, shards, cols, reps, wall);
+                                }
+                            }
                         }
                     }
                 }
             }
 
-            let (spec, block, shards, wall) = best;
+            let (spec, block, shards, cols, reps, wall) = best;
             rows.push(TuneRow {
                 matrix: e.name.to_string(),
                 class: e.class.to_string(),
@@ -298,6 +328,8 @@ pub fn tune(opts: &TuneOpts) -> Result<TuneReport> {
                 kernel: spec.name.clone(),
                 block,
                 shards,
+                grid_cols: cols,
+                replicas: reps,
                 wall_s: wall,
                 speedup: heur_wall / wall.max(f64::MIN_POSITIVE),
             });
@@ -310,6 +342,8 @@ pub fn tune(opts: &TuneOpts) -> Result<TuneReport> {
                 stripes: spec.stripes().unwrap_or(0),
                 block,
                 shards,
+                grid_cols: cols,
+                replicas: reps,
                 wall_s: wall,
                 heuristic_wall_s: heur_wall,
             });
@@ -333,6 +367,8 @@ mod tests {
             batches: vec![2],
             block_grid: vec![1, 2],
             shard_grid: vec![1, 2],
+            col_grid: vec![1],
+            replica_grid: vec![1],
             top_kernels: 1,
             samples: 1,
             seed: 7,
@@ -400,6 +436,12 @@ mod tests {
         assert!(tune(&o).is_err());
         let mut o = tiny_opts();
         o.shard_grid.clear();
+        assert!(tune(&o).is_err());
+        let mut o = tiny_opts();
+        o.col_grid.clear();
+        assert!(tune(&o).is_err());
+        let mut o = tiny_opts();
+        o.replica_grid.clear();
         assert!(tune(&o).is_err());
     }
 }

@@ -77,6 +77,35 @@ pub fn split_weighted(weights: &[usize], k: usize) -> Vec<Range<usize>> {
     out
 }
 
+/// Like [`split_weighted`], but no chunk is ever empty. Requires
+/// `1 <= k <= weights.len()`. The greedy prefix scan can exhaust the
+/// items before the last chunks open (one mega-weight item swallows the
+/// whole target); this re-derives the boundaries with a forward clamp
+/// that leaves every later chunk at least one item. This is the
+/// never-empty fixup the sharded facade's row planner has always
+/// applied, extracted so the 2D grid planner can reuse it for the
+/// per-band column splits.
+pub fn split_weighted_nonempty(weights: &[usize], k: usize) -> Vec<Range<usize>> {
+    let n = weights.len();
+    assert!(k >= 1, "split_weighted_nonempty needs k >= 1");
+    assert!(k <= n, "split_weighted_nonempty needs k <= len ({k} > {n})");
+    if k == 1 {
+        return vec![0..n];
+    }
+    let raw = split_weighted(weights, k);
+    let mut b: Vec<usize> = Vec::with_capacity(k + 1);
+    b.push(0);
+    for r in &raw {
+        b.push(r.end);
+    }
+    for i in 1..=k {
+        let lo = b[i - 1] + 1; // at least one item in chunk i-1
+        let hi = n - (k - i); // leave one item per later chunk
+        b[i] = b[i].clamp(lo, hi);
+    }
+    (0..k).map(|i| b[i]..b[i + 1]).collect()
+}
+
 /// Split a total element count into `k` contiguous element ranges of
 /// (nearly) equal size — the element-granularity split used by `COO.nnz`,
 /// which may cut *inside* a row (requiring synchronization on the shared
@@ -171,6 +200,41 @@ mod tests {
         let chunks = split_weighted(&w, 4);
         let imb = imbalance(&w, &chunks);
         assert!(imb > 3.0, "row-granularity split cannot fix this: {imb}");
+    }
+
+    #[test]
+    fn split_weighted_nonempty_tiles_without_empties() {
+        let cases: &[(Vec<usize>, usize)] = &[
+            (vec![1; 100], 4),
+            ({
+                let mut w = vec![1usize; 10];
+                w[5] = 1000; // mega-item swallows the greedy targets
+                w
+            }, 4),
+            ({
+                let mut w = vec![0usize; 12];
+                w[11] = 7; // all weight on the last item
+                w
+            }, 5),
+            (vec![0usize; 10], 3),
+            (vec![2usize, 3, 4], 3), // k == len: singletons
+        ];
+        for (w, k) in cases {
+            let chunks = split_weighted_nonempty(w, *k);
+            assert_eq!(chunks.len(), *k);
+            assert_eq!(chunks[0].start, 0);
+            assert_eq!(chunks.last().unwrap().end, w.len());
+            for pair in chunks.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start);
+            }
+            assert!(chunks.iter().all(|r| !r.is_empty()), "empty chunk in {chunks:?}");
+        }
+    }
+
+    #[test]
+    fn split_weighted_nonempty_matches_weighted_when_no_fixup_needed() {
+        let w = vec![3usize; 64];
+        assert_eq!(split_weighted_nonempty(&w, 8), split_weighted(&w, 8));
     }
 
     #[test]

@@ -290,6 +290,103 @@ impl<S> fmt::Debug for RespawnSlot<S> {
     }
 }
 
+/// An `n`-way reduction rendezvous: `n` partial results are published
+/// by index — in any arrival order, at most once per index — and then
+/// claimed as a single index-ordered vector. This is the 2D grid
+/// gather's accumulation slot (`coordinator::shard`'s column reduction
+/// assembles one row band's partials through it before summing them in
+/// fixed column order), extracted so its exactly-once / index-order /
+/// no-lost-wakeup contract can be model-checked in isolation
+/// (`rust/tests/loom_models.rs::reduce_slot_*`).
+///
+/// Protocol: [`ReduceSlot::publish`] stores index `i`'s partial under
+/// the mutex and returns whether this call filled the slot (a racing
+/// duplicate publish returns `false` and its value is dropped — the sum
+/// downstream sees each partial exactly once). The publish that fills
+/// the *last* empty index notifies the waiter; [`ReduceSlot::wait_all`]
+/// is a predicate-guarded wait (`filled == n`), so the wakeup cannot be
+/// lost to the publish/wait race. Today's facade gather claims partials
+/// in tile order on a single thread, so the slot degenerates to an
+/// ordered hand-off; the contract exists (and is loom-checked) so the
+/// reduction stays correct under any future concurrent claim order.
+pub struct ReduceSlot<P> {
+    state: Mutex<ReduceState<P>>,
+    all_in: Condvar,
+}
+
+struct ReduceState<P> {
+    parts: Vec<Option<P>>,
+    filled: usize,
+}
+
+impl<P> ReduceSlot<P> {
+    /// An empty slot awaiting `n` partials (indices `0..n`).
+    pub fn new(n: usize) -> Self {
+        ReduceSlot {
+            state: Mutex::new(ReduceState {
+                parts: (0..n).map(|_| None).collect(),
+                filled: 0,
+            }),
+            all_in: Condvar::new(),
+        }
+    }
+
+    /// How many partials the slot collects.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("reduce slot poisoned").parts.len()
+    }
+
+    /// `true` iff the slot collects zero partials.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Publish index `i`'s partial. Returns `true` iff this call stored
+    /// the value; a duplicate publish for an already-filled index
+    /// returns `false` and drops `part` (exactly-once accumulation).
+    /// The call that fills the last empty index wakes the waiter.
+    ///
+    /// Panics if `i >= n`.
+    pub fn publish(&self, i: usize, part: P) -> bool {
+        let mut st = self.state.lock().expect("reduce slot poisoned");
+        if st.parts[i].is_some() {
+            return false;
+        }
+        st.parts[i] = Some(part);
+        st.filled += 1;
+        let complete = st.filled == st.parts.len();
+        drop(st);
+        if complete {
+            self.all_in.notify_all();
+        }
+        true
+    }
+
+    /// Block until every index is filled, then take all partials in
+    /// index order (regardless of arrival order). Single-consumer:
+    /// panics if the slot was already claimed.
+    pub fn wait_all(&self) -> Vec<P> {
+        let mut st = self.state.lock().expect("reduce slot poisoned");
+        while st.filled < st.parts.len() {
+            st = self.all_in.wait(st).expect("reduce slot poisoned");
+        }
+        st.parts
+            .iter_mut()
+            .map(|p| p.take().expect("reduce slot already claimed"))
+            .collect()
+    }
+}
+
+impl<P> fmt::Debug for ReduceSlot<P> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let st = self.state.lock().expect("reduce slot poisoned");
+        f.debug_struct("ReduceSlot")
+            .field("n", &st.parts.len())
+            .field("filled", &st.filled)
+            .finish()
+    }
+}
+
 #[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
@@ -304,6 +401,35 @@ mod tests {
             cv.notify_all(); // no waiters: must not block or panic
         }
         assert_eq!(m.into_inner().unwrap(), 7);
+    }
+
+    #[test]
+    fn reduce_slot_orders_and_deduplicates_partials() {
+        let slot: ReduceSlot<u32> = ReduceSlot::new(3);
+        assert_eq!(slot.len(), 3);
+        assert!(!slot.is_empty());
+        // Out-of-order publishes; wait_all returns index order.
+        assert!(slot.publish(2, 22));
+        assert!(slot.publish(0, 10));
+        // Duplicate publish is rejected (exactly-once accumulation).
+        assert!(!slot.publish(0, 99));
+        assert!(slot.publish(1, 11));
+        assert_eq!(slot.wait_all(), vec![10, 11, 22]);
+        // Zero-partial slot completes immediately.
+        let empty: ReduceSlot<u32> = ReduceSlot::new(0);
+        assert!(empty.is_empty());
+        assert_eq!(empty.wait_all(), Vec::<u32>::new());
+        // Publishers on another thread: the waiter sees all partials.
+        let shared = Arc::new(ReduceSlot::new(2));
+        let pusher = {
+            let s = Arc::clone(&shared);
+            thread::spawn_named("reduce-pub", move || {
+                assert!(s.publish(1, 5));
+                assert!(s.publish(0, 4));
+            })
+        };
+        assert_eq!(shared.wait_all(), vec![4, 5]);
+        pusher.join().unwrap();
     }
 
     #[test]

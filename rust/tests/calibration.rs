@@ -35,6 +35,8 @@ fn entry_for(m: &CooMatrix<f64>, name: &str, kernel: &str, stripes: usize, batch
         stripes,
         block,
         shards,
+        grid_cols: 1,
+        replicas: 1,
         wall_s: 1e-3,
         heuristic_wall_s: 2e-3,
     }

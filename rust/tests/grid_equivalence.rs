@@ -1,0 +1,337 @@
+//! Differential harness for 2D grid sharding and shard replication.
+//!
+//! The contract extends `tests/shard_equivalence.rs` to the grid axes:
+//! the grid shape and the replica count are *performance* knobs — they
+//! may change how work is scattered, reduced and dispatched, but never
+//! what the facade answers.
+//!
+//! 1. **Unsharded oracle** — every grid shape in {1×2, 2×2, 3×2, 2×3}
+//!    × replicas {1, 2}, on both engines and a square *and* rectangular
+//!    matrix, serves the full request mix (queued spmv, batch, iterate,
+//!    plus the fast path) with output vectors bit-identical to a single
+//!    unsharded `SpmvService`. Column stripes reduce in fixed
+//!    ascending-column order and the suite's generator values are
+//!    integer-exact, so even the partial-sum regrouping cannot round.
+//! 2. **Row-only degeneracy** — an `R×1` grid is *byte-identical*
+//!    (breakdown, stats, energy included) to the legacy `.shards(R)`
+//!    facade, replicated or not: replication must be invisible in every
+//!    response field.
+//! 3. **Chaos replay on grid coordinates** — a seeded random fault plan
+//!    over all `R*C*K` backend slots replays bit-identically across two
+//!    identically-configured facades, and matches the fault-free
+//!    reference in full.
+//! 4. **Replica loss is free** — killing a replica slot mid-flight
+//!    still answers oracle-exact, respawns the slot, and builds zero
+//!    new plans (replicas share the tile's cached plan).
+//! 5. **Calibrated grids** — `shards_for_matrix` resolves the full
+//!    (rows, cols, replicas) shape from a tuner-written table.
+
+use sparsep::coordinator::{
+    BatchResult, CalibrationEntry, CalibrationTable, Engine, Fault, FaultPlan, GridSpec,
+    IterationsResult, KernelSpec, Request, RunResult, ServiceBuilder, ShardedService,
+    ShardedServiceBuilder, SpmvService,
+};
+use sparsep::matrix::{generate, CooMatrix, MatrixStats};
+use sparsep::pim::PimSystem;
+use std::sync::Arc;
+
+const N: usize = 96;
+const ITERS: usize = 3;
+const DPUS_PER_SHARD: usize = 4;
+const GRIDS: [(usize, usize); 4] = [(1, 2), (2, 2), (3, 2), (2, 3)];
+const REPLICAS: [usize; 2] = [1, 2];
+
+fn square() -> CooMatrix<f64> {
+    generate::scale_free::<f64>(N, N, 5, 0.7, 31)
+}
+
+/// Rectangular case: column striping must tile `[0, ncols)` even when
+/// `ncols != nrows` (iterate is skipped — y cannot re-enter as x).
+fn rect() -> CooMatrix<f64> {
+    generate::scale_free::<f64>(60, 90, 4, 0.6, 17)
+}
+
+fn x_for(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i % 11) as f64) - 5.0).collect()
+}
+
+fn batch_for(n: usize) -> Vec<Vec<f64>> {
+    (0..3)
+        .map(|b| (0..n).map(|i| ((i + 3 * b) % 7) as f64 - 3.0).collect())
+        .collect()
+}
+
+/// The full request mix one facade serves: queued spmv + batch
+/// (+ iterate when the matrix is square), waited out of submission
+/// order, plus a fast-path spmv.
+struct Mix {
+    spmv: RunResult<f64>,
+    fast: RunResult<f64>,
+    batch: BatchResult<f64>,
+    iter: Option<IterationsResult<f64>>,
+}
+
+fn serve_mix(svc: &ShardedService<f64>, m: &CooMatrix<f64>, spec: &KernelSpec) -> Mix {
+    let iterate = m.nrows() == m.ncols();
+    let h = svc.load(m, spec).unwrap();
+    let x = x_for(m.ncols());
+    let t1 = svc.submit(h, Request::spmv(x.clone())).unwrap();
+    let tb = svc.submit(h, Request::batch(batch_for(m.ncols()))).unwrap();
+    let ti = iterate.then(|| svc.submit(h, Request::iterate(x.clone(), ITERS)).unwrap());
+    let iter = ti.map(|t| svc.wait(t).unwrap().into_iterations().unwrap());
+    let batch = svc.wait(tb).unwrap().into_batch().unwrap();
+    let spmv = svc.wait(t1).unwrap().into_spmv().unwrap();
+    let fast = svc.spmv(&h, &x).unwrap();
+    Mix { spmv, fast, batch, iter }
+}
+
+fn unsharded_mix(engine: Engine, m: &CooMatrix<f64>, spec: &KernelSpec) -> Mix {
+    let svc: SpmvService<f64> = ServiceBuilder::new()
+        .engine(engine)
+        .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+        .unwrap();
+    let iterate = m.nrows() == m.ncols();
+    let h = svc.load(m, spec).unwrap();
+    let x = x_for(m.ncols());
+    let t1 = svc.submit(h, Request::spmv(x.clone())).unwrap();
+    let tb = svc.submit(h, Request::batch(batch_for(m.ncols()))).unwrap();
+    let ti = iterate.then(|| svc.submit(h, Request::iterate(x.clone(), ITERS)).unwrap());
+    let iter = ti.map(|t| svc.wait(t).unwrap().into_iterations().unwrap());
+    let batch = svc.wait(tb).unwrap().into_batch().unwrap();
+    let spmv = svc.wait(t1).unwrap().into_spmv().unwrap();
+    let fast = svc.spmv(&h, &x).unwrap();
+    Mix { spmv, fast, batch, iter }
+}
+
+fn assert_runs_identical(a: &RunResult<f64>, b: &RunResult<f64>, tag: &str) {
+    assert_eq!(a.y, b.y, "{tag}: output vector differs");
+    assert_eq!(a.breakdown, b.breakdown, "{tag}: breakdown differs");
+    assert_eq!(a.stats, b.stats, "{tag}: stats differ");
+    assert_eq!(a.energy, b.energy, "{tag}: energy differs");
+}
+
+/// Byte-identity over the full mix, metrics included.
+fn assert_mixes_identical(a: &Mix, b: &Mix, tag: &str) {
+    assert_runs_identical(&a.spmv, &b.spmv, &format!("{tag} spmv"));
+    assert_runs_identical(&a.fast, &b.fast, &format!("{tag} fast"));
+    assert_eq!(a.batch.len(), b.batch.len(), "{tag}: batch size differs");
+    for (i, (ra, rb)) in a.batch.runs.iter().zip(&b.batch.runs).enumerate() {
+        assert_runs_identical(ra, rb, &format!("{tag} batch vec={i}"));
+    }
+    assert_eq!(a.iter.is_some(), b.iter.is_some(), "{tag}: iterate presence differs");
+    if let (Some(ia), Some(ib)) = (&a.iter, &b.iter) {
+        assert_runs_identical(&ia.last, &ib.last, &format!("{tag} iterate last"));
+        assert_eq!(ia.total, ib.total, "{tag}: iterate totals differ");
+        assert_eq!(ia.energy, ib.energy, "{tag}: iterate energy differs");
+        assert_eq!(ia.iters, ib.iters, "{tag}: iterate count differs");
+    }
+}
+
+/// Output-vector identity only (grids with C > 1 regroup the metric
+/// folds across tiles, so only the answers are pinned to the oracle).
+fn assert_outputs_match(got: &Mix, oracle: &Mix, tag: &str) {
+    assert_eq!(got.spmv.y, oracle.spmv.y, "{tag}: spmv output != unsharded oracle");
+    assert_eq!(got.fast.y, oracle.fast.y, "{tag}: fast-path output != unsharded oracle");
+    assert_eq!(got.batch.len(), oracle.batch.len(), "{tag}: batch size");
+    for (i, (a, b)) in got.batch.runs.iter().zip(&oracle.batch.runs).enumerate() {
+        assert_eq!(a.y, b.y, "{tag}: batch vec {i} output != unsharded oracle");
+    }
+    if let (Some(ia), Some(ib)) = (&got.iter, &oracle.iter) {
+        assert_eq!(ia.last.y, ib.last.y, "{tag}: iterate output != unsharded oracle");
+        assert_eq!(ia.iters, ib.iters, "{tag}: iterate count");
+    }
+}
+
+fn gridded(engine: Engine, grid: (usize, usize), replicas: usize) -> ShardedService<f64> {
+    ShardedServiceBuilder::new()
+        .grid(grid.0, grid.1)
+        .replicas(replicas)
+        .engine(engine)
+        .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+        .unwrap()
+}
+
+/// PROPERTY: every grid shape × replica count × engine × matrix shape
+/// answers the full request mix bit-identically to the unsharded
+/// single-service oracle, and the merged stats still account for every
+/// non-zero exactly once.
+#[test]
+fn prop_grids_and_replicas_match_the_unsharded_oracle() {
+    let spec = KernelSpec::coo_nnz();
+    for m in [square(), rect()] {
+        for (engine, ename) in [(Engine::Serial, "serial"), (Engine::threaded(2), "threaded")] {
+            let oracle = unsharded_mix(engine, &m, &spec);
+            for grid in GRIDS {
+                for replicas in REPLICAS {
+                    let tag = format!(
+                        "{}x{} grid={}x{} K={replicas} {ename}",
+                        m.nrows(),
+                        m.ncols(),
+                        grid.0,
+                        grid.1
+                    );
+                    let svc = gridded(engine, grid, replicas);
+                    let mix = serve_mix(&svc, &m, &spec);
+                    assert_outputs_match(&mix, &oracle, &tag);
+                    // Column tiles partition the non-zeros: the summed
+                    // per-tile counts cover every entry exactly once.
+                    assert_eq!(mix.spmv.stats.nnz, m.nnz(), "{tag}: merged nnz");
+                    let st = svc.stats();
+                    assert_eq!(
+                        (st.grid_rows, st.grid_cols, st.replicas),
+                        (grid.0, grid.1, replicas),
+                        "{tag}: stats topology"
+                    );
+                    assert_eq!(st.completed, st.submitted, "{tag}: every ticket resolved");
+                }
+            }
+        }
+    }
+}
+
+/// An `R×1` grid is the row-sharded facade, byte for byte — and
+/// replication never shows up in any response field.
+#[test]
+fn row_only_grids_are_byte_identical_to_row_sharding() {
+    let m = square();
+    let spec = KernelSpec::csr_nnz();
+    for (engine, ename) in [(Engine::Serial, "serial"), (Engine::threaded(2), "threaded")] {
+        for r in [2usize, 3] {
+            let legacy: ShardedService<f64> = ShardedServiceBuilder::new()
+                .shards(r)
+                .engine(engine)
+                .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+                .unwrap();
+            let want = serve_mix(&legacy, &m, &spec);
+            let via_grid = serve_mix(&gridded(engine, (r, 1), 1), &m, &spec);
+            assert_mixes_identical(&via_grid, &want, &format!("grid {r}x1 {ename}"));
+            let replicated = serve_mix(&gridded(engine, (r, 1), 2), &m, &spec);
+            assert_mixes_identical(&replicated, &want, &format!("grid {r}x1 K=2 {ename}"));
+        }
+    }
+}
+
+/// Seeded chaos on grid coordinates: a random plan over all
+/// `R*C*K = 8` backend slots replays bit-identically across two
+/// identically-configured facades and changes nothing observable
+/// against the fault-free reference.
+#[test]
+fn seeded_chaos_replays_identically_on_grid_coordinates() {
+    let m = square();
+    let spec = KernelSpec::coo_nnz();
+    let reference = gridded(Engine::Serial, (2, 2), 2);
+    let ref_mixes = [serve_mix(&reference, &m, &spec), serve_mix(&reference, &m, &spec)];
+    for seed in [3u64, 0xD1CE_0F8A] {
+        // 2 mixes x 3 tickets = 6 tickets; 2x2 grid x2 replicas = 8 slots.
+        let plan_a = FaultPlan::random(seed, 6, 8, 0.4);
+        let plan_b = FaultPlan::random(seed, 6, 8, 0.4);
+        assert_eq!(plan_a, plan_b, "seed={seed:#x}: random grid plan must rebuild identically");
+        let mk = |plan: FaultPlan| -> ShardedService<f64> {
+            ShardedServiceBuilder::new()
+                .grid(2, 2)
+                .replicas(2)
+                .fault_injector(Arc::new(plan))
+                .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+                .unwrap()
+        };
+        let (svc_a, svc_b) = (mk(plan_a), mk(plan_b));
+        for round in 0..2 {
+            let tag = format!("chaos grid 2x2 K=2 seed={seed:#x} round={round}");
+            let a = serve_mix(&svc_a, &m, &spec);
+            let b = serve_mix(&svc_b, &m, &spec);
+            assert_mixes_identical(&a, &b, &format!("{tag} replay"));
+            assert_mixes_identical(&a, &ref_mixes[round], &format!("{tag} vs fault-free"));
+        }
+        // Respawn *counts* may differ run to run (a killed replica only
+        // respawns when some later sub-request or load touches its
+        // slot), but every ticket must resolve on both facades.
+        for svc in [&svc_a, &svc_b] {
+            let st = svc.stats();
+            assert_eq!(st.completed, st.submitted, "seed={seed:#x}: unresolved tickets");
+        }
+    }
+}
+
+/// Killing one replica of a tile mid-flight: the surviving topology
+/// still answers oracle-exact, the slot respawns, and recovery builds
+/// zero new plans — replicas share the tile's cached plan.
+#[test]
+fn replica_kill_mid_flight_matches_oracle_with_flat_plan_builds() {
+    let m = square();
+    let spec = KernelSpec::coo_nnz();
+    // 2x2 grid, 2 replicas: slot 7 = (band 1, col 1, replica 1).
+    let mut plan = FaultPlan::new(0xBADC_AB1E);
+    for t in 1..=4u64 {
+        plan = plan.on_dispatch(t, Fault::KillShard { shard: 7 });
+    }
+    let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+        .grid(2, 2)
+        .replicas(2)
+        .fault_injector(Arc::new(plan))
+        .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+        .unwrap();
+    let h = svc.load(&m, &spec).unwrap();
+    let builds_after_load = svc.stats().plan_builds;
+    assert_eq!(builds_after_load, 4, "4 tiles plan once each; replicas share");
+    let x = x_for(N);
+    let xs = batch_for(N);
+    let t1 = svc.submit(h, Request::spmv(x.clone())).unwrap();
+    let t2 = svc.submit(h, Request::batch(xs.clone())).unwrap();
+    let t3 = svc.submit(h, Request::iterate(x.clone(), ITERS)).unwrap();
+    let t4 = svc.submit(h, Request::spmv(x.clone())).unwrap();
+    assert_eq!(svc.wait(t1).unwrap().into_spmv().unwrap().y, m.spmv(&x));
+    let batch = svc.wait(t2).unwrap().into_batch().unwrap();
+    for (v, want) in xs.iter().map(|x| m.spmv(x)).enumerate() {
+        assert_eq!(batch.runs[v].y, want, "batch vec {v}");
+    }
+    let mut it_y = x.clone();
+    for _ in 0..ITERS {
+        it_y = m.spmv(&it_y);
+    }
+    assert_eq!(svc.wait(t3).unwrap().into_iterations().unwrap().last.y, it_y);
+    assert_eq!(svc.wait(t4).unwrap().into_spmv().unwrap().y, m.spmv(&x));
+    // A read only touches the killed slot if least-outstanding picks
+    // it, so force the respawn deterministically: a re-load of the same
+    // matrix ensure_alives every slot (and is a pure plan-cache hit).
+    let _h2 = svc.load(&m, &spec).unwrap();
+    let st = svc.stats();
+    assert!(st.respawns >= 1, "the killed replica slot must respawn");
+    assert_eq!(
+        st.plan_builds, builds_after_load,
+        "replica recovery must reuse the tile's cached plan, not re-plan"
+    );
+    assert_eq!(st.completed, st.submitted);
+}
+
+/// `--shards auto` end to end: the builder resolves the full
+/// (rows, cols, replicas) shape from a calibration entry, and the
+/// resolved facade still answers oracle-exact.
+#[test]
+fn builder_resolves_a_full_grid_from_the_calibration_table() {
+    let m = square();
+    let st = MatrixStats::of(&m);
+    let table = Arc::new(CalibrationTable::new(vec![CalibrationEntry {
+        matrix: "probe".into(),
+        class: st.class().into(),
+        features: st.feature_vector(),
+        batch: 1,
+        kernel: "COO.nnz".into(),
+        stripes: 0,
+        block: 2,
+        shards: 2,
+        grid_cols: 3,
+        replicas: 2,
+        wall_s: 1e-3,
+        heuristic_wall_s: 2e-3,
+    }]));
+    let svc: ShardedService<f64> = ShardedServiceBuilder::new()
+        .calibration(table)
+        .shards_for_matrix(&m, 1)
+        .build(PimSystem::with_dpus(DPUS_PER_SHARD))
+        .unwrap();
+    assert_eq!(svc.grid(), GridSpec { rows: 2, cols: 3, replicas: 2 });
+    assert_eq!(svc.shard_count(), 6, "2x3 grid = 6 tiles");
+    let h = svc.load(&m, &KernelSpec::coo_nnz()).unwrap();
+    let x = x_for(N);
+    assert_eq!(svc.spmv(&h, &x).unwrap().y, m.spmv(&x));
+}

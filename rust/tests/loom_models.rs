@@ -22,7 +22,7 @@
 
 use sparsep::coordinator::verify;
 use sparsep::util::sync::atomic::{AtomicUsize, Ordering};
-use sparsep::util::sync::{thread, Arc, RespawnSlot};
+use sparsep::util::sync::{thread, Arc, ReduceSlot, RespawnSlot};
 
 /// Bounded-exhaustive exploration: preemption bounding (3) keeps the
 /// deeper models tractable while still covering every interleaving
@@ -116,4 +116,60 @@ fn respawn_slot_rebuilds_exactly_once_under_racing_respawners() {
 #[test]
 fn scheduler_pause_resume_with_full_tenant_queue_never_deadlocks() {
     model(verify::scheduler_pause_resume_round);
+}
+
+#[test]
+fn reduce_slot_collects_every_partial_exactly_once_in_index_order() {
+    model(|| {
+        // The reduction-gather rendezvous (`merge_grid_runs`'s
+        // per-band accumulation): two column stripes publish their
+        // partials from racing threads, out of index order, while the
+        // gather thread waits for the full set. `wait_all` must block
+        // until both are in and hand the partials back in index order —
+        // the fixed ascending-column reduction the bit-reproducibility
+        // contract depends on — no matter the publish interleaving.
+        let slot: Arc<ReduceSlot<u32>> = Arc::new(ReduceSlot::new(2));
+        let publishers: Vec<_> = [(1usize, 11u32), (0usize, 10u32)]
+            .into_iter()
+            .map(|(idx, part)| {
+                let slot = Arc::clone(&slot);
+                thread::spawn_named("reduce-publisher", move || {
+                    assert!(slot.publish(idx, part), "first publish at {idx} must be fresh");
+                })
+            })
+            .collect();
+        let parts = slot.wait_all();
+        assert_eq!(parts, vec![10, 11], "partials must come back in column-index order");
+        for p in publishers {
+            p.join().expect("reduce publisher panicked");
+        }
+    });
+}
+
+#[test]
+fn reduce_slot_racing_duplicate_publishes_store_exactly_once() {
+    model(|| {
+        // Recovery can re-publish a stripe's partial (a re-executed
+        // sub-request racing the original completion). Exactly one of
+        // two racing publishes at the same index may win; the loser is
+        // told so, and the winner's value is what `wait_all` returns.
+        let slot: Arc<ReduceSlot<u32>> = Arc::new(ReduceSlot::new(2));
+        let fresh = Arc::new(AtomicUsize::new(0));
+        let racers: Vec<_> = (0..2)
+            .map(|_| {
+                let (slot, fresh) = (Arc::clone(&slot), Arc::clone(&fresh));
+                thread::spawn_named("reduce-duplicator", move || {
+                    if slot.publish(0, 7) {
+                        fresh.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for r in racers {
+            r.join().expect("racing duplicate publisher panicked");
+        }
+        assert_eq!(fresh.load(Ordering::SeqCst), 1, "exactly one duplicate may be fresh");
+        assert!(slot.publish(1, 99), "the other stripe's first publish is fresh");
+        assert_eq!(slot.wait_all(), vec![7, 99], "the winning duplicate's value must stand");
+    });
 }

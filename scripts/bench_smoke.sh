@@ -26,11 +26,23 @@
 #                           achieved throughput, typed shed/error
 #                           counts per level (in-process server; point
 #                           bench-net --addr at a live one instead)
+#   BENCH_grid.json         2D grid sharding: the same batched request
+#                           stream served by the row-only S x 1 shape,
+#                           every R x C shape at the same backend
+#                           budget, and the tuned winner replicated x2
+#                           (row-only is candidate zero of the sweep,
+#                           so tuned_over_row_serial >= 1.0 by
+#                           construction)
 #   BENCH_tune.json         autotuner search: calibrated-vs-heuristic
 #                           wall-clock per (matrix, batch) cell; also
 #                           writes calibration.json, the table
 #                           run/serve --calibration loads (fails if any
 #                           cell regresses beyond the tolerance)
+#
+# After the reports are written, `bench-check` compares them against the
+# committed baseline of by-construction ratio statistics
+# (scripts/bench_baseline.json) and fails the run on any shortfall —
+# with --missing fail, since this script produces every report.
 #
 # Knobs:
 #   BENCH_ROWS   (default 100000)   CG matrix dimension
@@ -44,6 +56,8 @@
 #   BENCH_SHARD_ROWS (default 50000)  shard-bench matrix dimension
 #   BENCH_SHARD_BATCH (default 8)   vectors per sharded request
 #   BENCH_SHARD_DPUS (default 64)   simulated DPUs per shard
+#   BENCH_GRID_ROWS (default 50000) grid-bench matrix dimension
+#   BENCH_GRID_SHARDS (default 4)   grid-bench total backends per shape
 #   BENCH_HOTPATH_ROWS (default 20000)  hotpath-bench matrix dimension
 #   BENCH_HOTPATH_ITERS (default 80)    hotpath iterate depth (waves)
 #   BENCH_HOTPATH_BATCH (default 16)    hotpath batch width
@@ -138,6 +152,18 @@ cargo run --release -- bench-net \
 
 cat BENCH_net.json
 
+cargo run --release -- bench-grid \
+  --rows "${BENCH_GRID_ROWS:-50000}" \
+  --deg 8 \
+  --shards "${BENCH_GRID_SHARDS:-4}" \
+  --requests "${BENCH_REQUESTS:-8}" \
+  --batch "${BENCH_SHARD_BATCH:-8}" \
+  --dpus "${BENCH_SHARD_DPUS:-64}" \
+  --threads "$THREADS" \
+  --out BENCH_grid.json
+
+cat BENCH_grid.json
+
 # --quick = mini-suite smoke search (seconds). BENCH_TUNE_FULL=1 runs
 # the paper-scale search instead (minutes).
 if [[ "${BENCH_TUNE_FULL:-0}" == "1" ]]; then
@@ -152,3 +178,9 @@ else
 fi
 
 cat BENCH_tune.json
+
+# Every report above exists now, so a missing file is itself a
+# regression (a renamed output or a silently skipped bench).
+cargo run --release -- bench-check \
+  --baseline scripts/bench_baseline.json \
+  --missing fail

@@ -22,6 +22,18 @@ echo "== sharding: differential + shard-planning + fairness suites =="
 cargo test -q --test shard_equivalence
 cargo test -q --test proptest_shard
 
+# 2D grid + replication gates (PR 10): the grid differential suite
+# proves every R x C grid shape and replica count answers bit-identically
+# to the unsharded oracle (reduction gather in fixed ascending-column
+# order), that R x 1 grids are byte-identical to the legacy row-sharded
+# responses (metrics included), that seeded chaos replays identically on
+# grid coordinates, and that losing a replica mid-flight recovers with
+# zero new plan builds. The grid property tests (tile partition,
+# reduced-gather oracle, replica-kill recovery) ride in proptest_shard
+# above.
+echo "== grid: 2D sharding + replication differential suite =="
+cargo test -q --test grid_equivalence
+
 # Hot-path gates (PR 5): the engine-equivalence suite now covers the
 # persistent PooledEngine next to the legacy spawn-per-wave threading,
 # and the zero-copy suite locks the Arc payload sharing (pointer
@@ -41,6 +53,16 @@ cargo test -q --test zero_copy
 echo "== autotuner: calibration suite + quick search gate =="
 cargo test -q --test calibration
 cargo run --release -- tune --quick --out calibration.json --report BENCH_tune.json
+
+# Bench regression gate (PR 10): compare the bench reports this run
+# produced against the committed baseline of by-construction ratio
+# statistics (scripts/bench_baseline.json). CI only runs the quick tune
+# above, so absent BENCH_*.json files are skipped — bench_smoke.sh runs
+# the same gate with --missing fail after producing every report.
+echo "== bench-check: regression gate vs scripts/bench_baseline.json =="
+cargo run --release -- bench-check \
+  --baseline scripts/bench_baseline.json \
+  --missing skip
 
 # Resilience gates (PR 7): the chaos suite drives every fault scenario
 # (kill-at-dispatch / kill-at-gather / dropped completion / delayed
